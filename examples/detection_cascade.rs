@@ -1,0 +1,45 @@
+//! Detection-cascade workflow demo: the detector->gate->verifier pipeline
+//! over real CNN artifacts, showing how the confidence threshold moves the
+//! verifier invocation rate (and hence latency).
+//!
+//! Run: `make artifacts && cargo run --release --example detection_cascade`
+
+use compass::configspace::detection_space;
+use compass::runtime::artifacts_dir;
+use compass::workflows::detection::DetectionWorkflow;
+use compass::workflows::Workflow;
+
+fn main() -> anyhow::Result<()> {
+    let space = detection_space();
+    let mut wf = DetectionWorkflow::load(&artifacts_dir(), 3)?;
+
+    println!("detection cascade: det-m + ver-x, sweeping confidence threshold\n");
+    let det = 2; // det-m
+    let ver = 3; // ver-x
+    let nms = 2; // 0.5
+    for conf in 0..7 {
+        let cfg = vec![det, ver, conf, nms];
+        // Warm the gate statistics, then time a batch.
+        for _ in 0..20 {
+            wf.run(&space, &cfg)?;
+        }
+        let t0 = std::time::Instant::now();
+        let n = 40;
+        let mut successes = 0;
+        for _ in 0..n {
+            if wf.run(&space, &cfg)?.success == Some(true) {
+                successes += 1;
+            }
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+        println!(
+            "  conf_thr={:<5} mean {:>6.2} ms/req  measured acc {:>4.2}  ({})",
+            space.display(&cfg).split(", ").nth(2).unwrap_or(""),
+            ms,
+            successes as f64 / n as f64,
+            space.display(&cfg),
+        );
+    }
+    println!("\nhigher thresholds forward more inputs to the verifier -> more compute, more accuracy");
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Quickstart: the whole Compass stack in one minute.
+//!
+//! 1. loads the AOT artifacts (PJRT CPU),
+//! 2. runs COMPASS-V on the RAG configuration space (surrogate oracle),
+//! 3. profiles the feasible ladder and derives AQM switching thresholds,
+//! 4. pushes a few live requests through each rung.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use compass::experiments::common::offline_phase;
+use compass::runtime::artifacts_dir;
+use compass::workflows::rag::RagWorkflow;
+use compass::workflows::Workflow;
+
+fn main() -> anyhow::Result<()> {
+    println!("== Compass quickstart ==\n");
+
+    // Offline phase: search (oracle) + profile (live artifacts) + AQM.
+    println!("offline phase: COMPASS-V @ tau=0.75 + live profiling + AQM…");
+    let (space, plan) = offline_phase(0.75, 1000.0, 7, true)?;
+    print!("{}", plan.render());
+
+    // Online phase: run one request per rung through the live pipeline.
+    println!("\nlive requests through each rung:");
+    let configs: Vec<_> = plan.ladder.iter().map(|p| p.config.clone()).collect();
+    let mut wf = RagWorkflow::load_subset(&artifacts_dir(), &space, &configs, 7)?;
+    for rung in &plan.ladder {
+        let t0 = std::time::Instant::now();
+        let out = wf.run(&space, &rung.config)?;
+        println!(
+            "  {:<40} {:>7.1} ms  success={:?}",
+            rung.label,
+            t0.elapsed().as_secs_f64() * 1e3,
+            out.success.unwrap_or(false),
+        );
+    }
+    println!("\nquickstart OK — see `compass help` and examples/rag_serving.rs");
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full Compass lifecycle on
+//! live PJRT serving.
+//!
+//!  offline:  COMPASS-V search (tau=0.75) -> live profiling -> Pareto
+//!            front -> AQM switching thresholds;
+//!  online:   real requests through the Rust serving system (central
+//!            queue, load monitor, Elastico) under the paper's spike
+//!            pattern, compared against the static baselines.
+//!
+//! Run: `make artifacts && cargo run --release --example rag_serving -- [--duration 30]`
+
+use compass::experiments::common::{base_qps, make_policy, offline_phase, SLO_FACTORS};
+use compass::metrics::report::summary_row;
+use compass::metrics::RunSummary;
+use compass::runtime::artifacts_dir;
+use compass::serving::executor::WorkflowEngine;
+use compass::serving::{serve, ServeOptions};
+use compass::util::results_dir;
+use compass::workflows::rag::RagWorkflow;
+use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let duration = args
+        .iter()
+        .position(|a| a == "--duration")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(30.0);
+    let seed = 7;
+
+    println!("== Compass end-to-end: offline phase (live profiling) ==");
+    let (space, full) = offline_phase(0.75, 1e9, seed, true)?;
+    let slo = SLO_FACTORS[1] * full.ladder.last().unwrap().mean_ms;
+    let (_, plan) = offline_phase(0.75, slo, seed, true)?;
+    print!("{}", plan.render());
+
+    let qps = base_qps(&full);
+    let spec = WorkloadSpec {
+        base_qps: qps,
+        duration_s: duration,
+        pattern: Pattern::paper_spike(),
+        seed,
+    };
+    let arrivals = generate_arrivals(&spec);
+    println!(
+        "\n== online phase: spike pattern, {duration}s, base {qps:.2} qps, SLO {slo:.0} ms ==\n({} arrivals; 4x spike in the middle third; live PJRT serving)",
+        arrivals.len()
+    );
+
+    let mut rows = Vec::new();
+    for policy_name in ["Elastico", "Static-Fast", "Static-Accurate"] {
+        let policy_plan = if policy_name == "Elastico" { &plan } else { &full };
+        let policy = make_policy(policy_plan, policy_name);
+        let space2 = space.clone();
+        let plan2 = policy_plan.clone();
+        let out = serve(
+            move || {
+                let configs: Vec<_> =
+                    plan2.ladder.iter().map(|p| p.config.clone()).collect();
+                let wf = RagWorkflow::load_subset(
+                    &artifacts_dir(),
+                    &space2,
+                    &configs,
+                    seed,
+                )?;
+                Ok(WorkflowEngine::new(wf, space2.clone(), plan2.clone()))
+            },
+            policy,
+            &arrivals,
+            &ServeOptions::default(),
+        )?;
+        let summary = RunSummary::compute(
+            &out.records,
+            &out.switches,
+            slo,
+            policy_plan.ladder.len(),
+        );
+        println!("{}", summary_row(policy_name, &summary));
+        if let Some(rate) = summary.success_rate {
+            println!("    measured answer success rate: {rate:.3}");
+        }
+        compass::metrics::report::write_records_csv(
+            &results_dir().join(format!("e2e_{}.csv", policy_name.to_lowercase())),
+            &out.records,
+        )?;
+        rows.push((policy_name, summary));
+    }
+
+    let ela = &rows[0].1;
+    let fast = &rows[1].1;
+    let acc = &rows[2].1;
+    println!("\n== verdict ==");
+    println!(
+        "Elastico vs Static-Accurate: {:+.1} pts SLO compliance",
+        (ela.slo_compliance - acc.slo_compliance) * 100.0
+    );
+    println!(
+        "Elastico vs Static-Fast:     {:+.1} pts mean accuracy",
+        (ela.mean_accuracy - fast.mean_accuracy) * 100.0
+    );
+    println!("raw records -> results/e2e_*.csv");
+    Ok(())
+}

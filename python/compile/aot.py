@@ -1,0 +1,149 @@
+"""AOT lowering: JAX models -> HLO text + weight bins + manifest.json.
+
+HLO *text* (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  Lowering goes stablehlo -> XlaComputation (``return_tuple=True``)
+-> ``as_hlo_text()``; the Rust side unwraps with ``to_tuple<N>``.
+
+Weights are exported as raw little-endian f32 blobs (one per model) and
+listed in the manifest in argument order; the Rust runtime uploads them to
+device buffers once at startup, so the request path is Python-free *and*
+weight-copy-free.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import hashlib
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.common import ModelDef
+from compile.model import all_models
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to HLO text via stablehlo -> XlaComputation."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(model: ModelDef) -> str:
+    """Lower ``apply(params, *inputs)`` with params as runtime arguments."""
+    n_params = len(model.params)
+
+    def flat_apply(*args):
+        return model.apply(list(args[:n_params]), *args[n_params:])
+
+    arg_specs = [
+        jax.ShapeDtypeStruct(a.shape, jnp.float32) for _, a in model.params
+    ] + [
+        jax.ShapeDtypeStruct(io.shape, _DTYPES[io.dtype]) for io in model.inputs
+    ]
+    lowered = jax.jit(flat_apply).lower(*arg_specs)
+    return to_hlo_text(lowered)
+
+
+def output_specs(model: ModelDef):
+    """Evaluate output shapes/dtypes without running the model."""
+    n_params = len(model.params)
+
+    def flat_apply(*args):
+        return model.apply(list(args[:n_params]), *args[n_params:])
+
+    arg_specs = [
+        jax.ShapeDtypeStruct(a.shape, jnp.float32) for _, a in model.params
+    ] + [
+        jax.ShapeDtypeStruct(io.shape, _DTYPES[io.dtype]) for io in model.inputs
+    ]
+    outs = jax.eval_shape(flat_apply, *arg_specs)
+    dtname = {jnp.dtype("float32"): "f32", jnp.dtype("int32"): "i32"}
+    return [
+        {"shape": list(o.shape), "dtype": dtname[jnp.dtype(o.dtype)]}
+        for o in jax.tree_util.tree_leaves(outs)
+    ]
+
+
+def export_model(model: ModelDef, out_dir: Path) -> dict:
+    """Lower one model; write HLO + weights bin; return its manifest entry."""
+    t0 = time.time()
+    hlo = lower_model(model)
+    hlo_path = out_dir / f"{model.name}.hlo.txt"
+    hlo_path.write_text(hlo)
+
+    entry = {
+        "hlo": hlo_path.name,
+        "kind": model.kind,
+        "meta": model.meta,
+        "inputs": [
+            {"name": io.name, "shape": list(io.shape), "dtype": io.dtype}
+            for io in model.inputs
+        ],
+        "outputs": output_specs(model),
+        "params": [],
+    }
+
+    if model.params:
+        weights = model.flat_weights()
+        blob = weights.tobytes()  # little-endian f32 on all supported hosts
+        bin_path = out_dir / "weights" / f"{model.name}.bin"
+        bin_path.parent.mkdir(exist_ok=True)
+        bin_path.write_bytes(blob)
+        entry["weights_bin"] = f"weights/{bin_path.name}"
+        entry["weights_sha256"] = hashlib.sha256(blob).hexdigest()
+        offset = 0
+        for name, arr in model.params:
+            n = int(arr.size)
+            entry["params"].append(
+                {"name": name, "shape": list(arr.shape), "offset": offset,
+                 "numel": n}
+            )
+            offset += n
+
+    dt = time.time() - t0
+    print(
+        f"  {model.name:<12} kind={model.kind:<9} hlo={len(hlo)//1024:>6} KiB "
+        f"params={sum(a.size for _, a in model.params):>9,} ({dt:.1f}s)"
+    )
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only", default=None,
+        help="comma-separated model names (default: all)",
+    )
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    models = all_models()
+    if args.only:
+        keep = set(args.only.split(","))
+        models = [m for m in models if m.name in keep]
+
+    print(f"AOT-lowering {len(models)} models -> {out_dir}")
+    manifest = {"version": 1, "artifacts": {}}
+    for model in models:
+        manifest["artifacts"][model.name] = export_model(model, out_dir)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

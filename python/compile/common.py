@@ -1,0 +1,87 @@
+"""Shared helpers for L2 model construction and AOT export.
+
+Models are expressed as ``ModelDef``s: a deterministic parameter list
+(numpy arrays derived from a per-model seed) plus an ``apply`` function
+taking the parameters (as jnp arrays, in list order) followed by the data
+inputs.  The AOT pass (:mod:`compile.aot`) lowers ``apply`` with the
+parameters as *runtime inputs* — weights are shipped to the Rust side as a
+raw little-endian binary blob and uploaded to device buffers once at
+server start, keeping the HLO text small and the request path copy-free.
+"""
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    """One weight tensor: name, shape and byte offset into the weights bin."""
+
+    name: str
+    shape: Tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+@dataclasses.dataclass
+class IoSpec:
+    """One data input / output of an artifact."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str  # "f32" | "i32"
+
+
+@dataclasses.dataclass
+class ModelDef:
+    """A lowerable model: params + apply + data-input signature."""
+
+    name: str
+    kind: str  # generator | reranker | retriever | detector | verifier
+    params: List[Tuple[str, np.ndarray]]
+    apply: Callable  # apply(param_list, *data_inputs) -> tuple of outputs
+    inputs: List[IoSpec]
+    meta: Dict
+
+    def param_specs(self) -> List[ParamSpec]:
+        return [ParamSpec(n, tuple(a.shape)) for n, a in self.params]
+
+    def flat_weights(self) -> np.ndarray:
+        """All parameters concatenated as one f32 vector (bin file layout)."""
+        return np.concatenate(
+            [np.asarray(a, np.float32).reshape(-1) for _, a in self.params]
+        )
+
+
+class ParamBuilder:
+    """Deterministic parameter factory (seeded, scaled gaussian init)."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.RandomState(seed)
+        self.params: List[Tuple[str, np.ndarray]] = []
+
+    def gauss(self, name: str, shape: Sequence[int], scale: float) -> np.ndarray:
+        a = (self.rng.randn(*shape) * scale).astype(np.float32)
+        self.params.append((name, a))
+        return a
+
+    def ones(self, name: str, shape: Sequence[int]) -> np.ndarray:
+        a = np.ones(shape, np.float32)
+        self.params.append((name, a))
+        return a
+
+    def dense(self, name: str, d_in: int, d_out: int) -> np.ndarray:
+        """Variance-preserving dense init."""
+        return self.gauss(name, (d_in, d_out), d_in**-0.5)
+
+
+def largest_divisor_leq(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (>= 1)."""
+    t = min(n, max(1, target))
+    while n % t:
+        t -= 1
+    return t

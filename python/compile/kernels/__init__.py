@@ -1,0 +1,21 @@
+"""L1 Pallas kernels for the Compass compound-AI workflows.
+
+Every kernel is written TPU-style (BlockSpec-expressed HBM->VMEM schedule,
+MXU-friendly tile shapes) but lowered with ``interpret=True`` so the emitted
+HLO runs on any PJRT backend, including the Rust CPU client that serves
+requests at runtime.  Pure-jnp oracles live in :mod:`compile.kernels.ref`;
+``python/tests/test_kernels.py`` checks every kernel against its oracle with
+hypothesis-driven shape/seed sweeps.
+"""
+
+from compile.kernels.attention import mha_prefill
+from compile.kernels.decode_attention import mha_decode
+from compile.kernels.rmsnorm_matmul import rmsnorm_matmul
+from compile.kernels.retrieval import retrieval_scores
+
+__all__ = [
+    "mha_prefill",
+    "mha_decode",
+    "rmsnorm_matmul",
+    "retrieval_scores",
+]

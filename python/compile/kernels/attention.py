@@ -1,0 +1,104 @@
+"""Flash-style causal multi-head attention (prefill) as a Pallas kernel.
+
+TPU adaptation of the GPU flash-attention insight (§3 of DESIGN.md):
+
+* the GPU version tiles Q across threadblocks and streams K/V through
+  shared memory; here each grid step owns one ``(head, q-block)`` tile
+  resident in VMEM and streams K/V **chunks** through an online-softmax
+  ``fori_loop`` — the VMEM-blocked analogue of the SRAM-blocked loop;
+* tile sizes are multiples of 8x128-friendly shapes so the q @ k^T and
+  p @ v contractions map onto the MXU systolic array;
+* accumulation is f32 regardless of input dtype (MXU accumulate width).
+
+Lowered with ``interpret=True`` for CPU-PJRT execution (real-TPU lowering
+emits a Mosaic custom-call the CPU plugin cannot run — see DESIGN.md §3).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. Q_BLOCK rows of queries are resident per grid step;
+# K/V are streamed in K_CHUNK-row chunks by the inner online-softmax loop.
+Q_BLOCK = 32
+K_CHUNK = 32
+
+_NEG_INF = -1e30
+
+
+def _mha_prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, k_chunk: int, causal: bool):
+    """One grid step: queries block (one head) against all K/V chunks.
+
+    Block shapes (leading head axis is blocked to 1):
+      q_ref: (1, bq, dh)   o_ref: (1, bq, dh)
+      k_ref: (1, s, dh)    v_ref: (1, s, dh)
+    """
+    q = q_ref[0].astype(jnp.float32)  # (bq, dh)
+    bq, dh = q.shape
+    s = k_ref.shape[1]
+    scale = 1.0 / (dh**0.5)
+    q = q * scale
+
+    q_block = pl.program_id(1)
+    q_pos = q_block * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    n_chunks = s // k_chunk
+
+    def body(i, carry):
+        # Online-softmax accumulation over one K/V chunk: the streaming
+        # analogue of flash attention's SRAM block loop.
+        m_prev, l_prev, acc = carry
+        k = k_ref[0, pl.ds(i * k_chunk, k_chunk), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(i * k_chunk, k_chunk), :].astype(jnp.float32)
+        logits = q @ k.T  # (bq, k_chunk) — MXU contraction
+        if causal:
+            k_pos = i * k_chunk + jax.lax.broadcasted_iota(
+                jnp.int32, (1, k_chunk), 1
+            )
+            logits = jnp.where(k_pos <= q_pos, logits, _NEG_INF)
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+        acc = alpha * acc + p @ v  # MXU contraction
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, 1), jnp.float32)
+    acc0 = jnp.zeros((bq, dh), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block", "k_chunk"))
+def mha_prefill(q, k, v, *, causal=True, q_block=Q_BLOCK, k_chunk=K_CHUNK):
+    """Multi-head attention over full sequences (prefill phase).
+
+    Args:
+      q, k, v: ``(heads, seq, head_dim)`` arrays (same dtype).
+      causal: apply a causal mask (decoder self-attention).
+      q_block / k_chunk: VMEM tile sizes; must divide ``seq``.
+
+    Returns:
+      ``(heads, seq, head_dim)`` attention output.
+    """
+    h, s, dh = q.shape
+    bq = min(q_block, s)
+    kc = min(k_chunk, s)
+    if s % bq or s % kc:
+        raise ValueError(f"seq={s} must be divisible by tiles ({bq}, {kc})")
+    grid = (h, s // bq)
+    return pl.pallas_call(
+        functools.partial(_mha_prefill_kernel, k_chunk=kc, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((1, s, dh), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda hi, qi: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda hi, qi: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)

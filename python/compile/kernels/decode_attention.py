@@ -1,0 +1,87 @@
+"""Single-token (decode) attention over a KV cache as a Pallas kernel.
+
+The GPU formulation of decode attention is a warp-cooperative matvec over
+the KV cache; the TPU adaptation is a VMEM-blocked row reduction: each grid
+step owns one head, the cache is streamed through ``k_chunk``-row tiles and
+reduced with an online softmax.  Entries at positions ``>= length`` (the
+not-yet-written tail of the cache) are masked out via a broadcasted iota
+compare — the Pallas analogue of the GPU version's lane predicate.
+
+Lowered with ``interpret=True`` (see attention.py docstring).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+K_CHUNK = 32
+
+_NEG_INF = -1e30
+
+
+def _mha_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, k_chunk: int):
+    """Block shapes: q (1, dh); k/v (1, smax, dh); len (1,); o (1, dh)."""
+    q = q_ref[0].astype(jnp.float32)  # (dh,)
+    dh = q.shape[0]
+    smax = k_ref.shape[1]
+    length = len_ref[0]
+    scale = 1.0 / (dh**0.5)
+    q = (q * scale)[None, :]  # (1, dh)
+
+    n_chunks = smax // k_chunk
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[0, pl.ds(i * k_chunk, k_chunk), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(i * k_chunk, k_chunk), :].astype(jnp.float32)
+        logits = q @ k.T  # (1, k_chunk)
+        pos = i * k_chunk + jax.lax.broadcasted_iota(jnp.int32, (1, k_chunk), 1)
+        logits = jnp.where(pos < length, logits, _NEG_INF)
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+        acc = alpha * acc + p @ v
+        return m_new, l_new, acc
+
+    m0 = jnp.full((1, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((1, 1), jnp.float32)
+    acc0 = jnp.zeros((1, dh), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, acc0))
+    o_ref[0] = (acc[0] / l[0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k_chunk",))
+def mha_decode(q, k_cache, v_cache, length, *, k_chunk=K_CHUNK):
+    """Attention for one new token against a (padded) KV cache.
+
+    Args:
+      q: ``(heads, head_dim)`` query for the current position.
+      k_cache, v_cache: ``(heads, smax, head_dim)`` padded caches.
+      length: scalar or ``(1,)`` int32 — number of valid cache rows
+        (the current position + 1; rows ``>= length`` are masked).
+      k_chunk: cache tile size; must divide ``smax``.
+
+    Returns:
+      ``(heads, head_dim)`` attention output.
+    """
+    h, smax, dh = k_cache.shape
+    kc = min(k_chunk, smax)
+    if smax % kc:
+        raise ValueError(f"smax={smax} must be divisible by k_chunk={kc}")
+    length = jnp.asarray(length, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        functools.partial(_mha_decode_kernel, k_chunk=kc),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda hi: (0,)),
+            pl.BlockSpec((1, dh), lambda hi: (hi, 0)),
+            pl.BlockSpec((1, smax, dh), lambda hi: (hi, 0, 0)),
+            pl.BlockSpec((1, smax, dh), lambda hi: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda hi: (hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, dh), q.dtype),
+        interpret=True,
+    )(length, q, k_cache, v_cache)

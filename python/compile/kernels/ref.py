@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: straightforward, unfused jnp
+implementations with no tiling, checked against the kernels by
+``python/tests/test_kernels.py`` (hypothesis sweeps over shapes/seeds).
+"""
+
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+EPS = 1e-6
+
+
+def mha_prefill_ref(q, k, v, *, causal=True):
+    """Reference multi-head attention: (h, s, dh) -> (h, s, dh)."""
+    h, s, dh = q.shape
+    logits = jnp.einsum("hqd,hkd->hqk", q, k).astype(jnp.float32) / (dh**0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, :, :], logits, _NEG_INF)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mha_decode_ref(q, k_cache, v_cache, length):
+    """Reference decode attention: (h, dh) vs (h, smax, dh) caches."""
+    h, smax, dh = k_cache.shape
+    logits = jnp.einsum("hd,hsd->hs", q, k_cache).astype(jnp.float32) / (dh**0.5)
+    pos = jnp.arange(smax)[None, :]
+    logits = jnp.where(pos < jnp.asarray(length, jnp.int32).reshape(()), logits, _NEG_INF)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hs,hsd->hd", p, v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x, gain):
+    """Reference RMSNorm over the last axis."""
+    ms = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * (ms + EPS) ** -0.5 * gain).astype(x.dtype)
+
+
+def rmsnorm_matmul_ref(x, gain, w):
+    """Reference fused rmsnorm->matmul: (r, d), (d,), (d, f) -> (r, f)."""
+    xn = rmsnorm_ref(x, gain).astype(jnp.float32)
+    return (xn @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+def retrieval_scores_ref(corpus, query):
+    """Reference retrieval scores: (n, d), (d,) -> (n,)."""
+    return (corpus.astype(jnp.float32) @ query.astype(jnp.float32)).astype(
+        corpus.dtype
+    )

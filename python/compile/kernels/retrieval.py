@@ -1,0 +1,56 @@
+"""Retrieval similarity scoring as a Pallas kernel.
+
+The retriever hot-spot of the RAG workflow: dot-product similarity of one
+query embedding against the whole corpus embedding matrix.  Each grid step
+streams one ``(n_block x d)`` corpus tile into VMEM and produces its score
+slice — the HBM->VMEM schedule a GPU kernel would express with threadblock
+tiling over the corpus rows.
+
+Lowered with ``interpret=True`` (see attention.py docstring).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_BLOCK = 64
+
+
+def _retrieval_kernel(c_ref, q_ref, o_ref):
+    """Block shapes: c (bn, d); q (d,); o (bn,)."""
+    c = c_ref[...].astype(jnp.float32)
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = (c @ q).astype(o_ref.dtype)  # (bn,) MXU matvec
+
+
+@functools.partial(jax.jit, static_argnames=("n_block",))
+def retrieval_scores(corpus, query, *, n_block=N_BLOCK):
+    """Dot-product scores of ``query`` against every corpus row.
+
+    Args:
+      corpus: ``(n, d)`` document embedding matrix.
+      query: ``(d,)`` query embedding.
+      n_block: corpus tile rows per grid step (must divide ``n``).
+
+    Returns:
+      ``(n,)`` similarity scores.
+    """
+    n, d = corpus.shape
+    if query.shape != (d,):
+        raise ValueError(f"query shape {query.shape} != ({d},)")
+    bn = min(n_block, n)
+    if n % bn:
+        raise ValueError(f"n={n} must be divisible by n_block={bn}")
+    return pl.pallas_call(
+        _retrieval_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), corpus.dtype),
+        interpret=True,
+    )(corpus, query)

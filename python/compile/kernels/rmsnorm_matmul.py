@@ -1,0 +1,71 @@
+"""Fused RMSNorm -> matmul as a Pallas kernel.
+
+The GPU idiom is a fused epilogue/prologue: normalize the activation tile
+in registers right before the tensor-core GEMM so the normalized tensor
+never round-trips to HBM.  The TPU analogue implemented here: each grid
+step owns an ``(rows x d)`` activation tile and a ``(d x f_block)`` weight
+tile in VMEM, computes the row RMS statistics in-register, scales, and
+feeds the MXU contraction directly.
+
+out[r, f] = (x[r, :] / rms(x[r, :]) * g[:]) @ w[:, f]
+
+Lowered with ``interpret=True`` (see attention.py docstring).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 32
+COL_BLOCK = 128
+
+EPS = 1e-6
+
+
+def _rmsnorm_matmul_kernel(x_ref, g_ref, w_ref, o_ref):
+    """Block shapes: x (br, d); g (d,); w (d, bf); o (br, bf)."""
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    # Row RMS statistics computed in-register on the resident tile.
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    xn = x * jax.lax.rsqrt(ms + EPS) * g[None, :]
+    o_ref[...] = (xn @ w).astype(o_ref.dtype)  # MXU contraction
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "col_block"))
+def rmsnorm_matmul(x, gain, w, *, row_block=ROW_BLOCK, col_block=COL_BLOCK):
+    """Fused ``rmsnorm(x) * gain @ w``.
+
+    Args:
+      x: ``(rows, d)`` activations.
+      gain: ``(d,)`` RMSNorm gain.
+      w: ``(d, f)`` weight matrix.
+      row_block / col_block: VMEM tile sizes (clamped; must divide dims).
+
+    Returns:
+      ``(rows, f)`` output.
+    """
+    rows, d = x.shape
+    d2, f = w.shape
+    if d != d2 or gain.shape != (d,):
+        raise ValueError(f"shape mismatch: x={x.shape} gain={gain.shape} w={w.shape}")
+    br = min(row_block, rows)
+    bf = min(col_block, f)
+    if rows % br or f % bf:
+        raise ValueError(f"dims ({rows},{f}) must be divisible by tiles ({br},{bf})")
+    grid = (rows // br, f // bf)
+    return pl.pallas_call(
+        _rmsnorm_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda ri, fi: (ri, 0)),
+            pl.BlockSpec((d,), lambda ri, fi: (0,)),
+            pl.BlockSpec((d, bf), lambda ri, fi: (0, fi)),
+        ],
+        out_specs=pl.BlockSpec((br, bf), lambda ri, fi: (ri, fi)),
+        out_shape=jax.ShapeDtypeStruct((rows, f), x.dtype),
+        interpret=True,
+    )(x, gain, w)

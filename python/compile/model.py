@@ -1,0 +1,30 @@
+"""Model registry: every AOT-exportable artifact in one list.
+
+``python -m compile.aot`` lowers each entry; the Rust runtime consumes the
+resulting ``artifacts/manifest.json``.
+"""
+
+from typing import List
+
+from compile.common import ModelDef
+from compile.models import (
+    DETECTORS,
+    GENERATORS,
+    RERANKERS,
+    VERIFIERS,
+    build_detector,
+    build_generator,
+    build_reranker,
+    build_retriever,
+    build_verifier,
+)
+
+
+def all_models() -> List[ModelDef]:
+    """Every artifact, in manifest order."""
+    models: List[ModelDef] = [build_retriever()]
+    models += [build_reranker(s) for s in RERANKERS]
+    models += [build_generator(s) for s in GENERATORS]
+    models += [build_detector(s) for s in DETECTORS]
+    models += [build_verifier(s) for s in VERIFIERS]
+    return models

@@ -1,0 +1,25 @@
+"""L2 JAX model zoo for the Compass workflows.
+
+Six decoder-only generator LMs, three cross-encoder rerankers, one
+embedding retriever, three detector CNNs and three verifier CNNs — the
+synthetic stand-ins for the paper's LLaMA3/Gemma3 generators, BGE/MS-MARCO
+rerankers and YOLOv8 cascade (DESIGN.md §2 documents the substitution).
+"""
+
+from compile.models.transformer import GENERATORS, build_generator
+from compile.models.reranker import RERANKERS, build_reranker
+from compile.models.retriever import build_retriever, RETRIEVER_SPEC
+from compile.models.detector import DETECTORS, VERIFIERS, build_detector, build_verifier
+
+__all__ = [
+    "GENERATORS",
+    "RERANKERS",
+    "DETECTORS",
+    "VERIFIERS",
+    "RETRIEVER_SPEC",
+    "build_generator",
+    "build_reranker",
+    "build_retriever",
+    "build_detector",
+    "build_verifier",
+]

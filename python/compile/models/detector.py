@@ -1,0 +1,134 @@
+"""Detector / verifier CNNs (the object-detection cascade workflow).
+
+Stand-ins for the paper's YOLOv8 n/s/m detectors and m/l/x verifiers
+(DESIGN.md §2): conv stacks of increasing width whose compute cost scales
+the way the YOLO ladder does.  The detector emits a per-cell confidence
+map; the Rust cascade executor gates on its max (z-scored online) against
+the configuration's confidence threshold to decide whether the verifier
+runs — so the *fraction of inputs paying the verifier cost* varies with
+the threshold exactly as in the paper's cascade.
+"""
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.common import IoSpec, ModelDef, ParamBuilder
+
+IMG = 32  # input image side (NHWC, 3 channels)
+GRID = 8  # detector output grid side
+N_CLASSES = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnSpec:
+    name: str
+    alias: str
+    width: int  # base channel count
+    extra_convs: int  # depth knob
+    seed: int
+
+
+DETECTORS: List[CnnSpec] = [
+    CnnSpec("det-n", "yolov8n", 16, 0, 3001),
+    CnnSpec("det-s", "yolov8s", 24, 1, 3002),
+    CnnSpec("det-m", "yolov8m", 32, 2, 3003),
+]
+
+VERIFIERS: List[CnnSpec] = [
+    CnnSpec("ver-m", "yolov8m-verify", 32, 1, 3101),
+    CnnSpec("ver-l", "yolov8l-verify", 48, 2, 3102),
+    CnnSpec("ver-x", "yolov8x-verify", 64, 3, 3103),
+]
+
+
+def make_params(spec: CnnSpec, head_out: int) -> ParamBuilder:
+    pb = ParamBuilder(spec.seed)
+    w = spec.width
+    chans = [3, w, 2 * w] + [2 * w] * spec.extra_convs
+    for i in range(len(chans) - 1):
+        fan_in = chans[i] * 9
+        pb.gauss(f"conv{i}", (3, 3, chans[i], chans[i + 1]), fan_in**-0.5)
+        pb.gauss(f"bias{i}", (chans[i + 1],), 0.01)
+    feat = GRID * GRID * chans[-1]
+    pb.gauss("w_head", (feat, head_out), feat**-0.5)
+    pb.gauss("b_head", (head_out,), 0.01)
+    return pb
+
+
+def _conv_stack(spec: CnnSpec, params, image):
+    """Shared conv trunk: (IMG, IMG, 3) -> (GRID*GRID*C,) features."""
+    it = iter(params)
+    x = image[None]  # NHWC batch 1
+    n_convs = 2 + spec.extra_convs
+    for i in range(n_convs):
+        w = next(it)
+        b = next(it)
+        stride = 2 if i < 2 else 1  # two downsamples: 32 -> 16 -> 8
+        x = lax.conv_general_dilated(
+            x, w, window_strides=(stride, stride), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        x = jax.nn.relu(x + b)
+    return x.reshape(-1), it
+
+
+def detect(spec: CnnSpec, params, image):
+    """Detector forward: per-cell confidence map + max-cell class logits.
+
+    Returns:
+      conf_map: (GRID*GRID,) raw per-cell objectness logits.
+      cls_logits: (N_CLASSES,) class logits of the most confident cell.
+    """
+    feat, it = _conv_stack(spec, params, image)
+    w_head, b_head = next(it), next(it)
+    out = feat @ w_head + b_head  # (GRID*GRID + N_CLASSES,)
+    conf_map = out[: GRID * GRID]
+    cls_logits = out[GRID * GRID :]
+    return conf_map, cls_logits
+
+
+def verify(spec: CnnSpec, params, image):
+    """Verifier forward: refined confidence score + class logits."""
+    feat, it = _conv_stack(spec, params, image)
+    w_head, b_head = next(it), next(it)
+    out = feat @ w_head + b_head  # (1 + N_CLASSES,)
+    return out[:1], out[1:]
+
+
+def build_detector(spec: CnnSpec) -> ModelDef:
+    pb = make_params(spec, GRID * GRID + N_CLASSES)
+
+    def apply(params, image):
+        return detect(spec, params, image)
+
+    return ModelDef(
+        name=spec.name,
+        kind="detector",
+        params=pb.params,
+        apply=apply,
+        inputs=[IoSpec("image", (IMG, IMG, 3), "f32")],
+        meta={"alias": spec.alias, "width": spec.width,
+              "extra_convs": spec.extra_convs, "grid": GRID,
+              "n_classes": N_CLASSES},
+    )
+
+
+def build_verifier(spec: CnnSpec) -> ModelDef:
+    pb = make_params(spec, 1 + N_CLASSES)
+
+    def apply(params, image):
+        return verify(spec, params, image)
+
+    return ModelDef(
+        name=spec.name,
+        kind="verifier",
+        params=pb.params,
+        apply=apply,
+        inputs=[IoSpec("image", (IMG, IMG, 3), "f32")],
+        meta={"alias": spec.alias, "width": spec.width,
+              "extra_convs": spec.extra_convs, "n_classes": N_CLASSES},
+    )

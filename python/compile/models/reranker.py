@@ -1,0 +1,143 @@
+"""Cross-encoder rerankers (the RAG workflow's reranker component).
+
+Three sizes mirror the paper's MS-MARCO / BGE-base / BGE-v2 ladder.  Each
+artifact scores up to ``RERANK_BATCH`` (query, document) pairs in one call:
+pairs are packed as ``[query tokens ; doc tokens]`` sequences, encoded by a
+non-causal transformer, mean-pooled and projected to a scalar relevance
+score.  The batch dimension is folded into the attention head dimension
+(per-head independence makes ``(B, H, S, dh) == (B*H, S, dh)``), so the
+whole batch runs through the same Pallas kernels with no vmap.
+"""
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from compile.common import IoSpec, ModelDef, ParamBuilder, largest_divisor_leq
+from compile.kernels import mha_prefill, rmsnorm_matmul
+
+VOCAB = 256
+Q_LEN = 16
+D_LEN = 32
+PAIR_LEN = Q_LEN + D_LEN  # 48
+RERANK_BATCH = 5  # pairs scored per artifact call; L3 loops ceil(k/5) batches
+
+
+@dataclasses.dataclass(frozen=True)
+class RerankerSpec:
+    name: str
+    alias: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seed: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_mlp(self) -> int:
+        return self.d_model * 4
+
+
+RERANKERS: List[RerankerSpec] = [
+    RerankerSpec("rr-48", "ms-marco-minilm", 48, 2, 2, 2001),
+    RerankerSpec("rr-96", "bge-reranker-base", 96, 2, 3, 2002),
+    RerankerSpec("rr-160", "bge-reranker-v2", 160, 3, 5, 2003),
+]
+
+
+def make_params(spec: RerankerSpec) -> ParamBuilder:
+    pb = ParamBuilder(spec.seed)
+    d = spec.d_model
+    pb.gauss("embed", (VOCAB, d), 0.05)
+    pb.gauss("pos_embed", (PAIR_LEN, d), 0.02)
+    pb.gauss("seg_embed", (2, d), 0.02)  # query vs doc segment
+    for i in range(spec.n_layers):
+        pb.ones(f"l{i}.attn_gain", (d,))
+        pb.dense(f"l{i}.wqkv", d, 3 * d)
+        pb.dense(f"l{i}.wo", d, d)
+        pb.ones(f"l{i}.mlp_gain", (d,))
+        pb.dense(f"l{i}.w_up", d, spec.d_mlp)
+        pb.dense(f"l{i}.w_down", spec.d_mlp, d)
+    pb.ones("out_gain", (d,))
+    pb.dense("w_score", d, 1)
+    return pb
+
+
+def _fused_norm_matmul(x, gain, w):
+    # Single-grid-step tiling for the CPU artifact (see transformer.py).
+    return rmsnorm_matmul(x, gain, w, row_block=x.shape[0], col_block=w.shape[1])
+
+
+def score_pairs(spec: RerankerSpec, params, q_tokens, d_tokens):
+    """Score RERANK_BATCH query/doc pairs.
+
+    Args:
+      q_tokens: (Q_LEN,) i32 query (shared across pairs).
+      d_tokens: (RERANK_BATCH, D_LEN) i32 candidate documents.
+
+    Returns:
+      (RERANK_BATCH,) f32 relevance scores (harness ignores padded slots).
+    """
+    it = iter(params)
+    embed, pos_embed, seg_embed = next(it), next(it), next(it)
+    layers = [tuple(next(it) for _ in range(6)) for _ in range(spec.n_layers)]
+    out_gain, w_score = next(it), next(it)
+
+    b, s, d = RERANK_BATCH, PAIR_LEN, spec.d_model
+    h, dh = spec.n_heads, spec.head_dim
+    pair = jnp.concatenate(
+        [jnp.broadcast_to(q_tokens, (b, Q_LEN)), d_tokens], axis=1
+    )  # (b, s)
+    seg = jnp.concatenate(
+        [jnp.zeros((Q_LEN,), jnp.int32), jnp.ones((D_LEN,), jnp.int32)]
+    )
+    x = embed[pair] + pos_embed[None, :, :] + seg_embed[seg][None, :, :]
+
+    for layer in layers:
+        attn_gain, wqkv, wo, mlp_gain, w_up, w_down = layer
+        qkv = _fused_norm_matmul(x.reshape(b * s, d), attn_gain, wqkv)
+        qkv = qkv.reshape(b, s, 3 * d)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        # Fold batch into heads: (b, s, h, dh) -> (b*h, s, dh).
+        fold = lambda t: t.reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+        attn = mha_prefill(fold(q), fold(k), fold(v), causal=False, q_block=s, k_chunk=s)
+        attn = attn.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + attn @ wo
+        up = _fused_norm_matmul(x.reshape(b * s, d), mlp_gain, w_up)
+        x = x + jax.nn.gelu(up.reshape(b, s, spec.d_mlp)) @ w_down
+
+    pooled = x.mean(axis=1)  # (b, d)
+    scores = _fused_norm_matmul(pooled, out_gain, w_score)[:, 0]
+    return (scores,)
+
+
+def build_reranker(spec: RerankerSpec) -> ModelDef:
+    pb = make_params(spec)
+
+    def apply(params, q_tokens, d_tokens):
+        return score_pairs(spec, params, q_tokens, d_tokens)
+
+    return ModelDef(
+        name=spec.name,
+        kind="reranker",
+        params=pb.params,
+        apply=apply,
+        inputs=[
+            IoSpec("q_tokens", (Q_LEN,), "i32"),
+            IoSpec("d_tokens", (RERANK_BATCH, D_LEN), "i32"),
+        ],
+        meta={
+            "alias": spec.alias,
+            "d_model": spec.d_model,
+            "n_layers": spec.n_layers,
+            "n_heads": spec.n_heads,
+            "batch": RERANK_BATCH,
+            "q_len": Q_LEN,
+            "d_len": D_LEN,
+        },
+    )

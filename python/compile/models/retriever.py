@@ -1,0 +1,55 @@
+"""Embedding retriever (the RAG workflow's retrieval component).
+
+One artifact: score the query embedding against the whole corpus embedding
+matrix (L1 Pallas kernel) and return the top ``K_MAX`` (scores, indices).
+The corpus matrix is a runtime input — the Rust harness owns corpus
+generation (it plants the ground-truth relevant document; DESIGN.md §2) —
+and is uploaded to a device buffer once per corpus, not per request.
+"""
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from compile.common import IoSpec, ModelDef
+from compile.kernels import retrieval_scores
+
+CORPUS_N = 256  # documents
+EMBED_D = 64  # embedding dimension
+K_MAX = 50  # max retriever-k in the paper's space
+
+RETRIEVER_SPEC: Dict = {
+    "corpus_n": CORPUS_N,
+    "embed_d": EMBED_D,
+    "k_max": K_MAX,
+}
+
+
+def retrieve(corpus, query):
+    """Top-K_MAX dot-product retrieval.
+
+    Implemented with a full descending sort rather than ``lax.top_k``: the
+    latter lowers to the ``topk`` HLO instruction, which the pinned
+    xla_extension 0.5.1 text parser predates; ``sort`` round-trips cleanly.
+
+    Returns:
+      values: (K_MAX,) f32 similarity scores, descending.
+      indices: (K_MAX,) i32 corpus row ids.
+    """
+    scores = retrieval_scores(corpus, query, n_block=64)
+    order = jnp.argsort(-scores)[:K_MAX].astype(jnp.int32)
+    return scores[order], order
+
+
+def build_retriever() -> ModelDef:
+    return ModelDef(
+        name="retriever",
+        kind="retriever",
+        params=[],  # no weights: corpus + query are runtime inputs
+        apply=lambda params, corpus, query: retrieve(corpus, query),
+        inputs=[
+            IoSpec("corpus", (CORPUS_N, EMBED_D), "f32"),
+            IoSpec("query", (EMBED_D,), "f32"),
+        ],
+        meta=dict(RETRIEVER_SPEC),
+    )

@@ -1,0 +1,230 @@
+"""Decoder-only generator LMs (the RAG workflow's "LLM" component).
+
+Six sizes mirror the paper's generator ladder (LLaMA3 1/3/8B, Gemma3
+1/4/12B): service time grows monotonically with ``d_model`` x ``n_layers``
+exactly as the paper's models do on the RTX 4090, which is the property
+Compass consumes (DESIGN.md §2).
+
+The exported artifact is a **single fused generation function**: prefill
+over the packed prompt (retrieved docs + query, padded to ``SEQ`` tokens)
+followed by a ``GEN_LEN``-step greedy decode loop.  The KV cache is a loop
+carry, so it never leaves the device and the Rust request path makes
+exactly one ``execute_b`` call per generation.
+
+Hot spots run through the L1 Pallas kernels:
+  * prefill attention  -> :func:`compile.kernels.mha_prefill`
+  * decode attention   -> :func:`compile.kernels.mha_decode`
+  * rmsnorm -> matmul  -> :func:`compile.kernels.rmsnorm_matmul`
+"""
+
+import dataclasses
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from compile.common import IoSpec, ModelDef, ParamBuilder, largest_divisor_leq
+from compile.kernels import mha_decode, mha_prefill, rmsnorm_matmul
+
+VOCAB = 256
+SEQ = 64  # packed prompt length (docs + query, harness pads)
+GEN_LEN = 16  # greedy decode steps per request
+SMAX = 96  # KV cache capacity (>= SEQ + GEN_LEN, tile friendly)
+HEAD_DIM = 32
+MLP_RATIO = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerSpec:
+    name: str
+    alias: str  # the paper's model this stands in for
+    d_model: int
+    n_layers: int
+    seed: int
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // HEAD_DIM
+
+    @property
+    def d_mlp(self) -> int:
+        return self.d_model * MLP_RATIO
+
+    def flops_per_token(self) -> int:
+        """Approx forward FLOPs per token (2x MACs), for roofline estimates."""
+        d = self.d_model
+        per_layer = 2 * (4 * d * d + 2 * d * self.d_mlp)  # qkv+o, up+down
+        return self.n_layers * per_layer + 2 * d * VOCAB
+
+
+GENERATORS: List[TransformerSpec] = [
+    TransformerSpec("gen-64", "llama3.2:1b", 64, 2, 1001),
+    TransformerSpec("gen-96", "gemma3:1b", 96, 2, 1002),
+    TransformerSpec("gen-128", "llama3.2:3b", 128, 3, 1003),
+    TransformerSpec("gen-160", "gemma3:4b", 160, 4, 1004),
+    TransformerSpec("gen-224", "llama3.1:8b", 224, 5, 1005),
+    TransformerSpec("gen-288", "gemma3:12b", 288, 6, 1006),
+]
+
+
+def make_params(spec: TransformerSpec) -> ParamBuilder:
+    """Deterministic parameter set in flatten order (matches manifest)."""
+    pb = ParamBuilder(spec.seed)
+    d = spec.d_model
+    pb.gauss("embed", (VOCAB, d), 0.05)
+    pb.gauss("pos_embed", (SMAX, d), 0.02)
+    for i in range(spec.n_layers):
+        pb.ones(f"l{i}.attn_gain", (d,))
+        pb.dense(f"l{i}.wqkv", d, 3 * d)
+        pb.dense(f"l{i}.wo", d, d)
+        pb.ones(f"l{i}.mlp_gain", (d,))
+        pb.dense(f"l{i}.w_up", d, spec.d_mlp)
+        pb.dense(f"l{i}.w_down", spec.d_mlp, d)
+    pb.ones("out_gain", (d,))
+    pb.dense("w_out", d, VOCAB)
+    return pb
+
+
+def _unpack(spec: TransformerSpec, params):
+    """Split the flat param list into (embeds, per-layer, head) groups."""
+    it = iter(params)
+    embed, pos = next(it), next(it)
+    layers = []
+    for _ in range(spec.n_layers):
+        layers.append(tuple(next(it) for _ in range(6)))
+    out_gain, w_out = next(it), next(it)
+    return embed, pos, layers, out_gain, w_out
+
+
+def _fused_norm_matmul(x, gain, w):
+    """rmsnorm->matmul through the Pallas kernel.
+
+    CPU-artifact tiling: one grid step over the whole operand (interpret
+    mode executes each grid step as an HLO loop iteration, so extra steps
+    are pure overhead — the §Perf pass measured 6x on gen-288). The
+    TPU-targeted tile choice (rows<=32, cols<=128 for VMEM residency) is
+    exercised by the kernel test suite instead."""
+    return rmsnorm_matmul(x, gain, w, row_block=x.shape[0], col_block=w.shape[1])
+
+
+def _block_prefill(x, layer, spec: TransformerSpec):
+    """One transformer block over the full prompt; returns (x, k, v)."""
+    attn_gain, wqkv, wo, mlp_gain, w_up, w_down = layer
+    s, d = x.shape
+    h, dh = spec.n_heads, HEAD_DIM
+    qkv = _fused_norm_matmul(x, attn_gain, wqkv)  # (s, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(s, h, dh).transpose(1, 0, 2)
+    k = k.reshape(s, h, dh).transpose(1, 0, 2)
+    v = v.reshape(s, h, dh).transpose(1, 0, 2)
+    attn = mha_prefill(q, k, v, causal=True, q_block=s, k_chunk=s)
+    attn = attn.transpose(1, 0, 2).reshape(s, d)
+    x = x + attn @ wo
+    up = _fused_norm_matmul(x, mlp_gain, w_up)
+    x = x + jax.nn.gelu(up) @ w_down
+    return x, k, v
+
+
+def _block_decode(x, layer, kc, vc, pos, spec: TransformerSpec):
+    """One block for a single token against the KV cache.
+
+    Args:
+      x: (1, d) current activation.  kc/vc: (h, smax, dh) caches.
+      pos: scalar i32 current position (cache rows < pos are valid).
+    Returns: (x, kc, vc) with the new K/V row written at ``pos``.
+    """
+    attn_gain, wqkv, wo, mlp_gain, w_up, w_down = layer
+    d = x.shape[1]
+    h, dh = spec.n_heads, HEAD_DIM
+    qkv = _fused_norm_matmul(x, attn_gain, wqkv)  # (1, 3d)
+    q, k, v = jnp.split(qkv[0], 3)
+    q = q.reshape(h, dh)
+    kc = jax.lax.dynamic_update_slice(kc, k.reshape(h, 1, dh), (0, pos, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v.reshape(h, 1, dh), (0, pos, 0))
+    attn = mha_decode(q, kc, vc, pos + 1, k_chunk=SMAX)  # (h, dh)
+    x = x + attn.reshape(1, d) @ wo
+    up = _fused_norm_matmul(x, mlp_gain, w_up)
+    x = x + jax.nn.gelu(up) @ w_down
+    return x, kc, vc
+
+
+def prefill(spec: TransformerSpec, params, tokens):
+    """Full-prompt forward. Returns (last_logits [V], k_caches, v_caches).
+
+    Caches are ``(n_layers, h, SMAX, dh)`` with rows ``>= SEQ`` zero.
+    """
+    embed, pos_embed, layers, out_gain, w_out = _unpack(spec, params)
+    s = tokens.shape[0]
+    x = embed[tokens] + pos_embed[:s]
+    ks, vs = [], []
+    for layer in layers:
+        x, k, v = _block_prefill(x, layer, spec)
+        pad = SMAX - s
+        ks.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0))))
+        vs.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0))))
+    logits = _fused_norm_matmul(x[-1:], out_gain, w_out)[0]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(spec: TransformerSpec, params, token, pos, k_caches, v_caches):
+    """Single-token forward at ``pos``. Returns (logits, k_caches, v_caches)."""
+    embed, pos_embed, layers, out_gain, w_out = _unpack(spec, params)
+    x = (embed[token] + pos_embed[pos]).reshape(1, -1)
+    new_k, new_v = [], []
+    for i, layer in enumerate(layers):
+        x, kc, vc = _block_decode(x, layer, k_caches[i], v_caches[i], pos, spec)
+        new_k.append(kc)
+        new_v.append(vc)
+    logits = _fused_norm_matmul(x, out_gain, w_out)[0]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def generate(spec: TransformerSpec, params, tokens):
+    """Fused prefill + GEN_LEN-step greedy decode (the exported artifact).
+
+    Returns:
+      gen_tokens: (GEN_LEN,) i32 greedy continuation.
+      score: scalar f32 — mean max-softmax probability over decode steps
+        (the generator's self-confidence signal used by the harness).
+    """
+    logits, kc, vc = prefill(spec, params, tokens)
+
+    def body(carry, _):
+        logits, kc, vc, pos = carry
+        tok = jnp.argmax(logits).astype(jnp.int32)
+        prob = jax.nn.softmax(logits)[tok]
+        logits2, kc2, vc2 = decode_step(spec, params, tok, pos, kc, vc)
+        return (logits2, kc2, vc2, pos + 1), (tok, prob)
+
+    (_, _, _, _), (toks, probs) = jax.lax.scan(
+        body, (logits, kc, vc, jnp.int32(SEQ)), None, length=GEN_LEN
+    )
+    return toks, jnp.mean(probs)
+
+
+def build_generator(spec: TransformerSpec) -> ModelDef:
+    """Package a generator as an AOT-exportable ModelDef."""
+    pb = make_params(spec)
+
+    def apply(params, tokens):
+        return generate(spec, params, tokens)
+
+    return ModelDef(
+        name=spec.name,
+        kind="generator",
+        params=pb.params,
+        apply=apply,
+        inputs=[IoSpec("tokens", (SEQ,), "i32")],
+        meta={
+            "alias": spec.alias,
+            "d_model": spec.d_model,
+            "n_layers": spec.n_layers,
+            "n_heads": spec.n_heads,
+            "vocab": VOCAB,
+            "seq": SEQ,
+            "gen_len": GEN_LEN,
+            "smax": SMAX,
+            "flops_per_token": spec.flops_per_token(),
+        },
+    )

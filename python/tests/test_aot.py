@@ -1,0 +1,71 @@
+"""AOT export: HLO text validity, manifest schema, weights-bin layout."""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile.aot import lower_model, output_specs
+from compile.model import all_models
+from compile.models import build_retriever
+from compile.models.detector import DETECTORS, build_detector
+from compile.models.transformer import GENERATORS, build_generator
+
+
+def test_registry_complete():
+    models = all_models()
+    names = [m.name for m in models]
+    assert len(names) == len(set(names))
+    kinds = {m.kind for m in models}
+    assert kinds == {"retriever", "reranker", "generator", "detector", "verifier"}
+    # 1 retriever + 3 rerankers + 6 generators + 3 detectors + 3 verifiers
+    assert len(models) == 16
+
+
+def test_retriever_hlo_text_parses():
+    hlo = lower_model(build_retriever())
+    assert hlo.startswith("HloModule")
+    assert "ENTRY" in hlo
+    # top-k emits a sort; the pallas scoring shows up as fusion/dot ops
+    assert "sort" in hlo.lower()
+
+
+def test_detector_hlo_has_convs():
+    hlo = lower_model(build_detector(DETECTORS[0]))
+    assert "convolution" in hlo
+
+
+def test_output_specs_generator():
+    outs = output_specs(build_generator(GENERATORS[0]))
+    assert outs == [
+        {"shape": [16], "dtype": "i32"},
+        {"shape": [], "dtype": "f32"},
+    ]
+
+
+def test_flat_weights_layout_matches_param_specs():
+    m = build_generator(GENERATORS[0])
+    flat = m.flat_weights()
+    offset = 0
+    for name, arr in m.params:
+        n = int(arr.size)
+        np.testing.assert_array_equal(
+            flat[offset : offset + n], np.asarray(arr, np.float32).reshape(-1)
+        )
+        offset += n
+    assert offset == flat.size
+
+
+def test_manifest_json_roundtrip(tmp_path):
+    from compile.aot import export_model
+
+    m = build_retriever()
+    entry = export_model(m, tmp_path)
+    blob = json.dumps({"artifacts": {m.name: entry}})
+    parsed = json.loads(blob)
+    e = parsed["artifacts"]["retriever"]
+    assert e["kind"] == "retriever"
+    assert (tmp_path / e["hlo"]).exists()
+    assert e["inputs"][0]["name"] == "corpus"
+    assert e["outputs"][0]["dtype"] == "f32"
+    assert e["outputs"][1]["dtype"] == "i32"

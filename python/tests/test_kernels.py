@@ -1,0 +1,179 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes, tile sizes and seeds; assert_allclose against
+``compile.kernels.ref``.  This is the core correctness signal for the
+compute that ends up inside every AOT artifact.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    mha_decode,
+    mha_prefill,
+    retrieval_scores,
+    rmsnorm_matmul,
+)
+from compile.kernels import ref
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.randn(*shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- prefill
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 3, 5]),
+    s_mult=st.sampled_from([1, 2, 3]),
+    dh=st.sampled_from([16, 24, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mha_prefill_matches_ref(h, s_mult, dh, causal, seed):
+    s = 32 * s_mult
+    rng = np.random.RandomState(seed % 100000)
+    q, k, v = (_arr(rng, h, s, dh) for _ in range(3))
+    out = mha_prefill(q, k, v, causal=causal)
+    expect = ref.mha_prefill_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, expect, **TOL)
+
+
+@pytest.mark.parametrize("q_block,k_chunk", [(8, 8), (16, 32), (32, 16), (64, 64)])
+def test_mha_prefill_tile_invariance(q_block, k_chunk):
+    """Output must not depend on the VMEM tiling schedule."""
+    rng = np.random.RandomState(7)
+    q, k, v = (_arr(rng, 2, 64, 32) for _ in range(3))
+    base = ref.mha_prefill_ref(q, k, v, causal=True)
+    out = mha_prefill(q, k, v, causal=True, q_block=q_block, k_chunk=k_chunk)
+    np.testing.assert_allclose(out, base, **TOL)
+
+
+def test_mha_prefill_causality():
+    """Perturbing a future token must not change earlier outputs."""
+    rng = np.random.RandomState(3)
+    q, k, v = (_arr(rng, 2, 64, 32) for _ in range(3))
+    out1 = np.asarray(mha_prefill(q, k, v, causal=True))
+    k2 = k.at[:, -1, :].add(10.0)
+    v2 = v.at[:, -1, :].add(10.0)
+    out2 = np.asarray(mha_prefill(q, k2, v2, causal=True))
+    np.testing.assert_allclose(out1[:, :-1], out2[:, :-1], **TOL)
+    assert not np.allclose(out1[:, -1], out2[:, -1])
+
+
+def test_mha_prefill_rejects_bad_tiles():
+    rng = np.random.RandomState(0)
+    q, k, v = (_arr(rng, 1, 48, 16) for _ in range(3))
+    with pytest.raises(ValueError):
+        mha_prefill(q, k, v, q_block=32, k_chunk=32)  # 48 % 32 != 0
+
+
+# ----------------------------------------------------------------- decode
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    smax_mult=st.sampled_from([1, 2, 3]),
+    dh=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    frac=st.floats(0.1, 1.0),
+)
+def test_mha_decode_matches_ref(h, smax_mult, dh, seed, frac):
+    smax = 32 * smax_mult
+    length = max(1, int(smax * frac))
+    rng = np.random.RandomState(seed % 100000)
+    q = _arr(rng, h, dh)
+    kc, vc = _arr(rng, h, smax, dh), _arr(rng, h, smax, dh)
+    out = mha_decode(q, kc, vc, length)
+    expect = ref.mha_decode_ref(q, kc, vc, length)
+    np.testing.assert_allclose(out, expect, **TOL)
+
+
+def test_mha_decode_ignores_masked_tail():
+    """Cache rows beyond ``length`` must not affect the output."""
+    rng = np.random.RandomState(11)
+    q = _arr(rng, 2, 32)
+    kc, vc = _arr(rng, 2, 96, 32), _arr(rng, 2, 96, 32)
+    out1 = np.asarray(mha_decode(q, kc, vc, 40))
+    kc2 = kc.at[:, 40:, :].set(99.0)
+    vc2 = vc.at[:, 40:, :].set(-99.0)
+    out2 = np.asarray(mha_decode(q, kc2, vc2, 40))
+    np.testing.assert_allclose(out1, out2, **TOL)
+
+
+def test_mha_decode_equals_prefill_row():
+    """Decode at position p must equal the prefill output row p."""
+    rng = np.random.RandomState(13)
+    h, s, dh = 2, 64, 32
+    q, k, v = (_arr(rng, h, s, dh) for _ in range(3))
+    full = np.asarray(ref.mha_prefill_ref(q, k, v, causal=True))
+    p = 41
+    out = np.asarray(mha_decode(q[:, p, :], k, v, p + 1))
+    np.testing.assert_allclose(out, full[:, p, :], **TOL)
+
+
+# -------------------------------------------------------- rmsnorm->matmul
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([1, 8, 33, 64]),
+    d=st.sampled_from([48, 64, 96]),
+    f=st.sampled_from([1, 64, 192]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_matmul_matches_ref(rows, d, f, seed):
+    rng = np.random.RandomState(seed % 100000)
+    x, g, w = _arr(rng, rows, d), _arr(rng, d), _arr(rng, d, f)
+    rb = 1 if rows % 8 else 8
+    fb = 1 if f % 32 else 32
+    out = rmsnorm_matmul(x, g, w, row_block=rb, col_block=fb)
+    np.testing.assert_allclose(out, ref.rmsnorm_matmul_ref(x, g, w), **TOL)
+
+
+def test_rmsnorm_matmul_scale_invariance():
+    """RMSNorm output is invariant to input scaling (up to eps)."""
+    rng = np.random.RandomState(5)
+    x, g, w = _arr(rng, 16, 64), _arr(rng, 64), _arr(rng, 64, 32)
+    a = np.asarray(rmsnorm_matmul(x, g, w, row_block=16, col_block=32))
+    b = np.asarray(rmsnorm_matmul(x * 3.7, g, w, row_block=16, col_block=32))
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+def test_rmsnorm_matmul_shape_mismatch():
+    rng = np.random.RandomState(0)
+    with pytest.raises(ValueError):
+        rmsnorm_matmul(_arr(rng, 8, 64), _arr(rng, 32), _arr(rng, 64, 16))
+
+
+# -------------------------------------------------------------- retrieval
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_mult=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_retrieval_scores_matches_ref(n_mult, d, seed):
+    n = 64 * n_mult
+    rng = np.random.RandomState(seed % 100000)
+    c, q = _arr(rng, n, d), _arr(rng, d)
+    out = retrieval_scores(c, q)
+    np.testing.assert_allclose(out, ref.retrieval_scores_ref(c, q), **TOL)
+
+
+def test_retrieval_top1_is_planted_doc():
+    """A planted near-duplicate embedding must win the similarity race."""
+    rng = np.random.RandomState(17)
+    c = jnp.asarray(rng.randn(256, 64), jnp.float32)
+    q = c[123] * 0.9 + 0.01 * jnp.asarray(rng.randn(64), jnp.float32)
+    scores = np.asarray(retrieval_scores(c, q))
+    assert scores.argmax() == 123

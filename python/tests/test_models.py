@@ -1,0 +1,166 @@
+"""L2 model correctness: shapes, determinism, decode/prefill consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models.detector import DETECTORS, VERIFIERS, GRID, N_CLASSES, detect, verify
+from compile.models.detector import make_params as det_params
+from compile.models.reranker import (
+    D_LEN,
+    Q_LEN,
+    RERANK_BATCH,
+    RERANKERS,
+    score_pairs,
+)
+from compile.models.reranker import make_params as rr_params
+from compile.models.transformer import (
+    GEN_LEN,
+    GENERATORS,
+    SEQ,
+    SMAX,
+    VOCAB,
+    decode_step,
+    generate,
+    make_params,
+    prefill,
+)
+
+SMALL = GENERATORS[0]
+
+
+def _params(spec):
+    return [jnp.asarray(a) for _, a in make_params(spec).params]
+
+
+def _toks(seed=0, n=SEQ):
+    return jnp.asarray(np.random.RandomState(seed).randint(0, VOCAB, n), jnp.int32)
+
+
+def test_prefill_shapes():
+    params = _params(SMALL)
+    logits, kc, vc = prefill(SMALL, params, _toks())
+    assert logits.shape == (VOCAB,)
+    assert kc.shape == (SMALL.n_layers, SMALL.n_heads, SMAX, 32)
+    assert vc.shape == kc.shape
+    # cache tail (rows >= SEQ) must be zero-padded
+    assert np.abs(np.asarray(kc)[:, :, SEQ:, :]).max() == 0.0
+
+
+def test_generate_shapes_and_determinism():
+    params = _params(SMALL)
+    f = jax.jit(lambda p, t: generate(SMALL, p, t))
+    t1, s1 = f(params, _toks(1))
+    t2, s2 = f(params, _toks(1))
+    assert t1.shape == (GEN_LEN,) and t1.dtype == jnp.int32
+    np.testing.assert_array_equal(t1, t2)
+    assert float(s1) == float(s2)
+    assert 0.0 <= float(s1) <= 1.0
+    assert np.all((np.asarray(t1) >= 0) & (np.asarray(t1) < VOCAB))
+
+
+def test_generate_depends_on_prompt():
+    params = _params(SMALL)
+    f = jax.jit(lambda p, t: generate(SMALL, p, t))
+    t1, _ = f(params, _toks(1))
+    t2, _ = f(params, _toks(2))
+    assert not np.array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_decode_step_consistent_with_prefill():
+    """Greedy step from prefill logits must match the scan's first token,
+    and decode_step at SEQ must reproduce what a longer prefill computes."""
+    params = _params(SMALL)
+    toks = _toks(3)
+    logits, kc, vc = jax.jit(lambda p, t: prefill(SMALL, p, t))(params, toks)
+    tok0 = int(np.argmax(np.asarray(logits)))
+    gen, _ = jax.jit(lambda p, t: generate(SMALL, p, t))(params, toks)
+    assert int(np.asarray(gen)[0]) == tok0
+    # one manual decode step == second generated token
+    logits2, kc2, vc2 = jax.jit(
+        lambda p, t, pos, kc, vc: decode_step(SMALL, p, t, pos, kc, vc)
+    )(params, jnp.int32(tok0), jnp.int32(SEQ), kc, vc)
+    assert int(np.argmax(np.asarray(logits2))) == int(np.asarray(gen)[1])
+
+
+def test_generator_param_count_monotone():
+    """The size ladder must be strictly increasing (latency proxy)."""
+    counts = [
+        sum(int(a.size) for _, a in make_params(s).params) for s in GENERATORS
+    ]
+    assert counts == sorted(counts)
+    assert len(set(counts)) == len(counts)
+
+
+def test_generator_weights_deterministic():
+    a = make_params(SMALL).params
+    b = make_params(SMALL).params
+    for (na, wa), (nb, wb) in zip(a, b):
+        assert na == nb
+        np.testing.assert_array_equal(wa, wb)
+
+
+# ---------------------------------------------------------------- reranker
+
+
+@pytest.mark.parametrize("spec", RERANKERS, ids=lambda s: s.name)
+def test_reranker_scores_shape(spec):
+    params = [jnp.asarray(a) for _, a in rr_params(spec).params]
+    q = _toks(5, Q_LEN)
+    d = jnp.asarray(
+        np.random.RandomState(6).randint(0, VOCAB, (RERANK_BATCH, D_LEN)), jnp.int32
+    )
+    (scores,) = score_pairs(spec, params, q, d)
+    assert scores.shape == (RERANK_BATCH,)
+    assert np.all(np.isfinite(np.asarray(scores)))
+
+
+def test_reranker_scores_depend_on_doc():
+    spec = RERANKERS[0]
+    params = [jnp.asarray(a) for _, a in rr_params(spec).params]
+    q = _toks(5, Q_LEN)
+    rng = np.random.RandomState(6)
+    d = jnp.asarray(rng.randint(0, VOCAB, (RERANK_BATCH, D_LEN)), jnp.int32)
+    (s1,) = score_pairs(spec, params, q, d)
+    d2 = d.at[2].set((d[2] + 37) % VOCAB)
+    (s2,) = score_pairs(spec, params, q, d2)
+    s1, s2 = np.asarray(s1), np.asarray(s2)
+    assert s1[2] != s2[2]
+    np.testing.assert_allclose(np.delete(s1, 2), np.delete(s2, 2), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- detector
+
+
+@pytest.mark.parametrize("spec", DETECTORS, ids=lambda s: s.name)
+def test_detector_shapes(spec):
+    params = [jnp.asarray(a) for _, a in det_params(spec, GRID * GRID + N_CLASSES).params]
+    img = jnp.asarray(np.random.RandomState(2).randn(32, 32, 3), jnp.float32)
+    conf, cls = detect(spec, params, img)
+    assert conf.shape == (GRID * GRID,)
+    assert cls.shape == (N_CLASSES,)
+    assert np.all(np.isfinite(np.asarray(conf)))
+
+
+@pytest.mark.parametrize("spec", VERIFIERS, ids=lambda s: s.name)
+def test_verifier_shapes(spec):
+    params = [jnp.asarray(a) for _, a in det_params(spec, 1 + N_CLASSES).params]
+    img = jnp.asarray(np.random.RandomState(2).randn(32, 32, 3), jnp.float32)
+    score, cls = verify(spec, params, img)
+    assert score.shape == (1,)
+    assert cls.shape == (N_CLASSES,)
+
+
+def test_cnn_cost_ladder_monotone():
+    """Detector/verifier param counts must increase along the ladder."""
+    det_counts = [
+        sum(int(a.size) for _, a in det_params(s, GRID * GRID + N_CLASSES).params)
+        for s in DETECTORS
+    ]
+    ver_counts = [
+        sum(int(a.size) for _, a in det_params(s, 1 + N_CLASSES).params)
+        for s in VERIFIERS
+    ]
+    assert det_counts == sorted(det_counts)
+    assert ver_counts == sorted(ver_counts)

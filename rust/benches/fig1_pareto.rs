@@ -1,0 +1,27 @@
+//! Bench: live per-configuration profiling cost (paper Fig. 1 inputs) —
+//! one request per ladder extreme through the real PJRT pipeline.
+//! Requires `make artifacts`; skips gracefully otherwise.
+use compass::configspace::rag_space;
+use compass::runtime::artifacts_dir;
+use compass::util::bench::{bench, group};
+use compass::workflows::rag::RagWorkflow;
+use compass::workflows::Workflow;
+
+fn main() {
+    group("fig1: live RAG request per ladder extreme");
+    if !artifacts_dir().join("manifest.json").exists() {
+        println!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let space = rag_space();
+    let mut wf = RagWorkflow::load(&artifacts_dir(), 7).unwrap();
+    for (label, cfg) in [
+        ("fastest (gen-64,3,1,rr-48)", vec![0usize, 0, 0, 0]),
+        ("mid (gen-128,10,3,rr-96)", vec![2, 2, 1, 1]),
+        ("accurate (gen-288,20,3,rr-160)", vec![5, 3, 1, 2]),
+    ] {
+        bench(label, 2, 10, || {
+            std::hint::black_box(wf.run(&space, &cfg).unwrap());
+        });
+    }
+}

@@ -1,0 +1,19 @@
+//! Bench: COMPASS-V convergence (paper Fig. 3) — times the search at
+//! representative thresholds and regenerates the anytime curve.
+use compass::configspace::rag_space;
+use compass::oracle::RagOracle;
+use compass::search::{CompassV, CompassVParams};
+use compass::util::bench::{bench, group};
+
+fn main() {
+    group("fig3: COMPASS-V search (RAG space)");
+    let space = rag_space();
+    for tau in [0.50, 0.75, 0.85] {
+        bench(&format!("compass_v tau={tau}"), 1, 10, || {
+            let mut oracle = RagOracle::new_rag(7);
+            let r = CompassV::new(CompassVParams { seed: 7, ..Default::default() })
+                .run(&space, tau, &mut oracle);
+            std::hint::black_box(r.feasible.len());
+        });
+    }
+}

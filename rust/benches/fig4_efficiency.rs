@@ -1,0 +1,34 @@
+//! Bench: the full Fig. 4 sweep (both workflows, 16 thresholds) — the
+//! offline-phase cost COMPASS-V saves vs exhaustive search.
+use compass::configspace::{detection_space, rag_space};
+use compass::oracle::{DetectionOracle, RagOracle};
+use compass::search::{grid_search, BudgetSchedule, CompassV, CompassVParams};
+use compass::util::bench::{bench, group};
+
+fn main() {
+    group("fig4: search vs exhaustive (sample efficiency)");
+    let rag = rag_space();
+    bench("compass_v rag 8-tau sweep", 1, 5, || {
+        for tau in [0.30, 0.40, 0.50, 0.60, 0.70, 0.75, 0.80, 0.85] {
+            let mut o = RagOracle::new_rag(7);
+            let r = CompassV::new(CompassVParams { seed: 7, ..Default::default() })
+                .run(&rag, tau, &mut o);
+            std::hint::black_box(r.samples_used);
+        }
+    });
+    bench("grid_search rag (exhaustive baseline)", 1, 5, || {
+        let mut o = RagOracle::new_rag(7);
+        std::hint::black_box(grid_search(&rag, 100, &mut o).samples_used);
+    });
+    let det = detection_space();
+    bench("compass_v detection tau=0.70", 1, 5, || {
+        let mut o = DetectionOracle::new_detection(7);
+        let r = CompassV::new(CompassVParams {
+            seed: 7,
+            schedule: BudgetSchedule::detection(),
+            ..Default::default()
+        })
+        .run(&det, 0.70, &mut o);
+        std::hint::black_box(r.samples_used);
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench: serving-cell simulation throughput (paper Fig. 5 machinery) —
+//! one full 180s spike cell per policy through the discrete-event engine.
+use compass::experiments::common::{base_qps, make_policy, offline_phase, simulate_boxed};
+use compass::sim::LognormalService;
+use compass::util::bench::{bench, group};
+use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
+
+fn main() {
+    group("fig5: 180s serving cells (sim)");
+    let (_s, full) = offline_phase(0.75, 1e9, 7, false).unwrap();
+    let slo = 2.2 * full.ladder.last().unwrap().mean_ms;
+    let (_s2, plan) = offline_phase(0.75, slo, 7, false).unwrap();
+    let arrivals = generate_arrivals(&WorkloadSpec {
+        base_qps: base_qps(&full),
+        duration_s: 180.0,
+        pattern: Pattern::paper_spike(),
+        seed: 7,
+    });
+    for policy_name in ["Elastico", "Static-Fast", "Static-Accurate"] {
+        let policy_plan = if policy_name == "Elastico" { &plan } else { &full };
+        let svc = LognormalService::from_plan(policy_plan, 0.10);
+        bench(&format!("sim 180s spike {policy_name}"), 1, 20, || {
+            let mut policy = make_policy(policy_plan, policy_name);
+            let out = simulate_boxed(&arrivals, policy_plan, &mut policy, &svc, 7);
+            std::hint::black_box(out.records.len());
+        });
+    }
+}

@@ -1,0 +1,23 @@
+//! Bench: latency-CDF extraction (paper Fig. 6 post-processing).
+use compass::experiments::common::{base_qps, make_policy, offline_phase, simulate_boxed};
+use compass::metrics::latency_cdf;
+use compass::sim::LognormalService;
+use compass::util::bench::{bench, group};
+use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
+
+fn main() {
+    group("fig6: CDF extraction over a spike run");
+    let (_s, plan) = offline_phase(0.75, 1e9, 7, false).unwrap();
+    let arrivals = generate_arrivals(&WorkloadSpec {
+        base_qps: base_qps(&plan),
+        duration_s: 180.0,
+        pattern: Pattern::paper_spike(),
+        seed: 7,
+    });
+    let svc = LognormalService::from_plan(&plan, 0.10);
+    let mut policy = make_policy(&plan, "Elastico");
+    let out = simulate_boxed(&arrivals, &plan, &mut policy, &svc, 7);
+    bench("latency_cdf 200pt", 2, 50, || {
+        std::hint::black_box(latency_cdf(&out.records, 200));
+    });
+}

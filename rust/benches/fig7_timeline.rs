@@ -1,0 +1,22 @@
+//! Bench: Elastico decision latency (the paper's <10ms switch budget) and
+//! the Fig. 7 timeline generation.
+use compass::experiments::common::{make_policy, offline_phase};
+use compass::serving::policy::ScalingPolicy;
+use compass::serving::ElasticoPolicy;
+use compass::util::bench::{bench, group};
+
+fn main() {
+    group("fig7: controller decision hot path");
+    let (_s, plan) = offline_phase(0.75, 1000.0, 7, false).unwrap();
+    let mut ela = ElasticoPolicy::new(plan.clone());
+    let mut t = 0.0;
+    bench("elastico.decide x10k", 2, 50, || {
+        for i in 0..10_000u64 {
+            t += 1.0;
+            std::hint::black_box(ela.decide(t, (i % 17) as usize));
+        }
+    });
+    bench("make_policy Elastico (switch setup)", 2, 100, || {
+        std::hint::black_box(make_policy(&plan, "Elastico").current());
+    });
+}

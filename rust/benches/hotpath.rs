@@ -1,0 +1,61 @@
+//! Bench: L3 coordinator hot-path microbenchmarks (perf pass §Perf):
+//! queue ops, monitor ticks, policy decisions, record aggregation —
+//! everything on the request path *except* the model compute.
+use compass::experiments::common::{make_policy, offline_phase};
+use compass::metrics::{RequestRecord, RunSummary};
+use compass::serving::monitor::LoadMonitor;
+use compass::serving::RequestQueue;
+use compass::util::bench::{bench, group};
+use compass::util::Rng;
+
+fn main() {
+    group("hotpath: L3 coordinator overhead");
+
+    bench("queue push+pop x1k", 2, 100, || {
+        let q: RequestQueue<(u64, f64)> = RequestQueue::new(4096);
+        for i in 0..1000u64 {
+            q.push((i, i as f64)).unwrap();
+        }
+        for _ in 0..1000 {
+            std::hint::black_box(
+                q.pop_timeout(std::time::Duration::from_millis(1)).unwrap(),
+            );
+        }
+    });
+
+    bench("monitor tick x1k", 2, 100, || {
+        let m = LoadMonitor::new(0.3);
+        for i in 0..1000 {
+            m.on_arrival();
+            std::hint::black_box(m.tick(i as f64 * 10.0));
+        }
+    });
+
+    let (_s, plan) = offline_phase(0.75, 1000.0, 7, false).unwrap();
+    let mut policy = make_policy(&plan, "Elastico");
+    bench("policy decide x1k", 2, 100, || {
+        for i in 0..1000u64 {
+            std::hint::black_box(policy.decide(i as f64, (i % 13) as usize));
+        }
+    });
+
+    // Metrics aggregation over a large run.
+    let mut rng = Rng::new(3);
+    let records: Vec<RequestRecord> = (0..100_000)
+        .map(|i| {
+            let arr = i as f64;
+            RequestRecord {
+                id: i,
+                arrival_ms: arr,
+                start_ms: arr + rng.uniform() * 5.0,
+                finish_ms: arr + 5.0 + rng.uniform() * 100.0,
+                config_idx: (i % 3) as usize,
+                accuracy: 0.8,
+                success: None,
+            }
+        })
+        .collect();
+    bench("RunSummary::compute 100k records", 1, 20, || {
+        std::hint::black_box(RunSummary::compute(&records, &[], 100.0, 3));
+    });
+}

@@ -1,0 +1,12 @@
+//! Bench: the offline planning phase (paper Table I derivation): search +
+//! modeled profiling + Pareto + AQM.
+use compass::experiments::common::offline_phase;
+use compass::util::bench::{bench, group};
+
+fn main() {
+    group("table1: offline planning phase (modeled)");
+    bench("offline_phase tau=0.75", 1, 10, || {
+        let (_s, plan) = offline_phase(0.75, 1000.0, 7, false).unwrap();
+        std::hint::black_box(plan.ladder.len());
+    });
+}

@@ -1,0 +1,72 @@
+//! Compound-AI configuration spaces (paper §II-A, Eq. 1).
+//!
+//! A workflow exposes heterogeneous parameters (categorical model choices,
+//! discrete k values, continuous thresholds quantized to grids); one
+//! complete assignment is a [`Config`]. The space is the Cartesian product
+//! of per-parameter value lists minus validity constraints, and induces an
+//! adjacency graph (configs differing in one parameter step) over which
+//! COMPASS-V hill-climbs and laterally expands.
+
+mod space;
+
+pub use space::{Config, ConfigSpace, Constraint, ParamDef, Value};
+
+use crate::workflows::rag::{GENERATOR_NAMES, RERANKER_NAMES};
+
+/// Retriever-k grid (paper: 3, 5, 10, 20, 50).
+pub const RETRIEVER_KS: [i64; 5] = [3, 5, 10, 20, 50];
+/// Rerank-k grid (paper: 1, 3, 5, 10).
+pub const RERANK_KS: [i64; 4] = [1, 3, 5, 10];
+
+/// The RAG workflow space (paper §VI-B): 6 generators x 5 retriever-k x
+/// 4 rerank-k x 3 rerankers, constrained to `rerank_k <= retriever_k`.
+pub fn rag_space() -> ConfigSpace {
+    ConfigSpace::new(
+        "rag",
+        vec![
+            ParamDef::categorical("generator", GENERATOR_NAMES.to_vec()),
+            ParamDef::discrete("retriever_k", RETRIEVER_KS.to_vec()),
+            ParamDef::discrete("rerank_k", RERANK_KS.to_vec()),
+            ParamDef::categorical("reranker", RERANKER_NAMES.to_vec()),
+        ],
+        vec![Constraint::LeqNumeric { a: 2, b: 1 }], // rerank_k <= retriever_k
+    )
+}
+
+/// The object-detection cascade space (paper §VI-B): 3 detectors x
+/// 4 verifiers (incl. none) x 7 confidence thresholds x 5 NMS thresholds.
+pub fn detection_space() -> ConfigSpace {
+    let conf: Vec<f64> = (0..7).map(|i| 0.10 + i as f64 * (0.40 / 6.0)).collect();
+    let nms: Vec<f64> = (0..5).map(|i| 0.30 + i as f64 * 0.10).collect();
+    ConfigSpace::new(
+        "detection",
+        vec![
+            ParamDef::categorical("detector", vec!["det-n", "det-s", "det-m"]),
+            ParamDef::categorical("verifier", vec!["none", "ver-m", "ver-l", "ver-x"]),
+            ParamDef::continuous_grid("conf_thr", conf),
+            ParamDef::continuous_grid("nms_thr", nms),
+        ],
+        vec![],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rag_space_counts() {
+        let s = rag_space();
+        assert_eq!(s.nominal_size(), 6 * 5 * 4 * 3);
+        // rerank_k <= retriever_k: k=3 -> 2 rk, k=5 -> 3, k>=10 -> 4.
+        let valid = s.enumerate_valid();
+        assert_eq!(valid.len(), 6 * 3 * (2 + 3 + 4 + 4 + 4));
+    }
+
+    #[test]
+    fn detection_space_counts() {
+        let s = detection_space();
+        assert_eq!(s.nominal_size(), 3 * 4 * 7 * 5);
+        assert_eq!(s.enumerate_valid().len(), 420);
+    }
+}

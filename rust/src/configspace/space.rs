@@ -1,0 +1,325 @@
+//! Configuration-space engine: parameters, configs, adjacency, indexing.
+
+use std::fmt;
+
+/// A parameter value: heterogeneous types per the paper (§II-A).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+}
+
+impl Value {
+    /// Numeric view (for constraints and normalization of ordered params).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            Value::Str(_) => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x:.2}"),
+        }
+    }
+}
+
+/// One adjustable component parameter with its finite value grid.
+#[derive(Clone, Debug)]
+pub struct ParamDef {
+    pub name: String,
+    pub values: Vec<Value>,
+}
+
+impl ParamDef {
+    pub fn categorical(name: &str, values: Vec<&str>) -> ParamDef {
+        ParamDef {
+            name: name.into(),
+            values: values.into_iter().map(|v| Value::Str(v.into())).collect(),
+        }
+    }
+
+    pub fn discrete(name: &str, values: Vec<i64>) -> ParamDef {
+        ParamDef {
+            name: name.into(),
+            values: values.into_iter().map(Value::Int).collect(),
+        }
+    }
+
+    /// A continuous parameter quantized onto an ordered grid.
+    pub fn continuous_grid(name: &str, values: Vec<f64>) -> ParamDef {
+        ParamDef {
+            name: name.into(),
+            values: values.into_iter().map(Value::Float).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// A complete parameter assignment, as one value index per parameter.
+pub type Config = Vec<usize>;
+
+/// Validity constraints between parameters.
+#[derive(Clone, Debug)]
+pub enum Constraint {
+    /// `value[a] <= value[b]` numerically (e.g. rerank-k <= retriever-k).
+    LeqNumeric { a: usize, b: usize },
+}
+
+impl Constraint {
+    pub fn ok(&self, space: &ConfigSpace, cfg: &[usize]) -> bool {
+        match *self {
+            Constraint::LeqNumeric { a, b } => {
+                let va = space.params[a].values[cfg[a]].as_f64();
+                let vb = space.params[b].values[cfg[b]].as_f64();
+                match (va, vb) {
+                    (Some(x), Some(y)) => x <= y,
+                    _ => true,
+                }
+            }
+        }
+    }
+}
+
+/// The combinatorial configuration space `C = P1 x ... x Pn` (Eq. 1).
+#[derive(Clone, Debug)]
+pub struct ConfigSpace {
+    pub name: String,
+    pub params: Vec<ParamDef>,
+    pub constraints: Vec<Constraint>,
+}
+
+impl ConfigSpace {
+    pub fn new(name: &str, params: Vec<ParamDef>, constraints: Vec<Constraint>) -> Self {
+        assert!(!params.is_empty());
+        assert!(params.iter().all(|p| !p.is_empty()));
+        ConfigSpace { name: name.into(), params, constraints }
+    }
+
+    /// Number of parameters (dimensions).
+    pub fn dims(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Size of the unconstrained product space.
+    pub fn nominal_size(&self) -> usize {
+        self.params.iter().map(|p| p.len()).product()
+    }
+
+    /// Does `cfg` satisfy every constraint?
+    pub fn valid(&self, cfg: &[usize]) -> bool {
+        self.constraints.iter().all(|c| c.ok(self, cfg))
+    }
+
+    /// All valid configurations, in flat-index order.
+    pub fn enumerate_valid(&self) -> Vec<Config> {
+        (0..self.nominal_size())
+            .map(|id| self.from_flat(id))
+            .filter(|c| self.valid(c))
+            .collect()
+    }
+
+    /// Flat (row-major) index of a config — a stable hashable id.
+    pub fn flat_id(&self, cfg: &[usize]) -> usize {
+        debug_assert_eq!(cfg.len(), self.dims());
+        let mut id = 0usize;
+        for (p, &i) in self.params.iter().zip(cfg) {
+            debug_assert!(i < p.len());
+            id = id * p.len() + i;
+        }
+        id
+    }
+
+    /// Inverse of [`flat_id`].
+    pub fn from_flat(&self, mut id: usize) -> Config {
+        let mut cfg = vec![0usize; self.dims()];
+        for (slot, p) in cfg.iter_mut().zip(&self.params).rev() {
+            *slot = id % p.len();
+            id /= p.len();
+        }
+        cfg
+    }
+
+    /// Normalized coordinates in `[0,1]^d` (paper Eq. 3 requires distance
+    /// over heterogeneous types; value *index* position is used, which is
+    /// exact for ordered grids and a rank encoding for categoricals).
+    pub fn normalize(&self, cfg: &[usize]) -> Vec<f64> {
+        cfg.iter()
+            .zip(&self.params)
+            .map(|(&i, p)| {
+                if p.len() <= 1 {
+                    0.0
+                } else {
+                    i as f64 / (p.len() - 1) as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Per-axis normalized step size (distance between adjacent values).
+    pub fn step(&self, axis: usize) -> f64 {
+        let n = self.params[axis].len();
+        if n <= 1 {
+            1.0
+        } else {
+            1.0 / (n - 1) as f64
+        }
+    }
+
+    /// Grid-adjacent valid neighbors: one parameter moved one step.
+    pub fn neighbors_step(&self, cfg: &[usize]) -> Vec<Config> {
+        let mut out = Vec::new();
+        for axis in 0..self.dims() {
+            for delta in [-1i64, 1] {
+                let ni = cfg[axis] as i64 + delta;
+                if ni < 0 || ni >= self.params[axis].len() as i64 {
+                    continue;
+                }
+                let mut n = cfg.to_vec();
+                n[axis] = ni as usize;
+                if self.valid(&n) {
+                    out.push(n);
+                }
+            }
+        }
+        out
+    }
+
+    /// All valid configs differing from `cfg` in exactly the given axis.
+    pub fn axis_neighbors(&self, cfg: &[usize], axis: usize) -> Vec<Config> {
+        (0..self.params[axis].len())
+            .filter(|&i| i != cfg[axis])
+            .map(|i| {
+                let mut n = cfg.to_vec();
+                n[axis] = i;
+                n
+            })
+            .filter(|n| self.valid(n))
+            .collect()
+    }
+
+    /// The named value of parameter `axis` in `cfg`.
+    pub fn value(&self, cfg: &[usize], axis: usize) -> &Value {
+        &self.params[axis].values[cfg[axis]]
+    }
+
+    /// Look up a parameter index by name.
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+
+    /// The value of the named parameter in `cfg` (panics on bad name).
+    pub fn named_value(&self, cfg: &[usize], name: &str) -> &Value {
+        let i = self
+            .param_index(name)
+            .unwrap_or_else(|| panic!("no param {name}"));
+        self.value(cfg, i)
+    }
+
+    /// Human-readable config tuple, e.g. `(gen-96, 10, 3, rr-48)`.
+    pub fn display(&self, cfg: &[usize]) -> String {
+        let parts: Vec<String> = cfg
+            .iter()
+            .zip(&self.params)
+            .map(|(&i, p)| p.values[i].to_string())
+            .collect();
+        format!("({})", parts.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ConfigSpace {
+        ConfigSpace::new(
+            "tiny",
+            vec![
+                ParamDef::categorical("m", vec!["a", "b", "c"]),
+                ParamDef::discrete("k", vec![1, 2, 5]),
+                ParamDef::discrete("j", vec![1, 4]),
+            ],
+            vec![Constraint::LeqNumeric { a: 2, b: 1 }], // j <= k
+        )
+    }
+
+    #[test]
+    fn flat_id_roundtrip() {
+        let s = tiny();
+        for id in 0..s.nominal_size() {
+            assert_eq!(s.flat_id(&s.from_flat(id)), id);
+        }
+    }
+
+    #[test]
+    fn constraint_filters() {
+        let s = tiny();
+        let valid = s.enumerate_valid();
+        // j=1 always ok (k>=1); j=4 needs k=5: 3 * (3 + 1) = 12.
+        assert_eq!(valid.len(), 12);
+        for c in &valid {
+            assert!(s.valid(c));
+        }
+    }
+
+    #[test]
+    fn normalize_bounds() {
+        let s = tiny();
+        for c in s.enumerate_valid() {
+            for x in s.normalize(&c) {
+                assert!((0.0..=1.0).contains(&x));
+            }
+        }
+        assert_eq!(s.normalize(&vec![0, 0, 0]), vec![0.0, 0.0, 0.0]);
+        assert_eq!(s.normalize(&vec![2, 2, 1]), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn neighbors_respect_constraints() {
+        let s = tiny();
+        // (a, k=1, j=1): raising j to 4 violates j<=k, so not a neighbor.
+        let n = s.neighbors_step(&vec![0, 0, 0]);
+        assert!(n.iter().all(|c| s.valid(c)));
+        assert!(!n.contains(&vec![0, 0, 1]));
+        // (a, k=5, j=1) -> raising j is fine.
+        let n = s.neighbors_step(&vec![0, 2, 0]);
+        assert!(n.contains(&vec![0, 2, 1]));
+    }
+
+    #[test]
+    fn axis_neighbors_change_one_axis() {
+        let s = tiny();
+        let n = s.axis_neighbors(&vec![1, 2, 0], 0);
+        assert_eq!(n.len(), 2);
+        for c in n {
+            assert_eq!(c[1..], [2, 0]);
+        }
+    }
+
+    #[test]
+    fn display_readable() {
+        let s = tiny();
+        assert_eq!(s.display(&vec![1, 2, 0]), "(b, 5, 1)");
+    }
+}

@@ -1,0 +1,80 @@
+//! Accuracy evaluation backends for the search layer.
+//!
+//! COMPASS-V consumes per-sample success/failure observations through the
+//! [`Evaluator`] trait. Two backends exist:
+//!
+//! * the calibrated surrogate oracles in [`crate::oracle`] (fast; used by
+//!   the paper-scale search experiments), and
+//! * [`LiveEvaluator`] here, which pushes real requests through a live
+//!   [`Workflow`] over PJRT — the "run the actual pipeline on dataset
+//!   samples" path, used by the end-to-end example on small subspaces.
+
+use crate::configspace::{Config, ConfigSpace};
+use crate::search::Evaluator;
+use crate::workflows::Workflow;
+
+/// Evaluates configurations by executing the live workflow.
+pub struct LiveEvaluator<W: Workflow> {
+    workflow: W,
+    /// Total workflow executions performed (cost accounting).
+    pub executions: u64,
+}
+
+impl<W: Workflow> LiveEvaluator<W> {
+    pub fn new(workflow: W) -> Self {
+        LiveEvaluator { workflow, executions: 0 }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.workflow
+    }
+}
+
+impl<W: Workflow> Evaluator for LiveEvaluator<W> {
+    fn sample(&mut self, space: &ConfigSpace, cfg: &Config, n: u32) -> u32 {
+        let mut successes = 0;
+        for _ in 0..n {
+            self.executions += 1;
+            match self.workflow.run(space, cfg) {
+                Ok(out) => {
+                    if out.success.unwrap_or(false) {
+                        successes += 1;
+                    }
+                }
+                Err(e) => panic!("live evaluation failed: {e:#}"),
+            }
+        }
+        successes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configspace::{ConfigSpace, ParamDef};
+    use crate::workflows::ExecOutcome;
+
+    struct AlwaysRight;
+
+    impl Workflow for AlwaysRight {
+        fn run(
+            &mut self,
+            _space: &ConfigSpace,
+            _cfg: &Config,
+        ) -> anyhow::Result<ExecOutcome> {
+            Ok(ExecOutcome { accuracy: 1.0, success: Some(true) })
+        }
+
+        fn name(&self) -> &str {
+            "always-right"
+        }
+    }
+
+    #[test]
+    fn counts_successes_and_executions() {
+        let s = ConfigSpace::new("t", vec![ParamDef::discrete("x", vec![0])], vec![]);
+        let mut e = LiveEvaluator::new(AlwaysRight);
+        assert_eq!(e.sample(&s, &vec![0], 25), 25);
+        assert_eq!(e.executions, 25);
+    }
+}

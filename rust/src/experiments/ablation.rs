@@ -1,0 +1,168 @@
+//! Ablations of the design choices DESIGN.md calls out (not a paper
+//! figure; supports the analysis sections):
+//!
+//! * **search navigation** — COMPASS-V vs random-order search with the
+//!   same progressive budgeting (isolates gradient guidance + lateral
+//!   expansion from Wilson early stopping);
+//! * **progressive budgeting** — COMPASS-V with the full B_max per
+//!   configuration (isolates early stopping);
+//! * **hysteresis** — Elastico with/without the asymmetric cooldown, and
+//!   the predictive extension (§VIII), on the spike workload;
+//! * **LHS seeding** — recall sensitivity to `n_init`.
+
+use anyhow::Result;
+
+use super::common::{
+    base_qps, make_policy, offline_phase, simulate_boxed, ExperimentCtx,
+};
+use crate::configspace::rag_space;
+use crate::metrics::RunSummary;
+use crate::oracle::RagOracle;
+use crate::search::{
+    random_search, BudgetSchedule, CompassV, CompassVParams,
+};
+use crate::serving::{PredictivePolicy, ScalingPolicy};
+use crate::sim::LognormalService;
+use crate::util::csv::CsvWriter;
+use crate::workload::{generate_arrivals, Pattern, WorkloadSpec};
+
+pub fn run(ctx: &ExperimentCtx) -> Result<()> {
+    search_ablation(ctx)?;
+    seeding_ablation(ctx)?;
+    controller_ablation(ctx)?;
+    Ok(())
+}
+
+fn search_ablation(ctx: &ExperimentCtx) -> Result<()> {
+    let space = rag_space();
+    let n = space.enumerate_valid().len();
+    let b_max = BudgetSchedule::rag().b_max();
+    let tau = 0.80;
+
+    let mut oracle = RagOracle::new_rag(ctx.seed);
+    let full = CompassV::new(CompassVParams { seed: ctx.seed, ..Default::default() })
+        .run(&space, tau, &mut oracle);
+
+    // No early stopping: single-level schedule at B_max.
+    let mut oracle = RagOracle::new_rag(ctx.seed);
+    let no_early = CompassV::new(CompassVParams {
+        seed: ctx.seed,
+        schedule: BudgetSchedule::new(vec![b_max]),
+        ..Default::default()
+    })
+    .run(&space, tau, &mut oracle);
+
+    // No navigation: random order, same budgeting.
+    let mut oracle = RagOracle::new_rag(ctx.seed);
+    let random = random_search(
+        &space,
+        tau,
+        &BudgetSchedule::rag(),
+        1.96,
+        ctx.seed,
+        None,
+        &mut oracle,
+    );
+
+    println!("Ablation A — search components (tau={tau}, |C|={n}):");
+    println!("  {:<34} {:>9} {:>9} {:>9}", "variant", "found", "samples", "savings%");
+    let mut csv = CsvWriter::create(
+        &ctx.out_dir.join("ablation_search.csv"),
+        &["variant", "found", "samples", "savings_pct"],
+    )?;
+    for (name, r) in [
+        ("COMPASS-V (full)", &full),
+        ("no early stopping", &no_early),
+        ("no navigation (random order)", &random),
+    ] {
+        let savings = r.savings_vs_exhaustive(n, b_max) * 100.0;
+        println!(
+            "  {:<34} {:>9} {:>9} {:>8.1}%",
+            name,
+            r.feasible.len(),
+            r.samples_used,
+            savings
+        );
+        csv.row(&[
+            name.into(),
+            r.feasible.len().to_string(),
+            r.samples_used.to_string(),
+            format!("{savings:.1}"),
+        ])?;
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+fn seeding_ablation(ctx: &ExperimentCtx) -> Result<()> {
+    let space = rag_space();
+    let tau = 0.85; // tight: seeding matters most here
+    println!("\nAblation B — LHS seeding (tau={tau}):");
+    for n_init in [4usize, 8, 16, 32] {
+        let mut oracle = RagOracle::new_rag(ctx.seed);
+        let r = CompassV::new(CompassVParams {
+            seed: ctx.seed,
+            n_init,
+            ..Default::default()
+        })
+        .run(&space, tau, &mut oracle);
+        println!(
+            "  n_init={n_init:<3} found {:>3} with {:>6} samples",
+            r.feasible.len(),
+            r.samples_used
+        );
+    }
+    Ok(())
+}
+
+fn controller_ablation(ctx: &ExperimentCtx) -> Result<()> {
+    let (_s, full) = offline_phase(0.75, 1e9, ctx.seed, false)?;
+    let slo = 2.2 * full.ladder.last().unwrap().mean_ms;
+    let (_s2, plan) = offline_phase(0.75, slo, ctx.seed, false)?;
+    let arrivals = generate_arrivals(&WorkloadSpec {
+        base_qps: base_qps(&full),
+        duration_s: ctx.duration_s,
+        pattern: Pattern::paper_spike(),
+        seed: ctx.seed,
+    });
+    let svc = LognormalService::from_plan(&plan, 0.10);
+
+    println!("\nAblation C — controller variants (spike, SLO {slo:.0} ms):");
+    let mut variants: Vec<(&str, Box<dyn ScalingPolicy>)> = vec![
+        ("Elastico (asymmetric hysteresis)", make_policy(&plan, "Elastico")),
+        ("Predictive extension (§VIII)", Box::new(PredictivePolicy::new(plan.clone()))),
+        ("no hysteresis (t↓ = 0)", {
+            let mut p = plan.clone();
+            p.down_cooldown_ms = 0.0;
+            Box::new(crate::serving::ElasticoPolicy::new(p))
+        }),
+    ];
+    let mut csv = CsvWriter::create(
+        &ctx.out_dir.join("ablation_controller.csv"),
+        &["variant", "slo_compliance_pct", "mean_accuracy", "switches"],
+    )?;
+    for (name, policy) in variants.iter_mut() {
+        let mut boxed: Box<dyn ScalingPolicy> = std::mem::replace(
+            policy,
+            Box::new(crate::serving::StaticPolicy::new(0, "placeholder")),
+        );
+        let out = simulate_boxed(&arrivals, &plan, &mut boxed, &svc, ctx.seed);
+        let s = RunSummary::compute(&out.records, &out.switches, slo, plan.ladder.len());
+        println!(
+            "  {:<36} SLO {:>5.1}%  acc {:.3}  switches {:>4}",
+            name,
+            s.slo_compliance * 100.0,
+            s.mean_accuracy,
+            s.switches
+        );
+        csv.row(&[
+            (*name).into(),
+            format!("{:.1}", s.slo_compliance * 100.0),
+            format!("{:.4}", s.mean_accuracy),
+            s.switches.to_string(),
+        ])?;
+    }
+    csv.flush()?;
+    println!("-> results/ablation_search.csv, results/ablation_controller.csv");
+    Ok(())
+}

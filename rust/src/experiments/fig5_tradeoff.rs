@@ -1,0 +1,115 @@
+//! Fig. 5 — SLO compliance and accuracy across {spike, bursty} x three
+//! SLO targets x four policies, plus the paper's headline aggregates
+//! (+71.6% compliance vs Static-Accurate, +3-5 accuracy points vs
+//! Static-Fast, 90-98% compliance overall).
+
+use anyhow::Result;
+
+use super::common::{
+    offline_phase, run_cell, Cell, ExperimentCtx, POLICIES, SLO_FACTORS,
+};
+use crate::util::csv::CsvWriter;
+use crate::workload::Pattern;
+
+pub fn run(ctx: &ExperimentCtx) -> Result<()> {
+    // Offline phase once: the full front drives the static baselines and
+    // the (SLO-independent) base load; per-SLO plans re-derive thresholds
+    // for Elastico.
+    let (_s, full) = offline_phase(0.75, 1e9, ctx.seed, ctx.live)?;
+    let slowest_mean = full.ladder.last().unwrap().mean_ms;
+    let qps = super::common::base_qps(&full);
+
+    let mut csv = CsvWriter::create(
+        &ctx.out_dir.join("fig5_tradeoff.csv"),
+        &[
+            "pattern", "slo_ms", "policy", "slo_compliance_pct",
+            "mean_accuracy", "p95_ms", "switches", "requests",
+        ],
+    )?;
+
+    println!(
+        "Fig.5: serving cells ({}; {}s per cell, base utilization 0.45)",
+        if ctx.live { "LIVE serving" } else { "discrete-event sim of live profiles" },
+        ctx.duration_s
+    );
+
+    // Aggregates for the headline claims.
+    let mut ela_minus_acc: Vec<f64> = Vec::new(); // compliance gain
+    let mut ela_acc_gain: Vec<f64> = Vec::new(); // accuracy vs fast
+    let mut ela_compliance: Vec<f64> = Vec::new();
+
+    for (pattern_name, pattern) in [
+        ("spike", Pattern::paper_spike()),
+        ("bursty", Pattern::paper_bursty()),
+    ] {
+        for factor in SLO_FACTORS {
+            let slo = factor * slowest_mean;
+            let (space, plan) = offline_phase(0.75, slo, ctx.seed, false)?;
+            println!(
+                "\n-- pattern={pattern_name} SLO={slo:.0}ms (Elastico ladder {} rungs) --",
+                plan.ladder.len()
+            );
+            let mut cells: std::collections::BTreeMap<String, _> =
+                Default::default();
+            for policy in POLICIES {
+                let cell = Cell {
+                    pattern_name,
+                    pattern: pattern.clone(),
+                    slo_ms: slo,
+                    policy_name: policy.into(),
+                    base_qps: qps,
+                };
+                // Statics keep their full-front configuration regardless
+                // of the SLO (paper Table I baselines).
+                let policy_plan = if policy == "Elastico" { &plan } else { &full };
+                let (_r, _s2, summary) = run_cell(ctx, &space, policy_plan, &cell)?;
+                println!(
+                    "  {}",
+                    crate::metrics::report::summary_row(policy, &summary)
+                );
+                csv.row(&[
+                    pattern_name.into(),
+                    format!("{slo:.0}"),
+                    policy.into(),
+                    format!("{:.2}", summary.slo_compliance * 100.0),
+                    format!("{:.4}", summary.mean_accuracy),
+                    format!("{:.1}", summary.latency.p95),
+                    summary.switches.to_string(),
+                    summary.requests.to_string(),
+                ])?;
+                cells.insert(policy.to_string(), summary);
+            }
+            let ela = &cells["Elastico"];
+            let fast = &cells["Static-Fast"];
+            let acc = &cells["Static-Accurate"];
+            ela_minus_acc
+                .push((ela.slo_compliance - acc.slo_compliance) * 100.0);
+            ela_acc_gain
+                .push((ela.mean_accuracy - fast.mean_accuracy) * 100.0);
+            ela_compliance.push(ela.slo_compliance * 100.0);
+        }
+    }
+    csv.flush()?;
+
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let min = |v: &[f64]| v.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = |v: &[f64]| v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!("\nHeadline:");
+    println!(
+        "  Elastico SLO compliance: {:.0}-{:.0}%        (paper: 90-98%)",
+        min(&ela_compliance),
+        max(&ela_compliance)
+    );
+    println!(
+        "  compliance gain vs Static-Accurate: avg {:+.1} pts, max {:+.1} pts (paper: +71.6)",
+        avg(&ela_minus_acc),
+        max(&ela_minus_acc)
+    );
+    println!(
+        "  accuracy gain vs Static-Fast: {:+.1}..{:+.1} pts (paper: +3-5)",
+        min(&ela_acc_gain),
+        max(&ela_acc_gain)
+    );
+    println!("-> results/fig5_tradeoff.csv");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Fig. 6 — latency CDFs under the middle SLO target (≙ 1000 ms), spike
+//! pattern, all four policies.
+
+use anyhow::Result;
+
+use super::common::{
+    offline_phase, run_cell, Cell, ExperimentCtx, POLICIES, SLO_FACTORS,
+};
+use crate::metrics::latency_cdf;
+use crate::util::csv::CsvWriter;
+use crate::workload::Pattern;
+
+pub fn run(ctx: &ExperimentCtx) -> Result<()> {
+    let (_s, full) = offline_phase(0.75, 1e9, ctx.seed, ctx.live)?;
+    let slo = SLO_FACTORS[1] * full.ladder.last().unwrap().mean_ms;
+    let (space, plan) = offline_phase(0.75, slo, ctx.seed, false)?;
+    let qps = super::common::base_qps(&full);
+
+    let mut csv = CsvWriter::create(
+        &ctx.out_dir.join("fig6_cdf.csv"),
+        &["policy", "latency_ms", "fraction"],
+    )?;
+
+    println!("Fig.6: latency CDFs, spike pattern, SLO {slo:.0} ms");
+    for policy in POLICIES {
+        let cell = Cell {
+            pattern_name: "spike",
+            pattern: Pattern::paper_spike(),
+            slo_ms: slo,
+            policy_name: policy.into(),
+            base_qps: qps,
+        };
+        let policy_plan = if policy == "Elastico" { &plan } else { &full };
+        let (records, _sw, summary) = run_cell(ctx, &space, policy_plan, &cell)?;
+        let cdf = latency_cdf(&records, 200);
+        for (lat, frac) in &cdf {
+            csv.row(&[
+                policy.into(),
+                format!("{lat:.2}"),
+                format!("{frac:.4}"),
+            ])?;
+        }
+        // The paper's reading: fraction of requests within the SLO.
+        let within = records
+            .iter()
+            .filter(|r| r.latency_ms() <= slo)
+            .count() as f64
+            / records.len().max(1) as f64;
+        println!(
+            "  {:<16} P(T<=SLO) {:>5.1}%  p50 {:>8.1}ms  p95 {:>8.1}ms  max {:>9.1}ms",
+            policy,
+            within * 100.0,
+            summary.latency.p50,
+            summary.latency.p95,
+            summary.latency.max
+        );
+    }
+    csv.flush()?;
+    println!("-> results/fig6_cdf.csv");
+    Ok(())
+}

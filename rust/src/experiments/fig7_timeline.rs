@@ -1,0 +1,82 @@
+//! Fig. 7 — temporal adaptation behavior: per-request latency colored by
+//! active configuration + switch events over the spike run (Elastico,
+//! middle SLO target).
+
+use anyhow::Result;
+
+use super::common::{offline_phase, run_cell, Cell, ExperimentCtx, SLO_FACTORS};
+use crate::metrics::report::{write_records_csv, write_switches_csv};
+use crate::workload::Pattern;
+
+pub fn run(ctx: &ExperimentCtx) -> Result<()> {
+    let (_s, full) = offline_phase(0.75, 1e9, ctx.seed, ctx.live)?;
+    let slo = SLO_FACTORS[1] * full.ladder.last().unwrap().mean_ms;
+    let (space, plan) = offline_phase(0.75, slo, ctx.seed, false)?;
+
+    let cell = Cell {
+        pattern_name: "spike",
+        pattern: Pattern::paper_spike(),
+        slo_ms: slo,
+        policy_name: "Elastico".into(),
+        base_qps: super::common::base_qps(&full),
+    };
+    let (records, switches, summary) = run_cell(ctx, &space, &plan, &cell)?;
+
+    write_records_csv(&ctx.out_dir.join("fig7_requests.csv"), &records)?;
+    write_switches_csv(&ctx.out_dir.join("fig7_switches.csv"), &switches)?;
+
+    let dur_ms = ctx.duration_s * 1000.0;
+    let spike = (dur_ms / 3.0, 2.0 * dur_ms / 3.0);
+    println!(
+        "Fig.7: Elastico timeline, spike during [{:.0}s, {:.0}s], SLO {slo:.0} ms",
+        spike.0 / 1000.0,
+        spike.1 / 1000.0
+    );
+    println!("  switches ({} total):", switches.len());
+    for s in switches.iter().take(20) {
+        println!(
+            "    t={:>7.1}s  {} -> {}  ({})",
+            s.at_ms / 1000.0,
+            plan.ladder[s.from_idx].label,
+            plan.ladder[s.to_idx].label,
+            if s.to_idx < s.from_idx { "faster" } else { "more accurate" }
+        );
+    }
+    if switches.len() > 20 {
+        println!("    … ({} more)", switches.len() - 20);
+    }
+
+    // Phase-resolved usage: the paper's key observations.
+    let phase = |lo: f64, hi: f64| {
+        let rs: Vec<_> = records
+            .iter()
+            .filter(|r| r.arrival_ms >= lo && r.arrival_ms < hi)
+            .collect();
+        let n = rs.len().max(1) as f64;
+        let fast_frac = rs
+            .iter()
+            .filter(|r| r.config_idx == 0)
+            .count() as f64
+            / n;
+        let acc_frac = rs
+            .iter()
+            .filter(|r| r.config_idx == plan.ladder.len() - 1)
+            .count() as f64
+            / n;
+        (fast_frac, acc_frac)
+    };
+    let (f_pre, a_pre) = phase(0.0, spike.0);
+    let (f_in, a_in) = phase(spike.0, spike.1);
+    let (f_post, a_post) = phase(spike.1, dur_ms);
+    println!("  usage  pre-spike: fast {:.0}% / accurate {:.0}%", f_pre * 100.0, a_pre * 100.0);
+    println!("  usage  in-spike : fast {:.0}% / accurate {:.0}%", f_in * 100.0, a_in * 100.0);
+    println!("  usage post-spike: fast {:.0}% / accurate {:.0}%", f_post * 100.0, a_post * 100.0);
+    println!(
+        "  run: {} requests, compliance {:.1}%, mean accuracy {:.3}",
+        summary.requests,
+        summary.slo_compliance * 100.0,
+        summary.mean_accuracy
+    );
+    println!("-> results/fig7_requests.csv, results/fig7_switches.csv");
+    Ok(())
+}

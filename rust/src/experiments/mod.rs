@@ -1,0 +1,45 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§VI). One module per artifact; `compass experiment <id>`
+//! dispatches here. Console output mirrors the paper's rows/series; raw
+//! data lands as CSV under `results/` (DESIGN.md §4 experiment index).
+
+pub mod ablation;
+pub mod common;
+pub mod fig1_pareto;
+pub mod fig3_convergence;
+pub mod fig4_efficiency;
+pub mod fig5_tradeoff;
+pub mod fig6_cdf;
+pub mod fig7_timeline;
+pub mod table1_baselines;
+
+pub use common::ExperimentCtx;
+
+/// All experiment ids, in paper order.
+pub const ALL: [&str; 7] =
+    ["fig1", "fig3", "fig4", "table1", "fig5", "fig6", "fig7"];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &ExperimentCtx) -> anyhow::Result<()> {
+    match id {
+        "fig1" => fig1_pareto::run(ctx),
+        "fig3" => fig3_convergence::run(ctx),
+        "fig4" => fig4_efficiency::run(ctx),
+        "table1" => table1_baselines::run(ctx).map(|_| ()),
+        "fig5" => fig5_tradeoff::run(ctx),
+        "fig6" => fig6_cdf::run(ctx),
+        "fig7" => fig7_timeline::run(ctx),
+        "ablation" => ablation::run(ctx),
+        "all" => {
+            for id in ALL {
+                println!("\n================ {id} ================");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other}; try: {:?}, ablation, or all",
+            ALL
+        ),
+    }
+}

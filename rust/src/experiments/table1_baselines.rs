@@ -1,0 +1,51 @@
+//! Table I — baseline configurations on the generated Pareto front
+//! (τ = 0.75): the Fast / Medium / Accurate rungs with their accuracy and
+//! P95 latency, plus the full derived switching plan.
+
+use anyhow::Result;
+
+use super::common::{offline_phase, ExperimentCtx, SLO_FACTORS};
+use crate::planner::Plan;
+use crate::util::csv::CsvWriter;
+
+pub fn run(ctx: &ExperimentCtx) -> Result<Plan> {
+    // SLO used for threshold display: the middle target (≙ paper 1000ms).
+    let (_space, probe) = offline_phase(0.75, 1e9, ctx.seed, ctx.live)?;
+    let slowest = probe.ladder.last().unwrap().mean_ms;
+    let slo = SLO_FACTORS[1] * slowest;
+    let (_space, plan) = offline_phase(0.75, slo, ctx.seed, ctx.live)?;
+
+    println!(
+        "Table I: Pareto front at tau=0.75 ({}; SLO for thresholds: {:.0} ms)",
+        if ctx.live { "live profiling" } else { "modeled latencies" },
+        slo
+    );
+    print!("{}", plan.render());
+
+    let named = [
+        ("Fast", 0usize),
+        ("Medium", plan.ladder.len() / 2),
+        ("Accurate", plan.ladder.len() - 1),
+    ];
+    let mut csv = CsvWriter::create(
+        &ctx.out_dir.join("table1_baselines.csv"),
+        &["name", "config", "accuracy_f1", "p95_ms"],
+    )?;
+    println!("\nBaselines (paper Table I shape):");
+    for (name, idx) in named {
+        let p = &plan.ladder[idx];
+        println!(
+            "  {:<9} {:<38} F1 {:.3}  P95 ~{:.0} ms",
+            name, p.label, p.accuracy, p.p95_ms
+        );
+        csv.row(&[
+            name.into(),
+            p.label.clone(),
+            format!("{:.4}", p.accuracy),
+            format!("{:.1}", p.p95_ms),
+        ])?;
+    }
+    csv.flush()?;
+    println!("-> results/table1_baselines.csv");
+    Ok(plan)
+}

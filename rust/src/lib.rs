@@ -1,0 +1,46 @@
+//! # Compass — optimizing compound AI workflows for dynamic adaptation
+//!
+//! A from-scratch reproduction of *Compass: Optimizing Compound AI Workflows
+//! for Dynamic Adaptation* (Gravara, Herrera, Nastic — TU Wien, 2026) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the paper's system contribution: the
+//!   [`search`] module implements COMPASS-V feasible-configuration search,
+//!   [`planner`] profiles configurations and derives AQM switching policies,
+//!   and [`serving`] hosts the Elastico runtime controller inside a real
+//!   inference-serving loop (central queue, load monitor, executor threads).
+//! * **Layer 2 / Layer 1 (build-time Python)** — JAX models with Pallas
+//!   kernels, AOT-lowered to HLO text and executed through [`runtime`]
+//!   (PJRT CPU via the `xla` crate). Python is never on the request path.
+//!
+//! The crate is fully self-contained beyond `xla` + `anyhow`: JSON, CSV,
+//! RNG, statistics and the benchmark harness are all in [`util`]
+//! (offline-build constraint, DESIGN.md §6).
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use compass::configspace::rag_space;
+//! use compass::oracle::RagOracle;
+//! use compass::search::{CompassV, CompassVParams};
+//!
+//! let space = rag_space();
+//! let mut oracle = RagOracle::new_rag(7);
+//! let result = CompassV::new(CompassVParams::default())
+//!     .run(&space, 0.75, &mut oracle);
+//! println!("feasible configs: {}", result.feasible.len());
+//! ```
+
+pub mod configspace;
+pub mod eval;
+pub mod experiments;
+pub mod metrics;
+pub mod oracle;
+pub mod planner;
+pub mod runtime;
+pub mod search;
+pub mod serving;
+pub mod sim;
+pub mod util;
+pub mod workflows;
+pub mod workload;

@@ -1,0 +1,313 @@
+//! `compass` — CLI for the Compass reproduction.
+//!
+//! Subcommands (hand-rolled parsing; no clap offline — DESIGN.md §6):
+//!
+//! * `search   [--workflow rag|detection] [--tau T]` — run COMPASS-V vs
+//!   grid ground truth, print recall/savings.
+//! * `plan     [--tau T] [--slo MS] [--live] [--out plan.json]` — offline
+//!   phase: search + profile + Pareto + AQM thresholds.
+//! * `serve    [--slo MS] [--duration S] [--pattern spike|bursty|steady]
+//!   [--policy NAME]` — one live serving run, report summary.
+//! * `experiment <fig1|fig3|fig4|table1|fig5|fig6|fig7|all> [--live]
+//!   [--duration S]` — regenerate paper artifacts (CSV under results/).
+//! * `profile  [--live]` — per-component latency table.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use compass::configspace::{detection_space, rag_space};
+use compass::experiments::{self, ExperimentCtx};
+use compass::oracle::{DetectionOracle, RagOracle};
+use compass::planner::profile_config;
+use compass::runtime::artifacts_dir;
+use compass::search::{grid_search, BudgetSchedule, CompassV, CompassVParams};
+use compass::serving::executor::WorkflowEngine;
+use compass::serving::{serve, ServeOptions};
+use compass::util::results_dir;
+use compass::workflows::rag::RagWorkflow;
+use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` pairs and flags after the subcommand.
+fn parse_opts(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut opts = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                opts.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                opts.insert(key.to_string(), "true".into());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (pos, opts)
+}
+
+fn get_f64(opts: &HashMap<String, String>, key: &str, default: f64) -> Result<f64> {
+    match opts.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v}")),
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let (pos, opts) = parse_opts(&args[1..]);
+    let seed = get_f64(&opts, "seed", 7.0)? as u64;
+
+    match cmd.as_str() {
+        "search" => cmd_search(&opts, seed),
+        "plan" => cmd_plan(&opts, seed),
+        "serve" => cmd_serve(&opts, seed),
+        "experiment" => {
+            let id = pos.first().map(String::as_str).unwrap_or("all");
+            let ctx = ExperimentCtx {
+                live: opts.contains_key("live"),
+                duration_s: get_f64(&opts, "duration", 180.0)?,
+                seed,
+                out_dir: results_dir(),
+            };
+            experiments::run(id, &ctx)
+        }
+        "profile" => cmd_profile(&opts, seed),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other}; run `compass help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "compass — Compound AI workflow optimization & dynamic adaptation\n\
+         \n\
+         USAGE: compass <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+         \x20 search      COMPASS-V feasible-set search vs exhaustive ground truth\n\
+         \x20             [--workflow rag|detection] [--tau T] [--seed N]\n\
+         \x20 plan        offline phase: search + profile + Pareto + AQM plan\n\
+         \x20             [--tau T] [--slo MS] [--live] [--out FILE]\n\
+         \x20 serve       one live serving run over the AOT artifacts\n\
+         \x20             [--slo MS] [--duration S] [--pattern spike|bursty|steady]\n\
+         \x20             [--policy Elastico|Static-Fast|Static-Medium|Static-Accurate]\n\
+         \x20 experiment  regenerate paper figures/tables -> results/*.csv\n\
+         \x20             <fig1|fig3|fig4|table1|fig5|fig6|fig7|all> [--live] [--duration S]\n\
+         \x20 profile     per-component latency table over the artifacts [--live]\n"
+    );
+}
+
+fn cmd_search(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
+    let workflow = opts.get("workflow").map(String::as_str).unwrap_or("rag");
+    let (space, schedule, tau_default) = match workflow {
+        "rag" => (rag_space(), BudgetSchedule::rag(), 0.75),
+        "detection" => (detection_space(), BudgetSchedule::detection(), 0.70),
+        other => bail!("unknown workflow {other}"),
+    };
+    let tau = get_f64(opts, "tau", tau_default)?;
+    let n = space.enumerate_valid().len();
+    let b_max = schedule.b_max();
+
+    println!("COMPASS-V on {workflow}: {} valid configs, tau={tau}", n);
+    let result = match workflow {
+        "rag" => {
+            let mut oracle = RagOracle::new_rag(seed);
+            CompassV::new(CompassVParams {
+                seed,
+                schedule: schedule.clone(),
+                ..Default::default()
+            })
+            .run(&space, tau, &mut oracle)
+        }
+        _ => {
+            let mut oracle = DetectionOracle::new_detection(seed);
+            CompassV::new(CompassVParams {
+                seed,
+                schedule: schedule.clone(),
+                ..Default::default()
+            })
+            .run(&space, tau, &mut oracle)
+        }
+    };
+    let savings = result.savings_vs_exhaustive(n, b_max);
+
+    // Ground truth for recall.
+    let gt = match workflow {
+        "rag" => {
+            let mut o = RagOracle::new_rag(seed);
+            grid_search(&space, b_max, &mut o).feasible(tau)
+        }
+        _ => {
+            let mut o = DetectionOracle::new_detection(seed);
+            grid_search(&space, b_max, &mut o).feasible(tau)
+        }
+    };
+    let gt_ids: std::collections::HashSet<usize> =
+        gt.iter().map(|(c, _)| space.flat_id(c)).collect();
+    let hit = result
+        .feasible
+        .iter()
+        .filter(|(c, _)| gt_ids.contains(&space.flat_id(c)))
+        .count();
+    println!("  feasible found: {} (ground truth {})", result.feasible.len(), gt.len());
+    println!(
+        "  samples used:   {} (exhaustive {})",
+        result.samples_used,
+        n as u64 * b_max as u64
+    );
+    println!("  savings:        {:.1}%", savings * 100.0);
+    println!(
+        "  recall:         {:.1}%",
+        if gt.is_empty() { 100.0 } else { 100.0 * hit as f64 / gt.len() as f64 }
+    );
+    Ok(())
+}
+
+fn cmd_plan(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
+    let tau = get_f64(opts, "tau", 0.75)?;
+    let live = opts.contains_key("live");
+    // Default SLO: 2.2x the slowest rung (≙ the paper's 1000 ms target).
+    let slo = match opts.get("slo") {
+        Some(v) => v.parse::<f64>()?,
+        None => {
+            let (_s, probe) =
+                compass::experiments::common::offline_phase(tau, 1e9, seed, live)?;
+            2.2 * probe.ladder.last().unwrap().mean_ms
+        }
+    };
+    let (_space, plan) =
+        compass::experiments::common::offline_phase(tau, slo, seed, live)?;
+    print!("{}", plan.render());
+    if let Some(path) = opts.get("out") {
+        std::fs::write(path, plan.to_json().to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
+    let tau = get_f64(opts, "tau", 0.75)?;
+    let duration = get_f64(opts, "duration", 60.0)?;
+    let policy_name = opts
+        .get("policy")
+        .cloned()
+        .unwrap_or_else(|| "Elastico".into());
+    let pattern = match opts.get("pattern").map(String::as_str).unwrap_or("spike") {
+        "spike" => Pattern::paper_spike(),
+        "bursty" => Pattern::paper_bursty(),
+        "steady" => Pattern::Steady,
+        other => bail!("unknown pattern {other}"),
+    };
+
+    let (_s, probe) =
+        compass::experiments::common::offline_phase(tau, 1e9, seed, false)?;
+    let slo = match opts.get("slo") {
+        Some(v) => v.parse::<f64>()?,
+        None => 2.2 * probe.ladder.last().unwrap().mean_ms,
+    };
+    let (space, plan) =
+        compass::experiments::common::offline_phase(tau, slo, seed, false)?;
+    println!("Serving plan (SLO {slo:.0} ms):");
+    print!("{}", plan.render());
+
+    let spec = WorkloadSpec {
+        base_qps: compass::experiments::common::base_qps(&probe),
+        duration_s: duration,
+        pattern,
+        seed,
+    };
+    let arrivals = generate_arrivals(&spec);
+    println!(
+        "Live serving: {} arrivals over {duration}s (base {:.2} qps), policy {policy_name}",
+        arrivals.len(),
+        spec.base_qps
+    );
+
+    let policy = compass::experiments::common::make_policy(&plan, &policy_name);
+    let space2 = space.clone();
+    let plan2 = plan.clone();
+    let out = serve(
+        move || {
+            let configs: Vec<_> =
+                plan2.ladder.iter().map(|p| p.config.clone()).collect();
+            let wf =
+                RagWorkflow::load_subset(&artifacts_dir(), &space2, &configs, seed)?;
+            Ok(WorkflowEngine::new(wf, space2.clone(), plan2.clone()))
+        },
+        policy,
+        &arrivals,
+        &ServeOptions::default(),
+    )?;
+    let summary = compass::metrics::RunSummary::compute(
+        &out.records,
+        &out.switches,
+        slo,
+        plan.ladder.len(),
+    );
+    println!(
+        "{}",
+        compass::metrics::report::summary_row(&policy_name, &summary)
+    );
+    if let Some(rate) = summary.success_rate {
+        println!("  measured success rate: {rate:.3}");
+    }
+    println!("  rejected: {}, final rate {:.2} qps", out.rejected, out.final_rate_qps);
+    Ok(())
+}
+
+fn cmd_profile(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
+    let live = opts.contains_key("live");
+    let space = rag_space();
+    if !live {
+        println!("Modeled per-component costs (pass --live to measure):");
+        for (i, name) in compass::workflows::rag::GENERATOR_NAMES.iter().enumerate() {
+            println!("  {name:<9} {:>8.1} ms", compass::experiments::common::GEN_MS[i]);
+        }
+        for (i, name) in compass::workflows::rag::RERANKER_NAMES.iter().enumerate() {
+            println!(
+                "  {name:<9} {:>8.1} ms / batch of 5",
+                compass::experiments::common::RR_BATCH_MS[i]
+            );
+        }
+        return Ok(());
+    }
+    let mut wf = RagWorkflow::load(&artifacts_dir(), seed)?;
+    println!("Live component profile:");
+    for g in 0..6 {
+        let p = profile_config(&mut wf, &space, &vec![g, 0, 0, 0], 2, 6);
+        println!(
+            "  {:<9} mean {:>8.1} ms  p95 {:>8.1} ms",
+            compass::workflows::rag::GENERATOR_NAMES[g], p.mean_ms, p.p95_ms
+        );
+    }
+    for rr in 0..3 {
+        let p = profile_config(&mut wf, &space, &vec![0, 4, 0, rr], 2, 6);
+        println!(
+            "  {:<9} mean {:>8.1} ms  p95 {:>8.1} ms (k=50 path)",
+            compass::workflows::rag::RERANKER_NAMES[rr], p.mean_ms, p.p95_ms
+        );
+    }
+    Ok(())
+}

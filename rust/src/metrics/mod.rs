@@ -1,0 +1,162 @@
+//! Serving metrics: per-request records, SLO compliance, reports.
+//!
+//! Both the live serving system ([`crate::serving`]) and the discrete-
+//! event simulator ([`crate::sim`]) produce the same [`RequestRecord`]
+//! stream, so every figure harness consumes one code path.
+
+pub mod report;
+
+use crate::util::stats::{cdf_points, Summary};
+
+/// One completed request, in milliseconds on the run's clock.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestRecord {
+    pub id: u64,
+    /// Arrival (enqueue) time.
+    pub arrival_ms: f64,
+    /// Service start time.
+    pub start_ms: f64,
+    /// Completion time.
+    pub finish_ms: f64,
+    /// Ladder index of the configuration that served it.
+    pub config_idx: usize,
+    /// Expected accuracy of that configuration.
+    pub accuracy: f64,
+    /// Live runs: whether the sampled answer was correct.
+    pub success: Option<bool>,
+}
+
+impl RequestRecord {
+    /// End-to-end response time (queue wait + service).
+    pub fn latency_ms(&self) -> f64 {
+        self.finish_ms - self.arrival_ms
+    }
+
+    /// Time spent queued.
+    pub fn wait_ms(&self) -> f64 {
+        self.start_ms - self.arrival_ms
+    }
+}
+
+/// A configuration switch event (for the Fig. 7 timeline).
+#[derive(Clone, Copy, Debug)]
+pub struct SwitchEvent {
+    pub at_ms: f64,
+    pub from_idx: usize,
+    pub to_idx: usize,
+}
+
+/// Aggregated metrics of one serving run.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub requests: usize,
+    pub latency: Summary,
+    /// Fraction of requests with latency <= SLO.
+    pub slo_compliance: f64,
+    /// Mean expected accuracy of the configurations used.
+    pub mean_accuracy: f64,
+    /// Live-run measured success rate (None for simulations).
+    pub success_rate: Option<f64>,
+    /// Number of configuration switches.
+    pub switches: usize,
+    /// Fraction of requests served by each ladder index.
+    pub config_usage: Vec<f64>,
+}
+
+impl RunSummary {
+    pub fn compute(
+        records: &[RequestRecord],
+        switches: &[SwitchEvent],
+        slo_ms: f64,
+        n_configs: usize,
+    ) -> RunSummary {
+        let lat: Vec<f64> = records.iter().map(|r| r.latency_ms()).collect();
+        let compliant = records
+            .iter()
+            .filter(|r| r.latency_ms() <= slo_ms)
+            .count();
+        let mut usage = vec![0.0; n_configs];
+        for r in records {
+            if r.config_idx < n_configs {
+                usage[r.config_idx] += 1.0;
+            }
+        }
+        let n = records.len().max(1) as f64;
+        for u in usage.iter_mut() {
+            *u /= n;
+        }
+        let successes: Vec<bool> =
+            records.iter().filter_map(|r| r.success).collect();
+        RunSummary {
+            requests: records.len(),
+            latency: Summary::of(&lat),
+            slo_compliance: compliant as f64 / n,
+            mean_accuracy: records.iter().map(|r| r.accuracy).sum::<f64>() / n,
+            success_rate: if successes.is_empty() {
+                None
+            } else {
+                Some(
+                    successes.iter().filter(|s| **s).count() as f64
+                        / successes.len() as f64,
+                )
+            },
+            switches: switches.len(),
+            config_usage: usage,
+        }
+    }
+}
+
+/// Latency CDF of a run (paper Fig. 6).
+pub fn latency_cdf(records: &[RequestRecord], points: usize) -> Vec<(f64, f64)> {
+    let lat: Vec<f64> = records.iter().map(|r| r.latency_ms()).collect();
+    cdf_points(&lat, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arr: f64, start: f64, fin: f64, idx: usize) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            arrival_ms: arr,
+            start_ms: start,
+            finish_ms: fin,
+            config_idx: idx,
+            accuracy: 0.8,
+            success: None,
+        }
+    }
+
+    #[test]
+    fn summary_counts_compliance() {
+        let records = vec![
+            rec(0.0, 0.0, 50.0, 0),
+            rec(0.0, 10.0, 200.0, 1),
+            rec(0.0, 20.0, 90.0, 0),
+        ];
+        let s = RunSummary::compute(&records, &[], 100.0, 2);
+        assert_eq!(s.requests, 3);
+        assert!((s.slo_compliance - 2.0 / 3.0).abs() < 1e-12);
+        assert!((s.config_usage[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.switches, 0);
+        assert_eq!(s.success_rate, None);
+    }
+
+    #[test]
+    fn success_rate_from_live_samples() {
+        let mut a = rec(0.0, 0.0, 10.0, 0);
+        a.success = Some(true);
+        let mut b = rec(0.0, 0.0, 10.0, 0);
+        b.success = Some(false);
+        let s = RunSummary::compute(&[a, b], &[], 100.0, 1);
+        assert_eq!(s.success_rate, Some(0.5));
+    }
+
+    #[test]
+    fn record_latency_decomposition() {
+        let r = rec(10.0, 30.0, 70.0, 0);
+        assert_eq!(r.latency_ms(), 60.0);
+        assert_eq!(r.wait_ms(), 20.0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Console + CSV reporting for serving runs and experiments.
+
+use std::path::Path;
+
+use super::{RequestRecord, RunSummary, SwitchEvent};
+use crate::util::csv::CsvWriter;
+
+/// Render a run summary as a console table row.
+pub fn summary_row(label: &str, s: &RunSummary) -> String {
+    format!(
+        "{:<18} req {:>6}  SLO {:>6.1}%  acc {:>5.3}  p50 {:>8.1}ms  p95 {:>8.1}ms  switches {:>3}",
+        label,
+        s.requests,
+        s.slo_compliance * 100.0,
+        s.mean_accuracy,
+        s.latency.p50,
+        s.latency.p95,
+        s.switches
+    )
+}
+
+/// Dump raw request records (one row per request).
+pub fn write_records_csv(path: &Path, records: &[RequestRecord]) -> std::io::Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &[
+            "id", "arrival_ms", "start_ms", "finish_ms", "latency_ms",
+            "config_idx", "accuracy", "success",
+        ],
+    )?;
+    for r in records {
+        w.row(&[
+            r.id.to_string(),
+            format!("{:.3}", r.arrival_ms),
+            format!("{:.3}", r.start_ms),
+            format!("{:.3}", r.finish_ms),
+            format!("{:.3}", r.latency_ms()),
+            r.config_idx.to_string(),
+            format!("{:.4}", r.accuracy),
+            r.success.map(|b| b.to_string()).unwrap_or_default(),
+        ])?;
+    }
+    w.flush()
+}
+
+/// Dump switch events (Fig. 7 timeline overlay).
+pub fn write_switches_csv(path: &Path, switches: &[SwitchEvent]) -> std::io::Result<()> {
+    let mut w = CsvWriter::create(path, &["at_ms", "from_idx", "to_idx"])?;
+    for s in switches {
+        w.row(&[
+            format!("{:.3}", s.at_ms),
+            s.from_idx.to_string(),
+            s.to_idx.to_string(),
+        ])?;
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_outputs_written() {
+        let dir = std::env::temp_dir().join("compass_report_test");
+        let rec = RequestRecord {
+            id: 1,
+            arrival_ms: 0.0,
+            start_ms: 1.0,
+            finish_ms: 5.0,
+            config_idx: 2,
+            accuracy: 0.9,
+            success: Some(true),
+        };
+        write_records_csv(&dir.join("r.csv"), &[rec]).unwrap();
+        let text = std::fs::read_to_string(dir.join("r.csv")).unwrap();
+        assert!(text.contains("1,0.000,1.000,5.000,5.000,2,0.9000,true"));
+        write_switches_csv(
+            &dir.join("s.csv"),
+            &[SwitchEvent { at_ms: 3.0, from_idx: 2, to_idx: 1 }],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(dir.join("s.csv")).unwrap();
+        assert!(text.contains("3.000,2,1"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

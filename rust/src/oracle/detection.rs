@@ -1,0 +1,132 @@
+//! Calibrated object-detection cascade landscape (stands in for COCO
+//! mAP@0.5 over the YOLOv8 cascade of paper §VI-B).
+//!
+//! Structure:
+//! * per-detector base quality (det-n < det-s < det-m);
+//! * the verifier adds its gain on the fraction of inputs forwarded to
+//!   it, which rises with the confidence threshold (more predictions fall
+//!   below a higher bar and get re-checked);
+//! * NMS threshold has a sweet spot at 0.5 with a quadratic penalty on
+//!   both sides (too low merges true positives, too high keeps
+//!   duplicates) — this makes the landscape non-monotone on one axis,
+//!   exercising COMPASS-V's gradient navigation rather than pure
+//!   monotone expansion.
+
+use super::{Landscape, LandscapeEvaluator};
+use crate::configspace::{Config, ConfigSpace};
+use crate::workflows::detection::{DETECTOR_NAMES, VERIFIER_NAMES};
+
+/// Base mAP of each detector (det-n, det-s, det-m).
+pub const DETECTOR_BASE: [f64; 3] = [0.565, 0.625, 0.680];
+/// Additive gain of each verifier at full coverage (none, m, l, x).
+pub const VERIFIER_GAIN: [f64; 4] = [0.0, 0.075, 0.105, 0.130];
+/// NMS penalty curvature.
+pub const NMS_PENALTY: f64 = 0.08;
+
+/// Fraction of predictions forwarded to the verifier at threshold `t`.
+pub fn forwarded_fraction(conf_thr: f64) -> f64 {
+    (0.25 + 1.5 * conf_thr).min(1.0)
+}
+
+/// The detection-cascade landscape.
+#[derive(Clone, Debug, Default)]
+pub struct DetectionLandscape;
+
+impl Landscape for DetectionLandscape {
+    fn true_accuracy(&self, space: &ConfigSpace, cfg: &Config) -> f64 {
+        let det = space.named_value(cfg, "detector").as_str().unwrap().to_string();
+        let ver = space.named_value(cfg, "verifier").as_str().unwrap().to_string();
+        let conf = space.named_value(cfg, "conf_thr").as_f64().unwrap();
+        let nms = space.named_value(cfg, "nms_thr").as_f64().unwrap();
+
+        let di = DETECTOR_NAMES.iter().position(|n| *n == det).expect("detector");
+        let vi = VERIFIER_NAMES.iter().position(|n| *n == ver).expect("verifier");
+
+        let coverage = forwarded_fraction(conf);
+        let nms_pen = NMS_PENALTY * ((nms - 0.5) / 0.2).powi(2);
+        (DETECTOR_BASE[di] + VERIFIER_GAIN[vi] * coverage - nms_pen).clamp(0.0, 1.0)
+    }
+}
+
+/// The detection oracle: landscape + deterministic Bernoulli observation.
+pub type DetectionOracle = LandscapeEvaluator<DetectionLandscape>;
+
+impl DetectionOracle {
+    pub fn new_detection(seed: u64) -> DetectionOracle {
+        LandscapeEvaluator::new(DetectionLandscape, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configspace::detection_space;
+
+    /// Paper §VI-B: eight detection thresholds (0.55 … 0.80).
+    pub const TAUS: [f64; 8] = [0.55, 0.59, 0.62, 0.66, 0.70, 0.73, 0.76, 0.80];
+
+    #[test]
+    fn feasible_fractions_span_paper_range() {
+        let space = detection_space();
+        let l = DetectionLandscape;
+        let all = space.enumerate_valid();
+        let frac = |tau: f64| {
+            all.iter()
+                .filter(|c| l.true_accuracy(&space, c) >= tau)
+                .count() as f64
+                / all.len() as f64
+        };
+        let fracs: Vec<f64> = TAUS.iter().map(|&t| frac(t)).collect();
+        for w in fracs.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(fracs[0] > 0.85, "tau=0.55 fraction {}", fracs[0]);
+        assert!(
+            fracs[7] > 0.0 && fracs[7] < 0.05,
+            "tau=0.80 fraction {}",
+            fracs[7]
+        );
+    }
+
+    #[test]
+    fn nms_sweet_spot_at_half() {
+        let space = detection_space();
+        let l = DetectionLandscape;
+        let nms_axis = space.param_index("nms_thr").unwrap();
+        // For a fixed otherwise-best config, nms=0.5 must maximize.
+        let mut cfg = space.enumerate_valid()[0].clone();
+        cfg[space.param_index("detector").unwrap()] = 2;
+        cfg[space.param_index("verifier").unwrap()] = 3;
+        cfg[space.param_index("conf_thr").unwrap()] = 6;
+        let accs: Vec<f64> = (0..5)
+            .map(|i| {
+                let mut c = cfg.clone();
+                c[nms_axis] = i;
+                l.true_accuracy(&space, &c)
+            })
+            .collect();
+        let best = accs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best, 2); // index 2 = 0.5
+    }
+
+    #[test]
+    fn verifier_gain_requires_coverage() {
+        let space = detection_space();
+        let l = DetectionLandscape;
+        // With verifier=x, higher confidence threshold -> more coverage ->
+        // higher mAP.
+        let conf_axis = space.param_index("conf_thr").unwrap();
+        let mut cfg = vec![0; space.dims()];
+        cfg[space.param_index("verifier").unwrap()] = 3;
+        cfg[space.param_index("nms_thr").unwrap()] = 2;
+        let lo = l.true_accuracy(&space, &cfg);
+        cfg[conf_axis] = 6;
+        let hi = l.true_accuracy(&space, &cfg);
+        assert!(hi > lo);
+    }
+}

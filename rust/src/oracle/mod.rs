@@ -1,0 +1,133 @@
+//! Surrogate accuracy oracles — the ground-truth landscapes for search.
+//!
+//! The paper evaluates COMPASS-V against exhaustive grid search over real
+//! SQuAD-F1 / COCO-mAP evaluations. Those datasets and models are not
+//! available offline, so the search experiments run against *calibrated
+//! synthetic landscapes* with the same structure (DESIGN.md §2):
+//!
+//! * monotone in each semantic direction (bigger generator / reranker ↑,
+//!   larger k ↑ with diminishing returns, NMS sweet-spot at 0.5, …);
+//! * feasible fractions spanning ≈99% → ≈2% across the paper's eight
+//!   thresholds per workflow;
+//! * observed through per-sample Bernoulli draws — exactly the view
+//!   COMPASS-V has of a real dataset evaluation (success/failure per
+//!   dataset item), which is all that Wilson-CI budgeting consumes.
+//!
+//! Both oracles are deterministic: draw `i` for configuration `c` is a
+//! pure function of `(oracle seed, flat config id, i)`, so COMPASS-V and
+//! grid search observe identical sample streams.
+
+pub mod detection;
+pub mod rag;
+
+pub use detection::DetectionOracle;
+pub use rag::RagOracle;
+
+use crate::configspace::{Config, ConfigSpace};
+use crate::search::Evaluator;
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Common machinery: a true-accuracy landscape observed through
+/// deterministic Bernoulli sampling.
+pub trait Landscape {
+    /// The latent true accuracy of a configuration.
+    fn true_accuracy(&self, space: &ConfigSpace, cfg: &Config) -> f64;
+}
+
+/// Wraps a [`Landscape`] into a deterministic [`Evaluator`].
+pub struct LandscapeEvaluator<L: Landscape> {
+    pub landscape: L,
+    seed: u64,
+    counters: HashMap<usize, u64>,
+}
+
+impl<L: Landscape> LandscapeEvaluator<L> {
+    pub fn new(landscape: L, seed: u64) -> Self {
+        LandscapeEvaluator { landscape, seed, counters: HashMap::new() }
+    }
+
+    pub fn true_accuracy(&self, space: &ConfigSpace, cfg: &Config) -> f64 {
+        self.landscape.true_accuracy(space, cfg)
+    }
+
+    /// Reset draw counters (fresh evaluation pass with identical draws).
+    pub fn reset(&mut self) {
+        self.counters.clear();
+    }
+}
+
+impl<L: Landscape> Evaluator for LandscapeEvaluator<L> {
+    fn sample(&mut self, space: &ConfigSpace, cfg: &Config, n: u32) -> u32 {
+        let id = space.flat_id(cfg);
+        let p = self.landscape.true_accuracy(space, cfg);
+        let counter = self.counters.entry(id).or_insert(0);
+        let mut successes = 0;
+        for i in 0..n as u64 {
+            // Counter-based stream: one cheap RNG per draw keeps draw k of
+            // config c identical regardless of batching.
+            let draw = *counter + i;
+            let mut r = Rng::new(
+                self.seed
+                    ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                    ^ draw.wrapping_mul(0xD1B54A32D192ED03),
+            );
+            if r.bernoulli(p) {
+                successes += 1;
+            }
+        }
+        *counter += n as u64;
+        successes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configspace::{ConfigSpace, ParamDef};
+
+    struct Flat(f64);
+
+    impl Landscape for Flat {
+        fn true_accuracy(&self, _s: &ConfigSpace, _c: &Config) -> f64 {
+            self.0
+        }
+    }
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::new("t", vec![ParamDef::discrete("x", vec![0, 1])], vec![])
+    }
+
+    #[test]
+    fn batching_invariant_draws() {
+        let s = space();
+        let cfg = vec![0];
+        let mut a = LandscapeEvaluator::new(Flat(0.5), 9);
+        let mut b = LandscapeEvaluator::new(Flat(0.5), 9);
+        let batched = a.sample(&s, &cfg, 100);
+        let split = b.sample(&s, &cfg, 30) + b.sample(&s, &cfg, 70);
+        assert_eq!(batched, split);
+    }
+
+    #[test]
+    fn matches_latent_probability() {
+        let s = space();
+        let mut e = LandscapeEvaluator::new(Flat(0.73), 3);
+        let succ = e.sample(&s, &vec![1], 20_000);
+        let rate = succ as f64 / 20_000.0;
+        assert!((rate - 0.73).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn different_configs_decorrelated() {
+        let s = ConfigSpace::new(
+            "t2",
+            vec![ParamDef::discrete("x", vec![0, 1, 2, 3])],
+            vec![],
+        );
+        let mut e = LandscapeEvaluator::new(Flat(0.5), 3);
+        let a = e.sample(&s, &vec![0], 1000);
+        let b = e.sample(&s, &vec![1], 1000);
+        assert_ne!(a, b); // overwhelmingly likely under decorrelation
+    }
+}

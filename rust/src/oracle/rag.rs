@@ -1,0 +1,156 @@
+//! Calibrated RAG accuracy landscape (stands in for SQuAD 2.0 F1).
+//!
+//! Structure (all monotonicities match the paper's RAG pipeline):
+//!
+//! * retrieval recall rises with retriever-k with diminishing returns:
+//!   `r(k) = 1 - 0.55 * exp(-k / 7)`;
+//! * the reranker keeps the relevant document with probability rising in
+//!   rerank-k and reranker quality: `s = 1 - miss_rr * exp(-rk / 4)`;
+//! * the generator converts a grounded context into a correct answer with
+//!   per-size quality `q_gen`, and salvages a fraction `BACKGROUND` of
+//!   ungrounded queries (parametric knowledge);
+//! * `F1(c) = q_gen * (hit + BACKGROUND * (1 - hit))`, `hit = r * s`.
+//!
+//! Calibration targets the paper's eight RAG thresholds (0.30 … 0.85)
+//! spanning feasible fractions ≈99% → ≈2% (checked by tests below).
+
+use super::{Landscape, LandscapeEvaluator};
+use crate::configspace::{Config, ConfigSpace};
+use crate::workflows::rag::{GENERATOR_NAMES, RERANKER_NAMES};
+
+/// Per-generator answer quality (gen-64 … gen-288 ladder).
+pub const GEN_QUALITY: [f64; 6] = [0.70, 0.76, 0.82, 0.86, 0.89, 0.91];
+/// Per-reranker miss mass (rr-48 … rr-160 ladder).
+pub const RERANK_MISS: [f64; 3] = [0.35, 0.22, 0.12];
+/// Probability an ungrounded query is still answered correctly.
+pub const BACKGROUND: f64 = 0.25;
+
+/// The RAG landscape (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct RagLandscape;
+
+/// Retrieval recall@k of the planted relevant document.
+pub fn retrieval_recall(k: f64) -> f64 {
+    1.0 - 0.55 * (-k / 7.0).exp()
+}
+
+/// Probability the reranker keeps the relevant doc in its top rerank-k.
+pub fn rerank_keep(miss: f64, rerank_k: f64) -> f64 {
+    1.0 - miss * (-rerank_k / 4.0).exp()
+}
+
+impl Landscape for RagLandscape {
+    fn true_accuracy(&self, space: &ConfigSpace, cfg: &Config) -> f64 {
+        let gen = space.named_value(cfg, "generator").as_str().unwrap().to_string();
+        let rr = space.named_value(cfg, "reranker").as_str().unwrap().to_string();
+        let k = space.named_value(cfg, "retriever_k").as_f64().unwrap();
+        let rk = space.named_value(cfg, "rerank_k").as_f64().unwrap();
+
+        let gi = GENERATOR_NAMES.iter().position(|n| *n == gen).expect("generator");
+        let ri = RERANKER_NAMES.iter().position(|n| *n == rr).expect("reranker");
+
+        let hit = retrieval_recall(k) * rerank_keep(RERANK_MISS[ri], rk);
+        (GEN_QUALITY[gi] * (hit + BACKGROUND * (1.0 - hit))).clamp(0.0, 1.0)
+    }
+}
+
+/// The RAG oracle: landscape + deterministic Bernoulli observation.
+pub type RagOracle = LandscapeEvaluator<RagLandscape>;
+
+impl RagOracle {
+    pub fn new_rag(seed: u64) -> RagOracle {
+        LandscapeEvaluator::new(RagLandscape, seed)
+    }
+}
+
+// Ergonomic alias used across examples/experiments.
+impl RagLandscape {
+    pub fn oracle(seed: u64) -> RagOracle {
+        RagOracle::new_rag(seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configspace::rag_space;
+
+    /// Paper §VI-B: eight RAG thresholds.
+    pub const TAUS: [f64; 8] = [0.30, 0.40, 0.50, 0.60, 0.70, 0.75, 0.80, 0.85];
+
+    #[test]
+    fn monotone_in_each_dimension() {
+        let space = rag_space();
+        let l = RagLandscape;
+        for cfg in space.enumerate_valid() {
+            let base = l.true_accuracy(&space, &cfg);
+            for n in space.neighbors_step(&cfg) {
+                let other = l.true_accuracy(&space, &n);
+                // Find the axis that moved; all axes are quality-monotone
+                // (larger index = better) in this space.
+                let axis = (0..cfg.len()).find(|&i| n[i] != cfg[i]).unwrap();
+                if n[axis] > cfg[axis] {
+                    assert!(
+                        other >= base - 1e-12,
+                        "axis {axis} up should not hurt: {base} -> {other}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn feasible_fractions_span_paper_range() {
+        let space = rag_space();
+        let l = RagLandscape;
+        let all = space.enumerate_valid();
+        let frac = |tau: f64| {
+            all.iter()
+                .filter(|c| l.true_accuracy(&space, c) >= tau)
+                .count() as f64
+                / all.len() as f64
+        };
+        let fracs: Vec<f64> = TAUS.iter().map(|&t| frac(t)).collect();
+        // Decreasing in tau, spanning wide -> narrow.
+        for w in fracs.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(fracs[0] > 0.9, "tau=0.30 fraction {}", fracs[0]);
+        assert!(fracs[7] > 0.0 && fracs[7] < 0.08, "tau=0.85 fraction {}", fracs[7]);
+        // A moderate threshold sits in the paper's "hard" band.
+        assert!(fracs[4] > 0.2 && fracs[4] < 0.8, "tau=0.70 fraction {}", fracs[4]);
+    }
+
+    #[test]
+    fn accuracy_range_sane() {
+        let space = rag_space();
+        let l = RagLandscape;
+        for cfg in space.enumerate_valid() {
+            let a = l.true_accuracy(&space, &cfg);
+            assert!((0.2..=0.95).contains(&a), "{a}");
+        }
+    }
+
+    #[test]
+    fn best_config_is_biggest_everything() {
+        let space = rag_space();
+        let l = RagLandscape;
+        let best = space
+            .enumerate_valid()
+            .into_iter()
+            .max_by(|a, b| {
+                l.true_accuracy(&space, a)
+                    .partial_cmp(&l.true_accuracy(&space, b))
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(
+            space.named_value(&best, "generator").as_str(),
+            Some("gen-288")
+        );
+        assert_eq!(
+            space.named_value(&best, "reranker").as_str(),
+            Some("rr-160")
+        );
+    }
+}

@@ -1,0 +1,187 @@
+//! AQM — analytical queuing-theory model for switching thresholds
+//! (paper §V).
+//!
+//! The server is modeled as an M/G/1 queue with the Pareto ladder
+//! `s̄0 < s̄1 < … < s̄n`. For a P95 latency SLO `L`:
+//!
+//! * **queuing slack** (Eq. 7): `Δk = L - s95_k` — the budget left for
+//!   waiting once the request's own tail service time is reserved;
+//!   configurations with `Δk <= 0` can never meet the SLO and are
+//!   excluded;
+//! * **upscale threshold** (Eq. 10): `N↑k = ⌊Δk / s̄k⌋` — the deepest
+//!   queue the configuration can drain within its slack (mean service
+//!   time as the P95-wait proxy; exact for deterministic service);
+//! * **downscale threshold** (Eq. 13): `N↓k = ⌊(Δ(k+1) - h_s) / s̄(k+1)⌋`
+//!   — the queue must be shallow enough that the *slower* configuration
+//!   `k+1` could absorb it with a safety buffer `h_s` to spare;
+//! * **asymmetric temporal hysteresis** (§V-F): upscaling (toward fast)
+//!   has ~zero cooldown because violations are immediate; downscaling
+//!   (toward accurate) waits out `t↓` of sustained low load.
+
+use super::pareto::ProfiledConfig;
+use super::plan::{ConfigPolicy, Plan};
+
+/// AQM derivation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct AqmParams {
+    /// P95 latency SLO target `L` in ms.
+    pub slo_ms: f64,
+    /// Slack buffer `h_s` (ms) protecting downscale transitions.
+    pub slack_buffer_ms: f64,
+    /// Upscale cooldown `t↑` (ms): zero / near-zero.
+    pub up_cooldown_ms: f64,
+    /// Downscale cooldown `t↓` (ms): several seconds.
+    pub down_cooldown_ms: f64,
+}
+
+impl AqmParams {
+    /// Paper defaults, scaled to an SLO: `h_s` = 10% of L, `t↑` = 0,
+    /// `t↓` = 5 s scaled by L/1000 (the paper's 5 s at a 1000 ms SLO).
+    pub fn for_slo(slo_ms: f64) -> AqmParams {
+        AqmParams {
+            slo_ms,
+            slack_buffer_ms: 0.10 * slo_ms,
+            up_cooldown_ms: 0.0,
+            down_cooldown_ms: 5.0 * slo_ms,
+        }
+    }
+}
+
+/// Derive the switching plan from a Pareto ladder (ordered by increasing
+/// mean service time). Configurations whose queuing slack is non-positive
+/// are dropped (paper: "configurations with Δk <= 0 cannot satisfy the
+/// SLO and are excluded") — except that the *fastest* surviving
+/// configuration is always kept if the ladder would otherwise be empty,
+/// so the system degrades to best-effort rather than refusing to serve.
+pub fn derive_plan(front: &[ProfiledConfig], params: AqmParams) -> Plan {
+    assert!(!front.is_empty(), "empty pareto front");
+    for w in front.windows(2) {
+        assert!(
+            w[0].latency.mean_ms <= w[1].latency.mean_ms,
+            "front must be ordered by mean service time"
+        );
+    }
+
+    // Exclude configurations that cannot meet the SLO at all.
+    let mut ladder: Vec<&ProfiledConfig> = front
+        .iter()
+        .filter(|c| params.slo_ms - c.latency.p95_ms > 0.0)
+        .collect();
+    if ladder.is_empty() {
+        // Degraded mode: keep the fastest configuration only.
+        ladder.push(&front[0]);
+    }
+
+    let mut policies: Vec<ConfigPolicy> = Vec::with_capacity(ladder.len());
+    for (k, c) in ladder.iter().enumerate() {
+        let slack = params.slo_ms - c.latency.p95_ms; // Δk (Eq. 7)
+        let upscale = if slack > 0.0 {
+            (slack / c.latency.mean_ms).floor().max(0.0) as u64 // Eq. 10
+        } else {
+            0
+        };
+        // Downscale threshold of config k governs the k -> k+1 move and is
+        // computed from the *slower* config k+1 (Eq. 13).
+        let downscale = if k + 1 < ladder.len() {
+            let next = ladder[k + 1];
+            let next_slack = params.slo_ms - next.latency.p95_ms;
+            let n = ((next_slack - params.slack_buffer_ms) / next.latency.mean_ms)
+                .floor();
+            Some(n.max(0.0) as u64)
+        } else {
+            None
+        };
+        policies.push(ConfigPolicy {
+            label: c.label.clone(),
+            config: c.config.clone(),
+            accuracy: c.accuracy,
+            mean_ms: c.latency.mean_ms,
+            p95_ms: c.latency.p95_ms,
+            queue_slack_ms: slack,
+            upscale_threshold: upscale,
+            downscale_threshold: downscale,
+        });
+    }
+
+    Plan {
+        slo_ms: params.slo_ms,
+        slack_buffer_ms: params.slack_buffer_ms,
+        up_cooldown_ms: params.up_cooldown_ms,
+        down_cooldown_ms: params.down_cooldown_ms,
+        ladder: policies,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::profiler::LatencyProfile;
+
+    fn pc(acc: f64, mean: f64, p95: f64) -> ProfiledConfig {
+        ProfiledConfig {
+            config: vec![],
+            label: format!("c-{mean}"),
+            accuracy: acc,
+            latency: LatencyProfile { mean_ms: mean, p50_ms: mean, p95_ms: p95, runs: 10 },
+        }
+    }
+
+    fn front3() -> Vec<ProfiledConfig> {
+        vec![
+            pc(0.76, 20.0, 30.0),
+            pc(0.82, 45.0, 70.0),
+            pc(0.85, 90.0, 140.0),
+        ]
+    }
+
+    #[test]
+    fn thresholds_match_equations() {
+        let plan = derive_plan(&front3(), AqmParams::for_slo(300.0));
+        // Δ0 = 300-30 = 270, N↑0 = floor(270/20) = 13.
+        assert_eq!(plan.ladder[0].upscale_threshold, 13);
+        // Δ1 = 230, N↑1 = floor(230/45) = 5.
+        assert_eq!(plan.ladder[1].upscale_threshold, 5);
+        // Δ2 = 160, N↑2 = floor(160/90) = 1.
+        assert_eq!(plan.ladder[2].upscale_threshold, 1);
+        // N↓0 (to config 1): floor((230 - 30)/45) = 4.
+        assert_eq!(plan.ladder[0].downscale_threshold, Some(4));
+        // N↓1 (to config 2): floor((160 - 30)/90) = 1.
+        assert_eq!(plan.ladder[1].downscale_threshold, Some(1));
+        assert_eq!(plan.ladder[2].downscale_threshold, None);
+    }
+
+    #[test]
+    fn faster_configs_tolerate_deeper_queues() {
+        // Paper Eq. 11: N↑0 > N↑1 > … > N↑n.
+        let plan = derive_plan(&front3(), AqmParams::for_slo(300.0));
+        let ups: Vec<u64> =
+            plan.ladder.iter().map(|p| p.upscale_threshold).collect();
+        for w in ups.windows(2) {
+            assert!(w[0] > w[1], "{ups:?}");
+        }
+    }
+
+    #[test]
+    fn excludes_infeasible_configs() {
+        // SLO below the slowest config's p95 -> it is dropped.
+        let plan = derive_plan(&front3(), AqmParams::for_slo(100.0));
+        assert_eq!(plan.ladder.len(), 2);
+        assert_eq!(plan.ladder.last().unwrap().label, "c-45");
+    }
+
+    #[test]
+    fn degraded_mode_keeps_fastest() {
+        // SLO below every p95: keep only the fastest, best-effort.
+        let plan = derive_plan(&front3(), AqmParams::for_slo(10.0));
+        assert_eq!(plan.ladder.len(), 1);
+        assert_eq!(plan.ladder[0].label, "c-20");
+        assert_eq!(plan.ladder[0].upscale_threshold, 0);
+    }
+
+    #[test]
+    fn hysteresis_is_asymmetric() {
+        let p = AqmParams::for_slo(1000.0);
+        assert_eq!(p.up_cooldown_ms, 0.0);
+        assert!(p.down_cooldown_ms >= 1000.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Deployment planning (paper §III-A, §V): profile the feasible set on
+//! target hardware, keep the Pareto-optimal configurations, and derive
+//! AQM switching thresholds for the Elastico controller.
+//!
+//! Planning depends only on the deployment hardware: re-running this
+//! stage (not the task optimization) is sufficient when the system moves
+//! to new infrastructure.
+
+pub mod aqm;
+pub mod pareto;
+pub mod plan;
+pub mod profiler;
+
+pub use aqm::{derive_plan, AqmParams};
+pub use pareto::{pareto_front, ProfiledConfig};
+pub use plan::{ConfigPolicy, Plan};
+pub use profiler::{profile_config, ConfigRunner, LatencyProfile};

@@ -1,0 +1,111 @@
+//! Pareto-front construction over (accuracy ↑, latency ↓) (paper §III-A).
+
+use super::profiler::LatencyProfile;
+use crate::configspace::Config;
+
+/// A feasible configuration with its accuracy estimate and latency profile.
+#[derive(Clone, Debug)]
+pub struct ProfiledConfig {
+    pub config: Config,
+    /// Human-readable tuple (for tables/plots).
+    pub label: String,
+    pub accuracy: f64,
+    pub latency: LatencyProfile,
+}
+
+impl ProfiledConfig {
+    /// `self` dominates `other` if it is at least as good on both axes and
+    /// strictly better on one (accuracy higher, mean latency lower).
+    pub fn dominates(&self, other: &ProfiledConfig) -> bool {
+        let acc_ge = self.accuracy >= other.accuracy;
+        let lat_le = self.latency.mean_ms <= other.latency.mean_ms;
+        let strictly = self.accuracy > other.accuracy
+            || self.latency.mean_ms < other.latency.mean_ms;
+        acc_ge && lat_le && strictly
+    }
+}
+
+/// Keep only non-dominated configurations, ordered by increasing mean
+/// service time (the AQM ladder order, Eq. 4: s̄0 < s̄1 < … < s̄n, which
+/// on a Pareto front implies a0 < a1 < … < an).
+pub fn pareto_front(mut configs: Vec<ProfiledConfig>) -> Vec<ProfiledConfig> {
+    configs.sort_by(|a, b| {
+        a.latency
+            .mean_ms
+            .partial_cmp(&b.latency.mean_ms)
+            .unwrap()
+            .then(b.accuracy.partial_cmp(&a.accuracy).unwrap())
+    });
+    let mut front: Vec<ProfiledConfig> = Vec::new();
+    let mut best_acc = f64::NEG_INFINITY;
+    for c in configs {
+        // Sorted by latency: c is non-dominated iff it improves accuracy.
+        if c.accuracy > best_acc {
+            best_acc = c.accuracy;
+            front.push(c);
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pc(acc: f64, mean: f64) -> ProfiledConfig {
+        ProfiledConfig {
+            config: vec![],
+            label: format!("a{acc}-l{mean}"),
+            accuracy: acc,
+            latency: LatencyProfile {
+                mean_ms: mean,
+                p50_ms: mean,
+                p95_ms: mean * 1.5,
+                runs: 10,
+            },
+        }
+    }
+
+    #[test]
+    fn removes_dominated() {
+        let front = pareto_front(vec![
+            pc(0.70, 100.0),
+            pc(0.80, 50.0), // dominates the first
+            pc(0.90, 200.0),
+            pc(0.85, 300.0), // dominated by 0.90@200
+        ]);
+        let labels: Vec<&str> = front.iter().map(|c| c.label.as_str()).collect();
+        assert_eq!(labels, vec!["a0.8-l50", "a0.9-l200"]);
+    }
+
+    #[test]
+    fn ladder_is_ordered_both_axes() {
+        let front = pareto_front(vec![
+            pc(0.76, 20.0),
+            pc(0.82, 45.0),
+            pc(0.85, 70.0),
+            pc(0.70, 30.0),
+            pc(0.80, 90.0),
+        ]);
+        for w in front.windows(2) {
+            assert!(w[0].latency.mean_ms < w[1].latency.mean_ms);
+            assert!(w[0].accuracy < w[1].accuracy);
+        }
+    }
+
+    #[test]
+    fn dominates_is_strict() {
+        let a = pc(0.8, 50.0);
+        let b = pc(0.8, 50.0);
+        assert!(!a.dominates(&b));
+        assert!(pc(0.8, 40.0).dominates(&b));
+        assert!(pc(0.9, 50.0).dominates(&b));
+        assert!(!pc(0.9, 60.0).dominates(&b));
+    }
+
+    #[test]
+    fn single_config_front() {
+        let front = pareto_front(vec![pc(0.8, 10.0)]);
+        assert_eq!(front.len(), 1);
+    }
+}

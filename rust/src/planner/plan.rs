@@ -1,0 +1,194 @@
+//! The deployment plan: Pareto ladder + switching policies, serializable
+//! to JSON so `compass plan` output can be fed to `compass serve`.
+
+use std::collections::BTreeMap;
+
+use crate::configspace::Config;
+use crate::util::json::Json;
+
+/// One rung of the Pareto ladder with its AQM thresholds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConfigPolicy {
+    pub label: String,
+    pub config: Config,
+    pub accuracy: f64,
+    pub mean_ms: f64,
+    pub p95_ms: f64,
+    /// Queuing slack Δk = L - s95_k (ms).
+    pub queue_slack_ms: f64,
+    /// N↑k: switch to the faster rung when queue depth exceeds this.
+    pub upscale_threshold: u64,
+    /// N↓k: may switch to the slower (more accurate) rung k+1 when queue
+    /// depth is below this. None on the most accurate rung.
+    pub downscale_threshold: Option<u64>,
+}
+
+/// A complete switching plan for one (hardware, SLO) deployment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    pub slo_ms: f64,
+    pub slack_buffer_ms: f64,
+    pub up_cooldown_ms: f64,
+    pub down_cooldown_ms: f64,
+    /// Ordered by increasing mean service time (index 0 = fastest).
+    pub ladder: Vec<ConfigPolicy>,
+}
+
+impl Plan {
+    /// Index of the most accurate rung.
+    pub fn most_accurate(&self) -> usize {
+        self.ladder.len() - 1
+    }
+
+    pub fn to_json(&self) -> Json {
+        let ladder = self
+            .ladder
+            .iter()
+            .map(|p| {
+                let mut m = BTreeMap::new();
+                m.insert("label".into(), Json::str(p.label.clone()));
+                m.insert(
+                    "config".into(),
+                    Json::arr(p.config.iter().map(|&i| Json::num(i as f64))),
+                );
+                m.insert("accuracy".into(), Json::num(p.accuracy));
+                m.insert("mean_ms".into(), Json::num(p.mean_ms));
+                m.insert("p95_ms".into(), Json::num(p.p95_ms));
+                m.insert("queue_slack_ms".into(), Json::num(p.queue_slack_ms));
+                m.insert(
+                    "upscale_threshold".into(),
+                    Json::num(p.upscale_threshold as f64),
+                );
+                m.insert(
+                    "downscale_threshold".into(),
+                    p.downscale_threshold
+                        .map(|v| Json::num(v as f64))
+                        .unwrap_or(Json::Null),
+                );
+                Json::Obj(m)
+            })
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("slo_ms", Json::num(self.slo_ms)),
+            ("slack_buffer_ms", Json::num(self.slack_buffer_ms)),
+            ("up_cooldown_ms", Json::num(self.up_cooldown_ms)),
+            ("down_cooldown_ms", Json::num(self.down_cooldown_ms)),
+            ("ladder", Json::Arr(ladder)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Plan> {
+        let ladder = j
+            .get("ladder")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Some(ConfigPolicy {
+                    label: e.get("label")?.as_str()?.to_string(),
+                    config: e
+                        .get("config")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_usize())
+                        .collect::<Option<Vec<_>>>()?,
+                    accuracy: e.get("accuracy")?.as_f64()?,
+                    mean_ms: e.get("mean_ms")?.as_f64()?,
+                    p95_ms: e.get("p95_ms")?.as_f64()?,
+                    queue_slack_ms: e.get("queue_slack_ms")?.as_f64()?,
+                    upscale_threshold: e.get("upscale_threshold")?.as_f64()? as u64,
+                    downscale_threshold: match e.get("downscale_threshold")? {
+                        Json::Null => None,
+                        v => Some(v.as_f64()? as u64),
+                    },
+                })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(Plan {
+            slo_ms: j.get("slo_ms")?.as_f64()?,
+            slack_buffer_ms: j.get("slack_buffer_ms")?.as_f64()?,
+            up_cooldown_ms: j.get("up_cooldown_ms")?.as_f64()?,
+            down_cooldown_ms: j.get("down_cooldown_ms")?.as_f64()?,
+            ladder,
+        })
+    }
+
+    /// Console rendering of the ladder (Table-I style).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "Plan: SLO {:.0} ms, h_s {:.0} ms, t↑ {:.0} ms, t↓ {:.0} ms\n",
+            self.slo_ms, self.slack_buffer_ms, self.up_cooldown_ms, self.down_cooldown_ms
+        );
+        out.push_str(
+            "  idx  label                                     acc     mean      p95    Δk     N↑    N↓\n",
+        );
+        for (i, p) in self.ladder.iter().enumerate() {
+            out.push_str(&format!(
+                "  {:>3}  {:<40} {:>6.3} {:>7.1}ms {:>7.1}ms {:>6.0} {:>5} {:>5}\n",
+                i,
+                p.label,
+                p.accuracy,
+                p.mean_ms,
+                p.p95_ms,
+                p.queue_slack_ms,
+                p.upscale_threshold,
+                p.downscale_threshold
+                    .map(|v| v.to_string())
+                    .unwrap_or_else(|| "-".into()),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> Plan {
+        Plan {
+            slo_ms: 300.0,
+            slack_buffer_ms: 30.0,
+            up_cooldown_ms: 0.0,
+            down_cooldown_ms: 1500.0,
+            ladder: vec![
+                ConfigPolicy {
+                    label: "fast".into(),
+                    config: vec![0, 1, 2],
+                    accuracy: 0.76,
+                    mean_ms: 20.0,
+                    p95_ms: 30.0,
+                    queue_slack_ms: 270.0,
+                    upscale_threshold: 13,
+                    downscale_threshold: Some(4),
+                },
+                ConfigPolicy {
+                    label: "accurate".into(),
+                    config: vec![5, 1, 2],
+                    accuracy: 0.85,
+                    mean_ms: 90.0,
+                    p95_ms: 140.0,
+                    queue_slack_ms: 160.0,
+                    upscale_threshold: 1,
+                    downscale_threshold: None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = plan();
+        let j = p.to_json();
+        let text = j.to_string();
+        let parsed = Plan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, p);
+    }
+
+    #[test]
+    fn render_contains_ladder() {
+        let r = plan().render();
+        assert!(r.contains("fast"));
+        assert!(r.contains("accurate"));
+        assert!(r.contains("SLO 300 ms"));
+    }
+}

@@ -1,0 +1,93 @@
+//! Latency profiling of configurations on target hardware (paper §III-A).
+//!
+//! The Planner runs each feasible configuration against representative
+//! inputs and records latency statistics. For LLM-bearing workflows,
+//! latency varies with input/output length, so percentile profiles are
+//! kept; mean latency alone suffices only for the predictable components.
+
+use crate::configspace::{Config, ConfigSpace};
+use crate::util::stats::Summary;
+
+/// Anything that can execute one request under a configuration and
+/// report its service time in milliseconds. Implemented by the live
+/// workflow executors ([`crate::workflows`]) and by modeled runners used
+/// in tests and simulations.
+pub trait ConfigRunner {
+    fn run_once(&mut self, space: &ConfigSpace, cfg: &Config) -> f64;
+}
+
+/// Latency statistics of one configuration on the target hardware.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LatencyProfile {
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub runs: usize,
+}
+
+impl LatencyProfile {
+    pub fn from_samples(samples: &[f64]) -> LatencyProfile {
+        let s = Summary::of(samples);
+        LatencyProfile {
+            mean_ms: s.mean,
+            p50_ms: s.p50,
+            p95_ms: s.p95,
+            runs: s.count,
+        }
+    }
+}
+
+/// Profile a configuration with `runs` executions (plus `warmup` untimed).
+pub fn profile_config<R: ConfigRunner + ?Sized>(
+    runner: &mut R,
+    space: &ConfigSpace,
+    cfg: &Config,
+    warmup: usize,
+    runs: usize,
+) -> LatencyProfile {
+    for _ in 0..warmup {
+        runner.run_once(space, cfg);
+    }
+    let samples: Vec<f64> = (0..runs.max(1))
+        .map(|_| runner.run_once(space, cfg))
+        .collect();
+    LatencyProfile::from_samples(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configspace::{ConfigSpace, ParamDef};
+
+    struct FixedSeq {
+        seq: Vec<f64>,
+        i: usize,
+    }
+
+    impl ConfigRunner for FixedSeq {
+        fn run_once(&mut self, _s: &ConfigSpace, _c: &Config) -> f64 {
+            let v = self.seq[self.i % self.seq.len()];
+            self.i += 1;
+            v
+        }
+    }
+
+    #[test]
+    fn profile_reflects_samples() {
+        let s = ConfigSpace::new("t", vec![ParamDef::discrete("x", vec![0])], vec![]);
+        let mut r = FixedSeq { seq: vec![10.0, 20.0, 30.0, 40.0], i: 0 };
+        let p = profile_config(&mut r, &s, &vec![0], 0, 4);
+        assert_eq!(p.runs, 4);
+        assert!((p.mean_ms - 25.0).abs() < 1e-12);
+        assert!(p.p95_ms >= p.p50_ms);
+    }
+
+    #[test]
+    fn warmup_consumes_runs() {
+        let s = ConfigSpace::new("t", vec![ParamDef::discrete("x", vec![0])], vec![]);
+        let mut r = FixedSeq { seq: vec![100.0, 10.0, 10.0], i: 0 };
+        // warmup=1 skips the cold 100ms run.
+        let p = profile_config(&mut r, &s, &vec![0], 1, 2);
+        assert!((p.mean_ms - 10.0).abs() < 1e-12);
+    }
+}

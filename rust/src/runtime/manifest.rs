@@ -1,0 +1,242 @@
+//! `artifacts/manifest.json` schema (produced by `python -m compile.aot`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One data input or output of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One weight tensor slice inside the model's weights blob.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset in f32 elements (not bytes).
+    pub offset: usize,
+    pub numel: usize,
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub hlo: String,
+    pub kind: String,
+    pub weights_bin: Option<String>,
+    pub params: Vec<ParamSpec>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Free-form metadata from the Python side (sizes, aliases, …).
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactMeta {
+    /// Integer metadata field (e.g. `seq`, `gen_len`).
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key)?.as_usize()
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key)?.as_str()
+    }
+}
+
+/// The full parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in arts {
+            artifacts.insert(name.clone(), parse_entry(name, entry)?);
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.artifacts.keys().cloned().collect()
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.get(name)
+    }
+
+    /// All artifacts of a kind (e.g. every "generator"), sorted by name.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts.values().filter(|a| a.kind == kind).collect()
+    }
+}
+
+fn parse_io(v: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: v
+            .get("name")
+            .and_then(|s| s.as_str())
+            .unwrap_or_default()
+            .to_string(),
+        shape: v
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("io missing shape"))?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect(),
+        dtype: v
+            .get("dtype")
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| anyhow!("io missing dtype"))?
+            .to_string(),
+    })
+}
+
+fn parse_entry(name: &str, entry: &Json) -> Result<ArtifactMeta> {
+    let get_str = |k: &str| -> Result<String> {
+        entry
+            .get(k)
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("{name}: missing {k}"))
+    };
+    let params = entry
+        .get("params")
+        .and_then(|p| p.as_arr())
+        .unwrap_or(&[])
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p
+                    .get("name")
+                    .and_then(|s| s.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                shape: p
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                offset: p
+                    .get("offset")
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| anyhow!("{name}: param missing offset"))?,
+                numel: p
+                    .get("numel")
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| anyhow!("{name}: param missing numel"))?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ArtifactMeta {
+        name: name.to_string(),
+        hlo: get_str("hlo")?,
+        kind: get_str("kind")?,
+        weights_bin: entry
+            .get("weights_bin")
+            .and_then(|v| v.as_str())
+            .map(str::to_string),
+        params,
+        inputs: entry
+            .get("inputs")
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(parse_io)
+            .collect::<Result<Vec<_>>>()?,
+        outputs: entry
+            .get("outputs")
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(parse_io)
+            .collect::<Result<Vec<_>>>()?,
+        meta: entry
+            .get("meta")
+            .and_then(|v| v.as_obj())
+            .cloned()
+            .unwrap_or_default(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": {
+        "gen-64": {
+          "hlo": "gen-64.hlo.txt",
+          "kind": "generator",
+          "weights_bin": "weights/gen-64.bin",
+          "meta": {"d_model": 64, "gen_len": 16, "alias": "llama3.2:1b"},
+          "params": [{"name": "embed", "shape": [256, 64], "offset": 0, "numel": 16384}],
+          "inputs": [{"name": "tokens", "shape": [64], "dtype": "i32"}],
+          "outputs": [{"name": "gen", "shape": [16], "dtype": "i32"},
+                      {"name": "score", "shape": [], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("gen-64").unwrap();
+        assert_eq!(a.kind, "generator");
+        assert_eq!(a.params[0].numel, 16384);
+        assert_eq!(a.inputs[0].dtype, "i32");
+        assert_eq!(a.outputs[1].shape.len(), 0);
+        assert_eq!(a.outputs[1].numel(), 1);
+        assert_eq!(a.meta_usize("gen_len"), Some(16));
+        assert_eq!(a.meta_str("alias"), Some("llama3.2:1b"));
+        assert_eq!(m.by_kind("generator").len(), 1);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"artifacts": {"x": {"kind": "k"}}}"#).is_err());
+        assert!(Manifest::parse("{}").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Integration hook: parse the actual artifacts/manifest.json when
+        // artifacts have been built (skipped silently otherwise).
+        let p = std::path::Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.by_kind("generator").len() >= 6);
+            assert!(m.by_kind("reranker").len() >= 3);
+            assert!(m.artifact("retriever").is_some());
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! `make artifacts` (build-time Python) leaves `artifacts/manifest.json`,
+//! one `<model>.hlo.txt` per model, and raw little-endian f32 weight
+//! blobs. This module loads the manifest, compiles every HLO on a PJRT
+//! CPU client, uploads each model's weights to device buffers **once**,
+//! and exposes a typed `execute` for the request path — which is
+//! therefore Python-free and weight-copy-free (DESIGN.md, aot.py).
+//!
+//! PJRT handles are raw pointers (`!Send`), so an [`ArtifactLib`] must be
+//! created inside the thread that uses it (the server worker thread,
+//! the profiler, …).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactMeta, IoSpec, Manifest};
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A typed input tensor for [`ArtifactLib::execute`].
+pub enum TensorIn<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+/// A typed output tensor.
+#[derive(Clone, Debug)]
+pub enum TensorOut {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorOut {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorOut::F32(v) => Ok(v),
+            TensorOut::I32(_) => bail!("expected f32 output, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorOut::I32(v) => Ok(v),
+            TensorOut::F32(_) => bail!("expected i32 output, got f32"),
+        }
+    }
+}
+
+struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Device-resident weights in manifest (argument) order.
+    weights: Vec<xla::PjRtBuffer>,
+    meta: ArtifactMeta,
+}
+
+/// A compiled, weight-loaded artifact library bound to one PJRT client.
+pub struct ArtifactLib {
+    client: xla::PjRtClient,
+    models: HashMap<String, LoadedModel>,
+    dir: std::path::PathBuf,
+    manifest: Manifest,
+}
+
+impl ArtifactLib {
+    /// Load + compile the named artifacts (or all when `names` is None).
+    ///
+    /// Compiling every model takes a few seconds; serving paths load only
+    /// the models their plan references.
+    pub fn load(dir: &Path, names: Option<&[&str]>) -> Result<ArtifactLib> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        let mut lib = ArtifactLib {
+            client,
+            models: HashMap::new(),
+            dir: dir.to_path_buf(),
+            manifest,
+        };
+        let all: Vec<String> = match names {
+            Some(ns) => ns.iter().map(|s| s.to_string()).collect(),
+            None => lib.manifest.names(),
+        };
+        for name in all {
+            lib.ensure_loaded(&name)?;
+        }
+        Ok(lib)
+    }
+
+    /// The manifest backing this library.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile + upload one model if not already resident.
+    pub fn ensure_loaded(&mut self, name: &str) -> Result<()> {
+        if self.models.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+            .clone();
+        let hlo_path = self.dir.join(&meta.hlo);
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| anyhow!("parse {hlo_path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+
+        // Upload weights once: raw LE f32 blob sliced per manifest params.
+        let mut weights = Vec::with_capacity(meta.params.len());
+        if !meta.params.is_empty() {
+            let bin_rel = meta
+                .weights_bin
+                .as_ref()
+                .ok_or_else(|| anyhow!("{name}: params without weights_bin"))?;
+            let blob = std::fs::read(self.dir.join(bin_rel))
+                .with_context(|| format!("reading weights for {name}"))?;
+            let floats = bytes_to_f32(&blob)?;
+            for p in &meta.params {
+                let end = p.offset + p.numel;
+                if end > floats.len() {
+                    bail!("{name}: weights blob too short for {}", p.name);
+                }
+                let dims: Vec<usize> = if p.shape.is_empty() {
+                    vec![]
+                } else {
+                    p.shape.clone()
+                };
+                let buf = self
+                    .client
+                    .buffer_from_host_buffer::<f32>(
+                        &floats[p.offset..end],
+                        &dims,
+                        None,
+                    )
+                    .map_err(|e| anyhow!("upload {name}/{}: {e:?}", p.name))?;
+                weights.push(buf);
+            }
+        }
+        self.models.insert(name.to_string(), LoadedModel { exe, weights, meta });
+        Ok(())
+    }
+
+    /// Execute a model with the given data inputs (weights are implicit).
+    ///
+    /// Inputs must match the manifest order/shapes; outputs come back in
+    /// manifest order.
+    pub fn execute(&self, name: &str, inputs: &[TensorIn]) -> Result<Vec<TensorOut>> {
+        let model = self
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not loaded"))?;
+        if inputs.len() != model.meta.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                model.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+
+        // Upload data inputs (small: tokens, queries, one image).
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for (spec, t) in model.meta.inputs.iter().zip(inputs) {
+            let buf = match t {
+                TensorIn::F32(data, dims) => {
+                    if spec.dtype != "f32" {
+                        bail!("{name}/{}: expected {}, got f32", spec.name, spec.dtype);
+                    }
+                    self.client
+                        .buffer_from_host_buffer::<f32>(data, dims, None)
+                        .map_err(|e| anyhow!("input {}: {e:?}", spec.name))?
+                }
+                TensorIn::I32(data, dims) => {
+                    if spec.dtype != "i32" {
+                        bail!("{name}/{}: expected {}, got i32", spec.name, spec.dtype);
+                    }
+                    self.client
+                        .buffer_from_host_buffer::<i32>(data, dims, None)
+                        .map_err(|e| anyhow!("input {}: {e:?}", spec.name))?
+                }
+            };
+            bufs.push(buf);
+        }
+
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(model.weights.len() + bufs.len());
+        args.extend(model.weights.iter());
+        args.extend(bufs.iter());
+
+        let result = model
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != model.meta.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                model.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (spec, part) in model.meta.outputs.iter().zip(parts) {
+            let out = match spec.dtype.as_str() {
+                "f32" => TensorOut::F32(
+                    part.to_vec::<f32>()
+                        .map_err(|e| anyhow!("read {name} out: {e:?}"))?,
+                ),
+                "i32" => TensorOut::I32(
+                    part.to_vec::<i32>()
+                        .map_err(|e| anyhow!("read {name} out: {e:?}"))?,
+                ),
+                other => bail!("{name}: unsupported output dtype {other}"),
+            };
+            outs.push(out);
+        }
+        Ok(outs)
+    }
+
+    /// Artifact metadata (panics if not loaded).
+    pub fn meta(&self, name: &str) -> &ArtifactMeta {
+        &self.models[name].meta
+    }
+
+    /// Names of currently loaded models.
+    pub fn loaded(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+fn bytes_to_f32(blob: &[u8]) -> Result<Vec<f32>> {
+    if blob.len() % 4 != 0 {
+        bail!("weights blob length {} not a multiple of 4", blob.len());
+    }
+    Ok(blob
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Default artifacts directory (`COMPASS_ARTIFACTS` env override).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("COMPASS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_to_f32_roundtrip() {
+        let vals = [1.5f32, -2.25, 0.0, 1e-8];
+        let mut blob = Vec::new();
+        for v in vals {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(bytes_to_f32(&blob).unwrap(), vals);
+        assert!(bytes_to_f32(&blob[..5]).is_err());
+    }
+}

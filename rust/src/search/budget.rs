@@ -1,0 +1,167 @@
+//! Progressive evaluation budgets (paper §IV-B).
+//!
+//! Configurations start at the first level and escalate only while their
+//! Wilson interval still straddles τ — clearly (in)feasible configurations
+//! stop early, which is where most of COMPASS-V's savings at extreme
+//! feasible fractions come from (paper Fig. 4).
+
+use super::wilson::{classify, Classification};
+use super::Evaluator;
+use crate::configspace::{Config, ConfigSpace};
+
+/// Cumulative sample levels, e.g. `[10, 25, 50, 100]`: evaluate 10, then
+/// 15 more, … up to `b_max() = 100` total.
+#[derive(Clone, Debug)]
+pub struct BudgetSchedule {
+    pub levels: Vec<u32>,
+}
+
+impl BudgetSchedule {
+    pub fn new(levels: Vec<u32>) -> Self {
+        assert!(!levels.is_empty());
+        assert!(levels.windows(2).all(|w| w[0] < w[1]), "levels must increase");
+        BudgetSchedule { levels }
+    }
+
+    /// The paper's RAG schedule (max 100 samples).
+    pub fn rag() -> Self {
+        BudgetSchedule::new(vec![10, 25, 50, 100])
+    }
+
+    /// The paper's object-detection schedule (max 200 samples).
+    pub fn detection() -> Self {
+        BudgetSchedule::new(vec![12, 25, 50, 100, 200])
+    }
+
+    /// Maximum per-configuration budget `B_max`.
+    pub fn b_max(&self) -> u32 {
+        *self.levels.last().unwrap()
+    }
+}
+
+/// Outcome of progressively evaluating one configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOutcome {
+    /// Point estimate â at the stopping level.
+    pub acc: f64,
+    /// Samples consumed for this configuration.
+    pub samples: u32,
+    /// Feasibility decision (`acc >= tau` fallback at `B_max`).
+    pub feasible: bool,
+    /// True iff the decision came from a confident CI (not the fallback).
+    pub confident: bool,
+}
+
+/// Progressive evaluation with Wilson early stopping (Alg. 1 lines 5-10).
+///
+/// `z` guards the *feasible* decision; `z_infeasible` guards the
+/// *infeasible* one. Discarding a configuration is the unrecoverable
+/// error for a recall-oriented search (a false-feasible merely costs
+/// later profiling), so the default infeasible gate is stricter —
+/// borderline configurations escalate to the full budget, where their
+/// classification agrees with the exhaustive baseline by construction
+/// (identical sample streams).
+#[allow(clippy::too_many_arguments)]
+pub fn progressive_evaluate_asym<E: Evaluator + ?Sized>(
+    evaluator: &mut E,
+    space: &ConfigSpace,
+    cfg: &Config,
+    tau: f64,
+    schedule: &BudgetSchedule,
+    z: f64,
+    z_infeasible: f64,
+) -> EvalOutcome {
+    let mut successes = 0u32;
+    let mut drawn = 0u32;
+    for &level in &schedule.levels {
+        let extra = level - drawn;
+        successes += evaluator.sample(space, cfg, extra);
+        drawn = level;
+        if drawn == schedule.b_max() {
+            break; // final level: decide by point estimate below
+        }
+        if classify(successes, drawn, tau, z) == Classification::Feasible {
+            return EvalOutcome {
+                acc: successes as f64 / drawn as f64,
+                samples: drawn,
+                feasible: true,
+                confident: true,
+            };
+        }
+        if classify(successes, drawn, tau, z_infeasible) == Classification::Infeasible {
+            return EvalOutcome {
+                acc: successes as f64 / drawn as f64,
+                samples: drawn,
+                feasible: false,
+                confident: true,
+            };
+        }
+    }
+    // Budget exhausted: the point estimate (matches exhaustive search).
+    let acc = successes as f64 / drawn as f64;
+    EvalOutcome { acc, samples: drawn, feasible: acc >= tau, confident: false }
+}
+
+/// Symmetric-z progressive evaluation (paper Alg. 1 as written).
+pub fn progressive_evaluate<E: Evaluator + ?Sized>(
+    evaluator: &mut E,
+    space: &ConfigSpace,
+    cfg: &Config,
+    tau: f64,
+    schedule: &BudgetSchedule,
+    z: f64,
+) -> EvalOutcome {
+    progressive_evaluate_asym(evaluator, space, cfg, tau, schedule, z, z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configspace::{ConfigSpace, ParamDef};
+    use crate::util::Rng;
+
+    struct FixedP {
+        p: f64,
+        rng: Rng,
+    }
+
+    impl Evaluator for FixedP {
+        fn sample(&mut self, _s: &ConfigSpace, _c: &Config, n: u32) -> u32 {
+            (0..n).filter(|_| self.rng.bernoulli(self.p)).count() as u32
+        }
+    }
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::new("t", vec![ParamDef::discrete("x", vec![0, 1])], vec![])
+    }
+
+    #[test]
+    fn clear_cases_stop_early() {
+        let s = space();
+        let sched = BudgetSchedule::rag();
+        let mut hi = FixedP { p: 0.95, rng: Rng::new(1) };
+        let out = progressive_evaluate(&mut hi, &s, &vec![0], 0.5, &sched, 1.96);
+        assert!(out.feasible && out.confident);
+        assert!(out.samples <= 25, "used {}", out.samples);
+
+        let mut lo = FixedP { p: 0.05, rng: Rng::new(2) };
+        let out = progressive_evaluate(&mut lo, &s, &vec![0], 0.5, &sched, 1.96);
+        assert!(!out.feasible && out.confident);
+        assert!(out.samples <= 25);
+    }
+
+    #[test]
+    fn borderline_exhausts_budget() {
+        let s = space();
+        let sched = BudgetSchedule::rag();
+        let mut mid = FixedP { p: 0.5, rng: Rng::new(3) };
+        let out = progressive_evaluate(&mut mid, &s, &vec![0], 0.5, &sched, 1.96);
+        assert_eq!(out.samples, sched.b_max());
+    }
+
+    #[test]
+    #[should_panic(expected = "increase")]
+    fn rejects_bad_schedule() {
+        BudgetSchedule::new(vec![10, 10]);
+    }
+}

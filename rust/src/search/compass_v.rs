@@ -1,0 +1,320 @@
+//! COMPASS-V: feasible configuration search (paper §IV, Algorithm 1).
+//!
+//! The queue-driven loop pops one candidate at a time:
+//!
+//! * **progressive evaluation** with Wilson early stopping decides
+//!   feasibility cheaply for clear-cut configurations;
+//! * **feasible** configurations trigger *lateral expansion* — their
+//!   grid-adjacent neighbors are enqueued (breadth-first boundary
+//!   tracing; the paper's completeness analysis assumes all neighbors
+//!   are explored at each expansion step);
+//! * **infeasible** configurations trigger *hill-climbing* — the IDW
+//!   gradient (Eq. 3) picks the most promising axis step toward the
+//!   feasible region.
+//!
+//! Termination: every configuration is evaluated at most once and the
+//! space is finite, so the loop ends after at most `|C|` iterations with
+//! worst case `O(|C| * B_max)` samples (paper §IV-C).
+
+use std::collections::{HashSet, VecDeque};
+
+use super::budget::{progressive_evaluate_asym, BudgetSchedule};
+use super::gradient::{idw_gradient, Observation};
+use super::lhs::lhs_sample;
+use super::trace::TracePoint;
+use super::Evaluator;
+use crate::configspace::{Config, ConfigSpace};
+use crate::util::Rng;
+
+/// Tunables for COMPASS-V (defaults follow the paper's setup).
+#[derive(Clone, Debug)]
+pub struct CompassVParams {
+    /// Latin Hypercube seed count.
+    pub n_init: usize,
+    /// Progressive budget schedule.
+    pub schedule: BudgetSchedule,
+    /// Wilson critical value for the feasible decision (1.96 = 95%).
+    pub z: f64,
+    /// Stricter critical value for the infeasible decision: discarding a
+    /// configuration is the unrecoverable error for recall, so borderline
+    /// configurations escalate to the full budget instead.
+    pub z_infeasible: f64,
+    /// Near-miss margin: infeasible configurations with estimate within
+    /// this margin of τ still trigger lateral expansion, so noise islands
+    /// just across the boundary stay reachable.
+    pub near_miss_margin: f64,
+    /// Neighbors used for IDW gradient estimation.
+    pub knn: usize,
+    /// IDW power `p` in `w = d^-p`.
+    pub idw_power: f64,
+    /// Hill-climbing steps proposed per infeasible configuration.
+    pub climb_width: usize,
+    /// RNG seed (sampling on ties / LHS).
+    pub seed: u64,
+}
+
+impl Default for CompassVParams {
+    fn default() -> Self {
+        CompassVParams {
+            n_init: 16,
+            schedule: BudgetSchedule::rag(),
+            z: 1.96,
+            z_infeasible: 2.81,
+            near_miss_margin: 0.07,
+            knn: 5,
+            idw_power: 2.0,
+            climb_width: 2,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Output of a COMPASS-V run.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    /// The discovered feasible set `F` with accuracy estimates.
+    pub feasible: Vec<(Config, f64)>,
+    /// Number of configurations evaluated.
+    pub evaluated: usize,
+    /// Total accuracy-evaluation samples consumed.
+    pub samples_used: u64,
+    /// Anytime curve: (samples consumed, feasible found).
+    pub trace: Vec<TracePoint>,
+}
+
+impl SearchResult {
+    /// Savings vs the exhaustive baseline `|C| * B_max` (paper Fig. 4).
+    pub fn savings_vs_exhaustive(&self, n_configs: usize, b_max: u32) -> f64 {
+        let exhaustive = n_configs as u64 * b_max as u64;
+        1.0 - self.samples_used as f64 / exhaustive as f64
+    }
+}
+
+/// The COMPASS-V search driver.
+pub struct CompassV {
+    params: CompassVParams,
+}
+
+impl CompassV {
+    pub fn new(params: CompassVParams) -> Self {
+        CompassV { params }
+    }
+
+    /// Run Algorithm 1 over `space` at threshold `tau`.
+    pub fn run<E: Evaluator + ?Sized>(
+        &self,
+        space: &ConfigSpace,
+        tau: f64,
+        evaluator: &mut E,
+    ) -> SearchResult {
+        let p = &self.params;
+        let mut rng = Rng::new(p.seed);
+
+        let mut queue: VecDeque<Config> = VecDeque::new();
+        let mut queued: HashSet<usize> = HashSet::new();
+        // Alg. 1 line 2: diverse LHS seeding.
+        for cfg in lhs_sample(space, p.n_init, &mut rng) {
+            queued.insert(space.flat_id(&cfg));
+            queue.push_back(cfg);
+        }
+
+        let mut feasible: Vec<(Config, f64)> = Vec::new();
+        let mut evaluated: Vec<Observation> = Vec::new();
+        let mut samples_used: u64 = 0;
+        let mut trace = vec![TracePoint { samples: 0, found: 0 }];
+
+        while let Some(cfg) = queue.pop_front() {
+            // Lines 5-10: progressive evaluation with early stopping.
+            let out = progressive_evaluate_asym(
+                evaluator, space, &cfg, tau, &p.schedule, p.z, p.z_infeasible,
+            );
+            samples_used += out.samples as u64;
+            let coords = space.normalize(&cfg);
+            evaluated.push((coords.clone(), out.acc));
+
+            if out.feasible || out.acc >= tau - p.near_miss_margin {
+                // Lines 13-14: record + lateral expansion (BFS boundary).
+                // Near-misses expand too: a noise island just across the
+                // boundary must stay reachable for 100% recall.
+                if out.feasible {
+                    feasible.push((cfg.clone(), out.acc));
+                }
+                for n in space.neighbors_step(&cfg) {
+                    if queued.insert(space.flat_id(&n)) {
+                        queue.push_back(n);
+                    }
+                }
+            } else {
+                // Lines 16-17: estimate gradient, climb toward feasibility.
+                let grad =
+                    idw_gradient(&coords, out.acc, &evaluated, p.knn, p.idw_power);
+                let steps =
+                    hill_climb_steps(space, &cfg, &grad, p.climb_width, &mut rng);
+                for n in steps {
+                    if queued.insert(space.flat_id(&n)) {
+                        queue.push_back(n);
+                    }
+                }
+            }
+            trace.push(TracePoint { samples: samples_used, found: feasible.len() });
+        }
+
+        SearchResult {
+            feasible,
+            evaluated: evaluated.len(),
+            samples_used,
+            trace,
+        }
+    }
+}
+
+/// Propose up to `width` one-step moves ranked by predicted accuracy gain
+/// `grad_i * step_i` (ascending the estimated accuracy surface). Falls
+/// back to a random valid neighbor when the gradient is uninformative.
+fn hill_climb_steps(
+    space: &ConfigSpace,
+    cfg: &Config,
+    grad: &[f64],
+    width: usize,
+    rng: &mut Rng,
+) -> Vec<Config> {
+    // Candidate: (predicted gain, neighbor).
+    let mut cands: Vec<(f64, Config)> = Vec::new();
+    for axis in 0..space.dims() {
+        for delta in [-1i64, 1] {
+            let ni = cfg[axis] as i64 + delta;
+            if ni < 0 || ni >= space.params[axis].len() as i64 {
+                continue;
+            }
+            let mut n = cfg.clone();
+            n[axis] = ni as usize;
+            if !space.valid(&n) {
+                continue;
+            }
+            let gain = grad[axis] * delta as f64 * space.step(axis);
+            cands.push((gain, n));
+        }
+    }
+    if cands.is_empty() {
+        return vec![];
+    }
+    let informative = cands.iter().any(|(g, _)| *g > 1e-12);
+    if informative {
+        cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        cands
+            .into_iter()
+            .take(width)
+            .filter(|(g, _)| *g > 0.0)
+            .map(|(_, c)| c)
+            .collect()
+    } else {
+        // No usable gradient yet: random exploratory step.
+        let i = rng.choice_index(cands.len());
+        vec![cands.swap_remove(i).1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configspace::{ConfigSpace, ParamDef};
+    use crate::util::Rng;
+
+    /// Deterministic synthetic landscape: acc rises with both axes.
+    struct Slope {
+        rng: Rng,
+    }
+
+    impl Slope {
+        fn p(space: &ConfigSpace, cfg: &Config) -> f64 {
+            let z = space.normalize(cfg);
+            (0.15 + 0.5 * z[0] + 0.35 * z[1]).min(0.99)
+        }
+    }
+
+    impl Evaluator for Slope {
+        fn sample(&mut self, space: &ConfigSpace, cfg: &Config, n: u32) -> u32 {
+            let p = Slope::p(space, cfg);
+            (0..n).filter(|_| self.rng.bernoulli(p)).count() as u32
+        }
+    }
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::new(
+            "grid",
+            vec![
+                ParamDef::discrete("x", (0..10).collect()),
+                ParamDef::discrete("y", (0..10).collect()),
+            ],
+            vec![],
+        )
+    }
+
+    #[test]
+    fn finds_feasible_region_with_full_recall() {
+        let s = space();
+        let tau = 0.70;
+        let mut eval = Slope { rng: Rng::new(42) };
+        let result = CompassV::new(CompassVParams::default()).run(&s, tau, &mut eval);
+
+        // Ground truth from the true landscape (margin excludes borderline
+        // configs whose Bernoulli estimate may legitimately flip).
+        let gt: Vec<Config> = s
+            .enumerate_valid()
+            .into_iter()
+            .filter(|c| Slope::p(&s, c) >= tau + 0.05)
+            .collect();
+        let found: std::collections::HashSet<usize> =
+            result.feasible.iter().map(|(c, _)| s.flat_id(c)).collect();
+        for c in &gt {
+            assert!(
+                found.contains(&s.flat_id(c)),
+                "missing clearly-feasible {:?} (p={})",
+                c,
+                Slope::p(&s, c)
+            );
+        }
+    }
+
+    #[test]
+    fn saves_samples_vs_exhaustive() {
+        let s = space();
+        let mut eval = Slope { rng: Rng::new(1) };
+        let r = CompassV::new(CompassVParams::default()).run(&s, 0.9, &mut eval);
+        // Feasible region is tiny; most of the space is never evaluated.
+        let savings = r.savings_vs_exhaustive(s.nominal_size(), 100);
+        assert!(savings > 0.5, "savings {savings}");
+    }
+
+    #[test]
+    fn trace_is_monotone() {
+        let s = space();
+        let mut eval = Slope { rng: Rng::new(2) };
+        let r = CompassV::new(CompassVParams::default()).run(&s, 0.7, &mut eval);
+        for w in r.trace.windows(2) {
+            assert!(w[0].samples <= w[1].samples);
+            assert!(w[0].found <= w[1].found);
+        }
+        assert_eq!(r.trace.last().unwrap().found, r.feasible.len());
+    }
+
+    #[test]
+    fn evaluates_each_config_at_most_once() {
+        let s = space();
+        let mut eval = Slope { rng: Rng::new(3) };
+        let r = CompassV::new(CompassVParams::default()).run(&s, 0.5, &mut eval);
+        assert!(r.evaluated <= s.nominal_size());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let s = space();
+        let run = || {
+            let mut eval = Slope { rng: Rng::new(9) };
+            CompassV::new(CompassVParams::default()).run(&s, 0.7, &mut eval)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.samples_used, b.samples_used);
+        assert_eq!(a.feasible.len(), b.feasible.len());
+    }
+}

@@ -1,0 +1,121 @@
+//! Inverse-distance-weighted finite-difference gradients (paper Eq. 3).
+//!
+//! Compound workflows are non-differentiable, so COMPASS-V estimates a
+//! pseudo-gradient at a configuration `c` by interpolating accuracy
+//! differences from the `k` nearest *evaluated* configurations in the
+//! normalized `[0,1]^d` space, weighting each neighbor by `d(c,n)^-p`.
+
+/// An evaluated configuration: normalized coordinates + accuracy estimate.
+pub type Observation = (Vec<f64>, f64);
+
+/// Euclidean distance in normalized space.
+pub fn distance(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Estimate the gradient at `point` (accuracy `acc`) from the evaluated
+/// set. Returns one slope per dimension (0.0 where no neighbor moved on
+/// that dimension).
+pub fn idw_gradient(
+    point: &[f64],
+    acc: f64,
+    evaluated: &[Observation],
+    knn: usize,
+    power: f64,
+) -> Vec<f64> {
+    let d = point.len();
+    // k nearest distinct neighbors.
+    let mut neigh: Vec<(f64, &Observation)> = evaluated
+        .iter()
+        .map(|o| (distance(point, &o.0), o))
+        .filter(|(dist, _)| *dist > 1e-12)
+        .collect();
+    neigh.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    neigh.truncate(knn);
+
+    let mut grad = vec![0.0; d];
+    for i in 0..d {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (dist, (coords, nacc)) in &neigh {
+            let dx = coords[i] - point[i];
+            if dx.abs() < 1e-9 {
+                continue; // neighbor didn't move on this axis
+            }
+            let w = dist.powf(-power);
+            num += w * (nacc - acc) / dx;
+            den += w;
+        }
+        if den > 0.0 {
+            grad[i] = num / den;
+        }
+    }
+    grad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_linear_slope() {
+        // acc = 2x + 0.5y: slopes should come out near (2, 0.5).
+        let f = |x: f64, y: f64| 2.0 * x + 0.5 * y;
+        let mut evaluated = Vec::new();
+        for &x in &[0.0, 0.25, 0.5, 0.75, 1.0] {
+            for &y in &[0.0, 0.5, 1.0] {
+                evaluated.push((vec![x, y], f(x, y)));
+            }
+        }
+        let p = vec![0.5, 0.5];
+        let g = idw_gradient(&p, f(0.5, 0.5), &evaluated, 6, 2.0);
+        assert!((g[0] - 2.0).abs() < 0.3, "gx {}", g[0]);
+        assert!((g[1] - 0.5).abs() < 0.3, "gy {}", g[1]);
+    }
+
+    #[test]
+    fn empty_evaluated_gives_zero() {
+        let g = idw_gradient(&[0.5, 0.5], 0.3, &[], 5, 2.0);
+        assert_eq!(g, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn axis_without_variation_gets_zero() {
+        // All neighbors share y -> dim 1 slope must be 0.
+        let evaluated = vec![
+            (vec![0.0, 0.5], 0.1),
+            (vec![1.0, 0.5], 0.9),
+        ];
+        let g = idw_gradient(&[0.5, 0.5], 0.5, &evaluated, 5, 2.0);
+        assert!(g[0] > 0.5);
+        assert_eq!(g[1], 0.0);
+    }
+
+    #[test]
+    fn closer_neighbors_dominate() {
+        // Near neighbor says slope +1, far neighbor says slope -1.
+        let evaluated = vec![
+            (vec![0.6], 0.6),  // dist 0.1, slope +1
+            (vec![1.0], 0.0),  // dist 0.5, slope -1
+        ];
+        let g = idw_gradient(&[0.5], 0.5, &evaluated, 2, 2.0);
+        assert!(g[0] > 0.0, "{}", g[0]);
+    }
+
+    #[test]
+    fn knn_truncates() {
+        let evaluated = vec![
+            (vec![0.51], 1.0), // nearest: slope big positive
+            (vec![0.9], 0.0),
+            (vec![1.0], 0.0),
+        ];
+        let g1 = idw_gradient(&[0.5], 0.5, &evaluated, 1, 2.0);
+        let g3 = idw_gradient(&[0.5], 0.5, &evaluated, 3, 2.0);
+        // With k=1 only the huge local slope survives.
+        assert!(g1[0] > g3[0]);
+    }
+}

@@ -1,0 +1,45 @@
+//! COMPASS-V feasible-configuration search (paper §IV) and baselines.
+//!
+//! The optimization problem (Eq. 2): find every configuration whose task
+//! accuracy meets the operator threshold τ,
+//! `F = { (c, Acc(c)) : c ∈ C, Acc(c) >= τ }` — *coverage* of the feasible
+//! region rather than convergence to a single optimum, because runtime
+//! adaptation needs a ladder of configurations to switch between.
+//!
+//! Components:
+//! * [`lhs`] — Latin Hypercube seeding (diverse initial coverage);
+//! * [`wilson`] — Wilson score intervals for progressive-budget early
+//!   stopping;
+//! * [`gradient`] — inverse-distance-weighted finite-difference gradient
+//!   estimation over the normalized space (Eq. 3);
+//! * [`compass_v`] — Algorithm 1: hill-climbing toward the feasible region,
+//!   breadth-first lateral expansion inside it;
+//! * [`grid`] / [`random_search`] — exhaustive and random baselines.
+
+pub mod budget;
+pub mod compass_v;
+pub mod gradient;
+pub mod grid;
+pub mod lhs;
+pub mod random_search;
+pub mod trace;
+pub mod wilson;
+
+pub use budget::BudgetSchedule;
+pub use compass_v::{CompassV, CompassVParams, SearchResult};
+pub use grid::{grid_search, GridResult};
+pub use random_search::random_search;
+pub use trace::TracePoint;
+
+use crate::configspace::{Config, ConfigSpace};
+
+/// Source of per-configuration Bernoulli accuracy observations.
+///
+/// `sample(space, cfg, n)` draws `n` fresh evaluation samples (e.g. `n`
+/// dataset items pushed through the workflow under `cfg`) and returns how
+/// many succeeded. Implementations must be deterministic given their seed
+/// and must return *fresh* draws on repeated calls (progressive budgeting
+/// accumulates them).
+pub trait Evaluator {
+    fn sample(&mut self, space: &ConfigSpace, cfg: &Config, n: u32) -> u32;
+}

@@ -1,0 +1,50 @@
+//! Anytime search traces (paper Fig. 3): feasible-found vs samples used.
+
+/// One point of the anytime curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TracePoint {
+    /// Total evaluation samples consumed so far.
+    pub samples: u64,
+    /// Feasible configurations discovered so far.
+    pub found: usize,
+}
+
+/// Grid-search best/worst envelopes for the convergence plot shading.
+///
+/// Best case: the exhaustive search happens to evaluate every feasible
+/// configuration first; worst case: it evaluates them all last. Both
+/// consume the full `b_max` per configuration (the exhaustive baseline).
+pub fn grid_envelope(
+    n_total: usize,
+    n_feasible: usize,
+    b_max: u32,
+) -> (Vec<TracePoint>, Vec<TracePoint>) {
+    let b = b_max as u64;
+    let best: Vec<TracePoint> = (0..=n_feasible)
+        .map(|i| TracePoint { samples: i as u64 * b, found: i })
+        .collect();
+    let infeasible = (n_total - n_feasible) as u64;
+    let mut worst = vec![TracePoint { samples: 0, found: 0 }];
+    worst.push(TracePoint { samples: infeasible * b, found: 0 });
+    worst.extend(
+        (1..=n_feasible)
+            .map(|i| TracePoint { samples: (infeasible + i as u64) * b, found: i }),
+    );
+    (best, worst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_shapes() {
+        let (best, worst) = grid_envelope(100, 10, 50);
+        assert_eq!(best.first().unwrap().found, 0);
+        assert_eq!(best.last().unwrap().found, 10);
+        assert_eq!(best.last().unwrap().samples, 500);
+        assert_eq!(worst.last().unwrap().samples, 100 * 50);
+        assert_eq!(worst[1].samples, 90 * 50);
+        assert_eq!(worst[1].found, 0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Wilson score confidence intervals for Bernoulli proportions.
+//!
+//! COMPASS-V classifies a configuration as feasible only when the interval
+//! lower bound clears τ, infeasible only when the upper bound falls below
+//! it, and otherwise escalates to the next budget level (paper §IV-B,
+//! "Progressive Evaluation").
+
+/// Two-sided Wilson score interval for `successes` out of `n` trials at
+/// critical value `z` (e.g. 1.96 for 95%).
+pub fn wilson_interval(successes: u32, n: u32, z: f64) -> (f64, f64) {
+    if n == 0 {
+        return (0.0, 1.0);
+    }
+    let n_f = n as f64;
+    let p = successes as f64 / n_f;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / n_f;
+    let center = (p + z2 / (2.0 * n_f)) / denom;
+    let half = (z / denom) * (p * (1.0 - p) / n_f + z2 / (4.0 * n_f * n_f)).sqrt();
+    ((center - half).max(0.0), (center + half).min(1.0))
+}
+
+/// Classification of a configuration against threshold τ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Classification {
+    /// CI lower bound > τ.
+    Feasible,
+    /// CI upper bound < τ.
+    Infeasible,
+    /// Interval straddles τ: needs more samples.
+    Uncertain,
+}
+
+/// Classify a (successes, n) observation against τ.
+pub fn classify(successes: u32, n: u32, tau: f64, z: f64) -> Classification {
+    let (lo, hi) = wilson_interval(successes, n, z);
+    if lo > tau {
+        Classification::Feasible
+    } else if hi < tau {
+        Classification::Infeasible
+    } else {
+        Classification::Uncertain
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_contains_point_estimate() {
+        for (s, n) in [(0u32, 10u32), (5, 10), (10, 10), (37, 100)] {
+            let (lo, hi) = wilson_interval(s, n, 1.96);
+            let p = s as f64 / n as f64;
+            assert!(lo <= p + 1e-12 && p <= hi + 1e-12, "{s}/{n}: [{lo},{hi}]");
+            assert!((0.0..=1.0).contains(&lo) && (0.0..=1.0).contains(&hi));
+        }
+    }
+
+    #[test]
+    fn interval_shrinks_with_n() {
+        let (lo1, hi1) = wilson_interval(6, 10, 1.96);
+        let (lo2, hi2) = wilson_interval(60, 100, 1.96);
+        let (lo3, hi3) = wilson_interval(600, 1000, 1.96);
+        assert!(hi1 - lo1 > hi2 - lo2);
+        assert!(hi2 - lo2 > hi3 - lo3);
+    }
+
+    #[test]
+    fn known_value() {
+        // Wilson 95% for 8/10: approx [0.490, 0.943].
+        let (lo, hi) = wilson_interval(8, 10, 1.959964);
+        assert!((lo - 0.4902).abs() < 5e-3, "lo {lo}");
+        assert!((hi - 0.9433).abs() < 5e-3, "hi {hi}");
+    }
+
+    #[test]
+    fn classification_boundaries() {
+        assert_eq!(classify(100, 100, 0.5, 1.96), Classification::Feasible);
+        assert_eq!(classify(0, 100, 0.5, 1.96), Classification::Infeasible);
+        assert_eq!(classify(50, 100, 0.5, 1.96), Classification::Uncertain);
+    }
+
+    #[test]
+    fn zero_trials_uncertain() {
+        assert_eq!(classify(0, 0, 0.5, 1.96), Classification::Uncertain);
+    }
+
+    #[test]
+    fn coverage_simulation() {
+        // Empirical coverage of the 95% interval should be >= ~93%.
+        use crate::util::Rng;
+        let mut rng = Rng::new(99);
+        let p = 0.7;
+        let n = 50u32;
+        let trials = 2000;
+        let mut covered = 0;
+        for _ in 0..trials {
+            let s = (0..n).filter(|_| rng.bernoulli(p)).count() as u32;
+            let (lo, hi) = wilson_interval(s, n, 1.96);
+            if lo <= p && p <= hi {
+                covered += 1;
+            }
+        }
+        assert!(covered as f64 / trials as f64 > 0.93, "coverage {covered}");
+    }
+}

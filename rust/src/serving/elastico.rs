@@ -1,0 +1,242 @@
+//! Elastico — the runtime adaptation controller (paper §III-B, §V).
+//!
+//! Decision rule on every load observation:
+//!
+//! * **upscale** (toward fast): if queue depth exceeds the current rung's
+//!   `N↑` threshold, step one rung down the ladder immediately (upscale
+//!   cooldown `t↑ ≈ 0`: violations are imminent, react now);
+//! * **downscale** (toward accurate): if depth has stayed below the
+//!   current rung's `N↓` threshold for a sustained window `t↓` (the
+//!   asymmetric hysteresis of §V-F), step one rung up.
+//!
+//! Multi-rung spikes are absorbed by repeated upscale steps on subsequent
+//! observations — with `t↑ = 0` and per-arrival observations this drops
+//! to the fastest sustainable rung within a handful of arrivals, matching
+//! the paper's "switches occur within seconds of load changes".
+
+use super::policy::ScalingPolicy;
+use crate::planner::Plan;
+
+/// The Elastico controller state machine.
+#[derive(Clone, Debug)]
+pub struct ElasticoPolicy {
+    plan: Plan,
+    current: usize,
+    /// Last time we moved toward fast (for t↑).
+    last_upscale_ms: f64,
+    /// Start of the current sustained-low-load window, if any.
+    low_since_ms: Option<f64>,
+    /// EWMA-smoothed queue depth: upscaling reacts to the instantaneous
+    /// depth (violations are imminent), downscaling to the smoothed depth
+    /// (so M/G/1 stochastic flutter around the threshold cannot defeat
+    /// the hysteresis window).
+    depth_ewma: f64,
+    /// EWMA weight for the smoothed depth.
+    pub ewma_alpha: f64,
+}
+
+impl ElasticoPolicy {
+    /// Start at the most accurate rung (paper: converges there under low
+    /// load; starting accurate maximizes quality until load says
+    /// otherwise).
+    pub fn new(plan: Plan) -> ElasticoPolicy {
+        let start = plan.most_accurate();
+        ElasticoPolicy {
+            plan,
+            current: start,
+            last_upscale_ms: f64::NEG_INFINITY,
+            low_since_ms: None,
+            depth_ewma: 0.0,
+            ewma_alpha: 0.15,
+        }
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// The rung Elastico would run under sustained queue depth `n` —
+    /// used by tests and the AQM validation experiment.
+    pub fn steady_state_for_depth(&self, depth: usize) -> usize {
+        // The deepest (slowest) rung whose upscale threshold tolerates n.
+        for idx in (0..self.plan.ladder.len()).rev() {
+            if depth as u64 <= self.plan.ladder[idx].upscale_threshold {
+                return idx;
+            }
+        }
+        0
+    }
+}
+
+impl ScalingPolicy for ElasticoPolicy {
+    fn decide(&mut self, now_ms: f64, queue_depth: usize) -> usize {
+        let depth = queue_depth as u64;
+        self.depth_ewma += self.ewma_alpha * (queue_depth as f64 - self.depth_ewma);
+        let cur = &self.plan.ladder[self.current];
+
+        // Upscale: instantaneous queue exceeded N↑ of the current rung.
+        if depth > cur.upscale_threshold && self.current > 0 {
+            if now_ms - self.last_upscale_ms >= self.plan.up_cooldown_ms {
+                self.current -= 1;
+                self.last_upscale_ms = now_ms;
+                self.low_since_ms = None;
+                // A spike invalidates the smoothed history as a
+                // downscale signal; restart it pessimistically.
+                self.depth_ewma = self.depth_ewma.max(queue_depth as f64);
+            }
+            return self.current;
+        }
+
+        // Downscale: smoothed depth within N↓ (Eq. 12: N * s̄(k+1) <=
+        // Δ(k+1) - h_s) sustained for the cooldown window t↓.
+        if self.current < self.plan.most_accurate() {
+            if let Some(thr) = cur.downscale_threshold {
+                // Rounded smoothed depth: an EWMA hovering at 0.2 under
+                // light load must still satisfy an N↓ = 0 threshold
+                // (strict comparison against a fractional EWMA would make
+                // the most-accurate rung unreachable).
+                if self.depth_ewma.round() <= thr as f64 + 1e-9 {
+                    match self.low_since_ms {
+                        None => self.low_since_ms = Some(now_ms),
+                        Some(t0) => {
+                            if now_ms - t0 >= self.plan.down_cooldown_ms {
+                                self.current += 1;
+                                self.low_since_ms = None;
+                            }
+                        }
+                    }
+                } else {
+                    // Load rebounded: restart the hysteresis window.
+                    self.low_since_ms = None;
+                }
+            }
+        }
+        self.current
+    }
+
+    fn current(&self) -> usize {
+        self.current
+    }
+
+    fn name(&self) -> String {
+        "Elastico".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{ConfigPolicy, Plan};
+
+    fn plan3() -> Plan {
+        let rung = |label: &str, acc: f64, mean: f64, p95: f64, up: u64, down: Option<u64>| {
+            ConfigPolicy {
+                label: label.into(),
+                config: vec![],
+                accuracy: acc,
+                mean_ms: mean,
+                p95_ms: p95,
+                queue_slack_ms: 0.0,
+                upscale_threshold: up,
+                downscale_threshold: down,
+            }
+        };
+        Plan {
+            slo_ms: 300.0,
+            slack_buffer_ms: 30.0,
+            up_cooldown_ms: 0.0,
+            down_cooldown_ms: 5000.0,
+            ladder: vec![
+                rung("fast", 0.76, 20.0, 30.0, 13, Some(4)),
+                rung("medium", 0.82, 45.0, 70.0, 5, Some(1)),
+                rung("accurate", 0.85, 90.0, 140.0, 1, None),
+            ],
+        }
+    }
+
+    #[test]
+    fn starts_most_accurate() {
+        let p = ElasticoPolicy::new(plan3());
+        assert_eq!(p.current(), 2);
+    }
+
+    #[test]
+    fn upscales_immediately_on_deep_queue() {
+        let mut p = ElasticoPolicy::new(plan3());
+        // Depth 9 > N↑2=1 -> step to medium; > N↑1=5 -> step to fast.
+        assert_eq!(p.decide(0.0, 9), 1);
+        assert_eq!(p.decide(1.0, 9), 0);
+        // Depth 9 <= N↑0=13 -> stays fast.
+        assert_eq!(p.decide(2.0, 9), 0);
+    }
+
+    /// Drive the policy with periodic observations of constant depth;
+    /// returns the rung after the last tick.
+    fn drive(p: &mut ElasticoPolicy, from_ms: f64, to_ms: f64, step_ms: f64, depth: usize) -> usize {
+        let mut t = from_ms;
+        let mut cur = p.current();
+        while t <= to_ms {
+            cur = p.decide(t, depth);
+            t += step_ms;
+        }
+        cur
+    }
+
+    #[test]
+    fn downscale_requires_sustained_low_load() {
+        let mut p = ElasticoPolicy::new(plan3());
+        p.decide(0.0, 20); // -> medium
+        p.decide(1.0, 20); // -> fast
+        assert_eq!(p.current(), 0);
+        // Low queue, but only briefly: no downscale within 2 s (< t↓=5s).
+        assert_eq!(drive(&mut p, 10.0, 2000.0, 20.0, 0), 0);
+        // Sustained idle: recovers one rung per t↓ window.
+        assert_eq!(drive(&mut p, 2020.0, 9000.0, 20.0, 0), 1);
+        assert_eq!(drive(&mut p, 9020.0, 16_000.0, 20.0, 0), 2);
+    }
+
+    #[test]
+    fn rebound_resets_hysteresis_window() {
+        let mut p = ElasticoPolicy::new(plan3());
+        p.decide(0.0, 20);
+        p.decide(1.0, 20); // fast
+        // 4 s of idle (window open but t↓ not reached)…
+        assert_eq!(drive(&mut p, 10.0, 4000.0, 20.0, 0), 0);
+        // …then a rebound burst above N↓0=4 resets the window…
+        drive(&mut p, 4020.0, 4400.0, 20.0, 12);
+        // …so 3 s more of idle still isn't enough,
+        assert_eq!(drive(&mut p, 4420.0, 7400.0, 20.0, 0), 0);
+        // but a further full window is.
+        assert_eq!(drive(&mut p, 7420.0, 13_500.0, 20.0, 0), 1);
+    }
+
+    #[test]
+    fn no_oscillation_at_threshold_boundary() {
+        // Depth oscillating around N↓0=4 must not flap configurations:
+        // at most the single EWMA-mediated downscale may occur.
+        let mut p = ElasticoPolicy::new(plan3());
+        p.decide(0.0, 20);
+        p.decide(1.0, 20); // fast
+        let mut switches = 0;
+        let mut last = p.current();
+        for i in 0..2000 {
+            let depth = if i % 2 == 0 { 3 } else { 5 }; // around N↓0=4
+            let now = 10.0 + i as f64 * 10.0;
+            let cur = p.decide(now, depth);
+            if cur != last {
+                switches += 1;
+                last = cur;
+            }
+        }
+        assert!(switches <= 1, "hysteresis should absorb boundary noise, saw {switches}");
+    }
+
+    #[test]
+    fn steady_state_mapping() {
+        let p = ElasticoPolicy::new(plan3());
+        assert_eq!(p.steady_state_for_depth(0), 2);
+        assert_eq!(p.steady_state_for_depth(1), 2);
+        assert_eq!(p.steady_state_for_depth(3), 1);
+        assert_eq!(p.steady_state_for_depth(20), 0);
+    }
+}

@@ -1,0 +1,85 @@
+//! The workflow executor side of the serving system.
+//!
+//! A [`RequestEngine`] executes one request under a ladder rung. The
+//! production engine ([`WorkflowEngine`]) resolves the rung to its
+//! configuration and drives a live [`Workflow`] over PJRT; [`MockEngine`]
+//! replays scripted service times for tests and harness benchmarks.
+
+use anyhow::Result;
+
+use crate::configspace::ConfigSpace;
+use crate::planner::Plan;
+use crate::workflows::{ExecOutcome, Workflow};
+
+/// Executes one request under ladder rung `idx`.
+pub trait RequestEngine {
+    fn execute(&mut self, idx: usize) -> Result<ExecOutcome>;
+
+    /// Rungs available (= plan ladder length).
+    fn rungs(&self) -> usize;
+}
+
+/// Production engine: plan rung -> configuration -> live workflow.
+pub struct WorkflowEngine<W: Workflow> {
+    workflow: W,
+    space: ConfigSpace,
+    plan: Plan,
+}
+
+impl<W: Workflow> WorkflowEngine<W> {
+    pub fn new(workflow: W, space: ConfigSpace, plan: Plan) -> Self {
+        WorkflowEngine { workflow, space, plan }
+    }
+}
+
+impl<W: Workflow> RequestEngine for WorkflowEngine<W> {
+    fn execute(&mut self, idx: usize) -> Result<ExecOutcome> {
+        let cfg = &self.plan.ladder[idx].config;
+        self.workflow.run(&self.space, cfg)
+    }
+
+    fn rungs(&self) -> usize {
+        self.plan.ladder.len()
+    }
+}
+
+/// Scripted engine for tests: per-rung busy-wait service times.
+pub struct MockEngine {
+    /// Service time per rung (ms).
+    pub service_ms: Vec<f64>,
+    /// Expected accuracy per rung.
+    pub accuracy: Vec<f64>,
+}
+
+impl RequestEngine for MockEngine {
+    fn execute(&mut self, idx: usize) -> Result<ExecOutcome> {
+        let deadline =
+            std::time::Instant::now() + std::time::Duration::from_secs_f64(self.service_ms[idx] / 1e3);
+        // Busy-wait: emulates CPU-bound inference (sleep would free the
+        // core and understate contention).
+        while std::time::Instant::now() < deadline {
+            std::hint::spin_loop();
+        }
+        Ok(ExecOutcome { accuracy: self.accuracy[idx], success: None })
+    }
+
+    fn rungs(&self) -> usize {
+        self.service_ms.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_engine_takes_time() {
+        let mut e = MockEngine { service_ms: vec![5.0, 20.0], accuracy: vec![0.7, 0.9] };
+        let t0 = std::time::Instant::now();
+        let out = e.execute(0).unwrap();
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(dt >= 4.5, "{dt}");
+        assert_eq!(out.accuracy, 0.7);
+        assert_eq!(e.rungs(), 2);
+    }
+}

@@ -1,0 +1,21 @@
+//! The inference-serving system (paper §III-B): a central request queue,
+//! a load monitor, the Elastico controller, and workflow executor
+//! threads — the online phase of Compass.
+//!
+//! The controller logic lives in [`policy`] and is shared verbatim with
+//! the discrete-event simulator ([`crate::sim`]), so simulated and live
+//! behavior can be compared 1:1.
+
+pub mod elastico;
+pub mod executor;
+pub mod monitor;
+pub mod policy;
+pub mod predictive;
+pub mod queue;
+pub mod server;
+
+pub use elastico::ElasticoPolicy;
+pub use predictive::PredictivePolicy;
+pub use policy::{ScalingPolicy, StaticPolicy};
+pub use queue::{QueueError, RequestQueue};
+pub use server::{serve, ServeOptions, ServeOutcome};

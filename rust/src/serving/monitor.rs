@@ -1,0 +1,99 @@
+//! The load monitor (paper §III-B): tracks queue depth and the arrival
+//! rate (EWMA over tick windows). Queue depth is the AQM's control
+//! signal; the arrival-rate estimate feeds reports and diagnostics.
+
+use std::sync::Mutex;
+
+use crate::util::stats::Ewma;
+
+struct MonitorState {
+    arrivals_total: u64,
+    last_total: u64,
+    last_tick_ms: f64,
+    rate_qps: Ewma,
+}
+
+/// Thread-safe load monitor.
+pub struct LoadMonitor {
+    state: Mutex<MonitorState>,
+}
+
+impl LoadMonitor {
+    pub fn new(alpha: f64) -> LoadMonitor {
+        LoadMonitor {
+            state: Mutex::new(MonitorState {
+                arrivals_total: 0,
+                last_total: 0,
+                last_tick_ms: 0.0,
+                rate_qps: Ewma::new(alpha),
+            }),
+        }
+    }
+
+    /// Record one arrival (called by the injector).
+    pub fn on_arrival(&self) {
+        self.state.lock().unwrap().arrivals_total += 1;
+    }
+
+    /// Tick the rate estimator; returns the EWMA arrival rate (qps).
+    pub fn tick(&self, now_ms: f64) -> f64 {
+        let mut s = self.state.lock().unwrap();
+        let dt = (now_ms - s.last_tick_ms).max(1e-6);
+        let newly = (s.arrivals_total - s.last_total) as f64;
+        s.last_total = s.arrivals_total;
+        s.last_tick_ms = now_ms;
+        let inst = newly / (dt / 1000.0);
+        s.rate_qps.push(inst)
+    }
+
+    /// Latest smoothed arrival-rate estimate.
+    pub fn rate_qps(&self) -> f64 {
+        self.state.lock().unwrap().rate_qps.get().unwrap_or(0.0)
+    }
+
+    pub fn arrivals_total(&self) -> u64 {
+        self.state.lock().unwrap().arrivals_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimates_steady_rate() {
+        let m = LoadMonitor::new(0.3);
+        // 10 arrivals per 100 ms tick = 100 qps.
+        let mut now = 0.0;
+        for _ in 0..50 {
+            for _ in 0..10 {
+                m.on_arrival();
+            }
+            now += 100.0;
+            m.tick(now);
+        }
+        let qps = m.rate_qps();
+        assert!((qps - 100.0).abs() < 5.0, "qps {qps}");
+        assert_eq!(m.arrivals_total(), 500);
+    }
+
+    #[test]
+    fn tracks_rate_changes() {
+        let m = LoadMonitor::new(0.5);
+        let mut now = 0.0;
+        for _ in 0..20 {
+            m.on_arrival();
+            now += 100.0;
+            m.tick(now); // 10 qps
+        }
+        let low = m.rate_qps();
+        for _ in 0..20 {
+            for _ in 0..8 {
+                m.on_arrival();
+            }
+            now += 100.0;
+            m.tick(now); // 80 qps
+        }
+        assert!(m.rate_qps() > low * 3.0);
+    }
+}

@@ -1,0 +1,59 @@
+//! Configuration-selection policies.
+//!
+//! A [`ScalingPolicy`] maps observed load (queue depth, time) to a rung of
+//! the Pareto ladder. The same trait drives the live server and the
+//! discrete-event simulator.
+
+/// A runtime configuration-selection policy over a ladder of `n` rungs
+/// (index 0 = fastest, `n-1` = most accurate).
+pub trait ScalingPolicy: Send {
+    /// Observe load and return the desired ladder index.
+    fn decide(&mut self, now_ms: f64, queue_depth: usize) -> usize;
+
+    /// Currently selected ladder index.
+    fn current(&self) -> usize;
+
+    /// Display name (reports/plots).
+    fn name(&self) -> String;
+}
+
+/// A fixed-configuration baseline (Static-Fast/Medium/Accurate, §VI-C).
+#[derive(Clone, Debug)]
+pub struct StaticPolicy {
+    idx: usize,
+    label: String,
+}
+
+impl StaticPolicy {
+    pub fn new(idx: usize, label: impl Into<String>) -> StaticPolicy {
+        StaticPolicy { idx, label: label.into() }
+    }
+}
+
+impl ScalingPolicy for StaticPolicy {
+    fn decide(&mut self, _now_ms: f64, _queue_depth: usize) -> usize {
+        self.idx
+    }
+
+    fn current(&self) -> usize {
+        self.idx
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_never_moves() {
+        let mut p = StaticPolicy::new(2, "Static-Accurate");
+        for t in 0..100 {
+            assert_eq!(p.decide(t as f64 * 10.0, t * 7), 2);
+        }
+        assert_eq!(p.name(), "Static-Accurate");
+    }
+}

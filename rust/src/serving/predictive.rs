@@ -1,0 +1,176 @@
+//! Predictive adaptation — the paper's §VIII future-work extension.
+//!
+//! The reactive AQM switches *after* queue depth crosses a threshold; by
+//! then several requests already carry the extra wait. This controller
+//! additionally tracks the short-horizon arrival-rate trend (EWMA slope)
+//! and switches *anticipatorily*: if the projected arrival rate over the
+//! next horizon exceeds the current rung's sustainable service rate, it
+//! upscales before the queue builds.
+//!
+//! It degrades gracefully to plain Elastico behavior when the trend
+//! estimate is flat (the thresholds still bound everything — prediction
+//! only moves the switch earlier, never later).
+
+use super::elastico::ElasticoPolicy;
+use super::policy::ScalingPolicy;
+use crate::planner::Plan;
+use crate::util::stats::Ewma;
+
+/// Elastico + arrival-trend anticipation.
+pub struct PredictivePolicy {
+    inner: ElasticoPolicy,
+    /// Smoothed inter-observation arrival rate (events/ms).
+    rate: Ewma,
+    rate_prev: Option<f64>,
+    /// Smoothed rate slope (events/ms²).
+    slope: Ewma,
+    last_obs_ms: f64,
+    last_depth: usize,
+    started: bool,
+    /// Prediction horizon (ms): how far ahead to project the rate.
+    pub horizon_ms: f64,
+    /// Safety factor on the sustainable rate (1.0 = exactly ρ=1).
+    pub target_utilization: f64,
+}
+
+impl PredictivePolicy {
+    pub fn new(plan: Plan) -> PredictivePolicy {
+        PredictivePolicy {
+            inner: ElasticoPolicy::new(plan),
+            rate: Ewma::new(0.2),
+            rate_prev: None,
+            slope: Ewma::new(0.2),
+            last_obs_ms: 0.0,
+            last_depth: 0,
+            started: false,
+            horizon_ms: 2_000.0,
+            target_utilization: 0.85,
+        }
+    }
+
+    /// Projected arrival rate (requests/ms) `horizon_ms` from now.
+    fn projected_rate(&self) -> f64 {
+        let r = self.rate.get().unwrap_or(0.0);
+        let s = self.slope.get().unwrap_or(0.0);
+        (r + s * self.horizon_ms).max(0.0)
+    }
+}
+
+impl ScalingPolicy for PredictivePolicy {
+    fn decide(&mut self, now_ms: f64, queue_depth: usize) -> usize {
+        // Rate estimation from depth deltas + elapsed time: arrivals seen
+        // by this observer = depth increase (departures are observed as
+        // decreases and clamp at 0 contribution). The first observation
+        // only anchors the clock — no meaningful dt exists yet.
+        if !self.started {
+            self.started = true;
+            self.last_obs_ms = now_ms;
+            self.last_depth = queue_depth;
+            return self.inner.decide(now_ms, queue_depth);
+        }
+        let dt = (now_ms - self.last_obs_ms).max(1e-3);
+        let newly = queue_depth.saturating_sub(self.last_depth) as f64;
+        self.last_obs_ms = now_ms;
+        self.last_depth = queue_depth;
+        let inst_rate = newly / dt;
+        let r = self.rate.push(inst_rate);
+        if let Some(p0) = self.rate_prev {
+            self.slope.push((r - p0) / dt);
+        }
+        self.rate_prev = Some(r);
+
+        // Reactive layer first (also updates hysteresis state).
+        let reactive = self.inner.decide(now_ms, queue_depth);
+
+        // Anticipatory layer: if the projected rate exceeds what the
+        // current rung can sustain, upscale one rung early.
+        let plan = self.inner.plan();
+        if reactive > 0 {
+            let svc_rate = self.target_utilization / plan.ladder[reactive].mean_ms;
+            // Guard against slope noise: anticipate only when the smoothed
+            // rate is already a substantial fraction of capacity AND the
+            // projection exceeds it.
+            let rate_now = self.rate.get().unwrap_or(0.0);
+            if rate_now > 0.5 * svc_rate && self.projected_rate() > svc_rate {
+                // Force one rung toward fast through the inner policy by
+                // reporting a depth just above its threshold.
+                let depth_over =
+                    plan.ladder[reactive].upscale_threshold as usize + 1;
+                return self.inner.decide(now_ms, depth_over);
+            }
+        }
+        reactive
+    }
+
+    fn current(&self) -> usize {
+        self.inner.current()
+    }
+
+    fn name(&self) -> String {
+        "Predictive".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{derive_plan, AqmParams, LatencyProfile, ProfiledConfig};
+
+    fn plan() -> Plan {
+        let mk = |label: &str, acc: f64, mean: f64| ProfiledConfig {
+            config: vec![],
+            label: label.into(),
+            accuracy: acc,
+            latency: LatencyProfile {
+                mean_ms: mean,
+                p50_ms: mean,
+                p95_ms: mean * 1.2,
+                runs: 10,
+            },
+        };
+        derive_plan(
+            &[mk("fast", 0.76, 10.0), mk("accurate", 0.85, 60.0)],
+            AqmParams::for_slo(400.0),
+        )
+    }
+
+    #[test]
+    fn starts_accurate_and_stays_under_light_load() {
+        let mut p = PredictivePolicy::new(plan());
+        for i in 0..200 {
+            let cur = p.decide(i as f64 * 100.0, if i % 7 == 0 { 1 } else { 0 });
+            assert_eq!(cur, 1, "light load must stay accurate");
+        }
+    }
+
+    #[test]
+    fn rising_rate_triggers_early_upscale() {
+        let mut p = PredictivePolicy::new(plan());
+        // Accelerating arrivals: depth grows 0,1,2,4,6,... while still
+        // below the reactive threshold — prediction should fire first.
+        let mut t = 0.0;
+        let mut upscaled_at_depth = None;
+        for step in 0..60 {
+            t += 20.0;
+            let depth = (step * step) / 120; // slow quadratic ramp
+            let cur = p.decide(t, depth);
+            if cur == 0 && upscaled_at_depth.is_none() {
+                upscaled_at_depth = Some(depth);
+            }
+        }
+        let reactive_thr = plan().ladder[1].upscale_threshold as usize;
+        let d = upscaled_at_depth.expect("never upscaled");
+        assert!(
+            d <= reactive_thr + 1,
+            "predictive upscale at depth {d} vs reactive threshold {reactive_thr}"
+        );
+    }
+
+    #[test]
+    fn spikes_still_handled_reactively() {
+        let mut p = PredictivePolicy::new(plan());
+        p.decide(0.0, 0);
+        let cur = p.decide(10.0, 50); // instant deep queue
+        assert_eq!(cur, 0);
+    }
+}

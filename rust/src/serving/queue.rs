@@ -1,0 +1,150 @@
+//! The central request queue (paper §III-B): a bounded, thread-safe FIFO
+//! buffering incoming inference requests between the arrival injector and
+//! the workflow executor.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Queue errors.
+#[derive(Debug, PartialEq, Eq)]
+pub enum QueueError {
+    /// Bounded capacity reached (admission control rejected the request).
+    Full,
+    /// Queue closed and drained.
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Thread-safe bounded FIFO with blocking pop.
+pub struct RequestQueue<T> {
+    inner: Mutex<Inner<T>>,
+    notify: Condvar,
+    capacity: usize,
+}
+
+impl<T> RequestQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        RequestQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            notify: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Enqueue; fails when full or closed.
+    pub fn push(&self, item: T) -> Result<(), QueueError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(QueueError::Closed);
+        }
+        if g.items.len() >= self.capacity {
+            return Err(QueueError::Full);
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop with timeout. `None` on timeout; `Err(Closed)` once
+    /// the queue is closed **and** drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<T>, QueueError> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Ok(Some(item));
+            }
+            if g.closed {
+                return Err(QueueError::Closed);
+            }
+            let (g2, res) = self.notify.wait_timeout(g, timeout).unwrap();
+            g = g2;
+            if res.timed_out() {
+                return Ok(g.items.pop_front());
+            }
+        }
+    }
+
+    /// Current depth (the load monitor's primary signal).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: producers fail afterwards; consumers drain what remains.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.notify.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(10);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop_timeout(Duration::from_millis(1)).unwrap(), Some(i));
+        }
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)).unwrap(), None);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let q = RequestQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(3), Err(QueueError::Full));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_errors() {
+        let q = RequestQueue::new(4);
+        q.push(1).unwrap();
+        q.close();
+        assert_eq!(q.push(2), Err(QueueError::Closed));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)).unwrap(), Some(1));
+        assert_eq!(
+            q.pop_timeout(Duration::from_millis(1)),
+            Err(QueueError::Closed)
+        );
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q = Arc::new(RequestQueue::new(100));
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..1000 {
+                while q2.push(i).is_err() {}
+            }
+            q2.close();
+        });
+        let mut got = Vec::new();
+        loop {
+            match q.pop_timeout(Duration::from_millis(50)) {
+                Ok(Some(v)) => got.push(v),
+                Ok(None) => {}
+                Err(QueueError::Closed) => break,
+                Err(e) => panic!("{e:?}"),
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..1000).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,308 @@
+//! The serving loop (paper Fig. 2, online phase): arrival injector →
+//! central queue → executor thread, with the controller observing load
+//! on every arrival, every dequeue and a periodic monitor tick.
+//!
+//! Threading: PJRT handles are `!Send`, so the engine is *constructed
+//! inside* the executor thread from a `Send` factory closure. The policy
+//! is shared behind a mutex (decisions are microseconds; the lock is
+//! uncontended relative to service times).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::executor::RequestEngine;
+use super::monitor::LoadMonitor;
+use super::policy::ScalingPolicy;
+use super::queue::{QueueError, RequestQueue};
+use crate::metrics::{RequestRecord, SwitchEvent};
+
+/// Serving run options.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Queue capacity (admission control bound).
+    pub queue_capacity: usize,
+    /// Monitor tick period (ms) — drives hysteresis progress when idle.
+    pub tick_ms: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { queue_capacity: 4096, tick_ms: 20 }
+    }
+}
+
+/// Result of a serving run.
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    pub records: Vec<RequestRecord>,
+    pub switches: Vec<SwitchEvent>,
+    /// Requests rejected by admission control (queue full).
+    pub rejected: usize,
+    /// Mean smoothed arrival rate at end of run (diagnostics).
+    pub final_rate_qps: f64,
+}
+
+/// Shared policy state: decisions + switch audit trail.
+struct PolicyCell {
+    policy: Box<dyn ScalingPolicy>,
+    observed: usize,
+    switches: Vec<SwitchEvent>,
+}
+
+impl PolicyCell {
+    fn observe(&mut self, now_ms: f64, depth: usize) -> usize {
+        let next = self.policy.decide(now_ms, depth);
+        if next != self.observed {
+            self.switches.push(SwitchEvent {
+                at_ms: now_ms,
+                from_idx: self.observed,
+                to_idx: next,
+            });
+            self.observed = next;
+        }
+        next
+    }
+}
+
+/// Run a serving experiment.
+///
+/// * `make_engine` is called **inside** the executor thread (PJRT is
+///   thread-bound).
+/// * `arrivals` are offsets in seconds from run start; the injector
+///   sleeps them out in real time (service times are real compute, so
+///   time cannot be compressed without changing utilization).
+pub fn serve<F, E>(
+    make_engine: F,
+    policy: Box<dyn ScalingPolicy>,
+    arrivals: &[f64],
+    opts: &ServeOptions,
+) -> Result<ServeOutcome>
+where
+    F: FnOnce() -> Result<E> + Send,
+    E: RequestEngine,
+{
+    // The run clock starts only once the engine is built: PJRT model
+    // compilation takes seconds and must not masquerade as queueing
+    // delay. The executor thread sets `start` after `make_engine`
+    // returns; the injector and monitor wait on it.
+    let start_cell: Arc<(Mutex<Option<Instant>>, Condvar)> =
+        Arc::new((Mutex::new(None), Condvar::new()));
+    let wait_start = {
+        let cell = start_cell.clone();
+        move || -> Instant {
+            let (lock, cv) = &*cell;
+            let mut g = lock.lock().unwrap();
+            while g.is_none() {
+                g = cv.wait(g).unwrap();
+            }
+            g.unwrap()
+        }
+    };
+
+    let queue: Arc<RequestQueue<(u64, f64)>> =
+        Arc::new(RequestQueue::new(opts.queue_capacity));
+    let monitor = Arc::new(LoadMonitor::new(0.3));
+    let initial = policy.current();
+    let cell = Arc::new(Mutex::new(PolicyCell {
+        policy,
+        observed: initial,
+        switches: Vec::new(),
+    }));
+    let done = Arc::new(AtomicBool::new(false));
+    let rejected = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+
+    std::thread::scope(|scope| -> Result<ServeOutcome> {
+        // ---- monitor tick thread: keeps hysteresis moving when idle.
+        {
+            let queue = queue.clone();
+            let cell = cell.clone();
+            let monitor = monitor.clone();
+            let done = done.clone();
+            let tick = opts.tick_ms;
+            let wait_start = wait_start.clone();
+            scope.spawn(move || {
+                let start = wait_start();
+                while !done.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(tick));
+                    let t = start.elapsed().as_secs_f64() * 1e3;
+                    monitor.tick(t);
+                    cell.lock().unwrap().observe(t, queue.len());
+                }
+            });
+        }
+
+        // ---- arrival injector.
+        {
+            let queue = queue.clone();
+            let cell = cell.clone();
+            let monitor = monitor.clone();
+            let rejected = rejected.clone();
+            let arrivals = arrivals.to_vec();
+            let wait_start = wait_start.clone();
+            scope.spawn(move || {
+                let start = wait_start();
+                for (id, &t_s) in arrivals.iter().enumerate() {
+                    let target = Duration::from_secs_f64(t_s);
+                    let elapsed = start.elapsed();
+                    if target > elapsed {
+                        std::thread::sleep(target - elapsed);
+                    }
+                    let t = start.elapsed().as_secs_f64() * 1e3;
+                    monitor.on_arrival();
+                    match queue.push((id as u64, t)) {
+                        Ok(()) => {
+                            cell.lock().unwrap().observe(t, queue.len());
+                        }
+                        Err(QueueError::Full) => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(QueueError::Closed) => break,
+                    }
+                }
+                queue.close();
+            });
+        }
+
+        // ---- executor (single server, as in the paper's testbed).
+        let records = {
+            let queue = queue.clone();
+            let cell = cell.clone();
+            let start_cell2 = start_cell.clone();
+            let handle = scope.spawn(move || -> Result<Vec<RequestRecord>> {
+                // Build (and PJRT-compile) the engine, then release the
+                // run clock.
+                let engine = make_engine();
+                let start = Instant::now();
+                {
+                    let (lock, cv) = &*start_cell2;
+                    *lock.lock().unwrap() = Some(start);
+                    cv.notify_all();
+                }
+                let mut engine = engine?;
+                let now_ms = move || start.elapsed().as_secs_f64() * 1e3;
+                let mut records = Vec::new();
+                loop {
+                    match queue.pop_timeout(Duration::from_millis(50)) {
+                        Ok(Some((id, arrival_ms))) => {
+                            let t_start = now_ms();
+                            // Switches take effect at dequeue.
+                            let idx = cell
+                                .lock()
+                                .unwrap()
+                                .observe(t_start, queue.len());
+                            let out = engine.execute(idx)?;
+                            let t_fin = now_ms();
+                            records.push(RequestRecord {
+                                id,
+                                arrival_ms,
+                                start_ms: t_start,
+                                finish_ms: t_fin,
+                                config_idx: idx,
+                                accuracy: out.accuracy,
+                                success: out.success,
+                            });
+                            cell.lock().unwrap().observe(t_fin, queue.len());
+                        }
+                        Ok(None) => {}
+                        Err(QueueError::Closed) => break,
+                        Err(QueueError::Full) => unreachable!(),
+                    }
+                }
+                Ok(records)
+            });
+            let r = handle.join().expect("executor panicked")?;
+            done.store(true, Ordering::Relaxed);
+            r
+        };
+
+        let switches = {
+            let cell = cell.lock().unwrap();
+            cell.switches.clone()
+        };
+        Ok(ServeOutcome {
+            records,
+            switches,
+            rejected: rejected.load(Ordering::Relaxed),
+            final_rate_qps: monitor.rate_qps(),
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::executor::MockEngine;
+    use crate::serving::policy::StaticPolicy;
+
+    #[test]
+    fn serves_all_requests_fifo() {
+        let arrivals: Vec<f64> = (0..40).map(|i| i as f64 * 0.005).collect();
+        let out = serve(
+            || {
+                Ok(MockEngine {
+                    service_ms: vec![2.0],
+                    accuracy: vec![0.8],
+                })
+            },
+            Box::new(StaticPolicy::new(0, "fast")),
+            &arrivals,
+            &ServeOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(out.records.len(), 40);
+        assert_eq!(out.rejected, 0);
+        let mut by_start = out.records.clone();
+        by_start.sort_by(|a, b| a.start_ms.partial_cmp(&b.start_ms).unwrap());
+        for w in by_start.windows(2) {
+            assert!(w[1].arrival_ms >= w[0].arrival_ms - 1e-6, "FIFO violated");
+            assert!(w[1].start_ms >= w[0].finish_ms - 1.0, "single-server violated");
+        }
+    }
+
+    #[test]
+    fn overload_builds_queue_latency() {
+        // 10 ms service, arrivals every 4 ms -> queue grows, latency >>
+        // service time by the tail of the run.
+        let arrivals: Vec<f64> = (0..50).map(|i| i as f64 * 0.004).collect();
+        let out = serve(
+            || {
+                Ok(MockEngine {
+                    service_ms: vec![10.0],
+                    accuracy: vec![0.8],
+                })
+            },
+            Box::new(StaticPolicy::new(0, "only")),
+            &arrivals,
+            &ServeOptions::default(),
+        )
+        .unwrap();
+        let last = out.records.iter().max_by_key(|r| r.id).unwrap();
+        assert!(
+            last.latency_ms() > 100.0,
+            "tail latency {} should reflect queueing",
+            last.latency_ms()
+        );
+    }
+
+    #[test]
+    fn admission_control_rejects_when_full() {
+        let arrivals: Vec<f64> = (0..30).map(|i| i as f64 * 0.001).collect();
+        let out = serve(
+            || {
+                Ok(MockEngine {
+                    service_ms: vec![20.0],
+                    accuracy: vec![0.8],
+                })
+            },
+            Box::new(StaticPolicy::new(0, "only")),
+            &arrivals,
+            &ServeOptions { queue_capacity: 4, tick_ms: 10 },
+        )
+        .unwrap();
+        assert!(out.rejected > 0);
+        assert_eq!(out.records.len() + out.rejected, 30);
+    }
+}

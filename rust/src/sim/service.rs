@@ -1,0 +1,132 @@
+//! Service-time models for the simulator.
+//!
+//! The Planner's profiles give (mean, p95) per configuration; a lognormal
+//! is fitted to both moments — the standard heavy-tail model for LLM
+//! serving times (latency varies with input/output length, §III-A).
+
+use crate::planner::Plan;
+use crate::util::Rng;
+
+/// Samples per-request service times (ms) for a ladder index.
+pub trait ServiceModel {
+    fn sample_ms(&self, idx: usize, rng: &mut Rng) -> f64;
+
+    /// Mean service time of a rung (for utilization math).
+    fn mean_ms(&self, idx: usize) -> f64;
+}
+
+/// Lognormal fitted to (mean, p95) per rung.
+#[derive(Clone, Debug)]
+pub struct LognormalService {
+    /// Per-rung (mu, sigma) in log-space.
+    params: Vec<(f64, f64)>,
+    means: Vec<f64>,
+}
+
+/// Solve lognormal (mu, sigma) matching a mean and a p95.
+///
+/// mean = exp(mu + sigma^2/2), p95 = exp(mu + z95 * sigma) with
+/// z95 = 1.6449. Substituting gives a quadratic in sigma; the smaller
+/// root is taken (the larger one puts most mass at ~0, which is not a
+/// service-time shape). Falls back to near-deterministic when p95 is not
+/// meaningfully above the mean.
+pub fn fit_lognormal(mean: f64, p95: f64) -> (f64, f64) {
+    assert!(mean > 0.0);
+    let z = 1.6449;
+    let ratio = (p95 / mean).max(1.0 + 1e-9);
+    // sigma^2/2 - z*sigma + ln(p95/mean) = 0.
+    let disc = z * z - 2.0 * ratio.ln();
+    let sigma = if disc <= 0.0 {
+        z // cap: extremely heavy tail
+    } else {
+        (z - disc.sqrt()).max(1e-6)
+    };
+    let mu = mean.ln() - sigma * sigma / 2.0;
+    (mu, sigma)
+}
+
+impl LognormalService {
+    /// Fit per-rung models from a plan; `min_cv` lower-bounds the
+    /// coefficient of variation (keeps M/G/1 behavior realistic even for
+    /// rungs profiled with nearly deterministic latency).
+    pub fn from_plan(plan: &Plan, min_cv: f64) -> LognormalService {
+        let params = plan
+            .ladder
+            .iter()
+            .map(|p| {
+                let sigma_floor = (min_cv * min_cv + 1.0_f64).ln().sqrt();
+                let (_mu, sigma) = fit_lognormal(p.mean_ms, p.p95_ms);
+                let sigma = sigma.max(sigma_floor);
+                let mu = p.mean_ms.ln() - sigma * sigma / 2.0;
+                (mu, sigma)
+            })
+            .collect();
+        LognormalService {
+            params,
+            means: plan.ladder.iter().map(|p| p.mean_ms).collect(),
+        }
+    }
+}
+
+impl ServiceModel for LognormalService {
+    fn sample_ms(&self, idx: usize, rng: &mut Rng) -> f64 {
+        let (mu, sigma) = self.params[idx];
+        (mu + sigma * rng.normal()).exp()
+    }
+
+    fn mean_ms(&self, idx: usize) -> f64 {
+        self.means[idx]
+    }
+}
+
+/// Deterministic service (tests / M/D/1 analyses).
+#[derive(Clone, Debug)]
+pub struct DeterministicService {
+    pub means: Vec<f64>,
+}
+
+impl ServiceModel for DeterministicService {
+    fn sample_ms(&self, idx: usize, _rng: &mut Rng) -> f64 {
+        self.means[idx]
+    }
+
+    fn mean_ms(&self, idx: usize) -> f64 {
+        self.means[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_matches_moments() {
+        let (mu, sigma) = fit_lognormal(100.0, 180.0);
+        // Monte-Carlo check of both moments.
+        let mut rng = Rng::new(1);
+        let n = 200_000;
+        let mut xs: Vec<f64> = (0..n)
+            .map(|_| (mu + sigma * rng.normal()).exp())
+            .collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p95 = xs[(0.95 * n as f64) as usize];
+        assert!((mean - 100.0).abs() < 2.0, "mean {mean}");
+        assert!((p95 - 180.0).abs() < 5.0, "p95 {p95}");
+    }
+
+    #[test]
+    fn fit_handles_tight_tail() {
+        let (mu, sigma) = fit_lognormal(50.0, 50.0);
+        assert!(sigma < 0.01);
+        assert!((mu.exp() - 50.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn deterministic_is_deterministic() {
+        let d = DeterministicService { means: vec![10.0, 20.0] };
+        let mut rng = Rng::new(0);
+        assert_eq!(d.sample_ms(1, &mut rng), 20.0);
+        assert_eq!(d.mean_ms(0), 10.0);
+    }
+}

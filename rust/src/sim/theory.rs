@@ -1,0 +1,120 @@
+//! Analytical queueing formulas (M/M/1, M/G/1) used to validate the
+//! discrete-event simulator — the foundation the AQM's guarantees rest
+//! on (§V models the server as an M/G/1 queue).
+
+/// M/M/1 mean number in system: `ρ / (1 - ρ)`.
+pub fn mm1_mean_in_system(rho: f64) -> f64 {
+    assert!((0.0..1.0).contains(&rho));
+    rho / (1.0 - rho)
+}
+
+/// M/M/1 mean response time: `1 / (μ - λ)`.
+pub fn mm1_mean_response(lambda: f64, mu: f64) -> f64 {
+    assert!(lambda < mu);
+    1.0 / (mu - lambda)
+}
+
+/// M/G/1 mean waiting time (Pollaczek–Khinchine):
+/// `W = λ E[S²] / (2 (1 - ρ))`.
+pub fn mg1_mean_wait(lambda: f64, mean_s: f64, second_moment_s: f64) -> f64 {
+    let rho = lambda * mean_s;
+    assert!(rho < 1.0, "unstable queue (rho = {rho})");
+    lambda * second_moment_s / (2.0 * (1.0 - rho))
+}
+
+/// Second moment of a lognormal with given mean and sigma (log-space).
+pub fn lognormal_second_moment(mean: f64, sigma: f64) -> f64 {
+    // E[X²] = exp(2μ + 2σ²) with μ = ln(mean) - σ²/2.
+    let mu = mean.ln() - sigma * sigma / 2.0;
+    (2.0 * mu + 2.0 * sigma * sigma).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RequestRecord;
+    use crate::planner::{ConfigPolicy, Plan};
+    use crate::serving::StaticPolicy;
+    use crate::sim::{simulate, DeterministicService, LognormalService};
+    use crate::workload::{generate_arrivals, Pattern, WorkloadSpec};
+
+    fn plan_one(mean: f64, p95: f64) -> Plan {
+        Plan {
+            slo_ms: 1e9,
+            slack_buffer_ms: 0.0,
+            up_cooldown_ms: 0.0,
+            down_cooldown_ms: 0.0,
+            ladder: vec![ConfigPolicy {
+                label: "only".into(),
+                config: vec![],
+                accuracy: 0.8,
+                mean_ms: mean,
+                p95_ms: p95,
+                queue_slack_ms: 0.0,
+                upscale_threshold: u64::MAX,
+                downscale_threshold: None,
+            }],
+        }
+    }
+
+    fn mean_wait(records: &[RequestRecord]) -> f64 {
+        records.iter().map(|r| r.wait_ms()).sum::<f64>() / records.len() as f64
+    }
+
+    #[test]
+    fn simulator_matches_md1_wait() {
+        // M/D/1: W = ρ s̄ / (2 (1 - ρ)). λ = 0.04/ms, s = 15 ms, ρ = 0.6.
+        let plan = plan_one(15.0, 15.0);
+        let arrivals = generate_arrivals(&WorkloadSpec {
+            base_qps: 40.0,
+            duration_s: 4000.0,
+            pattern: Pattern::Steady,
+            seed: 17,
+        });
+        let svc = DeterministicService { means: vec![15.0] };
+        let mut pol = StaticPolicy::new(0, "only");
+        let out = simulate(&arrivals, &plan, &mut pol, &svc, 17);
+        let measured = mean_wait(&out.records);
+        let rho: f64 = 0.04 * 15.0;
+        let expect = rho * 15.0 / (2.0 * (1.0 - rho));
+        assert!(
+            (measured - expect).abs() / expect < 0.15,
+            "M/D/1 wait: measured {measured:.2} expect {expect:.2}"
+        );
+    }
+
+    #[test]
+    fn simulator_matches_pollaczek_khinchine() {
+        // M/G/1 with lognormal service fitted to (mean 20, p95 36).
+        let plan = plan_one(20.0, 36.0);
+        let arrivals = generate_arrivals(&WorkloadSpec {
+            base_qps: 30.0, // λ = 0.03/ms, ρ = 0.6
+            duration_s: 6000.0,
+            pattern: Pattern::Steady,
+            seed: 23,
+        });
+        let svc = LognormalService::from_plan(&plan, 0.0);
+        let mut pol = StaticPolicy::new(0, "only");
+        let out = simulate(&arrivals, &plan, &mut pol, &svc, 23);
+        let measured = mean_wait(&out.records);
+
+        let sigma = crate::sim::service::fit_lognormal(20.0, 36.0).1;
+        let m2 = lognormal_second_moment(20.0, sigma);
+        let expect = mg1_mean_wait(0.03, 20.0, m2);
+        assert!(
+            (measured - expect).abs() / expect < 0.2,
+            "P-K wait: measured {measured:.2} expect {expect:.2}"
+        );
+    }
+
+    #[test]
+    fn closed_forms_sane() {
+        assert!((mm1_mean_in_system(0.5) - 1.0).abs() < 1e-12);
+        assert!((mm1_mean_response(0.5, 1.0) - 2.0).abs() < 1e-12);
+        // Deterministic service: E[S²] = s̄², W = ρ s̄ / (2(1-ρ)).
+        let w = mg1_mean_wait(0.05, 10.0, 100.0);
+        assert!((w - 0.05 * 100.0 / (2.0 * 0.5)).abs() < 1e-12);
+        // Lognormal second moment at sigma -> 0 approaches mean².
+        assert!((lognormal_second_moment(10.0, 1e-9) - 100.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,77 @@
+//! Mini benchmark harness (no `criterion` offline — DESIGN.md §6).
+//!
+//! `cargo bench` targets set `harness = false` and drive this: warmup,
+//! timed iterations, mean / p50 / p95 reporting, and an optional
+//! `COMPASS_BENCH_FAST=1` mode so CI can smoke the benches quickly.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One benchmark timing result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary_us: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary_us;
+        format!(
+            "{:<44} {:>7} iters  mean {:>10.1} µs  p50 {:>10.1} µs  p95 {:>10.1} µs",
+            self.name, self.iters, s.mean, s.p50, s.p95
+        )
+    }
+}
+
+/// Whether benches should run in abbreviated mode.
+pub fn fast_mode() -> bool {
+    std::env::var("COMPASS_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    let (warmup, iters) = if fast_mode() {
+        (warmup.min(1), iters.clamp(1, 5))
+    } else {
+        (warmup, iters.max(1))
+    };
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        summary_us: Summary::of(&samples),
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Group banner for bench output.
+pub fn group(title: &str) {
+    println!("\n== {title} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop+sum", 1, 10, || {
+            let s: u64 = (0..1000).sum();
+            std::hint::black_box(s);
+        });
+        assert_eq!(r.iters, if fast_mode() { 5 } else { 10 });
+        assert!(r.summary_us.mean >= 0.0);
+    }
+}

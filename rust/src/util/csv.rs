@@ -1,0 +1,83 @@
+//! Tiny CSV writer for experiment outputs (`results/*.csv`).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer with RFC-4180 quoting.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file and write the header row.
+    pub fn create(path: &Path, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        write_row(&mut w, header)?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    /// Write one data row (must match the header width).
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        assert_eq!(fields.len(), self.cols, "csv row width mismatch");
+        let refs: Vec<&str> = fields.iter().map(|s| s.as_str()).collect();
+        write_row(&mut self.w, &refs)
+    }
+
+    /// Convenience: format any Display values as a row.
+    pub fn rowd(&mut self, fields: &[&dyn std::fmt::Display]) -> std::io::Result<()> {
+        let owned: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+fn write_row<W: Write>(w: &mut W, fields: &[&str]) -> std::io::Result<()> {
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            write!(w, ",")?;
+        }
+        if f.contains([',', '"', '\n']) {
+            write!(w, "\"{}\"", f.replace('"', "\"\""))?;
+        } else {
+            write!(w, "{f}")?;
+        }
+    }
+    writeln!(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_quotes() {
+        let dir = std::env::temp_dir().join("compass_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut c = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            c.row(&["1".into(), "x,y".into()]).unwrap();
+            c.rowd(&[&2.5, &"q\"uote"]).unwrap();
+            c.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n2.5,\"q\"\"uote\"\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn rejects_wrong_width() {
+        let dir = std::env::temp_dir().join("compass_csv_test2");
+        let path = dir.join("t.csv");
+        let mut c = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        let _ = c.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,35 @@
+//! Std-only substrates: deterministic RNG, JSON, CSV, statistics, timing.
+//!
+//! The offline build environment provides no `rand`, `serde` or `criterion`
+//! (DESIGN.md §6), so the pieces this crate needs are implemented here with
+//! an emphasis on determinism — every stochastic component in Compass is
+//! seeded, which makes search traces, simulations and serving experiments
+//! reproducible bit-for-bit.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::{percentile, OnlineStats, Summary};
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Wall-clock seconds since the Unix epoch (coarse; for run stamping only).
+pub fn unix_time() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+/// Create the results directory used by experiments, returning its path.
+pub fn results_dir() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from(
+        std::env::var("COMPASS_RESULTS_DIR").unwrap_or_else(|_| "results".into()),
+    );
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}

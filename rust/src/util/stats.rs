@@ -1,0 +1,203 @@
+//! Statistics substrates: online moments, percentiles, latency summaries.
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Linear-interpolated percentile of an **unsorted** sample (q in [0,1]).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Percentile of an already-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Latency summary over a sample (all values in the sample's unit).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            count: v.len(),
+            mean: v.iter().sum::<f64>() / v.len() as f64,
+            p50: percentile_sorted(&v, 0.50),
+            p90: percentile_sorted(&v, 0.90),
+            p95: percentile_sorted(&v, 0.95),
+            p99: percentile_sorted(&v, 0.99),
+            max: *v.last().unwrap(),
+        }
+    }
+}
+
+/// Exponentially-weighted moving average (load-monitor substrate).
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` in (0,1]: weight of the newest observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        Ewma { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => prev + self.alpha * (x - prev),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Empirical CDF points `(value, fraction <= value)` for plotting (Fig. 6).
+pub fn cdf_points(xs: &[f64], n_points: usize) -> Vec<(f64, f64)> {
+    if xs.is_empty() {
+        return vec![];
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    let step = (n.max(2) - 1) as f64 / (n_points.max(2) - 1) as f64;
+    (0..n_points.max(2))
+        .map(|i| {
+            let idx = ((i as f64 * step).round() as usize).min(n - 1);
+            (v[idx], (idx + 1) as f64 / n as f64)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_match_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut s = OnlineStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_fields_ordered() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.count, 1000);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99);
+        assert_eq!(s.max, 999.0);
+    }
+
+    #[test]
+    fn summary_of_empty() {
+        assert_eq!(Summary::of(&[]).count, 0);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..30 {
+            e.push(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        let pts = cdf_points(&xs, 10);
+        for w in pts.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert!((pts.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+}

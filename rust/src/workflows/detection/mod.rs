@@ -1,0 +1,21 @@
+//! The object-detection cascade executor (paper §VI-B): a lightweight
+//! detector screens every image; low-confidence predictions are forwarded
+//! to a heavier verifier.
+//!
+//! The gate runs on **real compute**: the detector artifact's max cell
+//! logit is z-scored online (per detector) and squashed to (0,1), and the
+//! configured confidence threshold decides whether the verifier artifact
+//! runs — so the fraction of requests paying the verifier cost moves with
+//! the threshold exactly as in the paper's cascade. Accuracy accounting
+//! uses the calibrated mAP landscape (DESIGN.md §2).
+
+pub mod cascade;
+
+pub use cascade::DetectionWorkflow;
+
+/// Detector artifact names (≙ YOLOv8 n/s/m).
+pub const DETECTOR_NAMES: [&str; 3] = ["det-n", "det-s", "det-m"];
+
+/// Verifier options: none (cascade off) or a verifier artifact
+/// (≙ YOLOv8 m/l/x).
+pub const VERIFIER_NAMES: [&str; 4] = ["none", "ver-m", "ver-l", "ver-x"];

@@ -1,0 +1,40 @@
+//! Compound-AI workflow executors over the AOT artifacts.
+//!
+//! A workflow turns one request + one configuration into real PJRT
+//! compute (retriever / rerankers / generators for RAG; detector /
+//! verifier CNNs for the cascade). The serving layer measures the wall
+//! clock around [`Workflow::run`]; accuracy bookkeeping follows the
+//! calibrated model documented in DESIGN.md §2.
+
+pub mod detection;
+pub mod rag;
+
+use crate::configspace::{Config, ConfigSpace};
+
+/// Result of one workflow execution (latency is measured by the caller).
+#[derive(Clone, Copy, Debug)]
+pub struct ExecOutcome {
+    /// Expected accuracy of the configuration used.
+    pub accuracy: f64,
+    /// Whether this particular request succeeded (sampled/measured).
+    pub success: Option<bool>,
+}
+
+/// A runnable compound workflow bound to a configuration space.
+pub trait Workflow {
+    /// Execute one (generated) request under `cfg`.
+    fn run(&mut self, space: &ConfigSpace, cfg: &Config) -> anyhow::Result<ExecOutcome>;
+
+    /// Workflow name (for reports).
+    fn name(&self) -> &str;
+}
+
+impl<W: Workflow + ?Sized> crate::planner::ConfigRunner for W {
+    fn run_once(&mut self, space: &ConfigSpace, cfg: &Config) -> f64 {
+        let t0 = std::time::Instant::now();
+        if let Err(e) = self.run(space, cfg) {
+            panic!("workflow {} failed during profiling: {e:#}", self.name());
+        }
+        t0.elapsed().as_secs_f64() * 1e3
+    }
+}

@@ -1,0 +1,221 @@
+//! Synthetic retrieval corpus with planted ground truth.
+//!
+//! Each document is an embedding row plus a token sequence. A query is
+//! generated *from* its ground-truth document: the query embedding is the
+//! document embedding shrunk toward it plus Gaussian noise, so the
+//! planted document wins the real similarity race with a probability that
+//! rises with retriever-k — recall@k is measured, not assumed.
+
+use crate::util::Rng;
+
+/// Corpus dimensions match the retriever artifact (`retriever.hlo.txt`).
+pub const CORPUS_N: usize = 256;
+pub const EMBED_D: usize = 64;
+pub const DOC_TOKENS: usize = 32;
+pub const QUERY_TOKENS: usize = 16;
+pub const VOCAB: i32 = 256;
+
+/// The synthetic knowledge base.
+pub struct Corpus {
+    /// Row-major `[CORPUS_N, EMBED_D]` embeddings (unit-ish norm).
+    pub embeddings: Vec<f32>,
+    /// `[CORPUS_N, DOC_TOKENS]` token ids.
+    pub doc_tokens: Vec<i32>,
+    /// Query noise scale (full-norm distractor component).
+    pub query_noise: f64,
+    /// Query/doc signal strength range: each query draws its own
+    /// difficulty uniformly from this interval, which smooths recall@k
+    /// into the diminishing-returns curve of real retrieval
+    /// (calibration target: oracle::rag::retrieval_recall; DESIGN.md §2).
+    pub query_signal: (f64, f64),
+}
+
+/// One generated request.
+pub struct Query {
+    /// Planted relevant document id.
+    pub truth: usize,
+    pub embedding: Vec<f32>,
+    pub tokens: Vec<i32>,
+}
+
+impl Corpus {
+    /// Deterministically generate the corpus.
+    pub fn generate(seed: u64) -> Corpus {
+        let mut rng = Rng::new(seed);
+        let mut embeddings = Vec::with_capacity(CORPUS_N * EMBED_D);
+        for _ in 0..CORPUS_N * EMBED_D {
+            embeddings.push((rng.normal() / (EMBED_D as f64).sqrt()) as f32);
+        }
+        let mut doc_tokens = Vec::with_capacity(CORPUS_N * DOC_TOKENS);
+        for _ in 0..CORPUS_N * DOC_TOKENS {
+            doc_tokens.push(rng.below(VOCAB as u64) as i32);
+        }
+        Corpus {
+            embeddings,
+            doc_tokens,
+            // Calibrated so recall@k spans ~0.5 (k=3) → ~0.97+ (k=50),
+            // mirroring oracle::rag::retrieval_recall.
+            query_noise: 1.0,
+            query_signal: (0.25, 0.55),
+        }
+    }
+
+    /// Embedding row of document `i`.
+    pub fn embedding(&self, i: usize) -> &[f32] {
+        &self.embeddings[i * EMBED_D..(i + 1) * EMBED_D]
+    }
+
+    /// Token row of document `i`.
+    pub fn tokens(&self, i: usize) -> &[i32] {
+        &self.doc_tokens[i * DOC_TOKENS..(i + 1) * DOC_TOKENS]
+    }
+
+    /// Generate a query whose ground truth is a random document.
+    pub fn sample_query(&self, rng: &mut Rng) -> Query {
+        let truth = rng.choice_index(CORPUS_N);
+        let doc = self.embedding(truth);
+        // Per-query difficulty: the signal strength of the planted doc.
+        let signal = rng.range_f64(self.query_signal.0, self.query_signal.1);
+        let embedding: Vec<f32> = doc
+            .iter()
+            .map(|&x| {
+                (signal * x as f64
+                    + self.query_noise * rng.normal() / (EMBED_D as f64).sqrt())
+                    as f32
+            })
+            .collect();
+        // Query tokens: first half of the doc tokens with perturbations.
+        let dt = self.tokens(truth);
+        let tokens: Vec<i32> = (0..QUERY_TOKENS)
+            .map(|j| {
+                if rng.bernoulli(0.25) {
+                    rng.below(VOCAB as u64) as i32
+                } else {
+                    dt[j % DOC_TOKENS]
+                }
+            })
+            .collect();
+        Query { truth, embedding, tokens }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Host-side replica of the retriever scoring (dot products) used to
+    /// validate recall calibration without PJRT.
+    fn top_k_host(corpus: &Corpus, query: &[f32], k: usize) -> Vec<usize> {
+        let mut scores: Vec<(f64, usize)> = (0..CORPUS_N)
+            .map(|i| {
+                let dot: f64 = corpus
+                    .embedding(i)
+                    .iter()
+                    .zip(query)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum();
+                (dot, i)
+            })
+            .collect();
+        scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scores.into_iter().take(k).map(|(_, i)| i).collect()
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Corpus::generate(3);
+        let b = Corpus::generate(3);
+        assert_eq!(a.embeddings, b.embeddings);
+        assert_eq!(a.doc_tokens, b.doc_tokens);
+    }
+
+    #[test]
+    fn recall_rises_with_k() {
+        let corpus = Corpus::generate(7);
+        let mut rng = Rng::new(11);
+        let trials = 400;
+        let mut recall = |k: usize| {
+            let mut rng2 = rng.fork(k as u64);
+            let hits = (0..trials)
+                .filter(|_| {
+                    let q = corpus.sample_query(&mut rng2);
+                    top_k_host(&corpus, &q.embedding, k).contains(&q.truth)
+                })
+                .count();
+            hits as f64 / trials as f64
+        };
+        let r3 = recall(3);
+        let r10 = recall(10);
+        let r50 = recall(50);
+        assert!(r3 < r10 && r10 < r50, "{r3} {r10} {r50}");
+        assert!(r3 > 0.45 && r3 < 0.90, "recall@3 {r3}");
+        assert!(r50 > 0.90, "recall@50 {r50}");
+    }
+
+    #[test]
+    fn query_tokens_overlap_doc() {
+        let corpus = Corpus::generate(1);
+        let mut rng = Rng::new(2);
+        let q = corpus.sample_query(&mut rng);
+        let dt = corpus.tokens(q.truth);
+        let overlap = q
+            .tokens
+            .iter()
+            .enumerate()
+            .filter(|(j, t)| dt[j % DOC_TOKENS] == **t)
+            .count();
+        assert!(overlap >= QUERY_TOKENS / 2);
+    }
+}
+
+#[cfg(test)]
+mod calib_scan {
+    use super::*;
+    use super::tests_helpers::top_k_host_pub as top_k_host;
+
+    #[test]
+    #[ignore]
+    fn scan() {
+        for (lo, hi) in [(0.14, 0.42), (0.20, 0.50), (0.25, 0.55), (0.18, 0.60), (0.22, 0.65)] {
+            let mut corpus = Corpus::generate(7);
+            corpus.query_signal = (lo, hi);
+            let mut rng = Rng::new(11);
+            let trials = 600;
+            let mut recall = |k: usize, rng: &mut Rng| {
+                let hits = (0..trials)
+                    .filter(|_| {
+                        let q = corpus.sample_query(rng);
+                        top_k_host(&corpus, &q.embedding, k).contains(&q.truth)
+                    })
+                    .count();
+                hits as f64 / trials as f64
+            };
+            let r3 = recall(3, &mut rng);
+            let r5 = recall(5, &mut rng);
+            let r10 = recall(10, &mut rng);
+            let r20 = recall(20, &mut rng);
+            let r50 = recall(50, &mut rng);
+            println!("({lo},{hi}): r3={r3:.3} r5={r5:.3} r10={r10:.3} r20={r20:.3} r50={r50:.3}");
+        }
+    }
+}
+
+#[cfg(test)]
+pub mod tests_helpers {
+    use super::*;
+    pub fn top_k_host_pub(corpus: &Corpus, query: &[f32], k: usize) -> Vec<usize> {
+        let mut scores: Vec<(f64, usize)> = (0..CORPUS_N)
+            .map(|i| {
+                let dot: f64 = corpus
+                    .embedding(i)
+                    .iter()
+                    .zip(query)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum();
+                (dot, i)
+            })
+            .collect();
+        scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scores.into_iter().take(k).map(|(_, i)| i).collect()
+    }
+}

@@ -1,0 +1,29 @@
+//! The RAG workflow executor (paper §II-A): retriever → reranker →
+//! generator, entirely over AOT artifacts on the PJRT request path.
+//!
+//! Request generation and accuracy accounting follow the substitution in
+//! DESIGN.md §2: the harness owns a synthetic corpus with a *planted*
+//! relevant document per query, so retrieval/rerank recall is **measured
+//! from real compute** (the planted document competes in the real
+//! similarity race and in the real cross-encoder scores), while the final
+//! generation step's correctness is sampled from the calibrated
+//! per-generator quality (random-weight LMs cannot answer questions).
+
+pub mod corpus;
+pub mod pipeline;
+
+pub use corpus::Corpus;
+pub use pipeline::RagWorkflow;
+
+/// Generator artifact names, fastest to most accurate (ladder order;
+/// aliases in the manifest map these to the paper's LLaMA3/Gemma3 sizes).
+pub const GENERATOR_NAMES: [&str; 6] =
+    ["gen-64", "gen-96", "gen-128", "gen-160", "gen-224", "gen-288"];
+
+/// Reranker artifact names (≙ MS-MARCO, BGE-base, BGE-v2).
+pub const RERANKER_NAMES: [&str; 3] = ["rr-48", "rr-96", "rr-160"];
+
+/// Reranker keep-strength: weight of true relevance vs cross-encoder
+/// score noise when ranking candidates (bigger reranker = sharper; the
+/// resulting keep-probabilities track `oracle::rag::RERANK_MISS`).
+pub const RERANK_ALPHA: [f64; 3] = [1.1, 1.7, 2.8];

@@ -1,0 +1,210 @@
+//! Workload generation (paper §VI-C): Poisson arrivals modulated by the
+//! evaluation's load patterns.
+//!
+//! * **Steady** — constant base rate;
+//! * **Spike** — sustained 4x increase during the middle third of the
+//!   run;
+//! * **Bursty** — random 2–5x bursts lasting 5–15 s throughout;
+//! * **Diurnal** — sinusoidal day-cycle (extension used by ablations).
+//!
+//! Arrival times are drawn from a non-homogeneous Poisson process via
+//! thinning, deterministically from the spec's seed.
+
+pub mod trace;
+
+use crate::util::Rng;
+
+/// Load pattern shapes. Factors multiply the base rate.
+#[derive(Clone, Debug)]
+pub enum Pattern {
+    Steady,
+    /// `factor`x load between `start_frac` and `end_frac` of the run.
+    Spike { factor: f64, start_frac: f64, end_frac: f64 },
+    /// Random bursts: factor in `factor`, duration in `burst_s`, spaced
+    /// by exponential gaps with mean `mean_gap_s`.
+    Bursty { factor: (f64, f64), burst_s: (f64, f64), mean_gap_s: f64 },
+    /// `1 + amplitude * sin(2π t / period_s)` (clamped at >= 0.05).
+    Diurnal { amplitude: f64, period_s: f64 },
+}
+
+impl Pattern {
+    /// The paper's spike pattern: 4x during the middle third.
+    pub fn paper_spike() -> Pattern {
+        Pattern::Spike { factor: 4.0, start_frac: 1.0 / 3.0, end_frac: 2.0 / 3.0 }
+    }
+
+    /// The paper's bursty pattern: 2–5x bursts of 5–15 s.
+    pub fn paper_bursty() -> Pattern {
+        Pattern::Bursty { factor: (2.0, 5.0), burst_s: (5.0, 15.0), mean_gap_s: 12.0 }
+    }
+}
+
+/// A complete workload specification.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub base_qps: f64,
+    pub duration_s: f64,
+    pub pattern: Pattern,
+    pub seed: u64,
+}
+
+/// Piecewise rate function λ(t) compiled from a spec (burst intervals are
+/// materialized once so λ is a pure function of time).
+pub struct RateFn {
+    base: f64,
+    duration_s: f64,
+    kind: RateKind,
+}
+
+enum RateKind {
+    Steady,
+    Spike { factor: f64, start_s: f64, end_s: f64 },
+    Bursty { bursts: Vec<(f64, f64, f64)> }, // (start, end, factor)
+    Diurnal { amplitude: f64, period_s: f64 },
+}
+
+impl RateFn {
+    pub fn compile(spec: &WorkloadSpec) -> RateFn {
+        let kind = match &spec.pattern {
+            Pattern::Steady => RateKind::Steady,
+            Pattern::Spike { factor, start_frac, end_frac } => RateKind::Spike {
+                factor: *factor,
+                start_s: start_frac * spec.duration_s,
+                end_s: end_frac * spec.duration_s,
+            },
+            Pattern::Bursty { factor, burst_s, mean_gap_s } => {
+                let mut rng = Rng::new(spec.seed ^ 0xB0B5);
+                let mut bursts = Vec::new();
+                let mut t = rng.exponential(1.0 / mean_gap_s);
+                while t < spec.duration_s {
+                    let len = rng.range_f64(burst_s.0, burst_s.1);
+                    let f = rng.range_f64(factor.0, factor.1);
+                    bursts.push((t, (t + len).min(spec.duration_s), f));
+                    t += len + rng.exponential(1.0 / mean_gap_s);
+                }
+                RateKind::Bursty { bursts }
+            }
+            Pattern::Diurnal { amplitude, period_s } => {
+                RateKind::Diurnal { amplitude: *amplitude, period_s: *period_s }
+            }
+        };
+        RateFn { base: spec.base_qps, duration_s: spec.duration_s, kind }
+    }
+
+    /// Instantaneous arrival rate at time `t` seconds.
+    pub fn rate(&self, t: f64) -> f64 {
+        let factor = match &self.kind {
+            RateKind::Steady => 1.0,
+            RateKind::Spike { factor, start_s, end_s } => {
+                if t >= *start_s && t < *end_s {
+                    *factor
+                } else {
+                    1.0
+                }
+            }
+            RateKind::Bursty { bursts } => bursts
+                .iter()
+                .find(|(s, e, _)| t >= *s && t < *e)
+                .map(|(_, _, f)| *f)
+                .unwrap_or(1.0),
+            RateKind::Diurnal { amplitude, period_s } => {
+                (1.0 + amplitude * (2.0 * std::f64::consts::PI * t / period_s).sin())
+                    .max(0.05)
+            }
+        };
+        self.base * factor
+    }
+
+    /// Max rate over the run (thinning envelope).
+    pub fn rate_max(&self) -> f64 {
+        let factor = match &self.kind {
+            RateKind::Steady => 1.0,
+            RateKind::Spike { factor, .. } => *factor,
+            RateKind::Bursty { bursts } => bursts
+                .iter()
+                .map(|(_, _, f)| *f)
+                .fold(1.0, f64::max),
+            RateKind::Diurnal { amplitude, .. } => 1.0 + amplitude,
+        };
+        self.base * factor
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.duration_s
+    }
+}
+
+/// Generate arrival times (seconds, ascending) for a spec via thinning.
+pub fn generate_arrivals(spec: &WorkloadSpec) -> Vec<f64> {
+    let rate = RateFn::compile(spec);
+    let mut rng = Rng::new(spec.seed);
+    let lam_max = rate.rate_max();
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    while t < spec.duration_s {
+        t += rng.exponential(lam_max);
+        if t >= spec.duration_s {
+            break;
+        }
+        if rng.uniform() < rate.rate(t) / lam_max {
+            out.push(t);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(pattern: Pattern) -> WorkloadSpec {
+        WorkloadSpec { base_qps: 5.0, duration_s: 300.0, pattern, seed: 42 }
+    }
+
+    #[test]
+    fn steady_rate_matches_base() {
+        let arrivals = generate_arrivals(&spec(Pattern::Steady));
+        let qps = arrivals.len() as f64 / 300.0;
+        assert!((qps - 5.0).abs() < 0.5, "qps {qps}");
+        for w in arrivals.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn spike_middle_third_is_heavier() {
+        let arrivals = generate_arrivals(&spec(Pattern::paper_spike()));
+        let third = 300.0 / 3.0;
+        let mid = arrivals
+            .iter()
+            .filter(|&&t| t >= third && t < 2.0 * third)
+            .count() as f64;
+        let outside = arrivals.len() as f64 - mid;
+        // Middle third carries 4x rate: expect mid ≈ 4/(4+2) of total.
+        let frac = mid / (mid + outside);
+        assert!((frac - 4.0 / 6.0).abs() < 0.08, "frac {frac}");
+    }
+
+    #[test]
+    fn bursty_exceeds_base_sometimes() {
+        let s = spec(Pattern::paper_bursty());
+        let rate = RateFn::compile(&s);
+        let has_burst = (0..3000).any(|i| rate.rate(i as f64 * 0.1) > 5.0 * 1.5);
+        assert!(has_burst);
+        assert!(rate.rate_max() <= 5.0 * 5.0 + 1e-9);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = generate_arrivals(&spec(Pattern::paper_bursty()));
+        let b = generate_arrivals(&spec(Pattern::paper_bursty()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn diurnal_oscillates() {
+        let s = spec(Pattern::Diurnal { amplitude: 0.5, period_s: 100.0 });
+        let rate = RateFn::compile(&s);
+        assert!(rate.rate(25.0) > rate.rate(75.0));
+    }
+}

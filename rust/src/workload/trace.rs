@@ -1,0 +1,86 @@
+//! Arrival-trace persistence: save generated workloads and replay
+//! recorded ones (CSV, one arrival timestamp in seconds per line).
+//!
+//! Lets a live run and a simulation consume bit-identical arrivals, and
+//! lets users bring production traces instead of synthetic patterns.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Write arrivals (seconds, ascending) as a one-column CSV.
+pub fn save_trace(path: &Path, arrivals: &[f64]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "arrival_s")?;
+    for t in arrivals {
+        writeln!(w, "{t:.6}")?;
+    }
+    Ok(())
+}
+
+/// Load an arrival trace; validates monotonicity.
+pub fn load_trace(path: &Path) -> Result<Vec<f64>> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut out = Vec::new();
+    for (i, line) in std::io::BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || (i == 0 && line == "arrival_s") {
+            continue;
+        }
+        let t: f64 = line
+            .parse()
+            .with_context(|| format!("{path:?}:{}: bad arrival {line:?}", i + 1))?;
+        if let Some(&prev) = out.last() {
+            if t < prev {
+                bail!("{path:?}:{}: arrivals must be non-decreasing", i + 1);
+            }
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate_arrivals, Pattern, WorkloadSpec};
+
+    #[test]
+    fn roundtrip() {
+        let arrivals = generate_arrivals(&WorkloadSpec {
+            base_qps: 10.0,
+            duration_s: 20.0,
+            pattern: Pattern::paper_bursty(),
+            seed: 4,
+        });
+        let path = std::env::temp_dir().join("compass_trace_test.csv");
+        save_trace(&path, &arrivals).unwrap();
+        let loaded = load_trace(&path).unwrap();
+        assert_eq!(loaded.len(), arrivals.len());
+        for (a, b) in loaded.iter().zip(&arrivals) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_unsorted() {
+        let path = std::env::temp_dir().join("compass_trace_bad.csv");
+        std::fs::write(&path, "arrival_s\n1.0\n0.5\n").unwrap();
+        assert!(load_trace(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("compass_trace_bad2.csv");
+        std::fs::write(&path, "arrival_s\nnot-a-number\n").unwrap();
+        assert!(load_trace(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

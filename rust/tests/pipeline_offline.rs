@@ -1,0 +1,81 @@
+//! Integration: the composed offline phase (search -> candidates ->
+//! Pareto -> AQM) and its interaction with the simulator — the
+//! "plan quality" contract that the online phase relies on.
+
+use compass::experiments::common::{
+    base_qps, make_policy, modeled_latency_ms, offline_phase, simulate_boxed,
+};
+use compass::metrics::RunSummary;
+use compass::sim::LognormalService;
+use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
+
+#[test]
+fn offline_phase_produces_usable_ladder() {
+    let (space, plan) = offline_phase(0.75, 1000.0, 7, false).unwrap();
+    assert!(plan.ladder.len() >= 2);
+    for w in plan.ladder.windows(2) {
+        assert!(w[0].mean_ms < w[1].mean_ms);
+        assert!(w[0].accuracy < w[1].accuracy);
+    }
+    // Modeled latencies coherent with the cost model.
+    for p in &plan.ladder {
+        let m = modeled_latency_ms(&space, &p.config);
+        assert!((m - p.mean_ms).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn aqm_thresholds_keep_slo_in_simulation() {
+    // The AQM contract (§V): under steady load at the design utilization,
+    // Elastico holds P95 within the SLO.
+    let (_s, full) = offline_phase(0.75, 1e9, 7, false).unwrap();
+    let slo = 2.2 * full.ladder.last().unwrap().mean_ms;
+    let (_s2, plan) = offline_phase(0.75, slo, 7, false).unwrap();
+    let arrivals = generate_arrivals(&WorkloadSpec {
+        base_qps: base_qps(&full),
+        duration_s: 300.0,
+        pattern: Pattern::Steady,
+        seed: 11,
+    });
+    let svc = LognormalService::from_plan(&plan, 0.10);
+    let mut policy = make_policy(&plan, "Elastico");
+    let out = simulate_boxed(&arrivals, &plan, &mut policy, &svc, 11);
+    let summary = RunSummary::compute(&out.records, &out.switches, slo, plan.ladder.len());
+    assert!(
+        summary.slo_compliance > 0.95,
+        "steady-state compliance {}",
+        summary.slo_compliance
+    );
+    // Under steady feasible load the controller should converge toward
+    // accurate rungs, not sit at the fastest.
+    assert!(
+        summary.mean_accuracy > plan.ladder[0].accuracy + 0.005,
+        "never recovered accuracy: {}",
+        summary.mean_accuracy
+    );
+}
+
+#[test]
+fn plan_json_roundtrip_through_disk() {
+    let (_s, plan) = offline_phase(0.75, 1000.0, 7, false).unwrap();
+    let path = std::env::temp_dir().join("compass_plan_test.json");
+    std::fs::write(&path, plan.to_json().to_string()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let parsed =
+        compass::planner::Plan::from_json(&compass::util::json::Json::parse(&text).unwrap())
+            .unwrap();
+    assert_eq!(parsed, plan);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn tighter_slo_prunes_ladder() {
+    let (_s, full) = offline_phase(0.75, 1e9, 7, false).unwrap();
+    let slowest_p95 = full.ladder.last().unwrap().p95_ms;
+    let (_s2, tight) = offline_phase(0.75, slowest_p95 * 0.8, 7, false).unwrap();
+    assert!(tight.ladder.len() < full.ladder.len());
+    // The excluded rungs are exactly those whose p95 exceeds the SLO.
+    for p in &tight.ladder {
+        assert!(p.p95_ms < slowest_p95 * 0.8);
+    }
+}

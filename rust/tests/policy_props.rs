@@ -1,0 +1,173 @@
+//! Property tests (mini in-house framework — no proptest offline):
+//! controller invariants over randomized plans and load traces.
+
+use compass::planner::{derive_plan, AqmParams, LatencyProfile, ProfiledConfig};
+use compass::serving::policy::ScalingPolicy;
+use compass::serving::ElasticoPolicy;
+use compass::util::Rng;
+
+/// Generate a random valid Pareto ladder (2-6 rungs).
+fn random_front(rng: &mut Rng) -> Vec<ProfiledConfig> {
+    let n = 2 + rng.choice_index(5);
+    let mut mean = 5.0 + rng.uniform() * 30.0;
+    let mut acc = 0.5 + rng.uniform() * 0.2;
+    (0..n)
+        .map(|i| {
+            mean *= 1.3 + rng.uniform() * 2.0;
+            acc += 0.01 + rng.uniform() * 0.08;
+            ProfiledConfig {
+                config: vec![i],
+                label: format!("rung{i}"),
+                accuracy: acc.min(0.99),
+                latency: LatencyProfile {
+                    mean_ms: mean,
+                    p50_ms: mean,
+                    p95_ms: mean * (1.1 + rng.uniform() * 0.5),
+                    runs: 10,
+                },
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_plan_invariants() {
+    let mut rng = Rng::new(41);
+    for case in 0..300 {
+        let front = random_front(&mut rng);
+        let slo = front.last().unwrap().latency.p95_ms * (0.5 + rng.uniform() * 3.0);
+        let plan = derive_plan(&front, AqmParams::for_slo(slo));
+        // Non-empty, ordered, decreasing upscale thresholds (Eq. 11).
+        assert!(!plan.ladder.is_empty(), "case {case}");
+        for w in plan.ladder.windows(2) {
+            assert!(w[0].mean_ms <= w[1].mean_ms, "case {case}: ladder order");
+            assert!(
+                w[0].upscale_threshold >= w[1].upscale_threshold,
+                "case {case}: Eq. 11 violated"
+            );
+        }
+        // Every retained rung (except a degraded-mode singleton) meets
+        // the SLO with positive slack.
+        if plan.ladder.len() > 1 {
+            for p in &plan.ladder {
+                assert!(p.queue_slack_ms > 0.0, "case {case}: negative slack");
+            }
+        }
+        // Downscale threshold present on all but the last rung.
+        for (i, p) in plan.ladder.iter().enumerate() {
+            assert_eq!(
+                p.downscale_threshold.is_some(),
+                i + 1 < plan.ladder.len(),
+                "case {case}: downscale structure"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_elastico_rung_always_valid_and_spikes_upscale() {
+    let mut rng = Rng::new(43);
+    for case in 0..200 {
+        let front = random_front(&mut rng);
+        let slo = front.last().unwrap().latency.p95_ms * (1.0 + rng.uniform() * 2.0);
+        let plan = derive_plan(&front, AqmParams::for_slo(slo));
+        let rungs = plan.ladder.len();
+        let mut ela = ElasticoPolicy::new(plan);
+        let mut t = 0.0;
+        let mut prev = ela.current();
+        for _ in 0..2000 {
+            t += rng.uniform() * 50.0;
+            let depth = (rng.uniform() * rng.uniform() * 40.0) as usize;
+            let cur = ela.decide(t, depth);
+            assert!(cur < rungs, "case {case}: rung out of range");
+            // Single-step moves only.
+            assert!(
+                (cur as i64 - prev as i64).abs() <= 1,
+                "case {case}: multi-rung jump"
+            );
+            prev = cur;
+        }
+        // A sustained massive spike must drive it to the fastest rung.
+        for _ in 0..50 {
+            t += 10.0;
+            ela.decide(t, 10_000);
+        }
+        assert_eq!(ela.current(), 0, "case {case}: spike must reach fastest");
+    }
+}
+
+#[test]
+fn prop_no_downscale_before_cooldown() {
+    let mut rng = Rng::new(47);
+    for case in 0..100 {
+        let front = random_front(&mut rng);
+        let slo = front.last().unwrap().latency.p95_ms * 2.0;
+        let plan = derive_plan(&front, AqmParams::for_slo(slo));
+        let cooldown = plan.down_cooldown_ms;
+        let mut ela = ElasticoPolicy::new(plan);
+        // Drive to fastest.
+        let mut t = 0.0;
+        for _ in 0..20 {
+            t += 1.0;
+            ela.decide(t, 10_000);
+        }
+        let base = ela.current();
+        // Idle observations strictly inside the cooldown window.
+        let t0 = t;
+        while t - t0 < cooldown * 0.95 {
+            t += cooldown / 50.0;
+            let cur = ela.decide(t, 0);
+            assert!(
+                cur <= base + 0 || cur == base,
+                "case {case}: downscaled before cooldown"
+            );
+            assert_eq!(cur, base, "case {case}: downscaled at {}ms", t - t0);
+        }
+    }
+}
+
+#[test]
+fn prop_sim_conservation_and_fifo() {
+    // Simulator invariants under random workloads and policies.
+    use compass::experiments::common::{make_policy, simulate_boxed};
+    use compass::sim::LognormalService;
+    use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
+
+    let mut rng = Rng::new(53);
+    for case in 0..30 {
+        let front = random_front(&mut rng);
+        let slo = front.last().unwrap().latency.p95_ms * 2.0;
+        let plan = derive_plan(&front, AqmParams::for_slo(slo));
+        let arrivals = generate_arrivals(&WorkloadSpec {
+            base_qps: 0.3 / (plan.ladder.last().unwrap().mean_ms / 1000.0),
+            duration_s: 30.0,
+            pattern: if case % 2 == 0 {
+                Pattern::paper_spike()
+            } else {
+                Pattern::paper_bursty()
+            },
+            seed: case,
+        });
+        let svc = LognormalService::from_plan(&plan, 0.2);
+        for name in ["Elastico", "Static-Fast"] {
+            let mut policy = make_policy(&plan, name);
+            let out = simulate_boxed(&arrivals, &plan, &mut policy, &svc, case);
+            // Conservation: every arrival served exactly once.
+            assert_eq!(out.records.len(), arrivals.len(), "case {case}");
+            let mut ids: Vec<u64> = out.records.iter().map(|r| r.id).collect();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), arrivals.len(), "case {case}: dup/missing ids");
+            // Causality + single server.
+            let mut by_start = out.records.clone();
+            by_start.sort_by(|a, b| a.start_ms.partial_cmp(&b.start_ms).unwrap());
+            for w in by_start.windows(2) {
+                assert!(w[1].start_ms >= w[0].finish_ms - 1e-6, "case {case}: overlap");
+            }
+            for r in &out.records {
+                assert!(r.start_ms >= r.arrival_ms - 1e-9, "case {case}: time travel");
+                assert!(r.finish_ms > r.start_ms, "case {case}: zero service");
+            }
+        }
+    }
+}

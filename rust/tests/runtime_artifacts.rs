@@ -1,0 +1,128 @@
+//! Integration: load AOT artifacts through PJRT and execute every model
+//! kind end-to-end. Requires `make artifacts` (skips gracefully when the
+//! artifacts directory is absent, e.g. in a source-only checkout).
+
+use compass::configspace::rag_space;
+use compass::runtime::{artifacts_dir, ArtifactLib, TensorIn};
+use compass::util::Rng;
+use compass::workflows::rag::corpus::{Corpus, CORPUS_N, EMBED_D};
+use compass::workflows::rag::RagWorkflow;
+use compass::workflows::Workflow;
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn retriever_executes_and_ranks_planted_doc() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let lib = ArtifactLib::load(&artifacts_dir(), Some(&["retriever"])).unwrap();
+    let corpus = Corpus::generate(3);
+    let mut rng = Rng::new(5);
+
+    let mut hits_at_10 = 0;
+    let trials = 30;
+    for _ in 0..trials {
+        let q = corpus.sample_query(&mut rng);
+        let outs = lib
+            .execute(
+                "retriever",
+                &[
+                    TensorIn::F32(&corpus.embeddings, &[CORPUS_N, EMBED_D]),
+                    TensorIn::F32(&q.embedding, &[EMBED_D]),
+                ],
+            )
+            .unwrap();
+        let vals = outs[0].as_f32().unwrap();
+        let idx = outs[1].as_i32().unwrap();
+        assert_eq!(vals.len(), 50);
+        assert_eq!(idx.len(), 50);
+        // Scores descending.
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        if idx[..10].contains(&(q.truth as i32)) {
+            hits_at_10 += 1;
+        }
+    }
+    // Calibrated recall@10 ≈ 0.85; even pessimistically > 0.5 here.
+    assert!(hits_at_10 > trials / 2, "recall@10 {hits_at_10}/{trials}");
+}
+
+#[test]
+fn generator_reranker_detector_execute() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let lib = ArtifactLib::load(
+        &artifacts_dir(),
+        Some(&["gen-64", "rr-48", "det-n", "ver-m"]),
+    )
+    .unwrap();
+
+    // Generator: fused prefill+decode returns 16 tokens + confidence.
+    let tokens: Vec<i32> = (0..64).map(|i| (i * 7) % 256).collect();
+    let outs = lib
+        .execute("gen-64", &[TensorIn::I32(&tokens, &[64])])
+        .unwrap();
+    let gen = outs[0].as_i32().unwrap();
+    let score = outs[1].as_f32().unwrap()[0];
+    assert_eq!(gen.len(), 16);
+    assert!(gen.iter().all(|&t| (0..256).contains(&t)));
+    assert!((0.0..=1.0).contains(&score), "confidence {score}");
+    // Determinism: same prompt, same tokens.
+    let outs2 = lib
+        .execute("gen-64", &[TensorIn::I32(&tokens, &[64])])
+        .unwrap();
+    assert_eq!(outs2[0].as_i32().unwrap(), gen);
+
+    // Reranker: 5 scores.
+    let q: Vec<i32> = (0..16).collect();
+    let d: Vec<i32> = (0..5 * 32).map(|i| i % 256).collect();
+    let outs = lib
+        .execute(
+            "rr-48",
+            &[TensorIn::I32(&q, &[16]), TensorIn::I32(&d, &[5, 32])],
+        )
+        .unwrap();
+    assert_eq!(outs[0].as_f32().unwrap().len(), 5);
+
+    // Detector + verifier.
+    let img = vec![0.1f32; 32 * 32 * 3];
+    let outs = lib
+        .execute("det-n", &[TensorIn::F32(&img, &[32, 32, 3])])
+        .unwrap();
+    assert_eq!(outs[0].as_f32().unwrap().len(), 64);
+    assert_eq!(outs[1].as_f32().unwrap().len(), 8);
+    let outs = lib
+        .execute("ver-m", &[TensorIn::F32(&img, &[32, 32, 3])])
+        .unwrap();
+    assert_eq!(outs[0].as_f32().unwrap().len(), 1);
+}
+
+#[test]
+fn rag_workflow_runs_all_stages() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let space = rag_space();
+    // A mid-ladder config: (gen-96, k=10, rk=3, rr-48).
+    let cfg = vec![1, 2, 1, 0];
+    assert!(space.valid(&cfg));
+    let mut wf = RagWorkflow::load_subset(&artifacts_dir(), &space, &[cfg.clone()], 11).unwrap();
+    let mut successes = 0;
+    for _ in 0..10 {
+        let out = wf.run(&space, &cfg).unwrap();
+        assert!((0.0..=1.0).contains(&out.accuracy));
+        if out.success == Some(true) {
+            successes += 1;
+        }
+    }
+    // gen-96 quality 0.72 and hit-rate ~0.8: expect a majority successes.
+    assert!(successes >= 3, "successes {successes}/10");
+}

@@ -1,0 +1,110 @@
+//! Integration: COMPASS-V recall/savings at paper scale — all 16
+//! (workflow, τ) cells of Fig. 4, asserting the reproduction's headline
+//! properties: 100% recall on the noise-free ground truth and positive
+//! savings everywhere.
+
+use compass::configspace::{detection_space, rag_space, ConfigSpace};
+use compass::oracle::{DetectionOracle, Landscape, LandscapeEvaluator, RagOracle};
+use compass::search::{grid_search, BudgetSchedule, CompassV, CompassVParams};
+
+fn check<L: Landscape>(
+    space: &ConfigSpace,
+    taus: &[f64],
+    schedule: BudgetSchedule,
+    make: impl Fn(u64) -> LandscapeEvaluator<L>,
+) {
+    let n = space.enumerate_valid().len();
+    let b_max = schedule.b_max();
+    for &tau in taus {
+        let mut gt_oracle = make(7);
+        let grid = grid_search(space, b_max, &mut gt_oracle);
+        // Noise-free ground truth: measured AND latent accuracy >= tau.
+        let gt: Vec<usize> = grid
+            .feasible(tau)
+            .iter()
+            .filter(|(c, _)| gt_oracle.true_accuracy(space, c) >= tau)
+            .map(|(c, _)| space.flat_id(c))
+            .collect();
+
+        let mut oracle = make(7);
+        let r = CompassV::new(CompassVParams {
+            seed: 7,
+            schedule: schedule.clone(),
+            ..Default::default()
+        })
+        .run(space, tau, &mut oracle);
+        let found: std::collections::HashSet<usize> =
+            r.feasible.iter().map(|(c, _)| space.flat_id(c)).collect();
+
+        let missed: Vec<&usize> = gt.iter().filter(|id| !found.contains(id)).collect();
+        assert!(
+            missed.is_empty(),
+            "tau={tau}: missed {} of {} noise-free feasible configs",
+            missed.len(),
+            gt.len()
+        );
+        assert!(
+            r.samples_used < (n as u64) * (b_max as u64),
+            "tau={tau}: no savings over exhaustive"
+        );
+    }
+}
+
+#[test]
+fn rag_all_thresholds_full_recall_with_savings() {
+    check(
+        &rag_space(),
+        &[0.30, 0.40, 0.50, 0.60, 0.70, 0.75, 0.80, 0.85],
+        BudgetSchedule::rag(),
+        RagOracle::new_rag,
+    );
+}
+
+#[test]
+fn detection_all_thresholds_full_recall_with_savings() {
+    check(
+        &detection_space(),
+        &[0.55, 0.59, 0.62, 0.66, 0.70, 0.73, 0.76, 0.80],
+        BudgetSchedule::detection(),
+        DetectionOracle::new_detection,
+    );
+}
+
+#[test]
+fn tight_threshold_savings_exceed_half() {
+    // The paper's marquee regime: at tight thresholds most of the space
+    // is never visited.
+    let space = rag_space();
+    let n = space.enumerate_valid().len();
+    let mut oracle = RagOracle::new_rag(7);
+    let r = CompassV::new(CompassVParams { seed: 7, ..Default::default() })
+        .run(&space, 0.85, &mut oracle);
+    let savings = r.savings_vs_exhaustive(n, 100);
+    assert!(savings > 0.5, "savings {savings}");
+}
+
+#[test]
+fn different_seeds_agree_on_clear_configs() {
+    // Reproducibility envelope: configurations far from the boundary are
+    // classified identically across search seeds.
+    let space = rag_space();
+    let collect = |seed: u64| {
+        let mut oracle = RagOracle::new_rag(99); // same draws
+        let r = CompassV::new(CompassVParams { seed, ..Default::default() })
+            .run(&space, 0.60, &mut oracle);
+        r.feasible
+            .iter()
+            .map(|(c, _)| space.flat_id(c))
+            .collect::<std::collections::HashSet<_>>()
+    };
+    let a = collect(1);
+    let b = collect(2);
+    let landscape = compass::oracle::rag::RagLandscape;
+    for cfg in space.enumerate_valid() {
+        let acc = landscape.true_accuracy(&space, &cfg);
+        if acc > 0.72 {
+            let id = space.flat_id(&cfg);
+            assert!(a.contains(&id) && b.contains(&id), "clear config missed");
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Integration: the live threaded serving system (queue + monitor +
+//! Elastico + executor) under a spike, with a scripted engine — asserts
+//! the paper's qualitative Fig. 5 result without needing artifacts.
+
+use compass::metrics::RunSummary;
+use compass::planner::{derive_plan, AqmParams, LatencyProfile, ProfiledConfig};
+use compass::serving::executor::MockEngine;
+use compass::serving::{serve, ElasticoPolicy, ServeOptions, StaticPolicy};
+use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
+
+fn front() -> Vec<ProfiledConfig> {
+    let mk = |label: &str, acc: f64, mean: f64| ProfiledConfig {
+        config: vec![],
+        label: label.into(),
+        accuracy: acc,
+        latency: LatencyProfile {
+            mean_ms: mean,
+            p50_ms: mean,
+            p95_ms: mean * 1.2,
+            runs: 10,
+        },
+    };
+    vec![mk("fast", 0.76, 4.0), mk("medium", 0.82, 10.0), mk("accurate", 0.85, 24.0)]
+}
+
+fn run(policy_idx: Option<usize>, arrivals: &[f64], slo: f64) -> RunSummary {
+    let plan = derive_plan(&front(), AqmParams::for_slo(slo));
+    // Scale the hysteresis to the compressed timescale of this test.
+    let mut plan = plan;
+    plan.down_cooldown_ms = 500.0;
+    let policy: Box<dyn compass::serving::ScalingPolicy> = match policy_idx {
+        None => Box::new(ElasticoPolicy::new(plan.clone())),
+        Some(i) => Box::new(StaticPolicy::new(i, "static")),
+    };
+    let out = serve(
+        || {
+            Ok(MockEngine {
+                service_ms: vec![4.0, 10.0, 24.0],
+                accuracy: vec![0.76, 0.82, 0.85],
+            })
+        },
+        policy,
+        arrivals,
+        &ServeOptions { queue_capacity: 8192, tick_ms: 5 },
+    )
+    .unwrap();
+    RunSummary::compute(&out.records, &out.switches, slo, 3)
+}
+
+#[test]
+fn elastico_beats_statics_under_live_spike() {
+    // Base ~27 qps (util 0.65 of accurate), 4x spike in the middle third
+    // of a 12s run; SLO = 2.2x accurate mean.
+    let arrivals = generate_arrivals(&WorkloadSpec {
+        base_qps: 27.0,
+        duration_s: 12.0,
+        pattern: Pattern::paper_spike(),
+        seed: 3,
+    });
+    let slo = 2.2 * 24.0;
+
+    let ela = run(None, &arrivals, slo);
+    let fast = run(Some(0), &arrivals, slo);
+    let acc = run(Some(2), &arrivals, slo);
+
+    assert!(
+        ela.slo_compliance > acc.slo_compliance + 0.15,
+        "elastico {:.2} vs accurate {:.2}",
+        ela.slo_compliance,
+        acc.slo_compliance
+    );
+    assert!(
+        ela.mean_accuracy > fast.mean_accuracy + 0.005,
+        "elastico {:.3} vs fast {:.3}",
+        ela.mean_accuracy,
+        fast.mean_accuracy
+    );
+    assert!(ela.switches >= 2, "no adaptation happened");
+    assert!(ela.slo_compliance > 0.85, "elastico compliance {}", ela.slo_compliance);
+}
+
+#[test]
+fn all_requests_accounted_for() {
+    let arrivals = generate_arrivals(&WorkloadSpec {
+        base_qps: 40.0,
+        duration_s: 3.0,
+        pattern: Pattern::Steady,
+        seed: 5,
+    });
+    let s = run(None, &arrivals, 100.0);
+    assert_eq!(s.requests, arrivals.len());
+}
