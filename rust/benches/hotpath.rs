@@ -1,12 +1,18 @@
 //! Bench: L3 coordinator hot-path microbenchmarks (perf pass §Perf):
 //! queue ops, monitor ticks, policy decisions, record aggregation —
-//! everything on the request path *except* the model compute.
-use compass::experiments::common::{make_policy, offline_phase};
+//! everything on the request path *except* the model compute — plus the
+//! M/G/k simulator swept over the worker-pool sizes k ∈ {1, 2, 4, 8}.
+use compass::experiments::common::{
+    base_qps_k, make_policy, offline_phase, simulate_boxed_k,
+};
 use compass::metrics::{RequestRecord, RunSummary};
+use compass::planner::{derive_plan, AqmParams, LatencyProfile, ProfiledConfig};
 use compass::serving::monitor::LoadMonitor;
 use compass::serving::RequestQueue;
+use compass::sim::LognormalService;
 use compass::util::bench::{bench, group};
 use compass::util::Rng;
+use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
 
 fn main() {
     group("hotpath: L3 coordinator overhead");
@@ -58,4 +64,42 @@ fn main() {
     bench("RunSummary::compute 100k records", 1, 20, || {
         std::hint::black_box(RunSummary::compute(&records, &[], 100.0, 3));
     });
+
+    // M/G/k coordinator sweep: the paper's spike trace replayed through
+    // the discrete-event simulator at each pool size, with worker-aware
+    // thresholds and pool-scaled load (per-worker ρ held constant). The
+    // ladder itself is k-independent, so the search/profiling above is
+    // not repeated: per-k plans re-derive thresholds from its profile.
+    group("hotpath: M/G/k simulator sweep");
+    let front: Vec<ProfiledConfig> = plan
+        .ladder
+        .iter()
+        .map(|p| ProfiledConfig {
+            config: p.config.clone(),
+            label: p.label.clone(),
+            accuracy: p.accuracy,
+            latency: LatencyProfile {
+                mean_ms: p.mean_ms,
+                p50_ms: p.mean_ms,
+                p95_ms: p.p95_ms,
+                runs: 0,
+            },
+        })
+        .collect();
+    for k in [1usize, 2, 4, 8] {
+        let plan_k = derive_plan(&front, AqmParams::for_slo_workers(1000.0, k));
+        let arrivals = generate_arrivals(&WorkloadSpec {
+            base_qps: base_qps_k(&plan_k, k),
+            duration_s: 180.0,
+            pattern: Pattern::paper_spike(),
+            seed: 7,
+        });
+        let svc = LognormalService::from_plan(&plan_k, 0.10);
+        bench(&format!("simulate spike 180s k={k}"), 1, 20, || {
+            let mut policy = make_policy(&plan_k, "Elastico");
+            std::hint::black_box(simulate_boxed_k(
+                &arrivals, &plan_k, &mut policy, &svc, 7, k,
+            ));
+        });
+    }
 }

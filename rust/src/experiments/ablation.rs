@@ -13,7 +13,7 @@
 use anyhow::Result;
 
 use super::common::{
-    base_qps, make_policy, offline_phase, simulate_boxed, ExperimentCtx,
+    base_qps_k, make_policy, offline_phase_k, simulate_boxed_k, ExperimentCtx,
 };
 use crate::configspace::rag_space;
 use crate::metrics::RunSummary;
@@ -116,18 +116,21 @@ fn seeding_ablation(ctx: &ExperimentCtx) -> Result<()> {
 }
 
 fn controller_ablation(ctx: &ExperimentCtx) -> Result<()> {
-    let (_s, full) = offline_phase(0.75, 1e9, ctx.seed, false)?;
+    let k = ctx.workers.max(1);
+    let (_s, full) = offline_phase_k(0.75, 1e9, ctx.seed, false, k)?;
     let slo = 2.2 * full.ladder.last().unwrap().mean_ms;
-    let (_s2, plan) = offline_phase(0.75, slo, ctx.seed, false)?;
+    let (_s2, plan) = offline_phase_k(0.75, slo, ctx.seed, false, k)?;
     let arrivals = generate_arrivals(&WorkloadSpec {
-        base_qps: base_qps(&full),
+        base_qps: base_qps_k(&full, k),
         duration_s: ctx.duration_s,
         pattern: Pattern::paper_spike(),
         seed: ctx.seed,
     });
     let svc = LognormalService::from_plan(&plan, 0.10);
 
-    println!("\nAblation C — controller variants (spike, SLO {slo:.0} ms):");
+    println!(
+        "\nAblation C — controller variants (spike, SLO {slo:.0} ms, {k} worker(s)):"
+    );
     let mut variants: Vec<(&str, Box<dyn ScalingPolicy>)> = vec![
         ("Elastico (asymmetric hysteresis)", make_policy(&plan, "Elastico")),
         ("Predictive extension (§VIII)", Box::new(PredictivePolicy::new(plan.clone()))),
@@ -146,7 +149,7 @@ fn controller_ablation(ctx: &ExperimentCtx) -> Result<()> {
             policy,
             Box::new(crate::serving::StaticPolicy::new(0, "placeholder")),
         );
-        let out = simulate_boxed(&arrivals, &plan, &mut boxed, &svc, ctx.seed);
+        let out = simulate_boxed_k(&arrivals, &plan, &mut boxed, &svc, ctx.seed, k);
         let s = RunSummary::compute(&out.records, &out.switches, slo, plan.ladder.len());
         println!(
             "  {:<36} SLO {:>5.1}%  acc {:.3}  switches {:>4}",

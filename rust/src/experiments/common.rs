@@ -17,7 +17,7 @@ use crate::runtime::artifacts_dir;
 use crate::search::{CompassV, CompassVParams};
 use crate::serving::executor::WorkflowEngine;
 use crate::serving::{serve, ElasticoPolicy, ScalingPolicy, ServeOptions, StaticPolicy};
-use crate::sim::{simulate, LognormalService};
+use crate::sim::LognormalService;
 use crate::util::results_dir;
 use crate::workflows::rag::RagWorkflow;
 use crate::workload::{generate_arrivals, Pattern, WorkloadSpec};
@@ -32,6 +32,10 @@ pub struct ExperimentCtx {
     pub duration_s: f64,
     /// Master seed.
     pub seed: u64,
+    /// Executor worker pool size k (M/G/k; 1 = the paper's testbed).
+    /// Plans are derived with worker-aware thresholds and serving cells
+    /// run k executors (live) or k simulated servers.
+    pub workers: usize,
     /// Output directory for CSVs.
     pub out_dir: PathBuf,
 }
@@ -42,6 +46,7 @@ impl Default for ExperimentCtx {
             live: false,
             duration_s: 180.0,
             seed: 7,
+            workers: 1,
             out_dir: results_dir(),
         }
     }
@@ -122,14 +127,27 @@ pub fn plan_candidates(
     picked
 }
 
-/// Run the full offline phase for the RAG workflow at threshold τ:
-/// COMPASS-V search on the oracle, profile candidates (live or modeled),
-/// Pareto-reduce, derive the AQM plan at `slo_ms`.
+/// Run the full offline phase for the RAG workflow at threshold τ on a
+/// single-server deployment — see [`offline_phase_k`].
 pub fn offline_phase(
     tau: f64,
     slo_ms: f64,
     seed: u64,
     live: bool,
+) -> Result<(ConfigSpace, Plan)> {
+    offline_phase_k(tau, slo_ms, seed, live, 1)
+}
+
+/// Run the full offline phase for the RAG workflow at threshold τ:
+/// COMPASS-V search on the oracle, profile candidates (live or modeled),
+/// Pareto-reduce, derive the AQM plan at `slo_ms` for a pool of
+/// `workers` executors (worker-aware queue-depth thresholds).
+pub fn offline_phase_k(
+    tau: f64,
+    slo_ms: f64,
+    seed: u64,
+    live: bool,
+    workers: usize,
 ) -> Result<(ConfigSpace, Plan)> {
     let space = rag_space();
     let mut oracle = RagOracle::new_rag(seed);
@@ -162,7 +180,7 @@ pub fn offline_phase(
         })
         .collect();
     let front = pareto_front(profiled);
-    let plan = derive_plan(&front, AqmParams::for_slo(slo_ms));
+    let plan = derive_plan(&front, AqmParams::for_slo_workers(slo_ms, workers));
     Ok((space, plan))
 }
 
@@ -174,6 +192,13 @@ pub const SLO_FACTORS: [f64; 3] = [1.1, 2.2, 3.3];
 /// *full* front — fixed across SLO targets, like the paper's 1.5 QPS.
 pub fn base_qps(full_plan: &Plan) -> f64 {
     0.45 / (full_plan.ladder.last().unwrap().mean_ms / 1000.0)
+}
+
+/// Paper base load scaled to a k-worker pool: ρ ≈ 0.45 of the most
+/// accurate rung *across the pool*, so the per-worker operating point of
+/// the paper's figures is preserved at every k.
+pub fn base_qps_k(full_plan: &Plan, workers: usize) -> f64 {
+    workers.max(1) as f64 * base_qps(full_plan)
 }
 
 // ---------------------------------------------------------------------
@@ -249,13 +274,20 @@ pub fn run_cell(
             },
             policy,
             &arrivals,
-            &ServeOptions::default(),
+            &ServeOptions { workers: ctx.workers.max(1), ..ServeOptions::default() },
         )?;
         (out.records, out.switches)
     } else {
         let svc = LognormalService::from_plan(plan, 0.10);
         let mut policy = policy;
-        let out = simulate_boxed(&arrivals, plan, &mut policy, &svc, ctx.seed);
+        let out = simulate_boxed_k(
+            &arrivals,
+            plan,
+            &mut policy,
+            &svc,
+            ctx.seed,
+            ctx.workers.max(1),
+        );
         (out.records, out.switches)
     };
     let summary = RunSummary::compute(&records, &switches, cell.slo_ms, plan.ladder.len());
@@ -270,6 +302,18 @@ pub fn simulate_boxed(
     svc: &LognormalService,
     seed: u64,
 ) -> crate::sim::SimOutcome {
+    simulate_boxed_k(arrivals, plan, policy, svc, seed, 1)
+}
+
+/// `simulate_k` over a boxed policy (object safety helper).
+pub fn simulate_boxed_k(
+    arrivals: &[f64],
+    plan: &Plan,
+    policy: &mut Box<dyn ScalingPolicy>,
+    svc: &LognormalService,
+    seed: u64,
+    workers: usize,
+) -> crate::sim::SimOutcome {
     struct Shim<'a>(&'a mut Box<dyn ScalingPolicy>);
     impl ScalingPolicy for Shim<'_> {
         fn decide(&mut self, now_ms: f64, depth: usize) -> usize {
@@ -283,7 +327,7 @@ pub fn simulate_boxed(
         }
     }
     let mut shim = Shim(policy);
-    simulate(arrivals, plan, &mut shim, svc, seed)
+    crate::sim::simulate_k(arrivals, plan, &mut shim, svc, seed, workers)
 }
 
 #[cfg(test)]
@@ -326,5 +370,27 @@ mod tests {
         let qps = base_qps(&plan);
         let rho = qps * plan.ladder.last().unwrap().mean_ms / 1000.0;
         assert!((rho - 0.45).abs() < 1e-9);
+        // Pool load keeps the per-worker operating point.
+        let rho4 = base_qps_k(&plan, 4) * plan.ladder.last().unwrap().mean_ms
+            / 1000.0
+            / 4.0;
+        assert!((rho4 - 0.45).abs() < 1e-9);
+    }
+
+    #[test]
+    fn offline_phase_k_scales_thresholds_only() {
+        // Same ladder, k-scaled queue thresholds: the Pareto front and
+        // accuracy/latency profile must not depend on the pool size.
+        let (_s1, p1) = offline_phase(0.75, 1000.0, 3, false).unwrap();
+        let (_s4, p4) = offline_phase_k(0.75, 1000.0, 3, false, 4).unwrap();
+        assert_eq!(p1.workers, 1);
+        assert_eq!(p4.workers, 4);
+        assert_eq!(p1.ladder.len(), p4.ladder.len());
+        for (a, b) in p1.ladder.iter().zip(&p4.ladder) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.mean_ms, b.mean_ms);
+            assert!(b.upscale_threshold >= 4 * a.upscale_threshold);
+        }
     }
 }

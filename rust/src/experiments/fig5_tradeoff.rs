@@ -6,7 +6,8 @@
 use anyhow::Result;
 
 use super::common::{
-    offline_phase, run_cell, Cell, ExperimentCtx, POLICIES, SLO_FACTORS,
+    base_qps_k, offline_phase_k, run_cell, Cell, ExperimentCtx, POLICIES,
+    SLO_FACTORS,
 };
 use crate::util::csv::CsvWriter;
 use crate::workload::Pattern;
@@ -14,10 +15,12 @@ use crate::workload::Pattern;
 pub fn run(ctx: &ExperimentCtx) -> Result<()> {
     // Offline phase once: the full front drives the static baselines and
     // the (SLO-independent) base load; per-SLO plans re-derive thresholds
-    // for Elastico.
-    let (_s, full) = offline_phase(0.75, 1e9, ctx.seed, ctx.live)?;
+    // for Elastico. Both carry the cell's worker count so the thresholds
+    // and load match the pool run_cell drives.
+    let k = ctx.workers.max(1);
+    let (_s, full) = offline_phase_k(0.75, 1e9, ctx.seed, ctx.live, k)?;
     let slowest_mean = full.ladder.last().unwrap().mean_ms;
-    let qps = super::common::base_qps(&full);
+    let qps = base_qps_k(&full, k);
 
     let mut csv = CsvWriter::create(
         &ctx.out_dir.join("fig5_tradeoff.csv"),
@@ -44,7 +47,7 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
     ] {
         for factor in SLO_FACTORS {
             let slo = factor * slowest_mean;
-            let (space, plan) = offline_phase(0.75, slo, ctx.seed, false)?;
+            let (space, plan) = offline_phase_k(0.75, slo, ctx.seed, false, k)?;
             println!(
                 "\n-- pattern={pattern_name} SLO={slo:.0}ms (Elastico ladder {} rungs) --",
                 plan.ladder.len()

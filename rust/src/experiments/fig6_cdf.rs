@@ -4,24 +4,26 @@
 use anyhow::Result;
 
 use super::common::{
-    offline_phase, run_cell, Cell, ExperimentCtx, POLICIES, SLO_FACTORS,
+    base_qps_k, offline_phase_k, run_cell, Cell, ExperimentCtx, POLICIES,
+    SLO_FACTORS,
 };
 use crate::metrics::latency_cdf;
 use crate::util::csv::CsvWriter;
 use crate::workload::Pattern;
 
 pub fn run(ctx: &ExperimentCtx) -> Result<()> {
-    let (_s, full) = offline_phase(0.75, 1e9, ctx.seed, ctx.live)?;
+    let k = ctx.workers.max(1);
+    let (_s, full) = offline_phase_k(0.75, 1e9, ctx.seed, ctx.live, k)?;
     let slo = SLO_FACTORS[1] * full.ladder.last().unwrap().mean_ms;
-    let (space, plan) = offline_phase(0.75, slo, ctx.seed, false)?;
-    let qps = super::common::base_qps(&full);
+    let (space, plan) = offline_phase_k(0.75, slo, ctx.seed, false, k)?;
+    let qps = base_qps_k(&full, k);
 
     let mut csv = CsvWriter::create(
         &ctx.out_dir.join("fig6_cdf.csv"),
         &["policy", "latency_ms", "fraction"],
     )?;
 
-    println!("Fig.6: latency CDFs, spike pattern, SLO {slo:.0} ms");
+    println!("Fig.6: latency CDFs, spike pattern, SLO {slo:.0} ms, {k} worker(s)");
     for policy in POLICIES {
         let cell = Cell {
             pattern_name: "spike",

@@ -4,21 +4,24 @@
 
 use anyhow::Result;
 
-use super::common::{offline_phase, run_cell, Cell, ExperimentCtx, SLO_FACTORS};
+use super::common::{
+    base_qps_k, offline_phase_k, run_cell, Cell, ExperimentCtx, SLO_FACTORS,
+};
 use crate::metrics::report::{write_records_csv, write_switches_csv};
 use crate::workload::Pattern;
 
 pub fn run(ctx: &ExperimentCtx) -> Result<()> {
-    let (_s, full) = offline_phase(0.75, 1e9, ctx.seed, ctx.live)?;
+    let k = ctx.workers.max(1);
+    let (_s, full) = offline_phase_k(0.75, 1e9, ctx.seed, ctx.live, k)?;
     let slo = SLO_FACTORS[1] * full.ladder.last().unwrap().mean_ms;
-    let (space, plan) = offline_phase(0.75, slo, ctx.seed, false)?;
+    let (space, plan) = offline_phase_k(0.75, slo, ctx.seed, false, k)?;
 
     let cell = Cell {
         pattern_name: "spike",
         pattern: Pattern::paper_spike(),
         slo_ms: slo,
         policy_name: "Elastico".into(),
-        base_qps: super::common::base_qps(&full),
+        base_qps: base_qps_k(&full, k),
     };
     let (records, switches, summary) = run_cell(ctx, &space, &plan, &cell)?;
 
@@ -28,7 +31,7 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
     let dur_ms = ctx.duration_s * 1000.0;
     let spike = (dur_ms / 3.0, 2.0 * dur_ms / 3.0);
     println!(
-        "Fig.7: Elastico timeline, spike during [{:.0}s, {:.0}s], SLO {slo:.0} ms",
+        "Fig.7: Elastico timeline, spike during [{:.0}s, {:.0}s], SLO {slo:.0} ms, {k} worker(s)",
         spike.0 / 1000.0,
         spike.1 / 1000.0
     );

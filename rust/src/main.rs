@@ -86,6 +86,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                 live: opts.contains_key("live"),
                 duration_s: get_f64(&opts, "duration", 180.0)?,
                 seed,
+                workers: get_f64(&opts, "workers", 1.0)?.max(1.0) as usize,
                 out_dir: results_dir(),
             };
             experiments::run(id, &ctx)
@@ -109,12 +110,14 @@ fn print_help() {
          \x20 search      COMPASS-V feasible-set search vs exhaustive ground truth\n\
          \x20             [--workflow rag|detection] [--tau T] [--seed N]\n\
          \x20 plan        offline phase: search + profile + Pareto + AQM plan\n\
-         \x20             [--tau T] [--slo MS] [--live] [--out FILE]\n\
+         \x20             [--tau T] [--slo MS] [--workers K] [--live] [--out FILE]\n\
          \x20 serve       one live serving run over the AOT artifacts\n\
          \x20             [--slo MS] [--duration S] [--pattern spike|bursty|steady]\n\
          \x20             [--policy Elastico|Static-Fast|Static-Medium|Static-Accurate]\n\
+         \x20             [--workers K]\n\
          \x20 experiment  regenerate paper figures/tables -> results/*.csv\n\
          \x20             <fig1|fig3|fig4|table1|fig5|fig6|fig7|all> [--live] [--duration S]\n\
+         \x20             [--workers K]\n\
          \x20 profile     per-component latency table over the artifacts [--live]\n"
     );
 }
@@ -188,6 +191,7 @@ fn cmd_search(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
 fn cmd_plan(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
     let tau = get_f64(opts, "tau", 0.75)?;
     let live = opts.contains_key("live");
+    let workers = get_f64(opts, "workers", 1.0)?.max(1.0) as usize;
     // Default SLO: 2.2x the slowest rung (≙ the paper's 1000 ms target).
     let slo = match opts.get("slo") {
         Some(v) => v.parse::<f64>()?,
@@ -197,8 +201,9 @@ fn cmd_plan(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
             2.2 * probe.ladder.last().unwrap().mean_ms
         }
     };
-    let (_space, plan) =
-        compass::experiments::common::offline_phase(tau, slo, seed, live)?;
+    let (_space, plan) = compass::experiments::common::offline_phase_k(
+        tau, slo, seed, live, workers,
+    )?;
     print!("{}", plan.render());
     if let Some(path) = opts.get("out") {
         std::fs::write(path, plan.to_json().to_string())?;
@@ -210,6 +215,7 @@ fn cmd_plan(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
 fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
     let tau = get_f64(opts, "tau", 0.75)?;
     let duration = get_f64(opts, "duration", 60.0)?;
+    let workers = get_f64(opts, "workers", 1.0)?.max(1.0) as usize;
     let policy_name = opts
         .get("policy")
         .cloned()
@@ -227,20 +233,22 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         Some(v) => v.parse::<f64>()?,
         None => 2.2 * probe.ladder.last().unwrap().mean_ms,
     };
-    let (space, plan) =
-        compass::experiments::common::offline_phase(tau, slo, seed, false)?;
+    let (space, plan) = compass::experiments::common::offline_phase_k(
+        tau, slo, seed, false, workers,
+    )?;
     println!("Serving plan (SLO {slo:.0} ms):");
     print!("{}", plan.render());
 
     let spec = WorkloadSpec {
-        base_qps: compass::experiments::common::base_qps(&probe),
+        base_qps: compass::experiments::common::base_qps_k(&probe, workers),
         duration_s: duration,
         pattern,
         seed,
     };
     let arrivals = generate_arrivals(&spec);
     println!(
-        "Live serving: {} arrivals over {duration}s (base {:.2} qps), policy {policy_name}",
+        "Live serving: {} arrivals over {duration}s (base {:.2} qps), \
+         policy {policy_name}, {workers} worker(s)",
         arrivals.len(),
         spec.base_qps
     );
@@ -258,7 +266,7 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         },
         policy,
         &arrivals,
-        &ServeOptions::default(),
+        &ServeOptions { workers, ..ServeOptions::default() },
     )?;
     let summary = compass::metrics::RunSummary::compute(
         &out.records,

@@ -17,6 +17,12 @@
 //! * **asymmetric temporal hysteresis** (§V-F): upscaling (toward fast)
 //!   has ~zero cooldown because violations are immediate; downscaling
 //!   (toward accurate) waits out `t↓` of sustained low load.
+//!
+//! With a pool of `w` executor workers the server is an M/G/w queue and
+//! the effective service rate is `w·μ`: a depth-N queue drains in
+//! `N·s̄/w`, so both thresholds scale by `w` (`N↑k = ⌊w·Δk / s̄k⌋`, and
+//! analogously for `N↓k`). `w = 1` reproduces the paper's equations
+//! unchanged.
 
 use super::pareto::ProfiledConfig;
 use super::plan::{ConfigPolicy, Plan};
@@ -32,18 +38,28 @@ pub struct AqmParams {
     pub up_cooldown_ms: f64,
     /// Downscale cooldown `t↓` (ms): several seconds.
     pub down_cooldown_ms: f64,
+    /// Executor worker count k (M/G/k): thresholds scale with the
+    /// effective service rate k·μ.
+    pub workers: usize,
 }
 
 impl AqmParams {
     /// Paper defaults, scaled to an SLO: `h_s` = 10% of L, `t↑` = 0,
     /// `t↓` = 5 s scaled by L/1000 (the paper's 5 s at a 1000 ms SLO).
+    /// Single-server (the paper's testbed).
     pub fn for_slo(slo_ms: f64) -> AqmParams {
         AqmParams {
             slo_ms,
             slack_buffer_ms: 0.10 * slo_ms,
             up_cooldown_ms: 0.0,
             down_cooldown_ms: 5.0 * slo_ms,
+            workers: 1,
         }
+    }
+
+    /// Paper defaults for a pool of `workers` executors.
+    pub fn for_slo_workers(slo_ms: f64, workers: usize) -> AqmParams {
+        AqmParams { workers: workers.max(1), ..AqmParams::for_slo(slo_ms) }
     }
 }
 
@@ -72,11 +88,13 @@ pub fn derive_plan(front: &[ProfiledConfig], params: AqmParams) -> Plan {
         ladder.push(&front[0]);
     }
 
+    let w = params.workers.max(1) as f64;
     let mut policies: Vec<ConfigPolicy> = Vec::with_capacity(ladder.len());
     for (k, c) in ladder.iter().enumerate() {
         let slack = params.slo_ms - c.latency.p95_ms; // Δk (Eq. 7)
         let upscale = if slack > 0.0 {
-            (slack / c.latency.mean_ms).floor().max(0.0) as u64 // Eq. 10
+            // Eq. 10, effective service rate w·μ.
+            (w * slack / c.latency.mean_ms).floor().max(0.0) as u64
         } else {
             0
         };
@@ -85,7 +103,8 @@ pub fn derive_plan(front: &[ProfiledConfig], params: AqmParams) -> Plan {
         let downscale = if k + 1 < ladder.len() {
             let next = ladder[k + 1];
             let next_slack = params.slo_ms - next.latency.p95_ms;
-            let n = ((next_slack - params.slack_buffer_ms) / next.latency.mean_ms)
+            let n = (w * (next_slack - params.slack_buffer_ms)
+                / next.latency.mean_ms)
                 .floor();
             Some(n.max(0.0) as u64)
         } else {
@@ -108,6 +127,7 @@ pub fn derive_plan(front: &[ProfiledConfig], params: AqmParams) -> Plan {
         slack_buffer_ms: params.slack_buffer_ms,
         up_cooldown_ms: params.up_cooldown_ms,
         down_cooldown_ms: params.down_cooldown_ms,
+        workers: params.workers.max(1),
         ladder: policies,
     }
 }
@@ -176,6 +196,29 @@ mod tests {
         assert_eq!(plan.ladder.len(), 1);
         assert_eq!(plan.ladder[0].label, "c-20");
         assert_eq!(plan.ladder[0].upscale_threshold, 0);
+    }
+
+    #[test]
+    fn worker_pool_scales_thresholds() {
+        // k workers drain a depth-N queue k times faster, so every
+        // threshold scales by k (Eq. 10 with effective rate k·μ).
+        let p1 = derive_plan(&front3(), AqmParams::for_slo(300.0));
+        let p4 = derive_plan(&front3(), AqmParams::for_slo_workers(300.0, 4));
+        assert_eq!(p4.workers, 4);
+        // floor(4·270/20) = 54, floor(4·230/45) = 20, floor(4·160/90) = 7.
+        assert_eq!(p4.ladder[0].upscale_threshold, 54);
+        assert_eq!(p4.ladder[1].upscale_threshold, 20);
+        assert_eq!(p4.ladder[2].upscale_threshold, 7);
+        // N↓0 = floor(4·(230-30)/45) = 17, N↓1 = floor(4·(160-30)/90) = 5.
+        assert_eq!(p4.ladder[0].downscale_threshold, Some(17));
+        assert_eq!(p4.ladder[1].downscale_threshold, Some(5));
+        // k = 1 must reproduce the paper's numbers unchanged.
+        assert_eq!(p1.workers, 1);
+        assert_eq!(p1.ladder[0].upscale_threshold, 13);
+        for (a, b) in p1.ladder.iter().zip(&p4.ladder) {
+            assert!(b.upscale_threshold >= 4 * a.upscale_threshold);
+            assert!(b.upscale_threshold < 4 * (a.upscale_threshold + 1));
+        }
     }
 
     #[test]

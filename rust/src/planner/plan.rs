@@ -30,6 +30,9 @@ pub struct Plan {
     pub slack_buffer_ms: f64,
     pub up_cooldown_ms: f64,
     pub down_cooldown_ms: f64,
+    /// Executor worker count k the thresholds were derived for (M/G/k):
+    /// queue-depth thresholds scale with the effective service rate k·μ.
+    pub workers: usize,
     /// Ordered by increasing mean service time (index 0 = fastest).
     pub ladder: Vec<ConfigPolicy>,
 }
@@ -73,6 +76,7 @@ impl Plan {
             ("slack_buffer_ms", Json::num(self.slack_buffer_ms)),
             ("up_cooldown_ms", Json::num(self.up_cooldown_ms)),
             ("down_cooldown_ms", Json::num(self.down_cooldown_ms)),
+            ("workers", Json::num(self.workers as f64)),
             ("ladder", Json::Arr(ladder)),
         ])
     }
@@ -108,6 +112,12 @@ impl Plan {
             slack_buffer_ms: j.get("slack_buffer_ms")?.as_f64()?,
             up_cooldown_ms: j.get("up_cooldown_ms")?.as_f64()?,
             down_cooldown_ms: j.get("down_cooldown_ms")?.as_f64()?,
+            // Absent in pre-pool plan files: default to one worker.
+            workers: j
+                .get("workers")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(1)
+                .max(1),
             ladder,
         })
     }
@@ -115,8 +125,12 @@ impl Plan {
     /// Console rendering of the ladder (Table-I style).
     pub fn render(&self) -> String {
         let mut out = format!(
-            "Plan: SLO {:.0} ms, h_s {:.0} ms, t↑ {:.0} ms, t↓ {:.0} ms\n",
-            self.slo_ms, self.slack_buffer_ms, self.up_cooldown_ms, self.down_cooldown_ms
+            "Plan: SLO {:.0} ms, h_s {:.0} ms, t↑ {:.0} ms, t↓ {:.0} ms, workers {}\n",
+            self.slo_ms,
+            self.slack_buffer_ms,
+            self.up_cooldown_ms,
+            self.down_cooldown_ms,
+            self.workers
         );
         out.push_str(
             "  idx  label                                     acc     mean      p95    Δk     N↑    N↓\n",
@@ -150,6 +164,7 @@ mod tests {
             slack_buffer_ms: 30.0,
             up_cooldown_ms: 0.0,
             down_cooldown_ms: 1500.0,
+            workers: 2,
             ladder: vec![
                 ConfigPolicy {
                     label: "fast".into(),
@@ -190,5 +205,20 @@ mod tests {
         assert!(r.contains("fast"));
         assert!(r.contains("accurate"));
         assert!(r.contains("SLO 300 ms"));
+        assert!(r.contains("workers 2"));
+    }
+
+    #[test]
+    fn legacy_plan_json_defaults_to_one_worker() {
+        // Plan files written before the worker pool carry no "workers"
+        // key; they must still load (as single-server plans).
+        let mut p = plan();
+        p.workers = 1;
+        let mut j = p.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("workers");
+        }
+        let parsed = Plan::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(parsed, p);
     }
 }

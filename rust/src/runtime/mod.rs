@@ -13,6 +13,12 @@
 
 pub mod manifest;
 
+// Offline builds resolve the `xla` PJRT bindings to an in-tree stub that
+// fails cleanly at client construction; swap this for `use xla;` (and a
+// Cargo dependency) when the real crate is available.
+#[path = "xla_stub.rs"]
+mod xla;
+
 pub use manifest::{ArtifactMeta, IoSpec, Manifest};
 
 use std::collections::HashMap;

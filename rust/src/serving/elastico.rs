@@ -146,6 +146,7 @@ mod tests {
             slack_buffer_ms: 30.0,
             up_cooldown_ms: 0.0,
             down_cooldown_ms: 5000.0,
+            workers: 1,
             ladder: vec![
                 rung("fast", 0.76, 20.0, 30.0, 13, Some(4)),
                 rung("medium", 0.82, 45.0, 70.0, 5, Some(1)),

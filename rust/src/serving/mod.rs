@@ -5,6 +5,35 @@
 //! The controller logic lives in [`policy`] and is shared verbatim with
 //! the discrete-event simulator ([`crate::sim`]), so simulated and live
 //! behavior can be compared 1:1.
+//!
+//! ## Serving architecture (k workers)
+//!
+//! The runtime is an M/G/k system ([`ServeOptions::workers`], default 1
+//! = the paper's single-server testbed):
+//!
+//! * **one bounded FIFO [`RequestQueue`]** is the admission point — a
+//!   full queue rejects at push (admission control), and `close()`
+//!   wakes every blocked worker for prompt shutdown;
+//! * **k executor threads** drain that shared queue. PJRT handles are
+//!   `!Send`, so each worker constructs its *own* engine inside its
+//!   thread from a shared `Fn() -> Result<E>` factory; the run clock
+//!   starts once the last worker finishes compiling, so engine startup
+//!   never counts as queueing delay;
+//! * **shared control plane**: one policy cell (mutex) takes every load
+//!   observation — each arrival, each dequeue, each departure, and a
+//!   periodic monitor tick — and appends to one switch audit trail, so
+//!   the pool adapts as a unit exactly like the single server did;
+//! * **per-worker records are merged at join** and sorted by request id
+//!   (a no-op at k = 1), and `served + rejected == arrivals` always
+//!   holds;
+//! * **worker-aware thresholds**: plans carry the worker count they
+//!   were derived for ([`crate::planner::Plan::workers`]) — the AQM
+//!   scales queue-depth thresholds with the effective service rate k·μ,
+//!   and [`crate::sim::simulate_k`] models the same FIFO/earliest-free
+//!   discipline. (One known observation difference, inherited from the
+//!   seed: on arrival the simulator's policy sees queue depth *plus*
+//!   in-service count, while the live injector sees only queue depth —
+//!   an off-by-≤1 at k = 1 that grows to ≤k for a pool.)
 
 pub mod elastico;
 pub mod executor;

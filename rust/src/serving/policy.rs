@@ -3,6 +3,12 @@
 //! A [`ScalingPolicy`] maps observed load (queue depth, time) to a rung of
 //! the Pareto ladder. The same trait drives the live server and the
 //! discrete-event simulator.
+//!
+//! Policies are constructed from a [`crate::planner::Plan`], which
+//! carries the executor worker count its queue-depth thresholds were
+//! derived for (`Plan::workers`, effective service rate k·μ) — a policy
+//! built from a k-worker plan is only meaningful against a k-worker
+//! pool (`ServeOptions::workers` / `sim::simulate_k`).
 
 /// A runtime configuration-selection policy over a ladder of `n` rungs
 /// (index 0 = fastest, `n-1` = most accurate).

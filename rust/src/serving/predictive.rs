@@ -86,7 +86,9 @@ impl ScalingPolicy for PredictivePolicy {
         // current rung can sustain, upscale one rung early.
         let plan = self.inner.plan();
         if reactive > 0 {
-            let svc_rate = self.target_utilization / plan.ladder[reactive].mean_ms;
+            // Sustainable rate across the worker pool: k·ρ_target·μ.
+            let k = plan.workers.max(1) as f64;
+            let svc_rate = k * self.target_utilization / plan.ladder[reactive].mean_ms;
             // Guard against slope noise: anticipate only when the smoothed
             // rate is already a substantial fraction of capacity AND the
             // projection exceeds it.
@@ -164,6 +166,34 @@ mod tests {
             d <= reactive_thr + 1,
             "predictive upscale at depth {d} vs reactive threshold {reactive_thr}"
         );
+    }
+
+    #[test]
+    fn worker_pool_raises_the_anticipation_bar() {
+        // The same gentle ramp that triggers a predictive upscale on one
+        // worker is comfortably sustainable on eight: an 8-worker plan
+        // must not anticipate (its thresholds and k·μ are 8x higher).
+        let mk = |label: &str, acc: f64, mean: f64| ProfiledConfig {
+            config: vec![],
+            label: label.into(),
+            accuracy: acc,
+            latency: LatencyProfile {
+                mean_ms: mean,
+                p50_ms: mean,
+                p95_ms: mean * 1.2,
+                runs: 10,
+            },
+        };
+        let front = [mk("fast", 0.76, 10.0), mk("accurate", 0.85, 60.0)];
+        let plan8 = derive_plan(&front, AqmParams::for_slo_workers(400.0, 8));
+        let mut p = PredictivePolicy::new(plan8);
+        let mut t = 0.0;
+        for step in 0..60 {
+            t += 20.0;
+            let depth = (step * step) / 120; // same ramp as the k=1 test
+            let cur = p.decide(t, depth);
+            assert_eq!(cur, 1, "8-worker pool upscaled at depth {depth}");
+        }
     }
 
     #[test]

@@ -53,7 +53,15 @@ impl<T> RequestQueue<T> {
 
     /// Blocking pop with timeout. `None` on timeout; `Err(Closed)` once
     /// the queue is closed **and** drained.
+    ///
+    /// The wait is bounded by a deadline (not restarted on every wakeup),
+    /// so a consumer racing with other workers for notifications still
+    /// returns within `timeout`. `close()` wakes **all** blocked
+    /// consumers, and a consumer observing the close — on wakeup or on
+    /// its timeout — reports `Closed` immediately rather than waiting
+    /// out the remaining timeout.
     pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<T>, QueueError> {
+        let deadline = std::time::Instant::now() + timeout;
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(item) = g.items.pop_front() {
@@ -62,11 +70,12 @@ impl<T> RequestQueue<T> {
             if g.closed {
                 return Err(QueueError::Closed);
             }
-            let (g2, res) = self.notify.wait_timeout(g, timeout).unwrap();
-            g = g2;
-            if res.timed_out() {
-                return Ok(g.items.pop_front());
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
+                return Ok(None);
             }
+            let (g2, _res) = self.notify.wait_timeout(g, remaining).unwrap();
+            g = g2;
         }
     }
 
@@ -123,6 +132,56 @@ mod tests {
             q.pop_timeout(Duration::from_millis(1)),
             Err(QueueError::Closed)
         );
+    }
+
+    #[test]
+    fn close_wakes_all_blocked_consumers_promptly() {
+        // k workers blocked with a long timeout must all observe Closed
+        // as soon as the producer closes, not after spinning out their
+        // timeout (the worker-pool shutdown path).
+        let q: Arc<RequestQueue<u32>> = Arc::new(RequestQueue::new(8));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let t0 = std::time::Instant::now();
+                    let r = q.pop_timeout(Duration::from_secs(30));
+                    (r, t0.elapsed())
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(50)); // let them block
+        q.close();
+        for h in handles {
+            let (r, dt) = h.join().unwrap();
+            assert_eq!(r, Err(QueueError::Closed));
+            assert!(dt < Duration::from_secs(5), "woke only after {dt:?}");
+        }
+    }
+
+    #[test]
+    fn timeout_is_a_deadline_not_a_restart() {
+        // Repeated notifications that yield no item must not extend the
+        // wait beyond the requested timeout.
+        let q: Arc<RequestQueue<u32>> = Arc::new(RequestQueue::new(8));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            let r = q2.pop_timeout(Duration::from_millis(200));
+            (r, t0.elapsed())
+        });
+        // A racing thread drains every pushed item before the consumer
+        // can observe it, while still generating wakeups for ~840 ms —
+        // well past the consumer's 200 ms deadline. A wait that restarts
+        // its timeout on every wakeup would outlast the whole barrage.
+        for _ in 0..40 {
+            q.push(1).unwrap();
+            while q.pop_timeout(Duration::from_millis(1)).unwrap().is_some() {}
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let (r, dt) = consumer.join().unwrap();
+        assert!(r.is_ok(), "{r:?}");
+        assert!(dt < Duration::from_millis(600), "waited {dt:?}");
     }
 
     #[test]

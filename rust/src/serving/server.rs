@@ -1,11 +1,15 @@
 //! The serving loop (paper Fig. 2, online phase): arrival injector →
-//! central queue → executor thread, with the controller observing load
-//! on every arrival, every dequeue and a periodic monitor tick.
+//! central queue → a pool of k executor threads (M/G/k), with the
+//! controller observing load on every arrival, every dequeue and a
+//! periodic monitor tick.
 //!
-//! Threading: PJRT handles are `!Send`, so the engine is *constructed
-//! inside* the executor thread from a `Send` factory closure. The policy
-//! is shared behind a mutex (decisions are microseconds; the lock is
-//! uncontended relative to service times).
+//! Threading: PJRT handles are `!Send`, so each worker *constructs its
+//! own engine inside its thread* from a shared `Fn() -> Result<E>`
+//! factory. The policy is shared behind a mutex (decisions are
+//! microseconds; the lock is uncontended relative to service times), as
+//! is the switch audit trail; per-worker request records are merged at
+//! join. With `workers == 1` the semantics are identical to the paper's
+//! single-server testbed.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -26,11 +30,14 @@ pub struct ServeOptions {
     pub queue_capacity: usize,
     /// Monitor tick period (ms) — drives hysteresis progress when idle.
     pub tick_ms: u64,
+    /// Executor worker threads k (M/G/k). Each worker builds its own
+    /// engine from the factory; all drain the shared queue.
+    pub workers: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { queue_capacity: 4096, tick_ms: 20 }
+        ServeOptions { queue_capacity: 4096, tick_ms: 20, workers: 1 }
     }
 }
 
@@ -67,10 +74,18 @@ impl PolicyCell {
     }
 }
 
+/// The run-clock gate: the clock starts only once **every** worker has
+/// built (and PJRT-compiled) its engine, so compilation never masquerades
+/// as queueing delay. The last worker to finish building sets `start`.
+struct StartGate {
+    pending: usize,
+    start: Option<Instant>,
+}
+
 /// Run a serving experiment.
 ///
-/// * `make_engine` is called **inside** the executor thread (PJRT is
-///   thread-bound).
+/// * `make_engine` is called **inside** each executor thread (PJRT is
+///   thread-bound); with `opts.workers == k` it is called k times.
 /// * `arrivals` are offsets in seconds from run start; the injector
 ///   sleeps them out in real time (service times are real compute, so
 ///   time cannot be compressed without changing utilization).
@@ -81,24 +96,23 @@ pub fn serve<F, E>(
     opts: &ServeOptions,
 ) -> Result<ServeOutcome>
 where
-    F: FnOnce() -> Result<E> + Send,
+    F: Fn() -> Result<E> + Send + Sync,
     E: RequestEngine,
 {
-    // The run clock starts only once the engine is built: PJRT model
-    // compilation takes seconds and must not masquerade as queueing
-    // delay. The executor thread sets `start` after `make_engine`
-    // returns; the injector and monitor wait on it.
-    let start_cell: Arc<(Mutex<Option<Instant>>, Condvar)> =
-        Arc::new((Mutex::new(None), Condvar::new()));
+    let workers = opts.workers.max(1);
+    let gate: Arc<(Mutex<StartGate>, Condvar)> = Arc::new((
+        Mutex::new(StartGate { pending: workers, start: None }),
+        Condvar::new(),
+    ));
     let wait_start = {
-        let cell = start_cell.clone();
+        let gate = gate.clone();
         move || -> Instant {
-            let (lock, cv) = &*cell;
+            let (lock, cv) = &*gate;
             let mut g = lock.lock().unwrap();
-            while g.is_none() {
+            while g.start.is_none() {
                 g = cv.wait(g).unwrap();
             }
-            g.unwrap()
+            g.start.unwrap()
         }
     };
 
@@ -113,6 +127,7 @@ where
     }));
     let done = Arc::new(AtomicBool::new(false));
     let rejected = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let make_engine = &make_engine;
 
     std::thread::scope(|scope| -> Result<ServeOutcome> {
         // ---- monitor tick thread: keeps hysteresis moving when idle.
@@ -166,57 +181,80 @@ where
             });
         }
 
-        // ---- executor (single server, as in the paper's testbed).
-        let records = {
-            let queue = queue.clone();
-            let cell = cell.clone();
-            let start_cell2 = start_cell.clone();
-            let handle = scope.spawn(move || -> Result<Vec<RequestRecord>> {
-                // Build (and PJRT-compile) the engine, then release the
-                // run clock.
-                let engine = make_engine();
-                let start = Instant::now();
-                {
-                    let (lock, cv) = &*start_cell2;
-                    *lock.lock().unwrap() = Some(start);
-                    cv.notify_all();
-                }
-                let mut engine = engine?;
-                let now_ms = move || start.elapsed().as_secs_f64() * 1e3;
-                let mut records = Vec::new();
-                loop {
-                    match queue.pop_timeout(Duration::from_millis(50)) {
-                        Ok(Some((id, arrival_ms))) => {
-                            let t_start = now_ms();
-                            // Switches take effect at dequeue.
-                            let idx = cell
-                                .lock()
-                                .unwrap()
-                                .observe(t_start, queue.len());
-                            let out = engine.execute(idx)?;
-                            let t_fin = now_ms();
-                            records.push(RequestRecord {
-                                id,
-                                arrival_ms,
-                                start_ms: t_start,
-                                finish_ms: t_fin,
-                                config_idx: idx,
-                                accuracy: out.accuracy,
-                                success: out.success,
-                            });
-                            cell.lock().unwrap().observe(t_fin, queue.len());
+        // ---- executor pool: k workers drain the shared queue.
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let queue = queue.clone();
+                let cell = cell.clone();
+                let gate = gate.clone();
+                scope.spawn(move || -> Result<Vec<RequestRecord>> {
+                    // Build (and PJRT-compile) the engine; the last
+                    // worker to finish releases the run clock. A failed
+                    // build still releases it so the run can wind down.
+                    let engine = make_engine();
+                    let start = {
+                        let (lock, cv) = &*gate;
+                        let mut g = lock.lock().unwrap();
+                        g.pending -= 1;
+                        if g.pending == 0 {
+                            g.start = Some(Instant::now());
+                            cv.notify_all();
                         }
-                        Ok(None) => {}
-                        Err(QueueError::Closed) => break,
-                        Err(QueueError::Full) => unreachable!(),
+                        while g.start.is_none() {
+                            g = cv.wait(g).unwrap();
+                        }
+                        g.start.unwrap()
+                    };
+                    let mut engine = engine?;
+                    let now_ms = move || start.elapsed().as_secs_f64() * 1e3;
+                    let mut records = Vec::new();
+                    loop {
+                        match queue.pop_timeout(Duration::from_millis(50)) {
+                            Ok(Some((id, arrival_ms))) => {
+                                let t_start = now_ms();
+                                // Switches take effect at dequeue.
+                                let idx = cell
+                                    .lock()
+                                    .unwrap()
+                                    .observe(t_start, queue.len());
+                                let out = engine.execute(idx)?;
+                                let t_fin = now_ms();
+                                records.push(RequestRecord {
+                                    id,
+                                    arrival_ms,
+                                    start_ms: t_start,
+                                    finish_ms: t_fin,
+                                    config_idx: idx,
+                                    accuracy: out.accuracy,
+                                    success: out.success,
+                                });
+                                cell.lock().unwrap().observe(t_fin, queue.len());
+                            }
+                            Ok(None) => {}
+                            Err(QueueError::Closed) => break,
+                            Err(QueueError::Full) => unreachable!(),
+                        }
                     }
-                }
-                Ok(records)
-            });
-            let r = handle.join().expect("executor panicked")?;
-            done.store(true, Ordering::Relaxed);
-            r
-        };
+                    Ok(records)
+                })
+            })
+            .collect();
+
+        // Join every worker before signalling `done` (the monitor must
+        // keep ticking while any worker still drains the queue), then
+        // merge the per-worker records and propagate the first error.
+        let results: Vec<Result<Vec<RequestRecord>>> = handles
+            .into_iter()
+            .map(|h| h.join().expect("executor panicked"))
+            .collect();
+        done.store(true, Ordering::Relaxed);
+        let mut records = Vec::new();
+        for r in results {
+            records.extend(r?);
+        }
+        // Deterministic order regardless of which worker served what
+        // (a no-op at k = 1: one FIFO consumer pops in id order).
+        records.sort_by_key(|r| r.id);
 
         let switches = {
             let cell = cell.lock().unwrap();
@@ -299,10 +337,23 @@ mod tests {
             },
             Box::new(StaticPolicy::new(0, "only")),
             &arrivals,
-            &ServeOptions { queue_capacity: 4, tick_ms: 10 },
+            &ServeOptions { queue_capacity: 4, tick_ms: 10, workers: 1 },
         )
         .unwrap();
         assert!(out.rejected > 0);
         assert_eq!(out.records.len() + out.rejected, 30);
+    }
+
+    #[test]
+    fn engine_build_failure_propagates() {
+        let arrivals = [0.0, 0.001];
+        let err = serve(
+            || -> Result<MockEngine> { anyhow::bail!("no accelerator") },
+            Box::new(StaticPolicy::new(0, "only")),
+            &arrivals,
+            &ServeOptions::default(),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("no accelerator"));
     }
 }

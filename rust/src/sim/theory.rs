@@ -1,6 +1,8 @@
-//! Analytical queueing formulas (M/M/1, M/G/1) used to validate the
-//! discrete-event simulator — the foundation the AQM's guarantees rest
-//! on (§V models the server as an M/G/1 queue).
+//! Analytical queueing formulas (M/M/1, M/G/1, Erlang-C, M/G/k) used to
+//! validate the discrete-event simulator — the foundation the AQM's
+//! guarantees rest on (§V models the server as an M/G/1 queue; the
+//! k-worker pool generalizes it to M/G/k via the Allen–Cunneen
+//! approximation).
 
 /// M/M/1 mean number in system: `ρ / (1 - ρ)`.
 pub fn mm1_mean_in_system(rho: f64) -> f64 {
@@ -22,6 +24,40 @@ pub fn mg1_mean_wait(lambda: f64, mean_s: f64, second_moment_s: f64) -> f64 {
     lambda * second_moment_s / (2.0 * (1.0 - rho))
 }
 
+/// Erlang-C: probability that an arrival must wait in an M/M/k queue
+/// with offered load `a = λ/μ` (erlangs). Requires `a < k` (stability).
+///
+/// Computed through the numerically stable Erlang-B recurrence
+/// `B(n) = a·B(n-1) / (n + a·B(n-1))` and the conversion
+/// `C = B / (1 - ρ + ρ·B)` — no factorials, no overflow for large k.
+pub fn erlang_c(k: usize, a: f64) -> f64 {
+    assert!(k >= 1, "need at least one server");
+    assert!(
+        (0.0..k as f64).contains(&a),
+        "unstable queue (a = {a}, k = {k})"
+    );
+    let mut b = 1.0;
+    for n in 1..=k {
+        b = a * b / (n as f64 + a * b);
+    }
+    let rho = a / k as f64;
+    b / (1.0 - rho + rho * b)
+}
+
+/// M/M/k mean waiting time: `W = C(k, a) / (kμ - λ)`.
+pub fn mmk_mean_wait(k: usize, lambda: f64, mu: f64) -> f64 {
+    erlang_c(k, lambda / mu) / (k as f64 * mu - lambda)
+}
+
+/// M/G/k mean waiting time (Allen–Cunneen / Lee–Longton approximation):
+/// the M/M/k wait scaled by `(1 + cv²) / 2` where `cv` is the service
+/// coefficient of variation. Exact at k = 1 (it reduces to
+/// Pollaczek–Khinchine) and for exponential service at any k.
+pub fn mgk_mean_wait(k: usize, lambda: f64, mean_s: f64, second_moment_s: f64) -> f64 {
+    let cv2 = (second_moment_s / (mean_s * mean_s) - 1.0).max(0.0);
+    mmk_mean_wait(k, lambda, 1.0 / mean_s) * (1.0 + cv2) / 2.0
+}
+
 /// Second moment of a lognormal with given mean and sigma (log-space).
 pub fn lognormal_second_moment(mean: f64, sigma: f64) -> f64 {
     // E[X²] = exp(2μ + 2σ²) with μ = ln(mean) - σ²/2.
@@ -35,7 +71,7 @@ mod tests {
     use crate::metrics::RequestRecord;
     use crate::planner::{ConfigPolicy, Plan};
     use crate::serving::StaticPolicy;
-    use crate::sim::{simulate, DeterministicService, LognormalService};
+    use crate::sim::{simulate, simulate_k, DeterministicService, LognormalService};
     use crate::workload::{generate_arrivals, Pattern, WorkloadSpec};
 
     fn plan_one(mean: f64, p95: f64) -> Plan {
@@ -44,6 +80,7 @@ mod tests {
             slack_buffer_ms: 0.0,
             up_cooldown_ms: 0.0,
             down_cooldown_ms: 0.0,
+            workers: 1,
             ladder: vec![ConfigPolicy {
                 label: "only".into(),
                 config: vec![],
@@ -104,6 +141,52 @@ mod tests {
         assert!(
             (measured - expect).abs() / expect < 0.2,
             "P-K wait: measured {measured:.2} expect {expect:.2}"
+        );
+    }
+
+    #[test]
+    fn erlang_c_matches_tabulated_values() {
+        // k = 1 reduces to ρ.
+        assert!((erlang_c(1, 0.5) - 0.5).abs() < 1e-12);
+        assert!((erlang_c(1, 0.9) - 0.9).abs() < 1e-12);
+        // Textbook values: C(2, a=1) = 1/3, C(3, a=2) = 4/9.
+        assert!((erlang_c(2, 1.0) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((erlang_c(3, 2.0) - 4.0 / 9.0).abs() < 1e-12);
+        // Heavier pool, moderate load: waiting probability keeps
+        // shrinking as servers are added at fixed ρ.
+        let c2 = erlang_c(2, 2.0 * 0.7);
+        let c8 = erlang_c(8, 8.0 * 0.7);
+        assert!(c8 < c2, "C8 {c8} should be < C2 {c2}");
+    }
+
+    #[test]
+    fn mgk_reduces_to_pollaczek_khinchine_at_k1() {
+        let (lambda, mean, m2) = (0.03, 20.0, 520.0);
+        let pk = mg1_mean_wait(lambda, mean, m2);
+        let ac = mgk_mean_wait(1, lambda, mean, m2);
+        assert!((pk - ac).abs() / pk < 1e-12, "PK {pk} vs AC {ac}");
+    }
+
+    #[test]
+    fn simulator_matches_mdk_wait() {
+        // M/D/2 at ρ = 0.75: Allen–Cunneen predicts
+        // W ≈ C(2, 1.5)/(2μ - λ) · 1/2 (cv = 0 for deterministic
+        // service); the approximation is good to a few percent here.
+        let plan = plan_one(15.0, 15.0);
+        let arrivals = generate_arrivals(&WorkloadSpec {
+            base_qps: 100.0, // λ = 0.1/ms, a = 1.5 erlangs over k = 2
+            duration_s: 3000.0,
+            pattern: Pattern::Steady,
+            seed: 29,
+        });
+        let svc = DeterministicService { means: vec![15.0] };
+        let mut pol = StaticPolicy::new(0, "only");
+        let out = simulate_k(&arrivals, &plan, &mut pol, &svc, 29, 2);
+        let measured = mean_wait(&out.records);
+        let expect = mgk_mean_wait(2, 0.1, 15.0, 15.0 * 15.0);
+        assert!(
+            (measured - expect).abs() / expect < 0.15,
+            "M/D/2 wait: measured {measured:.2} expect {expect:.2}"
         );
     }
 

@@ -1,6 +1,11 @@
 //! Integration: load AOT artifacts through PJRT and execute every model
 //! kind end-to-end. Requires `make artifacts` (skips gracefully when the
 //! artifacts directory is absent, e.g. in a source-only checkout).
+//!
+//! All three tests are `#[ignore]`d: the offline build links the PJRT
+//! stub (`runtime::xla_stub`), so even with artifacts present there is
+//! no real backend to execute them. Run with `--ignored` on a build
+//! carrying the real `xla` crate.
 
 use compass::configspace::rag_space;
 use compass::runtime::{artifacts_dir, ArtifactLib, TensorIn};
@@ -14,6 +19,7 @@ fn have_artifacts() -> bool {
 }
 
 #[test]
+#[ignore = "needs real PJRT (xla crate) + `make artifacts`; offline build links the stub"]
 fn retriever_executes_and_ranks_planted_doc() {
     if !have_artifacts() {
         eprintln!("skipping: no artifacts");
@@ -53,6 +59,7 @@ fn retriever_executes_and_ranks_planted_doc() {
 }
 
 #[test]
+#[ignore = "needs real PJRT (xla crate) + `make artifacts`; offline build links the stub"]
 fn generator_reranker_detector_execute() {
     if !have_artifacts() {
         eprintln!("skipping: no artifacts");
@@ -105,6 +112,7 @@ fn generator_reranker_detector_execute() {
 }
 
 #[test]
+#[ignore = "needs real PJRT (xla crate) + `make artifacts`; offline build links the stub"]
 fn rag_workflow_runs_all_stages() {
     if !have_artifacts() {
         eprintln!("skipping: no artifacts");

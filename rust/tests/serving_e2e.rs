@@ -41,7 +41,7 @@ fn run(policy_idx: Option<usize>, arrivals: &[f64], slo: f64) -> RunSummary {
         },
         policy,
         arrivals,
-        &ServeOptions { queue_capacity: 8192, tick_ms: 5 },
+        &ServeOptions { queue_capacity: 8192, tick_ms: 5, workers: 1 },
     )
     .unwrap();
     RunSummary::compute(&out.records, &out.switches, slo, 3)
