@@ -1,23 +1,90 @@
 //! Bench: L3 coordinator hot-path microbenchmarks (perf pass §Perf):
-//! queue ops, monitor ticks, policy decisions, record aggregation —
-//! everything on the request path *except* the model compute — plus the
-//! M/G/k simulator swept over the worker-pool sizes k ∈ {1, 2, 4, 8}.
+//! queue ops (uncontended *and* contended multi-producer/multi-consumer,
+//! central mutex FIFO vs sharded work stealing), monitor ticks, policy
+//! decisions, record aggregation — everything on the request path
+//! *except* the model compute — plus the M/G/k simulator swept over the
+//! worker-pool sizes k ∈ {1, 2, 4, 8}.
+//!
+//! Emits `BENCH_hotpath.json` (name → ns/iter) so the perf trajectory
+//! is tracked across PRs; the contended sweep is the acceptance gauge
+//! for the sharded-queue work (sharded ≥ 2x central at k ≥ 4).
+
+use std::sync::Arc;
+use std::time::Duration;
+
 use compass::experiments::common::{
-    base_qps_k, make_policy, offline_phase, simulate_boxed_k,
+    base_qps_k, make_policy, offline_phase, simulate_boxed_disc,
 };
 use compass::metrics::{RequestRecord, RunSummary};
 use compass::planner::{derive_plan, AqmParams, LatencyProfile, ProfiledConfig};
 use compass::serving::monitor::LoadMonitor;
-use compass::serving::RequestQueue;
+use compass::serving::{Discipline, Popped, RequestQueue, ShardedQueue};
 use compass::sim::LognormalService;
-use compass::util::bench::{bench, group};
+use compass::util::bench::{bench, fast_mode, group, write_json, BenchResult};
 use compass::util::Rng;
 use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
 
+/// Push+pop pairs per thread in the contended sweep.
+const MPMC_OPS: usize = 10_000;
+
+/// k threads each driving `ops` push+pop pairs through one shared
+/// central FIFO (every operation crosses the one mutex).
+fn central_mpmc(k: usize, ops: usize) {
+    let q: Arc<RequestQueue<(u64, f64)>> = Arc::new(RequestQueue::new(k * ops));
+    std::thread::scope(|s| {
+        for _ in 0..k {
+            let q = q.clone();
+            s.spawn(move || {
+                for i in 0..ops {
+                    q.push((i as u64, 0.0)).unwrap();
+                    loop {
+                        match q.pop_timeout(Duration::from_millis(100)) {
+                            Ok(Some(item)) => {
+                                std::hint::black_box(item);
+                                break;
+                            }
+                            Ok(None) => {}
+                            Err(e) => panic!("{e:?}"),
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// The same workload over a k-shard work-stealing queue: round-robin
+/// producers, per-worker consumers, 1/k of the traffic per shard mutex.
+fn sharded_mpmc(k: usize, ops: usize) {
+    let q: Arc<ShardedQueue<(u64, f64)>> = Arc::new(ShardedQueue::new(k * ops, k));
+    std::thread::scope(|s| {
+        for w in 0..k {
+            let q = q.clone();
+            s.spawn(move || {
+                for i in 0..ops {
+                    q.push((i as u64, 0.0)).unwrap();
+                    loop {
+                        match q.pop_timeout(w, Duration::from_millis(100)) {
+                            Popped::Item(item) => {
+                                std::hint::black_box(item);
+                                break;
+                            }
+                            Popped::TimedOut => {}
+                            Popped::Closed => break,
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
 fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+
     group("hotpath: L3 coordinator overhead");
 
-    bench("queue push+pop x1k", 2, 100, || {
+    results.push(bench("queue push+pop x1k", 2, 100, || {
         let q: RequestQueue<(u64, f64)> = RequestQueue::new(4096);
         for i in 0..1000u64 {
             q.push((i, i as f64)).unwrap();
@@ -27,23 +94,35 @@ fn main() {
                 q.pop_timeout(std::time::Duration::from_millis(1)).unwrap(),
             );
         }
-    });
+    }));
 
-    bench("monitor tick x1k", 2, 100, || {
+    results.push(bench("sharded queue push+pop x1k (1 thread, 4 shards)", 2, 100, || {
+        let q: ShardedQueue<(u64, f64)> = ShardedQueue::new(4096, 4);
+        for i in 0..1000u64 {
+            q.push((i, i as f64)).unwrap();
+        }
+        for _ in 0..1000 {
+            std::hint::black_box(
+                q.pop_timeout(0, std::time::Duration::from_millis(1)),
+            );
+        }
+    }));
+
+    results.push(bench("monitor tick x1k", 2, 100, || {
         let m = LoadMonitor::new(0.3);
         for i in 0..1000 {
             m.on_arrival();
             std::hint::black_box(m.tick(i as f64 * 10.0));
         }
-    });
+    }));
 
     let (_s, plan) = offline_phase(0.75, 1000.0, 7, false).unwrap();
     let mut policy = make_policy(&plan, "Elastico");
-    bench("policy decide x1k", 2, 100, || {
+    results.push(bench("policy decide x1k", 2, 100, || {
         for i in 0..1000u64 {
             std::hint::black_box(policy.decide(i as f64, (i % 13) as usize));
         }
-    });
+    }));
 
     // Metrics aggregation over a large run.
     let mut rng = Rng::new(3);
@@ -61,15 +140,38 @@ fn main() {
             }
         })
         .collect();
-    bench("RunSummary::compute 100k records", 1, 20, || {
+    results.push(bench("RunSummary::compute 100k records", 1, 20, || {
         std::hint::black_box(RunSummary::compute(&records, &[], 100.0, 3));
-    });
+    }));
+
+    // Contended MPMC sweep: the single-threaded queue bench above cannot
+    // see the coordinator mutex — k threads hammering push/pop can. The
+    // central FIFO serializes all k on one lock; the sharded queue
+    // spreads them over k shard locks plus one atomic depth counter.
+    group("hotpath: contended queue (k threads x push+pop pairs)");
+    let ops = if fast_mode() { MPMC_OPS / 10 } else { MPMC_OPS };
+    for k in [1usize, 2, 4, 8] {
+        results.push(bench(
+            &format!("mpmc central k={k} push+pop x{ops}/thread"),
+            1,
+            10,
+            || central_mpmc(k, ops),
+        ));
+        results.push(bench(
+            &format!("mpmc sharded k={k} push+pop x{ops}/thread"),
+            1,
+            10,
+            || sharded_mpmc(k, ops),
+        ));
+    }
 
     // M/G/k coordinator sweep: the paper's spike trace replayed through
     // the discrete-event simulator at each pool size, with worker-aware
     // thresholds and pool-scaled load (per-worker ρ held constant). The
     // ladder itself is k-independent, so the search/profiling above is
     // not repeated: per-k plans re-derive thresholds from its profile.
+    // Both dispatch disciplines run so the DES cost of the steal sweep
+    // is visible alongside the ordering/latency deltas it models.
     group("hotpath: M/G/k simulator sweep");
     let front: Vec<ProfiledConfig> = plan
         .ladder
@@ -95,11 +197,38 @@ fn main() {
             seed: 7,
         });
         let svc = LognormalService::from_plan(&plan_k, 0.10);
-        bench(&format!("simulate spike 180s k={k}"), 1, 20, || {
-            let mut policy = make_policy(&plan_k, "Elastico");
-            std::hint::black_box(simulate_boxed_k(
-                &arrivals, &plan_k, &mut policy, &svc, 7, k,
+        for disc in [Discipline::CentralFifo, Discipline::ShardedSteal] {
+            results.push(bench(
+                &format!("simulate spike 180s k={k} {}", disc.name()),
+                1,
+                20,
+                || {
+                    let mut policy = make_policy(&plan_k, "Elastico");
+                    std::hint::black_box(simulate_boxed_disc(
+                        &arrivals, &plan_k, &mut policy, &svc, 7, k, disc, 0,
+                    ));
+                },
             ));
-        });
+        }
+    }
+
+    write_json("BENCH_hotpath.json", &results).expect("write BENCH_hotpath.json");
+
+    // Quick acceptance readout for the sharded-queue work: contended
+    // throughput ratio at each k (informational; CI greps the JSON).
+    println!();
+    for k in [2usize, 4, 8] {
+        let find = |name: &str| {
+            results
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.summary_us.mean)
+        };
+        if let (Some(c), Some(s)) = (
+            find(&format!("mpmc central k={k} push+pop x{ops}/thread")),
+            find(&format!("mpmc sharded k={k} push+pop x{ops}/thread")),
+        ) {
+            println!("contended speedup k={k}: {:.2}x (central/sharded)", c / s);
+        }
     }
 }

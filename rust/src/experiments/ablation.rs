@@ -13,7 +13,7 @@
 use anyhow::Result;
 
 use super::common::{
-    base_qps_k, make_policy, offline_phase_k, simulate_boxed_k, ExperimentCtx,
+    base_qps_k, make_policy, offline_phase_k, simulate_boxed_disc, ExperimentCtx,
 };
 use crate::configspace::rag_space;
 use crate::metrics::RunSummary;
@@ -149,7 +149,16 @@ fn controller_ablation(ctx: &ExperimentCtx) -> Result<()> {
             policy,
             Box::new(crate::serving::StaticPolicy::new(0, "placeholder")),
         );
-        let out = simulate_boxed_k(&arrivals, &plan, &mut boxed, &svc, ctx.seed, k);
+        let out = simulate_boxed_disc(
+            &arrivals,
+            &plan,
+            &mut boxed,
+            &svc,
+            ctx.seed,
+            k,
+            ctx.discipline,
+            ctx.shards,
+        );
         let s = RunSummary::compute(&out.records, &out.switches, slo, plan.ladder.len());
         println!(
             "  {:<36} SLO {:>5.1}%  acc {:.3}  switches {:>4}",

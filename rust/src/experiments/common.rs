@@ -16,7 +16,9 @@ use crate::planner::{
 use crate::runtime::artifacts_dir;
 use crate::search::{CompassV, CompassVParams};
 use crate::serving::executor::WorkflowEngine;
-use crate::serving::{serve, ElasticoPolicy, ScalingPolicy, ServeOptions, StaticPolicy};
+use crate::serving::{
+    serve, Discipline, ElasticoPolicy, ScalingPolicy, ServeOptions, StaticPolicy,
+};
 use crate::sim::LognormalService;
 use crate::util::results_dir;
 use crate::workflows::rag::RagWorkflow;
@@ -36,6 +38,11 @@ pub struct ExperimentCtx {
     /// Plans are derived with worker-aware thresholds and serving cells
     /// run k executors (live) or k simulated servers.
     pub workers: usize,
+    /// Queue discipline for serving cells (live and simulated): central
+    /// FIFO (the paper's testbed) or per-worker shards + work stealing.
+    pub discipline: Discipline,
+    /// Shard count under the sharded discipline (0 = one per worker).
+    pub shards: usize,
     /// Output directory for CSVs.
     pub out_dir: PathBuf,
 }
@@ -47,6 +54,8 @@ impl Default for ExperimentCtx {
             duration_s: 180.0,
             seed: 7,
             workers: 1,
+            discipline: Discipline::CentralFifo,
+            shards: 0,
             out_dir: results_dir(),
         }
     }
@@ -274,19 +283,26 @@ pub fn run_cell(
             },
             policy,
             &arrivals,
-            &ServeOptions { workers: ctx.workers.max(1), ..ServeOptions::default() },
+            &ServeOptions {
+                workers: ctx.workers.max(1),
+                discipline: ctx.discipline,
+                shards: ctx.shards,
+                ..ServeOptions::default()
+            },
         )?;
         (out.records, out.switches)
     } else {
         let svc = LognormalService::from_plan(plan, 0.10);
         let mut policy = policy;
-        let out = simulate_boxed_k(
+        let out = simulate_boxed_disc(
             &arrivals,
             plan,
             &mut policy,
             &svc,
             ctx.seed,
             ctx.workers.max(1),
+            ctx.discipline,
+            ctx.shards,
         );
         (out.records, out.switches)
     };
@@ -314,6 +330,30 @@ pub fn simulate_boxed_k(
     seed: u64,
     workers: usize,
 ) -> crate::sim::SimOutcome {
+    simulate_boxed_disc(
+        arrivals,
+        plan,
+        policy,
+        svc,
+        seed,
+        workers,
+        Discipline::CentralFifo,
+        0,
+    )
+}
+
+/// `simulate_disc` over a boxed policy (object safety helper).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_boxed_disc(
+    arrivals: &[f64],
+    plan: &Plan,
+    policy: &mut Box<dyn ScalingPolicy>,
+    svc: &LognormalService,
+    seed: u64,
+    workers: usize,
+    discipline: Discipline,
+    shards: usize,
+) -> crate::sim::SimOutcome {
     struct Shim<'a>(&'a mut Box<dyn ScalingPolicy>);
     impl ScalingPolicy for Shim<'_> {
         fn decide(&mut self, now_ms: f64, depth: usize) -> usize {
@@ -325,9 +365,14 @@ pub fn simulate_boxed_k(
         fn name(&self) -> String {
             self.0.name()
         }
+        fn no_switch_band(&self) -> Option<(usize, usize)> {
+            self.0.no_switch_band()
+        }
     }
     let mut shim = Shim(policy);
-    crate::sim::simulate_k(arrivals, plan, &mut shim, svc, seed, workers)
+    crate::sim::simulate_disc(
+        arrivals, plan, &mut shim, svc, seed, workers, discipline, shards,
+    )
 }
 
 #[cfg(test)]

@@ -31,9 +31,11 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
     )?;
 
     println!(
-        "Fig.5: serving cells ({}; {}s per cell, base utilization 0.45)",
+        "Fig.5: serving cells ({}; {}s per cell, base utilization 0.45, \
+         {} dispatch)",
         if ctx.live { "LIVE serving" } else { "discrete-event sim of live profiles" },
-        ctx.duration_s
+        ctx.duration_s,
+        ctx.discipline.name()
     );
 
     // Aggregates for the headline claims.

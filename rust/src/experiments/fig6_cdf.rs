@@ -23,7 +23,11 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
         &["policy", "latency_ms", "fraction"],
     )?;
 
-    println!("Fig.6: latency CDFs, spike pattern, SLO {slo:.0} ms, {k} worker(s)");
+    println!(
+        "Fig.6: latency CDFs, spike pattern, SLO {slo:.0} ms, {k} worker(s), \
+         {} dispatch",
+        ctx.discipline.name()
+    );
     for policy in POLICIES {
         let cell = Cell {
             pattern_name: "spike",

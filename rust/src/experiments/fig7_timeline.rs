@@ -31,9 +31,11 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
     let dur_ms = ctx.duration_s * 1000.0;
     let spike = (dur_ms / 3.0, 2.0 * dur_ms / 3.0);
     println!(
-        "Fig.7: Elastico timeline, spike during [{:.0}s, {:.0}s], SLO {slo:.0} ms, {k} worker(s)",
+        "Fig.7: Elastico timeline, spike during [{:.0}s, {:.0}s], SLO {slo:.0} ms, \
+         {k} worker(s), {} dispatch",
         spike.0 / 1000.0,
-        spike.1 / 1000.0
+        spike.1 / 1000.0,
+        ctx.discipline.name()
     );
     println!("  switches ({} total):", switches.len());
     for s in switches.iter().take(20) {

@@ -7,7 +7,8 @@
 //! * `plan     [--tau T] [--slo MS] [--live] [--out plan.json]` — offline
 //!   phase: search + profile + Pareto + AQM thresholds.
 //! * `serve    [--slo MS] [--duration S] [--pattern spike|bursty|steady]
-//!   [--policy NAME]` — one live serving run, report summary.
+//!   [--policy NAME] [--workers K] [--discipline central|sharded]
+//!   [--shards N]` — one live serving run, report summary.
 //! * `experiment <fig1|fig3|fig4|table1|fig5|fig6|fig7|all> [--live]
 //!   [--duration S]` — regenerate paper artifacts (CSV under results/).
 //! * `profile  [--live]` — per-component latency table.
@@ -23,7 +24,7 @@ use compass::planner::profile_config;
 use compass::runtime::artifacts_dir;
 use compass::search::{grid_search, BudgetSchedule, CompassV, CompassVParams};
 use compass::serving::executor::WorkflowEngine;
-use compass::serving::{serve, ServeOptions};
+use compass::serving::{serve, Discipline, ServeOptions};
 use compass::util::results_dir;
 use compass::workflows::rag::RagWorkflow;
 use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
@@ -68,6 +69,17 @@ fn get_f64(opts: &HashMap<String, String>, key: &str, default: f64) -> Result<f6
     }
 }
 
+/// Parse `--discipline central|sharded` (default central — the paper's
+/// testbed; `--shards` picks the shard count under sharded, 0 = auto).
+fn get_discipline(opts: &HashMap<String, String>) -> Result<Discipline> {
+    match opts.get("discipline") {
+        None => Ok(Discipline::CentralFifo),
+        Some(v) => Discipline::parse(v).ok_or_else(|| {
+            anyhow::anyhow!("--discipline expects central|sharded, got {v}")
+        }),
+    }
+}
+
 fn dispatch(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else {
         print_help();
@@ -87,6 +99,8 @@ fn dispatch(args: &[String]) -> Result<()> {
                 duration_s: get_f64(&opts, "duration", 180.0)?,
                 seed,
                 workers: get_f64(&opts, "workers", 1.0)?.max(1.0) as usize,
+                discipline: get_discipline(&opts)?,
+                shards: get_f64(&opts, "shards", 0.0)?.max(0.0) as usize,
                 out_dir: results_dir(),
             };
             experiments::run(id, &ctx)
@@ -114,10 +128,10 @@ fn print_help() {
          \x20 serve       one live serving run over the AOT artifacts\n\
          \x20             [--slo MS] [--duration S] [--pattern spike|bursty|steady]\n\
          \x20             [--policy Elastico|Static-Fast|Static-Medium|Static-Accurate]\n\
-         \x20             [--workers K]\n\
+         \x20             [--workers K] [--discipline central|sharded] [--shards N]\n\
          \x20 experiment  regenerate paper figures/tables -> results/*.csv\n\
          \x20             <fig1|fig3|fig4|table1|fig5|fig6|fig7|all> [--live] [--duration S]\n\
-         \x20             [--workers K]\n\
+         \x20             [--workers K] [--discipline central|sharded] [--shards N]\n\
          \x20 profile     per-component latency table over the artifacts [--live]\n"
     );
 }
@@ -216,6 +230,8 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
     let tau = get_f64(opts, "tau", 0.75)?;
     let duration = get_f64(opts, "duration", 60.0)?;
     let workers = get_f64(opts, "workers", 1.0)?.max(1.0) as usize;
+    let discipline = get_discipline(opts)?;
+    let shards = get_f64(opts, "shards", 0.0)?.max(0.0) as usize;
     let policy_name = opts
         .get("policy")
         .cloned()
@@ -248,9 +264,10 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
     let arrivals = generate_arrivals(&spec);
     println!(
         "Live serving: {} arrivals over {duration}s (base {:.2} qps), \
-         policy {policy_name}, {workers} worker(s)",
+         policy {policy_name}, {workers} worker(s), {} dispatch",
         arrivals.len(),
-        spec.base_qps
+        spec.base_qps,
+        discipline.name()
     );
 
     let policy = compass::experiments::common::make_policy(&plan, &policy_name);
@@ -266,7 +283,7 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         },
         policy,
         &arrivals,
-        &ServeOptions { workers, ..ServeOptions::default() },
+        &ServeOptions { workers, discipline, shards, ..ServeOptions::default() },
     )?;
     let summary = compass::metrics::RunSummary::compute(
         &out.records,
@@ -281,7 +298,10 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
     if let Some(rate) = summary.success_rate {
         println!("  measured success rate: {rate:.3}");
     }
-    println!("  rejected: {}, final rate {:.2} qps", out.rejected, out.final_rate_qps);
+    println!(
+        "  rejected: {}, steals: {}, final rate {:.2} qps",
+        out.rejected, out.steals, out.final_rate_qps
+    );
     Ok(())
 }
 

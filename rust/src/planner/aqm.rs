@@ -22,7 +22,12 @@
 //! the effective service rate is `w·μ`: a depth-N queue drains in
 //! `N·s̄/w`, so both thresholds scale by `w` (`N↑k = ⌊w·Δk / s̄k⌋`, and
 //! analogously for `N↓k`). `w = 1` reproduces the paper's equations
-//! unchanged.
+//! unchanged. Under the sharded queue discipline the depth these
+//! thresholds are compared against is the **total across shards** (the
+//! `ShardedQueue`'s lock-free aggregate counter), not any single
+//! shard's backlog — the pool still drains N queued requests in
+//! `N·s̄/w` regardless of which shard holds them, so the equations
+//! carry over unmodified.
 
 use super::pareto::ProfiledConfig;
 use super::plan::{ConfigPolicy, Plan};

@@ -121,6 +121,41 @@ impl ScalingPolicy for ElasticoPolicy {
     fn name(&self) -> String {
         "Elastico".into()
     }
+
+    /// The band where `decide` provably does nothing: above the
+    /// downscale threshold (no window can open) and at or below the
+    /// upscale threshold (no step toward fast). Empty (`None`) whenever
+    /// timing matters — a hysteresis window is open (its completion and
+    /// rebound-reset both need the clock), or the smoothed depth is low
+    /// enough that the next observation could open one. In-band skipped
+    /// observations all carry depth > N↓, which keeps the rounded EWMA
+    /// above the downscale threshold, so skipping them cannot flip the
+    /// downscale predicate; the EWMA itself is refreshed by the monitor
+    /// tick, which always takes the locked path.
+    fn no_switch_band(&self) -> Option<(usize, usize)> {
+        if self.low_since_ms.is_some() {
+            return None;
+        }
+        let cur = &self.plan.ladder[self.current];
+        let lo = match cur.downscale_threshold {
+            Some(thr) if self.current < self.plan.most_accurate() => {
+                if self.depth_ewma.round() <= thr as f64 + 1e-9 {
+                    // Next low observation would open the window.
+                    return None;
+                }
+                thr as usize + 1
+            }
+            // Most-accurate rung (or no threshold): downscale impossible.
+            _ => 0,
+        };
+        let hi = if self.current > 0 {
+            cur.upscale_threshold as usize
+        } else {
+            // Fastest rung: no further upscale, any depth is tolerated.
+            usize::MAX
+        };
+        (lo <= hi).then_some((lo, hi))
+    }
 }
 
 #[cfg(test)]
@@ -239,5 +274,62 @@ mod tests {
         assert_eq!(p.steady_state_for_depth(1), 2);
         assert_eq!(p.steady_state_for_depth(3), 1);
         assert_eq!(p.steady_state_for_depth(20), 0);
+    }
+
+    #[test]
+    fn band_is_sound_against_decide() {
+        // Wherever a band is advertised, an in-band decide must be a
+        // pure no-op on the selected rung — fuzz the policy through a
+        // load ramp and check the contract at every step.
+        let mut p = ElasticoPolicy::new(plan3());
+        let depths =
+            [0, 0, 9, 9, 2, 0, 0, 0, 20, 20, 1, 1, 6, 3, 0, 14, 5, 5, 0, 0];
+        let mut t = 0.0;
+        for (i, &d) in depths.iter().cycle().take(400).enumerate() {
+            t += if i % 7 == 0 { 900.0 } else { 35.0 };
+            if let Some((lo, hi)) = p.no_switch_band() {
+                assert!(lo <= hi);
+                for probe in [lo, (lo + hi.min(lo + 50)) / 2, hi.min(lo + 50)] {
+                    let mut clone = p.clone();
+                    let before = clone.current();
+                    assert_eq!(
+                        clone.decide(t, probe),
+                        before,
+                        "in-band depth {probe} moved the rung at t={t}"
+                    );
+                    assert_eq!(clone.low_since_ms, p.low_since_ms);
+                }
+            }
+            p.decide(t, d);
+        }
+    }
+
+    #[test]
+    fn band_empty_while_hysteresis_window_open() {
+        let mut p = ElasticoPolicy::new(plan3());
+        p.decide(0.0, 20); // -> medium
+        p.decide(1.0, 20); // -> fast
+        assert!(p.no_switch_band().is_some());
+        // Sustained low depth drains the EWMA until the downscale window
+        // opens: timing now matters, so the fast path must be disabled.
+        // (The band must already be gone once the EWMA sits at the
+        // threshold, i.e. before the opening observation itself.)
+        for i in 0..40 {
+            p.decide(10.0 + i as f64, 0);
+            if p.low_since_ms.is_some() {
+                break;
+            }
+        }
+        assert!(p.low_since_ms.is_some(), "window never opened");
+        assert_eq!(p.no_switch_band(), None);
+    }
+
+    #[test]
+    fn band_at_most_accurate_rung_tolerates_low_depth() {
+        // At the most-accurate rung no downscale exists: the band starts
+        // at depth 0 and is capped by the upscale threshold.
+        let p = ElasticoPolicy::new(plan3());
+        assert_eq!(p.current(), 2);
+        assert_eq!(p.no_switch_band(), Some((0, 1)));
     }
 }

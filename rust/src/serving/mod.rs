@@ -1,39 +1,51 @@
-//! The inference-serving system (paper §III-B): a central request queue,
-//! a load monitor, the Elastico controller, and workflow executor
-//! threads — the online phase of Compass.
+//! The inference-serving system (paper §III-B): request queues, a load
+//! monitor, the Elastico controller, and workflow executor threads —
+//! the online phase of Compass.
 //!
 //! The controller logic lives in [`policy`] and is shared verbatim with
 //! the discrete-event simulator ([`crate::sim`]), so simulated and live
 //! behavior can be compared 1:1.
 //!
-//! ## Serving architecture (k workers)
+//! ## Serving architecture (k workers, sharded hot path)
 //!
 //! The runtime is an M/G/k system ([`ServeOptions::workers`], default 1
 //! = the paper's single-server testbed):
 //!
-//! * **one bounded FIFO [`RequestQueue`]** is the admission point — a
-//!   full queue rejects at push (admission control), and `close()`
-//!   wakes every blocked worker for prompt shutdown;
-//! * **k executor threads** drain that shared queue. PJRT handles are
-//!   `!Send`, so each worker constructs its *own* engine inside its
-//!   thread from a shared `Fn() -> Result<E>` factory; the run clock
-//!   starts once the last worker finishes compiling, so engine startup
-//!   never counts as queueing delay;
-//! * **shared control plane**: one policy cell (mutex) takes every load
-//!   observation — each arrival, each dequeue, each departure, and a
-//!   periodic monitor tick — and appends to one switch audit trail, so
-//!   the pool adapts as a unit exactly like the single server did;
+//! * **one bounded [`ShardedQueue`]** is the admission point — requests
+//!   route round-robin to per-worker shards ([`Discipline::ShardedSteal`])
+//!   or to a single shard ([`Discipline::CentralFifo`], the exact seed
+//!   semantics); a worker whose home shard runs dry steals the *front*
+//!   of the next non-empty shard. Admission control and the AQM depth
+//!   signal use a lock-free total-across-shards counter, a full queue
+//!   rejects at push, and `close()` wakes every blocked worker for
+//!   prompt shutdown;
+//! * **k executor threads** drain the queue. PJRT handles are `!Send`,
+//!   so each worker constructs its *own* engine inside its thread from a
+//!   shared `Fn() -> Result<E>` factory; the run clock starts once the
+//!   last worker finishes compiling, so engine startup never counts as
+//!   queueing delay;
+//! * **lock-light control plane**: the monitor's arrival counter is a
+//!   plain atomic; the shared policy sits behind a handle that caches
+//!   the current rung and the policy's no-switch depth band
+//!   ([`ScalingPolicy::no_switch_band`]) in atomics — in the common
+//!   case (no threshold crossing) arrivals, dequeues and departures
+//!   never take the policy mutex. Threshold crossings and the periodic
+//!   monitor tick run the full locked decision and append to the one
+//!   switch audit trail, so the pool still adapts as a unit;
 //! * **per-worker records are merged at join** and sorted by request id
 //!   (a no-op at k = 1), and `served + rejected == arrivals` always
 //!   holds;
 //! * **worker-aware thresholds**: plans carry the worker count they
 //!   were derived for ([`crate::planner::Plan::workers`]) — the AQM
-//!   scales queue-depth thresholds with the effective service rate k·μ,
-//!   and [`crate::sim::simulate_k`] models the same FIFO/earliest-free
-//!   discipline. (One known observation difference, inherited from the
-//!   seed: on arrival the simulator's policy sees queue depth *plus*
-//!   in-service count, while the live injector sees only queue depth —
-//!   an off-by-≤1 at k = 1 that grows to ≤k for a pool.)
+//!   scales queue-depth thresholds with the effective service rate k·μ
+//!   against the *aggregate* depth, and [`crate::sim::simulate_disc`]
+//!   models both queue disciplines. (One known observation difference,
+//!   inherited from the seed: on arrival the simulator's policy sees
+//!   queue depth *plus* in-service count, while the live injector sees
+//!   only queue depth — an off-by-≤1 at k = 1 that grows to ≤k for a
+//!   pool. Under `ShardedSteal`, global service order additionally
+//!   diverges from strict FIFO by up to one round-robin lap; see
+//!   [`queue`] for the full contract.)
 
 pub mod elastico;
 pub mod executor;
@@ -44,7 +56,7 @@ pub mod queue;
 pub mod server;
 
 pub use elastico::ElasticoPolicy;
-pub use predictive::PredictivePolicy;
 pub use policy::{ScalingPolicy, StaticPolicy};
-pub use queue::{QueueError, RequestQueue};
+pub use predictive::PredictivePolicy;
+pub use queue::{Discipline, Popped, QueueError, RequestQueue, ShardedQueue};
 pub use server::{serve, ServeOptions, ServeOutcome};

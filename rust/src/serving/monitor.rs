@@ -1,28 +1,34 @@
 //! The load monitor (paper §III-B): tracks queue depth and the arrival
 //! rate (EWMA over tick windows). Queue depth is the AQM's control
 //! signal; the arrival-rate estimate feeds reports and diagnostics.
+//!
+//! The arrival counter lives outside the mutex: `on_arrival` is one
+//! relaxed atomic increment, so the injector's hot path never contends
+//! with the tick thread — only the (periodic, off-path) `tick` takes
+//! the EWMA lock.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::util::stats::Ewma;
 
 struct MonitorState {
-    arrivals_total: u64,
     last_total: u64,
     last_tick_ms: f64,
     rate_qps: Ewma,
 }
 
-/// Thread-safe load monitor.
+/// Thread-safe load monitor; arrival recording is lock-free.
 pub struct LoadMonitor {
+    arrivals_total: AtomicU64,
     state: Mutex<MonitorState>,
 }
 
 impl LoadMonitor {
     pub fn new(alpha: f64) -> LoadMonitor {
         LoadMonitor {
+            arrivals_total: AtomicU64::new(0),
             state: Mutex::new(MonitorState {
-                arrivals_total: 0,
                 last_total: 0,
                 last_tick_ms: 0.0,
                 rate_qps: Ewma::new(alpha),
@@ -30,17 +36,19 @@ impl LoadMonitor {
         }
     }
 
-    /// Record one arrival (called by the injector).
+    /// Record one arrival (called by the injector): a plain atomic
+    /// increment, no lock.
     pub fn on_arrival(&self) {
-        self.state.lock().unwrap().arrivals_total += 1;
+        self.arrivals_total.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Tick the rate estimator; returns the EWMA arrival rate (qps).
     pub fn tick(&self, now_ms: f64) -> f64 {
         let mut s = self.state.lock().unwrap();
+        let total = self.arrivals_total.load(Ordering::Relaxed);
         let dt = (now_ms - s.last_tick_ms).max(1e-6);
-        let newly = (s.arrivals_total - s.last_total) as f64;
-        s.last_total = s.arrivals_total;
+        let newly = (total - s.last_total) as f64;
+        s.last_total = total;
         s.last_tick_ms = now_ms;
         let inst = newly / (dt / 1000.0);
         s.rate_qps.push(inst)
@@ -52,7 +60,7 @@ impl LoadMonitor {
     }
 
     pub fn arrivals_total(&self) -> u64 {
-        self.state.lock().unwrap().arrivals_total
+        self.arrivals_total.load(Ordering::Relaxed)
     }
 }
 

@@ -21,6 +21,23 @@ pub trait ScalingPolicy: Send {
 
     /// Display name (reports/plots).
     fn name(&self) -> String;
+
+    /// Lock-elision hint for the serving control plane: an inclusive
+    /// depth band `[lo, hi]` within which `decide` is *guaranteed* to
+    /// keep the current rung and needs no state update that cannot wait
+    /// for the next monitor tick. The server caches the band in atomics
+    /// and skips the policy mutex entirely for in-band observations —
+    /// the hot-path common case. `None` (the default) means every
+    /// observation must reach the policy under its lock.
+    ///
+    /// Contract: for any `d` with `lo <= d <= hi`, `decide(now, d)`
+    /// returns `current()` and performs no transition, opens no
+    /// hysteresis window, and resets none — skipping the call is
+    /// observationally equivalent up to smoothing-state staleness that
+    /// the periodic tick (which always takes the lock) repairs.
+    fn no_switch_band(&self) -> Option<(usize, usize)> {
+        None
+    }
 }
 
 /// A fixed-configuration baseline (Static-Fast/Medium/Accurate, §VI-C).
@@ -48,6 +65,12 @@ impl ScalingPolicy for StaticPolicy {
     fn name(&self) -> String {
         self.label.clone()
     }
+
+    /// A static policy never moves: every depth is in-band, so the
+    /// server's fast path never takes the policy lock.
+    fn no_switch_band(&self) -> Option<(usize, usize)> {
+        Some((0, usize::MAX))
+    }
 }
 
 #[cfg(test)]
@@ -61,5 +84,11 @@ mod tests {
             assert_eq!(p.decide(t as f64 * 10.0, t * 7), 2);
         }
         assert_eq!(p.name(), "Static-Accurate");
+    }
+
+    #[test]
+    fn static_band_covers_every_depth() {
+        let p = StaticPolicy::new(1, "s");
+        assert_eq!(p.no_switch_band(), Some((0, usize::MAX)));
     }
 }

@@ -1,12 +1,53 @@
-//! The central request queue (paper §III-B): a bounded, thread-safe FIFO
-//! buffering incoming inference requests between the arrival injector and
-//! the workflow executor.
+//! Request queues (paper §III-B): the buffers between the arrival
+//! injector and the executor pool, in two disciplines.
+//!
+//! * [`RequestQueue`] — the original **central FIFO**: one bounded
+//!   `Mutex<VecDeque>` every producer and consumer crosses. Exact global
+//!   FIFO order, but a single coordination point that serializes the hot
+//!   path at large worker counts. Kept as the reference implementation
+//!   and the contended-bench baseline.
+//! * [`ShardedQueue`] — the **sharded work-stealing** discipline: one
+//!   bounded FIFO per shard (typically one per worker), round-robin
+//!   request routing, and FIFO stealing when a worker's home shard runs
+//!   dry. Admission control and the AQM depth signal stay exact via a
+//!   lock-free aggregate depth counter maintained on push/pop/steal;
+//!   per-shard mutexes are only ever contended by a 1/shards slice of
+//!   the traffic.
+//!
+//! ## Semantics and known divergences
+//!
+//! * **Admission** is linearized on the aggregate counter in both
+//!   disciplines: a push is rejected only if `capacity` slots were
+//!   reserved at the instant of its reservation attempt. Slots are
+//!   released when an item leaves its shard, so at most `capacity`
+//!   requests are ever buffered and a request is never rejected while a
+//!   slot genuinely remains (the worker-pool property tests assert
+//!   this under concurrent stealing).
+//! * **Ordering**: the central queue is globally FIFO. The sharded queue
+//!   is FIFO *per shard* (stealing takes the victim's front, never its
+//!   back, so no shard is ever drained out of order); global order can
+//!   diverge by up to one round-robin lap. `sim::Discipline` models both
+//!   so the DES can quantify the ordering/latency delta against theory;
+//!   a single-shard [`ShardedQueue`] is the central FIFO exactly.
+//! * **Stealing** follows the work-stealing scheduler of Blumofe &
+//!   Leiserson's Cilk, with one queueing-theoretic change: thieves take
+//!   the oldest entry (FIFO) rather than the newest (LIFO), because the
+//!   objective is tail latency of queued requests, not cache locality of
+//!   spawned tasks.
+//! * **Depth**: [`ShardedQueue::len`] is one atomic load of the
+//!   total-across-shards depth — the signal the AQM thresholds
+//!   (`planner::aqm`) and the Elastico controller are derived for.
+//!
+//! The consumer API is exhaustive by construction: [`ShardedQueue`] pops
+//! return [`Popped`] (`Item`/`TimedOut`/`Closed`), so a consumer loop
+//! cannot reach a `Full` arm and has no panic path.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// Queue errors.
+/// Queue errors (producer side; see [`Popped`] for the consumer side).
 #[derive(Debug, PartialEq, Eq)]
 pub enum QueueError {
     /// Bounded capacity reached (admission control rejected the request).
@@ -15,12 +56,53 @@ pub enum QueueError {
     Closed,
 }
 
+/// Queue discipline of the serving hot path (live server and DES).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Discipline {
+    /// One central FIFO shared by every worker (the paper's testbed).
+    CentralFifo,
+    /// Per-worker shards with round-robin routing and FIFO work
+    /// stealing.
+    ShardedSteal,
+}
+
+impl Discipline {
+    /// Parse a CLI spelling (`central` | `sharded`).
+    pub fn parse(s: &str) -> Option<Discipline> {
+        match s {
+            "central" | "fifo" => Some(Discipline::CentralFifo),
+            "sharded" | "steal" => Some(Discipline::ShardedSteal),
+            _ => None,
+        }
+    }
+
+    /// Display name (reports/CSV headers).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Discipline::CentralFifo => "central",
+            Discipline::ShardedSteal => "sharded",
+        }
+    }
+}
+
+/// Outcome of a consumer pop: exhaustive by construction (no error arm a
+/// consumer must declare unreachable).
+#[derive(Debug, PartialEq, Eq)]
+pub enum Popped<T> {
+    /// An item (from the home shard or stolen).
+    Item(T),
+    /// Nothing arrived within the timeout; the queue is still open.
+    TimedOut,
+    /// Queue closed **and** fully drained.
+    Closed,
+}
+
 struct Inner<T> {
     items: VecDeque<T>,
     closed: bool,
 }
 
-/// Thread-safe bounded FIFO with blocking pop.
+/// Thread-safe bounded FIFO with blocking pop (central discipline).
 pub struct RequestQueue<T> {
     inner: Mutex<Inner<T>>,
     notify: Condvar,
@@ -61,7 +143,7 @@ impl<T> RequestQueue<T> {
     /// its timeout — reports `Closed` immediately rather than waiting
     /// out the remaining timeout.
     pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<T>, QueueError> {
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = Instant::now() + timeout;
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(item) = g.items.pop_front() {
@@ -70,7 +152,7 @@ impl<T> RequestQueue<T> {
             if g.closed {
                 return Err(QueueError::Closed);
             }
-            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
                 return Ok(None);
             }
@@ -91,6 +173,171 @@ impl<T> RequestQueue<T> {
     /// Close: producers fail afterwards; consumers drain what remains.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
+        self.notify.notify_all();
+    }
+}
+
+/// Sharded bounded MPMC queue with FIFO work stealing.
+///
+/// `capacity` bounds the **total** buffered items across all shards
+/// (admission control is a property of the server, not of a shard);
+/// [`len`](ShardedQueue::len) is the aggregate depth in one atomic load.
+/// Producers route round-robin; consumer `w` drains shard `w % shards`
+/// first and steals the front of the next non-empty shard when its home
+/// shard is dry.
+pub struct ShardedQueue<T> {
+    shards: Vec<Mutex<VecDeque<T>>>,
+    /// Aggregate depth: slots reserved by pushes and not yet claimed by
+    /// pops. Reserved before insert, released at claim (under the shard
+    /// lock, just before removal), so a racing push can only be admitted
+    /// early into a freshly freed slot — never spuriously rejected while
+    /// capacity genuinely remains. Exact AQM depth signal in quiescence.
+    depth: AtomicUsize,
+    capacity: usize,
+    /// Round-robin router cursor.
+    router: AtomicUsize,
+    closed: AtomicBool,
+    /// Pops satisfied from a non-home shard (diagnostics).
+    steals: AtomicU64,
+    /// Consumers parked on `notify`; producers skip the sleep gate
+    /// entirely while this is zero (the loaded-system fast path).
+    sleepers: AtomicUsize,
+    gate: Mutex<()>,
+    notify: Condvar,
+}
+
+impl<T> ShardedQueue<T> {
+    pub fn new(capacity: usize, shards: usize) -> Self {
+        let shards = shards.max(1);
+        ShardedQueue {
+            shards: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            depth: AtomicUsize::new(0),
+            capacity: capacity.max(1),
+            router: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            steals: AtomicU64::new(0),
+            sleepers: AtomicUsize::new(0),
+            gate: Mutex::new(()),
+            notify: Condvar::new(),
+        }
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Enqueue; fails when the aggregate capacity is reserved or the
+    /// queue is closed. The common path is one atomic reservation + one
+    /// shard lock touched by `1/shards` of the traffic.
+    pub fn push(&self, item: T) -> Result<(), QueueError> {
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(QueueError::Closed);
+        }
+        // Reserve a slot; lock-free admission against the total bound.
+        if self
+            .depth
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |d| {
+                (d < self.capacity).then_some(d + 1)
+            })
+            .is_err()
+        {
+            return Err(QueueError::Full);
+        }
+        let shard = self.router.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        self.shards[shard].lock().unwrap().push_back(item);
+        // Wake a parked consumer. The sleep gate is only taken when a
+        // consumer is actually parked (Dekker-style handshake with the
+        // consumer's sleepers-increment / depth-check, both SeqCst:
+        // either we see its registration or it sees our depth).
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            let _g = self.gate.lock().unwrap();
+            self.notify.notify_one();
+        }
+        Ok(())
+    }
+
+    /// Non-blocking pop for consumer `worker`: home shard first, then a
+    /// FIFO steal sweep over the other shards.
+    pub fn try_pop(&self, worker: usize) -> Option<T> {
+        let n = self.shards.len();
+        let home = worker % n;
+        for i in 0..n {
+            let s = (home + i) % n;
+            let mut g = self.shards[s].lock().unwrap();
+            if g.is_empty() {
+                continue;
+            }
+            // Release the slot *before* removing the item: the depth
+            // counter then never over-counts a claimed item, so a push
+            // racing this pop can only be admitted early (into the slot
+            // just freed), never spuriously rejected while capacity
+            // genuinely remains. The item is claimed under the shard
+            // lock, so no other consumer can take it.
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            let item = g.pop_front();
+            drop(g);
+            if i > 0 {
+                self.steals.fetch_add(1, Ordering::Relaxed);
+            }
+            return item;
+        }
+        None
+    }
+
+    /// Blocking pop with timeout for consumer `worker`.
+    ///
+    /// Returns [`Popped::Item`] (home or stolen), [`Popped::TimedOut`]
+    /// when nothing arrived within `timeout`, or [`Popped::Closed`] once
+    /// the queue is closed **and** every shard is drained. The wait is
+    /// deadline-based and `close()` wakes all parked consumers promptly.
+    pub fn pop_timeout(&self, worker: usize, timeout: Duration) -> Popped<T> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(item) = self.try_pop(worker) {
+                return Popped::Item(item);
+            }
+            if self.closed.load(Ordering::SeqCst) && self.depth.load(Ordering::SeqCst) == 0 {
+                return Popped::Closed;
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Popped::TimedOut;
+            }
+            // Park: register as a sleeper, then re-check under the gate
+            // so a producer's depth-store/sleepers-load cannot slip
+            // between our check and the wait (missed-wakeup handshake).
+            let g = self.gate.lock().unwrap();
+            self.sleepers.fetch_add(1, Ordering::SeqCst);
+            if self.depth.load(Ordering::SeqCst) > 0 || self.closed.load(Ordering::SeqCst) {
+                self.sleepers.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            let (g2, _res) = self.notify.wait_timeout(g, remaining).unwrap();
+            drop(g2);
+            self.sleepers.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Aggregate depth across all shards — one atomic load; the AQM /
+    /// Elastico control signal and the admission bound.
+    pub fn len(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pops satisfied by stealing from a non-home shard so far.
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Close: producers fail afterwards; consumers drain what remains.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        let _g = self.gate.lock().unwrap();
         self.notify.notify_all();
     }
 }
@@ -144,7 +391,7 @@ mod tests {
             .map(|_| {
                 let q = q.clone();
                 std::thread::spawn(move || {
-                    let t0 = std::time::Instant::now();
+                    let t0 = Instant::now();
                     let r = q.pop_timeout(Duration::from_secs(30));
                     (r, t0.elapsed())
                 })
@@ -166,7 +413,7 @@ mod tests {
         let q: Arc<RequestQueue<u32>> = Arc::new(RequestQueue::new(8));
         let q2 = q.clone();
         let consumer = std::thread::spawn(move || {
-            let t0 = std::time::Instant::now();
+            let t0 = Instant::now();
             let r = q2.pop_timeout(Duration::from_millis(200));
             (r, t0.elapsed())
         });
@@ -205,5 +452,165 @@ mod tests {
         }
         producer.join().unwrap();
         assert_eq!(got, (0..1000).collect::<Vec<_>>());
+    }
+
+    // ---- ShardedQueue ------------------------------------------------
+
+    #[test]
+    fn sharded_round_robin_and_per_shard_fifo() {
+        // 8 pushes over 4 shards: shard s holds {s, s+4} in order.
+        let q: ShardedQueue<u64> = ShardedQueue::new(64, 4);
+        for i in 0..8 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 8);
+        // Consumer 2 drains its home shard first (2 then 6)…
+        assert_eq!(q.pop_timeout(2, Duration::from_millis(1)), Popped::Item(2));
+        assert_eq!(q.pop_timeout(2, Duration::from_millis(1)), Popped::Item(6));
+        assert_eq!(q.steals(), 0);
+        // …then steals FIFO from the next shards, wrapping.
+        assert_eq!(q.pop_timeout(2, Duration::from_millis(1)), Popped::Item(3));
+        assert_eq!(q.pop_timeout(2, Duration::from_millis(1)), Popped::Item(7));
+        assert_eq!(q.pop_timeout(2, Duration::from_millis(1)), Popped::Item(0));
+        assert_eq!(q.steals(), 3);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn sharded_single_shard_is_the_central_fifo() {
+        let q: ShardedQueue<u64> = ShardedQueue::new(16, 1);
+        for i in 0..6 {
+            q.push(i).unwrap();
+        }
+        // Any worker index maps to the one shard; global FIFO holds.
+        for (w, i) in [(0usize, 0u64), (3, 1), (1, 2), (7, 3), (2, 4), (0, 5)] {
+            assert_eq!(q.pop_timeout(w, Duration::from_millis(1)), Popped::Item(i));
+        }
+        assert_eq!(q.steals(), 0);
+        assert_eq!(
+            q.pop_timeout(0, Duration::from_millis(1)),
+            Popped::TimedOut
+        );
+    }
+
+    #[test]
+    fn sharded_aggregate_capacity_enforced() {
+        // Capacity bounds the total, not per shard: 3 slots over 2
+        // shards admit exactly 3 regardless of routing.
+        let q: ShardedQueue<u64> = ShardedQueue::new(3, 2);
+        q.push(0).unwrap();
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(3), Err(QueueError::Full));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop_timeout(0, Duration::from_millis(1)), Popped::Item(0));
+        // A freed slot readmits.
+        q.push(4).unwrap();
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn sharded_close_drains_then_closes() {
+        let q: ShardedQueue<u64> = ShardedQueue::new(8, 2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert_eq!(q.push(3), Err(QueueError::Closed));
+        assert_eq!(q.pop_timeout(0, Duration::from_millis(1)), Popped::Item(1));
+        assert_eq!(q.pop_timeout(0, Duration::from_millis(1)), Popped::Item(2));
+        assert_eq!(q.pop_timeout(0, Duration::from_millis(1)), Popped::Closed);
+        assert_eq!(q.pop_timeout(5, Duration::from_millis(1)), Popped::Closed);
+    }
+
+    #[test]
+    fn sharded_push_wakes_consumer_parked_on_another_home_shard() {
+        // Worker 1 (home shard 1) parks on an empty queue; the first
+        // push routes to shard 0 — the cross-shard wakeup must reach it
+        // and the item arrives by stealing, well within the timeout.
+        let q: Arc<ShardedQueue<u64>> = Arc::new(ShardedQueue::new(8, 2));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let r = q2.pop_timeout(1, Duration::from_secs(30));
+            (r, t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(50)); // let it park
+        q.push(42).unwrap();
+        let (r, dt) = consumer.join().unwrap();
+        assert_eq!(r, Popped::Item(42));
+        assert!(dt < Duration::from_secs(5), "woke only after {dt:?}");
+        assert_eq!(q.steals(), 1);
+    }
+
+    #[test]
+    fn sharded_close_wakes_all_parked_consumers_promptly() {
+        let q: Arc<ShardedQueue<u32>> = Arc::new(ShardedQueue::new(8, 4));
+        let handles: Vec<_> = (0..4)
+            .map(|w| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let t0 = Instant::now();
+                    let r = q.pop_timeout(w, Duration::from_secs(30));
+                    (r, t0.elapsed())
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(50));
+        q.close();
+        for h in handles {
+            let (r, dt) = h.join().unwrap();
+            assert_eq!(r, Popped::Closed);
+            assert!(dt < Duration::from_secs(5), "woke only after {dt:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_mpmc_conserves_items_and_never_spuriously_rejects() {
+        // 4 producers x 1000 items through 4 racing consumers. At most
+        // 4000 items ever exist and capacity is 4000, so admission may
+        // never report Full (each item holds at most one reserved slot,
+        // and a consumer frees the slot before the item could ever be
+        // re-pushed); every item must come out exactly once.
+        let n_prod = 4usize;
+        let per = 1000u64;
+        let q: Arc<ShardedQueue<u64>> =
+            Arc::new(ShardedQueue::new((n_prod as u64 * per) as usize, 4));
+        let producers: Vec<_> = (0..n_prod)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        q.push(p as u64 * per + i).unwrap(); // Full = bug
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..4usize)
+            .map(|w| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        match q.pop_timeout(w, Duration::from_millis(100)) {
+                            Popped::Item(v) => got.push(v),
+                            Popped::TimedOut => {}
+                            Popped::Closed => break,
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = Vec::new();
+        for c in consumers {
+            all.extend(c.join().unwrap());
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..n_prod as u64 * per).collect::<Vec<u64>>());
+        assert_eq!(q.len(), 0);
     }
 }

@@ -1,17 +1,37 @@
 //! The serving loop (paper Fig. 2, online phase): arrival injector →
-//! central queue → a pool of k executor threads (M/G/k), with the
-//! controller observing load on every arrival, every dequeue and a
-//! periodic monitor tick.
+//! request queue → a pool of k executor threads (M/G/k), with the
+//! controller observing load off the hot path.
 //!
 //! Threading: PJRT handles are `!Send`, so each worker *constructs its
 //! own engine inside its thread* from a shared `Fn() -> Result<E>`
-//! factory. The policy is shared behind a mutex (decisions are
-//! microseconds; the lock is uncontended relative to service times), as
-//! is the switch audit trail; per-worker request records are merged at
-//! join. With `workers == 1` the semantics are identical to the paper's
-//! single-server testbed.
+//! factory. With `workers == 1` and the central discipline the semantics
+//! are identical to the paper's single-server testbed.
+//!
+//! ## Hot-path coordination (lock-light control plane)
+//!
+//! Three coordinator structures used to serialize every request:
+//!
+//! * the **queue** is a [`ShardedQueue`] — per-worker bounded FIFOs with
+//!   round-robin routing and FIFO work stealing ([`Discipline`] selects
+//!   the shard count; `CentralFifo` is the single-shard case). Push and
+//!   pop touch one shard mutex shared by `1/shards` of the traffic, and
+//!   the AQM depth signal is a lock-free aggregate counter;
+//! * the **monitor**'s `on_arrival` is a relaxed atomic increment;
+//! * the **policy** sits behind a [`PolicyHandle`]: the current rung and
+//!   the policy's advertised no-switch depth band are cached in atomics,
+//!   so the common case (depth inside the band — no switch possible)
+//!   reads two atomics and never takes the mutex. Only a threshold
+//!   crossing — or the periodic monitor tick, which keeps smoothing and
+//!   hysteresis state moving — falls into the lock, runs the full
+//!   decision, appends to the switch audit trail, and refreshes the
+//!   cached band.
+//!
+//! A fast-path read may observe a rung up to one in-flight switch stale;
+//! this is indistinguishable from the reading thread having been
+//! scheduled just before the switch, and the audit trail (always
+//! lock-protected) stays exact.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -20,24 +40,52 @@ use anyhow::Result;
 use super::executor::RequestEngine;
 use super::monitor::LoadMonitor;
 use super::policy::ScalingPolicy;
-use super::queue::{QueueError, RequestQueue};
+use super::queue::{Discipline, Popped, ShardedQueue};
 use crate::metrics::{RequestRecord, SwitchEvent};
 
 /// Serving run options.
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
-    /// Queue capacity (admission control bound).
+    /// Queue capacity (admission control bound, total across shards).
     pub queue_capacity: usize,
     /// Monitor tick period (ms) — drives hysteresis progress when idle.
     pub tick_ms: u64,
     /// Executor worker threads k (M/G/k). Each worker builds its own
-    /// engine from the factory; all drain the shared queue.
+    /// engine from the factory; all drain the request queue.
     pub workers: usize,
+    /// Queue discipline: one central FIFO (the paper's testbed) or
+    /// per-worker shards with work stealing.
+    pub discipline: Discipline,
+    /// Shard count under [`Discipline::ShardedSteal`]; 0 = one shard
+    /// per worker. Ignored (forced to 1) under `CentralFifo`.
+    pub shards: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { queue_capacity: 4096, tick_ms: 20, workers: 1 }
+        ServeOptions {
+            queue_capacity: 4096,
+            tick_ms: 20,
+            workers: 1,
+            discipline: Discipline::CentralFifo,
+            shards: 0,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Effective shard count for this run.
+    pub fn effective_shards(&self) -> usize {
+        match self.discipline {
+            Discipline::CentralFifo => 1,
+            Discipline::ShardedSteal => {
+                if self.shards == 0 {
+                    self.workers.max(1)
+                } else {
+                    self.shards
+                }
+            }
+        }
     }
 }
 
@@ -50,6 +98,9 @@ pub struct ServeOutcome {
     pub rejected: usize,
     /// Mean smoothed arrival rate at end of run (diagnostics).
     pub final_rate_qps: f64,
+    /// Dequeues satisfied by stealing from a non-home shard (always 0
+    /// under the central discipline).
+    pub steals: u64,
 }
 
 /// Shared policy state: decisions + switch audit trail.
@@ -71,6 +122,76 @@ impl PolicyCell {
             self.observed = next;
         }
         next
+    }
+}
+
+/// Empty-band sentinel: `lo > hi` matches no depth.
+const EMPTY_BAND: u64 = (u32::MAX as u64) << 32;
+
+/// Pack an inclusive depth band into one atomic word (lo in the high 32
+/// bits). Depths are clamped to `u32::MAX`, far above any queue bound.
+fn pack_band(band: Option<(usize, usize)>) -> u64 {
+    match band {
+        None => EMPTY_BAND,
+        Some((lo, hi)) => {
+            let lo = lo.min(u32::MAX as usize) as u64;
+            let hi = hi.min(u32::MAX as usize) as u64;
+            (lo << 32) | hi
+        }
+    }
+}
+
+/// Lock-light wrapper around the shared policy: the current rung and the
+/// policy's no-switch band are mirrored in atomics so in-band load
+/// observations skip the mutex (see the module docs for the contract).
+pub(crate) struct PolicyHandle {
+    current: AtomicUsize,
+    band: AtomicU64,
+    inner: Mutex<PolicyCell>,
+}
+
+impl PolicyHandle {
+    fn new(policy: Box<dyn ScalingPolicy>) -> PolicyHandle {
+        let observed = policy.current();
+        let band = pack_band(policy.no_switch_band());
+        PolicyHandle {
+            current: AtomicUsize::new(observed),
+            band: AtomicU64::new(band),
+            inner: Mutex::new(PolicyCell {
+                policy,
+                observed,
+                switches: Vec::new(),
+            }),
+        }
+    }
+
+    /// Observe load; lock-free when `depth` is inside the cached
+    /// no-switch band, locked (full decision + band refresh) otherwise.
+    fn observe(&self, now_ms: f64, depth: usize) -> usize {
+        let band = self.band.load(Ordering::Acquire);
+        let (lo, hi) = ((band >> 32) as usize, (band & u32::MAX as u64) as usize);
+        if depth >= lo && depth <= hi {
+            return self.current.load(Ordering::Acquire);
+        }
+        self.observe_locked(now_ms, depth)
+    }
+
+    /// Observe through the policy lock unconditionally — the monitor
+    /// tick path, which must keep smoothing/hysteresis state moving
+    /// even when the depth sits inside the band.
+    fn observe_locked(&self, now_ms: f64, depth: usize) -> usize {
+        let mut cell = self.inner.lock().unwrap();
+        let next = cell.observe(now_ms, depth);
+        // Store order matters: current before band, so a fast path that
+        // sees the fresh band also sees the fresh rung.
+        self.current.store(next, Ordering::Release);
+        self.band
+            .store(pack_band(cell.policy.no_switch_band()), Ordering::Release);
+        next
+    }
+
+    fn take_switches(&self) -> Vec<SwitchEvent> {
+        self.inner.lock().unwrap().switches.clone()
     }
 }
 
@@ -116,24 +237,23 @@ where
         }
     };
 
-    let queue: Arc<RequestQueue<(u64, f64)>> =
-        Arc::new(RequestQueue::new(opts.queue_capacity));
+    let queue: Arc<ShardedQueue<(u64, f64)>> = Arc::new(ShardedQueue::new(
+        opts.queue_capacity,
+        opts.effective_shards(),
+    ));
     let monitor = Arc::new(LoadMonitor::new(0.3));
-    let initial = policy.current();
-    let cell = Arc::new(Mutex::new(PolicyCell {
-        policy,
-        observed: initial,
-        switches: Vec::new(),
-    }));
+    let handle = Arc::new(PolicyHandle::new(policy));
     let done = Arc::new(AtomicBool::new(false));
-    let rejected = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let rejected = Arc::new(AtomicUsize::new(0));
     let make_engine = &make_engine;
 
     std::thread::scope(|scope| -> Result<ServeOutcome> {
         // ---- monitor tick thread: keeps hysteresis moving when idle.
+        // Always takes the locked path so smoothing state progresses
+        // even while every arrival/dequeue rides the lock-free band.
         {
             let queue = queue.clone();
-            let cell = cell.clone();
+            let handle = handle.clone();
             let monitor = monitor.clone();
             let done = done.clone();
             let tick = opts.tick_ms;
@@ -144,7 +264,7 @@ where
                     std::thread::sleep(Duration::from_millis(tick));
                     let t = start.elapsed().as_secs_f64() * 1e3;
                     monitor.tick(t);
-                    cell.lock().unwrap().observe(t, queue.len());
+                    handle.observe_locked(t, queue.len());
                 }
             });
         }
@@ -152,7 +272,7 @@ where
         // ---- arrival injector.
         {
             let queue = queue.clone();
-            let cell = cell.clone();
+            let handle = handle.clone();
             let monitor = monitor.clone();
             let rejected = rejected.clone();
             let arrivals = arrivals.to_vec();
@@ -169,23 +289,23 @@ where
                     monitor.on_arrival();
                     match queue.push((id as u64, t)) {
                         Ok(()) => {
-                            cell.lock().unwrap().observe(t, queue.len());
+                            handle.observe(t, queue.len());
                         }
-                        Err(QueueError::Full) => {
+                        Err(super::queue::QueueError::Full) => {
                             rejected.fetch_add(1, Ordering::Relaxed);
                         }
-                        Err(QueueError::Closed) => break,
+                        Err(super::queue::QueueError::Closed) => break,
                     }
                 }
                 queue.close();
             });
         }
 
-        // ---- executor pool: k workers drain the shared queue.
+        // ---- executor pool: worker w drains shard w, stealing when dry.
         let handles: Vec<_> = (0..workers)
-            .map(|_| {
+            .map(|w| {
                 let queue = queue.clone();
-                let cell = cell.clone();
+                let handle = handle.clone();
                 let gate = gate.clone();
                 scope.spawn(move || -> Result<Vec<RequestRecord>> {
                     // Build (and PJRT-compile) the engine; the last
@@ -208,15 +328,15 @@ where
                     let mut engine = engine?;
                     let now_ms = move || start.elapsed().as_secs_f64() * 1e3;
                     let mut records = Vec::new();
+                    // The pop result is exhaustive by construction:
+                    // Item / TimedOut / Closed — no error arm to
+                    // declare unreachable.
                     loop {
-                        match queue.pop_timeout(Duration::from_millis(50)) {
-                            Ok(Some((id, arrival_ms))) => {
+                        match queue.pop_timeout(w, Duration::from_millis(50)) {
+                            Popped::Item((id, arrival_ms)) => {
                                 let t_start = now_ms();
                                 // Switches take effect at dequeue.
-                                let idx = cell
-                                    .lock()
-                                    .unwrap()
-                                    .observe(t_start, queue.len());
+                                let idx = handle.observe(t_start, queue.len());
                                 let out = engine.execute(idx)?;
                                 let t_fin = now_ms();
                                 records.push(RequestRecord {
@@ -228,11 +348,10 @@ where
                                     accuracy: out.accuracy,
                                     success: out.success,
                                 });
-                                cell.lock().unwrap().observe(t_fin, queue.len());
+                                handle.observe(t_fin, queue.len());
                             }
-                            Ok(None) => {}
-                            Err(QueueError::Closed) => break,
-                            Err(QueueError::Full) => unreachable!(),
+                            Popped::TimedOut => {}
+                            Popped::Closed => break,
                         }
                     }
                     Ok(records)
@@ -256,15 +375,12 @@ where
         // (a no-op at k = 1: one FIFO consumer pops in id order).
         records.sort_by_key(|r| r.id);
 
-        let switches = {
-            let cell = cell.lock().unwrap();
-            cell.switches.clone()
-        };
         Ok(ServeOutcome {
             records,
-            switches,
+            switches: handle.take_switches(),
             rejected: rejected.load(Ordering::Relaxed),
             final_rate_qps: monitor.rate_qps(),
+            steals: queue.steals(),
         })
     })
 }
@@ -274,6 +390,7 @@ mod tests {
     use super::*;
     use crate::serving::executor::MockEngine;
     use crate::serving::policy::StaticPolicy;
+    use crate::serving::ElasticoPolicy;
 
     #[test]
     fn serves_all_requests_fifo() {
@@ -292,6 +409,7 @@ mod tests {
         .unwrap();
         assert_eq!(out.records.len(), 40);
         assert_eq!(out.rejected, 0);
+        assert_eq!(out.steals, 0, "central discipline never steals");
         let mut by_start = out.records.clone();
         by_start.sort_by(|a, b| a.start_ms.partial_cmp(&b.start_ms).unwrap());
         for w in by_start.windows(2) {
@@ -337,7 +455,12 @@ mod tests {
             },
             Box::new(StaticPolicy::new(0, "only")),
             &arrivals,
-            &ServeOptions { queue_capacity: 4, tick_ms: 10, workers: 1 },
+            &ServeOptions {
+                queue_capacity: 4,
+                tick_ms: 10,
+                workers: 1,
+                ..ServeOptions::default()
+            },
         )
         .unwrap();
         assert!(out.rejected > 0);
@@ -355,5 +478,85 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err:#}").contains("no accelerator"));
+    }
+
+    #[test]
+    fn effective_shards_resolution() {
+        let central = ServeOptions { workers: 8, ..ServeOptions::default() };
+        assert_eq!(central.effective_shards(), 1);
+        let auto = ServeOptions {
+            workers: 8,
+            discipline: Discipline::ShardedSteal,
+            ..ServeOptions::default()
+        };
+        assert_eq!(auto.effective_shards(), 8);
+        let pinned = ServeOptions {
+            workers: 8,
+            discipline: Discipline::ShardedSteal,
+            shards: 3,
+            ..ServeOptions::default()
+        };
+        assert_eq!(pinned.effective_shards(), 3);
+    }
+
+    #[test]
+    fn policy_handle_fast_path_matches_locked_decisions() {
+        // Drive the same observation stream through a PolicyHandle and a
+        // bare policy; the handle's returned rungs and recorded switches
+        // must match (single-threaded: band staleness cannot appear).
+        let plan = {
+            let mk = |label: &str, acc: f64, mean: f64| {
+                crate::planner::ProfiledConfig {
+                    config: vec![],
+                    label: label.into(),
+                    accuracy: acc,
+                    latency: crate::planner::LatencyProfile {
+                        mean_ms: mean,
+                        p50_ms: mean,
+                        p95_ms: mean * 1.2,
+                        runs: 5,
+                    },
+                }
+            };
+            crate::planner::derive_plan(
+                &[mk("fast", 0.76, 20.0), mk("accurate", 0.85, 90.0)],
+                crate::planner::AqmParams::for_slo(300.0),
+            )
+        };
+        let handle = PolicyHandle::new(Box::new(ElasticoPolicy::new(plan.clone())));
+        let mut bare = ElasticoPolicy::new(plan);
+        let mut bare_switches = 0usize;
+        let depths = [0usize, 0, 1, 4, 9, 14, 9, 3, 1, 0, 0, 0, 0, 2, 7, 0];
+        let mut t = 0.0;
+        for (i, &d) in depths.iter().cycle().take(600).enumerate() {
+            t += if i % 11 == 0 { 1200.0 } else { 15.0 };
+            let got = handle.observe(t, d);
+            // Reference: the same elision rule applied to a bare policy,
+            // so both sides skip exactly the same observations.
+            let want = match bare.no_switch_band() {
+                Some((lo, hi)) if d >= lo && d <= hi => bare.current(),
+                _ => {
+                    let before = bare.current();
+                    let next = bare.decide(t, d);
+                    if next != before {
+                        bare_switches += 1;
+                    }
+                    next
+                }
+            };
+            assert_eq!(got, want, "diverged at t={t} depth={d}");
+            // Ticks hit the locked path in both worlds.
+            if i % 5 == 0 {
+                let before = bare.current();
+                let next = bare.decide(t + 1.0, d);
+                if next != before {
+                    bare_switches += 1;
+                }
+                assert_eq!(handle.observe_locked(t + 1.0, d), next);
+            }
+        }
+        let switches = handle.take_switches();
+        assert!(!switches.is_empty(), "stream should have produced switches");
+        assert_eq!(switches.len(), bare_switches, "audit trail diverged");
     }
 }

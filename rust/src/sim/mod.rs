@@ -1,4 +1,4 @@
-//! Discrete-event M/G/k serving simulator.
+//! Discrete-event M/G/k serving simulator, in both queue disciplines.
 //!
 //! Replays a workload trace against a service-time model derived from the
 //! Planner's latency profiles, driving the *same* [`ScalingPolicy`]
@@ -8,23 +8,45 @@
 //!   within the latency slack — §V),
 //! * regenerate the paper's serving figures quickly and deterministically
 //!   (180 s x 24 experiment cells replay in milliseconds),
-//! * property-test controller invariants over thousands of random loads.
+//! * property-test controller invariants over thousands of random loads,
+//! * quantify the ordering/latency delta of the sharded work-stealing
+//!   dispatch against central-FIFO theory before touching the live pool.
 //!
-//! Semantics mirror the live executor pool: a single FIFO queue drained
-//! by k servers (head-of-line dispatch to the earliest-free server);
-//! configuration switches are routing-only and take effect on the *next*
-//! dequeue (in-flight requests finish under their old configuration).
-//! [`simulate`] is the k = 1 case and reproduces the original M/G/1
-//! simulator event-for-event. Known divergence from the live server
-//! (inherited from the seed simulator): the arrival-time policy
-//! observation here includes the in-service count (≤ k) on top of the
-//! queue depth, while the live injector observes queue depth only —
-//! kept so k = 1 results stay bit-for-bit with the paper figures.
+//! ## Disciplines ([`Discipline`], mirroring the live server)
+//!
+//! * **`CentralFifo`** — a single FIFO queue drained by k servers
+//!   (head-of-line dispatch to the earliest-free server). Global FIFO
+//!   order; [`simulate`] is the k = 1 case and reproduces the original
+//!   M/G/1 simulator event-for-event.
+//! * **`ShardedSteal`** — arrivals route round-robin over `shards`
+//!   per-worker FIFOs (with one injector this is exactly `id % shards`,
+//!   matching the live router); the earliest-free server dispatches from
+//!   its home shard (`worker % shards`), stealing the *front* of the
+//!   next non-empty shard when its home shard is dry. Per-shard FIFO
+//!   order is exact; global order can diverge from FIFO by up to one
+//!   round-robin lap, which is the latency cost the DES quantifies.
+//!   With `shards == 1` the dispatch degenerates to the central FIFO
+//!   and [`simulate_disc`] reproduces `CentralFifo` record-for-record
+//!   (asserted by the parity test below).
+//!
+//! Both disciplines consult the policy on every arrival and every
+//! dequeue/departure against the *aggregate* queued depth — the same
+//! total-across-shards signal the live `ShardedQueue` maintains
+//! lock-free. Known divergence from the live server (inherited from the
+//! seed simulator): the arrival-time policy observation here includes
+//! the in-service count (≤ k) on top of the queue depth, while the live
+//! injector observes queue depth only — kept so k = 1 results stay
+//! bit-for-bit with the paper figures. The DES queue is unbounded (no
+//! admission rejections), as in the seed.
 
 pub mod service;
 pub mod theory;
 
 pub use service::{DeterministicService, LognormalService, ServiceModel};
+
+// The queue discipline is defined next to the live queues and shared
+// with the DES so both sides dispatch identically.
+pub use crate::serving::Discipline;
 
 use crate::metrics::{RequestRecord, SwitchEvent};
 use crate::planner::Plan;
@@ -36,6 +58,9 @@ use crate::util::Rng;
 pub struct SimOutcome {
     pub records: Vec<RequestRecord>,
     pub switches: Vec<SwitchEvent>,
+    /// Dispatches satisfied by stealing from a non-home shard (always 0
+    /// under [`Discipline::CentralFifo`]).
+    pub steals: u64,
 }
 
 /// Simulate serving `arrivals` (seconds) under `policy` on a single
@@ -51,13 +76,8 @@ pub fn simulate<P: ScalingPolicy, S: ServiceModel>(
 }
 
 /// Simulate serving `arrivals` (seconds) under `policy` on a pool of
-/// `workers` servers draining one FIFO queue (M/G/k).
-///
-/// `service` samples per-request service times (ms) given a ladder index;
-/// `plan` supplies per-rung expected accuracy. The policy is consulted on
-/// every arrival and every departure (the live monitor's tick points).
-/// The head of the queue is dispatched to the earliest-free server; with
-/// `workers == 1` this is bit-for-bit the original M/G/1 simulator.
+/// `workers` servers draining one central FIFO (M/G/k) — see
+/// [`simulate_disc`] for the sharded discipline.
 pub fn simulate_k<P: ScalingPolicy, S: ServiceModel>(
     arrivals: &[f64],
     plan: &Plan,
@@ -66,14 +86,62 @@ pub fn simulate_k<P: ScalingPolicy, S: ServiceModel>(
     seed: u64,
     workers: usize,
 ) -> SimOutcome {
+    simulate_disc(
+        arrivals,
+        plan,
+        policy,
+        service,
+        seed,
+        workers,
+        Discipline::CentralFifo,
+        0,
+    )
+}
+
+/// Simulate serving under either queue discipline.
+///
+/// `service` samples per-request service times (ms) given a ladder index;
+/// `plan` supplies per-rung expected accuracy. The policy is consulted on
+/// every arrival and every dispatch/departure (the live monitor's
+/// observation points). `shards` is the shard count under
+/// [`Discipline::ShardedSteal`] (0 = one per worker) and is ignored under
+/// [`Discipline::CentralFifo`]. With `CentralFifo` and `workers == 1`
+/// this is bit-for-bit the original M/G/1 simulator.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_disc<P: ScalingPolicy, S: ServiceModel>(
+    arrivals: &[f64],
+    plan: &Plan,
+    policy: &mut P,
+    service: &S,
+    seed: u64,
+    workers: usize,
+    discipline: Discipline,
+    shards: usize,
+) -> SimOutcome {
+    let workers = workers.max(1);
+    let nsh = match discipline {
+        Discipline::CentralFifo => 1,
+        Discipline::ShardedSteal => {
+            if shards == 0 {
+                workers
+            } else {
+                shards
+            }
+        }
+    };
+
     let mut rng = Rng::new(seed);
     let mut records = Vec::with_capacity(arrivals.len());
     let mut switches = Vec::new();
+    let mut steals = 0u64;
 
-    // Queue of (id, arrival_ms); server s is busy until `busy[s]`.
-    let mut queue: std::collections::VecDeque<(u64, f64)> =
-        std::collections::VecDeque::new();
-    let mut busy: Vec<f64> = vec![f64::NEG_INFINITY; workers.max(1)];
+    // Per-shard FIFOs of (id, arrival_ms); server s is busy until
+    // `busy[s]`. The central discipline is the one-shard case.
+    let mut queues: Vec<std::collections::VecDeque<(u64, f64)>> =
+        (0..nsh).map(|_| std::collections::VecDeque::new()).collect();
+    let mut queued_total = 0usize;
+    let mut router = 0usize;
+    let mut busy: Vec<f64> = vec![f64::NEG_INFINITY; workers];
     let mut observed = policy.current();
 
     let observe = |policy: &mut P,
@@ -95,7 +163,7 @@ pub fn simulate_k<P: ScalingPolicy, S: ServiceModel>(
 
     // Event loop: either the next arrival or the earliest server
     // freeing up.
-    while i < n || !queue.is_empty() {
+    while i < n || queued_total > 0 {
         let next_arrival = if i < n { arrivals[i] * 1000.0 } else { f64::INFINITY };
 
         // Earliest-free server (ties broken by lowest index).
@@ -106,12 +174,24 @@ pub fn simulate_k<P: ScalingPolicy, S: ServiceModel>(
             .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
             .unwrap();
 
-        if !queue.is_empty() && earliest <= next_arrival {
-            // Serve the head of the queue at max(server-free, arrival).
-            let (id, arr_ms) = queue.pop_front().unwrap();
+        if queued_total > 0 && earliest <= next_arrival {
+            // Dispatch to server `slot`: home shard first, then a FIFO
+            // steal sweep (exactly the live ShardedQueue::try_pop walk).
+            let home = slot % nsh;
+            let shard = (0..nsh)
+                .map(|d| (home + d) % nsh)
+                .find(|&s| !queues[s].is_empty())
+                .unwrap();
+            if shard != home {
+                steals += 1;
+            }
+            let (id, arr_ms) = queues[shard].pop_front().unwrap();
+            queued_total -= 1;
             let start = earliest.max(arr_ms);
-            // Switches apply at dequeue: consult the policy now.
-            let idx = observe(policy, &mut switches, &mut observed, start, queue.len());
+            // Switches apply at dequeue: consult the policy now, against
+            // the aggregate depth across shards.
+            let idx =
+                observe(policy, &mut switches, &mut observed, start, queued_total);
             let svc = service.sample_ms(idx, &mut rng);
             let finish = start + svc;
             busy[slot] = finish;
@@ -125,23 +205,32 @@ pub fn simulate_k<P: ScalingPolicy, S: ServiceModel>(
                 success: None,
             });
             // Departure observation.
-            observe(policy, &mut switches, &mut observed, finish, queue.len());
+            observe(policy, &mut switches, &mut observed, finish, queued_total);
         } else if i < n {
-            // Admit the next arrival.
+            // Admit the next arrival (round-robin routing; with one
+            // shard this is the central FIFO push).
             let arr_ms = arrivals[i] * 1000.0;
-            queue.push_back((next_id, arr_ms));
+            queues[router % nsh].push_back((next_id, arr_ms));
+            router += 1;
+            queued_total += 1;
             next_id += 1;
             i += 1;
             // In-flight requests count toward the observed depth.
             let in_flight = busy.iter().filter(|&&b| b > arr_ms).count();
-            observe(policy, &mut switches, &mut observed, arr_ms, queue.len() + in_flight);
+            observe(
+                policy,
+                &mut switches,
+                &mut observed,
+                arr_ms,
+                queued_total + in_flight,
+            );
         } else {
             break;
         }
     }
 
     records.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
-    SimOutcome { records, switches }
+    SimOutcome { records, switches, steals }
 }
 
 #[cfg(test)]
@@ -220,6 +309,7 @@ mod tests {
             assert!(w[1].arrival_ms >= w[0].arrival_ms);
         }
         assert!(out.switches.is_empty());
+        assert_eq!(out.steals, 0);
     }
 
     #[test]
@@ -308,6 +398,43 @@ mod tests {
     }
 
     #[test]
+    fn sharded_single_shard_reproduces_central_fifo_exactly() {
+        // The acceptance parity: ShardedSteal with one shard must be the
+        // central FIFO record-for-record (same policy decisions, same
+        // rng consumption, same timestamps) at k = 1.
+        let plan = plan2();
+        let arr = arrivals(12.0, 90.0);
+        let svc = LognormalService::from_plan(&plan, 0.25);
+
+        let mut pc = ElasticoPolicy::new(plan.clone());
+        let central = simulate_disc(
+            &arr,
+            &plan,
+            &mut pc,
+            &svc,
+            42,
+            1,
+            Discipline::CentralFifo,
+            0,
+        );
+        let mut ps = ElasticoPolicy::new(plan.clone());
+        let sharded = simulate_disc(
+            &arr,
+            &plan,
+            &mut ps,
+            &svc,
+            42,
+            1,
+            Discipline::ShardedSteal,
+            1,
+        );
+
+        assert!(records_identical(&central.records, &sharded.records));
+        assert_eq!(central.switches.len(), sharded.switches.len());
+        assert_eq!(sharded.steals, 0, "one shard can never steal");
+    }
+
+    #[test]
     fn k_servers_shrink_the_makespan() {
         // Deterministic overload: 100 arrivals, 40 ms service. One
         // server needs ~4000 ms; four servers ~1000 ms.
@@ -315,17 +442,21 @@ mod tests {
         let arr: Vec<f64> = (0..100).map(|i| i as f64 * 0.001).collect();
         let svc = DeterministicService { means: vec![40.0, 40.0] };
 
-        let makespan = |k: usize| {
+        let makespan = |k: usize, d: Discipline| {
             let mut pol = StaticPolicy::new(0, "fast");
-            let out = simulate_k(&arr, &plan, &mut pol, &svc, 1, k);
+            let out = simulate_disc(&arr, &plan, &mut pol, &svc, 1, k, d, 0);
             out.records
                 .iter()
                 .map(|r| r.finish_ms)
                 .fold(f64::NEG_INFINITY, f64::max)
         };
-        let m1 = makespan(1);
-        let m4 = makespan(4);
+        let m1 = makespan(1, Discipline::CentralFifo);
+        let m4 = makespan(4, Discipline::CentralFifo);
         assert!(m1 / m4 >= 3.9, "makespan k=1 {m1:.0} vs k=4 {m4:.0}");
+        // The sharded discipline keeps the same pool speedup: with equal
+        // service times the steal sweep keeps every server busy.
+        let s4 = makespan(4, Discipline::ShardedSteal);
+        assert!(m1 / s4 >= 3.9, "sharded makespan k=4 {s4:.0} vs k=1 {m1:.0}");
     }
 
     #[test]
@@ -333,23 +464,99 @@ mod tests {
         let plan = plan2();
         let arr = arrivals(40.0, 30.0);
         let svc = LognormalService::from_plan(&plan, 0.25);
-        for k in [1usize, 2, 3] {
-            let mut pol = StaticPolicy::new(1, "accurate");
-            let out = simulate_k(&arr, &plan, &mut pol, &svc, 7, k);
-            assert_eq!(out.records.len(), arr.len());
-            // Sweep service intervals: concurrency never exceeds k.
-            let mut events: Vec<(f64, i32)> = Vec::new();
-            for r in &out.records {
-                events.push((r.start_ms, 1));
-                events.push((r.finish_ms, -1));
+        for disc in [Discipline::CentralFifo, Discipline::ShardedSteal] {
+            for k in [1usize, 2, 3] {
+                let mut pol = StaticPolicy::new(1, "accurate");
+                let out =
+                    simulate_disc(&arr, &plan, &mut pol, &svc, 7, k, disc, 0);
+                assert_eq!(out.records.len(), arr.len());
+                // Sweep service intervals: concurrency never exceeds k.
+                let mut events: Vec<(f64, i32)> = Vec::new();
+                for r in &out.records {
+                    events.push((r.start_ms, 1));
+                    events.push((r.finish_ms, -1));
+                }
+                events.sort_by(|a, b| {
+                    a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+                });
+                let mut in_service = 0;
+                for (_, d) in events {
+                    in_service += d;
+                    assert!(
+                        in_service <= k as i32,
+                        "concurrency {in_service} > k {k} ({disc:?})"
+                    );
+                }
             }
-            events.sort_by(|a, b| {
-                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+        }
+    }
+
+    #[test]
+    fn sharded_conserves_requests_and_steals_under_skew() {
+        // More shards than workers: shards beyond the home set are only
+        // reachable by stealing, so a full drain forces steals and every
+        // request must still be served exactly once.
+        let plan = plan2();
+        let arr: Vec<f64> = (0..120).map(|i| i as f64 * 0.001).collect();
+        let svc = DeterministicService { means: vec![10.0, 10.0] };
+        let mut pol = StaticPolicy::new(0, "fast");
+        let out = simulate_disc(
+            &arr,
+            &plan,
+            &mut pol,
+            &svc,
+            3,
+            2,
+            Discipline::ShardedSteal,
+            6,
+        );
+        assert_eq!(out.records.len(), arr.len());
+        let mut ids: Vec<u64> = out.records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..arr.len() as u64).collect::<Vec<u64>>());
+        // 4 of 6 shards are steal-only for workers {0, 1}: at least the
+        // 80 requests routed there must arrive via steals.
+        assert!(out.steals >= 80, "steals {} < 80", out.steals);
+    }
+
+    #[test]
+    fn sharded_per_shard_order_is_fifo() {
+        // Within one shard (id ≡ r mod shards) starts follow arrival
+        // order even though global order may interleave.
+        let plan = plan2();
+        let arr = arrivals(30.0, 30.0);
+        let svc = LognormalService::from_plan(&plan, 0.25);
+        let mut pol = StaticPolicy::new(0, "fast");
+        let shards = 4usize;
+        let out = simulate_disc(
+            &arr,
+            &plan,
+            &mut pol,
+            &svc,
+            11,
+            4,
+            Discipline::ShardedSteal,
+            shards,
+        );
+        for s in 0..shards as u64 {
+            let mut rs: Vec<_> = out
+                .records
+                .iter()
+                .filter(|r| r.id % shards as u64 == s)
+                .collect();
+            rs.sort_by(|a, b| {
+                a.start_ms
+                    .partial_cmp(&b.start_ms)
+                    .unwrap()
+                    .then(a.id.cmp(&b.id))
             });
-            let mut in_service = 0;
-            for (_, d) in events {
-                in_service += d;
-                assert!(in_service <= k as i32, "concurrency {in_service} > k {k}");
+            for w in rs.windows(2) {
+                assert!(
+                    w[1].id > w[0].id,
+                    "shard {s} served {} before {}",
+                    w[1].id,
+                    w[0].id
+                );
             }
         }
     }

@@ -61,6 +61,31 @@ pub fn group(title: &str) {
     println!("\n== {title} ==");
 }
 
+/// Write bench results as a machine-readable JSON map `name ->
+/// nanoseconds per iteration` (mean), so the perf trajectory can be
+/// diffed across PRs (`BENCH_<target>.json` at the invocation cwd).
+/// Hand-rolled serialization — no serde offline (DESIGN.md §6).
+pub fn write_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    let mut out = String::from("{\n");
+    for (i, r) in results.iter().enumerate() {
+        let name: String = r
+            .name
+            .chars()
+            .map(|c| if c == '"' || c == '\\' { '_' } else { c })
+            .collect();
+        out.push_str(&format!(
+            "  \"{}\": {:.1}{}\n",
+            name,
+            r.summary_us.mean * 1e3,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("}\n");
+    std::fs::write(path, &out)?;
+    println!("-> {path} ({} entries)", results.len());
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,5 +98,25 @@ mod tests {
         });
         assert_eq!(r.iters, if fast_mode() { 5 } else { 10 });
         assert!(r.summary_us.mean >= 0.0);
+    }
+
+    #[test]
+    fn json_output_is_a_flat_name_to_ns_map() {
+        let r1 = bench("alpha x1", 0, 3, || {
+            std::hint::black_box((0..100u64).sum::<u64>());
+        });
+        let r2 = bench("beta \"quoted\"", 0, 3, || {
+            std::hint::black_box((0..100u64).sum::<u64>());
+        });
+        let dir = std::env::temp_dir().join("compass_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        write_json(path.to_str().unwrap(), &[r1, r2]).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with('{') && body.trim_end().ends_with('}'));
+        assert!(body.contains("\"alpha x1\":"));
+        // Quotes in names are sanitized, keeping the JSON well-formed.
+        assert!(body.contains("\"beta _quoted_\":"));
+        assert_eq!(body.matches(':').count(), 2);
     }
 }

@@ -41,7 +41,12 @@ fn run(policy_idx: Option<usize>, arrivals: &[f64], slo: f64) -> RunSummary {
         },
         policy,
         arrivals,
-        &ServeOptions { queue_capacity: 8192, tick_ms: 5, workers: 1 },
+        &ServeOptions {
+            queue_capacity: 8192,
+            tick_ms: 5,
+            workers: 1,
+            ..ServeOptions::default()
+        },
     )
     .unwrap();
     RunSummary::compute(&out.records, &out.switches, slo, 3)

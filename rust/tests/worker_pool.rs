@@ -1,4 +1,5 @@
-//! Integration: the k-worker executor pool (M/G/k serving runtime).
+//! Integration: the k-worker executor pool (M/G/k serving runtime), in
+//! both queue disciplines.
 //!
 //! Uses a sleeping engine rather than [`MockEngine`]'s busy-wait so a
 //! k-worker pool scales on CI runners with fewer than k cores: sleeping
@@ -10,7 +11,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 use compass::serving::executor::RequestEngine;
-use compass::serving::{serve, ServeOptions, StaticPolicy};
+use compass::serving::{serve, Discipline, ServeOptions, StaticPolicy};
 use compass::workflows::ExecOutcome;
 
 /// Scripted engine that sleeps out its service time (I/O-bound model).
@@ -29,15 +30,27 @@ impl RequestEngine for SleepEngine {
     }
 }
 
-/// Run `n` simultaneous arrivals through a k-worker pool; returns the
-/// outcome and the makespan (ms on the run clock).
-fn run_pool(n: usize, workers: usize, service_ms: f64, capacity: usize) -> (usize, usize, f64) {
+/// Run `n` simultaneous arrivals through a k-worker pool; returns
+/// (served, rejected, makespan ms on the run clock).
+fn run_pool(
+    n: usize,
+    workers: usize,
+    service_ms: f64,
+    capacity: usize,
+    discipline: Discipline,
+) -> (usize, usize, f64) {
     let arrivals = vec![0.0; n];
     let out = serve(
         move || Ok(SleepEngine { service_ms }),
         Box::new(StaticPolicy::new(0, "only")),
         &arrivals,
-        &ServeOptions { queue_capacity: capacity, tick_ms: 10, workers },
+        &ServeOptions {
+            queue_capacity: capacity,
+            tick_ms: 10,
+            workers,
+            discipline,
+            shards: 0,
+        },
     )
     .unwrap();
     // No record may be lost or duplicated under concurrent dequeue.
@@ -57,13 +70,32 @@ fn four_workers_cut_the_makespan_by_about_4x() {
     // sleeping; four workers ~250 ms. Per-request sleep overshoot
     // inflates both sides proportionally, so the ratio is robust; demand
     // >= 3x (the acceptance bar) to leave room for scheduler noise.
-    let (served1, rejected1, t1) = run_pool(40, 1, 25.0, 4096);
-    let (served4, rejected4, t4) = run_pool(40, 4, 25.0, 4096);
+    let (served1, rejected1, t1) =
+        run_pool(40, 1, 25.0, 4096, Discipline::CentralFifo);
+    let (served4, rejected4, t4) =
+        run_pool(40, 4, 25.0, 4096, Discipline::CentralFifo);
     assert_eq!((served1, rejected1), (40, 0));
     assert_eq!((served4, rejected4), (40, 0));
     assert!(
         t1 / t4 >= 3.0,
         "k=4 should be ~4x faster: k=1 {t1:.0} ms vs k=4 {t4:.0} ms"
+    );
+}
+
+#[test]
+fn four_workers_scale_under_sharded_stealing_too() {
+    // The sharded discipline must keep the pool speedup: simultaneous
+    // arrivals round-robin over 4 shards and any early-finishing worker
+    // steals, so no shard's backlog is stranded.
+    let (served1, rejected1, t1) =
+        run_pool(40, 1, 25.0, 4096, Discipline::ShardedSteal);
+    let (served4, rejected4, t4) =
+        run_pool(40, 4, 25.0, 4096, Discipline::ShardedSteal);
+    assert_eq!((served1, rejected1), (40, 0));
+    assert_eq!((served4, rejected4), (40, 0));
+    assert!(
+        t1 / t4 >= 3.0,
+        "sharded k=4 should be ~4x faster: k=1 {t1:.0} ms vs k=4 {t4:.0} ms"
     );
 }
 
@@ -75,7 +107,12 @@ fn no_request_lost_or_duplicated_under_concurrent_dequeue() {
         || Ok(SleepEngine { service_ms: 1.0 }),
         Box::new(StaticPolicy::new(0, "only")),
         &arrivals,
-        &ServeOptions { queue_capacity: 4096, tick_ms: 10, workers: 4 },
+        &ServeOptions {
+            queue_capacity: 4096,
+            tick_ms: 10,
+            workers: 4,
+            ..ServeOptions::default()
+        },
     )
     .unwrap();
     assert_eq!(out.rejected, 0);
@@ -86,12 +123,74 @@ fn no_request_lost_or_duplicated_under_concurrent_dequeue() {
 }
 
 #[test]
+fn stealing_loses_nothing_and_never_spuriously_rejects() {
+    // The steal-correctness property (acceptance): with 4 workers
+    // racing over 4 shards, every request is served exactly once —
+    // none lost, none duplicated — and since at most 300 requests are
+    // ever buffered against a 4096-slot admission bound, the aggregate
+    // depth counter may never report Full (a rejection here would be a
+    // rejected-while-capacity-remains bug in the lock-free admission).
+    let arrivals: Vec<f64> = (0..300).map(|i| i as f64 * 0.0002).collect();
+    let out = serve(
+        || Ok(SleepEngine { service_ms: 1.0 }),
+        Box::new(StaticPolicy::new(0, "only")),
+        &arrivals,
+        &ServeOptions {
+            queue_capacity: 4096,
+            tick_ms: 10,
+            workers: 4,
+            discipline: Discipline::ShardedSteal,
+            shards: 0,
+        },
+    )
+    .unwrap();
+    assert_eq!(out.rejected, 0, "spurious admission rejection");
+    let ids: Vec<u64> = out.records.iter().map(|r| r.id).collect();
+    assert_eq!(ids, (0..300).collect::<Vec<u64>>(), "lost or duplicated ids");
+}
+
+#[test]
+fn steal_only_shards_are_fully_drained() {
+    // 6 shards over 2 workers: shards 2..5 are nobody's home shard, so
+    // all of their requests can only be served by stealing. Every
+    // request must still come out exactly once, and the steal counter
+    // must account for at least the 4/6 of requests routed to the
+    // steal-only shards.
+    let n = 120u64;
+    let arrivals = vec![0.0; n as usize];
+    let out = serve(
+        || Ok(SleepEngine { service_ms: 2.0 }),
+        Box::new(StaticPolicy::new(0, "only")),
+        &arrivals,
+        &ServeOptions {
+            queue_capacity: 4096,
+            tick_ms: 10,
+            workers: 2,
+            discipline: Discipline::ShardedSteal,
+            shards: 6,
+        },
+    )
+    .unwrap();
+    assert_eq!(out.rejected, 0);
+    let ids: Vec<u64> = out.records.iter().map(|r| r.id).collect();
+    assert_eq!(ids, (0..n).collect::<Vec<u64>>(), "lost or duplicated ids");
+    assert!(
+        out.steals >= n * 4 / 6,
+        "steals {} cannot cover the steal-only shards",
+        out.steals
+    );
+}
+
+#[test]
 fn served_plus_rejected_always_sums_to_arrivals() {
     // Overload a tiny queue so admission control rejects some share;
-    // accounting must stay exact with concurrent consumers.
-    let (served, rejected, _t) = run_pool(60, 3, 20.0, 4);
-    assert!(rejected > 0, "expected overload rejections");
-    assert_eq!(served + rejected, 60);
+    // accounting must stay exact with concurrent consumers, under both
+    // disciplines.
+    for discipline in [Discipline::CentralFifo, Discipline::ShardedSteal] {
+        let (served, rejected, _t) = run_pool(60, 3, 20.0, 4, discipline);
+        assert!(rejected > 0, "expected overload rejections ({discipline:?})");
+        assert_eq!(served + rejected, 60, "{discipline:?}");
+    }
 }
 
 #[test]
@@ -107,6 +206,33 @@ fn single_worker_pool_preserves_fifo_service_order() {
     )
     .unwrap();
     assert_eq!(out.records.len(), 30);
+    let mut by_start = out.records.clone();
+    by_start.sort_by(|a, b| a.start_ms.partial_cmp(&b.start_ms).unwrap());
+    for w in by_start.windows(2) {
+        assert!(w[1].arrival_ms >= w[0].arrival_ms - 1e-6, "FIFO violated");
+        assert!(w[1].start_ms >= w[0].finish_ms - 1.0, "overlap at k=1");
+    }
+}
+
+#[test]
+fn sharded_single_shard_behaves_like_the_central_fifo() {
+    // Live k=1 parity (the DES asserts bit-for-bit; real threads can
+    // only assert semantics): one shard + one worker must preserve
+    // strict FIFO order, serve everything, and never steal.
+    let arrivals: Vec<f64> = (0..30).map(|i| i as f64 * 0.002).collect();
+    let out = serve(
+        || Ok(SleepEngine { service_ms: 4.0 }),
+        Box::new(StaticPolicy::new(0, "only")),
+        &arrivals,
+        &ServeOptions {
+            discipline: Discipline::ShardedSteal,
+            shards: 1,
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(out.records.len(), 30);
+    assert_eq!(out.steals, 0, "one shard can never steal");
     let mut by_start = out.records.clone();
     by_start.sort_by(|a, b| a.start_ms.partial_cmp(&b.start_ms).unwrap());
     for w in by_start.windows(2) {
