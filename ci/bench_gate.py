@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""Perf regression gate: diff BENCH_hotpath.json against the committed
+BENCH_baseline.json, failing on >25% regression for any *shared* bench
+key (new keys are informational; keys dropped from the bench are
+ignored).
+
+Usage: bench_gate.py BENCH_baseline.json BENCH_hotpath.json
+
+The baseline is blessed manually: download the BENCH_hotpath.json
+artifact from a trusted CI run on main and commit it as
+BENCH_baseline.json. An empty baseline ({}) leaves the gate unarmed —
+the step passes and prints how to arm it. CI runners are noisy, so the
+tolerance is deliberately wide (1.25x on the per-key mean); treat a
+failure as "look at the diff", not as proof of a regression.
+"""
+
+import json
+import sys
+
+TOLERANCE = 1.25
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        base = json.load(f)
+    with open(sys.argv[2]) as f:
+        new = json.load(f)
+
+    shared = sorted(set(base) & set(new))
+    if not shared:
+        print(
+            "bench gate: no shared keys (baseline empty or disjoint) — gate "
+            "unarmed.\nTo arm it, bless a baseline: copy a trusted CI run's "
+            "BENCH_hotpath.json artifact to BENCH_baseline.json and commit."
+        )
+        return 0
+
+    regressed = []
+    for key in shared:
+        old_ns, new_ns = float(base[key]), float(new[key])
+        ratio = new_ns / old_ns if old_ns > 0 else 1.0
+        flag = "REGRESSION" if ratio > TOLERANCE else "ok"
+        print(f"{key:<60} {old_ns:>14.1f} -> {new_ns:>14.1f} ns/iter "
+              f"({ratio:5.2f}x) {flag}")
+        if ratio > TOLERANCE:
+            regressed.append(key)
+
+    extra = sorted(set(new) - set(base))
+    if extra:
+        print(f"bench gate: {len(extra)} new key(s) not in baseline "
+              f"(informational): {', '.join(extra[:5])}"
+              + (" …" if len(extra) > 5 else ""))
+
+    if regressed:
+        print(f"bench gate: FAIL — {len(regressed)} key(s) regressed "
+              f">{(TOLERANCE - 1):.0%}: {regressed}")
+        return 1
+    print(f"bench gate: OK — {len(shared)} shared key(s) within "
+          f"{(TOLERANCE - 1):.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

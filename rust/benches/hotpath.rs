@@ -6,8 +6,12 @@
 //! worker-pool sizes k ∈ {1, 2, 4, 8}.
 //!
 //! Emits `BENCH_hotpath.json` (name → ns/iter) so the perf trajectory
-//! is tracked across PRs; the contended sweep is the acceptance gauge
-//! for the sharded-queue work (sharded ≥ 2x central at k ≥ 4).
+//! is tracked across PRs (CI diffs it against the committed
+//! `BENCH_baseline.json`); the contended sweep is the acceptance gauge
+//! for the sharded-queue work (sharded ≥ 2x central at k ≥ 4) and the
+//! batched-dispatch sweep (B ∈ {1, 4, 8, 16}, both disciplines) is the
+//! gauge for the batching executor (batched ≥ 1.5x single dispatch at
+//! B = 8).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -76,6 +80,44 @@ fn sharded_mpmc(k: usize, ops: usize) {
                 }
             });
         }
+    });
+}
+
+/// Batched dispatch under contention: k producers flood the queue while
+/// k consumers drain it in batches of up to `b` via `pop_batch` — one
+/// lock acquisition per batch instead of per item. `shards == 1` is the
+/// central discipline, `shards == k` the sharded one; `b == 1` is the
+/// single-dispatch baseline the batch sweep is measured against.
+fn mpmc_batched(k: usize, shards: usize, ops: usize, b: usize) {
+    let q: Arc<ShardedQueue<(u64, f64)>> = Arc::new(ShardedQueue::new(k * ops, shards));
+    std::thread::scope(|s| {
+        let producers: Vec<_> = (0..k)
+            .map(|_| {
+                let q = q.clone();
+                s.spawn(move || {
+                    for i in 0..ops {
+                        // Capacity = k·ops: a push can never fail Full.
+                        q.push((i as u64, 0.0)).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for w in 0..k {
+            let q = q.clone();
+            s.spawn(move || loop {
+                match q.pop_batch(w, b, Duration::from_millis(100)) {
+                    Popped::Item(items) => {
+                        std::hint::black_box(items);
+                    }
+                    Popped::TimedOut => {}
+                    Popped::Closed => break,
+                }
+            });
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
     });
 }
 
@@ -165,6 +207,29 @@ fn main() {
         ));
     }
 
+    // Batch-dispatch sweep: the acceptance gauge for the batching
+    // executor. k = 4 producers flood the queue while 4 consumers drain
+    // with pop_batch(B): at B = 1 every item costs a lock acquisition
+    // (the single-dispatch baseline); deeper batches amortize it. Both
+    // disciplines run so the central mutex and the sharded shard-locks
+    // are each measured under batched drain.
+    group("hotpath: batched dispatch (k=4 threads, pop_batch sweep)");
+    let bk = 4usize;
+    for b in [1usize, 4, 8, 16] {
+        results.push(bench(
+            &format!("mpmc batched central k={bk} B={b} x{ops}/thread"),
+            1,
+            10,
+            || mpmc_batched(bk, 1, ops, b),
+        ));
+        results.push(bench(
+            &format!("mpmc batched sharded k={bk} B={b} x{ops}/thread"),
+            1,
+            10,
+            || mpmc_batched(bk, bk, ops, b),
+        ));
+    }
+
     // M/G/k coordinator sweep: the paper's spike trace replayed through
     // the discrete-event simulator at each pool size, with worker-aware
     // thresholds and pool-scaled load (per-worker ρ held constant). The
@@ -205,7 +270,7 @@ fn main() {
                 || {
                     let mut policy = make_policy(&plan_k, "Elastico");
                     std::hint::black_box(simulate_boxed_disc(
-                        &arrivals, &plan_k, &mut policy, &svc, 7, k, disc, 0,
+                        &arrivals, &plan_k, &mut policy, &svc, 7, k, disc, 0, 1,
                     ));
                 },
             ));
@@ -217,18 +282,34 @@ fn main() {
     // Quick acceptance readout for the sharded-queue work: contended
     // throughput ratio at each k (informational; CI greps the JSON).
     println!();
+    let find = |name: String| {
+        results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.summary_us.mean)
+    };
     for k in [2usize, 4, 8] {
-        let find = |name: &str| {
-            results
-                .iter()
-                .find(|r| r.name == name)
-                .map(|r| r.summary_us.mean)
-        };
         if let (Some(c), Some(s)) = (
-            find(&format!("mpmc central k={k} push+pop x{ops}/thread")),
-            find(&format!("mpmc sharded k={k} push+pop x{ops}/thread")),
+            find(format!("mpmc central k={k} push+pop x{ops}/thread")),
+            find(format!("mpmc sharded k={k} push+pop x{ops}/thread")),
         ) {
             println!("contended speedup k={k}: {:.2}x (central/sharded)", c / s);
+        }
+    }
+    // Batch acceptance readout: batched dispatch vs single dispatch
+    // (B=1) on the same contended workload — the issue's bar is ≥1.5x
+    // at B=8.
+    for disc in ["central", "sharded"] {
+        for b in [4usize, 8, 16] {
+            if let (Some(b1), Some(bb)) = (
+                find(format!("mpmc batched {disc} k={bk} B=1 x{ops}/thread")),
+                find(format!("mpmc batched {disc} k={bk} B={b} x{ops}/thread")),
+            ) {
+                println!(
+                    "batch speedup {disc} B={b}: {:.2}x (vs single dispatch)",
+                    b1 / bb
+                );
+            }
         }
     }
 }

@@ -158,6 +158,7 @@ fn controller_ablation(ctx: &ExperimentCtx) -> Result<()> {
             k,
             ctx.discipline,
             ctx.shards,
+            ctx.batch.max(1),
         );
         let s = RunSummary::compute(&out.records, &out.switches, slo, plan.ladder.len());
         println!(

@@ -43,6 +43,11 @@ pub struct ExperimentCtx {
     pub discipline: Discipline,
     /// Shard count under the sharded discipline (0 = one per worker).
     pub shards: usize,
+    /// Executor batch bound B: requests dequeued/executed per dispatch
+    /// (1 = the paper's unbatched testbed). Plans are derived with the
+    /// batch-aware AQM model and serving cells (live and simulated)
+    /// dispatch in batches of up to B.
+    pub batch: usize,
     /// Output directory for CSVs.
     pub out_dir: PathBuf,
 }
@@ -56,6 +61,7 @@ impl Default for ExperimentCtx {
             workers: 1,
             discipline: Discipline::CentralFifo,
             shards: 0,
+            batch: 1,
             out_dir: results_dir(),
         }
     }
@@ -75,6 +81,12 @@ pub const RR_BATCH_MS: [f64; 3] = [0.85, 2.0, 8.0];
 pub const RETRIEVER_MS: f64 = 0.25;
 /// Modeled p95/mean inflation (measured dispersion of the live stack).
 pub const P95_FACTOR: f64 = 1.10;
+/// Modeled per-dispatch fixed cost α (ms) of the batch service-time
+/// model `s̄(B) = α + β·B`: rung resolution + engine call setup + the
+/// policy observation, measured on this testbed via the B∈{1,4,8}
+/// profile sweep (`compass profile`). `--live` re-fits it through
+/// [`crate::planner::fit_batch_model`].
+pub const DISPATCH_MS: f64 = 0.5;
 
 /// Modeled mean latency of a RAG configuration on this testbed.
 pub fn modeled_latency_ms(space: &ConfigSpace, cfg: &Config) -> f64 {
@@ -147,16 +159,33 @@ pub fn offline_phase(
     offline_phase_k(tau, slo_ms, seed, live, 1)
 }
 
-/// Run the full offline phase for the RAG workflow at threshold τ:
-/// COMPASS-V search on the oracle, profile candidates (live or modeled),
-/// Pareto-reduce, derive the AQM plan at `slo_ms` for a pool of
-/// `workers` executors (worker-aware queue-depth thresholds).
+/// Run the full offline phase for the RAG workflow at threshold τ for a
+/// pool of `workers` unbatched executors — see [`offline_phase_kb`].
 pub fn offline_phase_k(
     tau: f64,
     slo_ms: f64,
     seed: u64,
     live: bool,
     workers: usize,
+) -> Result<(ConfigSpace, Plan)> {
+    offline_phase_kb(tau, slo_ms, seed, live, workers, 1)
+}
+
+/// Run the full offline phase for the RAG workflow at threshold τ:
+/// COMPASS-V search on the oracle, profile candidates (live or modeled),
+/// Pareto-reduce, derive the AQM plan at `slo_ms` for a pool of
+/// `workers` executors dispatching batches of up to `batch` requests
+/// (worker- and batch-aware queue-depth thresholds). At `batch > 1` the
+/// per-dispatch fixed cost α of `s̄(B) = α + β·B` is fit live through
+/// the B∈{1,4,8} batch profile, or taken from the modeled
+/// [`DISPATCH_MS`] otherwise.
+pub fn offline_phase_kb(
+    tau: f64,
+    slo_ms: f64,
+    seed: u64,
+    live: bool,
+    workers: usize,
+    batch: usize,
 ) -> Result<(ConfigSpace, Plan)> {
     let space = rag_space();
     let mut oracle = RagOracle::new_rag(seed);
@@ -189,7 +218,30 @@ pub fn offline_phase_k(
         })
         .collect();
     let front = pareto_front(profiled);
-    let plan = derive_plan(&front, AqmParams::for_slo_workers(slo_ms, workers));
+    // Batch service-time model: fit α live over the fastest front
+    // config (the rung batching matters most for); modeled testbeds use
+    // the measured DISPATCH_MS constant. Inert at batch == 1.
+    let alpha_ms = if batch > 1 {
+        match (&mut wf, front.first()) {
+            (Some(w), Some(c)) => {
+                crate::planner::fit_batch_model(
+                    w,
+                    &space,
+                    &c.config,
+                    &crate::planner::BATCH_PROFILE_SIZES,
+                    3,
+                )
+                .alpha_ms
+            }
+            _ => DISPATCH_MS,
+        }
+    } else {
+        0.0
+    };
+    let plan = derive_plan(
+        &front,
+        AqmParams::for_slo_workers(slo_ms, workers).with_batch(batch, alpha_ms),
+    );
     Ok((space, plan))
 }
 
@@ -287,6 +339,7 @@ pub fn run_cell(
                 workers: ctx.workers.max(1),
                 discipline: ctx.discipline,
                 shards: ctx.shards,
+                batch: ctx.batch.max(1),
                 ..ServeOptions::default()
             },
         )?;
@@ -303,6 +356,7 @@ pub fn run_cell(
             ctx.workers.max(1),
             ctx.discipline,
             ctx.shards,
+            ctx.batch.max(1),
         );
         (out.records, out.switches)
     };
@@ -339,6 +393,7 @@ pub fn simulate_boxed_k(
         workers,
         Discipline::CentralFifo,
         0,
+        1,
     )
 }
 
@@ -353,6 +408,7 @@ pub fn simulate_boxed_disc(
     workers: usize,
     discipline: Discipline,
     shards: usize,
+    batch: usize,
 ) -> crate::sim::SimOutcome {
     struct Shim<'a>(&'a mut Box<dyn ScalingPolicy>);
     impl ScalingPolicy for Shim<'_> {
@@ -371,7 +427,7 @@ pub fn simulate_boxed_disc(
     }
     let mut shim = Shim(policy);
     crate::sim::simulate_disc(
-        arrivals, plan, &mut shim, svc, seed, workers, discipline, shards,
+        arrivals, plan, &mut shim, svc, seed, workers, discipline, shards, batch,
     )
 }
 
@@ -420,6 +476,29 @@ mod tests {
             / 1000.0
             / 4.0;
         assert!((rho4 - 0.45).abs() < 1e-9);
+    }
+
+    #[test]
+    fn offline_phase_kb_batch_one_is_offline_phase_k() {
+        // batch = 1 must leave the plan identical (thresholds, ladder,
+        // serialized form) to the unbatched derivation.
+        let (_s1, p1) = offline_phase_k(0.75, 1000.0, 3, false, 2).unwrap();
+        let (_s2, pb) = offline_phase_kb(0.75, 1000.0, 3, false, 2, 1).unwrap();
+        assert_eq!(p1, pb);
+        assert_eq!(pb.batch, 1);
+        assert_eq!(pb.batch_alpha_ms, 0.0);
+    }
+
+    #[test]
+    fn offline_phase_kb_carries_the_batch_model() {
+        let (_s, pb) = offline_phase_kb(0.75, 1000.0, 3, false, 1, 8).unwrap();
+        assert_eq!(pb.batch, 8);
+        assert_eq!(pb.batch_alpha_ms, DISPATCH_MS);
+        assert!(!pb.ladder.is_empty());
+        // Eq. 11 must hold under the batch model too.
+        for w in pb.ladder.windows(2) {
+            assert!(w[0].upscale_threshold >= w[1].upscale_threshold);
+        }
     }
 
     #[test]

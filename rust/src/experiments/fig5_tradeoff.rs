@@ -6,7 +6,7 @@
 use anyhow::Result;
 
 use super::common::{
-    base_qps_k, offline_phase_k, run_cell, Cell, ExperimentCtx, POLICIES,
+    base_qps_k, offline_phase_kb, run_cell, Cell, ExperimentCtx, POLICIES,
     SLO_FACTORS,
 };
 use crate::util::csv::CsvWriter;
@@ -18,7 +18,8 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
     // for Elastico. Both carry the cell's worker count so the thresholds
     // and load match the pool run_cell drives.
     let k = ctx.workers.max(1);
-    let (_s, full) = offline_phase_k(0.75, 1e9, ctx.seed, ctx.live, k)?;
+    let b = ctx.batch.max(1);
+    let (_s, full) = offline_phase_kb(0.75, 1e9, ctx.seed, ctx.live, k, b)?;
     let slowest_mean = full.ladder.last().unwrap().mean_ms;
     let qps = base_qps_k(&full, k);
 
@@ -32,7 +33,7 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
 
     println!(
         "Fig.5: serving cells ({}; {}s per cell, base utilization 0.45, \
-         {} dispatch)",
+         {} dispatch, batch {b})",
         if ctx.live { "LIVE serving" } else { "discrete-event sim of live profiles" },
         ctx.duration_s,
         ctx.discipline.name()
@@ -49,7 +50,7 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
     ] {
         for factor in SLO_FACTORS {
             let slo = factor * slowest_mean;
-            let (space, plan) = offline_phase_k(0.75, slo, ctx.seed, false, k)?;
+            let (space, plan) = offline_phase_kb(0.75, slo, ctx.seed, false, k, b)?;
             println!(
                 "\n-- pattern={pattern_name} SLO={slo:.0}ms (Elastico ladder {} rungs) --",
                 plan.ladder.len()

@@ -4,7 +4,7 @@
 use anyhow::Result;
 
 use super::common::{
-    base_qps_k, offline_phase_k, run_cell, Cell, ExperimentCtx, POLICIES,
+    base_qps_k, offline_phase_kb, run_cell, Cell, ExperimentCtx, POLICIES,
     SLO_FACTORS,
 };
 use crate::metrics::latency_cdf;
@@ -13,9 +13,10 @@ use crate::workload::Pattern;
 
 pub fn run(ctx: &ExperimentCtx) -> Result<()> {
     let k = ctx.workers.max(1);
-    let (_s, full) = offline_phase_k(0.75, 1e9, ctx.seed, ctx.live, k)?;
+    let b = ctx.batch.max(1);
+    let (_s, full) = offline_phase_kb(0.75, 1e9, ctx.seed, ctx.live, k, b)?;
     let slo = SLO_FACTORS[1] * full.ladder.last().unwrap().mean_ms;
-    let (space, plan) = offline_phase_k(0.75, slo, ctx.seed, false, k)?;
+    let (space, plan) = offline_phase_kb(0.75, slo, ctx.seed, false, k, b)?;
     let qps = base_qps_k(&full, k);
 
     let mut csv = CsvWriter::create(
@@ -25,7 +26,7 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
 
     println!(
         "Fig.6: latency CDFs, spike pattern, SLO {slo:.0} ms, {k} worker(s), \
-         {} dispatch",
+         {} dispatch, batch {b}",
         ctx.discipline.name()
     );
     for policy in POLICIES {

@@ -5,16 +5,17 @@
 use anyhow::Result;
 
 use super::common::{
-    base_qps_k, offline_phase_k, run_cell, Cell, ExperimentCtx, SLO_FACTORS,
+    base_qps_k, offline_phase_kb, run_cell, Cell, ExperimentCtx, SLO_FACTORS,
 };
 use crate::metrics::report::{write_records_csv, write_switches_csv};
 use crate::workload::Pattern;
 
 pub fn run(ctx: &ExperimentCtx) -> Result<()> {
     let k = ctx.workers.max(1);
-    let (_s, full) = offline_phase_k(0.75, 1e9, ctx.seed, ctx.live, k)?;
+    let b = ctx.batch.max(1);
+    let (_s, full) = offline_phase_kb(0.75, 1e9, ctx.seed, ctx.live, k, b)?;
     let slo = SLO_FACTORS[1] * full.ladder.last().unwrap().mean_ms;
-    let (space, plan) = offline_phase_k(0.75, slo, ctx.seed, false, k)?;
+    let (space, plan) = offline_phase_kb(0.75, slo, ctx.seed, false, k, b)?;
 
     let cell = Cell {
         pattern_name: "spike",
@@ -32,7 +33,7 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
     let spike = (dur_ms / 3.0, 2.0 * dur_ms / 3.0);
     println!(
         "Fig.7: Elastico timeline, spike during [{:.0}s, {:.0}s], SLO {slo:.0} ms, \
-         {k} worker(s), {} dispatch",
+         {k} worker(s), {} dispatch, batch {b}",
         spike.0 / 1000.0,
         spike.1 / 1000.0,
         ctx.discipline.name()

@@ -8,7 +8,7 @@
 //!   phase: search + profile + Pareto + AQM thresholds.
 //! * `serve    [--slo MS] [--duration S] [--pattern spike|bursty|steady]
 //!   [--policy NAME] [--workers K] [--discipline central|sharded]
-//!   [--shards N]` — one live serving run, report summary.
+//!   [--shards N] [--batch B]` — one live serving run, report summary.
 //! * `experiment <fig1|fig3|fig4|table1|fig5|fig6|fig7|all> [--live]
 //!   [--duration S]` — regenerate paper artifacts (CSV under results/).
 //! * `profile  [--live]` — per-component latency table.
@@ -101,6 +101,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                 workers: get_f64(&opts, "workers", 1.0)?.max(1.0) as usize,
                 discipline: get_discipline(&opts)?,
                 shards: get_f64(&opts, "shards", 0.0)?.max(0.0) as usize,
+                batch: get_f64(&opts, "batch", 1.0)?.max(1.0) as usize,
                 out_dir: results_dir(),
             };
             experiments::run(id, &ctx)
@@ -124,14 +125,17 @@ fn print_help() {
          \x20 search      COMPASS-V feasible-set search vs exhaustive ground truth\n\
          \x20             [--workflow rag|detection] [--tau T] [--seed N]\n\
          \x20 plan        offline phase: search + profile + Pareto + AQM plan\n\
-         \x20             [--tau T] [--slo MS] [--workers K] [--live] [--out FILE]\n\
+         \x20             [--tau T] [--slo MS] [--workers K] [--batch B] [--live]\n\
+         \x20             [--out FILE]\n\
          \x20 serve       one live serving run over the AOT artifacts\n\
          \x20             [--slo MS] [--duration S] [--pattern spike|bursty|steady]\n\
          \x20             [--policy Elastico|Static-Fast|Static-Medium|Static-Accurate]\n\
          \x20             [--workers K] [--discipline central|sharded] [--shards N]\n\
+         \x20             [--batch B]\n\
          \x20 experiment  regenerate paper figures/tables -> results/*.csv\n\
          \x20             <fig1|fig3|fig4|table1|fig5|fig6|fig7|all> [--live] [--duration S]\n\
          \x20             [--workers K] [--discipline central|sharded] [--shards N]\n\
+         \x20             [--batch B]\n\
          \x20 profile     per-component latency table over the artifacts [--live]\n"
     );
 }
@@ -206,6 +210,7 @@ fn cmd_plan(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
     let tau = get_f64(opts, "tau", 0.75)?;
     let live = opts.contains_key("live");
     let workers = get_f64(opts, "workers", 1.0)?.max(1.0) as usize;
+    let batch = get_f64(opts, "batch", 1.0)?.max(1.0) as usize;
     // Default SLO: 2.2x the slowest rung (≙ the paper's 1000 ms target).
     let slo = match opts.get("slo") {
         Some(v) => v.parse::<f64>()?,
@@ -215,8 +220,8 @@ fn cmd_plan(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
             2.2 * probe.ladder.last().unwrap().mean_ms
         }
     };
-    let (_space, plan) = compass::experiments::common::offline_phase_k(
-        tau, slo, seed, live, workers,
+    let (_space, plan) = compass::experiments::common::offline_phase_kb(
+        tau, slo, seed, live, workers, batch,
     )?;
     print!("{}", plan.render());
     if let Some(path) = opts.get("out") {
@@ -232,6 +237,7 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
     let workers = get_f64(opts, "workers", 1.0)?.max(1.0) as usize;
     let discipline = get_discipline(opts)?;
     let shards = get_f64(opts, "shards", 0.0)?.max(0.0) as usize;
+    let batch = get_f64(opts, "batch", 1.0)?.max(1.0) as usize;
     let policy_name = opts
         .get("policy")
         .cloned()
@@ -249,8 +255,8 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         Some(v) => v.parse::<f64>()?,
         None => 2.2 * probe.ladder.last().unwrap().mean_ms,
     };
-    let (space, plan) = compass::experiments::common::offline_phase_k(
-        tau, slo, seed, false, workers,
+    let (space, plan) = compass::experiments::common::offline_phase_kb(
+        tau, slo, seed, false, workers, batch,
     )?;
     println!("Serving plan (SLO {slo:.0} ms):");
     print!("{}", plan.render());
@@ -264,7 +270,7 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
     let arrivals = generate_arrivals(&spec);
     println!(
         "Live serving: {} arrivals over {duration}s (base {:.2} qps), \
-         policy {policy_name}, {workers} worker(s), {} dispatch",
+         policy {policy_name}, {workers} worker(s), {} dispatch, batch {batch}",
         arrivals.len(),
         spec.base_qps,
         discipline.name()
@@ -283,7 +289,7 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         },
         policy,
         &arrivals,
-        &ServeOptions { workers, discipline, shards, ..ServeOptions::default() },
+        &ServeOptions { workers, discipline, shards, batch, ..ServeOptions::default() },
     )?;
     let summary = compass::metrics::RunSummary::compute(
         &out.records,

@@ -28,6 +28,34 @@
 //! shard's backlog — the pool still drains N queued requests in
 //! `N·s̄/w` regardless of which shard holds them, so the equations
 //! carry over unmodified.
+//!
+//! ## Batch service-time model (`s̄(B) = α + β·B`)
+//!
+//! When the executor dequeues B requests per dispatch, batch service
+//! time is no longer i.i.d. per request: one batch costs
+//! `s̄_k(B) = α + β_k·B`, where `α` ([`AqmParams::batch_alpha_ms`]) is
+//! the per-dispatch fixed cost (rung resolution, engine call setup,
+//! policy observation) — fit by the profiler from batch timings at
+//! B ∈ {1, 4, 8} ([`crate::planner::profiler::fit_batch_model`]) — and
+//! `β_k = s̄_k(1) - α` is rung k's marginal per-item cost. Two effects
+//! enter the threshold equations, and both vanish at B = 1:
+//!
+//! * **drain rate**: a worker serves requests at the effective
+//!   per-request rate `B / s̄_k(B)`, so the effective per-request service
+//!   time `s̄_k(B)/B = β_k + α/B` replaces `s̄_k` in Eq. 10/13 — the
+//!   deeper the batch, the more dispatch overhead it amortizes;
+//! * **tail inflation**: a request completes only when its whole batch
+//!   does, so its service tail grows by the batch factor
+//!   `s̄_k(B)/s̄_k(1)`; the queuing slack of Eq. 7 becomes
+//!   `Δk(B) = L - s95_k·s̄_k(B)/s̄_k(1)` and the SLO-feasibility filter
+//!   uses the inflated tail.
+//!
+//! The trade is explicit in the model: with `α` a large share of
+//! `s̄(1)`, batching raises throughput faster than it inflates the tail
+//! (thresholds deepen); with `α ≈ 0`, batching only delays completions
+//! (`s̄(B) ≈ B·s̄(1)`) — the slack shrinks, rungs drop off the feasible
+//! ladder, and the model correctly says "don't batch". `B = 1`
+//! reproduces every existing threshold bit-for-bit regardless of `α`.
 
 use super::pareto::ProfiledConfig;
 use super::plan::{ConfigPolicy, Plan};
@@ -46,12 +74,19 @@ pub struct AqmParams {
     /// Executor worker count k (M/G/k): thresholds scale with the
     /// effective service rate k·μ.
     pub workers: usize,
+    /// Executor batch bound B: requests dequeued per engine dispatch.
+    /// 1 = unbatched (the paper's testbed).
+    pub batch: usize,
+    /// Per-dispatch fixed cost α (ms) of the batch service-time model
+    /// `s̄(B) = α + β·B`, fit by the profiler; clamped per rung into
+    /// `[0, s̄_k(1)]` at derivation. Irrelevant at `batch == 1`.
+    pub batch_alpha_ms: f64,
 }
 
 impl AqmParams {
     /// Paper defaults, scaled to an SLO: `h_s` = 10% of L, `t↑` = 0,
     /// `t↓` = 5 s scaled by L/1000 (the paper's 5 s at a 1000 ms SLO).
-    /// Single-server (the paper's testbed).
+    /// Single-server, unbatched (the paper's testbed).
     pub fn for_slo(slo_ms: f64) -> AqmParams {
         AqmParams {
             slo_ms,
@@ -59,12 +94,24 @@ impl AqmParams {
             up_cooldown_ms: 0.0,
             down_cooldown_ms: 5.0 * slo_ms,
             workers: 1,
+            batch: 1,
+            batch_alpha_ms: 0.0,
         }
     }
 
     /// Paper defaults for a pool of `workers` executors.
     pub fn for_slo_workers(slo_ms: f64, workers: usize) -> AqmParams {
         AqmParams { workers: workers.max(1), ..AqmParams::for_slo(slo_ms) }
+    }
+
+    /// Same params with the executor batch bound and the profiled
+    /// per-dispatch fixed cost α of `s̄(B) = α + β·B`.
+    pub fn with_batch(self, batch: usize, batch_alpha_ms: f64) -> AqmParams {
+        AqmParams {
+            batch: batch.max(1),
+            batch_alpha_ms: batch_alpha_ms.max(0.0),
+            ..self
+        }
     }
 }
 
@@ -83,10 +130,25 @@ pub fn derive_plan(front: &[ProfiledConfig], params: AqmParams) -> Plan {
         );
     }
 
-    // Exclude configurations that cannot meet the SLO at all.
+    let b = params.batch.max(1) as f64;
+    // Batch service-time model per rung: s̄(B) = α + β·B with
+    // β = s̄(1) - α (α clamped into [0, s̄(1)]). Returns the effective
+    // per-request service time s̄(B)/B (Eq. 10/13's drain-rate term) and
+    // the batch-inflated service tail s95·s̄(B)/s̄(1) (Eq. 7's
+    // reservation). Both reduce to (mean, p95) exactly at B = 1.
+    let batched = |c: &ProfiledConfig| -> (f64, f64) {
+        let mean = c.latency.mean_ms;
+        let alpha = params.batch_alpha_ms.clamp(0.0, mean);
+        let sbar_b = alpha + (mean - alpha) * b; // s̄(B)
+        (sbar_b / b, c.latency.p95_ms * (sbar_b / mean))
+    };
+
+    // Exclude configurations that cannot meet the SLO at all — against
+    // the batch-inflated tail, since a request completes only when its
+    // whole batch does.
     let mut ladder: Vec<&ProfiledConfig> = front
         .iter()
-        .filter(|c| params.slo_ms - c.latency.p95_ms > 0.0)
+        .filter(|c| params.slo_ms - batched(c).1 > 0.0)
         .collect();
     if ladder.is_empty() {
         // Degraded mode: keep the fastest configuration only.
@@ -96,22 +158,21 @@ pub fn derive_plan(front: &[ProfiledConfig], params: AqmParams) -> Plan {
     let w = params.workers.max(1) as f64;
     let mut policies: Vec<ConfigPolicy> = Vec::with_capacity(ladder.len());
     for (k, c) in ladder.iter().enumerate() {
-        let slack = params.slo_ms - c.latency.p95_ms; // Δk (Eq. 7)
+        let (eff_mean, eff_p95) = batched(c);
+        let slack = params.slo_ms - eff_p95; // Δk(B) (Eq. 7)
         let upscale = if slack > 0.0 {
-            // Eq. 10, effective service rate w·μ.
-            (w * slack / c.latency.mean_ms).floor().max(0.0) as u64
+            // Eq. 10, effective per-request rate w·B/s̄(B).
+            (w * slack / eff_mean).floor().max(0.0) as u64
         } else {
             0
         };
         // Downscale threshold of config k governs the k -> k+1 move and is
         // computed from the *slower* config k+1 (Eq. 13).
         let downscale = if k + 1 < ladder.len() {
-            let next = ladder[k + 1];
-            let next_slack = params.slo_ms - next.latency.p95_ms;
-            let n = (w * (next_slack - params.slack_buffer_ms)
-                / next.latency.mean_ms)
-                .floor();
-            Some(n.max(0.0) as u64)
+            let (next_eff_mean, next_eff_p95) = batched(ladder[k + 1]);
+            let next_slack = params.slo_ms - next_eff_p95;
+            let fill = w * (next_slack - params.slack_buffer_ms) / next_eff_mean;
+            Some(fill.floor().max(0.0) as u64)
         } else {
             None
         };
@@ -133,6 +194,8 @@ pub fn derive_plan(front: &[ProfiledConfig], params: AqmParams) -> Plan {
         up_cooldown_ms: params.up_cooldown_ms,
         down_cooldown_ms: params.down_cooldown_ms,
         workers: params.workers.max(1),
+        batch: params.batch.max(1),
+        batch_alpha_ms: params.batch_alpha_ms.max(0.0),
         ladder: policies,
     }
 }
@@ -231,5 +294,92 @@ mod tests {
         let p = AqmParams::for_slo(1000.0);
         assert_eq!(p.up_cooldown_ms, 0.0);
         assert!(p.down_cooldown_ms >= 1000.0);
+    }
+
+    #[test]
+    fn batch_one_reproduces_seed_thresholds_exactly() {
+        // B = 1 must be bit-for-bit the unbatched derivation regardless
+        // of the fitted α (the batch model degenerates to s̄(1)).
+        let seed = derive_plan(&front3(), AqmParams::for_slo(300.0));
+        for alpha in [0.0, 3.0, 12.5, 1e6] {
+            let b1 = derive_plan(&front3(), AqmParams::for_slo(300.0).with_batch(1, alpha));
+            assert_eq!(b1.ladder.len(), seed.ladder.len());
+            for (a, b) in seed.ladder.iter().zip(&b1.ladder) {
+                assert_eq!(a.upscale_threshold, b.upscale_threshold);
+                assert_eq!(a.downscale_threshold, b.downscale_threshold);
+                assert_eq!(a.queue_slack_ms.to_bits(), b.queue_slack_ms.to_bits());
+            }
+        }
+        // And the seed numbers themselves stay pinned (Eq. 10/13).
+        assert_eq!(seed.ladder[0].upscale_threshold, 13);
+        assert_eq!(seed.ladder[1].upscale_threshold, 5);
+        assert_eq!(seed.ladder[2].upscale_threshold, 1);
+        assert_eq!(seed.ladder[0].downscale_threshold, Some(4));
+        assert_eq!(seed.ladder[1].downscale_threshold, Some(1));
+    }
+
+    #[test]
+    fn batch_thresholds_match_the_model_by_hand() {
+        // B = 4, α = 10: rung 0 (mean 20, p95 30): s̄(4) = 10 + 10·4 =
+        // 50, eff mean 12.5, inflated p95 = 30·50/20 = 75, slack 225,
+        // N↑ = floor(225/12.5) = 18.
+        let plan = derive_plan(&front3(), AqmParams::for_slo(300.0).with_batch(4, 10.0));
+        assert_eq!(plan.batch, 4);
+        assert_eq!(plan.batch_alpha_ms, 10.0);
+        assert_eq!(plan.ladder[0].upscale_threshold, 18);
+        assert!((plan.ladder[0].queue_slack_ms - 225.0).abs() < 1e-9);
+        // Rung 1 (mean 45, p95 70): s̄(4) = 10 + 35·4 = 150, eff 37.5,
+        // p95·150/45 = 233.33 -> slack 66.67, N↑ = floor(66.67/37.5) = 1.
+        assert_eq!(plan.ladder[1].upscale_threshold, 1);
+        // Rung 2 (mean 90, p95 140): inflated p95 = 140·330/90 ≈ 513 >
+        // SLO -> dropped from the feasible ladder at this batch depth.
+        assert_eq!(plan.ladder.len(), 2, "batch tail drops rung 2");
+        // Downscale of rung 0 follows rung 1's batched numbers:
+        // floor((66.67 - 30)/37.5) = 0.
+        assert_eq!(plan.ladder[0].downscale_threshold, Some(0));
+    }
+
+    #[test]
+    fn thresholds_monotone_non_increasing_along_ladder_at_any_batch() {
+        // Eq. 11 (N↑0 ≥ N↑1 ≥ …) must survive the batch model: the
+        // inflation factor grows with the rung's service time, so slower
+        // rungs only lose more slack.
+        for b in [1usize, 2, 4, 8, 16] {
+            for alpha in [0.0, 2.0, 8.0, 15.0] {
+                let plan = derive_plan(&front3(), AqmParams::for_slo(600.0).with_batch(b, alpha));
+                let ups: Vec<u64> = plan.ladder.iter().map(|p| p.upscale_threshold).collect();
+                for w in ups.windows(2) {
+                    assert!(w[0] >= w[1], "Eq. 11 violated at B={b} α={alpha}: {ups:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_alpha_batching_only_hurts_the_tail() {
+        // With no fixed dispatch cost the effective per-request service
+        // time is unchanged but the tail inflates by B: thresholds can
+        // only tighten, and deep batches push rungs off the ladder.
+        let b1 = derive_plan(&front3(), AqmParams::for_slo(300.0));
+        let b4 = derive_plan(&front3(), AqmParams::for_slo(300.0).with_batch(4, 0.0));
+        assert!(b4.ladder.len() <= b1.ladder.len());
+        for (a, b) in b1.ladder.iter().zip(&b4.ladder) {
+            assert!(b.upscale_threshold <= a.upscale_threshold);
+        }
+    }
+
+    #[test]
+    fn high_alpha_batching_deepens_thresholds() {
+        // With α = 75% of the fastest rung's s̄(1), B = 8 drains ~3.3x
+        // faster per request: the fast rung's upscale threshold must
+        // grow despite the inflated tail.
+        let b1 = derive_plan(&front3(), AqmParams::for_slo(300.0));
+        let b8 = derive_plan(&front3(), AqmParams::for_slo(300.0).with_batch(8, 15.0));
+        assert!(
+            b8.ladder[0].upscale_threshold > b1.ladder[0].upscale_threshold,
+            "B=8 α=15: {} should exceed unbatched {}",
+            b8.ladder[0].upscale_threshold,
+            b1.ladder[0].upscale_threshold
+        );
     }
 }

@@ -14,4 +14,7 @@ pub mod profiler;
 pub use aqm::{derive_plan, AqmParams};
 pub use pareto::{pareto_front, ProfiledConfig};
 pub use plan::{ConfigPolicy, Plan};
-pub use profiler::{profile_config, ConfigRunner, LatencyProfile};
+pub use profiler::{
+    fit_batch_model, profile_config, BatchServiceModel, ConfigRunner,
+    LatencyProfile, BATCH_PROFILE_SIZES,
+};

@@ -33,6 +33,12 @@ pub struct Plan {
     /// Executor worker count k the thresholds were derived for (M/G/k):
     /// queue-depth thresholds scale with the effective service rate k·μ.
     pub workers: usize,
+    /// Executor batch bound B the thresholds were derived for: requests
+    /// dequeued per engine dispatch (1 = unbatched seed semantics).
+    pub batch: usize,
+    /// Per-dispatch fixed cost α (ms) of the batch service-time model
+    /// `s̄(B) = α + β·B` the thresholds assume (0 when unprofiled).
+    pub batch_alpha_ms: f64,
     /// Ordered by increasing mean service time (index 0 = fastest).
     pub ladder: Vec<ConfigPolicy>,
 }
@@ -77,6 +83,8 @@ impl Plan {
             ("up_cooldown_ms", Json::num(self.up_cooldown_ms)),
             ("down_cooldown_ms", Json::num(self.down_cooldown_ms)),
             ("workers", Json::num(self.workers as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("batch_alpha_ms", Json::num(self.batch_alpha_ms)),
             ("ladder", Json::Arr(ladder)),
         ])
     }
@@ -118,6 +126,17 @@ impl Plan {
                 .and_then(|v| v.as_usize())
                 .unwrap_or(1)
                 .max(1),
+            // Absent in pre-batching plan files: default to unbatched.
+            batch: j
+                .get("batch")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(1)
+                .max(1),
+            batch_alpha_ms: j
+                .get("batch_alpha_ms")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+                .max(0.0),
             ladder,
         })
     }
@@ -125,12 +144,18 @@ impl Plan {
     /// Console rendering of the ladder (Table-I style).
     pub fn render(&self) -> String {
         let mut out = format!(
-            "Plan: SLO {:.0} ms, h_s {:.0} ms, t↑ {:.0} ms, t↓ {:.0} ms, workers {}\n",
+            "Plan: SLO {:.0} ms, h_s {:.0} ms, t↑ {:.0} ms, t↓ {:.0} ms, workers {}, batch {}{}\n",
             self.slo_ms,
             self.slack_buffer_ms,
             self.up_cooldown_ms,
             self.down_cooldown_ms,
-            self.workers
+            self.workers,
+            self.batch,
+            if self.batch > 1 {
+                format!(" (α {:.2} ms)", self.batch_alpha_ms)
+            } else {
+                String::new()
+            }
         );
         out.push_str(
             "  idx  label                                     acc     mean      p95    Δk     N↑    N↓\n",
@@ -165,6 +190,8 @@ mod tests {
             up_cooldown_ms: 0.0,
             down_cooldown_ms: 1500.0,
             workers: 2,
+            batch: 4,
+            batch_alpha_ms: 2.5,
             ladder: vec![
                 ConfigPolicy {
                     label: "fast".into(),
@@ -220,5 +247,28 @@ mod tests {
         }
         let parsed = Plan::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(parsed, p);
+    }
+
+    #[test]
+    fn legacy_plan_json_defaults_to_unbatched() {
+        // Plan files written before the batching executor carry no
+        // "batch"/"batch_alpha_ms" keys; they load as unbatched plans.
+        let mut p = plan();
+        p.batch = 1;
+        p.batch_alpha_ms = 0.0;
+        let mut j = p.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("batch");
+            m.remove("batch_alpha_ms");
+        }
+        let parsed = Plan::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(parsed, p);
+    }
+
+    #[test]
+    fn render_names_the_batch_bound() {
+        let r = plan().render();
+        assert!(r.contains("batch 4"));
+        assert!(r.contains("α 2.50 ms"));
     }
 }

@@ -14,6 +14,100 @@ use crate::util::stats::Summary;
 /// in tests and simulations.
 pub trait ConfigRunner {
     fn run_once(&mut self, space: &ConfigSpace, cfg: &Config) -> f64;
+
+    /// Execute one *batch* of `n` requests in a single dispatch and
+    /// report the total batch wall time (ms). The default issues `n`
+    /// independent dispatches — no amortization — so a runner without a
+    /// real batched path fits `α ≈ 0` honestly. Batch-capable runners
+    /// (a live engine with one call setup per batch) override this.
+    fn run_batch(&mut self, space: &ConfigSpace, cfg: &Config, n: usize) -> f64 {
+        (0..n.max(1)).map(|_| self.run_once(space, cfg)).sum()
+    }
+}
+
+/// The batch service-time model `s̄(B) = α + β·B`: `α` is the
+/// per-dispatch fixed cost, `β` the per-item marginal cost, both in ms.
+/// Fit from measured batch timings by [`fit_batch_model`]; consumed by
+/// the AQM threshold derivation
+/// ([`crate::planner::AqmParams::with_batch`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchServiceModel {
+    pub alpha_ms: f64,
+    pub beta_ms: f64,
+}
+
+impl BatchServiceModel {
+    /// Predicted batch service time s̄(B) for a batch of `b` requests.
+    pub fn batch_ms(&self, b: usize) -> f64 {
+        self.alpha_ms + self.beta_ms * b.max(1) as f64
+    }
+
+    /// Effective per-request service time s̄(B)/B at batch bound `b`.
+    pub fn per_request_ms(&self, b: usize) -> f64 {
+        self.batch_ms(b) / b.max(1) as f64
+    }
+
+    /// Ordinary least squares over `(batch size, measured batch ms)`
+    /// points, with `α` clamped to be non-negative (a negative intercept
+    /// is measurement noise, not a real dispatch credit). Needs at least
+    /// two distinct batch sizes; with fewer it degenerates to `α = 0`,
+    /// `β = mean per-request time`.
+    pub fn fit(points: &[(usize, f64)]) -> BatchServiceModel {
+        let n = points.len() as f64;
+        let distinct = {
+            let mut sizes: Vec<usize> = points.iter().map(|p| p.0).collect();
+            sizes.sort_unstable();
+            sizes.dedup();
+            sizes.len()
+        };
+        if distinct < 2 {
+            let beta = points
+                .iter()
+                .map(|&(b, y)| y / b.max(1) as f64)
+                .sum::<f64>()
+                / n.max(1.0);
+            return BatchServiceModel { alpha_ms: 0.0, beta_ms: beta.max(0.0) };
+        }
+        let xbar = points.iter().map(|p| p.0 as f64).sum::<f64>() / n;
+        let ybar = points.iter().map(|p| p.1).sum::<f64>() / n;
+        let sxy: f64 = points
+            .iter()
+            .map(|&(x, y)| (x as f64 - xbar) * (y - ybar))
+            .sum();
+        let sxx: f64 = points
+            .iter()
+            .map(|&(x, _)| (x as f64 - xbar).powi(2))
+            .sum();
+        let beta = (sxy / sxx).max(0.0);
+        let alpha = (ybar - beta * xbar).max(0.0);
+        BatchServiceModel { alpha_ms: alpha, beta_ms: beta }
+    }
+}
+
+/// The batch sizes the Planner profiles to fit `s̄(B) = α + β·B`.
+pub const BATCH_PROFILE_SIZES: [usize; 3] = [1, 4, 8];
+
+/// Fit the batch service-time model for one configuration: run `reps`
+/// batches at each size in `sizes` (after one warmup batch per size),
+/// average the batch wall times, and least-squares `s̄(B) = α + β·B`
+/// over the `(size, mean batch ms)` points.
+pub fn fit_batch_model<R: ConfigRunner + ?Sized>(
+    runner: &mut R,
+    space: &ConfigSpace,
+    cfg: &Config,
+    sizes: &[usize],
+    reps: usize,
+) -> BatchServiceModel {
+    let mut points = Vec::with_capacity(sizes.len());
+    for &b in sizes {
+        runner.run_batch(space, cfg, b); // warmup
+        let mean = (0..reps.max(1))
+            .map(|_| runner.run_batch(space, cfg, b))
+            .sum::<f64>()
+            / reps.max(1) as f64;
+        points.push((b, mean));
+    }
+    BatchServiceModel::fit(&points)
 }
 
 /// Latency statistics of one configuration on the target hardware.
@@ -89,5 +183,51 @@ mod tests {
         // warmup=1 skips the cold 100ms run.
         let p = profile_config(&mut r, &s, &vec![0], 1, 2);
         assert!((p.mean_ms - 10.0).abs() < 1e-12);
+    }
+
+    /// Scripted batch runner with an exact α + β·B cost.
+    struct AffineBatch {
+        alpha: f64,
+        beta: f64,
+    }
+
+    impl ConfigRunner for AffineBatch {
+        fn run_once(&mut self, _s: &ConfigSpace, _c: &Config) -> f64 {
+            self.alpha + self.beta
+        }
+        fn run_batch(&mut self, _s: &ConfigSpace, _c: &Config, n: usize) -> f64 {
+            self.alpha + self.beta * n.max(1) as f64
+        }
+    }
+
+    #[test]
+    fn batch_fit_recovers_alpha_and_beta_exactly() {
+        let s = ConfigSpace::new("t", vec![ParamDef::discrete("x", vec![0])], vec![]);
+        let mut r = AffineBatch { alpha: 7.5, beta: 2.25 };
+        let m = fit_batch_model(&mut r, &s, &vec![0], &BATCH_PROFILE_SIZES, 3);
+        assert!((m.alpha_ms - 7.5).abs() < 1e-9, "α {}", m.alpha_ms);
+        assert!((m.beta_ms - 2.25).abs() < 1e-9, "β {}", m.beta_ms);
+        assert!((m.batch_ms(8) - (7.5 + 18.0)).abs() < 1e-9);
+        assert!((m.per_request_ms(1) - 9.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unbatched_runner_fits_zero_alpha() {
+        // The default run_batch loops run_once: s̄(B) = B·s̄(1) exactly,
+        // so the fit must report no amortizable fixed cost.
+        let s = ConfigSpace::new("t", vec![ParamDef::discrete("x", vec![0])], vec![]);
+        let mut r = FixedSeq { seq: vec![12.0], i: 0 };
+        let m = fit_batch_model(&mut r, &s, &vec![0], &BATCH_PROFILE_SIZES, 2);
+        assert!(m.alpha_ms.abs() < 1e-9, "α {}", m.alpha_ms);
+        assert!((m.beta_ms - 12.0).abs() < 1e-9, "β {}", m.beta_ms);
+    }
+
+    #[test]
+    fn fit_clamps_negative_intercepts_to_zero() {
+        // Sub-linear batch costs (y = B·β − c) would fit α < 0; the
+        // model clamps to 0 rather than crediting dispatch time.
+        let m = BatchServiceModel::fit(&[(1, 1.0), (4, 7.0), (8, 15.0)]);
+        assert_eq!(m.alpha_ms, 0.0);
+        assert!(m.beta_ms > 0.0);
     }
 }

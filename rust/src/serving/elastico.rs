@@ -182,6 +182,8 @@ mod tests {
             up_cooldown_ms: 0.0,
             down_cooldown_ms: 5000.0,
             workers: 1,
+            batch: 1,
+            batch_alpha_ms: 0.0,
             ladder: vec![
                 rung("fast", 0.76, 20.0, 30.0, 13, Some(4)),
                 rung("medium", 0.82, 45.0, 70.0, 5, Some(1)),

@@ -1,9 +1,14 @@
 //! The workflow executor side of the serving system.
 //!
-//! A [`RequestEngine`] executes one request under a ladder rung. The
-//! production engine ([`WorkflowEngine`]) resolves the rung to its
+//! A [`RequestEngine`] executes requests under a ladder rung, one at a
+//! time ([`RequestEngine::execute`]) or as a batch
+//! ([`RequestEngine::execute_batch`]) so the per-dispatch fixed costs —
+//! rung resolution, engine call setup — are paid once for `n` requests.
+//! The production engine ([`WorkflowEngine`]) resolves the rung to its
 //! configuration and drives a live [`Workflow`] over PJRT; [`MockEngine`]
-//! replays scripted service times for tests and harness benchmarks.
+//! replays scripted service times for tests and harness benchmarks, with
+//! an explicit per-batch fixed cost + per-item marginal cost model
+//! (`s̄(B) = α + β·B`) so batching experiments have a ground truth.
 
 use anyhow::Result;
 
@@ -11,9 +16,18 @@ use crate::configspace::ConfigSpace;
 use crate::planner::Plan;
 use crate::workflows::{ExecOutcome, Workflow};
 
-/// Executes one request under ladder rung `idx`.
+/// Executes requests under ladder rung `idx`.
 pub trait RequestEngine {
     fn execute(&mut self, idx: usize) -> Result<ExecOutcome>;
+
+    /// Execute `n` requests under rung `idx` in one dispatch, returning
+    /// one outcome per request (in order). The default pays the full
+    /// per-request dispatch cost `n` times (a loop over
+    /// [`execute`](RequestEngine::execute)); engines with a real
+    /// amortized path override this.
+    fn execute_batch(&mut self, idx: usize, n: usize) -> Result<Vec<ExecOutcome>> {
+        (0..n.max(1)).map(|_| self.execute(idx)).collect()
+    }
 
     /// Rungs available (= plan ladder length).
     fn rungs(&self) -> usize;
@@ -38,29 +52,70 @@ impl<W: Workflow> RequestEngine for WorkflowEngine<W> {
         self.workflow.run(&self.space, cfg)
     }
 
+    /// Amortized path: the rung is resolved to its configuration once
+    /// per batch, and the workflow runs back-to-back against the same
+    /// resolved config — the per-batch fixed cost is the resolution +
+    /// dispatch setup; the per-item marginal cost is the workflow
+    /// compute itself. (True multi-request PJRT batching lands with the
+    /// real `xla` backend; the offline stub executes per item.)
+    fn execute_batch(&mut self, idx: usize, n: usize) -> Result<Vec<ExecOutcome>> {
+        let cfg = &self.plan.ladder[idx].config;
+        let mut outs = Vec::with_capacity(n.max(1));
+        for _ in 0..n.max(1) {
+            outs.push(self.workflow.run(&self.space, cfg)?);
+        }
+        Ok(outs)
+    }
+
     fn rungs(&self) -> usize {
         self.plan.ladder.len()
     }
 }
 
-/// Scripted engine for tests: per-rung busy-wait service times.
+/// Scripted engine for tests: per-rung busy-wait service times with an
+/// explicit batch cost model `s̄(B) = α + β·B`, where `α` =
+/// [`dispatch_ms`](MockEngine::dispatch_ms) is the per-batch fixed cost
+/// and `β = service_ms - dispatch_ms` the per-item marginal cost.
+/// `execute` (and any batch at `dispatch_ms = 0`) reproduces the seed
+/// behavior exactly: one request busy-waits `service_ms[idx]`.
 pub struct MockEngine {
-    /// Service time per rung (ms).
+    /// Single-request service time per rung (ms) — `s̄(1) = α + β`.
     pub service_ms: Vec<f64>,
     /// Expected accuracy per rung.
     pub accuracy: Vec<f64>,
+    /// Per-dispatch fixed cost `α` (ms), amortized across a batch.
+    /// Clamped into `[0, service_ms[idx]]` at use.
+    pub dispatch_ms: f64,
 }
 
-impl RequestEngine for MockEngine {
-    fn execute(&mut self, idx: usize) -> Result<ExecOutcome> {
+impl MockEngine {
+    fn spin_ms(ms: f64) {
         let deadline =
-            std::time::Instant::now() + std::time::Duration::from_secs_f64(self.service_ms[idx] / 1e3);
+            std::time::Instant::now() + std::time::Duration::from_secs_f64(ms.max(0.0) / 1e3);
         // Busy-wait: emulates CPU-bound inference (sleep would free the
         // core and understate contention).
         while std::time::Instant::now() < deadline {
             std::hint::spin_loop();
         }
+    }
+}
+
+impl RequestEngine for MockEngine {
+    fn execute(&mut self, idx: usize) -> Result<ExecOutcome> {
+        Self::spin_ms(self.service_ms[idx]);
         Ok(ExecOutcome { accuracy: self.accuracy[idx], success: None })
+    }
+
+    /// Batch of `n`: `α + n·β` — the fixed dispatch cost is paid once,
+    /// each item adds its marginal cost. With `n = 1` this is exactly
+    /// `service_ms[idx]`.
+    fn execute_batch(&mut self, idx: usize, n: usize) -> Result<Vec<ExecOutcome>> {
+        let n = n.max(1);
+        let s1 = self.service_ms[idx];
+        let alpha = self.dispatch_ms.clamp(0.0, s1);
+        let beta = s1 - alpha;
+        Self::spin_ms(alpha + n as f64 * beta);
+        Ok(vec![ExecOutcome { accuracy: self.accuracy[idx], success: None }; n])
     }
 
     fn rungs(&self) -> usize {
@@ -74,12 +129,48 @@ mod tests {
 
     #[test]
     fn mock_engine_takes_time() {
-        let mut e = MockEngine { service_ms: vec![5.0, 20.0], accuracy: vec![0.7, 0.9] };
+        let mut e = MockEngine {
+            service_ms: vec![5.0, 20.0],
+            accuracy: vec![0.7, 0.9],
+            dispatch_ms: 0.0,
+        };
         let t0 = std::time::Instant::now();
         let out = e.execute(0).unwrap();
         let dt = t0.elapsed().as_secs_f64() * 1e3;
         assert!(dt >= 4.5, "{dt}");
         assert_eq!(out.accuracy, 0.7);
         assert_eq!(e.rungs(), 2);
+    }
+
+    #[test]
+    fn mock_engine_batch_amortizes_dispatch() {
+        // s̄(1) = 20 ms with α = 16 ms fixed: a batch of 4 costs
+        // 16 + 4·4 = 32 ms, not 80 ms — and returns 4 outcomes. The
+        // upper bound leaves ~28 ms of headroom for CI scheduler noise.
+        let mut e = MockEngine {
+            service_ms: vec![20.0],
+            accuracy: vec![0.7],
+            dispatch_ms: 16.0,
+        };
+        let t0 = std::time::Instant::now();
+        let outs = e.execute_batch(0, 4).unwrap();
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(outs.len(), 4);
+        assert!(dt >= 30.0, "batch should cost ~32 ms, took {dt}");
+        assert!(dt < 60.0, "batch should amortize dispatch, took {dt}");
+    }
+
+    #[test]
+    fn mock_engine_batch_of_one_is_execute() {
+        let mut e = MockEngine {
+            service_ms: vec![3.0],
+            accuracy: vec![0.8],
+            dispatch_ms: 2.0,
+        };
+        let t0 = std::time::Instant::now();
+        let outs = e.execute_batch(0, 1).unwrap();
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(outs.len(), 1);
+        assert!(dt >= 2.5, "B=1 batch must cost the full s̄(1), took {dt}");
     }
 }

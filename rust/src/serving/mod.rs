@@ -19,10 +19,15 @@
 //!   signal use a lock-free total-across-shards counter, a full queue
 //!   rejects at push, and `close()` wakes every blocked worker for
 //!   prompt shutdown;
-//! * **k executor threads** drain the queue. PJRT handles are `!Send`,
-//!   so each worker constructs its *own* engine inside its thread from a
-//!   shared `Fn() -> Result<E>` factory; the run clock starts once the
-//!   last worker finishes compiling, so engine startup never counts as
+//! * **k executor threads** drain the queue, up to
+//!   [`ServeOptions::batch`] requests per engine dispatch
+//!   ([`ShardedQueue::pop_batch`] takes a front run of the home shard —
+//!   or a steal-half from a victim — in one lock acquisition, and
+//!   [`executor::RequestEngine::execute_batch`] runs the rung once for
+//!   all of them). PJRT handles are `!Send`, so each worker constructs
+//!   its *own* engine inside its thread from a shared
+//!   `Fn() -> Result<E>` factory; the run clock starts once the last
+//!   worker finishes compiling, so engine startup never counts as
 //!   queueing delay;
 //! * **lock-light control plane**: the monitor's arrival counter is a
 //!   plain atomic; the shared policy sits behind a handle that caches
@@ -46,6 +51,27 @@
 //!   pool. Under `ShardedSteal`, global service order additionally
 //!   diverges from strict FIFO by up to one round-robin lap; see
 //!   [`queue`] for the full contract.)
+//!
+//! ## Batched dispatch (`s̄(B) = α + β·B`)
+//!
+//! At `batch > 1` a worker drains up to B queued requests in one lock
+//! acquisition and executes the rung once for all of them: the
+//! per-dispatch fixed cost α — rung resolution, engine call setup, the
+//! policy observation — is paid once per batch instead of once per
+//! request, so a worker's effective per-request service rate rises from
+//! `1/(α + β)` to `B/(α + β·B)`. Every request in a batch shares the
+//! batch's `start_ms`/`finish_ms` (a request completes when its batch
+//! does) and the policy is consulted once per batch at dequeue and once
+//! at completion. **When batching helps**: under load with a
+//! non-trivial α, throughput scales toward `1/β` and queues drain
+//! faster than the tail inflates — the AQM model
+//! ([`crate::planner::aqm`]) deepens the thresholds accordingly. **When
+//! it hurts**: with α ≈ 0 a batch just makes its earliest requests wait
+//! for the whole batch (`s̄(B) ≈ B·s̄(1)`) — tail latency inflates with
+//! no throughput gain, the batch-aware slack shrinks, and slow rungs
+//! drop off the feasible ladder; keep `batch = 1` (the default, exact
+//! seed semantics) unless the dispatch overhead is measurable
+//! ([`crate::planner::fit_batch_model`] profiles it at B ∈ {1, 4, 8}).
 
 pub mod elastico;
 pub mod executor;

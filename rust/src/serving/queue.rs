@@ -33,7 +33,17 @@
 //!   Leiserson's Cilk, with one queueing-theoretic change: thieves take
 //!   the oldest entry (FIFO) rather than the newest (LIFO), because the
 //!   objective is tail latency of queued requests, not cache locality of
-//!   spawned tasks.
+//!   spawned tasks. Batch pops steal **half** the victim's backlog
+//!   (capped at the batch bound) in one lock acquisition, so a dry
+//!   worker refills with a single steal instead of returning to the
+//!   victim once per item.
+//! * **Batch dequeue**: [`ShardedQueue::pop_batch`] drains up to `max`
+//!   items from the home shard under one lock (front run, FIFO), so the
+//!   per-dispatch costs downstream (rung resolution, engine call setup,
+//!   policy observation) are paid once per batch instead of once per
+//!   request. `max == 1` is exactly [`pop_timeout`](ShardedQueue::pop_timeout)
+//!   including the steal-one behavior, so the unbatched hot path is the
+//!   `B = 1` case of the same code.
 //! * **Depth**: [`ShardedQueue::len`] is one atomic load of the
 //!   total-across-shards depth — the signal the AQM thresholds
 //!   (`planner::aqm`) and the Elastico controller are derived for.
@@ -285,6 +295,52 @@ impl<T> ShardedQueue<T> {
         None
     }
 
+    /// Non-blocking batch pop for consumer `worker`: drain up to `max`
+    /// items from the front of the home shard in one lock acquisition;
+    /// when the home shard is dry, steal **half** the first non-empty
+    /// shard's backlog (`⌈len/2⌉`, capped at `max`) in one acquisition.
+    /// Returns `None` when every shard is empty; a returned batch is
+    /// never empty. `max == 1` behaves exactly like
+    /// [`try_pop`](ShardedQueue::try_pop) (steal-one included).
+    pub fn try_pop_batch(&self, worker: usize, max: usize) -> Option<Vec<T>> {
+        let max = max.max(1);
+        let n = self.shards.len();
+        let home = worker % n;
+        for i in 0..n {
+            let s = (home + i) % n;
+            let mut g = self.shards[s].lock().unwrap();
+            if g.is_empty() {
+                continue;
+            }
+            // Home shard: take a front run of up to `max`. Victim shard:
+            // steal half its backlog (leave it work) up to `max`.
+            let take = if i == 0 {
+                g.len().min(max)
+            } else {
+                g.len().div_ceil(2).min(max)
+            };
+            // Same release-before-remove ordering as `try_pop`, with one
+            // RMW for the whole batch: all `take` slots are released
+            // before any item is removed, so the depth counter never
+            // over-counts a claimed item; the items themselves are
+            // claimed under the shard lock.
+            self.depth.fetch_sub(take, Ordering::SeqCst);
+            let mut items = Vec::with_capacity(take);
+            for _ in 0..take {
+                items.push(g.pop_front().unwrap());
+            }
+            drop(g);
+            if i > 0 {
+                // One steal *operation* regardless of batch size — the
+                // counter tracks lock-level steal frequency, which is
+                // what batch stealing amortizes (per-item at max == 1).
+                self.steals.fetch_add(1, Ordering::Relaxed);
+            }
+            return Some(items);
+        }
+        None
+    }
+
     /// Blocking pop with timeout for consumer `worker`.
     ///
     /// Returns [`Popped::Item`] (home or stolen), [`Popped::TimedOut`]
@@ -292,9 +348,25 @@ impl<T> ShardedQueue<T> {
     /// the queue is closed **and** every shard is drained. The wait is
     /// deadline-based and `close()` wakes all parked consumers promptly.
     pub fn pop_timeout(&self, worker: usize, timeout: Duration) -> Popped<T> {
+        self.pop_with(timeout, || self.try_pop(worker))
+    }
+
+    /// Blocking batch pop with timeout: the batch analogue of
+    /// [`pop_timeout`](ShardedQueue::pop_timeout), draining up to `max`
+    /// items per [`try_pop_batch`](ShardedQueue::try_pop_batch). A
+    /// returned [`Popped::Item`] batch is never empty.
+    pub fn pop_batch(&self, worker: usize, max: usize, timeout: Duration) -> Popped<Vec<T>> {
+        self.pop_with(timeout, || self.try_pop_batch(worker, max))
+    }
+
+    /// Shared deadline-based park loop under `attempt` (single or batch
+    /// pop): re-check, register as a sleeper under the gate (Dekker
+    /// handshake with producers), wait, repeat until item(s), timeout,
+    /// or closed-and-drained.
+    fn pop_with<R>(&self, timeout: Duration, attempt: impl Fn() -> Option<R>) -> Popped<R> {
         let deadline = Instant::now() + timeout;
         loop {
-            if let Some(item) = self.try_pop(worker) {
+            if let Some(item) = attempt() {
                 return Popped::Item(item);
             }
             if self.closed.load(Ordering::SeqCst) && self.depth.load(Ordering::SeqCst) == 0 {
@@ -562,6 +634,124 @@ mod tests {
             assert_eq!(r, Popped::Closed);
             assert!(dt < Duration::from_secs(5), "woke only after {dt:?}");
         }
+    }
+
+    #[test]
+    fn batch_pop_drains_home_front_run_in_order() {
+        // Shard 0 holds {0, 4, 8} after 12 round-robin pushes over 4
+        // shards; a batch pop of up to 8 takes exactly that front run.
+        let q: ShardedQueue<u64> = ShardedQueue::new(64, 4);
+        for i in 0..12 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(
+            q.pop_batch(0, 8, Duration::from_millis(1)),
+            Popped::Item(vec![0, 4, 8])
+        );
+        assert_eq!(q.steals(), 0, "home drain is not a steal");
+        assert_eq!(q.len(), 9);
+    }
+
+    #[test]
+    fn batch_pop_bounded_by_max() {
+        let q: ShardedQueue<u64> = ShardedQueue::new(64, 1);
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(
+            q.pop_batch(0, 4, Duration::from_millis(1)),
+            Popped::Item(vec![0, 1, 2, 3])
+        );
+        assert_eq!(
+            q.pop_batch(0, 4, Duration::from_millis(1)),
+            Popped::Item(vec![4, 5, 6, 7])
+        );
+        assert_eq!(
+            q.pop_batch(0, 4, Duration::from_millis(1)),
+            Popped::Item(vec![8, 9])
+        );
+        assert_eq!(q.pop_batch(0, 4, Duration::from_millis(1)), Popped::TimedOut);
+    }
+
+    #[test]
+    fn batch_steal_takes_half_the_victim_in_one_operation() {
+        // 16 round-robin pushes over 2 shards: shard 0 holds the evens,
+        // shard 1 the odds. Once worker 1 drains its home shard, a dry
+        // batch pop steals ⌈8/2⌉ = 4 of shard 0's items FIFO, counted as
+        // ONE steal operation (the lock frequency batch stealing cuts).
+        let q: ShardedQueue<u64> = ShardedQueue::new(64, 2);
+        for i in 0..16 {
+            q.push(i).unwrap();
+        }
+        // Drain home shard 1 fully (8 items: 1,3,…,15).
+        assert_eq!(
+            q.pop_batch(1, 64, Duration::from_millis(1)),
+            Popped::Item(vec![1, 3, 5, 7, 9, 11, 13, 15])
+        );
+        assert_eq!(q.steals(), 0);
+        // Now shard 1 is dry: batch pop steals ⌈8/2⌉ = 4 from shard 0.
+        assert_eq!(
+            q.pop_batch(1, 64, Duration::from_millis(1)),
+            Popped::Item(vec![0, 2, 4, 6])
+        );
+        assert_eq!(q.steals(), 1, "one batch steal = one steal operation");
+        // Cap: next steal takes ⌈4/2⌉ = 2, bounded by max = 1 -> 1 item.
+        assert_eq!(
+            q.pop_batch(1, 1, Duration::from_millis(1)),
+            Popped::Item(vec![8])
+        );
+        assert_eq!(q.steals(), 2);
+    }
+
+    #[test]
+    fn batch_pop_conserves_under_racing_consumers() {
+        // 4 producers x 1000 items drained by 4 batch consumers with
+        // max = 7: every item must come out exactly once (no loss, no
+        // duplication) and capacity may never spuriously reject.
+        let n_prod = 4usize;
+        let per = 1000u64;
+        let q: Arc<ShardedQueue<u64>> =
+            Arc::new(ShardedQueue::new((n_prod as u64 * per) as usize, 4));
+        let producers: Vec<_> = (0..n_prod)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        q.push(p as u64 * per + i).unwrap(); // Full = bug
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..4usize)
+            .map(|w| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        match q.pop_batch(w, 7, Duration::from_millis(100)) {
+                            Popped::Item(items) => {
+                                assert!(!items.is_empty() && items.len() <= 7);
+                                got.extend(items);
+                            }
+                            Popped::TimedOut => {}
+                            Popped::Closed => break,
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = Vec::new();
+        for c in consumers {
+            all.extend(c.join().unwrap());
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..n_prod as u64 * per).collect::<Vec<u64>>());
+        assert_eq!(q.len(), 0);
     }
 
     #[test]

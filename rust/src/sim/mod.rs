@@ -38,6 +38,23 @@
 //! injector observes queue depth only — kept so k = 1 results stay
 //! bit-for-bit with the paper figures. The DES queue is unbounded (no
 //! admission rejections), as in the seed.
+//!
+//! ## Batch model
+//!
+//! [`simulate_disc`] takes the executor batch bound B: a freeing server
+//! drains up to B requests from the chosen shard in one dispatch —
+//! a front run of its home shard, or a steal-half (`⌈len/2⌉`, capped at
+//! B) from the victim — exactly the live `ShardedQueue::pop_batch`
+//! walk, so FIFO-per-shard order is preserved and a batch never spans
+//! shards. Batch service time follows `s̄(B) = α + β·B` with `α =`
+//! [`crate::planner::Plan::batch_alpha_ms`]: each request's sampled
+//! service time is treated as `α + βᵢ`, so a batch of n costs
+//! `Σᵢ sᵢ − (n−1)·α` — n marginal costs but one dispatch cost. All n
+//! requests share the batch's start/finish (a request completes when
+//! its batch does) and the policy is consulted once per batch at
+//! dispatch and once at departure, mirroring the live executor. With
+//! `B = 1` every expression degenerates to the seed simulator
+//! bit-for-bit (same rng consumption, same timestamps).
 
 pub mod service;
 pub mod theory;
@@ -95,17 +112,20 @@ pub fn simulate_k<P: ScalingPolicy, S: ServiceModel>(
         workers,
         Discipline::CentralFifo,
         0,
+        1,
     )
 }
 
 /// Simulate serving under either queue discipline.
 ///
 /// `service` samples per-request service times (ms) given a ladder index;
-/// `plan` supplies per-rung expected accuracy. The policy is consulted on
-/// every arrival and every dispatch/departure (the live monitor's
+/// `plan` supplies per-rung expected accuracy (and the per-dispatch
+/// fixed cost `α` of the batch model). The policy is consulted on
+/// every arrival and once per dispatch/departure (the live monitor's
 /// observation points). `shards` is the shard count under
 /// [`Discipline::ShardedSteal`] (0 = one per worker) and is ignored under
-/// [`Discipline::CentralFifo`]. With `CentralFifo` and `workers == 1`
+/// [`Discipline::CentralFifo`]; `batch` is the executor batch bound B
+/// (0/1 = unbatched). With `CentralFifo`, `workers == 1` and `batch <= 1`
 /// this is bit-for-bit the original M/G/1 simulator.
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_disc<P: ScalingPolicy, S: ServiceModel>(
@@ -117,8 +137,11 @@ pub fn simulate_disc<P: ScalingPolicy, S: ServiceModel>(
     workers: usize,
     discipline: Discipline,
     shards: usize,
+    batch: usize,
 ) -> SimOutcome {
     let workers = workers.max(1);
+    let batch = batch.max(1);
+    let alpha = plan.batch_alpha_ms.max(0.0);
     let nsh = match discipline {
         Discipline::CentralFifo => 1,
         Discipline::ShardedSteal => {
@@ -176,35 +199,58 @@ pub fn simulate_disc<P: ScalingPolicy, S: ServiceModel>(
 
         if queued_total > 0 && earliest <= next_arrival {
             // Dispatch to server `slot`: home shard first, then a FIFO
-            // steal sweep (exactly the live ShardedQueue::try_pop walk).
+            // steal sweep (exactly the live ShardedQueue::try_pop_batch
+            // walk): a front run of up to `batch` from the home shard,
+            // or a steal-half (⌈len/2⌉, capped at `batch`) from the
+            // victim — a batch never spans shards.
             let home = slot % nsh;
             let shard = (0..nsh)
                 .map(|d| (home + d) % nsh)
                 .find(|&s| !queues[s].is_empty())
                 .unwrap();
-            if shard != home {
+            let take = if shard == home {
+                queues[shard].len().min(batch)
+            } else {
                 steals += 1;
+                queues[shard].len().div_ceil(2).min(batch)
+            };
+            let mut taken: Vec<(u64, f64)> = Vec::with_capacity(take);
+            for _ in 0..take {
+                taken.push(queues[shard].pop_front().unwrap());
             }
-            let (id, arr_ms) = queues[shard].pop_front().unwrap();
-            queued_total -= 1;
-            let start = earliest.max(arr_ms);
-            // Switches apply at dequeue: consult the policy now, against
-            // the aggregate depth across shards.
+            queued_total -= take;
+            // The batch starts once the server is free and its last
+            // (latest-arriving, FIFO within the shard) request is in.
+            let start = earliest.max(taken.last().unwrap().1);
+            // Switches apply at dequeue: one policy consultation per
+            // batch, against the aggregate depth across shards.
             let idx =
                 observe(policy, &mut switches, &mut observed, start, queued_total);
-            let svc = service.sample_ms(idx, &mut rng);
-            let finish = start + svc;
+            // Batch service: each sampled time is α + βᵢ, so n requests
+            // in one dispatch cost Σ sᵢ − (n−1)·α (one dispatch cost, n
+            // marginals). α is clamped per rung into [0, s̄(1)] exactly
+            // as in `derive_plan`, so an oversized fitted α cannot make
+            // batches cheaper than their marginal costs. At B = 1 this
+            // is the sample itself.
+            let alpha_k = alpha.clamp(0.0, plan.ladder[idx].mean_ms);
+            let svc = (0..take)
+                .map(|_| service.sample_ms(idx, &mut rng))
+                .sum::<f64>()
+                - (take as f64 - 1.0) * alpha_k;
+            let finish = start + svc.max(0.0);
             busy[slot] = finish;
-            records.push(RequestRecord {
-                id,
-                arrival_ms: arr_ms,
-                start_ms: start,
-                finish_ms: finish,
-                config_idx: idx,
-                accuracy: plan.ladder[idx].accuracy,
-                success: None,
-            });
-            // Departure observation.
+            for (id, arr_ms) in taken {
+                records.push(RequestRecord {
+                    id,
+                    arrival_ms: arr_ms,
+                    start_ms: start,
+                    finish_ms: finish,
+                    config_idx: idx,
+                    accuracy: plan.ladder[idx].accuracy,
+                    success: None,
+                });
+            }
+            // Departure observation (once per batch).
             observe(policy, &mut switches, &mut observed, finish, queued_total);
         } else if i < n {
             // Admit the next arrival (round-robin routing; with one
@@ -416,6 +462,7 @@ mod tests {
             1,
             Discipline::CentralFifo,
             0,
+            1,
         );
         let mut ps = ElasticoPolicy::new(plan.clone());
         let sharded = simulate_disc(
@@ -426,6 +473,7 @@ mod tests {
             42,
             1,
             Discipline::ShardedSteal,
+            1,
             1,
         );
 
@@ -444,7 +492,7 @@ mod tests {
 
         let makespan = |k: usize, d: Discipline| {
             let mut pol = StaticPolicy::new(0, "fast");
-            let out = simulate_disc(&arr, &plan, &mut pol, &svc, 1, k, d, 0);
+            let out = simulate_disc(&arr, &plan, &mut pol, &svc, 1, k, d, 0, 1);
             out.records
                 .iter()
                 .map(|r| r.finish_ms)
@@ -468,7 +516,7 @@ mod tests {
             for k in [1usize, 2, 3] {
                 let mut pol = StaticPolicy::new(1, "accurate");
                 let out =
-                    simulate_disc(&arr, &plan, &mut pol, &svc, 7, k, disc, 0);
+                    simulate_disc(&arr, &plan, &mut pol, &svc, 7, k, disc, 0, 1);
                 assert_eq!(out.records.len(), arr.len());
                 // Sweep service intervals: concurrency never exceeds k.
                 let mut events: Vec<(f64, i32)> = Vec::new();
@@ -509,6 +557,7 @@ mod tests {
             2,
             Discipline::ShardedSteal,
             6,
+            1,
         );
         assert_eq!(out.records.len(), arr.len());
         let mut ids: Vec<u64> = out.records.iter().map(|r| r.id).collect();
@@ -537,6 +586,7 @@ mod tests {
             4,
             Discipline::ShardedSteal,
             shards,
+            1,
         );
         for s in 0..shards as u64 {
             let mut rs: Vec<_> = out
@@ -559,5 +609,159 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn batch_one_reproduces_the_seed_simulator_exactly() {
+        // B = 1 through the batched dispatch path must be bit-for-bit
+        // the unbatched simulator (same rng consumption, same
+        // timestamps), in both disciplines, even with α set.
+        let mut plan = plan2();
+        plan.batch_alpha_ms = 5.0; // must be inert at B = 1
+        let arr = arrivals(12.0, 90.0);
+        let svc = LognormalService::from_plan(&plan, 0.25);
+        for disc in [Discipline::CentralFifo, Discipline::ShardedSteal] {
+            let mut p1 = ElasticoPolicy::new(plan.clone());
+            let a = simulate_disc(&arr, &plan, &mut p1, &svc, 42, 2, disc, 0, 1);
+            let mut p2 = ElasticoPolicy::new(plan.clone());
+            let b = simulate_disc(&arr, &plan, &mut p2, &svc, 42, 2, disc, 0, 0);
+            assert!(records_identical(&a.records, &b.records), "{disc:?}");
+            assert_eq!(a.switches.len(), b.switches.len());
+        }
+    }
+
+    #[test]
+    fn batched_dispatch_conserves_and_keeps_fifo_per_shard() {
+        let plan = plan2();
+        let arr = arrivals(30.0, 30.0);
+        let svc = LognormalService::from_plan(&plan, 0.25);
+        let shards = 4usize;
+        let mut pol = StaticPolicy::new(0, "fast");
+        let out = simulate_disc(
+            &arr,
+            &plan,
+            &mut pol,
+            &svc,
+            11,
+            4,
+            Discipline::ShardedSteal,
+            shards,
+            8,
+        );
+        // Conservation: every arrival served exactly once.
+        assert_eq!(out.records.len(), arr.len());
+        let mut ids: Vec<u64> = out.records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..arr.len() as u64).collect::<Vec<u64>>());
+        // FIFO within each shard (batches are front runs, steals take
+        // the victim's front half — order never inverts).
+        for s in 0..shards as u64 {
+            let mut rs: Vec<_> = out
+                .records
+                .iter()
+                .filter(|r| r.id % shards as u64 == s)
+                .collect();
+            rs.sort_by(|a, b| {
+                a.start_ms
+                    .partial_cmp(&b.start_ms)
+                    .unwrap()
+                    .then(a.id.cmp(&b.id))
+            });
+            for w in rs.windows(2) {
+                assert!(w[1].id > w[0].id, "shard {s} out of order");
+            }
+        }
+        // Batches share their bounds and respect the bound B = 8.
+        let mut sizes: std::collections::HashMap<(u64, u64), usize> =
+            std::collections::HashMap::new();
+        for r in &out.records {
+            *sizes
+                .entry((r.start_ms.to_bits(), r.finish_ms.to_bits()))
+                .or_default() += 1;
+        }
+        assert!(sizes.values().all(|&n| n <= 8), "batch bound violated");
+    }
+
+    #[test]
+    fn batching_amortizes_dispatch_when_alpha_dominates() {
+        // Deterministic 10 ms service of which α = 8 ms is dispatch:
+        // a B=8 batch costs 8 + 8·2 = 24 ms for 8 requests vs 80 ms
+        // serially, so the makespan of a 160-deep backlog shrinks ~3x.
+        let mut plan = plan2();
+        plan.batch_alpha_ms = 8.0;
+        let arr: Vec<f64> = (0..160).map(|i| i as f64 * 1e-4).collect();
+        let svc = DeterministicService { means: vec![10.0, 10.0] };
+        let makespan = |batch: usize| {
+            let mut pol = StaticPolicy::new(0, "fast");
+            let out = simulate_disc(
+                &arr,
+                &plan,
+                &mut pol,
+                &svc,
+                1,
+                1,
+                Discipline::CentralFifo,
+                0,
+                batch,
+            );
+            assert_eq!(out.records.len(), arr.len());
+            out.records
+                .iter()
+                .map(|r| r.finish_ms)
+                .fold(f64::NEG_INFINITY, f64::max)
+        };
+        let m1 = makespan(1);
+        let m8 = makespan(8);
+        assert!(
+            m1 / m8 >= 2.5,
+            "B=8 should amortize dispatch: B=1 {m1:.0} ms vs B=8 {m8:.0} ms"
+        );
+    }
+
+    #[test]
+    fn zero_alpha_batching_trades_latency_for_nothing() {
+        // With α = 0 a batch of n costs exactly n marginals: throughput
+        // (makespan) is unchanged, but early requests now wait for their
+        // whole batch — mean latency strictly worse. This is the "when
+        // batching hurts" half of the model, validated against theory.
+        let plan = plan2(); // batch_alpha_ms = 0 via derive_plan default
+        assert_eq!(plan.batch_alpha_ms, 0.0);
+        let arr: Vec<f64> = (0..120).map(|i| i as f64 * 1e-4).collect();
+        let svc = DeterministicService { means: vec![10.0, 10.0] };
+        let run = |batch: usize| {
+            let mut pol = StaticPolicy::new(0, "fast");
+            simulate_disc(
+                &arr,
+                &plan,
+                &mut pol,
+                &svc,
+                1,
+                1,
+                Discipline::CentralFifo,
+                0,
+                batch,
+            )
+        };
+        let b1 = run(1);
+        let b8 = run(8);
+        let makespan = |o: &SimOutcome| {
+            o.records
+                .iter()
+                .map(|r| r.finish_ms)
+                .fold(f64::NEG_INFINITY, f64::max)
+        };
+        let mean_latency = |o: &SimOutcome| {
+            o.records.iter().map(|r| r.latency_ms()).sum::<f64>() / o.records.len() as f64
+        };
+        assert!(
+            (makespan(&b1) - makespan(&b8)).abs() < 1e-6,
+            "α=0 batching must not change throughput"
+        );
+        assert!(
+            mean_latency(&b8) > mean_latency(&b1) + 1.0,
+            "α=0 batching must inflate mean latency: B=1 {:.1} vs B=8 {:.1}",
+            mean_latency(&b1),
+            mean_latency(&b8)
+        );
     }
 }

@@ -81,6 +81,8 @@ mod tests {
             up_cooldown_ms: 0.0,
             down_cooldown_ms: 0.0,
             workers: 1,
+            batch: 1,
+            batch_alpha_ms: 0.0,
             ladder: vec![ConfigPolicy {
                 label: "only".into(),
                 config: vec![],

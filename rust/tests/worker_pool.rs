@@ -39,6 +39,18 @@ fn run_pool(
     capacity: usize,
     discipline: Discipline,
 ) -> (usize, usize, f64) {
+    run_pool_batched(n, workers, service_ms, capacity, discipline, 1)
+}
+
+/// [`run_pool`] with an executor batch bound.
+fn run_pool_batched(
+    n: usize,
+    workers: usize,
+    service_ms: f64,
+    capacity: usize,
+    discipline: Discipline,
+    batch: usize,
+) -> (usize, usize, f64) {
     let arrivals = vec![0.0; n];
     let out = serve(
         move || Ok(SleepEngine { service_ms }),
@@ -50,12 +62,19 @@ fn run_pool(
             workers,
             discipline,
             shards: 0,
+            batch,
         },
     )
     .unwrap();
-    // No record may be lost or duplicated under concurrent dequeue.
+    // No record may be lost or duplicated under concurrent dequeue, and
+    // the injector accounting must conserve every arrival.
     let ids: HashSet<u64> = out.records.iter().map(|r| r.id).collect();
     assert_eq!(ids.len(), out.records.len(), "duplicate records");
+    assert_eq!(
+        out.records.len() + out.rejected,
+        n,
+        "records + rejected must equal arrivals"
+    );
     let makespan = out
         .records
         .iter()
@@ -141,6 +160,7 @@ fn stealing_loses_nothing_and_never_spuriously_rejects() {
             workers: 4,
             discipline: Discipline::ShardedSteal,
             shards: 0,
+            batch: 1,
         },
     )
     .unwrap();
@@ -168,6 +188,7 @@ fn steal_only_shards_are_fully_drained() {
             workers: 2,
             discipline: Discipline::ShardedSteal,
             shards: 6,
+            batch: 1,
         },
     )
     .unwrap();
@@ -185,12 +206,63 @@ fn steal_only_shards_are_fully_drained() {
 fn served_plus_rejected_always_sums_to_arrivals() {
     // Overload a tiny queue so admission control rejects some share;
     // accounting must stay exact with concurrent consumers, under both
-    // disciplines.
+    // disciplines and with batched dispatch (batches free many slots at
+    // once, racing the injector harder).
     for discipline in [Discipline::CentralFifo, Discipline::ShardedSteal] {
-        let (served, rejected, _t) = run_pool(60, 3, 20.0, 4, discipline);
-        assert!(rejected > 0, "expected overload rejections ({discipline:?})");
-        assert_eq!(served + rejected, 60, "{discipline:?}");
+        for batch in [1usize, 4] {
+            let (served, rejected, _t) =
+                run_pool_batched(60, 3, 20.0, 4, discipline, batch);
+            assert!(
+                rejected > 0,
+                "expected overload rejections ({discipline:?}, B={batch})"
+            );
+            assert_eq!(served + rejected, 60, "{discipline:?}, B={batch}");
+        }
     }
+}
+
+#[test]
+fn batched_pool_conserves_across_workers_and_disciplines() {
+    // 200 simultaneous arrivals through 4 workers dispatching batches
+    // of up to 8: every request served exactly once in both disciplines
+    // (batch stealing included), nothing rejected against an ample
+    // admission bound.
+    for discipline in [Discipline::CentralFifo, Discipline::ShardedSteal] {
+        let (served, rejected, _t) =
+            run_pool_batched(200, 4, 1.0, 4096, discipline, 8);
+        assert_eq!((served, rejected), (200, 0), "{discipline:?}");
+    }
+}
+
+#[test]
+fn batch_bound_is_respected_end_to_end() {
+    // With B = 8, no batch (= records sharing exact start/finish on one
+    // worker) may exceed 8 requests.
+    let arrivals = vec![0.0; 100];
+    let out = serve(
+        || Ok(SleepEngine { service_ms: 1.0 }),
+        Box::new(StaticPolicy::new(0, "only")),
+        &arrivals,
+        &ServeOptions {
+            workers: 2,
+            discipline: Discipline::ShardedSteal,
+            batch: 8,
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(out.records.len() + out.rejected, 100);
+    let mut sizes: std::collections::HashMap<(u64, u64), usize> =
+        std::collections::HashMap::new();
+    for r in &out.records {
+        *sizes
+            .entry((r.start_ms.to_bits(), r.finish_ms.to_bits()))
+            .or_default() += 1;
+    }
+    assert!(
+        sizes.values().all(|&n| n <= 8),
+        "a dispatch exceeded the batch bound"
+    );
 }
 
 #[test]
