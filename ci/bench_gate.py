@@ -1,23 +1,104 @@
 #!/usr/bin/env python3
 """Perf regression gate: diff BENCH_hotpath.json against the committed
-BENCH_baseline.json, failing on >25% regression for any *shared* bench
-key (new keys are informational; keys dropped from the bench are
-ignored).
+BENCH_baseline.json.
+
+Two kinds of checks, both read from the baseline file:
+
+* **Absolute keys** — every shared numeric key is diffed; >25% regression
+  on the per-key mean (ns/iter) fails. CI runners are noisy, so the
+  tolerance is deliberately wide; treat a failure as "look at the diff",
+  not as proof of a regression. Bless absolutes by downloading the
+  BENCH_hotpath.json artifact from a trusted CI run on main and merging
+  its keys into BENCH_baseline.json (machine-specific — only meaningful
+  once runs come from comparable runners).
+* **Ratio invariants** — the baseline's `"ratios"` object maps a label to
+  `{"num": key, "den": key, "min": x}` (and/or `"max"`): the gate
+  computes new[num]/new[den] and fails if it leaves the bounds, or if
+  either key is missing from the new results. `num`/`den` are resolved
+  by exact match first, then by *unique prefix* — bench names embed the
+  per-thread op count, which differs between CI's fast mode and a full
+  local run, so the committed ratios use op-count-free prefixes (e.g.
+  `"mpmc central k=4 push+pop x"`) and match either mode. Ratios are
+  machine-portable (both sides run on the same runner in the same job),
+  so they arm the gate without a blessed absolute baseline: the
+  sharded-queue and batched-dispatch speedups, and the pooled-DES cost
+  envelope, are asserted on every run. Bounds are set conservatively —
+  well below the speedups a quiet machine shows — to leave headroom for
+  shared-runner noise.
 
 Usage: bench_gate.py BENCH_baseline.json BENCH_hotpath.json
-
-The baseline is blessed manually: download the BENCH_hotpath.json
-artifact from a trusted CI run on main and commit it as
-BENCH_baseline.json. An empty baseline ({}) leaves the gate unarmed —
-the step passes and prints how to arm it. CI runners are noisy, so the
-tolerance is deliberately wide (1.25x on the per-key mean); treat a
-failure as "look at the diff", not as proof of a regression.
 """
 
 import json
 import sys
 
 TOLERANCE = 1.25
+
+
+def check_absolutes(base: dict, new: dict) -> list:
+    shared = sorted(set(base) & set(new))
+    regressed = []
+    for key in shared:
+        old_ns, new_ns = float(base[key]), float(new[key])
+        ratio = new_ns / old_ns if old_ns > 0 else 1.0
+        flag = "REGRESSION" if ratio > TOLERANCE else "ok"
+        print(f"{key:<60} {old_ns:>14.1f} -> {new_ns:>14.1f} ns/iter "
+              f"({ratio:5.2f}x) {flag}")
+        if ratio > TOLERANCE:
+            regressed.append(key)
+    if not shared:
+        print(
+            "bench gate: no shared absolute keys — absolute diffing "
+            "unarmed.\nTo arm it, bless a baseline: merge a trusted CI "
+            "run's BENCH_hotpath.json artifact into BENCH_baseline.json."
+        )
+    extra = sorted(set(new) - set(base))
+    if extra:
+        print(f"bench gate: {len(extra)} new key(s) not in baseline "
+              f"(informational): {', '.join(extra[:5])}"
+              + (" …" if len(extra) > 5 else ""))
+    return regressed
+
+
+def resolve_key(want: str, new: dict):
+    """Exact bench key, or the unique key it is a prefix of."""
+    if want in new:
+        return want
+    matches = [k for k in new if k.startswith(want)]
+    return matches[0] if len(matches) == 1 else None
+
+
+def check_ratios(ratios: dict, new: dict) -> list:
+    failed = []
+    for label, spec in sorted(ratios.items()):
+        num_key = resolve_key(spec["num"], new)
+        den_key = resolve_key(spec["den"], new)
+        if num_key is None or den_key is None:
+            missing = [spec[w] for w, k in
+                       (("num", num_key), ("den", den_key)) if k is None]
+            print(f"ratio {label}: MISSING/ambiguous bench key(s): {missing}")
+            failed.append(label)
+            continue
+        num, den = float(new[num_key]), float(new[den_key])
+        if den <= 0:
+            print(f"ratio {label}: non-positive denominator {den}")
+            failed.append(label)
+            continue
+        ratio = num / den
+        lo = spec.get("min")
+        hi = spec.get("max")
+        ok = (lo is None or ratio >= float(lo)) and (
+            hi is None or ratio <= float(hi))
+        bounds = []
+        if lo is not None:
+            bounds.append(f">= {float(lo):.2f}")
+        if hi is not None:
+            bounds.append(f"<= {float(hi):.2f}")
+        print(f"ratio {label:<52} {ratio:6.2f}x (want {' and '.join(bounds)}) "
+              f"{'ok' if ok else 'VIOLATION'}")
+        if not ok:
+            failed.append(label)
+    return failed
 
 
 def main() -> int:
@@ -29,37 +110,21 @@ def main() -> int:
     with open(sys.argv[2]) as f:
         new = json.load(f)
 
-    shared = sorted(set(base) & set(new))
-    if not shared:
-        print(
-            "bench gate: no shared keys (baseline empty or disjoint) — gate "
-            "unarmed.\nTo arm it, bless a baseline: copy a trusted CI run's "
-            "BENCH_hotpath.json artifact to BENCH_baseline.json and commit."
-        )
-        return 0
+    ratios = base.pop("ratios", {})
+    regressed = check_absolutes(base, new)
+    ratio_failures = check_ratios(ratios, new)
 
-    regressed = []
-    for key in shared:
-        old_ns, new_ns = float(base[key]), float(new[key])
-        ratio = new_ns / old_ns if old_ns > 0 else 1.0
-        flag = "REGRESSION" if ratio > TOLERANCE else "ok"
-        print(f"{key:<60} {old_ns:>14.1f} -> {new_ns:>14.1f} ns/iter "
-              f"({ratio:5.2f}x) {flag}")
-        if ratio > TOLERANCE:
-            regressed.append(key)
-
-    extra = sorted(set(new) - set(base))
-    if extra:
-        print(f"bench gate: {len(extra)} new key(s) not in baseline "
-              f"(informational): {', '.join(extra[:5])}"
-              + (" …" if len(extra) > 5 else ""))
-
-    if regressed:
-        print(f"bench gate: FAIL — {len(regressed)} key(s) regressed "
-              f">{(TOLERANCE - 1):.0%}: {regressed}")
+    if regressed or ratio_failures:
+        if regressed:
+            print(f"bench gate: FAIL — {len(regressed)} absolute key(s) "
+                  f"regressed >{(TOLERANCE - 1):.0%}: {regressed}")
+        if ratio_failures:
+            print(f"bench gate: FAIL — {len(ratio_failures)} ratio "
+                  f"invariant(s) violated: {ratio_failures}")
         return 1
-    print(f"bench gate: OK — {len(shared)} shared key(s) within "
-          f"{(TOLERANCE - 1):.0%}")
+    print(f"bench gate: OK — {len(set(base) & set(new))} absolute key(s) "
+          f"within {(TOLERANCE - 1):.0%}, {len(ratios)} ratio invariant(s) "
+          "hold")
     return 0
 
 

@@ -17,11 +17,16 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use compass::experiments::common::{
-    base_qps_k, make_policy, offline_phase, simulate_boxed_disc,
+    base_qps, base_qps_k, make_policy, offline_phase, simulate_boxed_disc,
+    simulate_boxed_pools,
 };
 use compass::metrics::{RequestRecord, RunSummary};
-use compass::planner::{derive_plan, AqmParams, LatencyProfile, ProfiledConfig};
+use compass::planner::{
+    derive_plan, derive_plan_pools, AqmParams, LatencyProfile, ProfiledConfig,
+    ThresholdMode,
+};
 use compass::serving::monitor::LoadMonitor;
+use compass::serving::pool::{capacity_factor, parse_pools, PoolSpec};
 use compass::serving::{Discipline, Popped, RequestQueue, ShardedQueue};
 use compass::sim::LognormalService;
 use compass::util::bench::{bench, fast_mode, group, write_json, BenchResult};
@@ -277,6 +282,49 @@ fn main() {
         }
     }
 
+    // Heterogeneous pool sweep: the same spike trace through the pooled
+    // DES at three fleet shapes — a homogeneous 4-worker reference (the
+    // parity case, directly comparable to `simulate spike 180s k=4
+    // sharded`), and two fast+accurate splits. Plans are derived with
+    // per-pool thresholds; load is scaled by the fleet's capacity factor
+    // Σ w/speed so every topology runs at the same per-worker operating
+    // point. One Erlang-C derivation key tracks the planner-side cost of
+    // the waiting-probability thresholds.
+    group("hotpath: heterogeneous pool DES sweep");
+    let topologies: Vec<(&str, Vec<PoolSpec>)> = vec![
+        ("homog fast x4", vec![PoolSpec::uniform(4)]),
+        ("fast3+acc1", parse_pools("fast:3:1.0,accurate:1:2.5").unwrap()),
+        ("fast2+acc2", parse_pools("fast:2:1.0,accurate:2:2.5").unwrap()),
+    ];
+    for (name, pools) in &topologies {
+        let plan_p = derive_plan_pools(&front, AqmParams::for_slo(1000.0), pools);
+        let arrivals = generate_arrivals(&WorkloadSpec {
+            base_qps: capacity_factor(pools) * base_qps(&plan_p),
+            duration_s: 180.0,
+            pattern: Pattern::paper_spike(),
+            seed: 7,
+        });
+        let svc = LognormalService::from_plan(&plan_p, 0.10);
+        results.push(bench(
+            &format!("simulate pools spike 180s {name}"),
+            1,
+            20,
+            || {
+                let mut policy = make_policy(&plan_p, "Elastico");
+                std::hint::black_box(simulate_boxed_pools(
+                    &arrivals, &plan_p, &mut policy, &svc, 7, pools, 1,
+                ));
+            },
+        ));
+    }
+    results.push(bench("derive_plan erlang k=4 x100", 1, 20, || {
+        let params = AqmParams::for_slo_workers(1000.0, 4)
+            .with_thresholds(ThresholdMode::ErlangC);
+        for _ in 0..100 {
+            std::hint::black_box(derive_plan(&front, params));
+        }
+    }));
+
     write_json("BENCH_hotpath.json", &results).expect("write BENCH_hotpath.json");
 
     // Quick acceptance readout for the sharded-queue work: contended
@@ -310,6 +358,23 @@ fn main() {
                     b1 / bb
                 );
             }
+        }
+    }
+    // Pooled-DES readout: the pooled event loop on a homogeneous fleet
+    // should track the sharded DES cost (the gate's ratio bound), and
+    // the heterogeneous splits show the routing/spill overhead.
+    if let (Some(sharded), Some(pooled)) = (
+        find("simulate spike 180s k=4 sharded".to_string()),
+        find("simulate pools spike 180s homog fast x4".to_string()),
+    ) {
+        println!("pooled DES cost (homog k=4): {:.2}x vs sharded DES", pooled / sharded);
+    }
+    for het in ["fast3+acc1", "fast2+acc2"] {
+        if let (Some(h), Some(homog)) = (
+            find(format!("simulate pools spike 180s {het}")),
+            find("simulate pools spike 180s homog fast x4".to_string()),
+        ) {
+            println!("heterogeneous DES cost {het}: {:.2}x vs homog pools", h / homog);
         }
     }
 }

@@ -13,7 +13,8 @@
 use anyhow::Result;
 
 use super::common::{
-    base_qps_k, make_policy, offline_phase_k, simulate_boxed_disc, ExperimentCtx,
+    ctx_base_qps, make_policy, offline_phase_ctx, simulate_boxed_disc,
+    simulate_boxed_pools, ExperimentCtx,
 };
 use crate::configspace::rag_space;
 use crate::metrics::RunSummary;
@@ -116,12 +117,15 @@ fn seeding_ablation(ctx: &ExperimentCtx) -> Result<()> {
 }
 
 fn controller_ablation(ctx: &ExperimentCtx) -> Result<()> {
-    let k = ctx.workers.max(1);
-    let (_s, full) = offline_phase_k(0.75, 1e9, ctx.seed, false, k)?;
+    // The same offline phase as fig5/6/7: the derived plan carries the
+    // ctx's batch model, threshold mode and pool topology, so the
+    // ablation cells stay comparable to the figure cells of one run.
+    let k = ctx.total_workers();
+    let (_s, full) = offline_phase_ctx(ctx, 0.75, 1e9, false)?;
     let slo = 2.2 * full.ladder.last().unwrap().mean_ms;
-    let (_s2, plan) = offline_phase_k(0.75, slo, ctx.seed, false, k)?;
+    let (_s2, plan) = offline_phase_ctx(ctx, 0.75, slo, false)?;
     let arrivals = generate_arrivals(&WorkloadSpec {
-        base_qps: base_qps_k(&full, k),
+        base_qps: ctx_base_qps(ctx, &full),
         duration_s: ctx.duration_s,
         pattern: Pattern::paper_spike(),
         seed: ctx.seed,
@@ -129,7 +133,8 @@ fn controller_ablation(ctx: &ExperimentCtx) -> Result<()> {
     let svc = LognormalService::from_plan(&plan, 0.10);
 
     println!(
-        "\nAblation C — controller variants (spike, SLO {slo:.0} ms, {k} worker(s)):"
+        "\nAblation C — controller variants (spike, SLO {slo:.0} ms, {k} worker(s), {}):",
+        ctx.dispatch_desc()
     );
     let mut variants: Vec<(&str, Box<dyn ScalingPolicy>)> = vec![
         ("Elastico (asymmetric hysteresis)", make_policy(&plan, "Elastico")),
@@ -149,17 +154,29 @@ fn controller_ablation(ctx: &ExperimentCtx) -> Result<()> {
             policy,
             Box::new(crate::serving::StaticPolicy::new(0, "placeholder")),
         );
-        let out = simulate_boxed_disc(
-            &arrivals,
-            &plan,
-            &mut boxed,
-            &svc,
-            ctx.seed,
-            k,
-            ctx.discipline,
-            ctx.shards,
-            ctx.batch.max(1),
-        );
+        let out = if ctx.pools.is_empty() {
+            simulate_boxed_disc(
+                &arrivals,
+                &plan,
+                &mut boxed,
+                &svc,
+                ctx.seed,
+                k,
+                ctx.discipline,
+                ctx.shards,
+                ctx.batch.max(1),
+            )
+        } else {
+            simulate_boxed_pools(
+                &arrivals,
+                &plan,
+                &mut boxed,
+                &svc,
+                ctx.seed,
+                &ctx.pools,
+                ctx.batch.max(1),
+            )
+        };
         let s = RunSummary::compute(&out.records, &out.switches, slo, plan.ladder.len());
         println!(
             "  {:<36} SLO {:>5.1}%  acc {:.3}  switches {:>4}",

@@ -10,12 +10,13 @@ use crate::metrics::{RequestRecord, RunSummary, SwitchEvent};
 use crate::oracle::rag::RagLandscape;
 use crate::oracle::{Landscape, RagOracle};
 use crate::planner::{
-    derive_plan, pareto_front, profile_config, AqmParams, LatencyProfile, Plan,
-    ProfiledConfig,
+    derive_plan, derive_plan_pools, pareto_front, profile_config, AqmParams,
+    LatencyProfile, Plan, ProfiledConfig, ThresholdMode,
 };
 use crate::runtime::artifacts_dir;
 use crate::search::{CompassV, CompassVParams};
 use crate::serving::executor::WorkflowEngine;
+use crate::serving::pool::{capacity_factor, total_workers, PoolSpec};
 use crate::serving::{
     serve, Discipline, ElasticoPolicy, ScalingPolicy, ServeOptions, StaticPolicy,
 };
@@ -48,6 +49,13 @@ pub struct ExperimentCtx {
     /// batch-aware AQM model and serving cells (live and simulated)
     /// dispatch in batches of up to B.
     pub batch: usize,
+    /// Heterogeneous pool topology for serving cells (empty = the
+    /// homogeneous `workers` runtime). Plans are derived with per-pool
+    /// thresholds and cells run the pooled server/DES.
+    pub pools: Vec<PoolSpec>,
+    /// Threshold derivation rule (legacy k-scaling by default; `erlang`
+    /// = Erlang-C waiting-probability thresholds).
+    pub thresholds: ThresholdMode,
     /// Output directory for CSVs.
     pub out_dir: PathBuf,
 }
@@ -62,7 +70,33 @@ impl Default for ExperimentCtx {
             discipline: Discipline::CentralFifo,
             shards: 0,
             batch: 1,
+            pools: Vec::new(),
+            thresholds: ThresholdMode::Legacy,
             out_dir: results_dir(),
+        }
+    }
+}
+
+impl ExperimentCtx {
+    /// Total executor workers of the cell's fleet.
+    pub fn total_workers(&self) -> usize {
+        if self.pools.is_empty() {
+            self.workers.max(1)
+        } else {
+            total_workers(&self.pools)
+        }
+    }
+
+    /// One-line dispatch description for experiment headers.
+    pub fn dispatch_desc(&self) -> String {
+        if self.pools.is_empty() {
+            format!("{} dispatch", self.discipline.name())
+        } else {
+            format!(
+                "pools {} ({} thresholds)",
+                crate::serving::pool::describe_pools(&self.pools),
+                self.thresholds.name()
+            )
         }
     }
 }
@@ -187,6 +221,25 @@ pub fn offline_phase_kb(
     workers: usize,
     batch: usize,
 ) -> Result<(ConfigSpace, Plan)> {
+    offline_phase_full(tau, slo_ms, seed, live, workers, batch, ThresholdMode::Legacy, &[])
+}
+
+/// The fully-general offline phase: [`offline_phase_kb`] plus the
+/// threshold derivation rule and an optional heterogeneous pool
+/// topology (`pools` non-empty ⇒ per-pool thresholds via
+/// [`derive_plan_pools`]; `workers` is then ignored in favor of the
+/// pool worker counts).
+#[allow(clippy::too_many_arguments)]
+pub fn offline_phase_full(
+    tau: f64,
+    slo_ms: f64,
+    seed: u64,
+    live: bool,
+    workers: usize,
+    batch: usize,
+    thresholds: ThresholdMode,
+    pools: &[PoolSpec],
+) -> Result<(ConfigSpace, Plan)> {
     let space = rag_space();
     let mut oracle = RagOracle::new_rag(seed);
     let result = CompassV::new(CompassVParams {
@@ -238,11 +291,39 @@ pub fn offline_phase_kb(
     } else {
         0.0
     };
-    let plan = derive_plan(
-        &front,
-        AqmParams::for_slo_workers(slo_ms, workers).with_batch(batch, alpha_ms),
-    );
+    let workers_eff = if pools.is_empty() {
+        workers
+    } else {
+        total_workers(pools)
+    };
+    let params = AqmParams::for_slo_workers(slo_ms, workers_eff)
+        .with_batch(batch, alpha_ms)
+        .with_thresholds(thresholds);
+    let plan = if pools.is_empty() {
+        derive_plan(&front, params)
+    } else {
+        derive_plan_pools(&front, params, pools)
+    };
     Ok((space, plan))
+}
+
+/// [`offline_phase_full`] with the serving knobs of an experiment ctx.
+pub fn offline_phase_ctx(
+    ctx: &ExperimentCtx,
+    tau: f64,
+    slo_ms: f64,
+    live: bool,
+) -> Result<(ConfigSpace, Plan)> {
+    offline_phase_full(
+        tau,
+        slo_ms,
+        ctx.seed,
+        live,
+        ctx.workers.max(1),
+        ctx.batch.max(1),
+        ctx.thresholds,
+        &ctx.pools,
+    )
 }
 
 /// The three SLO targets, as multiples of the slowest rung's mean (the
@@ -260,6 +341,18 @@ pub fn base_qps(full_plan: &Plan) -> f64 {
 /// the paper's figures is preserved at every k.
 pub fn base_qps_k(full_plan: &Plan, workers: usize) -> f64 {
     workers.max(1) as f64 * base_qps(full_plan)
+}
+
+/// Base load for a cell's fleet: the homogeneous k-scaling, or — on a
+/// heterogeneous topology — the pool capacity factor `Σ wₚ/speedₚ`, so
+/// slower pools contribute proportionally less offered load and the
+/// reference per-worker operating point is preserved.
+pub fn ctx_base_qps(ctx: &ExperimentCtx, full_plan: &Plan) -> f64 {
+    if ctx.pools.is_empty() {
+        base_qps_k(full_plan, ctx.workers.max(1))
+    } else {
+        capacity_factor(&ctx.pools) * base_qps(full_plan)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -321,6 +414,10 @@ pub fn run_cell(
         let space2 = space.clone();
         let plan2 = plan.clone();
         let seed = ctx.seed;
+        // On a heterogeneous topology every pool shares the one live
+        // engine factory (real compute cannot be speed-scaled; the
+        // PoolSpec's speed factor is advisory live) but each pool still
+        // resolves its own band rung inside serve().
         let out = serve(
             move || {
                 let configs: Vec<Config> =
@@ -340,6 +437,7 @@ pub fn run_cell(
                 discipline: ctx.discipline,
                 shards: ctx.shards,
                 batch: ctx.batch.max(1),
+                pools: ctx.pools.clone(),
                 ..ServeOptions::default()
             },
         )?;
@@ -347,17 +445,29 @@ pub fn run_cell(
     } else {
         let svc = LognormalService::from_plan(plan, 0.10);
         let mut policy = policy;
-        let out = simulate_boxed_disc(
-            &arrivals,
-            plan,
-            &mut policy,
-            &svc,
-            ctx.seed,
-            ctx.workers.max(1),
-            ctx.discipline,
-            ctx.shards,
-            ctx.batch.max(1),
-        );
+        let out = if ctx.pools.is_empty() {
+            simulate_boxed_disc(
+                &arrivals,
+                plan,
+                &mut policy,
+                &svc,
+                ctx.seed,
+                ctx.workers.max(1),
+                ctx.discipline,
+                ctx.shards,
+                ctx.batch.max(1),
+            )
+        } else {
+            simulate_boxed_pools(
+                &arrivals,
+                plan,
+                &mut policy,
+                &svc,
+                ctx.seed,
+                &ctx.pools,
+                ctx.batch.max(1),
+            )
+        };
         (out.records, out.switches)
     };
     let summary = RunSummary::compute(&records, &switches, cell.slo_ms, plan.ladder.len());
@@ -397,6 +507,23 @@ pub fn simulate_boxed_k(
     )
 }
 
+/// Boxed-policy shim for the object-safety helpers below.
+struct Shim<'a>(&'a mut Box<dyn ScalingPolicy>);
+impl ScalingPolicy for Shim<'_> {
+    fn decide(&mut self, now_ms: f64, depth: usize) -> usize {
+        self.0.decide(now_ms, depth)
+    }
+    fn current(&self) -> usize {
+        self.0.current()
+    }
+    fn name(&self) -> String {
+        self.0.name()
+    }
+    fn no_switch_band(&self) -> Option<(usize, usize)> {
+        self.0.no_switch_band()
+    }
+}
+
 /// `simulate_disc` over a boxed policy (object safety helper).
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_boxed_disc(
@@ -410,25 +537,24 @@ pub fn simulate_boxed_disc(
     shards: usize,
     batch: usize,
 ) -> crate::sim::SimOutcome {
-    struct Shim<'a>(&'a mut Box<dyn ScalingPolicy>);
-    impl ScalingPolicy for Shim<'_> {
-        fn decide(&mut self, now_ms: f64, depth: usize) -> usize {
-            self.0.decide(now_ms, depth)
-        }
-        fn current(&self) -> usize {
-            self.0.current()
-        }
-        fn name(&self) -> String {
-            self.0.name()
-        }
-        fn no_switch_band(&self) -> Option<(usize, usize)> {
-            self.0.no_switch_band()
-        }
-    }
     let mut shim = Shim(policy);
     crate::sim::simulate_disc(
         arrivals, plan, &mut shim, svc, seed, workers, discipline, shards, batch,
     )
+}
+
+/// `simulate_pools` over a boxed policy (object safety helper).
+pub fn simulate_boxed_pools(
+    arrivals: &[f64],
+    plan: &Plan,
+    policy: &mut Box<dyn ScalingPolicy>,
+    svc: &LognormalService,
+    seed: u64,
+    pools: &[PoolSpec],
+    batch: usize,
+) -> crate::sim::SimOutcome {
+    let mut shim = Shim(policy);
+    crate::sim::simulate_pools(arrivals, plan, &mut shim, svc, seed, pools, batch)
 }
 
 #[cfg(test)]
@@ -499,6 +625,47 @@ mod tests {
         for w in pb.ladder.windows(2) {
             assert!(w[0].upscale_threshold >= w[1].upscale_threshold);
         }
+    }
+
+    #[test]
+    fn offline_phase_full_defaults_reproduce_offline_phase_kb() {
+        // Legacy thresholds + no pools must be byte-equal to the
+        // pre-pool offline phase (the `--thresholds legacy` default
+        // keeps every existing figure baseline unchanged).
+        let (_s1, a) = offline_phase_kb(0.75, 1000.0, 3, false, 2, 4).unwrap();
+        let (_s2, b) = offline_phase_full(
+            0.75, 1000.0, 3, false, 2, 4, ThresholdMode::Legacy, &[],
+        )
+        .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn offline_phase_full_pooled_carries_the_topology() {
+        let pools =
+            crate::serving::pool::parse_pools("fast:4:1.0,accurate:2:2.5").unwrap();
+        let (_s, plan) = offline_phase_full(
+            0.75, 1500.0, 3, false, 1, 1, ThresholdMode::ErlangC, &pools,
+        )
+        .unwrap();
+        assert_eq!(plan.pools, pools);
+        assert_eq!(plan.workers, 6);
+        assert!(!plan.ladder.is_empty());
+        // Eq. 11 must hold across pool band boundaries too.
+        for w in plan.ladder.windows(2) {
+            assert!(w[0].upscale_threshold >= w[1].upscale_threshold);
+        }
+    }
+
+    #[test]
+    fn ctx_base_qps_uses_the_pool_capacity_factor() {
+        let (_s, plan) = offline_phase(0.75, 1000.0, 3, false).unwrap();
+        let mut ctx = ExperimentCtx { workers: 4, ..ExperimentCtx::default() };
+        assert!((ctx_base_qps(&ctx, &plan) - base_qps_k(&plan, 4)).abs() < 1e-12);
+        // fast:2@1x + slow:2@2x = 3 reference-workers of capacity.
+        ctx.pools = crate::serving::pool::parse_pools("fast:2:1.0,slow:2:2.0").unwrap();
+        assert!((ctx_base_qps(&ctx, &plan) - 3.0 * base_qps(&plan)).abs() < 1e-9);
+        assert_eq!(ctx.total_workers(), 4);
     }
 
     #[test]

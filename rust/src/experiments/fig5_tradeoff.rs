@@ -6,7 +6,7 @@
 use anyhow::Result;
 
 use super::common::{
-    base_qps_k, offline_phase_kb, run_cell, Cell, ExperimentCtx, POLICIES,
+    ctx_base_qps, offline_phase_ctx, run_cell, Cell, ExperimentCtx, POLICIES,
     SLO_FACTORS,
 };
 use crate::util::csv::CsvWriter;
@@ -15,13 +15,12 @@ use crate::workload::Pattern;
 pub fn run(ctx: &ExperimentCtx) -> Result<()> {
     // Offline phase once: the full front drives the static baselines and
     // the (SLO-independent) base load; per-SLO plans re-derive thresholds
-    // for Elastico. Both carry the cell's worker count so the thresholds
-    // and load match the pool run_cell drives.
-    let k = ctx.workers.max(1);
+    // for Elastico. Both carry the cell's fleet topology so the
+    // thresholds and load match the pool(s) run_cell drives.
     let b = ctx.batch.max(1);
-    let (_s, full) = offline_phase_kb(0.75, 1e9, ctx.seed, ctx.live, k, b)?;
+    let (_s, full) = offline_phase_ctx(ctx, 0.75, 1e9, ctx.live)?;
     let slowest_mean = full.ladder.last().unwrap().mean_ms;
-    let qps = base_qps_k(&full, k);
+    let qps = ctx_base_qps(ctx, &full);
 
     let mut csv = CsvWriter::create(
         &ctx.out_dir.join("fig5_tradeoff.csv"),
@@ -33,10 +32,10 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
 
     println!(
         "Fig.5: serving cells ({}; {}s per cell, base utilization 0.45, \
-         {} dispatch, batch {b})",
+         {}, batch {b})",
         if ctx.live { "LIVE serving" } else { "discrete-event sim of live profiles" },
         ctx.duration_s,
-        ctx.discipline.name()
+        ctx.dispatch_desc()
     );
 
     // Aggregates for the headline claims.
@@ -50,7 +49,7 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
     ] {
         for factor in SLO_FACTORS {
             let slo = factor * slowest_mean;
-            let (space, plan) = offline_phase_kb(0.75, slo, ctx.seed, false, k, b)?;
+            let (space, plan) = offline_phase_ctx(ctx, 0.75, slo, false)?;
             println!(
                 "\n-- pattern={pattern_name} SLO={slo:.0}ms (Elastico ladder {} rungs) --",
                 plan.ladder.len()

@@ -4,7 +4,7 @@
 use anyhow::Result;
 
 use super::common::{
-    base_qps_k, offline_phase_kb, run_cell, Cell, ExperimentCtx, POLICIES,
+    ctx_base_qps, offline_phase_ctx, run_cell, Cell, ExperimentCtx, POLICIES,
     SLO_FACTORS,
 };
 use crate::metrics::latency_cdf;
@@ -12,12 +12,12 @@ use crate::util::csv::CsvWriter;
 use crate::workload::Pattern;
 
 pub fn run(ctx: &ExperimentCtx) -> Result<()> {
-    let k = ctx.workers.max(1);
+    let k = ctx.total_workers();
     let b = ctx.batch.max(1);
-    let (_s, full) = offline_phase_kb(0.75, 1e9, ctx.seed, ctx.live, k, b)?;
+    let (_s, full) = offline_phase_ctx(ctx, 0.75, 1e9, ctx.live)?;
     let slo = SLO_FACTORS[1] * full.ladder.last().unwrap().mean_ms;
-    let (space, plan) = offline_phase_kb(0.75, slo, ctx.seed, false, k, b)?;
-    let qps = base_qps_k(&full, k);
+    let (space, plan) = offline_phase_ctx(ctx, 0.75, slo, false)?;
+    let qps = ctx_base_qps(ctx, &full);
 
     let mut csv = CsvWriter::create(
         &ctx.out_dir.join("fig6_cdf.csv"),
@@ -26,8 +26,8 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
 
     println!(
         "Fig.6: latency CDFs, spike pattern, SLO {slo:.0} ms, {k} worker(s), \
-         {} dispatch, batch {b}",
-        ctx.discipline.name()
+         {}, batch {b}",
+        ctx.dispatch_desc()
     );
     for policy in POLICIES {
         let cell = Cell {

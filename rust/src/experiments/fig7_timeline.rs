@@ -5,24 +5,24 @@
 use anyhow::Result;
 
 use super::common::{
-    base_qps_k, offline_phase_kb, run_cell, Cell, ExperimentCtx, SLO_FACTORS,
+    ctx_base_qps, offline_phase_ctx, run_cell, Cell, ExperimentCtx, SLO_FACTORS,
 };
 use crate::metrics::report::{write_records_csv, write_switches_csv};
 use crate::workload::Pattern;
 
 pub fn run(ctx: &ExperimentCtx) -> Result<()> {
-    let k = ctx.workers.max(1);
+    let k = ctx.total_workers();
     let b = ctx.batch.max(1);
-    let (_s, full) = offline_phase_kb(0.75, 1e9, ctx.seed, ctx.live, k, b)?;
+    let (_s, full) = offline_phase_ctx(ctx, 0.75, 1e9, ctx.live)?;
     let slo = SLO_FACTORS[1] * full.ladder.last().unwrap().mean_ms;
-    let (space, plan) = offline_phase_kb(0.75, slo, ctx.seed, false, k, b)?;
+    let (space, plan) = offline_phase_ctx(ctx, 0.75, slo, false)?;
 
     let cell = Cell {
         pattern_name: "spike",
         pattern: Pattern::paper_spike(),
         slo_ms: slo,
         policy_name: "Elastico".into(),
-        base_qps: base_qps_k(&full, k),
+        base_qps: ctx_base_qps(ctx, &full),
     };
     let (records, switches, summary) = run_cell(ctx, &space, &plan, &cell)?;
 
@@ -33,10 +33,10 @@ pub fn run(ctx: &ExperimentCtx) -> Result<()> {
     let spike = (dur_ms / 3.0, 2.0 * dur_ms / 3.0);
     println!(
         "Fig.7: Elastico timeline, spike during [{:.0}s, {:.0}s], SLO {slo:.0} ms, \
-         {k} worker(s), {} dispatch, batch {b}",
+         {k} worker(s), {}, batch {b}",
         spike.0 / 1000.0,
         spike.1 / 1000.0,
-        ctx.discipline.name()
+        ctx.dispatch_desc()
     );
     println!("  switches ({} total):", switches.len());
     for s in switches.iter().take(20) {

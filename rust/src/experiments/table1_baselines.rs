@@ -4,17 +4,18 @@
 
 use anyhow::Result;
 
-use super::common::{offline_phase_k, ExperimentCtx, SLO_FACTORS};
+use super::common::{offline_phase_ctx, ExperimentCtx, SLO_FACTORS};
 use crate::planner::Plan;
 use crate::util::csv::CsvWriter;
 
 pub fn run(ctx: &ExperimentCtx) -> Result<Plan> {
     // SLO used for threshold display: the middle target (≙ paper 1000ms).
-    let k = ctx.workers.max(1);
-    let (_space, probe) = offline_phase_k(0.75, 1e9, ctx.seed, ctx.live, k)?;
+    // The ctx-aware offline phase keeps the rendered thresholds
+    // consistent with the batch/threshold-mode/pool flags of the run.
+    let (_space, probe) = offline_phase_ctx(ctx, 0.75, 1e9, ctx.live)?;
     let slowest = probe.ladder.last().unwrap().mean_ms;
     let slo = SLO_FACTORS[1] * slowest;
-    let (_space, plan) = offline_phase_k(0.75, slo, ctx.seed, ctx.live, k)?;
+    let (_space, plan) = offline_phase_ctx(ctx, 0.75, slo, ctx.live)?;
 
     println!(
         "Table I: Pareto front at tau=0.75 ({}; SLO for thresholds: {:.0} ms)",

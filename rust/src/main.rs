@@ -20,11 +20,11 @@ use anyhow::{bail, Result};
 use compass::configspace::{detection_space, rag_space};
 use compass::experiments::{self, ExperimentCtx};
 use compass::oracle::{DetectionOracle, RagOracle};
-use compass::planner::profile_config;
+use compass::planner::{profile_config, ThresholdMode};
 use compass::runtime::artifacts_dir;
 use compass::search::{grid_search, BudgetSchedule, CompassV, CompassVParams};
 use compass::serving::executor::WorkflowEngine;
-use compass::serving::{serve, Discipline, ServeOptions};
+use compass::serving::{parse_pools, serve, Discipline, PoolSpec, ServeOptions};
 use compass::util::results_dir;
 use compass::workflows::rag::RagWorkflow;
 use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
@@ -80,6 +80,25 @@ fn get_discipline(opts: &HashMap<String, String>) -> Result<Discipline> {
     }
 }
 
+/// Parse `--pools name:workers:speed[:offset],...` (empty = homogeneous).
+fn get_pools(opts: &HashMap<String, String>) -> Result<Vec<PoolSpec>> {
+    match opts.get("pools") {
+        None => Ok(Vec::new()),
+        Some(v) => parse_pools(v),
+    }
+}
+
+/// Parse `--thresholds legacy|erlang` (default legacy — bit-for-bit the
+/// seed threshold derivation).
+fn get_thresholds(opts: &HashMap<String, String>) -> Result<ThresholdMode> {
+    match opts.get("thresholds") {
+        None => Ok(ThresholdMode::Legacy),
+        Some(v) => ThresholdMode::parse(v).ok_or_else(|| {
+            anyhow::anyhow!("--thresholds expects legacy|erlang, got {v}")
+        }),
+    }
+}
+
 fn dispatch(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else {
         print_help();
@@ -102,6 +121,8 @@ fn dispatch(args: &[String]) -> Result<()> {
                 discipline: get_discipline(&opts)?,
                 shards: get_f64(&opts, "shards", 0.0)?.max(0.0) as usize,
                 batch: get_f64(&opts, "batch", 1.0)?.max(1.0) as usize,
+                pools: get_pools(&opts)?,
+                thresholds: get_thresholds(&opts)?,
                 out_dir: results_dir(),
             };
             experiments::run(id, &ctx)
@@ -126,16 +147,19 @@ fn print_help() {
          \x20             [--workflow rag|detection] [--tau T] [--seed N]\n\
          \x20 plan        offline phase: search + profile + Pareto + AQM plan\n\
          \x20             [--tau T] [--slo MS] [--workers K] [--batch B] [--live]\n\
+         \x20             [--pools n:w:speed[:rung],...] [--thresholds legacy|erlang]\n\
          \x20             [--out FILE]\n\
          \x20 serve       one live serving run over the AOT artifacts\n\
          \x20             [--slo MS] [--duration S] [--pattern spike|bursty|steady]\n\
          \x20             [--policy Elastico|Static-Fast|Static-Medium|Static-Accurate]\n\
          \x20             [--workers K] [--discipline central|sharded] [--shards N]\n\
-         \x20             [--batch B]\n\
+         \x20             [--batch B] [--pools fast:4:1.0,accurate:2:2.5]\n\
+         \x20             [--thresholds legacy|erlang]\n\
          \x20 experiment  regenerate paper figures/tables -> results/*.csv\n\
          \x20             <fig1|fig3|fig4|table1|fig5|fig6|fig7|all> [--live] [--duration S]\n\
          \x20             [--workers K] [--discipline central|sharded] [--shards N]\n\
-         \x20             [--batch B]\n\
+         \x20             [--batch B] [--pools n:w:speed[:rung],...]\n\
+         \x20             [--thresholds legacy|erlang]\n\
          \x20 profile     per-component latency table over the artifacts [--live]\n"
     );
 }
@@ -211,6 +235,8 @@ fn cmd_plan(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
     let live = opts.contains_key("live");
     let workers = get_f64(opts, "workers", 1.0)?.max(1.0) as usize;
     let batch = get_f64(opts, "batch", 1.0)?.max(1.0) as usize;
+    let pools = get_pools(opts)?;
+    let thresholds = get_thresholds(opts)?;
     // Default SLO: 2.2x the slowest rung (≙ the paper's 1000 ms target).
     let slo = match opts.get("slo") {
         Some(v) => v.parse::<f64>()?,
@@ -220,8 +246,8 @@ fn cmd_plan(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
             2.2 * probe.ladder.last().unwrap().mean_ms
         }
     };
-    let (_space, plan) = compass::experiments::common::offline_phase_kb(
-        tau, slo, seed, live, workers, batch,
+    let (_space, plan) = compass::experiments::common::offline_phase_full(
+        tau, slo, seed, live, workers, batch, thresholds, &pools,
     )?;
     print!("{}", plan.render());
     if let Some(path) = opts.get("out") {
@@ -238,6 +264,8 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
     let discipline = get_discipline(opts)?;
     let shards = get_f64(opts, "shards", 0.0)?.max(0.0) as usize;
     let batch = get_f64(opts, "batch", 1.0)?.max(1.0) as usize;
+    let pools = get_pools(opts)?;
+    let thresholds = get_thresholds(opts)?;
     let policy_name = opts
         .get("policy")
         .cloned()
@@ -255,25 +283,35 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         Some(v) => v.parse::<f64>()?,
         None => 2.2 * probe.ladder.last().unwrap().mean_ms,
     };
-    let (space, plan) = compass::experiments::common::offline_phase_kb(
-        tau, slo, seed, false, workers, batch,
+    let (space, plan) = compass::experiments::common::offline_phase_full(
+        tau, slo, seed, false, workers, batch, thresholds, &pools,
     )?;
-    println!("Serving plan (SLO {slo:.0} ms):");
+    println!("Serving plan (SLO {slo:.0} ms, {} thresholds):", thresholds.name());
     print!("{}", plan.render());
 
-    let spec = WorkloadSpec {
-        base_qps: compass::experiments::common::base_qps_k(&probe, workers),
-        duration_s: duration,
-        pattern,
-        seed,
+    let total_workers = if pools.is_empty() {
+        workers
+    } else {
+        compass::serving::pool::total_workers(&pools)
     };
+    let base_qps = if pools.is_empty() {
+        compass::experiments::common::base_qps_k(&probe, workers)
+    } else {
+        compass::serving::pool::capacity_factor(&pools)
+            * compass::experiments::common::base_qps(&probe)
+    };
+    let spec = WorkloadSpec { base_qps, duration_s: duration, pattern, seed };
     let arrivals = generate_arrivals(&spec);
     println!(
         "Live serving: {} arrivals over {duration}s (base {:.2} qps), \
-         policy {policy_name}, {workers} worker(s), {} dispatch, batch {batch}",
+         policy {policy_name}, {total_workers} worker(s), {}, batch {batch}",
         arrivals.len(),
         spec.base_qps,
-        discipline.name()
+        if pools.is_empty() {
+            format!("{} dispatch", discipline.name())
+        } else {
+            format!("pools {}", compass::serving::pool::describe_pools(&pools))
+        }
     );
 
     let policy = compass::experiments::common::make_policy(&plan, &policy_name);
@@ -289,7 +327,14 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         },
         policy,
         &arrivals,
-        &ServeOptions { workers, discipline, shards, batch, ..ServeOptions::default() },
+        &ServeOptions {
+            workers,
+            discipline,
+            shards,
+            batch,
+            pools: pools.clone(),
+            ..ServeOptions::default()
+        },
     )?;
     let summary = compass::metrics::RunSummary::compute(
         &out.records,
@@ -305,9 +350,17 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         println!("  measured success rate: {rate:.3}");
     }
     println!(
-        "  rejected: {}, steals: {}, final rate {:.2} qps",
-        out.rejected, out.steals, out.final_rate_qps
+        "  rejected: {}, steals: {}, spills: {}, final rate {:.2} qps",
+        out.rejected, out.steals, out.spills, out.final_rate_qps
     );
+    if !pools.is_empty() {
+        for (p, spec) in pools.iter().enumerate() {
+            println!(
+                "  pool {:<12} routed {:>6}  served {:>6}",
+                spec.name, out.pool_arrivals[p], out.pool_served[p]
+            );
+        }
+    }
     Ok(())
 }
 

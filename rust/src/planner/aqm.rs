@@ -56,9 +56,84 @@
 //! (`s̄(B) ≈ B·s̄(1)`) — the slack shrinks, rungs drop off the feasible
 //! ladder, and the model correctly says "don't batch". `B = 1`
 //! reproduces every existing threshold bit-for-bit regardless of `α`.
+//!
+//! ## Erlang-C thresholds (`--thresholds erlang`)
+//!
+//! The k-scaled rule above charges an arrival the full drain time of
+//! everything queued ahead of it: `N` queued requests cost `N·s̄/k`, so
+//! `N↑ = ⌊k·Δ/s̄⌋`. That is the *conditional* wait — conditioned on the
+//! arrival actually having to queue. For a k-server pool the
+//! unconditional picture is kinder: by Erlang-C, an arrival to an
+//! M/M/k at offered load `a = kρ` waits at all only with probability
+//! `C(k, a)` ([`crate::sim::theory::erlang_c`]), and `C` falls fast as
+//! servers are added at fixed ρ. The SLO is a P95 over *all* requests,
+//! so when `C < 1` part of the tail mass is already covered by the
+//! never-waiting fraction and the depth budget grows by `1/C`:
+//!
+//! ```text
+//! N↑k = ⌊ k·Δk / (s̄k · C(k, k·ρ̂)) ⌋        (ErlangC mode, Eq. 10')
+//! ```
+//!
+//! with the operating utilization `ρ̂` = [`AqmParams::target_rho`] (the
+//! paper's fixed 0.45 operating point by default) and the analogous
+//! substitution in Eq. 13. At `k = 1`, `C(1, ρ̂) = ρ̂`, so even a single
+//! server gains headroom over the legacy rule — which is why **legacy
+//! stays the default**: [`ThresholdMode::Legacy`] keeps every seed
+//! threshold bit-for-bit, and Erlang-C mode is validated against the
+//! DES by `tests/theory_validation.rs` (the waiting-probability and
+//! mean-wait checks) rather than assumed. This is an approximation —
+//! service is G, not M, and ρ̂ is an assumption, not a measurement — but
+//! it accounts for multi-server waiting probability directly instead of
+//! pretending k servers are one k-times-faster server.
+//!
+//! ## Per-pool thresholds ([`derive_plan_pools`])
+//!
+//! On a heterogeneous fleet the rung bands partition the ladder across
+//! pools (see [`crate::serving::pool`]): rung `r` is drained by the pool
+//! that owns it, with that pool's `workers` and `speed_factor`. Its
+//! thresholds are therefore derived from the *owning pool's* parameters
+//! — service times scaled by `speed_factor`, `w` = the pool's worker
+//! count, and (in Erlang-C mode) `C` computed for that pool's size —
+//! because the per-pool depth signal the policy observes under pooled
+//! serving is that pool's backlog, drained by that pool alone (spill is
+//! a scavenging path, not provisioned capacity, so the derivation
+//! conservatively ignores it). A single reference pool (speed 1, offset
+//! 0, `workers = k`) reproduces [`derive_plan`] threshold-for-threshold.
 
 use super::pareto::ProfiledConfig;
 use super::plan::{ConfigPolicy, Plan};
+use crate::serving::pool::{pool_of_rung, validate_pools, PoolSpec};
+use crate::sim::theory::erlang_c;
+
+/// How queue-depth thresholds account for the worker pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ThresholdMode {
+    /// The seed rule: thresholds scale linearly with k (`N↑ = ⌊k·Δ/s̄⌋`).
+    /// Bit-for-bit the pre-pool derivation — the default.
+    Legacy,
+    /// Erlang-C waiting-probability thresholds (`N↑ = ⌊k·Δ/(s̄·C)⌋`,
+    /// Eq. 10' above).
+    ErlangC,
+}
+
+impl ThresholdMode {
+    /// Parse a CLI spelling (`legacy` | `erlang`).
+    pub fn parse(s: &str) -> Option<ThresholdMode> {
+        match s {
+            "legacy" | "linear" => Some(ThresholdMode::Legacy),
+            "erlang" | "erlang-c" | "erlangc" => Some(ThresholdMode::ErlangC),
+            _ => None,
+        }
+    }
+
+    /// Display name (reports/CSV headers).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ThresholdMode::Legacy => "legacy",
+            ThresholdMode::ErlangC => "erlang",
+        }
+    }
+}
 
 /// AQM derivation parameters.
 #[derive(Clone, Copy, Debug)]
@@ -81,6 +156,13 @@ pub struct AqmParams {
     /// `s̄(B) = α + β·B`, fit by the profiler; clamped per rung into
     /// `[0, s̄_k(1)]` at derivation. Irrelevant at `batch == 1`.
     pub batch_alpha_ms: f64,
+    /// Threshold derivation rule (legacy k-scaling by default; see the
+    /// module docs for the Erlang-C alternative).
+    pub thresholds: ThresholdMode,
+    /// Assumed operating utilization ρ̂ for Erlang-C mode (the paper's
+    /// fixed 0.45 operating point by default). Ignored under
+    /// [`ThresholdMode::Legacy`].
+    pub target_rho: f64,
 }
 
 impl AqmParams {
@@ -96,6 +178,8 @@ impl AqmParams {
             workers: 1,
             batch: 1,
             batch_alpha_ms: 0.0,
+            thresholds: ThresholdMode::Legacy,
+            target_rho: 0.45,
         }
     }
 
@@ -113,6 +197,35 @@ impl AqmParams {
             ..self
         }
     }
+
+    /// Same params under another threshold derivation rule.
+    pub fn with_thresholds(self, thresholds: ThresholdMode) -> AqmParams {
+        AqmParams { thresholds, ..self }
+    }
+
+    /// Same params with an assumed operating utilization for Erlang-C
+    /// mode (clamped into `(0, 0.99]` at derivation).
+    pub fn with_rho(self, target_rho: f64) -> AqmParams {
+        AqmParams { target_rho, ..self }
+    }
+}
+
+/// Depth budget of one rung: how many queued requests its pool can
+/// absorb within the slack. Legacy: the linear k-scaling (Eq. 10).
+/// Erlang-C: the same budget divided by the pool's waiting probability
+/// `C(k, k·ρ̂)` (Eq. 10', module docs); `C ≤ 1`, so Erlang-C thresholds
+/// are never shallower than legacy at the same (w, slack, s̄).
+fn depth_budget(params: &AqmParams, w: f64, slack: f64, eff_mean: f64) -> f64 {
+    let linear = w * slack / eff_mean;
+    match params.thresholds {
+        ThresholdMode::Legacy => linear,
+        ThresholdMode::ErlangC => {
+            let k = (w as usize).max(1);
+            let rho = params.target_rho.clamp(0.01, 0.99);
+            let c = erlang_c(k, k as f64 * rho).max(1e-9);
+            linear / c
+        }
+    }
 }
 
 /// Derive the switching plan from a Pareto ladder (ordered by increasing
@@ -121,8 +234,34 @@ impl AqmParams {
 /// SLO and are excluded") — except that the *fastest* surviving
 /// configuration is always kept if the ladder would otherwise be empty,
 /// so the system degrades to best-effort rather than refusing to serve.
+///
+/// This is the homogeneous-fleet case of [`derive_plan_pools`]: one
+/// reference pool of `params.workers` executors (the delegation is
+/// exact — thresholds are bit-for-bit the pre-pool derivation).
 pub fn derive_plan(front: &[ProfiledConfig], params: AqmParams) -> Plan {
+    let mut plan = derive_plan_pools(
+        front,
+        params,
+        &[PoolSpec::uniform(params.workers.max(1))],
+    );
+    // The homogeneous derivation produces a topology-free plan.
+    plan.pools = Vec::new();
+    plan
+}
+
+/// Derive the switching plan for a heterogeneous fleet of named worker
+/// pools: each rung's thresholds come from the pool that owns its band
+/// (that pool's worker count, speed-scaled service times and — under
+/// [`ThresholdMode::ErlangC`] — that pool's waiting probability). See
+/// the module docs; a single reference pool reproduces [`derive_plan`]
+/// threshold-for-threshold.
+pub fn derive_plan_pools(
+    front: &[ProfiledConfig],
+    params: AqmParams,
+    pools: &[PoolSpec],
+) -> Plan {
     assert!(!front.is_empty(), "empty pareto front");
+    validate_pools(pools).expect("invalid pool topology");
     for w in front.windows(2) {
         assert!(
             w[0].latency.mean_ms <= w[1].latency.mean_ms,
@@ -131,47 +270,68 @@ pub fn derive_plan(front: &[ProfiledConfig], params: AqmParams) -> Plan {
     }
 
     let b = params.batch.max(1) as f64;
-    // Batch service-time model per rung: s̄(B) = α + β·B with
-    // β = s̄(1) - α (α clamped into [0, s̄(1)]). Returns the effective
-    // per-request service time s̄(B)/B (Eq. 10/13's drain-rate term) and
-    // the batch-inflated service tail s95·s̄(B)/s̄(1) (Eq. 7's
-    // reservation). Both reduce to (mean, p95) exactly at B = 1.
-    let batched = |c: &ProfiledConfig| -> (f64, f64) {
-        let mean = c.latency.mean_ms;
+    // Batch service-time model per rung under its executing pool:
+    // s̄(B) = α + β·B with β = s̄(1) - α (α clamped into [0, s̄(1)] of the
+    // pool-scaled service time). Returns the effective per-request
+    // service time s̄(B)/B (Eq. 10/13's drain-rate term) and the
+    // batch-inflated service tail s95·s̄(B)/s̄(1) (Eq. 7's reservation).
+    // Both reduce to the pool-scaled (mean, p95) exactly at B = 1, and
+    // to the raw profile on a reference pool.
+    let batched = |c: &ProfiledConfig, speed: f64| -> (f64, f64) {
+        let lat = c.latency.scaled(speed);
+        let mean = lat.mean_ms;
         let alpha = params.batch_alpha_ms.clamp(0.0, mean);
         let sbar_b = alpha + (mean - alpha) * b; // s̄(B)
-        (sbar_b / b, c.latency.p95_ms * (sbar_b / mean))
+        (sbar_b / b, lat.p95_ms * (sbar_b / mean))
     };
+    let speed_of_rung =
+        |rung: usize| pools[pool_of_rung(pools, rung)].speed_factor;
+    let workers_of_rung =
+        |rung: usize| pools[pool_of_rung(pools, rung)].workers.max(1) as f64;
 
     // Exclude configurations that cannot meet the SLO at all — against
-    // the batch-inflated tail, since a request completes only when its
-    // whole batch does.
-    let mut ladder: Vec<&ProfiledConfig> = front
-        .iter()
-        .filter(|c| params.slo_ms - batched(c).1 > 0.0)
-        .collect();
+    // the batch-inflated tail of the pool that would execute them (a
+    // request completes only when its whole batch does). The owning
+    // pool of a candidate is resolved at the ladder position it would
+    // occupy, so bands stay aligned with the surviving ladder.
+    let mut ladder: Vec<&ProfiledConfig> = Vec::new();
+    for c in front {
+        let speed = speed_of_rung(ladder.len());
+        if params.slo_ms - batched(c, speed).1 > 0.0 {
+            ladder.push(c);
+        }
+    }
     if ladder.is_empty() {
         // Degraded mode: keep the fastest configuration only.
         ladder.push(&front[0]);
     }
 
-    let w = params.workers.max(1) as f64;
     let mut policies: Vec<ConfigPolicy> = Vec::with_capacity(ladder.len());
     for (k, c) in ladder.iter().enumerate() {
-        let (eff_mean, eff_p95) = batched(c);
+        let w = workers_of_rung(k);
+        let (eff_mean, eff_p95) = batched(c, speed_of_rung(k));
         let slack = params.slo_ms - eff_p95; // Δk(B) (Eq. 7)
         let upscale = if slack > 0.0 {
-            // Eq. 10, effective per-request rate w·B/s̄(B).
-            (w * slack / eff_mean).floor().max(0.0) as u64
+            // Eq. 10 (legacy) / Eq. 10' (Erlang-C), effective
+            // per-request rate w·B/s̄(B) of the owning pool.
+            depth_budget(&params, w, slack, eff_mean).floor().max(0.0) as u64
         } else {
             0
         };
         // Downscale threshold of config k governs the k -> k+1 move and is
-        // computed from the *slower* config k+1 (Eq. 13).
+        // computed from the *slower* config k+1 (Eq. 13) under the pool
+        // that would drain it.
         let downscale = if k + 1 < ladder.len() {
-            let (next_eff_mean, next_eff_p95) = batched(ladder[k + 1]);
+            let w_next = workers_of_rung(k + 1);
+            let (next_eff_mean, next_eff_p95) =
+                batched(ladder[k + 1], speed_of_rung(k + 1));
             let next_slack = params.slo_ms - next_eff_p95;
-            let fill = w * (next_slack - params.slack_buffer_ms) / next_eff_mean;
+            let fill = depth_budget(
+                &params,
+                w_next,
+                next_slack - params.slack_buffer_ms,
+                next_eff_mean,
+            );
             Some(fill.floor().max(0.0) as u64)
         } else {
             None
@@ -193,9 +353,10 @@ pub fn derive_plan(front: &[ProfiledConfig], params: AqmParams) -> Plan {
         slack_buffer_ms: params.slack_buffer_ms,
         up_cooldown_ms: params.up_cooldown_ms,
         down_cooldown_ms: params.down_cooldown_ms,
-        workers: params.workers.max(1),
+        workers: crate::serving::pool::total_workers(pools),
         batch: params.batch.max(1),
         batch_alpha_ms: params.batch_alpha_ms.max(0.0),
+        pools: pools.to_vec(),
         ladder: policies,
     }
 }
@@ -294,6 +455,126 @@ mod tests {
         let p = AqmParams::for_slo(1000.0);
         assert_eq!(p.up_cooldown_ms, 0.0);
         assert!(p.down_cooldown_ms >= 1000.0);
+    }
+
+    #[test]
+    fn legacy_mode_is_the_default_and_stays_bit_for_bit() {
+        // The seed pin: the default params carry Legacy mode, and an
+        // explicit Legacy request changes nothing — thresholds, slack
+        // bits, ladder — at any worker count.
+        for k in [1usize, 4] {
+            let seed = derive_plan(&front3(), AqmParams::for_slo_workers(300.0, k));
+            let explicit = derive_plan(
+                &front3(),
+                AqmParams::for_slo_workers(300.0, k).with_thresholds(ThresholdMode::Legacy),
+            );
+            assert_eq!(seed, explicit);
+        }
+        assert_eq!(AqmParams::for_slo(300.0).thresholds, ThresholdMode::Legacy);
+    }
+
+    #[test]
+    fn erlang_thresholds_match_the_formula_by_hand() {
+        // k = 4, ρ̂ = 0.45: a = 1.8, C(4, 1.8) via the Erlang-B
+        // recurrence; rung 0 (Δ = 270, s̄ = 20): N↑ = ⌊4·270/(20·C)⌋.
+        let params = AqmParams::for_slo_workers(300.0, 4)
+            .with_thresholds(ThresholdMode::ErlangC);
+        let plan = derive_plan(&front3(), params);
+        let c = crate::sim::theory::erlang_c(4, 4.0 * 0.45);
+        let expect = (4.0 * 270.0 / 20.0 / c).floor() as u64;
+        assert_eq!(plan.ladder[0].upscale_threshold, expect);
+        assert!(expect > 54, "must deepen past the legacy ⌊4·270/20⌋ = 54");
+        // Downscale of rung 0 follows rung 1's numbers: ⌊4·(230-30)/45/C⌋.
+        let expect_down = (4.0 * 200.0 / 45.0 / c).floor() as u64;
+        assert_eq!(plan.ladder[0].downscale_threshold, Some(expect_down));
+    }
+
+    #[test]
+    fn erlang_thresholds_are_never_shallower_and_deepen_with_pool_size() {
+        // C ≤ 1 ⇒ every Erlang-C threshold ≥ its legacy counterpart, and
+        // C falls as servers are added at fixed ρ ⇒ the per-worker depth
+        // budget N↑/k grows with k (the multi-server waiting-probability
+        // effect the linear rule cannot see). Eq. 11 monotonicity must
+        // survive the new rule.
+        let mut last_per_worker = 0.0f64;
+        for k in [1usize, 2, 4, 8] {
+            let legacy = derive_plan(&front3(), AqmParams::for_slo_workers(300.0, k));
+            let erl = derive_plan(
+                &front3(),
+                AqmParams::for_slo_workers(300.0, k).with_thresholds(ThresholdMode::ErlangC),
+            );
+            for (a, b) in legacy.ladder.iter().zip(&erl.ladder) {
+                assert!(
+                    b.upscale_threshold >= a.upscale_threshold,
+                    "k={k}: erlang {} < legacy {}",
+                    b.upscale_threshold,
+                    a.upscale_threshold
+                );
+            }
+            let ups: Vec<u64> = erl.ladder.iter().map(|p| p.upscale_threshold).collect();
+            for w in ups.windows(2) {
+                assert!(w[0] >= w[1], "Eq. 11 violated under Erlang-C at k={k}: {ups:?}");
+            }
+            let per_worker = erl.ladder[0].upscale_threshold as f64 / k as f64;
+            assert!(
+                per_worker >= last_per_worker - 1.0, // floor() granularity
+                "per-worker budget shrank at k={k}: {per_worker} < {last_per_worker}"
+            );
+            last_per_worker = per_worker;
+        }
+    }
+
+    #[test]
+    fn single_reference_pool_reproduces_derive_plan_thresholds() {
+        // The parity pin on the planner side: one homogeneous pool
+        // (speed 1, offset 0) must reproduce the k-worker derivation
+        // threshold-for-threshold, slack bits included, in both modes.
+        use crate::serving::pool::PoolSpec;
+        for mode in [ThresholdMode::Legacy, ThresholdMode::ErlangC] {
+            for k in [1usize, 4] {
+                let params = AqmParams::for_slo_workers(300.0, k)
+                    .with_batch(4, 6.0)
+                    .with_thresholds(mode);
+                let flat = derive_plan(&front3(), params);
+                let pooled = derive_plan_pools(&front3(), params, &[PoolSpec::uniform(k)]);
+                assert_eq!(flat.ladder.len(), pooled.ladder.len());
+                for (a, b) in flat.ladder.iter().zip(&pooled.ladder) {
+                    assert_eq!(a.upscale_threshold, b.upscale_threshold, "{mode:?} k={k}");
+                    assert_eq!(a.downscale_threshold, b.downscale_threshold);
+                    assert_eq!(a.queue_slack_ms.to_bits(), b.queue_slack_ms.to_bits());
+                }
+                assert_eq!(pooled.workers, k);
+                assert_eq!(pooled.pools, vec![PoolSpec::uniform(k)]);
+                assert!(flat.pools.is_empty(), "homogeneous plans stay topology-free");
+            }
+        }
+    }
+
+    #[test]
+    fn per_pool_thresholds_use_the_owning_pools_parameters() {
+        // fast:4 owns rung 0; accurate:2 at 2x speed owns rungs 1+.
+        // Rung 0 keeps the 4-worker reference numbers; rungs 1 and 2
+        // shrink to the slower pool's 2 workers and doubled service
+        // times (rung 2's doubled tail of 280 ms leaves slack 20 —
+        // feasible, but with a zero depth budget).
+        use crate::serving::pool::parse_pools;
+        let pools = parse_pools("fast:4:1.0,accurate:2:2.0").unwrap();
+        let plan = derive_plan_pools(&front3(), AqmParams::for_slo(300.0), &pools);
+        assert_eq!(plan.ladder.len(), 3);
+        // Rung 0 (fast pool, 4 workers, speed 1): ⌊4·270/20⌋ = 54.
+        assert_eq!(plan.ladder[0].upscale_threshold, 54);
+        // Rung 1 (accurate pool, 2 workers, speed 2): scaled mean 90,
+        // p95 140, slack 160, ⌊2·160/90⌋ = 3.
+        assert_eq!(plan.ladder[1].upscale_threshold, 3);
+        // Rung 2: scaled mean 180, p95 280, slack 20, ⌊2·20/180⌋ = 0.
+        assert_eq!(plan.ladder[2].upscale_threshold, 0);
+        assert!((plan.ladder[2].queue_slack_ms - 20.0).abs() < 1e-9);
+        // Downscale of rung 0 follows rung 1 under ITS pool:
+        // ⌊2·(160-30)/90⌋ = 2; rung 1's follows rung 2: slack-h_s < 0 → 0.
+        assert_eq!(plan.ladder[0].downscale_threshold, Some(2));
+        assert_eq!(plan.ladder[1].downscale_threshold, Some(0));
+        assert_eq!(plan.workers, 6, "plan records the fleet total");
+        assert_eq!(plan.pools.len(), 2);
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod pareto;
 pub mod plan;
 pub mod profiler;
 
-pub use aqm::{derive_plan, AqmParams};
+pub use aqm::{derive_plan, derive_plan_pools, AqmParams, ThresholdMode};
 pub use pareto::{pareto_front, ProfiledConfig};
 pub use plan::{ConfigPolicy, Plan};
 pub use profiler::{

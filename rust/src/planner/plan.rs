@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 
 use crate::configspace::Config;
+use crate::serving::pool::PoolSpec;
 use crate::util::json::Json;
 
 /// One rung of the Pareto ladder with its AQM thresholds.
@@ -39,6 +40,10 @@ pub struct Plan {
     /// Per-dispatch fixed cost α (ms) of the batch service-time model
     /// `s̄(B) = α + β·B` the thresholds assume (0 when unprofiled).
     pub batch_alpha_ms: f64,
+    /// Heterogeneous pool topology the per-rung thresholds were derived
+    /// for (`planner::derive_plan_pools`). Empty = homogeneous plan
+    /// (the pre-pool format; `workers` is the whole story).
+    pub pools: Vec<PoolSpec>,
     /// Ordered by increasing mean service time (index 0 = fastest).
     pub ladder: Vec<ConfigPolicy>,
 }
@@ -77,6 +82,21 @@ impl Plan {
                 Json::Obj(m)
             })
             .collect::<Vec<_>>();
+        let pools = self
+            .pools
+            .iter()
+            .map(|p| {
+                let mut m = BTreeMap::new();
+                m.insert("name".into(), Json::str(p.name.clone()));
+                m.insert("workers".into(), Json::num(p.workers as f64));
+                m.insert(
+                    "engine_rung_offset".into(),
+                    Json::num(p.engine_rung_offset as f64),
+                );
+                m.insert("speed_factor".into(), Json::num(p.speed_factor));
+                Json::Obj(m)
+            })
+            .collect::<Vec<_>>();
         Json::obj(vec![
             ("slo_ms", Json::num(self.slo_ms)),
             ("slack_buffer_ms", Json::num(self.slack_buffer_ms)),
@@ -85,6 +105,7 @@ impl Plan {
             ("workers", Json::num(self.workers as f64)),
             ("batch", Json::num(self.batch as f64)),
             ("batch_alpha_ms", Json::num(self.batch_alpha_ms)),
+            ("pools", Json::Arr(pools)),
             ("ladder", Json::Arr(ladder)),
         ])
     }
@@ -137,6 +158,25 @@ impl Plan {
                 .and_then(|v| v.as_f64())
                 .unwrap_or(0.0)
                 .max(0.0),
+            // Absent in pre-pool plan files: default to a homogeneous
+            // (topology-free) plan.
+            pools: match j.get("pools") {
+                None => Vec::new(),
+                Some(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(|e| {
+                        Some(PoolSpec {
+                            name: e.get("name")?.as_str()?.to_string(),
+                            workers: e.get("workers")?.as_usize()?.max(1),
+                            engine_rung_offset: e
+                                .get("engine_rung_offset")?
+                                .as_usize()?,
+                            speed_factor: e.get("speed_factor")?.as_f64()?,
+                        })
+                    })
+                    .collect::<Option<Vec<_>>>()?,
+            },
             ladder,
         })
     }
@@ -157,6 +197,12 @@ impl Plan {
                 String::new()
             }
         );
+        if !self.pools.is_empty() {
+            out.push_str(&format!(
+                "  pools: {}\n",
+                crate::serving::pool::describe_pools(&self.pools)
+            ));
+        }
         out.push_str(
             "  idx  label                                     acc     mean      p95    Δk     N↑    N↓\n",
         );
@@ -192,6 +238,7 @@ mod tests {
             workers: 2,
             batch: 4,
             batch_alpha_ms: 2.5,
+            pools: vec![],
             ladder: vec![
                 ConfigPolicy {
                     label: "fast".into(),
@@ -270,5 +317,35 @@ mod tests {
         let r = plan().render();
         assert!(r.contains("batch 4"));
         assert!(r.contains("α 2.50 ms"));
+    }
+
+    #[test]
+    fn pooled_plan_json_roundtrip_and_render() {
+        let mut p = plan();
+        p.workers = 6;
+        p.pools = vec![
+            PoolSpec::new("fast", 4, 0, 1.0),
+            PoolSpec::new("accurate", 2, 1, 2.5),
+        ];
+        let parsed = Plan::from_json(&Json::parse(&p.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(parsed, p);
+        let r = p.render();
+        assert!(r.contains("pools: fast:4@1x+accurate:2@2.5x"), "{r}");
+        // A topology-free plan renders no pools line.
+        assert!(!plan().render().contains("pools:"));
+    }
+
+    #[test]
+    fn legacy_plan_json_defaults_to_no_pools() {
+        // Plan files written before heterogeneous pools carry no
+        // "pools" key; they must load as homogeneous plans.
+        let p = plan();
+        let mut j = p.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("pools");
+        }
+        let parsed = Plan::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(parsed, p);
+        assert!(parsed.pools.is_empty());
     }
 }

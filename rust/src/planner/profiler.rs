@@ -129,6 +129,20 @@ impl LatencyProfile {
             runs: s.count,
         }
     }
+
+    /// The same profile on hardware `factor`x slower than the profiled
+    /// reference (every quantile of a scaled random variable scales with
+    /// it). Used by the per-pool AQM derivation to project a reference
+    /// profile onto a pool's `speed_factor`; `factor == 1.0` is the
+    /// identity bit-for-bit.
+    pub fn scaled(&self, factor: f64) -> LatencyProfile {
+        LatencyProfile {
+            mean_ms: self.mean_ms * factor,
+            p50_ms: self.p50_ms * factor,
+            p95_ms: self.p95_ms * factor,
+            runs: self.runs,
+        }
+    }
 }
 
 /// Profile a configuration with `runs` executions (plus `warmup` untimed).
@@ -220,6 +234,17 @@ mod tests {
         let m = fit_batch_model(&mut r, &s, &vec![0], &BATCH_PROFILE_SIZES, 2);
         assert!(m.alpha_ms.abs() < 1e-9, "α {}", m.alpha_ms);
         assert!((m.beta_ms - 12.0).abs() < 1e-9, "β {}", m.beta_ms);
+    }
+
+    #[test]
+    fn scaled_profile_scales_every_quantile() {
+        let p = LatencyProfile { mean_ms: 20.0, p50_ms: 19.0, p95_ms: 30.0, runs: 7 };
+        let s = p.scaled(2.5);
+        assert!((s.mean_ms - 50.0).abs() < 1e-12);
+        assert!((s.p50_ms - 47.5).abs() < 1e-12);
+        assert!((s.p95_ms - 75.0).abs() < 1e-12);
+        assert_eq!(s.runs, 7);
+        assert_eq!(p.scaled(1.0), p, "unit factor is the identity");
     }
 
     #[test]

@@ -13,6 +13,15 @@
 //! observations — with `t↑ = 0` and per-arrival observations this drops
 //! to the fastest sustainable rung within a handful of arrivals, matching
 //! the paper's "switches occur within seconds of load changes".
+//!
+//! On a heterogeneous fleet the same state machine runs unchanged, but
+//! the depth it observes is **per pool** — the backlog of the pool the
+//! current rung routes to (see [`crate::serving::pool`]) — and each
+//! rung's thresholds were derived from its owning pool's worker count
+//! and speed ([`crate::planner::derive_plan_pools`]). An upscale across
+//! a band boundary therefore doesn't just pick a faster config: it
+//! redirects new arrivals to the faster *pool*, and the signal follows
+//! the traffic to wherever it now queues.
 
 use super::policy::ScalingPolicy;
 use crate::planner::Plan;
@@ -184,6 +193,7 @@ mod tests {
             workers: 1,
             batch: 1,
             batch_alpha_ms: 0.0,
+            pools: vec![],
             ladder: vec![
                 rung("fast", 0.76, 20.0, 30.0, 13, Some(4)),
                 rung("medium", 0.82, 45.0, 70.0, 5, Some(1)),

@@ -17,6 +17,16 @@ use crate::planner::Plan;
 use crate::workflows::{ExecOutcome, Workflow};
 
 /// Executes requests under ladder rung `idx`.
+///
+/// On a heterogeneous fleet the serving loop resolves `idx` *per pool*
+/// before calling in: each worker receives the policy rung clamped into
+/// its pool's rung band ([`crate::serving::pool::pool_rung`]), so an
+/// engine built for an accelerator pool only ever sees its own band's
+/// rungs — `idx` is always in `[0, rungs())` regardless of the policy's
+/// ladder position. Pool-specific engines are built by handing
+/// [`crate::serving::serve_pools`] a factory over the worker's
+/// [`crate::serving::PoolSpec`] (e.g. scale a mock's service times by
+/// `speed_factor`).
 pub trait RequestEngine {
     fn execute(&mut self, idx: usize) -> Result<ExecOutcome>;
 

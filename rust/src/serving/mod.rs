@@ -73,16 +73,65 @@
 //! seed semantics) unless the dispatch overhead is measurable
 //! ([`crate::planner::fit_batch_model`] profiles it at B ∈ {1, 4, 8}).
 
+//! ## Pool topology (heterogeneous fleets)
+//!
+//! [`ServeOptions::pools`] generalizes the uniform k-worker pool to
+//! **named worker pools** ([`pool::PoolSpec`]) — e.g. a fast CPU pool
+//! plus a slower, more accurate accelerator pool (`--pools
+//! fast:4:1.0,accurate:2:2.5`). The topology changes three things:
+//!
+//! * **routing is rung-aware**: the pools partition the Pareto ladder
+//!   into contiguous rung bands, and an arrival routes to the pool
+//!   whose band contains the *current policy rung* (per-pool
+//!   round-robin over that pool's shards). A rung switch across a band
+//!   boundary therefore redirects new load to a different pool — the
+//!   controller moves load *between pools*, not only up and down one
+//!   shared ladder;
+//! * **each pool resolves its own engine config**: a pool executes the
+//!   policy rung clamped into its band ([`pool::pool_rung`]), so an
+//!   accelerator pool keeps running its accurate rungs even while the
+//!   policy tours the fast end — and a spilled request runs at the
+//!   *executing* pool's rung, priced at that pool's `speed_factor`;
+//! * **stealing stays pool-local, spilling is last-resort**: a worker
+//!   steals only from its own pool's shards; it crosses pools (one
+//!   "spill", counted separately) only when every shard of its pool is
+//!   dry, so heterogeneous hardware scavenges idle cycles without
+//!   inverting a loaded pool's FIFO order. The policy/AQM depth signal
+//!   is **per pool** — the backlog of the pool the current rung routes
+//!   to — matching the per-pool thresholds the Planner derives
+//!   ([`crate::planner::derive_plan_pools`], Erlang-C or legacy mode).
+//!
+//! **When rung-aware routing beats a shared ladder**: whenever the
+//! fleet is actually heterogeneous. A shared ladder index forces every
+//! worker through the same configuration, so a slow pool drags the tail
+//! of fast rungs (its requests inflate p95 by `speed_factor`) and a
+//! fast pool wastes its headroom on accurate rungs it executes no
+//! better than the accelerator. Band routing keeps each hardware class
+//! on the rungs it is provisioned for and turns a rung switch into a
+//! *pool* switch, which is the knob a heterogeneous fleet really has.
+//! **When it doesn't**: on a uniform fleet a single
+//! [`pool::PoolSpec::uniform`] pool is the exact pre-pool runtime (the
+//! parity tests pin record-for-record equality in the DES), and slicing
+//! a uniform fleet into many small bands only shrinks each band's
+//! steal neighborhood — prefer one pool unless the hardware differs.
+//!
+//! Live heterogeneous engines come from [`server::serve_pools`], whose
+//! factory receives each worker's [`pool::PoolSpec`]; the DES mirror is
+//! [`crate::sim::simulate_pools`], validated against M/M/k and Erlang-C
+//! theory by `tests/theory_validation.rs`.
+
 pub mod elastico;
 pub mod executor;
 pub mod monitor;
 pub mod policy;
+pub mod pool;
 pub mod predictive;
 pub mod queue;
 pub mod server;
 
 pub use elastico::ElasticoPolicy;
 pub use policy::{ScalingPolicy, StaticPolicy};
+pub use pool::{parse_pools, PoolSpec};
 pub use predictive::PredictivePolicy;
 pub use queue::{Discipline, Popped, QueueError, RequestQueue, ShardedQueue};
-pub use server::{serve, ServeOptions, ServeOutcome};
+pub use server::{serve, serve_pools, ServeOptions, ServeOutcome};

@@ -21,13 +21,25 @@ struct MonitorState {
 /// Thread-safe load monitor; arrival recording is lock-free.
 pub struct LoadMonitor {
     arrivals_total: AtomicU64,
+    /// Per-pool arrival counters (empty on a single-pool monitor built
+    /// with [`new`](LoadMonitor::new)); same lock-free discipline as the
+    /// total, so rung-aware routing diagnostics cost one extra relaxed
+    /// increment.
+    pool_arrivals: Vec<AtomicU64>,
     state: Mutex<MonitorState>,
 }
 
 impl LoadMonitor {
     pub fn new(alpha: f64) -> LoadMonitor {
+        LoadMonitor::with_pools(alpha, 0)
+    }
+
+    /// A monitor that additionally tracks per-pool arrival counts for a
+    /// `pools`-pool fleet.
+    pub fn with_pools(alpha: f64, pools: usize) -> LoadMonitor {
         LoadMonitor {
             arrivals_total: AtomicU64::new(0),
+            pool_arrivals: (0..pools).map(|_| AtomicU64::new(0)).collect(),
             state: Mutex::new(MonitorState {
                 last_total: 0,
                 last_tick_ms: 0.0,
@@ -40,6 +52,23 @@ impl LoadMonitor {
     /// increment, no lock.
     pub fn on_arrival(&self) {
         self.arrivals_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one arrival routed to `pool` (lock-free; the pool counter
+    /// is skipped when the monitor was not built with pools).
+    pub fn on_arrival_pool(&self, pool: usize) {
+        self.arrivals_total.fetch_add(1, Ordering::Relaxed);
+        if let Some(c) = self.pool_arrivals.get(pool) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Arrivals routed to `pool` so far (0 for unknown pools).
+    pub fn pool_arrivals_total(&self, pool: usize) -> u64 {
+        self.pool_arrivals
+            .get(pool)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     /// Tick the rate estimator; returns the EWMA arrival rate (qps).
@@ -83,6 +112,26 @@ mod tests {
         let qps = m.rate_qps();
         assert!((qps - 100.0).abs() < 5.0, "qps {qps}");
         assert_eq!(m.arrivals_total(), 500);
+    }
+
+    #[test]
+    fn pool_counters_split_the_total() {
+        let m = LoadMonitor::with_pools(0.3, 2);
+        for _ in 0..7 {
+            m.on_arrival_pool(0);
+        }
+        for _ in 0..3 {
+            m.on_arrival_pool(1);
+        }
+        assert_eq!(m.arrivals_total(), 10);
+        assert_eq!(m.pool_arrivals_total(0), 7);
+        assert_eq!(m.pool_arrivals_total(1), 3);
+        assert_eq!(m.pool_arrivals_total(9), 0, "unknown pool reads 0");
+        // A pool-less monitor still counts the total on the pooled path.
+        let plain = LoadMonitor::new(0.3);
+        plain.on_arrival_pool(0);
+        assert_eq!(plain.arrivals_total(), 1);
+        assert_eq!(plain.pool_arrivals_total(0), 0);
     }
 
     #[test]

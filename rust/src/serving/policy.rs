@@ -14,6 +14,14 @@
 /// (index 0 = fastest, `n-1` = most accurate).
 pub trait ScalingPolicy: Send {
     /// Observe load and return the desired ladder index.
+    ///
+    /// `queue_depth` is the controller's depth signal: on a homogeneous
+    /// fleet the total-across-shards backlog; on a pooled fleet
+    /// ([`crate::serving::pool`]) the backlog of the pool the current
+    /// rung routes to, so thresholds derived per pool
+    /// ([`crate::planner::derive_plan_pools`]) compare against the
+    /// backlog that pool alone must drain — and a threshold crossing
+    /// moves load between pools.
     fn decide(&mut self, now_ms: f64, queue_depth: usize) -> usize;
 
     /// Currently selected ladder index.

@@ -1,0 +1,271 @@
+//! Named worker pools — the heterogeneous-fleet topology of the serving
+//! runtime (and of the DES that mirrors it).
+//!
+//! Real fixed fleets are rarely uniform: production deployments mix fast
+//! CPU workers with slower, more accurate accelerator workers. A
+//! [`PoolSpec`] names one such pool and carries
+//!
+//! * `workers` — executor threads (live) / servers (DES) in the pool;
+//! * `engine_rung_offset` — the first ladder rung of the pool's **rung
+//!   band**: pools partition the Pareto ladder into contiguous bands
+//!   (pool `p` owns rungs `[offset_p, offset_{p+1})`, the last band
+//!   running to the end of the ladder), and a pool always executes
+//!   within its own band ([`pool_rung`] clamps the policy rung into it);
+//! * `speed_factor` — service-time multiplier relative to the reference
+//!   hardware the ladder was profiled on (`2.5` = this pool runs every
+//!   rung 2.5x slower). The DES scales its sampled service times by it
+//!   and the Planner scales the pool's rungs when deriving per-pool AQM
+//!   thresholds; on the live path it is advisory (real compute cannot be
+//!   rescaled) but is handed to the engine factory so harnesses can
+//!   build pool-appropriate engines.
+//!
+//! **Rung-aware routing**: an arrival routes to the pool whose band
+//! contains the current policy rung ([`pool_of_rung`]) and round-robins
+//! over that pool's shards; when the policy switches rungs across a band
+//! boundary, new load moves *between pools* instead of only up/down one
+//! shared ladder. Work stealing stays within a pool; a pool's workers
+//! spill into other pools' shards only once every shard of their own
+//! pool is dry (see [`crate::serving::queue::ShardedQueue`]).
+//!
+//! A single [`PoolSpec::uniform`] pool (`speed_factor = 1`, offset 0) is
+//! the homogeneous k-worker runtime exactly: every rung maps to pool 0,
+//! the band clamp is the identity, and no spill path exists — pinned
+//! record-for-record against the sharded k-worker DES by
+//! `sim::tests::pooled_single_uniform_pool_reproduces_sharded_des_exactly`.
+
+use anyhow::{bail, Result};
+
+/// One named worker pool of the serving fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolSpec {
+    /// Display name (reports, CSV headers, CLI).
+    pub name: String,
+    /// Executor threads (live) / servers (DES) in this pool.
+    pub workers: usize,
+    /// First ladder rung of this pool's band (see the module docs).
+    pub engine_rung_offset: usize,
+    /// Service-time multiplier vs the profiled reference hardware
+    /// (1.0 = reference speed, 2.5 = 2.5x slower per request).
+    pub speed_factor: f64,
+}
+
+impl PoolSpec {
+    pub fn new(
+        name: impl Into<String>,
+        workers: usize,
+        engine_rung_offset: usize,
+        speed_factor: f64,
+    ) -> PoolSpec {
+        PoolSpec {
+            name: name.into(),
+            workers: workers.max(1),
+            engine_rung_offset,
+            speed_factor,
+        }
+    }
+
+    /// The homogeneous topology: one reference-speed pool owning the
+    /// whole ladder — exactly the pre-pool k-worker runtime.
+    pub fn uniform(workers: usize) -> PoolSpec {
+        PoolSpec::new("all", workers, 0, 1.0)
+    }
+
+    /// Reference-speed, whole-ladder pool (offset 0, speed 1)?
+    pub fn is_reference(&self) -> bool {
+        self.engine_rung_offset == 0 && self.speed_factor == 1.0
+    }
+}
+
+/// Validate a pool topology: non-empty, every pool ≥ 1 worker with a
+/// positive speed factor, offsets strictly increasing from 0 (bands
+/// partition the ladder).
+pub fn validate_pools(pools: &[PoolSpec]) -> Result<()> {
+    if pools.is_empty() {
+        bail!("pool topology must name at least one pool");
+    }
+    if pools[0].engine_rung_offset != 0 {
+        bail!(
+            "first pool ({}) must start at rung offset 0, got {}",
+            pools[0].name,
+            pools[0].engine_rung_offset
+        );
+    }
+    for (i, p) in pools.iter().enumerate() {
+        if p.workers == 0 {
+            bail!("pool {} has no workers", p.name);
+        }
+        if p.speed_factor.is_nan() || p.speed_factor <= 0.0 {
+            bail!("pool {} has non-positive speed factor {}", p.name, p.speed_factor);
+        }
+        if i > 0 && p.engine_rung_offset <= pools[i - 1].engine_rung_offset {
+            bail!(
+                "pool rung offsets must be strictly increasing: {} ({}) after {} ({})",
+                p.name,
+                p.engine_rung_offset,
+                pools[i - 1].name,
+                pools[i - 1].engine_rung_offset
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Total workers across the fleet.
+pub fn total_workers(pools: &[PoolSpec]) -> usize {
+    pools.iter().map(|p| p.workers.max(1)).sum::<usize>().max(1)
+}
+
+/// Aggregate service capacity relative to `workers` reference-speed
+/// executors: `Σ workers_p / speed_p`. Used to scale experiment load so
+/// the per-worker operating point is preserved on heterogeneous fleets.
+pub fn capacity_factor(pools: &[PoolSpec]) -> f64 {
+    pools
+        .iter()
+        .map(|p| p.workers.max(1) as f64 / p.speed_factor.max(1e-9))
+        .sum()
+}
+
+/// The pool whose rung band contains `rung`: the last pool whose offset
+/// is ≤ `rung` (offsets are strictly increasing from 0, so this is
+/// always defined). Rung-aware routing sends new arrivals here.
+pub fn pool_of_rung(pools: &[PoolSpec], rung: usize) -> usize {
+    let mut owner = 0;
+    for (i, p) in pools.iter().enumerate() {
+        if p.engine_rung_offset <= rung {
+            owner = i;
+        }
+    }
+    owner
+}
+
+/// The rung pool `pool` executes when the policy sits at `policy_rung`
+/// on a ladder of `n_rungs`: the policy rung clamped into the pool's
+/// band. A pool resolves *its own* engine config — a spilled request
+/// executes at the spilling pool's band, not the router's. With a single
+/// whole-ladder pool this is the identity.
+pub fn pool_rung(pools: &[PoolSpec], pool: usize, policy_rung: usize, n_rungs: usize) -> usize {
+    let n = n_rungs.max(1);
+    let lo = pools[pool].engine_rung_offset.min(n - 1);
+    let hi = if pool + 1 < pools.len() {
+        pools[pool + 1].engine_rung_offset.min(n)
+    } else {
+        n
+    };
+    let hi = hi.max(lo + 1); // bands clipped by a short ladder stay non-empty
+    policy_rung.clamp(lo, hi - 1)
+}
+
+/// Parse a CLI pool topology: comma-separated
+/// `name:workers:speed[:rung_offset]` entries, e.g.
+/// `fast:4:1.0,accurate:2:2.5`. When the offset is omitted, pool `i`
+/// starts its band at rung `i` (each extra pool one rung deeper —
+/// sensible for the common fast-pool + accurate-pool split).
+pub fn parse_pools(s: &str) -> Result<Vec<PoolSpec>> {
+    let mut pools: Vec<PoolSpec> = Vec::new();
+    for entry in s.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let i = pools.len();
+        let parts: Vec<&str> = entry.split(':').collect();
+        if parts.len() < 3 || parts.len() > 4 {
+            bail!(
+                "pool spec `{entry}` must be name:workers:speed[:rung_offset]"
+            );
+        }
+        let workers: usize = parts[1]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("pool `{entry}`: bad worker count {}", parts[1]))?;
+        if workers == 0 {
+            bail!("pool `{entry}` has no workers");
+        }
+        let speed: f64 = parts[2]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("pool `{entry}`: bad speed factor {}", parts[2]))?;
+        let offset: usize = match parts.get(3) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("pool `{entry}`: bad rung offset {v}"))?,
+            None => i,
+        };
+        pools.push(PoolSpec::new(parts[0], workers, offset, speed));
+    }
+    validate_pools(&pools)?;
+    Ok(pools)
+}
+
+/// One-line display of a topology (`fast:4@1x+accurate:2@2.5x`).
+pub fn describe_pools(pools: &[PoolSpec]) -> String {
+    pools
+        .iter()
+        .map(|p| format!("{}:{}@{}x", p.name, p.workers, p.speed_factor))
+        .collect::<Vec<_>>()
+        .join("+")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_issue_example() {
+        let pools = parse_pools("fast:4:1.0,accurate:2:2.5").unwrap();
+        assert_eq!(pools.len(), 2);
+        assert_eq!(pools[0], PoolSpec::new("fast", 4, 0, 1.0));
+        assert_eq!(pools[1], PoolSpec::new("accurate", 2, 1, 2.5));
+        assert_eq!(total_workers(&pools), 6);
+        assert!((capacity_factor(&pools) - (4.0 + 2.0 / 2.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_explicit_offsets_and_rejects_bad_specs() {
+        let pools = parse_pools("cpu:2:1.0:0,tpu:1:3.0:2").unwrap();
+        assert_eq!(pools[1].engine_rung_offset, 2);
+        assert!(parse_pools("x:0:1.0").is_err(), "zero workers");
+        assert!(parse_pools("x:2:0.0").is_err(), "zero speed");
+        assert!(parse_pools("x:2:1.0:1").is_err(), "first offset must be 0");
+        assert!(parse_pools("a:2:1.0,b:2:1.0:0").is_err(), "offsets must increase");
+        assert!(parse_pools("justname").is_err(), "missing fields");
+    }
+
+    #[test]
+    fn rung_bands_partition_the_ladder() {
+        let pools = parse_pools("fast:4:1.0,mid:2:1.5:2,slow:1:3.0:4").unwrap();
+        // Bands: fast [0,2), mid [2,4), slow [4,..).
+        assert_eq!(pool_of_rung(&pools, 0), 0);
+        assert_eq!(pool_of_rung(&pools, 1), 0);
+        assert_eq!(pool_of_rung(&pools, 2), 1);
+        assert_eq!(pool_of_rung(&pools, 3), 1);
+        assert_eq!(pool_of_rung(&pools, 4), 2);
+        assert_eq!(pool_of_rung(&pools, 9), 2);
+        // Each pool clamps the policy rung into its own band.
+        assert_eq!(pool_rung(&pools, 0, 5, 6), 1);
+        assert_eq!(pool_rung(&pools, 1, 5, 6), 3);
+        assert_eq!(pool_rung(&pools, 2, 0, 6), 4);
+        assert_eq!(pool_rung(&pools, 2, 5, 6), 5);
+    }
+
+    #[test]
+    fn uniform_pool_is_the_identity_topology() {
+        let pools = vec![PoolSpec::uniform(4)];
+        validate_pools(&pools).unwrap();
+        assert!(pools[0].is_reference());
+        for r in 0..8 {
+            assert_eq!(pool_of_rung(&pools, r), 0);
+            assert_eq!(pool_rung(&pools, 0, r, 8), r);
+        }
+        assert_eq!(total_workers(&pools), 4);
+        assert!((capacity_factor(&pools) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn short_ladder_clips_bands_but_keeps_them_non_empty() {
+        // A 1-rung ladder with a 2-pool topology: both pools execute
+        // rung 0 and routing always targets the first pool.
+        let pools = parse_pools("fast:2:1.0,slow:2:2.0").unwrap();
+        assert_eq!(pool_of_rung(&pools, 0), 0);
+        assert_eq!(pool_rung(&pools, 0, 0, 1), 0);
+        assert_eq!(pool_rung(&pools, 1, 0, 1), 0);
+    }
+}

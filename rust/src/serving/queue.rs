@@ -46,7 +46,19 @@
 //!   `B = 1` case of the same code.
 //! * **Depth**: [`ShardedQueue::len`] is one atomic load of the
 //!   total-across-shards depth — the signal the AQM thresholds
-//!   (`planner::aqm`) and the Elastico controller are derived for.
+//!   (`planner::aqm`) and the Elastico controller are derived for. Under
+//!   a pooled topology, [`ShardedQueue::pool_len`] is the same signal
+//!   restricted to one pool's shards.
+//! * **Pools**: [`ShardedQueue::new_pooled`] partitions the shards into
+//!   contiguous per-pool groups (one group per
+//!   [`crate::serving::pool::PoolSpec`]). Producers route into a chosen
+//!   pool ([`push_pool`](ShardedQueue::push_pool), per-pool round-robin);
+//!   a pool's consumers drain and steal **within their pool only**, and
+//!   **spill** into other pools' shards only once every shard of their
+//!   own pool is dry ([`pop_timeout_pool`](ShardedQueue::pop_timeout_pool)).
+//!   Spills are counted separately from steals
+//!   ([`spills`](ShardedQueue::spills)); a single-pool queue can never
+//!   spill and behaves exactly like the un-pooled constructor.
 //!
 //! The consumer API is exhaustive by construction: [`ShardedQueue`] pops
 //! return [`Popped`] (`Item`/`TimedOut`/`Closed`), so a consumer loop
@@ -204,11 +216,24 @@ pub struct ShardedQueue<T> {
     /// capacity genuinely remains. Exact AQM depth signal in quiescence.
     depth: AtomicUsize,
     capacity: usize,
-    /// Round-robin router cursor.
+    /// Round-robin router cursor (pool-agnostic [`push`](ShardedQueue::push)).
     router: AtomicUsize,
+    /// Half-open shard ranges per pool (one `(0, shards)` range when the
+    /// queue was built un-pooled).
+    pool_ranges: Vec<(usize, usize)>,
+    /// Owning pool of each shard.
+    shard_pool: Vec<usize>,
+    /// Per-pool depth counters — maintained (and read) only when the
+    /// topology has more than one pool, so the single-pool hot path is
+    /// exactly the pre-pool code.
+    pool_depths: Vec<AtomicUsize>,
+    /// Per-pool round-robin router cursors.
+    pool_routers: Vec<AtomicUsize>,
     closed: AtomicBool,
-    /// Pops satisfied from a non-home shard (diagnostics).
+    /// Pops satisfied from a non-home shard of the consumer's own pool.
     steals: AtomicU64,
+    /// Pops satisfied from another pool's shard (cross-pool spill).
+    spills: AtomicU64,
     /// Consumers parked on `notify`; producers skip the sleep gate
     /// entirely while this is zero (the loaded-system fast path).
     sleepers: AtomicUsize,
@@ -218,14 +243,38 @@ pub struct ShardedQueue<T> {
 
 impl<T> ShardedQueue<T> {
     pub fn new(capacity: usize, shards: usize) -> Self {
-        let shards = shards.max(1);
+        Self::new_pooled(capacity, &[shards.max(1)])
+    }
+
+    /// A pool-partitioned queue: `pool_shards[p]` shards belong to pool
+    /// `p` (contiguous ranges, in order). `capacity` still bounds the
+    /// **total** buffered items across every pool — admission control
+    /// stays a property of the server, not of a pool.
+    pub fn new_pooled(capacity: usize, pool_shards: &[usize]) -> Self {
+        assert!(!pool_shards.is_empty(), "need at least one pool");
+        let mut pool_ranges = Vec::with_capacity(pool_shards.len());
+        let mut shard_pool = Vec::new();
+        let mut start = 0usize;
+        for (p, &n) in pool_shards.iter().enumerate() {
+            let n = n.max(1);
+            pool_ranges.push((start, start + n));
+            for _ in 0..n {
+                shard_pool.push(p);
+            }
+            start += n;
+        }
         ShardedQueue {
-            shards: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            shards: (0..start).map(|_| Mutex::new(VecDeque::new())).collect(),
             depth: AtomicUsize::new(0),
             capacity: capacity.max(1),
             router: AtomicUsize::new(0),
+            pool_depths: (0..pool_ranges.len()).map(|_| AtomicUsize::new(0)).collect(),
+            pool_routers: (0..pool_ranges.len()).map(|_| AtomicUsize::new(0)).collect(),
+            pool_ranges,
+            shard_pool,
             closed: AtomicBool::new(false),
             steals: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
             sleepers: AtomicUsize::new(0),
             gate: Mutex::new(()),
             notify: Condvar::new(),
@@ -237,14 +286,16 @@ impl<T> ShardedQueue<T> {
         self.shards.len()
     }
 
-    /// Enqueue; fails when the aggregate capacity is reserved or the
-    /// queue is closed. The common path is one atomic reservation + one
-    /// shard lock touched by `1/shards` of the traffic.
-    pub fn push(&self, item: T) -> Result<(), QueueError> {
+    /// Number of pools (1 unless built with [`new_pooled`](ShardedQueue::new_pooled)).
+    pub fn pool_count(&self) -> usize {
+        self.pool_ranges.len()
+    }
+
+    /// Reserve one admission slot against the total bound (lock-free).
+    fn reserve(&self) -> Result<(), QueueError> {
         if self.closed.load(Ordering::SeqCst) {
             return Err(QueueError::Closed);
         }
-        // Reserve a slot; lock-free admission against the total bound.
         if self
             .depth
             .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |d| {
@@ -254,7 +305,14 @@ impl<T> ShardedQueue<T> {
         {
             return Err(QueueError::Full);
         }
-        let shard = self.router.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        Ok(())
+    }
+
+    /// Insert a reserved item into `shard` and wake a parked consumer.
+    fn finish_push(&self, shard: usize, item: T) {
+        if self.pool_ranges.len() > 1 {
+            self.pool_depths[self.shard_pool[shard]].fetch_add(1, Ordering::SeqCst);
+        }
         self.shards[shard].lock().unwrap().push_back(item);
         // Wake a parked consumer. The sleep gate is only taken when a
         // consumer is actually parked (Dekker-style handshake with the
@@ -264,33 +322,141 @@ impl<T> ShardedQueue<T> {
             let _g = self.gate.lock().unwrap();
             self.notify.notify_one();
         }
+    }
+
+    /// Enqueue; fails when the aggregate capacity is reserved or the
+    /// queue is closed. The common path is one atomic reservation + one
+    /// shard lock touched by `1/shards` of the traffic. Routing is
+    /// pool-agnostic round-robin over every shard — the single-pool path
+    /// (see [`push_pool`](ShardedQueue::push_pool) for rung-aware pooled
+    /// routing).
+    pub fn push(&self, item: T) -> Result<(), QueueError> {
+        self.reserve()?;
+        let shard = self.router.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        self.finish_push(shard, item);
         Ok(())
     }
 
+    /// Enqueue into one pool: round-robin over that pool's shards only.
+    /// With a single pool this is exactly [`push`](ShardedQueue::push)
+    /// (same cursor arithmetic over the same shards).
+    pub fn push_pool(&self, pool: usize, item: T) -> Result<(), QueueError> {
+        self.reserve()?;
+        let (lo, hi) = self.pool_ranges[pool];
+        let shard =
+            lo + self.pool_routers[pool].fetch_add(1, Ordering::Relaxed) % (hi - lo);
+        self.finish_push(shard, item);
+        Ok(())
+    }
+
+    /// Claim one item from shard `s` (front, FIFO), releasing its
+    /// admission slot first — see the ordering note in
+    /// [`take_batch_from`](ShardedQueue::take_batch_from).
+    fn take_one_from(&self, s: usize, is_steal: bool, is_spill: bool) -> Option<T> {
+        let mut g = self.shards[s].lock().unwrap();
+        if g.is_empty() {
+            return None;
+        }
+        self.depth.fetch_sub(1, Ordering::SeqCst);
+        if self.pool_ranges.len() > 1 {
+            self.pool_depths[self.shard_pool[s]].fetch_sub(1, Ordering::SeqCst);
+        }
+        let item = g.pop_front();
+        drop(g);
+        if is_steal {
+            self.steals.fetch_add(1, Ordering::Relaxed);
+        }
+        if is_spill {
+            self.spills.fetch_add(1, Ordering::Relaxed);
+        }
+        item
+    }
+
+    /// Claim up to `max` items from shard `s` in one lock acquisition: a
+    /// front run when `s` is the consumer's home shard, half the backlog
+    /// (`⌈len/2⌉`, capped at `max`) when stealing or spilling — leave a
+    /// victim work. All `take` slots are released *before* any item is
+    /// removed, so the depth counter never over-counts a claimed item
+    /// and a racing push can only be admitted early (into a freshly
+    /// freed slot), never spuriously rejected while capacity genuinely
+    /// remains; the items themselves are claimed under the shard lock.
+    /// One steal/spill *operation* is counted regardless of batch size —
+    /// the counters track lock-level frequency, which is what batch
+    /// stealing amortizes.
+    fn take_batch_from(
+        &self,
+        s: usize,
+        max: usize,
+        is_steal: bool,
+        is_spill: bool,
+    ) -> Option<Vec<T>> {
+        let mut g = self.shards[s].lock().unwrap();
+        if g.is_empty() {
+            return None;
+        }
+        let take = if is_steal || is_spill {
+            g.len().div_ceil(2).min(max)
+        } else {
+            g.len().min(max)
+        };
+        self.depth.fetch_sub(take, Ordering::SeqCst);
+        if self.pool_ranges.len() > 1 {
+            self.pool_depths[self.shard_pool[s]].fetch_sub(take, Ordering::SeqCst);
+        }
+        let mut items = Vec::with_capacity(take);
+        for _ in 0..take {
+            items.push(g.pop_front().unwrap());
+        }
+        drop(g);
+        if is_steal {
+            self.steals.fetch_add(1, Ordering::Relaxed);
+        }
+        if is_spill {
+            self.spills.fetch_add(1, Ordering::Relaxed);
+        }
+        Some(items)
+    }
+
     /// Non-blocking pop for consumer `worker`: home shard first, then a
-    /// FIFO steal sweep over the other shards.
+    /// FIFO steal sweep over the other shards (pool-agnostic — the
+    /// single-pool consumer path).
     pub fn try_pop(&self, worker: usize) -> Option<T> {
         let n = self.shards.len();
         let home = worker % n;
         for i in 0..n {
             let s = (home + i) % n;
-            let mut g = self.shards[s].lock().unwrap();
-            if g.is_empty() {
-                continue;
+            if let Some(item) = self.take_one_from(s, i > 0, false) {
+                return Some(item);
             }
-            // Release the slot *before* removing the item: the depth
-            // counter then never over-counts a claimed item, so a push
-            // racing this pop can only be admitted early (into the slot
-            // just freed), never spuriously rejected while capacity
-            // genuinely remains. The item is claimed under the shard
-            // lock, so no other consumer can take it.
-            self.depth.fetch_sub(1, Ordering::SeqCst);
-            let item = g.pop_front();
-            drop(g);
-            if i > 0 {
-                self.steals.fetch_add(1, Ordering::Relaxed);
+        }
+        None
+    }
+
+    /// Non-blocking pooled pop for consumer `worker` of pool `pool`:
+    /// home shard first, then a FIFO steal sweep over the *pool's own*
+    /// shards; only when every shard of the pool is dry does the sweep
+    /// spill into the other pools (cyclic pool order, each from its
+    /// first shard). With a single pool this is exactly
+    /// [`try_pop`](ShardedQueue::try_pop).
+    pub fn try_pop_pool(&self, pool: usize, worker: usize) -> Option<T> {
+        let (lo, hi) = self.pool_ranges[pool];
+        let len_p = hi - lo;
+        let home = worker % len_p;
+        for i in 0..len_p {
+            let s = lo + (home + i) % len_p;
+            if let Some(item) = self.take_one_from(s, i > 0, false) {
+                return Some(item);
             }
-            return item;
+        }
+        let np = self.pool_ranges.len();
+        for d in 1..np {
+            let q = (pool + d) % np;
+            let (qlo, qhi) = self.pool_ranges[q];
+            for s in qlo..qhi {
+                if let Some(item) = self.take_one_from(s, false, true) {
+                    return Some(item);
+                }
+            }
         }
         None
     }
@@ -308,35 +474,42 @@ impl<T> ShardedQueue<T> {
         let home = worker % n;
         for i in 0..n {
             let s = (home + i) % n;
-            let mut g = self.shards[s].lock().unwrap();
-            if g.is_empty() {
-                continue;
+            if let Some(items) = self.take_batch_from(s, max, i > 0, false) {
+                return Some(items);
             }
-            // Home shard: take a front run of up to `max`. Victim shard:
-            // steal half its backlog (leave it work) up to `max`.
-            let take = if i == 0 {
-                g.len().min(max)
-            } else {
-                g.len().div_ceil(2).min(max)
-            };
-            // Same release-before-remove ordering as `try_pop`, with one
-            // RMW for the whole batch: all `take` slots are released
-            // before any item is removed, so the depth counter never
-            // over-counts a claimed item; the items themselves are
-            // claimed under the shard lock.
-            self.depth.fetch_sub(take, Ordering::SeqCst);
-            let mut items = Vec::with_capacity(take);
-            for _ in 0..take {
-                items.push(g.pop_front().unwrap());
+        }
+        None
+    }
+
+    /// Pooled batch pop: the batch analogue of
+    /// [`try_pop_pool`](ShardedQueue::try_pop_pool) — home-pool front
+    /// run / steal-half first, cross-pool spill (also half, capped at
+    /// `max`) only once the home pool is fully dry.
+    pub fn try_pop_batch_pool(
+        &self,
+        pool: usize,
+        worker: usize,
+        max: usize,
+    ) -> Option<Vec<T>> {
+        let max = max.max(1);
+        let (lo, hi) = self.pool_ranges[pool];
+        let len_p = hi - lo;
+        let home = worker % len_p;
+        for i in 0..len_p {
+            let s = lo + (home + i) % len_p;
+            if let Some(items) = self.take_batch_from(s, max, i > 0, false) {
+                return Some(items);
             }
-            drop(g);
-            if i > 0 {
-                // One steal *operation* regardless of batch size — the
-                // counter tracks lock-level steal frequency, which is
-                // what batch stealing amortizes (per-item at max == 1).
-                self.steals.fetch_add(1, Ordering::Relaxed);
+        }
+        let np = self.pool_ranges.len();
+        for d in 1..np {
+            let q = (pool + d) % np;
+            let (qlo, qhi) = self.pool_ranges[q];
+            for s in qlo..qhi {
+                if let Some(items) = self.take_batch_from(s, max, false, true) {
+                    return Some(items);
+                }
             }
-            return Some(items);
         }
         None
     }
@@ -357,6 +530,30 @@ impl<T> ShardedQueue<T> {
     /// returned [`Popped::Item`] batch is never empty.
     pub fn pop_batch(&self, worker: usize, max: usize, timeout: Duration) -> Popped<Vec<T>> {
         self.pop_with(timeout, || self.try_pop_batch(worker, max))
+    }
+
+    /// Blocking pooled pop with timeout — the consumer path of a pooled
+    /// executor: within-pool drain/steal, cross-pool spill only when the
+    /// home pool is dry (see [`try_pop_pool`](ShardedQueue::try_pop_pool)).
+    pub fn pop_timeout_pool(
+        &self,
+        pool: usize,
+        worker: usize,
+        timeout: Duration,
+    ) -> Popped<T> {
+        self.pop_with(timeout, || self.try_pop_pool(pool, worker))
+    }
+
+    /// Blocking pooled batch pop with timeout (see
+    /// [`try_pop_batch_pool`](ShardedQueue::try_pop_batch_pool)).
+    pub fn pop_batch_pool(
+        &self,
+        pool: usize,
+        worker: usize,
+        max: usize,
+        timeout: Duration,
+    ) -> Popped<Vec<T>> {
+        self.pop_with(timeout, || self.try_pop_batch_pool(pool, worker, max))
     }
 
     /// Shared deadline-based park loop under `attempt` (single or batch
@@ -401,9 +598,26 @@ impl<T> ShardedQueue<T> {
         self.len() == 0
     }
 
+    /// Depth of one pool's shards — the per-pool AQM/Elastico signal.
+    /// With a single pool this is the aggregate depth (same counter, so
+    /// the homogeneous path stays exactly the pre-pool code).
+    pub fn pool_len(&self, pool: usize) -> usize {
+        if self.pool_ranges.len() == 1 {
+            self.depth.load(Ordering::SeqCst)
+        } else {
+            self.pool_depths[pool].load(Ordering::SeqCst)
+        }
+    }
+
     /// Pops satisfied by stealing from a non-home shard so far.
     pub fn steals(&self) -> u64 {
         self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Pops satisfied by spilling into another pool's shard so far
+    /// (always 0 on a single-pool queue).
+    pub fn spills(&self) -> u64 {
+        self.spills.load(Ordering::Relaxed)
     }
 
     /// Close: producers fail afterwards; consumers drain what remains.
@@ -752,6 +966,134 @@ mod tests {
         all.sort_unstable();
         assert_eq!(all, (0..n_prod as u64 * per).collect::<Vec<u64>>());
         assert_eq!(q.len(), 0);
+    }
+
+    // ---- pooled ShardedQueue ----------------------------------------
+
+    #[test]
+    fn pooled_routing_is_round_robin_within_each_pool() {
+        // 2 pools x 2 shards: pool 0 owns shards {0, 1}, pool 1 owns
+        // {2, 3}. Pushes into a pool round-robin its own shards only.
+        let q: ShardedQueue<u64> = ShardedQueue::new_pooled(64, &[2, 2]);
+        assert_eq!(q.pool_count(), 2);
+        assert_eq!(q.shard_count(), 4);
+        for i in 0..4 {
+            q.push_pool(0, i).unwrap();
+        }
+        for i in 10..14 {
+            q.push_pool(1, i).unwrap();
+        }
+        assert_eq!(q.len(), 8);
+        assert_eq!(q.pool_len(0), 4);
+        assert_eq!(q.pool_len(1), 4);
+        // Pool-0 consumer 0 drains home shard {0, 2}, then steals {1, 3}
+        // from its pool sibling — all without touching pool 1.
+        for want in [0u64, 2, 1, 3] {
+            assert_eq!(q.pop_timeout_pool(0, 0, Duration::from_millis(1)), Popped::Item(want));
+        }
+        assert_eq!(q.steals(), 2);
+        assert_eq!(q.spills(), 0, "home pool had items: no spill allowed");
+        assert_eq!(q.pool_len(0), 0);
+        assert_eq!(q.pool_len(1), 4);
+    }
+
+    #[test]
+    fn spill_only_when_the_home_pool_is_fully_dry() {
+        let q: ShardedQueue<u64> = ShardedQueue::new_pooled(64, &[2, 2]);
+        // One item in the consumer's pool, plenty in the other.
+        q.push_pool(0, 7).unwrap();
+        for i in 0..6 {
+            q.push_pool(1, 100 + i).unwrap();
+        }
+        // While pool 0 holds anything, its consumer never crosses pools.
+        assert_eq!(q.pop_timeout_pool(0, 0, Duration::from_millis(1)), Popped::Item(7));
+        assert_eq!(q.spills(), 0);
+        // Now pool 0 is dry: the pop spills — half the victim shard
+        // (pool 1 shard 2 holds {100, 102, 104}: spill takes ⌈3/2⌉ = 2).
+        assert_eq!(
+            q.pop_batch_pool(0, 0, 8, Duration::from_millis(1)),
+            Popped::Item(vec![100, 102])
+        );
+        assert_eq!(q.spills(), 1, "one spill operation per batch");
+        assert_eq!(q.steals(), 0, "spills are not steals");
+        assert_eq!(q.pool_len(1), 4);
+        // Pool 1's own consumer still drains its pool FIFO.
+        assert_eq!(q.pop_timeout_pool(1, 0, Duration::from_millis(1)), Popped::Item(104));
+        assert_eq!(q.pop_timeout_pool(1, 1, Duration::from_millis(1)), Popped::Item(101));
+    }
+
+    #[test]
+    fn single_pool_pooled_api_matches_the_unpooled_api_exactly() {
+        // new(capacity, k) == new_pooled(capacity, &[k]), and the pooled
+        // consumer entry points reduce to the un-pooled ones: same drain
+        // order, same steal counts, no spill path.
+        let a: ShardedQueue<u64> = ShardedQueue::new(16, 4);
+        let b: ShardedQueue<u64> = ShardedQueue::new_pooled(16, &[4]);
+        for i in 0..8 {
+            a.push(i).unwrap();
+            b.push_pool(0, i).unwrap();
+        }
+        for _ in 0..8 {
+            let x = a.pop_timeout(2, Duration::from_millis(1));
+            let y = b.pop_timeout_pool(0, 2, Duration::from_millis(1));
+            assert_eq!(x, y);
+        }
+        assert_eq!(a.steals(), b.steals());
+        assert_eq!(b.spills(), 0);
+        assert_eq!(b.pool_len(0), 0);
+    }
+
+    #[test]
+    fn pooled_mpmc_conserves_across_pools_under_racing_consumers() {
+        // 2 producers per pool, consumers on both pools racing, pool 1's
+        // shards reachable by pool 0 only via spill: every item must
+        // come out exactly once and per-pool FIFO must never invert for
+        // items served by their own pool.
+        let per = 800u64;
+        let q: Arc<ShardedQueue<u64>> = Arc::new(ShardedQueue::new_pooled(8192, &[2, 2]));
+        let producers: Vec<_> = (0..2usize)
+            .map(|pool| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        q.push_pool(pool, pool as u64 * per + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = [(0usize, 0usize), (0, 1), (1, 0), (1, 1)]
+            .into_iter()
+            .map(|(pool, w)| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        match q.pop_batch_pool(pool, w, 5, Duration::from_millis(100)) {
+                            Popped::Item(items) => {
+                                assert!(!items.is_empty() && items.len() <= 5);
+                                got.extend(items);
+                            }
+                            Popped::TimedOut => {}
+                            Popped::Closed => break,
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = Vec::new();
+        for c in consumers {
+            all.extend(c.join().unwrap());
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..2 * per).collect::<Vec<u64>>());
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.pool_len(0), 0);
+        assert_eq!(q.pool_len(1), 0);
     }
 
     #[test]

@@ -41,6 +41,7 @@ use anyhow::Result;
 use super::executor::RequestEngine;
 use super::monitor::LoadMonitor;
 use super::policy::ScalingPolicy;
+use super::pool::{pool_of_rung, pool_rung, validate_pools, PoolSpec};
 use super::queue::{Discipline, Popped, ShardedQueue};
 use crate::metrics::{RequestRecord, SwitchEvent};
 
@@ -52,13 +53,17 @@ pub struct ServeOptions {
     /// Monitor tick period (ms) — drives hysteresis progress when idle.
     pub tick_ms: u64,
     /// Executor worker threads k (M/G/k). Each worker builds its own
-    /// engine from the factory; all drain the request queue.
+    /// engine from the factory; all drain the request queue. Ignored
+    /// when [`pools`](ServeOptions::pools) names an explicit topology
+    /// (the pool worker counts take over).
     pub workers: usize,
     /// Queue discipline: one central FIFO (the paper's testbed) or
-    /// per-worker shards with work stealing.
+    /// per-worker shards with work stealing. Ignored under an explicit
+    /// pool topology (pools always run per-worker shards).
     pub discipline: Discipline,
     /// Shard count under [`Discipline::ShardedSteal`]; 0 = one shard
-    /// per worker. Ignored (forced to 1) under `CentralFifo`.
+    /// per worker. Ignored (forced to 1) under `CentralFifo`, and
+    /// ignored under an explicit pool topology.
     pub shards: usize,
     /// Max requests dequeued and executed per engine dispatch (batch
     /// bound B). 1 (the default) is the unbatched seed behavior: every
@@ -69,6 +74,11 @@ pub struct ServeOptions {
     /// overhead; all requests in a batch share `start_ms`/`finish_ms`
     /// and one policy observation.
     pub batch: usize,
+    /// Heterogeneous worker-pool topology. Empty (the default) runs the
+    /// homogeneous `workers`/`discipline`/`shards` runtime unchanged;
+    /// non-empty runs named pools with rung-aware routing, within-pool
+    /// stealing and cross-pool spill (see [`crate::serving::pool`]).
+    pub pools: Vec<PoolSpec>,
 }
 
 impl Default for ServeOptions {
@@ -80,12 +90,13 @@ impl Default for ServeOptions {
             discipline: Discipline::CentralFifo,
             shards: 0,
             batch: 1,
+            pools: Vec::new(),
         }
     }
 }
 
 impl ServeOptions {
-    /// Effective shard count for this run.
+    /// Effective shard count for this run (homogeneous topology).
     pub fn effective_shards(&self) -> usize {
         match self.discipline {
             Discipline::CentralFifo => 1,
@@ -96,6 +107,36 @@ impl ServeOptions {
                     self.shards
                 }
             }
+        }
+    }
+
+    /// The pool topology this run executes: the explicit pools, or a
+    /// single uniform pool wrapping the homogeneous options.
+    pub fn effective_pools(&self) -> Vec<PoolSpec> {
+        if self.pools.is_empty() {
+            vec![PoolSpec::uniform(self.workers.max(1))]
+        } else {
+            self.pools.clone()
+        }
+    }
+
+    /// Shard count of each effective pool: the homogeneous path keeps
+    /// the discipline/shards semantics (central = 1 shard); explicit
+    /// pools run one shard per worker.
+    pub fn pool_shard_counts(&self) -> Vec<usize> {
+        if self.pools.is_empty() {
+            vec![self.effective_shards()]
+        } else {
+            self.pools.iter().map(|p| p.workers.max(1)).collect()
+        }
+    }
+
+    /// Total executor threads across the fleet.
+    pub fn total_workers(&self) -> usize {
+        if self.pools.is_empty() {
+            self.workers.max(1)
+        } else {
+            super::pool::total_workers(&self.pools)
         }
     }
 }
@@ -109,9 +150,21 @@ pub struct ServeOutcome {
     pub rejected: usize,
     /// Mean smoothed arrival rate at end of run (diagnostics).
     pub final_rate_qps: f64,
-    /// Dequeues satisfied by stealing from a non-home shard (always 0
-    /// under the central discipline).
+    /// Dequeues satisfied by stealing from a non-home shard of the
+    /// worker's own pool (always 0 under the central discipline).
     pub steals: u64,
+    /// Dequeues satisfied by spilling into another pool's shards
+    /// (always 0 on a homogeneous fleet).
+    pub spills: u64,
+    /// Requests served by each pool, ordered as
+    /// [`ServeOptions::effective_pools`] (a single entry on the
+    /// homogeneous path).
+    pub pool_served: Vec<usize>,
+    /// Arrivals the rung-aware router sent to each pool (same order;
+    /// counts offered arrivals, so rejected requests are included —
+    /// `pool_arrivals` sums to the arrival total, `pool_served` to the
+    /// record count).
+    pub pool_arrivals: Vec<u64>,
 }
 
 /// Shared policy state: decisions + switch audit trail.
@@ -201,6 +254,13 @@ impl PolicyHandle {
         next
     }
 
+    /// The cached current rung — one atomic load, up to one in-flight
+    /// switch stale (the same staleness contract as the fast path).
+    /// Drives rung-aware routing and the per-pool depth signal.
+    fn current_rung(&self) -> usize {
+        self.current.load(Ordering::Acquire)
+    }
+
     fn take_switches(&self) -> Vec<SwitchEvent> {
         self.inner.lock().unwrap().switches.clone()
     }
@@ -214,13 +274,31 @@ struct StartGate {
     start: Option<Instant>,
 }
 
-/// Run a serving experiment.
+/// The per-pool depth signal: the queued depth of the pool the current
+/// policy rung routes to. This is what the policy (and the AQM
+/// thresholds, derived per pool) observes — pressure where new traffic
+/// lands — so a threshold crossing moves load *between pools*, not just
+/// along one shared ladder. On a single-pool fleet this is exactly the
+/// aggregate depth (the seed signal).
+fn pooled_depth<T>(
+    queue: &ShardedQueue<T>,
+    pools: &[PoolSpec],
+    handle: &PolicyHandle,
+) -> usize {
+    queue.pool_len(pool_of_rung(pools, handle.current_rung()))
+}
+
+/// Run a serving experiment on the homogeneous runtime.
 ///
 /// * `make_engine` is called **inside** each executor thread (PJRT is
 ///   thread-bound); with `opts.workers == k` it is called k times.
 /// * `arrivals` are offsets in seconds from run start; the injector
 ///   sleeps them out in real time (service times are real compute, so
 ///   time cannot be compressed without changing utilization).
+///
+/// With `opts.pools` set this delegates to [`serve_pools`], handing
+/// every pool the same engine factory; use [`serve_pools`] directly to
+/// build pool-specific engines.
 pub fn serve<F, E>(
     make_engine: F,
     policy: Box<dyn ScalingPolicy>,
@@ -231,7 +309,34 @@ where
     F: Fn() -> Result<E> + Send + Sync,
     E: RequestEngine,
 {
-    let workers = opts.workers.max(1);
+    serve_pools(|_pool: &PoolSpec| make_engine(), policy, arrivals, opts)
+}
+
+/// Run a serving experiment over the (possibly heterogeneous) pool
+/// topology of `opts` — see the module docs for the runtime contract.
+///
+/// `make_engine` is called inside each executor thread with its pool's
+/// [`PoolSpec`], once per worker; a harness can build pool-appropriate
+/// engines (e.g. scale a mock's service times by `speed_factor`). With
+/// a single [`PoolSpec::uniform`] pool this is exactly the homogeneous
+/// k-worker runtime (routing, stealing, depth signal and records all
+/// reduce to the pre-pool code; the parity tests in
+/// `tests/worker_pool.rs` pin it).
+pub fn serve_pools<F, E>(
+    make_engine: F,
+    policy: Box<dyn ScalingPolicy>,
+    arrivals: &[f64],
+    opts: &ServeOptions,
+) -> Result<ServeOutcome>
+where
+    F: Fn(&PoolSpec) -> Result<E> + Send + Sync,
+    E: RequestEngine,
+{
+    if !opts.pools.is_empty() {
+        validate_pools(&opts.pools)?;
+    }
+    let pools: Arc<Vec<PoolSpec>> = Arc::new(opts.effective_pools());
+    let workers = opts.total_workers();
     let gate: Arc<(Mutex<StartGate>, Condvar)> = Arc::new((
         Mutex::new(StartGate { pending: workers, start: None }),
         Condvar::new(),
@@ -248,11 +353,11 @@ where
         }
     };
 
-    let queue: Arc<ShardedQueue<(u64, f64)>> = Arc::new(ShardedQueue::new(
+    let queue: Arc<ShardedQueue<(u64, f64)>> = Arc::new(ShardedQueue::new_pooled(
         opts.queue_capacity,
-        opts.effective_shards(),
+        &opts.pool_shard_counts(),
     ));
-    let monitor = Arc::new(LoadMonitor::new(0.3));
+    let monitor = Arc::new(LoadMonitor::with_pools(0.3, pools.len()));
     let handle = Arc::new(PolicyHandle::new(policy));
     let done = Arc::new(AtomicBool::new(false));
     let rejected = Arc::new(AtomicUsize::new(0));
@@ -267,6 +372,7 @@ where
             let handle = handle.clone();
             let monitor = monitor.clone();
             let done = done.clone();
+            let pools = pools.clone();
             let tick = opts.tick_ms;
             let wait_start = wait_start.clone();
             scope.spawn(move || {
@@ -275,17 +381,21 @@ where
                     std::thread::sleep(Duration::from_millis(tick));
                     let t = start.elapsed().as_secs_f64() * 1e3;
                     monitor.tick(t);
-                    handle.observe_locked(t, queue.len());
+                    handle.observe_locked(t, pooled_depth(&queue, &pools, &handle));
                 }
             });
         }
 
-        // ---- arrival injector.
+        // ---- arrival injector: rung-aware routing — an arrival goes to
+        // the pool whose rung band contains the current policy rung, so
+        // a rung switch across a band boundary redirects new load to a
+        // different pool.
         {
             let queue = queue.clone();
             let handle = handle.clone();
             let monitor = monitor.clone();
             let rejected = rejected.clone();
+            let pools = pools.clone();
             let arrivals = arrivals.to_vec();
             let wait_start = wait_start.clone();
             scope.spawn(move || {
@@ -297,10 +407,11 @@ where
                         std::thread::sleep(target - elapsed);
                     }
                     let t = start.elapsed().as_secs_f64() * 1e3;
-                    monitor.on_arrival();
-                    match queue.push((id as u64, t)) {
+                    let pool = pool_of_rung(&pools, handle.current_rung());
+                    monitor.on_arrival_pool(pool);
+                    match queue.push_pool(pool, (id as u64, t)) {
                         Ok(()) => {
-                            handle.observe(t, queue.len());
+                            handle.observe(t, pooled_depth(&queue, &pools, &handle));
                         }
                         Err(super::queue::QueueError::Full) => {
                             rejected.fetch_add(1, Ordering::Relaxed);
@@ -320,19 +431,25 @@ where
             });
         }
 
-        // ---- executor pool: worker w drains shard w, stealing when dry,
-        // up to `batch` requests per engine dispatch.
+        // ---- executor pools: worker `lw` of pool `p` drains its home
+        // shard, steals within its pool when dry, spills across pools
+        // only when its whole pool is dry — up to `batch` requests per
+        // engine dispatch. Each pool resolves its *own* rung: the policy
+        // rung clamped into the pool's band.
         let batch = opts.batch.max(1);
-        let handles: Vec<_> = (0..workers)
-            .map(|w| {
+        let mut handles = Vec::with_capacity(workers);
+        for (p, spec) in pools.iter().enumerate() {
+            for lw in 0..spec.workers.max(1) {
                 let queue = queue.clone();
                 let handle = handle.clone();
                 let gate = gate.clone();
-                scope.spawn(move || -> Result<Vec<RequestRecord>> {
+                let pools = pools.clone();
+                let spec = spec.clone();
+                handles.push(scope.spawn(move || -> Result<(usize, Vec<RequestRecord>)> {
                     // Build (and PJRT-compile) the engine; the last
                     // worker to finish releases the run clock. A failed
                     // build still releases it so the run can wind down.
-                    let engine = make_engine();
+                    let engine = make_engine(&spec);
                     let start = {
                         let (lock, cv) = &*gate;
                         let mut g = lock.lock().unwrap();
@@ -347,6 +464,7 @@ where
                         g.start.unwrap()
                     };
                     let mut engine = engine?;
+                    let n_rungs = engine.rungs();
                     let now_ms = move || start.elapsed().as_secs_f64() * 1e3;
                     let mut records = Vec::new();
                     // The pop result is exhaustive by construction:
@@ -361,37 +479,43 @@ where
                     // single-item path — exactly the seed loop.
                     if batch == 1 {
                         loop {
-                            match queue.pop_timeout(w, Duration::from_millis(50)) {
+                            match queue.pop_timeout_pool(p, lw, Duration::from_millis(50)) {
                                 Popped::Item((id, arrival_ms)) => {
                                     let t_start = now_ms();
-                                    // Switches take effect at dequeue.
-                                    let idx = handle.observe(t_start, queue.len());
-                                    let out = engine.execute(idx)?;
+                                    // Switches take effect at dequeue;
+                                    // the pool executes the rung of its
+                                    // own band.
+                                    let d = pooled_depth(&queue, &pools, &handle);
+                                    let idx = handle.observe(t_start, d);
+                                    let exec = pool_rung(&pools, p, idx, n_rungs);
+                                    let out = engine.execute(exec)?;
                                     let t_fin = now_ms();
                                     records.push(RequestRecord {
                                         id,
                                         arrival_ms,
                                         start_ms: t_start,
                                         finish_ms: t_fin,
-                                        config_idx: idx,
+                                        config_idx: exec,
                                         accuracy: out.accuracy,
                                         success: out.success,
                                     });
-                                    handle.observe(t_fin, queue.len());
+                                    handle.observe(t_fin, pooled_depth(&queue, &pools, &handle));
                                 }
                                 Popped::TimedOut => {}
                                 Popped::Closed => break,
                             }
                         }
-                        return Ok(records);
+                        return Ok((p, records));
                     }
                     loop {
-                        match queue.pop_batch(w, batch, Duration::from_millis(50)) {
+                        match queue.pop_batch_pool(p, lw, batch, Duration::from_millis(50)) {
                             Popped::Item(items) => {
                                 let t_start = now_ms();
                                 // Switches take effect at dequeue.
-                                let idx = handle.observe(t_start, queue.len());
-                                let outs = engine.execute_batch(idx, items.len())?;
+                                let d = pooled_depth(&queue, &pools, &handle);
+                                let idx = handle.observe(t_start, d);
+                                let exec = pool_rung(&pools, p, idx, n_rungs);
+                                let outs = engine.execute_batch(exec, items.len())?;
                                 anyhow::ensure!(
                                     outs.len() == items.len(),
                                     "engine returned {} outcomes for a batch of {}",
@@ -405,44 +529,53 @@ where
                                         arrival_ms,
                                         start_ms: t_start,
                                         finish_ms: t_fin,
-                                        config_idx: idx,
+                                        config_idx: exec,
                                         accuracy: out.accuracy,
                                         success: out.success,
                                     });
                                 }
-                                handle.observe(t_fin, queue.len());
+                                handle.observe(t_fin, pooled_depth(&queue, &pools, &handle));
                             }
                             Popped::TimedOut => {}
                             Popped::Closed => break,
                         }
                     }
-                    Ok(records)
-                })
-            })
-            .collect();
+                    Ok((p, records))
+                }));
+            }
+        }
 
         // Join every worker before signalling `done` (the monitor must
         // keep ticking while any worker still drains the queue), then
         // merge the per-worker records and propagate the first error.
-        let results: Vec<Result<Vec<RequestRecord>>> = handles
+        let results: Vec<Result<(usize, Vec<RequestRecord>)>> = handles
             .into_iter()
             .map(|h| h.join().expect("executor panicked"))
             .collect();
         done.store(true, Ordering::Relaxed);
         let mut records = Vec::new();
+        let mut pool_served = vec![0usize; pools.len()];
         for r in results {
-            records.extend(r?);
+            let (p, rs) = r?;
+            pool_served[p] += rs.len();
+            records.extend(rs);
         }
         // Deterministic order regardless of which worker served what
         // (a no-op at k = 1: one FIFO consumer pops in id order).
         records.sort_by_key(|r| r.id);
 
+        let pool_arrivals = (0..pools.len())
+            .map(|p| monitor.pool_arrivals_total(p))
+            .collect();
         Ok(ServeOutcome {
             records,
             switches: handle.take_switches(),
             rejected: rejected.load(Ordering::Relaxed),
             final_rate_qps: monitor.rate_qps(),
             steals: queue.steals(),
+            spills: queue.spills(),
+            pool_served,
+            pool_arrivals,
         })
     })
 }
@@ -631,6 +764,30 @@ mod tests {
             ..ServeOptions::default()
         };
         assert_eq!(pinned.effective_shards(), 3);
+    }
+
+    #[test]
+    fn pool_topology_resolution() {
+        // Homogeneous options wrap into one uniform pool; the shard
+        // layout keeps the discipline semantics (central = 1 shard).
+        let legacy = ServeOptions { workers: 4, ..ServeOptions::default() };
+        assert_eq!(legacy.effective_pools(), vec![PoolSpec::uniform(4)]);
+        assert_eq!(legacy.pool_shard_counts(), vec![1]);
+        assert_eq!(legacy.total_workers(), 4);
+        let sharded = ServeOptions {
+            workers: 4,
+            discipline: Discipline::ShardedSteal,
+            ..ServeOptions::default()
+        };
+        assert_eq!(sharded.pool_shard_counts(), vec![4]);
+        // Explicit pools override workers and run per-worker shards.
+        let pooled = ServeOptions {
+            workers: 1,
+            pools: crate::serving::pool::parse_pools("fast:3:1.0,acc:2:2.0").unwrap(),
+            ..ServeOptions::default()
+        };
+        assert_eq!(pooled.pool_shard_counts(), vec![3, 2]);
+        assert_eq!(pooled.total_workers(), 5);
     }
 
     #[test]

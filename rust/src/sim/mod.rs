@@ -29,10 +29,25 @@
 //!   and [`simulate_disc`] reproduces `CentralFifo` record-for-record
 //!   (asserted by the parity test below).
 //!
+//! * **Pooled** ([`simulate_pools`]) — the heterogeneous-fleet mirror of
+//!   the live `serve_pools` runtime: named worker pools
+//!   ([`crate::serving::pool::PoolSpec`]) with per-pool shards,
+//!   rung-aware routing (arrivals go to the pool whose rung band holds
+//!   the current policy rung), within-pool stealing, cross-pool spill
+//!   only when a pool is fully dry, per-pool service-time scaling
+//!   (`speed_factor`) and per-pool engine rungs (the policy rung clamped
+//!   into the pool's band). A single uniform pool reproduces
+//!   `ShardedSteal` record-for-record, which is what makes every
+//!   heterogeneous routing decision quantifiable against the
+//!   homogeneous baseline and against [`theory`]
+//!   (`tests/theory_validation.rs` holds the DES-vs-Erlang-C suite).
+//!
 //! Both disciplines consult the policy on every arrival and every
 //! dequeue/departure against the *aggregate* queued depth — the same
 //! total-across-shards signal the live `ShardedQueue` maintains
-//! lock-free. Known divergence from the live server (inherited from the
+//! lock-free ([`simulate_pools`] feeds the per-pool depth of the current
+//! rung's home pool instead, mirroring the live pooled signal; the two
+//! coincide on a single pool). Known divergence from the live server (inherited from the
 //! seed simulator): the arrival-time policy observation here includes
 //! the in-service count (≤ k) on top of the queue depth, while the live
 //! injector observes queue depth only — kept so k = 1 results stay
@@ -59,7 +74,9 @@
 pub mod service;
 pub mod theory;
 
-pub use service::{DeterministicService, LognormalService, ServiceModel};
+pub use service::{
+    DeterministicService, ExponentialService, LognormalService, ServiceModel,
+};
 
 // The queue discipline is defined next to the live queues and shared
 // with the DES so both sides dispatch identically.
@@ -68,6 +85,7 @@ pub use crate::serving::Discipline;
 use crate::metrics::{RequestRecord, SwitchEvent};
 use crate::planner::Plan;
 use crate::serving::policy::ScalingPolicy;
+use crate::serving::pool::{pool_of_rung, pool_rung, validate_pools, PoolSpec};
 use crate::util::Rng;
 
 /// Result of one simulated run.
@@ -75,9 +93,12 @@ use crate::util::Rng;
 pub struct SimOutcome {
     pub records: Vec<RequestRecord>,
     pub switches: Vec<SwitchEvent>,
-    /// Dispatches satisfied by stealing from a non-home shard (always 0
-    /// under [`Discipline::CentralFifo`]).
+    /// Dispatches satisfied by stealing from a non-home shard of the
+    /// server's own pool (always 0 under [`Discipline::CentralFifo`]).
     pub steals: u64,
+    /// Dispatches satisfied by spilling into another pool's shards
+    /// (always 0 outside [`simulate_pools`]).
+    pub spills: u64,
 }
 
 /// Simulate serving `arrivals` (seconds) under `policy` on a single
@@ -276,7 +297,234 @@ pub fn simulate_disc<P: ScalingPolicy, S: ServiceModel>(
     }
 
     records.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
-    SimOutcome { records, switches, steals }
+    SimOutcome { records, switches, steals, spills: 0 }
+}
+
+/// Simulate serving on a heterogeneous fleet of named worker pools —
+/// the DES mirror of [`crate::serving::serve_pools`].
+///
+/// Each pool runs `workers` servers over `workers` per-pool shards.
+/// Arrivals route to the pool whose rung band contains the current
+/// policy rung (per-pool round-robin); a freeing server drains its home
+/// shard (front run of up to `batch`), steals half a sibling shard's
+/// backlog when dry, and **spills** into other pools' shards only when
+/// its whole pool is dry — exactly the live
+/// `ShardedQueue::try_pop_batch_pool` walk. A pool executes the policy
+/// rung clamped into its own band ([`pool_rung`]) and its sampled
+/// service times are scaled by its `speed_factor`; the policy observes
+/// the queued depth of the current rung's home pool (the per-pool AQM
+/// signal) at every arrival, dispatch and departure.
+///
+/// A single [`PoolSpec::uniform`] pool reproduces
+/// [`simulate_disc`] under [`Discipline::ShardedSteal`] (one shard per
+/// worker) **record-for-record** — same rng consumption, same
+/// timestamps, same switches and steal counts; the parity test below
+/// pins it.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_pools<P: ScalingPolicy, S: ServiceModel>(
+    arrivals: &[f64],
+    plan: &Plan,
+    policy: &mut P,
+    service: &S,
+    seed: u64,
+    pools: &[PoolSpec],
+    batch: usize,
+) -> SimOutcome {
+    validate_pools(pools).expect("invalid pool topology");
+    let batch = batch.max(1);
+    let alpha = plan.batch_alpha_ms.max(0.0);
+    let n_rungs = plan.ladder.len();
+
+    // Shard/server layout: pool p owns `workers_p` contiguous shards and
+    // the same number of server slots; server slot w of pool p has home
+    // shard `pool_start_p + local_w` (shards == workers within a pool).
+    let mut pool_ranges: Vec<(usize, usize)> = Vec::with_capacity(pools.len());
+    let mut server_pool: Vec<usize> = Vec::new();
+    let mut server_local: Vec<usize> = Vec::new();
+    let mut cursor = 0usize;
+    for (p, spec) in pools.iter().enumerate() {
+        let w = spec.workers.max(1);
+        pool_ranges.push((cursor, cursor + w));
+        for local in 0..w {
+            server_pool.push(p);
+            server_local.push(local);
+        }
+        cursor += w;
+    }
+    let nsh = cursor;
+    let workers = cursor;
+
+    let mut rng = Rng::new(seed);
+    let mut records = Vec::with_capacity(arrivals.len());
+    let mut switches = Vec::new();
+    let mut steals = 0u64;
+    let mut spills = 0u64;
+
+    let mut queues: Vec<std::collections::VecDeque<(u64, f64)>> =
+        (0..nsh).map(|_| std::collections::VecDeque::new()).collect();
+    let mut pool_queued = vec![0usize; pools.len()];
+    let mut queued_total = 0usize;
+    let mut routers = vec![0usize; pools.len()];
+    let mut busy: Vec<f64> = vec![f64::NEG_INFINITY; workers];
+    let mut observed = policy.current();
+
+    let observe = |policy: &mut P,
+                       switches: &mut Vec<SwitchEvent>,
+                       observed: &mut usize,
+                       now: f64,
+                       depth: usize| {
+        let next = policy.decide(now, depth);
+        if next != *observed {
+            switches.push(SwitchEvent { at_ms: now, from_idx: *observed, to_idx: next });
+            *observed = next;
+        }
+        next
+    };
+
+    let mut i = 0usize; // next arrival index
+    let n = arrivals.len();
+    let mut next_id = 0u64;
+
+    while i < n || queued_total > 0 {
+        let next_arrival = if i < n { arrivals[i] * 1000.0 } else { f64::INFINITY };
+
+        // Earliest-free server (ties broken by lowest index, i.e. by
+        // pool order — reference pools are listed first).
+        let (slot, earliest) = busy
+            .iter()
+            .copied()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+
+        if queued_total > 0 && earliest <= next_arrival {
+            // Dispatch to server `slot`: home shard, then a within-pool
+            // steal sweep, then a cross-pool spill sweep — the live
+            // pooled queue walk exactly.
+            let p = server_pool[slot];
+            let (lo, hi) = pool_ranges[p];
+            let len_p = hi - lo;
+            let home = server_local[slot] % len_p;
+            let mut found: Option<(usize, bool, bool)> = None; // (shard, steal, spill)
+            for d in 0..len_p {
+                let s = lo + (home + d) % len_p;
+                if !queues[s].is_empty() {
+                    found = Some((s, d > 0, false));
+                    break;
+                }
+            }
+            if found.is_none() {
+                'spill: for d in 1..pools.len() {
+                    let q = (p + d) % pools.len();
+                    let (qlo, qhi) = pool_ranges[q];
+                    for s in qlo..qhi {
+                        if !queues[s].is_empty() {
+                            found = Some((s, false, true));
+                            break 'spill;
+                        }
+                    }
+                }
+            }
+            let (shard, is_steal, is_spill) =
+                found.expect("queued_total > 0 but every shard empty");
+            if is_steal {
+                steals += 1;
+            }
+            if is_spill {
+                spills += 1;
+            }
+            let take = if is_steal || is_spill {
+                queues[shard].len().div_ceil(2).min(batch)
+            } else {
+                queues[shard].len().min(batch)
+            };
+            let mut taken: Vec<(u64, f64)> = Vec::with_capacity(take);
+            for _ in 0..take {
+                taken.push(queues[shard].pop_front().unwrap());
+            }
+            queued_total -= take;
+            let shard_pool = pool_of_shard(&pool_ranges, shard);
+            pool_queued[shard_pool] -= take;
+            // The batch starts once the server is free and its last
+            // (latest-arriving, FIFO within the shard) request is in.
+            let start = earliest.max(taken.last().unwrap().1);
+            // Switches apply at dequeue: one policy consultation per
+            // batch, against the per-pool depth of the current rung's
+            // home pool (the signal the live PolicyHandle feeds).
+            let sig = pool_queued[pool_of_rung(pools, observed)];
+            let idx = observe(policy, &mut switches, &mut observed, start, sig);
+            // The pool executes its own rung: the policy rung clamped
+            // into the pool's band; its hardware scales every sampled
+            // service time by the pool's speed factor.
+            let exec = pool_rung(pools, p, idx, n_rungs);
+            let speed = pools[p].speed_factor;
+            // Batch service: each sampled time is α + βᵢ, so n requests
+            // in one dispatch cost Σ sᵢ − (n−1)·α (one dispatch cost, n
+            // marginals); α is clamped into [0, s̄(1)] of the *executing*
+            // pool's rung. At B = 1 this is the sample itself.
+            let alpha_k = alpha.clamp(0.0, plan.ladder[exec].mean_ms * speed);
+            let svc = (0..take)
+                .map(|_| service.sample_ms(exec, &mut rng) * speed)
+                .sum::<f64>()
+                - (take as f64 - 1.0) * alpha_k;
+            let finish = start + svc.max(0.0);
+            busy[slot] = finish;
+            for (id, arr_ms) in taken {
+                records.push(RequestRecord {
+                    id,
+                    arrival_ms: arr_ms,
+                    start_ms: start,
+                    finish_ms: finish,
+                    config_idx: exec,
+                    accuracy: plan.ladder[exec].accuracy,
+                    success: None,
+                });
+            }
+            // Departure observation (once per batch).
+            let sig = pool_queued[pool_of_rung(pools, observed)];
+            observe(policy, &mut switches, &mut observed, finish, sig);
+        } else if i < n {
+            // Admit the next arrival: rung-aware routing — round-robin
+            // over the shards of the current rung's home pool.
+            let arr_ms = arrivals[i] * 1000.0;
+            let rp = pool_of_rung(pools, observed);
+            let (lo, hi) = pool_ranges[rp];
+            let shard = lo + routers[rp] % (hi - lo);
+            routers[rp] += 1;
+            queues[shard].push_back((next_id, arr_ms));
+            queued_total += 1;
+            pool_queued[rp] += 1;
+            next_id += 1;
+            i += 1;
+            // In-flight requests of the routed pool count toward the
+            // observed per-pool depth.
+            let in_flight = busy
+                .iter()
+                .enumerate()
+                .filter(|&(w, &b)| server_pool[w] == rp && b > arr_ms)
+                .count();
+            observe(
+                policy,
+                &mut switches,
+                &mut observed,
+                arr_ms,
+                pool_queued[rp] + in_flight,
+            );
+        } else {
+            break;
+        }
+    }
+
+    records.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
+    SimOutcome { records, switches, steals, spills }
+}
+
+/// Owning pool of a shard given the contiguous pool shard ranges.
+fn pool_of_shard(pool_ranges: &[(usize, usize)], shard: usize) -> usize {
+    pool_ranges
+        .iter()
+        .position(|&(lo, hi)| (lo..hi).contains(&shard))
+        .expect("shard outside every pool range")
 }
 
 #[cfg(test)]
@@ -680,6 +928,108 @@ mod tests {
                 .or_default() += 1;
         }
         assert!(sizes.values().all(|&n| n <= 8), "batch bound violated");
+    }
+
+    #[test]
+    fn pooled_single_uniform_pool_reproduces_sharded_des_exactly() {
+        // The tentpole parity pin: one homogeneous pool (speed 1, offset
+        // 0) must be the existing sharded k-worker path record-for-record
+        // — same rng consumption, timestamps, switches and steal counts —
+        // at several pool sizes and batch bounds, driving a switching
+        // policy so routing reads the live rung.
+        let plan = plan2();
+        let arr = arrivals(12.0, 90.0);
+        let svc = LognormalService::from_plan(&plan, 0.25);
+        for k in [1usize, 4] {
+            for batch in [1usize, 8] {
+                let mut pd = ElasticoPolicy::new(plan.clone());
+                let disc = simulate_disc(
+                    &arr,
+                    &plan,
+                    &mut pd,
+                    &svc,
+                    42,
+                    k,
+                    Discipline::ShardedSteal,
+                    0,
+                    batch,
+                );
+                let mut pp = ElasticoPolicy::new(plan.clone());
+                let pooled = simulate_pools(
+                    &arr,
+                    &plan,
+                    &mut pp,
+                    &svc,
+                    42,
+                    &[crate::serving::pool::PoolSpec::uniform(k)],
+                    batch,
+                );
+                assert!(
+                    records_identical(&disc.records, &pooled.records),
+                    "k={k} B={batch}"
+                );
+                assert_eq!(disc.switches.len(), pooled.switches.len());
+                assert_eq!(disc.steals, pooled.steals, "k={k} B={batch}");
+                assert_eq!(pooled.spills, 0, "one pool can never spill");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_heterogeneous_conserves_and_spills_only_off_band() {
+        // fast:2 owns rung 0, accurate:2 (2x slower) owns rung 1+. A
+        // static rung-0 policy routes everything to the fast pool, so
+        // the accurate pool can only work via spill — every request is
+        // still served exactly once and spills must appear. Requests
+        // spilled into the accurate pool execute at *its* band rung.
+        let plan = plan2();
+        let pools = crate::serving::pool::parse_pools("fast:2:1.0,accurate:2:2.0").unwrap();
+        let arr: Vec<f64> = (0..200).map(|i| i as f64 * 0.001).collect();
+        let svc = DeterministicService { means: vec![10.0, 10.0] };
+        let mut pol = StaticPolicy::new(0, "fast");
+        let out = simulate_pools(&arr, &plan, &mut pol, &svc, 3, &pools, 1);
+        assert_eq!(out.records.len(), arr.len());
+        let mut ids: Vec<u64> = out.records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..arr.len() as u64).collect::<Vec<u64>>());
+        assert!(out.spills > 0, "idle accurate pool must spill");
+        // Spilled requests ran at the accurate pool's band (rung 1) and
+        // routed requests at the policy rung (rung 0) — both appear.
+        let accurate = out.records.iter().filter(|r| r.config_idx == 1).count();
+        let fast = out.records.iter().filter(|r| r.config_idx == 0).count();
+        assert!(accurate > 0 && fast > 0, "fast {fast} accurate {accurate}");
+        assert_eq!(accurate as u64, {
+            // Every spill dispatch at B=1 takes exactly one request.
+            out.spills
+        });
+    }
+
+    #[test]
+    fn pooled_routing_follows_the_policy_rung_across_bands() {
+        // Elastico under a spike: when the controller upscales from the
+        // accurate band to the fast band, new load must land on the fast
+        // pool (and vice versa under low load) — both pools end up
+        // serving, and per-shard FIFO holds within every pool.
+        let plan = plan2();
+        let pools = crate::serving::pool::parse_pools("fast:2:1.0,accurate:2:1.5").unwrap();
+        let spec = crate::workload::WorkloadSpec {
+            base_qps: 10.0,
+            duration_s: 120.0,
+            pattern: crate::workload::Pattern::paper_spike(),
+            seed: 9,
+        };
+        let arr = crate::workload::generate_arrivals(&spec);
+        let svc = LognormalService::from_plan(&plan, 0.25);
+        let mut ela = ElasticoPolicy::new(plan.clone());
+        let out = simulate_pools(&arr, &plan, &mut ela, &svc, 3, &pools, 1);
+        assert_eq!(out.records.len(), arr.len());
+        assert!(out.switches.len() >= 2, "spike should force rung switches");
+        let fast = out.records.iter().filter(|r| r.config_idx == 0).count();
+        let slow = out.records.iter().filter(|r| r.config_idx >= 1).count();
+        assert!(
+            fast > 0 && slow > 0,
+            "switching must move load between pools (fast {fast}, slow {slow})"
+        );
     }
 
     #[test]

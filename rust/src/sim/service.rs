@@ -79,6 +79,28 @@ impl ServiceModel for LognormalService {
     }
 }
 
+/// Exponential (memoryless) service — the M/M/k reference model the
+/// Erlang-C formulas are exact for; used by the DES-vs-theory validation
+/// suite (`tests/theory_validation.rs`). Memorylessness also makes the
+/// occupancy process insensitive to the dispatch discipline (central,
+/// sharded-steal, pooled), which is what lets one theory target validate
+/// every queue walk.
+#[derive(Clone, Debug)]
+pub struct ExponentialService {
+    /// Per-rung mean service time (ms).
+    pub means: Vec<f64>,
+}
+
+impl ServiceModel for ExponentialService {
+    fn sample_ms(&self, idx: usize, rng: &mut Rng) -> f64 {
+        rng.exponential(1.0 / self.means[idx])
+    }
+
+    fn mean_ms(&self, idx: usize) -> f64 {
+        self.means[idx]
+    }
+}
+
 /// Deterministic service (tests / M/D/1 analyses).
 #[derive(Clone, Debug)]
 pub struct DeterministicService {
@@ -128,5 +150,25 @@ mod tests {
         let mut rng = Rng::new(0);
         assert_eq!(d.sample_ms(1, &mut rng), 20.0);
         assert_eq!(d.mean_ms(0), 10.0);
+    }
+
+    #[test]
+    fn exponential_matches_mean_and_cv() {
+        let e = ExponentialService { means: vec![10.0] };
+        let mut rng = Rng::new(9);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let s = e.sample_ms(0, &mut rng);
+            assert!(s >= 0.0);
+            sum += s;
+            sq += s * s;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!((mean - 10.0).abs() < 0.1, "mean {mean}");
+        // Exponential: cv = 1 (variance = mean²).
+        assert!((var / (mean * mean) - 1.0).abs() < 0.03, "cv² {}", var / (mean * mean));
+        assert_eq!(e.mean_ms(0), 10.0);
     }
 }

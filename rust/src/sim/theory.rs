@@ -83,6 +83,7 @@ mod tests {
             workers: 1,
             batch: 1,
             batch_alpha_ms: 0.0,
+            pools: vec![],
             ladder: vec![ConfigPolicy {
                 label: "only".into(),
                 config: vec![],

@@ -1,0 +1,212 @@
+//! DES-vs-theory validation (the `test` archetype's arming suite):
+//! the pooled discrete-event simulator against closed-form queueing
+//! theory.
+//!
+//! * **Homogeneous pools vs M/M/k**: a single uniform pool of k
+//!   exponential servers is an M/M/k queue — work stealing keeps the
+//!   servers non-idling and exponential service makes the occupancy
+//!   process insensitive to which shard a job sits in, so the mean wait
+//!   must match `mmk_mean_wait` and the waiting fraction must match
+//!   Erlang-C `C(k, a)` (PASTA). Checked at utilizations 0.3 / 0.7 /
+//!   0.9 within 5% — this is the bound the Erlang-C threshold mode
+//!   (`planner::ThresholdMode::ErlangC`) rests on.
+//! * **Heterogeneous bracketing**: a fast+slow fleet must sit strictly
+//!   between its all-fast and all-slow homogeneous bounds in mean
+//!   latency — the sanity envelope for every routing/spill decision the
+//!   pooled runtime makes.
+
+use compass::planner::{ConfigPolicy, Plan};
+use compass::serving::pool::{parse_pools, PoolSpec};
+use compass::serving::StaticPolicy;
+use compass::sim::theory::{erlang_c, mmk_mean_wait};
+use compass::sim::{simulate_pools, ExponentialService};
+use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
+
+/// A one-rung plan with an effectively-unbounded SLO (theory runs are
+/// about the queue, not the controller).
+fn plan_one(mean_ms: f64) -> Plan {
+    Plan {
+        slo_ms: 1e9,
+        slack_buffer_ms: 0.0,
+        up_cooldown_ms: 0.0,
+        down_cooldown_ms: 0.0,
+        workers: 1,
+        batch: 1,
+        batch_alpha_ms: 0.0,
+        pools: vec![],
+        ladder: vec![ConfigPolicy {
+            label: "only".into(),
+            config: vec![],
+            accuracy: 0.8,
+            mean_ms,
+            p95_ms: mean_ms,
+            queue_slack_ms: 0.0,
+            upscale_threshold: u64::MAX,
+            downscale_threshold: None,
+        }],
+    }
+}
+
+fn poisson_arrivals(qps: f64, duration_s: f64, seed: u64) -> Vec<f64> {
+    generate_arrivals(&WorkloadSpec {
+        base_qps: qps,
+        duration_s,
+        pattern: Pattern::Steady,
+        seed,
+    })
+}
+
+fn mean_wait_ms(records: &[compass::metrics::RequestRecord]) -> f64 {
+    records.iter().map(|r| r.wait_ms()).sum::<f64>() / records.len() as f64
+}
+
+fn waiting_fraction(records: &[compass::metrics::RequestRecord]) -> f64 {
+    records.iter().filter(|r| r.wait_ms() > 1e-9).count() as f64 / records.len() as f64
+}
+
+#[test]
+fn homogeneous_pool_matches_mmk_wait_and_erlang_c_across_utilizations() {
+    // k = 2 exponential servers, mean service 10 ms (μ = 0.1/ms). For
+    // each target ρ the run is long enough that the DES estimator's
+    // error sits well inside the 5% acceptance band (heavier traffic
+    // mixes slower, so ρ = 0.9 gets the longest run).
+    let k = 2usize;
+    let mean_ms = 10.0;
+    let mu_per_ms = 1.0 / mean_ms;
+    let plan = plan_one(mean_ms);
+    let svc = ExponentialService { means: vec![mean_ms] };
+
+    for (rho, duration_s, seed) in
+        [(0.3, 6000.0, 11u64), (0.7, 6000.0, 13), (0.9, 9000.0, 17)]
+    {
+        let qps = rho * k as f64 * 100.0; // λ = ρ·k·μ, μ = 100 qps/server
+        let arrivals = poisson_arrivals(qps, duration_s, seed);
+        let mut pol = StaticPolicy::new(0, "only");
+        let out = simulate_pools(
+            &arrivals,
+            &plan,
+            &mut pol,
+            &svc,
+            seed,
+            &[PoolSpec::uniform(k)],
+            1,
+        );
+        assert_eq!(out.records.len(), arrivals.len());
+
+        // Mean wait vs M/M/k.
+        let lambda_per_ms = qps / 1000.0;
+        let expect_wait = mmk_mean_wait(k, lambda_per_ms, mu_per_ms);
+        let measured_wait = mean_wait_ms(&out.records);
+        assert!(
+            (measured_wait - expect_wait).abs() / expect_wait < 0.05,
+            "ρ={rho}: mean wait {measured_wait:.3} ms vs M/M/{k} {expect_wait:.3} ms"
+        );
+
+        // Waiting probability vs Erlang-C (PASTA: an arrival waits iff
+        // all k servers are busy).
+        let expect_c = erlang_c(k, k as f64 * rho);
+        let measured_c = waiting_fraction(&out.records);
+        assert!(
+            (measured_c - expect_c).abs() / expect_c < 0.05,
+            "ρ={rho}: P(wait) {measured_c:.4} vs C({k}, {:.1}) = {expect_c:.4}",
+            k as f64 * rho
+        );
+    }
+}
+
+#[test]
+fn heterogeneous_wait_is_bracketed_by_the_homogeneous_bounds() {
+    // 4 workers at λ = 140 qps, exponential service, mean 10 ms on
+    // reference hardware. Three fleets over the same arrival trace:
+    // all-fast (4 @ 1x), heterogeneous (2 @ 1x + 2 @ 2x), all-slow
+    // (4 @ 2x; ρ = 0.7 — the tightest of the three, still stable). The
+    // pooled fleet's mean latency must land strictly between the two
+    // homogeneous bounds: replacing fast workers with slower ones can
+    // only hurt, but not as much as slowing the whole fleet.
+    let plan = plan_one(10.0);
+    let svc = ExponentialService { means: vec![10.0] };
+    let arrivals = poisson_arrivals(140.0, 2000.0, 23);
+
+    let mean_latency = |pools: &[PoolSpec]| {
+        let mut pol = StaticPolicy::new(0, "only");
+        let out = simulate_pools(&arrivals, &plan, &mut pol, &svc, 23, pools, 1);
+        assert_eq!(out.records.len(), arrivals.len(), "conservation");
+        out.records.iter().map(|r| r.latency_ms()).sum::<f64>()
+            / out.records.len() as f64
+    };
+
+    let all_fast = mean_latency(&[PoolSpec::uniform(4)]);
+    let het = mean_latency(&parse_pools("fast:2:1.0,slow:2:2.0").unwrap());
+    let all_slow = mean_latency(&[PoolSpec::new("slow", 4, 0, 2.0)]);
+
+    assert!(
+        all_fast < het && het < all_slow,
+        "bracketing violated: all-fast {all_fast:.2} ms, het {het:.2} ms, \
+         all-slow {all_slow:.2} ms"
+    );
+    // The bounds are not degenerate: the envelope is clearly open.
+    assert!(all_slow > all_fast * 1.2, "bounds too tight to be meaningful");
+}
+
+#[test]
+fn erlang_thresholds_agree_with_the_des_measured_waiting_probability() {
+    // Close the loop between the Erlang-C threshold derivation and the
+    // simulator: the planner's thresholds assume the waiting
+    // probability C(k, k·ρ̂) — re-derive the depth budget from the
+    // waiting probability the pooled DES actually *measures* at ρ̂ and
+    // it must land on the plan's N↑ within 5%. This fails if either the
+    // analytic C drifts from the simulated system or the derivation
+    // stops using it as documented (N↑ = ⌊k·Δ/(s̄·C)⌋).
+    use compass::planner::{
+        derive_plan, AqmParams, LatencyProfile, ProfiledConfig, ThresholdMode,
+    };
+    let mean_ms = 10.0;
+    let front = vec![ProfiledConfig {
+        config: vec![],
+        label: "fast".into(),
+        accuracy: 0.8,
+        latency: LatencyProfile {
+            mean_ms,
+            p50_ms: mean_ms,
+            p95_ms: 14.0,
+            runs: 10,
+        },
+    }];
+    let plan_sim = plan_one(mean_ms);
+    let svc = ExponentialService { means: vec![mean_ms] };
+    let rho_hat = 0.45; // AqmParams::target_rho default
+    for (k, duration_s, seed) in [(2usize, 4000.0, 29u64), (4, 3000.0, 31)] {
+        // Measure P(wait) in the pooled DES at the assumed operating
+        // point ρ̂ — the quantity the Erlang-C mode plugs in.
+        let qps = rho_hat * k as f64 * 100.0;
+        let arrivals = poisson_arrivals(qps, duration_s, seed);
+        let mut pol = StaticPolicy::new(0, "only");
+        let out = simulate_pools(
+            &arrivals,
+            &plan_sim,
+            &mut pol,
+            &svc,
+            seed,
+            &[PoolSpec::uniform(k)],
+            1,
+        );
+        let c_measured = waiting_fraction(&out.records);
+
+        let params = AqmParams::for_slo_workers(300.0, k)
+            .with_thresholds(ThresholdMode::ErlangC);
+        let plan = derive_plan(&front, params);
+        let n_up = plan.ladder[0].upscale_threshold as f64;
+        let slack = plan.ladder[0].queue_slack_ms;
+        // Depth budget recomputed from the *measured* C.
+        let budget_measured = k as f64 * slack / (mean_ms * c_measured);
+        assert!(
+            (budget_measured - n_up).abs() / n_up < 0.05,
+            "k={k}: N↑ {n_up} vs DES-measured budget {budget_measured:.1} \
+             (measured C {c_measured:.4}, analytic C {:.4})",
+            erlang_c(k, k as f64 * rho_hat)
+        );
+        // And the legacy bound is genuinely deepened (C < 1).
+        let legacy = derive_plan(&front, AqmParams::for_slo_workers(300.0, k));
+        assert!(plan.ladder[0].upscale_threshold > legacy.ladder[0].upscale_threshold);
+    }
+}

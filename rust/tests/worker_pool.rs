@@ -11,7 +11,10 @@ use std::time::Duration;
 
 use anyhow::Result;
 use compass::serving::executor::RequestEngine;
-use compass::serving::{serve, Discipline, ServeOptions, StaticPolicy};
+use compass::serving::pool::PoolSpec;
+use compass::serving::{
+    parse_pools, serve, serve_pools, Discipline, ServeOptions, StaticPolicy,
+};
 use compass::workflows::ExecOutcome;
 
 /// Scripted engine that sleeps out its service time (I/O-bound model).
@@ -27,6 +30,23 @@ impl RequestEngine for SleepEngine {
 
     fn rungs(&self) -> usize {
         1
+    }
+}
+
+/// Two-rung sleeping engine whose accuracy names the rung it ran —
+/// makes the executing pool's band visible in the records.
+struct RungedSleepEngine {
+    service_ms: [f64; 2],
+}
+
+impl RequestEngine for RungedSleepEngine {
+    fn execute(&mut self, idx: usize) -> Result<ExecOutcome> {
+        std::thread::sleep(Duration::from_secs_f64(self.service_ms[idx] / 1e3));
+        Ok(ExecOutcome { accuracy: if idx == 0 { 0.7 } else { 0.9 }, success: None })
+    }
+
+    fn rungs(&self) -> usize {
+        2
     }
 }
 
@@ -63,6 +83,7 @@ fn run_pool_batched(
             discipline,
             shards: 0,
             batch,
+            ..ServeOptions::default()
         },
     )
     .unwrap();
@@ -161,6 +182,7 @@ fn stealing_loses_nothing_and_never_spuriously_rejects() {
             discipline: Discipline::ShardedSteal,
             shards: 0,
             batch: 1,
+            ..ServeOptions::default()
         },
     )
     .unwrap();
@@ -189,6 +211,7 @@ fn steal_only_shards_are_fully_drained() {
             discipline: Discipline::ShardedSteal,
             shards: 6,
             batch: 1,
+            ..ServeOptions::default()
         },
     )
     .unwrap();
@@ -283,6 +306,152 @@ fn single_worker_pool_preserves_fifo_service_order() {
     for w in by_start.windows(2) {
         assert!(w[1].arrival_ms >= w[0].arrival_ms - 1e-6, "FIFO violated");
         assert!(w[1].start_ms >= w[0].finish_ms - 1.0, "overlap at k=1");
+    }
+}
+
+// ---- heterogeneous pools (rung-aware routing, spill) -----------------
+
+#[test]
+fn single_uniform_pool_reproduces_the_k_worker_path() {
+    // The live half of the parity pin (the DES half asserts bit-for-bit;
+    // real threads can only assert semantics): a single homogeneous pool
+    // (speed 1, offset 0) must serve everything exactly once with the
+    // k-worker semantics — FIFO order at k = 1, no spill ever, and the
+    // same ~4x pool speedup at k = 4 as the pre-pool runtime.
+    let arrivals: Vec<f64> = (0..30).map(|i| i as f64 * 0.002).collect();
+    let out = serve(
+        || Ok(SleepEngine { service_ms: 4.0 }),
+        Box::new(StaticPolicy::new(0, "only")),
+        &arrivals,
+        &ServeOptions { pools: vec![PoolSpec::uniform(1)], ..ServeOptions::default() },
+    )
+    .unwrap();
+    assert_eq!(out.records.len(), 30);
+    assert_eq!(out.steals, 0);
+    assert_eq!(out.spills, 0, "one pool can never spill");
+    assert_eq!(out.pool_served, vec![30]);
+    let mut by_start = out.records.clone();
+    by_start.sort_by(|a, b| a.start_ms.partial_cmp(&b.start_ms).unwrap());
+    for w in by_start.windows(2) {
+        assert!(w[1].arrival_ms >= w[0].arrival_ms - 1e-6, "FIFO violated");
+        assert!(w[1].start_ms >= w[0].finish_ms - 1.0, "overlap at k=1");
+    }
+    // k = 4 through the pooled path keeps the pool speedup.
+    let run_k = |pools: Vec<PoolSpec>| {
+        let arrivals = vec![0.0; 40];
+        let out = serve(
+            || Ok(SleepEngine { service_ms: 25.0 }),
+            Box::new(StaticPolicy::new(0, "only")),
+            &arrivals,
+            &ServeOptions { pools, ..ServeOptions::default() },
+        )
+        .unwrap();
+        assert_eq!(out.records.len(), 40);
+        out.records.iter().map(|r| r.finish_ms).fold(0.0_f64, f64::max)
+    };
+    let t1 = run_k(vec![PoolSpec::uniform(1)]);
+    let t4 = run_k(vec![PoolSpec::uniform(4)]);
+    assert!(t1 / t4 >= 3.0, "pooled k=4 should be ~4x faster: {t1:.0} vs {t4:.0}");
+}
+
+#[test]
+fn rung_aware_routing_keeps_traffic_on_the_policy_rungs_pool() {
+    // fast:2 owns rung 0, accurate:2 owns rung 1. A static rung-0
+    // policy routes every arrival to the fast pool; the idle accurate
+    // workers may only work by spilling — and whatever they serve runs
+    // at THEIR band rung (visible as accuracy 0.9). Conservation and
+    // per-pool accounting must hold throughout.
+    let pools = parse_pools("fast:2:1.0,accurate:2:1.0").unwrap();
+    let n = 120usize;
+    let arrivals = vec![0.0; n];
+    let out = serve_pools(
+        |_pool: &PoolSpec| Ok(RungedSleepEngine { service_ms: [2.0, 2.0] }),
+        Box::new(StaticPolicy::new(0, "fast")),
+        &arrivals,
+        &ServeOptions { pools: pools.clone(), ..ServeOptions::default() },
+    )
+    .unwrap();
+    assert_eq!(out.records.len() + out.rejected, n, "conservation");
+    assert_eq!(out.rejected, 0);
+    let ids: Vec<u64> = out.records.iter().map(|r| r.id).collect();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<u64>>(), "lost or duplicated ids");
+    assert_eq!(out.pool_served.iter().sum::<usize>(), n);
+    // Rung-aware routing under a static rung-0 policy: EVERY arrival is
+    // routed to the fast pool; the accurate pool receives none.
+    assert_eq!(out.pool_arrivals, vec![n as u64, 0], "router left the band's pool");
+    // With 120 simultaneous arrivals on a 2-worker home pool, the other
+    // pool's 2 workers must have spilled; every spilled request executed
+    // at the accurate pool's band rung.
+    assert!(out.spills > 0, "idle accurate pool must spill");
+    assert_eq!(
+        out.records.iter().filter(|r| r.config_idx == 1).count(),
+        out.pool_served[1],
+        "requests served by the accurate pool ran at its band rung"
+    );
+    assert_eq!(
+        out.records.iter().filter(|r| r.config_idx == 1).count() as u64,
+        out.spills,
+        "at B=1 every accurate-pool dispatch is one spill"
+    );
+}
+
+#[test]
+fn pool_specific_engines_receive_their_pool_spec() {
+    // serve_pools hands each worker its own PoolSpec, so a harness can
+    // build pool-appropriate engines: here the slow pool sleeps
+    // speed_factor times longer. Everything is still served exactly
+    // once and both pools contribute under a rung-1 policy (accurate
+    // pool is home; fast pool spills in).
+    let pools = parse_pools("fast:2:1.0,accurate:2:3.0").unwrap();
+    let n = 80usize;
+    let arrivals = vec![0.0; n];
+    let out = serve_pools(
+        |pool: &PoolSpec| {
+            Ok(SleepEngine { service_ms: 2.0 * pool.speed_factor })
+        },
+        Box::new(StaticPolicy::new(1, "accurate")),
+        &arrivals,
+        &ServeOptions { pools: pools.clone(), ..ServeOptions::default() },
+    )
+    .unwrap();
+    assert_eq!(out.records.len(), n);
+    let ids: Vec<u64> = out.records.iter().map(|r| r.id).collect();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<u64>>());
+    // Rung 1 routes to the accurate pool; the fast pool can only spill.
+    assert!(out.spills > 0, "fast pool should scavenge the backlog");
+    assert!(
+        out.pool_served[0] > 0 && out.pool_served[1] > 0,
+        "both pools must serve: {:?}",
+        out.pool_served
+    );
+}
+
+#[test]
+fn pooled_accounting_stays_exact_under_admission_rejections() {
+    // A tiny queue under simultaneous overload: served + rejected must
+    // equal arrivals on a heterogeneous fleet too (batched and not).
+    for batch in [1usize, 4] {
+        let pools = parse_pools("fast:2:1.0,accurate:1:2.0").unwrap();
+        let arrivals = vec![0.0; 60];
+        let out = serve_pools(
+            |pool: &PoolSpec| {
+                Ok(SleepEngine { service_ms: 20.0 * pool.speed_factor })
+            },
+            Box::new(StaticPolicy::new(0, "fast")),
+            &arrivals,
+            &ServeOptions {
+                queue_capacity: 4,
+                tick_ms: 10,
+                batch,
+                pools: pools.clone(),
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        assert!(out.rejected > 0, "expected overload rejections (B={batch})");
+        assert_eq!(out.records.len() + out.rejected, 60, "B={batch}");
+        let ids: HashSet<u64> = out.records.iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), out.records.len(), "duplicates (B={batch})");
     }
 }
 
