@@ -17,8 +17,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use compass::experiments::common::{
-    base_qps, base_qps_k, make_policy, offline_phase, simulate_boxed_disc,
-    simulate_boxed_pools,
+    base_qps, base_qps_k, make_policy, offline_phase, simulate_ctx, ExperimentCtx,
 };
 use compass::metrics::{RequestRecord, RunSummary};
 use compass::planner::{
@@ -27,8 +26,10 @@ use compass::planner::{
 };
 use compass::serving::monitor::LoadMonitor;
 use compass::serving::pool::{capacity_factor, parse_pools, PoolSpec};
-use compass::serving::{Discipline, Popped, RequestQueue, ShardedQueue};
-use compass::sim::LognormalService;
+use compass::serving::{
+    Discipline, ElasticoPolicy, Popped, RequestQueue, ShardedQueue, Topology,
+};
+use compass::sim::{simulate_topology, LognormalService};
 use compass::util::bench::{bench, fast_mode, group, write_json, BenchResult};
 use compass::util::Rng;
 use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
@@ -268,17 +269,29 @@ fn main() {
         });
         let svc = LognormalService::from_plan(&plan_k, 0.10);
         for disc in [Discipline::CentralFifo, Discipline::ShardedSteal] {
+            let ctx = ExperimentCtx { workers: k, discipline: disc, ..ExperimentCtx::default() };
             results.push(bench(
                 &format!("simulate spike 180s k={k} {}", disc.name()),
                 1,
                 20,
                 || {
                     let mut policy = make_policy(&plan_k, "Elastico");
-                    std::hint::black_box(simulate_boxed_disc(
-                        &arrivals, &plan_k, &mut policy, &svc, 7, k, disc, 0, 1,
-                    ));
+                    std::hint::black_box(
+                        simulate_ctx(&ctx, &arrivals, &plan_k, &mut policy, &svc).unwrap(),
+                    );
                 },
             ));
+        }
+        // The disc shape driven through the unified engine directly
+        // (no shim): the gate bounds it against the shim key above.
+        if k == 4 {
+            let topo = Topology::uniform(4, 4);
+            results.push(bench("des_unified disc spike 180s k=4 sharded", 1, 20, || {
+                let mut policy = ElasticoPolicy::new(plan_k.clone());
+                std::hint::black_box(simulate_topology(
+                    &arrivals, &plan_k, &mut policy, &svc, 7, &topo, 1,
+                ));
+            }));
         }
     }
 
@@ -305,14 +318,31 @@ fn main() {
             seed: 7,
         });
         let svc = LognormalService::from_plan(&plan_p, 0.10);
+        let ctx = ExperimentCtx { pools: pools.clone(), ..ExperimentCtx::default() };
         results.push(bench(
             &format!("simulate pools spike 180s {name}"),
             1,
             20,
             || {
                 let mut policy = make_policy(&plan_p, "Elastico");
-                std::hint::black_box(simulate_boxed_pools(
-                    &arrivals, &plan_p, &mut policy, &svc, 7, pools, 1,
+                std::hint::black_box(
+                    simulate_ctx(&ctx, &arrivals, &plan_p, &mut policy, &svc).unwrap(),
+                );
+            },
+        ));
+        // The same pooled shape through the unified engine directly —
+        // the `des_unified` gate key: the abstraction may not slow the
+        // 180s x 24-cell replay (ratio vs the shim key bounded in
+        // BENCH_baseline.json).
+        let topo = Topology::from_pools(pools, 0.0).unwrap();
+        results.push(bench(
+            &format!("des_unified pooled spike 180s {name}"),
+            1,
+            20,
+            || {
+                let mut policy = ElasticoPolicy::new(plan_p.clone());
+                std::hint::black_box(simulate_topology(
+                    &arrivals, &plan_p, &mut policy, &svc, 7, &topo, 1,
                 ));
             },
         ));
@@ -375,6 +405,20 @@ fn main() {
             find("simulate pools spike 180s homog fast x4".to_string()),
         ) {
             println!("heterogeneous DES cost {het}: {:.2}x vs homog pools", h / homog);
+        }
+    }
+    // Unified-engine readout: the direct engine against the shim keys —
+    // the gate bounds these ratios at ≤ 1.15x so the one-engine
+    // abstraction can never silently slow the experiment replay.
+    for (unified, shim) in [
+        ("des_unified disc spike 180s k=4 sharded", "simulate spike 180s k=4 sharded"),
+        (
+            "des_unified pooled spike 180s homog fast x4",
+            "simulate pools spike 180s homog fast x4",
+        ),
+    ] {
+        if let (Some(u), Some(s)) = (find(unified.to_string()), find(shim.to_string())) {
+            println!("unified engine cost [{unified}]: {:.2}x vs shim", u / s);
         }
     }
 }

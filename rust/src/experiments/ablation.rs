@@ -13,8 +13,7 @@
 use anyhow::Result;
 
 use super::common::{
-    ctx_base_qps, make_policy, offline_phase_ctx, simulate_boxed_disc,
-    simulate_boxed_pools, ExperimentCtx,
+    ctx_base_qps, make_policy, offline_phase_ctx, simulate_ctx, ExperimentCtx,
 };
 use crate::configspace::rag_space;
 use crate::metrics::RunSummary;
@@ -154,29 +153,7 @@ fn controller_ablation(ctx: &ExperimentCtx) -> Result<()> {
             policy,
             Box::new(crate::serving::StaticPolicy::new(0, "placeholder")),
         );
-        let out = if ctx.pools.is_empty() {
-            simulate_boxed_disc(
-                &arrivals,
-                &plan,
-                &mut boxed,
-                &svc,
-                ctx.seed,
-                k,
-                ctx.discipline,
-                ctx.shards,
-                ctx.batch.max(1),
-            )
-        } else {
-            simulate_boxed_pools(
-                &arrivals,
-                &plan,
-                &mut boxed,
-                &svc,
-                ctx.seed,
-                &ctx.pools,
-                ctx.batch.max(1),
-            )
-        };
+        let out = simulate_ctx(ctx, &arrivals, &plan, &mut boxed, &svc)?;
         let s = RunSummary::compute(&out.records, &out.switches, slo, plan.ladder.len());
         println!(
             "  {:<36} SLO {:>5.1}%  acc {:.3}  switches {:>4}",

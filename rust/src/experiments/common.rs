@@ -18,7 +18,7 @@ use crate::search::{CompassV, CompassVParams};
 use crate::serving::executor::WorkflowEngine;
 use crate::serving::pool::{capacity_factor, total_workers, PoolSpec};
 use crate::serving::{
-    serve, Discipline, ElasticoPolicy, ScalingPolicy, ServeOptions, StaticPolicy,
+    serve, Discipline, ElasticoPolicy, ScalingPolicy, ServeOptions, StaticPolicy, Topology,
 };
 use crate::sim::LognormalService;
 use crate::util::results_dir;
@@ -53,6 +53,10 @@ pub struct ExperimentCtx {
     /// homogeneous `workers` runtime). Plans are derived with per-pool
     /// thresholds and cells run the pooled server/DES.
     pub pools: Vec<PoolSpec>,
+    /// Cost-aware spill margin (0 = spill-when-dry; see
+    /// [`crate::serving::Topology::spill_allowed`]). Only meaningful on
+    /// a multi-pool topology.
+    pub spill_margin: f64,
     /// Threshold derivation rule (legacy k-scaling by default; `erlang`
     /// = Erlang-C waiting-probability thresholds).
     pub thresholds: ThresholdMode,
@@ -71,6 +75,7 @@ impl Default for ExperimentCtx {
             shards: 0,
             batch: 1,
             pools: Vec::new(),
+            spill_margin: 0.0,
             thresholds: ThresholdMode::Legacy,
             out_dir: results_dir(),
         }
@@ -87,10 +92,31 @@ impl ExperimentCtx {
         }
     }
 
+    /// The dispatch [`Topology`] of this ctx's serving cells — the one
+    /// decision core both the live server and the DES engine execute:
+    /// a uniform pool honoring `workers`/`discipline`/`shards`, or the
+    /// explicit heterogeneous pools with the ctx's spill margin.
+    pub fn topology(&self) -> Result<Topology> {
+        if self.pools.is_empty() {
+            let workers = self.workers.max(1);
+            let shards = self.discipline.effective_shards(workers, self.shards);
+            Ok(Topology::uniform(workers, shards))
+        } else {
+            Topology::from_pools(&self.pools, self.spill_margin)
+        }
+    }
+
     /// One-line dispatch description for experiment headers.
     pub fn dispatch_desc(&self) -> String {
         if self.pools.is_empty() {
             format!("{} dispatch", self.discipline.name())
+        } else if self.spill_margin > 0.0 {
+            format!(
+                "pools {} ({} thresholds, spill margin {})",
+                crate::serving::pool::describe_pools(&self.pools),
+                self.thresholds.name(),
+                self.spill_margin
+            )
         } else {
             format!(
                 "pools {} ({} thresholds)",
@@ -343,16 +369,23 @@ pub fn base_qps_k(full_plan: &Plan, workers: usize) -> f64 {
     workers.max(1) as f64 * base_qps(full_plan)
 }
 
-/// Base load for a cell's fleet: the homogeneous k-scaling, or — on a
+/// Base load for a fleet: the homogeneous k-scaling, or — on a
 /// heterogeneous topology — the pool capacity factor `Σ wₚ/speedₚ`, so
 /// slower pools contribute proportionally less offered load and the
-/// reference per-worker operating point is preserved.
-pub fn ctx_base_qps(ctx: &ExperimentCtx, full_plan: &Plan) -> f64 {
-    if ctx.pools.is_empty() {
-        base_qps_k(full_plan, ctx.workers.max(1))
+/// reference per-worker operating point is preserved. The single copy
+/// of this fallback: the experiment ctx ([`ctx_base_qps`]) and the
+/// `serve` CLI both resolve through it.
+pub fn base_qps_pools(full_plan: &Plan, workers: usize, pools: &[PoolSpec]) -> f64 {
+    if pools.is_empty() {
+        base_qps_k(full_plan, workers)
     } else {
-        capacity_factor(&ctx.pools) * base_qps(full_plan)
+        capacity_factor(pools) * base_qps(full_plan)
     }
+}
+
+/// [`base_qps_pools`] with the fleet of an experiment ctx.
+pub fn ctx_base_qps(ctx: &ExperimentCtx, full_plan: &Plan) -> f64 {
+    base_qps_pools(full_plan, ctx.workers.max(1), &ctx.pools)
 }
 
 // ---------------------------------------------------------------------
@@ -438,6 +471,7 @@ pub fn run_cell(
                 shards: ctx.shards,
                 batch: ctx.batch.max(1),
                 pools: ctx.pools.clone(),
+                spill_margin: ctx.spill_margin,
                 ..ServeOptions::default()
             },
         )?;
@@ -445,36 +479,15 @@ pub fn run_cell(
     } else {
         let svc = LognormalService::from_plan(plan, 0.10);
         let mut policy = policy;
-        let out = if ctx.pools.is_empty() {
-            simulate_boxed_disc(
-                &arrivals,
-                plan,
-                &mut policy,
-                &svc,
-                ctx.seed,
-                ctx.workers.max(1),
-                ctx.discipline,
-                ctx.shards,
-                ctx.batch.max(1),
-            )
-        } else {
-            simulate_boxed_pools(
-                &arrivals,
-                plan,
-                &mut policy,
-                &svc,
-                ctx.seed,
-                &ctx.pools,
-                ctx.batch.max(1),
-            )
-        };
+        let out = simulate_ctx(ctx, &arrivals, plan, &mut policy, &svc)?;
         (out.records, out.switches)
     };
     let summary = RunSummary::compute(&records, &switches, cell.slo_ms, plan.ladder.len());
     Ok((records, switches, summary))
 }
 
-/// `simulate` over a boxed policy (object safety helper).
+/// `simulate` over a boxed policy (object safety helper — the M/G/1
+/// central-FIFO shape, used by tests and figure benches).
 pub fn simulate_boxed(
     arrivals: &[f64],
     plan: &Plan,
@@ -482,32 +495,12 @@ pub fn simulate_boxed(
     svc: &LognormalService,
     seed: u64,
 ) -> crate::sim::SimOutcome {
-    simulate_boxed_k(arrivals, plan, policy, svc, seed, 1)
+    let mut shim = Shim(policy);
+    crate::sim::simulate(arrivals, plan, &mut shim, svc, seed)
 }
 
-/// `simulate_k` over a boxed policy (object safety helper).
-pub fn simulate_boxed_k(
-    arrivals: &[f64],
-    plan: &Plan,
-    policy: &mut Box<dyn ScalingPolicy>,
-    svc: &LognormalService,
-    seed: u64,
-    workers: usize,
-) -> crate::sim::SimOutcome {
-    simulate_boxed_disc(
-        arrivals,
-        plan,
-        policy,
-        svc,
-        seed,
-        workers,
-        Discipline::CentralFifo,
-        0,
-        1,
-    )
-}
-
-/// Boxed-policy shim for the object-safety helpers below.
+/// Boxed-policy shim (object safety: `Box<dyn ScalingPolicy>` does not
+/// itself implement the trait the generic engine wants).
 struct Shim<'a>(&'a mut Box<dyn ScalingPolicy>);
 impl ScalingPolicy for Shim<'_> {
     fn decide(&mut self, now_ms: f64, depth: usize) -> usize {
@@ -524,37 +517,30 @@ impl ScalingPolicy for Shim<'_> {
     }
 }
 
-/// `simulate_disc` over a boxed policy (object safety helper).
-#[allow(clippy::too_many_arguments)]
-pub fn simulate_boxed_disc(
+/// Run the unified DES engine with the serving knobs of an experiment
+/// ctx — the single simulation entry every experiment cell uses
+/// (formerly the `simulate_boxed_k` / `simulate_boxed_disc` /
+/// `simulate_boxed_pools` family, one copy per topology shape). The
+/// ctx's [`ExperimentCtx::topology`] decides the fleet; workers,
+/// discipline, shards, pools, spill margin and batch all flow from it.
+pub fn simulate_ctx(
+    ctx: &ExperimentCtx,
     arrivals: &[f64],
     plan: &Plan,
     policy: &mut Box<dyn ScalingPolicy>,
     svc: &LognormalService,
-    seed: u64,
-    workers: usize,
-    discipline: Discipline,
-    shards: usize,
-    batch: usize,
-) -> crate::sim::SimOutcome {
+) -> Result<crate::sim::SimOutcome> {
+    let topo = ctx.topology()?;
     let mut shim = Shim(policy);
-    crate::sim::simulate_disc(
-        arrivals, plan, &mut shim, svc, seed, workers, discipline, shards, batch,
-    )
-}
-
-/// `simulate_pools` over a boxed policy (object safety helper).
-pub fn simulate_boxed_pools(
-    arrivals: &[f64],
-    plan: &Plan,
-    policy: &mut Box<dyn ScalingPolicy>,
-    svc: &LognormalService,
-    seed: u64,
-    pools: &[PoolSpec],
-    batch: usize,
-) -> crate::sim::SimOutcome {
-    let mut shim = Shim(policy);
-    crate::sim::simulate_pools(arrivals, plan, &mut shim, svc, seed, pools, batch)
+    Ok(crate::sim::simulate_topology(
+        arrivals,
+        plan,
+        &mut shim,
+        svc,
+        ctx.seed,
+        &topo,
+        ctx.batch.max(1),
+    ))
 }
 
 #[cfg(test)]
@@ -655,6 +641,31 @@ mod tests {
         for w in plan.ladder.windows(2) {
             assert!(w[0].upscale_threshold >= w[1].upscale_threshold);
         }
+    }
+
+    #[test]
+    fn ctx_topology_resolves_the_dispatch_shapes() {
+        // The ctx-driven sim entry must execute the same shapes the
+        // live ServeOptions resolve: central = 1 shard / k workers,
+        // sharded = k shards, pools = per-worker shards + the margin.
+        let central = ExperimentCtx { workers: 4, ..ExperimentCtx::default() };
+        let t = central.topology().unwrap();
+        assert_eq!((t.n_pools(), t.n_shards(), t.n_workers()), (1, 1, 4));
+        let sharded = ExperimentCtx {
+            workers: 4,
+            discipline: Discipline::ShardedSteal,
+            ..ExperimentCtx::default()
+        };
+        let t = sharded.topology().unwrap();
+        assert_eq!((t.n_shards(), t.n_workers()), (4, 4));
+        let pooled = ExperimentCtx {
+            pools: crate::serving::pool::parse_pools("fast:3:1.0,acc:2:2.0").unwrap(),
+            spill_margin: 1.5,
+            ..ExperimentCtx::default()
+        };
+        let t = pooled.topology().unwrap();
+        assert_eq!((t.n_pools(), t.n_shards(), t.n_workers()), (2, 5, 5));
+        assert_eq!(t.spill_margin(), 1.5);
     }
 
     #[test]

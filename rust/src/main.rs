@@ -122,6 +122,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                 shards: get_f64(&opts, "shards", 0.0)?.max(0.0) as usize,
                 batch: get_f64(&opts, "batch", 1.0)?.max(1.0) as usize,
                 pools: get_pools(&opts)?,
+                spill_margin: get_f64(&opts, "spill-margin", 0.0)?.max(0.0),
                 thresholds: get_thresholds(&opts)?,
                 out_dir: results_dir(),
             };
@@ -154,12 +155,12 @@ fn print_help() {
          \x20             [--policy Elastico|Static-Fast|Static-Medium|Static-Accurate]\n\
          \x20             [--workers K] [--discipline central|sharded] [--shards N]\n\
          \x20             [--batch B] [--pools fast:4:1.0,accurate:2:2.5]\n\
-         \x20             [--thresholds legacy|erlang]\n\
+         \x20             [--spill-margin M] [--thresholds legacy|erlang]\n\
          \x20 experiment  regenerate paper figures/tables -> results/*.csv\n\
          \x20             <fig1|fig3|fig4|table1|fig5|fig6|fig7|all> [--live] [--duration S]\n\
          \x20             [--workers K] [--discipline central|sharded] [--shards N]\n\
          \x20             [--batch B] [--pools n:w:speed[:rung],...]\n\
-         \x20             [--thresholds legacy|erlang]\n\
+         \x20             [--spill-margin M] [--thresholds legacy|erlang]\n\
          \x20 profile     per-component latency table over the artifacts [--live]\n"
     );
 }
@@ -265,6 +266,7 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
     let shards = get_f64(opts, "shards", 0.0)?.max(0.0) as usize;
     let batch = get_f64(opts, "batch", 1.0)?.max(1.0) as usize;
     let pools = get_pools(opts)?;
+    let spill_margin = get_f64(opts, "spill-margin", 0.0)?.max(0.0);
     let thresholds = get_thresholds(opts)?;
     let policy_name = opts
         .get("policy")
@@ -289,17 +291,18 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
     println!("Serving plan (SLO {slo:.0} ms, {} thresholds):", thresholds.name());
     print!("{}", plan.render());
 
-    let total_workers = if pools.is_empty() {
-        workers
-    } else {
-        compass::serving::pool::total_workers(&pools)
+    let serve_opts = ServeOptions {
+        workers,
+        discipline,
+        shards,
+        batch,
+        pools: pools.clone(),
+        spill_margin,
+        ..ServeOptions::default()
     };
-    let base_qps = if pools.is_empty() {
-        compass::experiments::common::base_qps_k(&probe, workers)
-    } else {
-        compass::serving::pool::capacity_factor(&pools)
-            * compass::experiments::common::base_qps(&probe)
-    };
+    let total_workers = serve_opts.total_workers();
+    let base_qps =
+        compass::experiments::common::base_qps_pools(&probe, workers, &pools);
     let spec = WorkloadSpec { base_qps, duration_s: duration, pattern, seed };
     let arrivals = generate_arrivals(&spec);
     println!(
@@ -327,14 +330,7 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         },
         policy,
         &arrivals,
-        &ServeOptions {
-            workers,
-            discipline,
-            shards,
-            batch,
-            pools: pools.clone(),
-            ..ServeOptions::default()
-        },
+        &serve_opts,
     )?;
     let summary = compass::metrics::RunSummary::compute(
         &out.records,

@@ -2,9 +2,21 @@
 //! monitor, the Elastico controller, and workflow executor threads —
 //! the online phase of Compass.
 //!
-//! The controller logic lives in [`policy`] and is shared verbatim with
-//! the discrete-event simulator ([`crate::sim`]), so simulated and live
-//! behavior can be compared 1:1.
+//! Two layers are shared verbatim with the discrete-event simulator
+//! ([`crate::sim`]), so simulated and live behavior can be compared 1:1
+//! — and, since the dispatch-plane unification, agree *by construction*
+//! rather than by parity test:
+//!
+//! * the controller logic ([`policy`]) — the same `ScalingPolicy`
+//!   implementations decide rungs in both worlds;
+//! * the dispatch decisions ([`topology`]) — shard layout, round-robin
+//!   routing, rung-band → pool resolution, the home/steal/spill walk
+//!   order, the cost-aware spill gate, and the front-run / steal-half
+//!   batch arithmetic are pure functions of a [`topology::Topology`].
+//!   The live [`ShardedQueue`] executes them against locked shards; the
+//!   one DES engine ([`crate::sim::simulate_topology`]) executes them
+//!   against simulated queues. What remains *here* is only mechanics:
+//!   locks, atomics, parking, threads and the wall clock.
 //!
 //! ## Serving architecture (k workers, sharded hot path)
 //!
@@ -95,10 +107,14 @@
 //! * **stealing stays pool-local, spilling is last-resort**: a worker
 //!   steals only from its own pool's shards; it crosses pools (one
 //!   "spill", counted separately) only when every shard of its pool is
-//!   dry, so heterogeneous hardware scavenges idle cycles without
-//!   inverting a loaded pool's FIFO order. The policy/AQM depth signal
-//!   is **per pool** — the backlog of the pool the current rung routes
-//!   to — matching the per-pool thresholds the Planner derives
+//!   dry — and, under a positive [`ServeOptions::spill_margin`], only
+//!   when the victim's backlog also exceeds the spiller's speed
+//!   handicap ([`topology::Topology::spill_allowed`]), so slow hardware
+//!   never poaches work the victim's own workers would finish sooner.
+//!   Heterogeneous fleets thus scavenge idle cycles without inverting a
+//!   loaded pool's FIFO order. The policy/AQM depth signal is **per
+//!   pool** — the backlog of the pool the current rung routes to —
+//!   matching the per-pool thresholds the Planner derives
 //!   ([`crate::planner::derive_plan_pools`], Erlang-C or legacy mode).
 //!
 //! **When rung-aware routing beats a shared ladder**: whenever the
@@ -128,6 +144,7 @@ pub mod pool;
 pub mod predictive;
 pub mod queue;
 pub mod server;
+pub mod topology;
 
 pub use elastico::ElasticoPolicy;
 pub use policy::{ScalingPolicy, StaticPolicy};
@@ -135,3 +152,4 @@ pub use pool::{parse_pools, PoolSpec};
 pub use predictive::PredictivePolicy;
 pub use queue::{Discipline, Popped, QueueError, RequestQueue, ShardedQueue};
 pub use server::{serve, serve_pools, ServeOptions, ServeOutcome};
+pub use topology::{Dispatch, Topology};

@@ -55,10 +55,27 @@
 //!   pool ([`push_pool`](ShardedQueue::push_pool), per-pool round-robin);
 //!   a pool's consumers drain and steal **within their pool only**, and
 //!   **spill** into other pools' shards only once every shard of their
-//!   own pool is dry ([`pop_timeout_pool`](ShardedQueue::pop_timeout_pool)).
+//!   own pool is dry ([`pop_timeout_pool`](ShardedQueue::pop_timeout_pool))
+//!   — or, under a positive spill margin
+//!   ([`crate::serving::topology::Topology::spill_allowed`]), only once
+//!   the victim's backlog also exceeds the spiller's speed handicap.
 //!   Spills are counted separately from steals
 //!   ([`spills`](ShardedQueue::spills)); a single-pool queue can never
 //!   spill and behaves exactly like the un-pooled constructor.
+//!
+//! ## What is decided here vs in the topology core
+//!
+//! Since the dispatch-plane unification, this module owns only the
+//! *mechanics* of the hot path — shard mutexes, the lock-free depth
+//! counters, the sleeper-gated park/wake handshake, and the atomic
+//! steal/spill accounting. Every *choice* — which shard a push routes
+//! to, the home-then-steal walk order, when a spill is admitted, how
+//! many items one dispatch takes — is delegated to the
+//! [`Topology`](crate::serving::topology::Topology) the queue was built
+//! with ([`with_topology`](ShardedQueue::with_topology)), the same pure
+//! core the DES engine ([`crate::sim::simulate_topology`]) executes.
+//! Live/simulated dispatch parity is therefore definitional: there is
+//! one copy of the decision logic, not two kept in sync by tests.
 //!
 //! The consumer API is exhaustive by construction: [`ShardedQueue`] pops
 //! return [`Popped`] (`Item`/`TimedOut`/`Closed`), so a consumer loop
@@ -68,6 +85,8 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use super::topology::{Dispatch, Topology};
 
 /// Queue errors (producer side; see [`Popped`] for the consumer side).
 #[derive(Debug, PartialEq, Eq)]
@@ -103,6 +122,25 @@ impl Discipline {
         match self {
             Discipline::CentralFifo => "central",
             Discipline::ShardedSteal => "sharded",
+        }
+    }
+
+    /// Shard count of a homogeneous k-worker fleet under this
+    /// discipline: the central FIFO is always one shard; the sharded
+    /// discipline honors an explicit `shards`, defaulting (0) to one
+    /// shard per worker. The single copy of this resolution — the live
+    /// `ServeOptions`, the `simulate_disc` shim and the ctx-driven
+    /// experiment entry all resolve through it.
+    pub fn effective_shards(&self, workers: usize, shards: usize) -> usize {
+        match self {
+            Discipline::CentralFifo => 1,
+            Discipline::ShardedSteal => {
+                if shards == 0 {
+                    workers.max(1)
+                } else {
+                    shards
+                }
+            }
         }
     }
 }
@@ -218,11 +256,9 @@ pub struct ShardedQueue<T> {
     capacity: usize,
     /// Round-robin router cursor (pool-agnostic [`push`](ShardedQueue::push)).
     router: AtomicUsize,
-    /// Half-open shard ranges per pool (one `(0, shards)` range when the
-    /// queue was built un-pooled).
-    pool_ranges: Vec<(usize, usize)>,
-    /// Owning pool of each shard.
-    shard_pool: Vec<usize>,
+    /// The dispatch topology: shard layout, walk order, spill gate and
+    /// batch arithmetic all come from here (shared with the DES engine).
+    topo: Topology,
     /// Per-pool depth counters — maintained (and read) only when the
     /// topology has more than one pool, so the single-pool hot path is
     /// exactly the pre-pool code.
@@ -252,26 +288,26 @@ impl<T> ShardedQueue<T> {
     /// stays a property of the server, not of a pool.
     pub fn new_pooled(capacity: usize, pool_shards: &[usize]) -> Self {
         assert!(!pool_shards.is_empty(), "need at least one pool");
-        let mut pool_ranges = Vec::with_capacity(pool_shards.len());
-        let mut shard_pool = Vec::new();
-        let mut start = 0usize;
-        for (p, &n) in pool_shards.iter().enumerate() {
-            let n = n.max(1);
-            pool_ranges.push((start, start + n));
-            for _ in 0..n {
-                shard_pool.push(p);
-            }
-            start += n;
-        }
+        Self::with_topology(capacity, Topology::anonymous(pool_shards))
+    }
+
+    /// A queue over an explicit dispatch [`Topology`]: the shard layout,
+    /// walk order, spill gate (margin + speed handicaps) and batch
+    /// arithmetic are all the topology's — the queue adds only locks,
+    /// counters and parking. This is the constructor the server uses;
+    /// [`new`](ShardedQueue::new) / [`new_pooled`](ShardedQueue::new_pooled)
+    /// wrap it with uniform-speed, margin-0 topologies.
+    pub fn with_topology(capacity: usize, topo: Topology) -> Self {
+        let n_shards = topo.n_shards();
+        let n_pools = topo.n_pools();
         ShardedQueue {
-            shards: (0..start).map(|_| Mutex::new(VecDeque::new())).collect(),
+            shards: (0..n_shards).map(|_| Mutex::new(VecDeque::new())).collect(),
             depth: AtomicUsize::new(0),
             capacity: capacity.max(1),
             router: AtomicUsize::new(0),
-            pool_depths: (0..pool_ranges.len()).map(|_| AtomicUsize::new(0)).collect(),
-            pool_routers: (0..pool_ranges.len()).map(|_| AtomicUsize::new(0)).collect(),
-            pool_ranges,
-            shard_pool,
+            pool_depths: (0..n_pools).map(|_| AtomicUsize::new(0)).collect(),
+            pool_routers: (0..n_pools).map(|_| AtomicUsize::new(0)).collect(),
+            topo,
             closed: AtomicBool::new(false),
             steals: AtomicU64::new(0),
             spills: AtomicU64::new(0),
@@ -288,7 +324,7 @@ impl<T> ShardedQueue<T> {
 
     /// Number of pools (1 unless built with [`new_pooled`](ShardedQueue::new_pooled)).
     pub fn pool_count(&self) -> usize {
-        self.pool_ranges.len()
+        self.topo.n_pools()
     }
 
     /// Reserve one admission slot against the total bound (lock-free).
@@ -310,17 +346,28 @@ impl<T> ShardedQueue<T> {
 
     /// Insert a reserved item into `shard` and wake a parked consumer.
     fn finish_push(&self, shard: usize, item: T) {
-        if self.pool_ranges.len() > 1 {
-            self.pool_depths[self.shard_pool[shard]].fetch_add(1, Ordering::SeqCst);
+        if self.topo.n_pools() > 1 {
+            self.pool_depths[self.topo.shard_pool(shard)].fetch_add(1, Ordering::SeqCst);
         }
         self.shards[shard].lock().unwrap().push_back(item);
         // Wake a parked consumer. The sleep gate is only taken when a
         // consumer is actually parked (Dekker-style handshake with the
-        // consumer's sleepers-increment / depth-check, both SeqCst:
+        // consumer's sleepers-increment / ready-check, both SeqCst:
         // either we see its registration or it sees our depth).
         if self.sleepers.load(Ordering::SeqCst) > 0 {
             let _g = self.gate.lock().unwrap();
-            self.notify.notify_one();
+            if self.topo.n_pools() > 1 && self.topo.spill_margin() > 0.0 {
+                // Consumers park on per-pool ready() predicates: a
+                // single wakeup could land on a spill-gated consumer
+                // that may not take this item while the eligible one
+                // sleeps out its timeout. Wake everyone and let each
+                // ready() decide; single-pool / margin-0 queues keep
+                // the cheap single wakeup (every consumer can take
+                // every item there).
+                self.notify.notify_all();
+            } else {
+                self.notify.notify_one();
+            }
         }
     }
 
@@ -337,123 +384,105 @@ impl<T> ShardedQueue<T> {
         Ok(())
     }
 
-    /// Enqueue into one pool: round-robin over that pool's shards only.
-    /// With a single pool this is exactly [`push`](ShardedQueue::push)
-    /// (same cursor arithmetic over the same shards).
+    /// Enqueue into one pool: round-robin over that pool's shards only
+    /// (the topology's [`route`](Topology::route)). With a single pool
+    /// this is exactly [`push`](ShardedQueue::push) (same cursor
+    /// arithmetic over the same shards).
     pub fn push_pool(&self, pool: usize, item: T) -> Result<(), QueueError> {
         self.reserve()?;
-        let (lo, hi) = self.pool_ranges[pool];
-        let shard =
-            lo + self.pool_routers[pool].fetch_add(1, Ordering::Relaxed) % (hi - lo);
-        self.finish_push(shard, item);
+        let cursor = self.pool_routers[pool].fetch_add(1, Ordering::Relaxed);
+        self.finish_push(self.topo.route(pool, cursor), item);
         Ok(())
+    }
+
+    /// One steal/spill *operation* is counted regardless of how many
+    /// items it takes — the counters track lock-level frequency, which
+    /// is what batch stealing amortizes.
+    fn count_dispatch(&self, kind: Dispatch) {
+        match kind {
+            Dispatch::Home => {}
+            Dispatch::Steal => {
+                self.steals.fetch_add(1, Ordering::Relaxed);
+            }
+            Dispatch::Spill => {
+                self.spills.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     /// Claim one item from shard `s` (front, FIFO), releasing its
     /// admission slot first — see the ordering note in
     /// [`take_batch_from`](ShardedQueue::take_batch_from).
-    fn take_one_from(&self, s: usize, is_steal: bool, is_spill: bool) -> Option<T> {
+    fn take_one_from(&self, s: usize, kind: Dispatch) -> Option<T> {
         let mut g = self.shards[s].lock().unwrap();
         if g.is_empty() {
             return None;
         }
         self.depth.fetch_sub(1, Ordering::SeqCst);
-        if self.pool_ranges.len() > 1 {
-            self.pool_depths[self.shard_pool[s]].fetch_sub(1, Ordering::SeqCst);
+        if self.topo.n_pools() > 1 {
+            self.pool_depths[self.topo.shard_pool(s)].fetch_sub(1, Ordering::SeqCst);
         }
         let item = g.pop_front();
         drop(g);
-        if is_steal {
-            self.steals.fetch_add(1, Ordering::Relaxed);
-        }
-        if is_spill {
-            self.spills.fetch_add(1, Ordering::Relaxed);
-        }
+        self.count_dispatch(kind);
         item
     }
 
-    /// Claim up to `max` items from shard `s` in one lock acquisition: a
-    /// front run when `s` is the consumer's home shard, half the backlog
-    /// (`⌈len/2⌉`, capped at `max`) when stealing or spilling — leave a
-    /// victim work. All `take` slots are released *before* any item is
+    /// Claim up to `max` items from shard `s` in one lock acquisition —
+    /// a front run at home, half the backlog when stealing or spilling
+    /// ([`Topology::take_count`] owns the arithmetic; leave a victim
+    /// work). All `take` slots are released *before* any item is
     /// removed, so the depth counter never over-counts a claimed item
     /// and a racing push can only be admitted early (into a freshly
     /// freed slot), never spuriously rejected while capacity genuinely
     /// remains; the items themselves are claimed under the shard lock.
-    /// One steal/spill *operation* is counted regardless of batch size —
-    /// the counters track lock-level frequency, which is what batch
-    /// stealing amortizes.
-    fn take_batch_from(
-        &self,
-        s: usize,
-        max: usize,
-        is_steal: bool,
-        is_spill: bool,
-    ) -> Option<Vec<T>> {
+    fn take_batch_from(&self, s: usize, max: usize, kind: Dispatch) -> Option<Vec<T>> {
         let mut g = self.shards[s].lock().unwrap();
         if g.is_empty() {
             return None;
         }
-        let take = if is_steal || is_spill {
-            g.len().div_ceil(2).min(max)
-        } else {
-            g.len().min(max)
-        };
+        let take = Topology::take_count(g.len(), max, kind);
         self.depth.fetch_sub(take, Ordering::SeqCst);
-        if self.pool_ranges.len() > 1 {
-            self.pool_depths[self.shard_pool[s]].fetch_sub(take, Ordering::SeqCst);
+        if self.topo.n_pools() > 1 {
+            self.pool_depths[self.topo.shard_pool(s)].fetch_sub(take, Ordering::SeqCst);
         }
         let mut items = Vec::with_capacity(take);
         for _ in 0..take {
             items.push(g.pop_front().unwrap());
         }
         drop(g);
-        if is_steal {
-            self.steals.fetch_add(1, Ordering::Relaxed);
-        }
-        if is_spill {
-            self.spills.fetch_add(1, Ordering::Relaxed);
-        }
+        self.count_dispatch(kind);
         Some(items)
     }
 
-    /// Non-blocking pop for consumer `worker`: home shard first, then a
-    /// FIFO steal sweep over the other shards (pool-agnostic — the
-    /// single-pool consumer path).
+    /// Non-blocking pop for consumer `worker` of the first pool — the
+    /// single-pool consumer path (on a single-pool queue there is no
+    /// spill leg, so this is the plain home-then-steal sweep).
     pub fn try_pop(&self, worker: usize) -> Option<T> {
-        let n = self.shards.len();
-        let home = worker % n;
-        for i in 0..n {
-            let s = (home + i) % n;
-            if let Some(item) = self.take_one_from(s, i > 0, false) {
-                return Some(item);
-            }
-        }
-        None
+        self.try_pop_pool(0, worker)
     }
 
     /// Non-blocking pooled pop for consumer `worker` of pool `pool`:
-    /// home shard first, then a FIFO steal sweep over the *pool's own*
-    /// shards; only when every shard of the pool is dry does the sweep
-    /// spill into the other pools (cyclic pool order, each from its
-    /// first shard). With a single pool this is exactly
+    /// the topology's within-pool walk (home shard, then a FIFO steal
+    /// sweep over the *pool's own* shards); only when every shard of
+    /// the pool is dry does the sweep spill into the other pools —
+    /// cyclic pool order, each victim gated by
+    /// [`Topology::spill_allowed`] (margin 0 admits any non-empty
+    /// victim). With a single pool this is exactly
     /// [`try_pop`](ShardedQueue::try_pop).
     pub fn try_pop_pool(&self, pool: usize, worker: usize) -> Option<T> {
-        let (lo, hi) = self.pool_ranges[pool];
-        let len_p = hi - lo;
-        let home = worker % len_p;
-        for i in 0..len_p {
-            let s = lo + (home + i) % len_p;
-            if let Some(item) = self.take_one_from(s, i > 0, false) {
+        for (s, kind) in self.topo.pool_walk(pool, worker) {
+            if let Some(item) = self.take_one_from(s, kind) {
                 return Some(item);
             }
         }
-        let np = self.pool_ranges.len();
-        for d in 1..np {
-            let q = (pool + d) % np;
-            let (qlo, qhi) = self.pool_ranges[q];
-            for s in qlo..qhi {
-                if let Some(item) = self.take_one_from(s, false, true) {
+        for q in self.topo.spill_order(pool) {
+            if !self.topo.spill_allowed(pool, q, self.pool_len(q)) {
+                continue;
+            }
+            let (lo, hi) = self.topo.shard_range(q);
+            for s in lo..hi {
+                if let Some(item) = self.take_one_from(s, Dispatch::Spill) {
                     return Some(item);
                 }
             }
@@ -469,22 +498,13 @@ impl<T> ShardedQueue<T> {
     /// never empty. `max == 1` behaves exactly like
     /// [`try_pop`](ShardedQueue::try_pop) (steal-one included).
     pub fn try_pop_batch(&self, worker: usize, max: usize) -> Option<Vec<T>> {
-        let max = max.max(1);
-        let n = self.shards.len();
-        let home = worker % n;
-        for i in 0..n {
-            let s = (home + i) % n;
-            if let Some(items) = self.take_batch_from(s, max, i > 0, false) {
-                return Some(items);
-            }
-        }
-        None
+        self.try_pop_batch_pool(0, worker, max)
     }
 
     /// Pooled batch pop: the batch analogue of
     /// [`try_pop_pool`](ShardedQueue::try_pop_pool) — home-pool front
     /// run / steal-half first, cross-pool spill (also half, capped at
-    /// `max`) only once the home pool is fully dry.
+    /// `max`, gated by the margin) only once the home pool is fully dry.
     pub fn try_pop_batch_pool(
         &self,
         pool: usize,
@@ -492,21 +512,18 @@ impl<T> ShardedQueue<T> {
         max: usize,
     ) -> Option<Vec<T>> {
         let max = max.max(1);
-        let (lo, hi) = self.pool_ranges[pool];
-        let len_p = hi - lo;
-        let home = worker % len_p;
-        for i in 0..len_p {
-            let s = lo + (home + i) % len_p;
-            if let Some(items) = self.take_batch_from(s, max, i > 0, false) {
+        for (s, kind) in self.topo.pool_walk(pool, worker) {
+            if let Some(items) = self.take_batch_from(s, max, kind) {
                 return Some(items);
             }
         }
-        let np = self.pool_ranges.len();
-        for d in 1..np {
-            let q = (pool + d) % np;
-            let (qlo, qhi) = self.pool_ranges[q];
-            for s in qlo..qhi {
-                if let Some(items) = self.take_batch_from(s, max, false, true) {
+        for q in self.topo.spill_order(pool) {
+            if !self.topo.spill_allowed(pool, q, self.pool_len(q)) {
+                continue;
+            }
+            let (lo, hi) = self.topo.shard_range(q);
+            for s in lo..hi {
+                if let Some(items) = self.take_batch_from(s, max, Dispatch::Spill) {
                     return Some(items);
                 }
             }
@@ -521,7 +538,7 @@ impl<T> ShardedQueue<T> {
     /// the queue is closed **and** every shard is drained. The wait is
     /// deadline-based and `close()` wakes all parked consumers promptly.
     pub fn pop_timeout(&self, worker: usize, timeout: Duration) -> Popped<T> {
-        self.pop_with(timeout, || self.try_pop(worker))
+        self.pop_with(timeout, 0, || self.try_pop(worker))
     }
 
     /// Blocking batch pop with timeout: the batch analogue of
@@ -529,7 +546,7 @@ impl<T> ShardedQueue<T> {
     /// items per [`try_pop_batch`](ShardedQueue::try_pop_batch). A
     /// returned [`Popped::Item`] batch is never empty.
     pub fn pop_batch(&self, worker: usize, max: usize, timeout: Duration) -> Popped<Vec<T>> {
-        self.pop_with(timeout, || self.try_pop_batch(worker, max))
+        self.pop_with(timeout, 0, || self.try_pop_batch(worker, max))
     }
 
     /// Blocking pooled pop with timeout — the consumer path of a pooled
@@ -541,7 +558,7 @@ impl<T> ShardedQueue<T> {
         worker: usize,
         timeout: Duration,
     ) -> Popped<T> {
-        self.pop_with(timeout, || self.try_pop_pool(pool, worker))
+        self.pop_with(timeout, pool, || self.try_pop_pool(pool, worker))
     }
 
     /// Blocking pooled batch pop with timeout (see
@@ -553,14 +570,30 @@ impl<T> ShardedQueue<T> {
         max: usize,
         timeout: Duration,
     ) -> Popped<Vec<T>> {
-        self.pop_with(timeout, || self.try_pop_batch_pool(pool, worker, max))
+        self.pop_with(timeout, pool, || self.try_pop_batch_pool(pool, worker, max))
+    }
+
+    /// Is there anything consumer of `pool` could take right now? The
+    /// topology's [`can_take`](Topology::can_take) over the live depth
+    /// counters: the pool's own backlog, or a foreign backlog passing
+    /// the spill gate. Under a positive spill margin this keeps a gated
+    /// consumer *parked* (instead of hot-spinning on work it is not
+    /// allowed to poach); the next push still wakes it through the
+    /// sleeper gate, so no wakeup is ever missed.
+    fn ready(&self, pool: usize) -> bool {
+        self.topo.can_take(pool, |q| self.pool_len(q))
     }
 
     /// Shared deadline-based park loop under `attempt` (single or batch
-    /// pop): re-check, register as a sleeper under the gate (Dekker
-    /// handshake with producers), wait, repeat until item(s), timeout,
-    /// or closed-and-drained.
-    fn pop_with<R>(&self, timeout: Duration, attempt: impl Fn() -> Option<R>) -> Popped<R> {
+    /// pop, for a consumer of `pool`): re-check, register as a sleeper
+    /// under the gate (Dekker handshake with producers), wait, repeat
+    /// until item(s), timeout, or closed-and-drained.
+    fn pop_with<R>(
+        &self,
+        timeout: Duration,
+        pool: usize,
+        attempt: impl Fn() -> Option<R>,
+    ) -> Popped<R> {
         let deadline = Instant::now() + timeout;
         loop {
             if let Some(item) = attempt() {
@@ -578,7 +611,7 @@ impl<T> ShardedQueue<T> {
             // between our check and the wait (missed-wakeup handshake).
             let g = self.gate.lock().unwrap();
             self.sleepers.fetch_add(1, Ordering::SeqCst);
-            if self.depth.load(Ordering::SeqCst) > 0 || self.closed.load(Ordering::SeqCst) {
+            if self.ready(pool) || self.closed.load(Ordering::SeqCst) {
                 self.sleepers.fetch_sub(1, Ordering::SeqCst);
                 continue;
             }
@@ -602,7 +635,7 @@ impl<T> ShardedQueue<T> {
     /// With a single pool this is the aggregate depth (same counter, so
     /// the homogeneous path stays exactly the pre-pool code).
     pub fn pool_len(&self, pool: usize) -> usize {
-        if self.pool_ranges.len() == 1 {
+        if self.topo.n_pools() == 1 {
             self.depth.load(Ordering::SeqCst)
         } else {
             self.pool_depths[pool].load(Ordering::SeqCst)
@@ -1020,6 +1053,88 @@ mod tests {
         // Pool 1's own consumer still drains its pool FIFO.
         assert_eq!(q.pop_timeout_pool(1, 0, Duration::from_millis(1)), Popped::Item(104));
         assert_eq!(q.pop_timeout_pool(1, 1, Duration::from_millis(1)), Popped::Item(101));
+    }
+
+    #[test]
+    fn spill_margin_gates_poaching_until_the_backlog_justifies_it() {
+        // fast: 2 shards @1x, slow: 2 shards @2.5x, margin 1: the slow
+        // pool may poach only once the fast backlog exceeds
+        // 1 · (2.5/1) · 2 = 5 items — below that, the fast workers
+        // would finish the work sooner than the slow pool could.
+        let pools = crate::serving::pool::parse_pools("fast:2:1.0,slow:2:2.5").unwrap();
+        let topo = Topology::from_pools(&pools, 1.0).unwrap();
+        let q: ShardedQueue<u64> = ShardedQueue::with_topology(64, topo);
+        for i in 0..5 {
+            q.push_pool(0, i).unwrap();
+        }
+        // Slow-pool consumer: own shards dry, gate holds at backlog 5.
+        assert_eq!(q.pop_timeout_pool(1, 0, Duration::from_millis(1)), Popped::TimedOut);
+        assert_eq!(q.spills(), 0, "margin must block the shallow poach");
+        // A sixth item crosses the threshold: the spill is admitted and
+        // takes half the victim shard ({0, 2, 4}) in one operation.
+        q.push_pool(0, 5).unwrap();
+        assert_eq!(
+            q.pop_batch_pool(1, 0, 8, Duration::from_millis(1)),
+            Popped::Item(vec![0, 2])
+        );
+        assert_eq!(q.spills(), 1);
+        // Margin 0 (the default) is the historical spill-when-dry.
+        let q0: ShardedQueue<u64> =
+            ShardedQueue::with_topology(64, Topology::from_pools(&pools, 0.0).unwrap());
+        q0.push_pool(0, 7).unwrap();
+        assert_eq!(q0.pop_timeout_pool(1, 0, Duration::from_millis(1)), Popped::Item(7));
+        assert_eq!(q0.spills(), 1);
+    }
+
+    #[test]
+    fn margin_wakeups_reach_the_eligible_consumer_while_gated_peers_park() {
+        // fast:1 @1x, slow:1 @2.5x, margin 1: the slow consumer's spill
+        // gate holds until the fast backlog exceeds 1 · 2.5 · 1 = 2.5.
+        // Consumers park on per-pool ready() predicates here, so the
+        // wake path must reach the *eligible* consumer even when a
+        // gated one is parked too (the notify_all branch) — a reverted
+        // single wakeup could land on the gated consumer and leave the
+        // eligible one sleeping out its full timeout.
+        let pools = crate::serving::pool::parse_pools("fast:1:1.0,slow:1:2.5").unwrap();
+        let q: Arc<ShardedQueue<u64>> = Arc::new(ShardedQueue::with_topology(
+            64,
+            Topology::from_pools(&pools, 1.0).unwrap(),
+        ));
+        let qs = q.clone();
+        let slow = std::thread::spawn(move || {
+            qs.pop_timeout_pool(1, 0, Duration::from_millis(400))
+        });
+        let qf = q.clone();
+        let fast = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let r = qf.pop_timeout_pool(0, 0, Duration::from_secs(30));
+            (r, t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(50)); // let both park
+        // One item into the fast pool: only the fast consumer may take
+        // it (backlog 1 never crosses the slow consumer's gate).
+        q.push_pool(0, 9).unwrap();
+        let (r, dt) = fast.join().unwrap();
+        assert_eq!(r, Popped::Item(9));
+        assert!(dt < Duration::from_secs(5), "eligible consumer woke after {dt:?}");
+        assert_eq!(slow.join().unwrap(), Popped::TimedOut, "gate must hold");
+        assert_eq!(q.spills(), 0);
+        // Crossing the gate must wake a parked gated consumer into a
+        // spill: its ready() flips once the victim backlog exceeds 2.5.
+        let qs = q.clone();
+        let slow = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let r = qs.pop_timeout_pool(1, 0, Duration::from_secs(30));
+            (r, t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(50)); // let it park
+        for i in 0..3 {
+            q.push_pool(0, 10 + i).unwrap();
+        }
+        let (r, dt) = slow.join().unwrap();
+        assert!(matches!(r, Popped::Item(_)), "gate crossed: must spill, got {r:?}");
+        assert!(dt < Duration::from_secs(5), "gated consumer woke after {dt:?}");
+        assert_eq!(q.spills(), 1);
     }
 
     #[test]

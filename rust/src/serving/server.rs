@@ -41,8 +41,9 @@ use anyhow::Result;
 use super::executor::RequestEngine;
 use super::monitor::LoadMonitor;
 use super::policy::ScalingPolicy;
-use super::pool::{pool_of_rung, pool_rung, validate_pools, PoolSpec};
+use super::pool::PoolSpec;
 use super::queue::{Discipline, Popped, ShardedQueue};
+use super::topology::Topology;
 use crate::metrics::{RequestRecord, SwitchEvent};
 
 /// Serving run options.
@@ -79,6 +80,12 @@ pub struct ServeOptions {
     /// non-empty runs named pools with rung-aware routing, within-pool
     /// stealing and cross-pool spill (see [`crate::serving::pool`]).
     pub pools: Vec<PoolSpec>,
+    /// Cost-aware spill margin m: a pool spills into a victim pool only
+    /// when the victim's backlog exceeds
+    /// `m · (speed_spiller / speed_victim) · workers_victim`
+    /// ([`Topology::spill_allowed`]). 0 (the default) is the historical
+    /// spill-when-dry. Meaningless on a single-pool fleet.
+    pub spill_margin: f64,
 }
 
 impl Default for ServeOptions {
@@ -91,6 +98,7 @@ impl Default for ServeOptions {
             shards: 0,
             batch: 1,
             pools: Vec::new(),
+            spill_margin: 0.0,
         }
     }
 }
@@ -98,16 +106,7 @@ impl Default for ServeOptions {
 impl ServeOptions {
     /// Effective shard count for this run (homogeneous topology).
     pub fn effective_shards(&self) -> usize {
-        match self.discipline {
-            Discipline::CentralFifo => 1,
-            Discipline::ShardedSteal => {
-                if self.shards == 0 {
-                    self.workers.max(1)
-                } else {
-                    self.shards
-                }
-            }
-        }
+        self.discipline.effective_shards(self.workers.max(1), self.shards)
     }
 
     /// The pool topology this run executes: the explicit pools, or a
@@ -138,6 +137,13 @@ impl ServeOptions {
         } else {
             super::pool::total_workers(&self.pools)
         }
+    }
+
+    /// The dispatch [`Topology`] this run executes — the one decision
+    /// core shared by the live queue walks and the DES engine. Validates
+    /// the pool specs.
+    pub fn topology(&self) -> Result<Topology> {
+        Topology::new(self.effective_pools(), self.pool_shard_counts(), self.spill_margin)
     }
 }
 
@@ -280,12 +286,8 @@ struct StartGate {
 /// lands — so a threshold crossing moves load *between pools*, not just
 /// along one shared ladder. On a single-pool fleet this is exactly the
 /// aggregate depth (the seed signal).
-fn pooled_depth<T>(
-    queue: &ShardedQueue<T>,
-    pools: &[PoolSpec],
-    handle: &PolicyHandle,
-) -> usize {
-    queue.pool_len(pool_of_rung(pools, handle.current_rung()))
+fn pooled_depth<T>(queue: &ShardedQueue<T>, topo: &Topology, handle: &PolicyHandle) -> usize {
+    queue.pool_len(topo.pool_for_rung(handle.current_rung()))
 }
 
 /// Run a serving experiment on the homogeneous runtime.
@@ -332,11 +334,11 @@ where
     F: Fn(&PoolSpec) -> Result<E> + Send + Sync,
     E: RequestEngine,
 {
-    if !opts.pools.is_empty() {
-        validate_pools(&opts.pools)?;
-    }
-    let pools: Arc<Vec<PoolSpec>> = Arc::new(opts.effective_pools());
-    let workers = opts.total_workers();
+    // One topology core decides routing, stealing, spilling and batch
+    // extents for this run — the queue below and the DES both execute
+    // exactly these choices.
+    let topo: Arc<Topology> = Arc::new(opts.topology()?);
+    let workers = topo.n_workers();
     let gate: Arc<(Mutex<StartGate>, Condvar)> = Arc::new((
         Mutex::new(StartGate { pending: workers, start: None }),
         Condvar::new(),
@@ -353,11 +355,9 @@ where
         }
     };
 
-    let queue: Arc<ShardedQueue<(u64, f64)>> = Arc::new(ShardedQueue::new_pooled(
-        opts.queue_capacity,
-        &opts.pool_shard_counts(),
-    ));
-    let monitor = Arc::new(LoadMonitor::with_pools(0.3, pools.len()));
+    let queue: Arc<ShardedQueue<(u64, f64)>> =
+        Arc::new(ShardedQueue::with_topology(opts.queue_capacity, (*topo).clone()));
+    let monitor = Arc::new(LoadMonitor::with_pools(0.3, topo.n_pools()));
     let handle = Arc::new(PolicyHandle::new(policy));
     let done = Arc::new(AtomicBool::new(false));
     let rejected = Arc::new(AtomicUsize::new(0));
@@ -372,7 +372,7 @@ where
             let handle = handle.clone();
             let monitor = monitor.clone();
             let done = done.clone();
-            let pools = pools.clone();
+            let topo = topo.clone();
             let tick = opts.tick_ms;
             let wait_start = wait_start.clone();
             scope.spawn(move || {
@@ -381,7 +381,7 @@ where
                     std::thread::sleep(Duration::from_millis(tick));
                     let t = start.elapsed().as_secs_f64() * 1e3;
                     monitor.tick(t);
-                    handle.observe_locked(t, pooled_depth(&queue, &pools, &handle));
+                    handle.observe_locked(t, pooled_depth(&queue, &topo, &handle));
                 }
             });
         }
@@ -395,7 +395,7 @@ where
             let handle = handle.clone();
             let monitor = monitor.clone();
             let rejected = rejected.clone();
-            let pools = pools.clone();
+            let topo = topo.clone();
             let arrivals = arrivals.to_vec();
             let wait_start = wait_start.clone();
             scope.spawn(move || {
@@ -407,11 +407,11 @@ where
                         std::thread::sleep(target - elapsed);
                     }
                     let t = start.elapsed().as_secs_f64() * 1e3;
-                    let pool = pool_of_rung(&pools, handle.current_rung());
+                    let pool = topo.pool_for_rung(handle.current_rung());
                     monitor.on_arrival_pool(pool);
                     match queue.push_pool(pool, (id as u64, t)) {
                         Ok(()) => {
-                            handle.observe(t, pooled_depth(&queue, &pools, &handle));
+                            handle.observe(t, pooled_depth(&queue, &topo, &handle));
                         }
                         Err(super::queue::QueueError::Full) => {
                             rejected.fetch_add(1, Ordering::Relaxed);
@@ -438,12 +438,12 @@ where
         // rung clamped into the pool's band.
         let batch = opts.batch.max(1);
         let mut handles = Vec::with_capacity(workers);
-        for (p, spec) in pools.iter().enumerate() {
+        for (p, spec) in topo.pools().iter().enumerate() {
             for lw in 0..spec.workers.max(1) {
                 let queue = queue.clone();
                 let handle = handle.clone();
                 let gate = gate.clone();
-                let pools = pools.clone();
+                let topo = topo.clone();
                 let spec = spec.clone();
                 handles.push(scope.spawn(move || -> Result<(usize, Vec<RequestRecord>)> {
                     // Build (and PJRT-compile) the engine; the last
@@ -485,9 +485,9 @@ where
                                     // Switches take effect at dequeue;
                                     // the pool executes the rung of its
                                     // own band.
-                                    let d = pooled_depth(&queue, &pools, &handle);
+                                    let d = pooled_depth(&queue, &topo, &handle);
                                     let idx = handle.observe(t_start, d);
-                                    let exec = pool_rung(&pools, p, idx, n_rungs);
+                                    let exec = topo.exec_rung(p, idx, n_rungs);
                                     let out = engine.execute(exec)?;
                                     let t_fin = now_ms();
                                     records.push(RequestRecord {
@@ -499,7 +499,7 @@ where
                                         accuracy: out.accuracy,
                                         success: out.success,
                                     });
-                                    handle.observe(t_fin, pooled_depth(&queue, &pools, &handle));
+                                    handle.observe(t_fin, pooled_depth(&queue, &topo, &handle));
                                 }
                                 Popped::TimedOut => {}
                                 Popped::Closed => break,
@@ -512,9 +512,9 @@ where
                             Popped::Item(items) => {
                                 let t_start = now_ms();
                                 // Switches take effect at dequeue.
-                                let d = pooled_depth(&queue, &pools, &handle);
+                                let d = pooled_depth(&queue, &topo, &handle);
                                 let idx = handle.observe(t_start, d);
-                                let exec = pool_rung(&pools, p, idx, n_rungs);
+                                let exec = topo.exec_rung(p, idx, n_rungs);
                                 let outs = engine.execute_batch(exec, items.len())?;
                                 anyhow::ensure!(
                                     outs.len() == items.len(),
@@ -534,7 +534,7 @@ where
                                         success: out.success,
                                     });
                                 }
-                                handle.observe(t_fin, pooled_depth(&queue, &pools, &handle));
+                                handle.observe(t_fin, pooled_depth(&queue, &topo, &handle));
                             }
                             Popped::TimedOut => {}
                             Popped::Closed => break,
@@ -554,7 +554,7 @@ where
             .collect();
         done.store(true, Ordering::Relaxed);
         let mut records = Vec::new();
-        let mut pool_served = vec![0usize; pools.len()];
+        let mut pool_served = vec![0usize; topo.n_pools()];
         for r in results {
             let (p, rs) = r?;
             pool_served[p] += rs.len();
@@ -564,7 +564,7 @@ where
         // (a no-op at k = 1: one FIFO consumer pops in id order).
         records.sort_by_key(|r| r.id);
 
-        let pool_arrivals = (0..pools.len())
+        let pool_arrivals = (0..topo.n_pools())
             .map(|p| monitor.pool_arrivals_total(p))
             .collect();
         Ok(ServeOutcome {

@@ -1,0 +1,374 @@
+//! The dispatch topology core — every routing/steal/spill/batch *choice*
+//! of the serving plane, as pure functions over an abstract shard-state
+//! view.
+//!
+//! Compass's premise is that the Planner's offline model and Elastico's
+//! runtime agree on how requests are dispatched. Before this module that
+//! agreement was pinned by parity tests between five hand-kept copies of
+//! the same walk (the live [`crate::serving::queue::ShardedQueue`] and
+//! four DES loops); now it holds **by construction**: the live queue and
+//! the one DES engine ([`crate::sim::simulate_topology`]) both delegate
+//! every decision to a [`Topology`] and keep only their own mechanics
+//! (locks/parking/atomics live, the event clock and rng simulated).
+//!
+//! A [`Topology`] owns the decisions and nothing else — no locking, no
+//! time, no queue state. It answers:
+//!
+//! * **shard layout** — which contiguous shard range belongs to which
+//!   pool ([`shard_range`](Topology::shard_range),
+//!   [`shard_pool`](Topology::shard_pool));
+//! * **routing** — round-robin within a pool ([`route`](Topology::route))
+//!   and rung band → pool resolution
+//!   ([`pool_for_rung`](Topology::pool_for_rung));
+//! * **dispatch order** — the home-shard-then-steal walk over a pool's
+//!   own shards ([`pool_walk`](Topology::pool_walk)) and the cyclic
+//!   spill order over the other pools
+//!   ([`spill_order`](Topology::spill_order));
+//! * **spill admission** — the cost-aware spill gate
+//!   ([`spill_allowed`](Topology::spill_allowed)): with a positive
+//!   [`spill_margin`](Topology::spill_margin), a pool poaches foreign
+//!   work only when the victim's backlog exceeds the spiller's speed
+//!   handicap; margin 0 (the default) is the historical spill-when-dry;
+//! * **batch extent** — the front-run / steal-half arithmetic
+//!   ([`take_count`](Topology::take_count)): a home dispatch drains up
+//!   to B of its shard, a steal or spill takes `⌈len/2⌉` capped at B;
+//! * **execution rung** — the policy rung clamped into a pool's band
+//!   ([`exec_rung`](Topology::exec_rung)) and the pool's service-time
+//!   scale ([`speed`](Topology::speed)).
+//!
+//! Shard *state* is always passed in (`len(shard)`, per-pool backlogs),
+//! so the same choice functions run against locked `VecDeque`s on the
+//! live path and plain vectors in the DES.
+
+use anyhow::Result;
+
+use super::pool::{pool_of_rung, pool_rung, validate_pools, PoolSpec};
+
+/// How a dispatch reached its shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// The consumer's home shard (front run, FIFO).
+    Home,
+    /// A non-home shard of the consumer's own pool (steal-half).
+    Steal,
+    /// A shard of another pool (spill-half, gated by the margin).
+    Spill,
+}
+
+/// A dispatch-plane topology: named pools, their shard partition, and
+/// the spill-admission margin. Construction validates the pool specs
+/// (bands strictly increasing from 0, positive speeds, ≥ 1 worker).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pools: Vec<PoolSpec>,
+    /// Half-open shard ranges per pool (contiguous, in pool order).
+    pool_ranges: Vec<(usize, usize)>,
+    /// Owning pool of each shard.
+    shard_pool: Vec<usize>,
+    /// Cost-aware spill margin m: pool `p` spills into pool `q` only
+    /// when `len(q) > m · (speed_p / speed_q) · workers_q`. 0 = the
+    /// historical spill-when-dry (any non-empty victim).
+    spill_margin: f64,
+}
+
+impl Topology {
+    /// Build a topology from pools and their shard counts.
+    pub fn new(
+        pools: Vec<PoolSpec>,
+        pool_shards: Vec<usize>,
+        spill_margin: f64,
+    ) -> Result<Topology> {
+        validate_pools(&pools)?;
+        anyhow::ensure!(
+            pools.len() == pool_shards.len(),
+            "{} pools but {} shard counts",
+            pools.len(),
+            pool_shards.len()
+        );
+        let mut pool_ranges = Vec::with_capacity(pools.len());
+        let mut shard_pool = Vec::new();
+        let mut start = 0usize;
+        for (p, &n) in pool_shards.iter().enumerate() {
+            let n = n.max(1);
+            pool_ranges.push((start, start + n));
+            for _ in 0..n {
+                shard_pool.push(p);
+            }
+            start += n;
+        }
+        Ok(Topology {
+            pools,
+            pool_ranges,
+            shard_pool,
+            spill_margin: spill_margin.max(0.0),
+        })
+    }
+
+    /// The homogeneous topology: one reference-speed pool of `workers`
+    /// servers over `shards` shards. `shards == 1` is the central FIFO;
+    /// `shards == workers` the per-worker sharded discipline.
+    pub fn uniform(workers: usize, shards: usize) -> Topology {
+        Topology::new(vec![PoolSpec::uniform(workers)], vec![shards.max(1)], 0.0)
+            .expect("uniform topology is always valid")
+    }
+
+    /// The heterogeneous-fleet topology: one shard per worker per pool
+    /// (the pooled runtime layout).
+    pub fn from_pools(pools: &[PoolSpec], spill_margin: f64) -> Result<Topology> {
+        let shards = pools.iter().map(|p| p.workers.max(1)).collect();
+        Topology::new(pools.to_vec(), shards, spill_margin)
+    }
+
+    /// Anonymous uniform-speed pools over a bare shard partition — the
+    /// pool-agnostic queue constructors, where only the shard layout
+    /// matters (no bands, no speed asymmetry, no spill gate).
+    pub(crate) fn anonymous(pool_shards: &[usize]) -> Topology {
+        let pools = pool_shards
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| PoolSpec::new(format!("pool{i}"), n.max(1), i, 1.0))
+            .collect();
+        Topology::new(pools, pool_shards.to_vec(), 0.0)
+            .expect("anonymous topology is always valid")
+    }
+
+    /// The pool specs, in shard order.
+    pub fn pools(&self) -> &[PoolSpec] {
+        &self.pools
+    }
+
+    pub fn n_pools(&self) -> usize {
+        self.pools.len()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shard_pool.len()
+    }
+
+    /// Total servers/executor threads across the fleet.
+    pub fn n_workers(&self) -> usize {
+        super::pool::total_workers(&self.pools)
+    }
+
+    /// The spill-admission margin (0 = spill-when-dry).
+    pub fn spill_margin(&self) -> f64 {
+        self.spill_margin
+    }
+
+    /// Half-open shard range `[lo, hi)` of a pool.
+    pub fn shard_range(&self, pool: usize) -> (usize, usize) {
+        self.pool_ranges[pool]
+    }
+
+    /// Owning pool of a shard.
+    pub fn shard_pool(&self, shard: usize) -> usize {
+        self.shard_pool[shard]
+    }
+
+    /// Home shard of pool-local consumer `worker`.
+    pub fn home_shard(&self, pool: usize, worker: usize) -> usize {
+        let (lo, hi) = self.pool_ranges[pool];
+        lo + worker % (hi - lo)
+    }
+
+    /// Round-robin routing: the shard of `pool` a producer's `cursor`-th
+    /// push lands on.
+    pub fn route(&self, pool: usize, cursor: usize) -> usize {
+        let (lo, hi) = self.pool_ranges[pool];
+        lo + cursor % (hi - lo)
+    }
+
+    /// The pool whose rung band contains `rung` (rung-aware routing).
+    pub fn pool_for_rung(&self, rung: usize) -> usize {
+        pool_of_rung(&self.pools, rung)
+    }
+
+    /// The rung `pool` executes when the policy sits at `policy_rung`:
+    /// the policy rung clamped into the pool's band.
+    pub fn exec_rung(&self, pool: usize, policy_rung: usize, n_rungs: usize) -> usize {
+        pool_rung(&self.pools, pool, policy_rung, n_rungs)
+    }
+
+    /// Service-time multiplier of a pool vs the reference hardware.
+    pub fn speed(&self, pool: usize) -> f64 {
+        self.pools[pool].speed_factor
+    }
+
+    /// The within-pool dispatch walk of pool-local consumer `worker`:
+    /// its home shard first, then the pool's other shards in cyclic
+    /// order (each a steal candidate). Both the live queue and the DES
+    /// take the first non-empty shard of this walk.
+    pub fn pool_walk(
+        &self,
+        pool: usize,
+        worker: usize,
+    ) -> impl Iterator<Item = (usize, Dispatch)> + '_ {
+        let (lo, hi) = self.pool_ranges[pool];
+        let n = hi - lo;
+        let home = worker % n;
+        (0..n).map(move |d| {
+            let kind = if d == 0 { Dispatch::Home } else { Dispatch::Steal };
+            (lo + (home + d) % n, kind)
+        })
+    }
+
+    /// The spill sweep order: every *other* pool in cyclic order from
+    /// the consumer's pool (a consumer tries each victim's shards from
+    /// its first shard). Empty on a single-pool topology.
+    pub fn spill_order(&self, pool: usize) -> impl Iterator<Item = usize> + '_ {
+        let np = self.pools.len();
+        (1..np).map(move |d| (pool + d) % np)
+    }
+
+    /// Cost-aware spill gate: may pool `from` poach pool `victim`'s work
+    /// given the victim's queued backlog?
+    ///
+    /// Poaching pays only when the request would otherwise wait longer
+    /// for a victim worker than the spiller's (relatively) slow hardware
+    /// takes to run it, so the gate compares the victim's *per-worker*
+    /// backlog against the spiller's speed handicap:
+    /// `len > margin · (speed_from / speed_victim) · workers_victim`.
+    /// Margin 0 degenerates to spill-when-dry (any non-empty victim —
+    /// the historical behavior, pinned bit-for-bit by the parity tests).
+    pub fn spill_allowed(&self, from: usize, victim: usize, victim_backlog: usize) -> bool {
+        if victim_backlog == 0 {
+            return false;
+        }
+        if self.spill_margin <= 0.0 {
+            return true;
+        }
+        let handicap = self.pools[from].speed_factor / self.pools[victim].speed_factor;
+        let workers = self.pools[victim].workers.max(1) as f64;
+        victim_backlog as f64 > self.spill_margin * handicap * workers
+    }
+
+    /// Is there any work a consumer of `pool` may take right now —
+    /// its own pool's backlog, or a foreign backlog passing the spill
+    /// gate? (`pool_len` is the caller's per-pool depth view.) Drives
+    /// the park/wake decision of the live queue.
+    pub fn can_take(&self, pool: usize, pool_len: impl Fn(usize) -> usize) -> bool {
+        if pool_len(pool) > 0 {
+            return true;
+        }
+        self.spill_order(pool)
+            .any(|q| self.spill_allowed(pool, q, pool_len(q)))
+    }
+
+    /// Batch extent: how many of a shard's `len` queued items one
+    /// dispatch takes under batch bound `max` — a front run
+    /// (`min(len, max)`) at home, half the victim's backlog (`⌈len/2⌉`,
+    /// capped at `max`, leaving the victim work) on a steal or spill.
+    pub fn take_count(len: usize, max: usize, kind: Dispatch) -> usize {
+        let max = max.max(1);
+        match kind {
+            Dispatch::Home => len.min(max),
+            Dispatch::Steal | Dispatch::Spill => len.div_ceil(2).min(max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::pool::parse_pools;
+
+    #[test]
+    fn uniform_layout_and_walk() {
+        let t = Topology::uniform(4, 4);
+        assert_eq!(t.n_pools(), 1);
+        assert_eq!(t.n_shards(), 4);
+        assert_eq!(t.n_workers(), 4);
+        assert_eq!(t.shard_range(0), (0, 4));
+        // Worker 2's walk: home shard 2, then 3, 0, 1 as steal victims.
+        let walk: Vec<_> = t.pool_walk(0, 2).collect();
+        assert_eq!(walk.len(), 4);
+        assert_eq!(walk[0], (2, Dispatch::Home));
+        assert_eq!(walk[1], (3, Dispatch::Steal));
+        assert_eq!(walk[2], (0, Dispatch::Steal));
+        assert_eq!(walk[3], (1, Dispatch::Steal));
+        // One pool: nothing to spill into, but home work is takeable.
+        assert_eq!(t.spill_order(0).count(), 0);
+        assert!(t.can_take(0, |_| 3));
+        assert!(!t.can_take(0, |_| 0));
+    }
+
+    #[test]
+    fn central_shape_is_one_shard_many_workers() {
+        let t = Topology::uniform(8, 1);
+        assert_eq!(t.n_shards(), 1);
+        assert_eq!(t.n_workers(), 8);
+        for w in 0..8 {
+            assert_eq!(t.home_shard(0, w), 0);
+            assert_eq!(t.pool_walk(0, w).count(), 1, "one shard never steals");
+        }
+    }
+
+    #[test]
+    fn pooled_layout_routes_and_resolves_rungs() {
+        let pools = parse_pools("fast:2:1.0,accurate:2:2.5").unwrap();
+        let t = Topology::from_pools(&pools, 0.0).unwrap();
+        assert_eq!(t.n_shards(), 4);
+        assert_eq!(t.shard_range(0), (0, 2));
+        assert_eq!(t.shard_range(1), (2, 4));
+        assert_eq!(t.shard_pool(3), 1);
+        // Per-pool round-robin.
+        assert_eq!(t.route(1, 0), 2);
+        assert_eq!(t.route(1, 1), 3);
+        assert_eq!(t.route(1, 2), 2);
+        // Band resolution and the in-band execution rung.
+        assert_eq!(t.pool_for_rung(0), 0);
+        assert_eq!(t.pool_for_rung(1), 1);
+        assert_eq!(t.exec_rung(1, 0, 2), 1, "slow pool clamps into its band");
+        assert_eq!(t.exec_rung(0, 1, 2), 0, "fast pool clamps into its band");
+        assert_eq!(t.speed(1), 2.5);
+        // Spill order is cyclic over the other pools.
+        assert_eq!(t.spill_order(0).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(t.spill_order(1).collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn take_count_front_run_and_steal_half() {
+        assert_eq!(Topology::take_count(5, 8, Dispatch::Home), 5);
+        assert_eq!(Topology::take_count(10, 8, Dispatch::Home), 8);
+        assert_eq!(Topology::take_count(8, 8, Dispatch::Steal), 4);
+        assert_eq!(Topology::take_count(5, 8, Dispatch::Steal), 3);
+        assert_eq!(Topology::take_count(8, 2, Dispatch::Spill), 2);
+        assert_eq!(Topology::take_count(1, 0, Dispatch::Home), 1, "max clamps to 1");
+    }
+
+    #[test]
+    fn spill_gate_margin_zero_is_spill_when_dry() {
+        let pools = parse_pools("fast:2:1.0,slow:2:2.5").unwrap();
+        let t = Topology::from_pools(&pools, 0.0).unwrap();
+        assert!(t.spill_allowed(1, 0, 1), "margin 0 poaches any backlog");
+        assert!(!t.spill_allowed(1, 0, 0), "an empty victim is never poached");
+    }
+
+    #[test]
+    fn spill_gate_blocks_a_slow_poacher_until_the_backlog_justifies_it() {
+        // slow (2.5x) poaching fast (1x, 2 workers) at margin 1: only a
+        // backlog deeper than 1 · 2.5 · 2 = 5 justifies running the
+        // request 2.5x slower instead of waiting for a fast worker.
+        let pools = parse_pools("fast:2:1.0,slow:2:2.5").unwrap();
+        let t = Topology::from_pools(&pools, 1.0).unwrap();
+        assert!(!t.spill_allowed(1, 0, 5), "shallow backlog: keep it local");
+        assert!(t.spill_allowed(1, 0, 6), "deep backlog: poaching now pays");
+        // The fast pool poaching the slow pool has a 1/2.5 handicap —
+        // its threshold is proportionally lower (> 0.8 ⇒ any backlog).
+        assert!(t.spill_allowed(0, 1, 1));
+        // The park/wake predicate follows the same gate.
+        assert!(!t.can_take(1, |q| if q == 0 { 4 } else { 0 }));
+        assert!(t.can_take(1, |q| if q == 0 { 6 } else { 0 }));
+        assert!(t.can_take(1, |q| if q == 1 { 1 } else { 0 }), "own work always");
+    }
+
+    #[test]
+    fn anonymous_pools_partition_the_shards() {
+        let t = Topology::anonymous(&[2, 3]);
+        assert_eq!(t.n_pools(), 2);
+        assert_eq!(t.n_shards(), 5);
+        assert_eq!(t.shard_range(1), (2, 5));
+        assert_eq!(t.spill_margin(), 0.0);
+        assert!(t.pools().iter().all(|p| p.speed_factor == 1.0));
+    }
+}

@@ -1,0 +1,306 @@
+//! The one discrete-event serving engine, parameterized by a dispatch
+//! [`Topology`].
+//!
+//! Every public simulator entry point (`simulate`, `simulate_k`,
+//! `simulate_disc`, `simulate_pools` in [`crate::sim`]) is a thin shim
+//! that builds the matching topology and calls
+//! [`simulate_topology`] — so `CentralFifo == ShardedSteal(shards = 1)
+//! == simulate_pools(one uniform pool)` holds **by construction**: they
+//! are literally the same event loop over the same decision core, not
+//! three loops pinned equal by tests. The historical parity tests in
+//! `sim::tests` survive unmodified as regression pins on the shims.
+//!
+//! The engine owns only simulation mechanics — the event clock, the
+//! rng, the per-shard `VecDeque`s and the busy-until times. Every
+//! *choice* (routing, walk order, spill admission, batch extent,
+//! execution rung, service-time scale) is the topology's, shared
+//! verbatim with the live [`crate::serving::queue::ShardedQueue`].
+//!
+//! ## Event loop
+//!
+//! Arrivals route to the pool whose rung band holds the current policy
+//! rung (per-pool round-robin); the earliest-free server dispatches a
+//! front run of up to B from its home shard, a steal-half from a pool
+//! sibling, or — once its pool is dry and the victim passes the spill
+//! gate — a spill-half from another pool. Under a positive spill margin
+//! the earliest-free server may be *gated*; the engine then falls back
+//! to the next-free server in `(free time, index)` order, and only
+//! admits the next arrival when no free server may dispatch (at margin
+//! 0 the gate admits any non-empty victim, so the fallback never runs
+//! and the loop is event-for-event the historical simulators). The
+//! policy observes the per-pool depth of the current rung's home pool
+//! at every arrival (plus that pool's in-service count), dispatch and
+//! departure — on a single pool exactly the aggregate-depth signal of
+//! the seed simulator.
+//!
+//! Batch service follows `s̄(B) = α + β·B`: a batch of n sampled times
+//! costs `Σ sᵢ·speed − (n−1)·α` (α clamped into `[0, s̄(1)·speed]` of
+//! the executing pool's rung), all n requests share the batch bounds,
+//! and B = 1 degenerates to the seed expressions bit-for-bit.
+
+use crate::metrics::{RequestRecord, SwitchEvent};
+use crate::planner::Plan;
+use crate::serving::policy::ScalingPolicy;
+use crate::serving::topology::{Dispatch, Topology};
+use crate::util::Rng;
+
+use super::{ServiceModel, SimOutcome};
+
+/// The first shard a consumer of `pool` may take from, given the
+/// current queue state: the topology's within-pool walk, then the gated
+/// cross-pool spill sweep — exactly the live
+/// `ShardedQueue::try_pop_batch_pool` order.
+fn choose_shard(
+    topo: &Topology,
+    queues: &[std::collections::VecDeque<(u64, f64)>],
+    pool_queued: &[usize],
+    pool: usize,
+    worker: usize,
+) -> Option<(usize, Dispatch)> {
+    for (s, kind) in topo.pool_walk(pool, worker) {
+        if !queues[s].is_empty() {
+            return Some((s, kind));
+        }
+    }
+    for q in topo.spill_order(pool) {
+        if !topo.spill_allowed(pool, q, pool_queued[q]) {
+            continue;
+        }
+        let (lo, hi) = topo.shard_range(q);
+        for s in lo..hi {
+            if !queues[s].is_empty() {
+                return Some((s, Dispatch::Spill));
+            }
+        }
+    }
+    None
+}
+
+/// Simulate serving `arrivals` (seconds) under `policy` on the fleet
+/// described by `topo`, dispatching up to `batch` requests per engine
+/// call — the single event loop behind every `simulate*` entry point.
+pub fn simulate_topology<P: ScalingPolicy, S: ServiceModel>(
+    arrivals: &[f64],
+    plan: &Plan,
+    policy: &mut P,
+    service: &S,
+    seed: u64,
+    topo: &Topology,
+    batch: usize,
+) -> SimOutcome {
+    let batch = batch.max(1);
+    let alpha = plan.batch_alpha_ms.max(0.0);
+    let n_rungs = plan.ladder.len();
+
+    // Server slots in pool order: slot w of pool p has pool-local index
+    // `server_local[w]` (its home shard through the topology's walk).
+    let mut server_pool: Vec<usize> = Vec::new();
+    let mut server_local: Vec<usize> = Vec::new();
+    for (p, spec) in topo.pools().iter().enumerate() {
+        for local in 0..spec.workers.max(1) {
+            server_pool.push(p);
+            server_local.push(local);
+        }
+    }
+    let workers = server_pool.len();
+    let nsh = topo.n_shards();
+
+    let mut rng = Rng::new(seed);
+    let mut records = Vec::with_capacity(arrivals.len());
+    let mut switches = Vec::new();
+    let mut steals = 0u64;
+    let mut spills = 0u64;
+
+    let mut queues: Vec<std::collections::VecDeque<(u64, f64)>> =
+        (0..nsh).map(|_| std::collections::VecDeque::new()).collect();
+    let mut pool_queued = vec![0usize; topo.n_pools()];
+    let mut queued_total = 0usize;
+    let mut routers = vec![0usize; topo.n_pools()];
+    let mut busy: Vec<f64> = vec![f64::NEG_INFINITY; workers];
+    let mut observed = policy.current();
+
+    let observe = |policy: &mut P,
+                       switches: &mut Vec<SwitchEvent>,
+                       observed: &mut usize,
+                       now: f64,
+                       depth: usize| {
+        let next = policy.decide(now, depth);
+        if next != *observed {
+            switches.push(SwitchEvent { at_ms: now, from_idx: *observed, to_idx: next });
+            *observed = next;
+        }
+        next
+    };
+
+    let mut i = 0usize; // next arrival index
+    let n = arrivals.len();
+    let mut next_id = 0u64;
+
+    // Event loop: either the next arrival or the earliest server
+    // freeing up with work it may take.
+    while i < n || queued_total > 0 {
+        let next_arrival = if i < n { arrivals[i] * 1000.0 } else { f64::INFINITY };
+
+        // Pick the dispatching server: the earliest-free server (ties
+        // broken by lowest index — pool order, reference pools first)
+        // when it may take work. Only a positive spill margin can gate
+        // it; then try the remaining free servers in (free time, index)
+        // order before falling back to the next arrival.
+        let mut chosen: Option<(usize, f64, usize, Dispatch)> = None;
+        if queued_total > 0 {
+            let (slot, earliest) = busy
+                .iter()
+                .copied()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            if earliest <= next_arrival {
+                let pick = choose_shard(
+                    topo,
+                    &queues,
+                    &pool_queued,
+                    server_pool[slot],
+                    server_local[slot],
+                );
+                match pick {
+                    Some((shard, kind)) => chosen = Some((slot, earliest, shard, kind)),
+                    None => {
+                        // Whether a pool's consumer can dispatch is a
+                        // property of the *pool* (the walk start varies
+                        // per worker, not whether any shard is
+                        // non-empty or any victim passes the gate), so
+                        // one rejection rules out the whole pool: scan
+                        // the remaining free servers in (free time,
+                        // index) order, skipping rejected pools.
+                        let mut rejected = vec![false; topo.n_pools()];
+                        rejected[server_pool[slot]] = true;
+                        loop {
+                            let mut best: Option<(usize, f64)> = None;
+                            for (w, &b) in busy.iter().enumerate() {
+                                if rejected[server_pool[w]] || b > next_arrival {
+                                    continue;
+                                }
+                                let better = match best {
+                                    None => true,
+                                    Some((_, t)) => b < t,
+                                };
+                                if better {
+                                    best = Some((w, b));
+                                }
+                            }
+                            let (slot2, free2) = match best {
+                                Some(x) => x,
+                                None => break,
+                            };
+                            let pick = choose_shard(
+                                topo,
+                                &queues,
+                                &pool_queued,
+                                server_pool[slot2],
+                                server_local[slot2],
+                            );
+                            match pick {
+                                Some((shard, kind)) => {
+                                    chosen = Some((slot2, free2, shard, kind));
+                                    break;
+                                }
+                                None => rejected[server_pool[slot2]] = true,
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        if let Some((slot, free_at, shard, kind)) = chosen {
+            // Dispatch to server `slot`: a front run of its home shard,
+            // a steal-half from a pool sibling, or a spill-half from
+            // the gated victim — one steal/spill operation per batch.
+            match kind {
+                Dispatch::Home => {}
+                Dispatch::Steal => steals += 1,
+                Dispatch::Spill => spills += 1,
+            }
+            let p = server_pool[slot];
+            let take = Topology::take_count(queues[shard].len(), batch, kind);
+            let mut taken: Vec<(u64, f64)> = Vec::with_capacity(take);
+            for _ in 0..take {
+                taken.push(queues[shard].pop_front().unwrap());
+            }
+            queued_total -= take;
+            pool_queued[topo.shard_pool(shard)] -= take;
+            // The batch starts once the server is free and its last
+            // (latest-arriving, FIFO within the shard) request is in.
+            let start = free_at.max(taken.last().unwrap().1);
+            // Switches apply at dequeue: one policy consultation per
+            // batch, against the per-pool depth of the current rung's
+            // home pool (the signal the live PolicyHandle feeds).
+            let sig = pool_queued[topo.pool_for_rung(observed)];
+            let idx = observe(policy, &mut switches, &mut observed, start, sig);
+            // The pool executes its own rung — the policy rung clamped
+            // into its band — and its hardware scales every sampled
+            // service time by the pool's speed factor.
+            let exec = topo.exec_rung(p, idx, n_rungs);
+            let speed = topo.speed(p);
+            // Batch service: each sampled time is α + βᵢ, so n requests
+            // in one dispatch cost Σ sᵢ − (n−1)·α (one dispatch cost, n
+            // marginals); α is clamped into [0, s̄(1)] of the *executing*
+            // pool's rung. At B = 1 this is the sample itself.
+            let alpha_k = alpha.clamp(0.0, plan.ladder[exec].mean_ms * speed);
+            let svc = (0..take)
+                .map(|_| service.sample_ms(exec, &mut rng) * speed)
+                .sum::<f64>()
+                - (take as f64 - 1.0) * alpha_k;
+            let finish = start + svc.max(0.0);
+            busy[slot] = finish;
+            for (id, arr_ms) in taken {
+                records.push(RequestRecord {
+                    id,
+                    arrival_ms: arr_ms,
+                    start_ms: start,
+                    finish_ms: finish,
+                    config_idx: exec,
+                    accuracy: plan.ladder[exec].accuracy,
+                    success: None,
+                });
+            }
+            // Departure observation (once per batch).
+            let sig = pool_queued[topo.pool_for_rung(observed)];
+            observe(policy, &mut switches, &mut observed, finish, sig);
+        } else if i < n {
+            // Admit the next arrival: rung-aware routing — round-robin
+            // over the shards of the current rung's home pool.
+            let arr_ms = arrivals[i] * 1000.0;
+            let rp = topo.pool_for_rung(observed);
+            let shard = topo.route(rp, routers[rp]);
+            routers[rp] += 1;
+            queues[shard].push_back((next_id, arr_ms));
+            queued_total += 1;
+            pool_queued[rp] += 1;
+            next_id += 1;
+            i += 1;
+            // In-flight requests of the routed pool count toward the
+            // observed per-pool depth.
+            let in_flight = busy
+                .iter()
+                .enumerate()
+                .filter(|&(w, &b)| server_pool[w] == rp && b > arr_ms)
+                .count();
+            observe(
+                policy,
+                &mut switches,
+                &mut observed,
+                arr_ms,
+                pool_queued[rp] + in_flight,
+            );
+        } else {
+            // Unreachable: with no arrivals left every server is a
+            // candidate and a pool's own workers are never gated on
+            // their own backlog, so queued work always finds a server.
+            unreachable!("queued_total > 0 but no server may dispatch");
+        }
+    }
+
+    records.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
+    SimOutcome { records, switches, steals, spills }
+}

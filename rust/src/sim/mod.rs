@@ -1,4 +1,5 @@
-//! Discrete-event M/G/k serving simulator, in both queue disciplines.
+//! Discrete-event serving simulator — shims over the one topology-driven
+//! engine.
 //!
 //! Replays a workload trace against a service-time model derived from the
 //! Planner's latency profiles, driving the *same* [`ScalingPolicy`]
@@ -9,84 +10,85 @@
 //! * regenerate the paper's serving figures quickly and deterministically
 //!   (180 s x 24 experiment cells replay in milliseconds),
 //! * property-test controller invariants over thousands of random loads,
-//! * quantify the ordering/latency delta of the sharded work-stealing
-//!   dispatch against central-FIFO theory before touching the live pool.
+//! * quantify the ordering/latency delta of sharded work stealing and
+//!   heterogeneous pool routing against central-FIFO theory before
+//!   touching the live pool.
 //!
-//! ## Disciplines ([`Discipline`], mirroring the live server)
+//! ## One engine, many shapes
 //!
-//! * **`CentralFifo`** — a single FIFO queue drained by k servers
-//!   (head-of-line dispatch to the earliest-free server). Global FIFO
-//!   order; [`simulate`] is the k = 1 case and reproduces the original
-//!   M/G/1 simulator event-for-event.
-//! * **`ShardedSteal`** — arrivals route round-robin over `shards`
-//!   per-worker FIFOs (with one injector this is exactly `id % shards`,
-//!   matching the live router); the earliest-free server dispatches from
-//!   its home shard (`worker % shards`), stealing the *front* of the
-//!   next non-empty shard when its home shard is dry. Per-shard FIFO
-//!   order is exact; global order can diverge from FIFO by up to one
-//!   round-robin lap, which is the latency cost the DES quantifies.
-//!   With `shards == 1` the dispatch degenerates to the central FIFO
-//!   and [`simulate_disc`] reproduces `CentralFifo` record-for-record
-//!   (asserted by the parity test below).
+//! Since the dispatch-plane unification there is a single event loop,
+//! [`engine::simulate_topology`], parameterized by a
+//! [`crate::serving::topology::Topology`] — the same pure decision core
+//! (shard layout, routing, walk order, spill gate, batch arithmetic)
+//! the live `ShardedQueue` executes. The historical entry points are
+//! thin shims that build the matching topology:
 //!
-//! * **Pooled** ([`simulate_pools`]) — the heterogeneous-fleet mirror of
-//!   the live `serve_pools` runtime: named worker pools
-//!   ([`crate::serving::pool::PoolSpec`]) with per-pool shards,
-//!   rung-aware routing (arrivals go to the pool whose rung band holds
-//!   the current policy rung), within-pool stealing, cross-pool spill
-//!   only when a pool is fully dry, per-pool service-time scaling
-//!   (`speed_factor`) and per-pool engine rungs (the policy rung clamped
-//!   into the pool's band). A single uniform pool reproduces
-//!   `ShardedSteal` record-for-record, which is what makes every
-//!   heterogeneous routing decision quantifiable against the
-//!   homogeneous baseline and against [`theory`]
-//!   (`tests/theory_validation.rs` holds the DES-vs-Erlang-C suite).
+//! * [`simulate`] — one server, one shard (the paper's M/G/1 testbed);
+//! * [`simulate_k`] — k servers draining one central FIFO (M/G/k);
+//! * [`simulate_disc`] — either [`Discipline`]: `CentralFifo` is the
+//!   one-shard shape, `ShardedSteal` runs round-robin routing over
+//!   `shards` per-worker FIFOs with front-of-queue steal-half;
+//! * [`simulate_pools`] — named heterogeneous pools with rung-aware
+//!   routing, within-pool stealing, gated cross-pool spill, per-pool
+//!   service-time scaling and per-pool engine rungs.
 //!
-//! Both disciplines consult the policy on every arrival and every
-//! dequeue/departure against the *aggregate* queued depth — the same
-//! total-across-shards signal the live `ShardedQueue` maintains
-//! lock-free ([`simulate_pools`] feeds the per-pool depth of the current
-//! rung's home pool instead, mirroring the live pooled signal; the two
-//! coincide on a single pool). Known divergence from the live server (inherited from the
-//! seed simulator): the arrival-time policy observation here includes
-//! the in-service count (≤ k) on top of the queue depth, while the live
-//! injector observes queue depth only — kept so k = 1 results stay
-//! bit-for-bit with the paper figures. The DES queue is unbounded (no
-//! admission rejections), as in the seed.
+//! `CentralFifo == ShardedSteal(shards = 1)` and
+//! `ShardedSteal(k shards) == simulate_pools(one uniform pool of k)`
+//! therefore hold **by construction** — all three are the same loop over
+//! the same core — and the parity tests below survive unmodified as
+//! regression pins on the shims rather than as the only thing holding
+//! five hand-kept copies together. What parity remains *pinned by test*
+//! is live-vs-simulated equivalence (`tests/theory_validation.rs`, the
+//! worker-pool suite): the DES shares the live runtime's decisions but
+//! models its mechanics (real threads, locks, the wall clock).
+//!
+//! ## Signals and known divergences
+//!
+//! The policy observes the per-pool queued depth of the current rung's
+//! home pool at every arrival, dispatch and departure — on a single
+//! pool exactly the total-across-shards signal the live `ShardedQueue`
+//! maintains lock-free. Known divergence from the live server
+//! (inherited from the seed simulator): the arrival-time observation
+//! includes the routed pool's in-service count (≤ k) on top of its
+//! queue depth, while the live injector observes queue depth only —
+//! kept so k = 1 results stay bit-for-bit with the paper figures. The
+//! DES queue is unbounded (no admission rejections), as in the seed.
 //!
 //! ## Batch model
 //!
-//! [`simulate_disc`] takes the executor batch bound B: a freeing server
-//! drains up to B requests from the chosen shard in one dispatch —
-//! a front run of its home shard, or a steal-half (`⌈len/2⌉`, capped at
-//! B) from the victim — exactly the live `ShardedQueue::pop_batch`
-//! walk, so FIFO-per-shard order is preserved and a batch never spans
-//! shards. Batch service time follows `s̄(B) = α + β·B` with `α =`
-//! [`crate::planner::Plan::batch_alpha_ms`]: each request's sampled
-//! service time is treated as `α + βᵢ`, so a batch of n costs
-//! `Σᵢ sᵢ − (n−1)·α` — n marginal costs but one dispatch cost. All n
-//! requests share the batch's start/finish (a request completes when
-//! its batch does) and the policy is consulted once per batch at
-//! dispatch and once at departure, mirroring the live executor. With
-//! `B = 1` every expression degenerates to the seed simulator
-//! bit-for-bit (same rng consumption, same timestamps).
+//! A freeing server drains up to B requests from the chosen shard in
+//! one dispatch — a front run of its home shard, or a steal/spill-half
+//! (`⌈len/2⌉`, capped at B) from the victim — exactly the live
+//! `ShardedQueue::pop_batch` walk, so FIFO-per-shard order is preserved
+//! and a batch never spans shards. Batch service time follows
+//! `s̄(B) = α + β·B` with `α =` [`crate::planner::Plan::batch_alpha_ms`]:
+//! each request's sampled service time is treated as `α + βᵢ`, so a
+//! batch of n costs `Σᵢ sᵢ − (n−1)·α` — n marginal costs but one
+//! dispatch cost. All n requests share the batch's start/finish (a
+//! request completes when its batch does) and the policy is consulted
+//! once per batch at dispatch and once at departure, mirroring the live
+//! executor. With `B = 1` every expression degenerates to the seed
+//! simulator bit-for-bit (same rng consumption, same timestamps).
 
+pub mod engine;
 pub mod service;
 pub mod theory;
 
+pub use engine::simulate_topology;
 pub use service::{
     DeterministicService, ExponentialService, LognormalService, ServiceModel,
 };
 
-// The queue discipline is defined next to the live queues and shared
-// with the DES so both sides dispatch identically.
+// The queue discipline and the decision core are defined next to the
+// live queues and shared with the DES so both sides dispatch
+// identically.
+pub use crate::serving::topology::Topology;
 pub use crate::serving::Discipline;
 
 use crate::metrics::{RequestRecord, SwitchEvent};
 use crate::planner::Plan;
 use crate::serving::policy::ScalingPolicy;
-use crate::serving::pool::{pool_of_rung, pool_rung, validate_pools, PoolSpec};
-use crate::util::Rng;
+use crate::serving::pool::PoolSpec;
 
 /// Result of one simulated run.
 #[derive(Clone, Debug)]
@@ -97,7 +99,8 @@ pub struct SimOutcome {
     /// server's own pool (always 0 under [`Discipline::CentralFifo`]).
     pub steals: u64,
     /// Dispatches satisfied by spilling into another pool's shards
-    /// (always 0 outside [`simulate_pools`]).
+    /// (always 0 outside [`simulate_pools`] / a multi-pool
+    /// [`simulate_topology`]).
     pub spills: u64,
 }
 
@@ -137,7 +140,9 @@ pub fn simulate_k<P: ScalingPolicy, S: ServiceModel>(
     )
 }
 
-/// Simulate serving under either queue discipline.
+/// Simulate serving under either homogeneous queue discipline — a shim
+/// building the uniform one-pool [`Topology`] for
+/// [`simulate_topology`].
 ///
 /// `service` samples per-request service times (ms) given a ladder index;
 /// `plan` supplies per-rung expected accuracy (and the per-dispatch
@@ -161,166 +166,30 @@ pub fn simulate_disc<P: ScalingPolicy, S: ServiceModel>(
     batch: usize,
 ) -> SimOutcome {
     let workers = workers.max(1);
-    let batch = batch.max(1);
-    let alpha = plan.batch_alpha_ms.max(0.0);
-    let nsh = match discipline {
-        Discipline::CentralFifo => 1,
-        Discipline::ShardedSteal => {
-            if shards == 0 {
-                workers
-            } else {
-                shards
-            }
-        }
-    };
-
-    let mut rng = Rng::new(seed);
-    let mut records = Vec::with_capacity(arrivals.len());
-    let mut switches = Vec::new();
-    let mut steals = 0u64;
-
-    // Per-shard FIFOs of (id, arrival_ms); server s is busy until
-    // `busy[s]`. The central discipline is the one-shard case.
-    let mut queues: Vec<std::collections::VecDeque<(u64, f64)>> =
-        (0..nsh).map(|_| std::collections::VecDeque::new()).collect();
-    let mut queued_total = 0usize;
-    let mut router = 0usize;
-    let mut busy: Vec<f64> = vec![f64::NEG_INFINITY; workers];
-    let mut observed = policy.current();
-
-    let observe = |policy: &mut P,
-                       switches: &mut Vec<SwitchEvent>,
-                       observed: &mut usize,
-                       now: f64,
-                       depth: usize| {
-        let next = policy.decide(now, depth);
-        if next != *observed {
-            switches.push(SwitchEvent { at_ms: now, from_idx: *observed, to_idx: next });
-            *observed = next;
-        }
-        next
-    };
-
-    let mut i = 0usize; // next arrival index
-    let n = arrivals.len();
-    let mut next_id = 0u64;
-
-    // Event loop: either the next arrival or the earliest server
-    // freeing up.
-    while i < n || queued_total > 0 {
-        let next_arrival = if i < n { arrivals[i] * 1000.0 } else { f64::INFINITY };
-
-        // Earliest-free server (ties broken by lowest index).
-        let (slot, earliest) = busy
-            .iter()
-            .copied()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .unwrap();
-
-        if queued_total > 0 && earliest <= next_arrival {
-            // Dispatch to server `slot`: home shard first, then a FIFO
-            // steal sweep (exactly the live ShardedQueue::try_pop_batch
-            // walk): a front run of up to `batch` from the home shard,
-            // or a steal-half (⌈len/2⌉, capped at `batch`) from the
-            // victim — a batch never spans shards.
-            let home = slot % nsh;
-            let shard = (0..nsh)
-                .map(|d| (home + d) % nsh)
-                .find(|&s| !queues[s].is_empty())
-                .unwrap();
-            let take = if shard == home {
-                queues[shard].len().min(batch)
-            } else {
-                steals += 1;
-                queues[shard].len().div_ceil(2).min(batch)
-            };
-            let mut taken: Vec<(u64, f64)> = Vec::with_capacity(take);
-            for _ in 0..take {
-                taken.push(queues[shard].pop_front().unwrap());
-            }
-            queued_total -= take;
-            // The batch starts once the server is free and its last
-            // (latest-arriving, FIFO within the shard) request is in.
-            let start = earliest.max(taken.last().unwrap().1);
-            // Switches apply at dequeue: one policy consultation per
-            // batch, against the aggregate depth across shards.
-            let idx =
-                observe(policy, &mut switches, &mut observed, start, queued_total);
-            // Batch service: each sampled time is α + βᵢ, so n requests
-            // in one dispatch cost Σ sᵢ − (n−1)·α (one dispatch cost, n
-            // marginals). α is clamped per rung into [0, s̄(1)] exactly
-            // as in `derive_plan`, so an oversized fitted α cannot make
-            // batches cheaper than their marginal costs. At B = 1 this
-            // is the sample itself.
-            let alpha_k = alpha.clamp(0.0, plan.ladder[idx].mean_ms);
-            let svc = (0..take)
-                .map(|_| service.sample_ms(idx, &mut rng))
-                .sum::<f64>()
-                - (take as f64 - 1.0) * alpha_k;
-            let finish = start + svc.max(0.0);
-            busy[slot] = finish;
-            for (id, arr_ms) in taken {
-                records.push(RequestRecord {
-                    id,
-                    arrival_ms: arr_ms,
-                    start_ms: start,
-                    finish_ms: finish,
-                    config_idx: idx,
-                    accuracy: plan.ladder[idx].accuracy,
-                    success: None,
-                });
-            }
-            // Departure observation (once per batch).
-            observe(policy, &mut switches, &mut observed, finish, queued_total);
-        } else if i < n {
-            // Admit the next arrival (round-robin routing; with one
-            // shard this is the central FIFO push).
-            let arr_ms = arrivals[i] * 1000.0;
-            queues[router % nsh].push_back((next_id, arr_ms));
-            router += 1;
-            queued_total += 1;
-            next_id += 1;
-            i += 1;
-            // In-flight requests count toward the observed depth.
-            let in_flight = busy.iter().filter(|&&b| b > arr_ms).count();
-            observe(
-                policy,
-                &mut switches,
-                &mut observed,
-                arr_ms,
-                queued_total + in_flight,
-            );
-        } else {
-            break;
-        }
-    }
-
-    records.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
-    SimOutcome { records, switches, steals, spills: 0 }
+    let topo = Topology::uniform(workers, discipline.effective_shards(workers, shards));
+    simulate_topology(arrivals, plan, policy, service, seed, &topo, batch)
 }
 
 /// Simulate serving on a heterogeneous fleet of named worker pools —
-/// the DES mirror of [`crate::serving::serve_pools`].
+/// the DES mirror of [`crate::serving::serve_pools`], a shim building
+/// the per-worker-shard pooled [`Topology`] (spill margin 0, the
+/// historical spill-when-dry) for [`simulate_topology`].
 ///
 /// Each pool runs `workers` servers over `workers` per-pool shards.
 /// Arrivals route to the pool whose rung band contains the current
 /// policy rung (per-pool round-robin); a freeing server drains its home
 /// shard (front run of up to `batch`), steals half a sibling shard's
 /// backlog when dry, and **spills** into other pools' shards only when
-/// its whole pool is dry — exactly the live
-/// `ShardedQueue::try_pop_batch_pool` walk. A pool executes the policy
-/// rung clamped into its own band ([`pool_rung`]) and its sampled
-/// service times are scaled by its `speed_factor`; the policy observes
-/// the queued depth of the current rung's home pool (the per-pool AQM
-/// signal) at every arrival, dispatch and departure.
+/// its whole pool is dry. A pool executes the policy rung clamped into
+/// its own band and its sampled service times are scaled by its
+/// `speed_factor`; the policy observes the queued depth of the current
+/// rung's home pool (the per-pool AQM signal) at every arrival,
+/// dispatch and departure.
 ///
-/// A single [`PoolSpec::uniform`] pool reproduces
-/// [`simulate_disc`] under [`Discipline::ShardedSteal`] (one shard per
-/// worker) **record-for-record** — same rng consumption, same
-/// timestamps, same switches and steal counts; the parity test below
-/// pins it.
-#[allow(clippy::too_many_arguments)]
+/// A single [`PoolSpec::uniform`] pool *is* [`simulate_disc`] under
+/// [`Discipline::ShardedSteal`] (one shard per worker) — the same
+/// engine over the same topology — and the record-for-record parity
+/// test below pins the shims equal.
 pub fn simulate_pools<P: ScalingPolicy, S: ServiceModel>(
     arrivals: &[f64],
     plan: &Plan,
@@ -330,201 +199,8 @@ pub fn simulate_pools<P: ScalingPolicy, S: ServiceModel>(
     pools: &[PoolSpec],
     batch: usize,
 ) -> SimOutcome {
-    validate_pools(pools).expect("invalid pool topology");
-    let batch = batch.max(1);
-    let alpha = plan.batch_alpha_ms.max(0.0);
-    let n_rungs = plan.ladder.len();
-
-    // Shard/server layout: pool p owns `workers_p` contiguous shards and
-    // the same number of server slots; server slot w of pool p has home
-    // shard `pool_start_p + local_w` (shards == workers within a pool).
-    let mut pool_ranges: Vec<(usize, usize)> = Vec::with_capacity(pools.len());
-    let mut server_pool: Vec<usize> = Vec::new();
-    let mut server_local: Vec<usize> = Vec::new();
-    let mut cursor = 0usize;
-    for (p, spec) in pools.iter().enumerate() {
-        let w = spec.workers.max(1);
-        pool_ranges.push((cursor, cursor + w));
-        for local in 0..w {
-            server_pool.push(p);
-            server_local.push(local);
-        }
-        cursor += w;
-    }
-    let nsh = cursor;
-    let workers = cursor;
-
-    let mut rng = Rng::new(seed);
-    let mut records = Vec::with_capacity(arrivals.len());
-    let mut switches = Vec::new();
-    let mut steals = 0u64;
-    let mut spills = 0u64;
-
-    let mut queues: Vec<std::collections::VecDeque<(u64, f64)>> =
-        (0..nsh).map(|_| std::collections::VecDeque::new()).collect();
-    let mut pool_queued = vec![0usize; pools.len()];
-    let mut queued_total = 0usize;
-    let mut routers = vec![0usize; pools.len()];
-    let mut busy: Vec<f64> = vec![f64::NEG_INFINITY; workers];
-    let mut observed = policy.current();
-
-    let observe = |policy: &mut P,
-                       switches: &mut Vec<SwitchEvent>,
-                       observed: &mut usize,
-                       now: f64,
-                       depth: usize| {
-        let next = policy.decide(now, depth);
-        if next != *observed {
-            switches.push(SwitchEvent { at_ms: now, from_idx: *observed, to_idx: next });
-            *observed = next;
-        }
-        next
-    };
-
-    let mut i = 0usize; // next arrival index
-    let n = arrivals.len();
-    let mut next_id = 0u64;
-
-    while i < n || queued_total > 0 {
-        let next_arrival = if i < n { arrivals[i] * 1000.0 } else { f64::INFINITY };
-
-        // Earliest-free server (ties broken by lowest index, i.e. by
-        // pool order — reference pools are listed first).
-        let (slot, earliest) = busy
-            .iter()
-            .copied()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .unwrap();
-
-        if queued_total > 0 && earliest <= next_arrival {
-            // Dispatch to server `slot`: home shard, then a within-pool
-            // steal sweep, then a cross-pool spill sweep — the live
-            // pooled queue walk exactly.
-            let p = server_pool[slot];
-            let (lo, hi) = pool_ranges[p];
-            let len_p = hi - lo;
-            let home = server_local[slot] % len_p;
-            let mut found: Option<(usize, bool, bool)> = None; // (shard, steal, spill)
-            for d in 0..len_p {
-                let s = lo + (home + d) % len_p;
-                if !queues[s].is_empty() {
-                    found = Some((s, d > 0, false));
-                    break;
-                }
-            }
-            if found.is_none() {
-                'spill: for d in 1..pools.len() {
-                    let q = (p + d) % pools.len();
-                    let (qlo, qhi) = pool_ranges[q];
-                    for s in qlo..qhi {
-                        if !queues[s].is_empty() {
-                            found = Some((s, false, true));
-                            break 'spill;
-                        }
-                    }
-                }
-            }
-            let (shard, is_steal, is_spill) =
-                found.expect("queued_total > 0 but every shard empty");
-            if is_steal {
-                steals += 1;
-            }
-            if is_spill {
-                spills += 1;
-            }
-            let take = if is_steal || is_spill {
-                queues[shard].len().div_ceil(2).min(batch)
-            } else {
-                queues[shard].len().min(batch)
-            };
-            let mut taken: Vec<(u64, f64)> = Vec::with_capacity(take);
-            for _ in 0..take {
-                taken.push(queues[shard].pop_front().unwrap());
-            }
-            queued_total -= take;
-            let shard_pool = pool_of_shard(&pool_ranges, shard);
-            pool_queued[shard_pool] -= take;
-            // The batch starts once the server is free and its last
-            // (latest-arriving, FIFO within the shard) request is in.
-            let start = earliest.max(taken.last().unwrap().1);
-            // Switches apply at dequeue: one policy consultation per
-            // batch, against the per-pool depth of the current rung's
-            // home pool (the signal the live PolicyHandle feeds).
-            let sig = pool_queued[pool_of_rung(pools, observed)];
-            let idx = observe(policy, &mut switches, &mut observed, start, sig);
-            // The pool executes its own rung: the policy rung clamped
-            // into the pool's band; its hardware scales every sampled
-            // service time by the pool's speed factor.
-            let exec = pool_rung(pools, p, idx, n_rungs);
-            let speed = pools[p].speed_factor;
-            // Batch service: each sampled time is α + βᵢ, so n requests
-            // in one dispatch cost Σ sᵢ − (n−1)·α (one dispatch cost, n
-            // marginals); α is clamped into [0, s̄(1)] of the *executing*
-            // pool's rung. At B = 1 this is the sample itself.
-            let alpha_k = alpha.clamp(0.0, plan.ladder[exec].mean_ms * speed);
-            let svc = (0..take)
-                .map(|_| service.sample_ms(exec, &mut rng) * speed)
-                .sum::<f64>()
-                - (take as f64 - 1.0) * alpha_k;
-            let finish = start + svc.max(0.0);
-            busy[slot] = finish;
-            for (id, arr_ms) in taken {
-                records.push(RequestRecord {
-                    id,
-                    arrival_ms: arr_ms,
-                    start_ms: start,
-                    finish_ms: finish,
-                    config_idx: exec,
-                    accuracy: plan.ladder[exec].accuracy,
-                    success: None,
-                });
-            }
-            // Departure observation (once per batch).
-            let sig = pool_queued[pool_of_rung(pools, observed)];
-            observe(policy, &mut switches, &mut observed, finish, sig);
-        } else if i < n {
-            // Admit the next arrival: rung-aware routing — round-robin
-            // over the shards of the current rung's home pool.
-            let arr_ms = arrivals[i] * 1000.0;
-            let rp = pool_of_rung(pools, observed);
-            let (lo, hi) = pool_ranges[rp];
-            let shard = lo + routers[rp] % (hi - lo);
-            routers[rp] += 1;
-            queues[shard].push_back((next_id, arr_ms));
-            queued_total += 1;
-            pool_queued[rp] += 1;
-            next_id += 1;
-            i += 1;
-            // In-flight requests of the routed pool count toward the
-            // observed per-pool depth.
-            let in_flight = busy
-                .iter()
-                .enumerate()
-                .filter(|&(w, &b)| server_pool[w] == rp && b > arr_ms)
-                .count();
-            observe(
-                policy,
-                &mut switches,
-                &mut observed,
-                arr_ms,
-                pool_queued[rp] + in_flight,
-            );
-        } else {
-            break;
-        }
-    }
-
-    records.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
-    SimOutcome { records, switches, steals, spills }
-}
-
-/// Owning pool of a shard given the contiguous pool shard ranges.
-fn pool_of_shard(pool_ranges: &[(usize, usize)], shard: usize) -> usize {
-    pool_ranges
-        .iter()
-        .position(|&(lo, hi)| (lo..hi).contains(&shard))
-        .expect("shard outside every pool range")
+    let topo = Topology::from_pools(pools, 0.0).expect("invalid pool topology");
+    simulate_topology(arrivals, plan, policy, service, seed, &topo, batch)
 }
 
 #[cfg(test)]

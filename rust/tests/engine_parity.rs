@@ -1,0 +1,218 @@
+//! Construction-level parity of the unified dispatch plane.
+//!
+//! Every historical simulator entry point (`simulate`, `simulate_k`,
+//! `simulate_disc`, `simulate_pools`) is a shim building a
+//! [`Topology`] for the one engine (`sim::simulate_topology`). These
+//! tests pin that construction:
+//!
+//! * a property sweep over k × B × shards × {uniform, heterogeneous}
+//!   asserting each shim returns records/switches/steals/spills
+//!   identical to the direct engine call on the matching topology;
+//! * a golden pin of the seed shape (k = 1, B = 1, central FIFO)
+//!   against a hand-computed M/D/1 timeline — exact f64 equality, so
+//!   the seed figures can never drift silently;
+//! * the cost-aware spill gate: a slow pool stops poaching work the
+//!   fast pool would finish sooner once `--spill-margin` is positive.
+
+use compass::metrics::RequestRecord;
+use compass::planner::{derive_plan, AqmParams, LatencyProfile, Plan, ProfiledConfig};
+use compass::serving::pool::{parse_pools, PoolSpec};
+use compass::serving::{ElasticoPolicy, StaticPolicy, Topology};
+use compass::sim::{
+    simulate, simulate_disc, simulate_k, simulate_pools, simulate_topology,
+    DeterministicService, Discipline, LognormalService, SimOutcome,
+};
+use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
+
+fn plan2() -> Plan {
+    let mk = |label: &str, acc: f64, mean: f64, p95: f64| ProfiledConfig {
+        config: vec![],
+        label: label.into(),
+        accuracy: acc,
+        latency: LatencyProfile { mean_ms: mean, p50_ms: mean, p95_ms: p95, runs: 10 },
+    };
+    derive_plan(
+        &[mk("fast", 0.76, 20.0, 28.0), mk("accurate", 0.85, 90.0, 120.0)],
+        AqmParams::for_slo(300.0),
+    )
+}
+
+fn arrivals(qps: f64, dur: f64) -> Vec<f64> {
+    generate_arrivals(&WorkloadSpec {
+        base_qps: qps,
+        duration_s: dur,
+        pattern: Pattern::Steady,
+        seed: 5,
+    })
+}
+
+/// Exact record equality (RequestRecord carries f64 times).
+fn records_identical(a: &[RequestRecord], b: &[RequestRecord]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.id == y.id
+                && x.arrival_ms == y.arrival_ms
+                && x.start_ms == y.start_ms
+                && x.finish_ms == y.finish_ms
+                && x.config_idx == y.config_idx
+        })
+}
+
+fn assert_outcomes_equal(shim: &SimOutcome, engine: &SimOutcome, what: &str) {
+    assert!(records_identical(&shim.records, &engine.records), "records: {what}");
+    assert_eq!(shim.switches.len(), engine.switches.len(), "switches: {what}");
+    assert_eq!(shim.steals, engine.steals, "steals: {what}");
+    assert_eq!(shim.spills, engine.spills, "spills: {what}");
+}
+
+#[test]
+fn shims_equal_the_direct_engine_across_the_sweep() {
+    // k ∈ {1,2,4} × B ∈ {1,4,8} × shards ∈ {1,k} × {uniform pool,
+    // fast+accurate pools}: every shim entry point must return exactly
+    // what the direct Topology engine call returns — same records, same
+    // switch count, same steal/spill counts — under a switching policy
+    // so routing reads the live rung.
+    let plan = plan2();
+    let arr = arrivals(12.0, 60.0);
+    let svc = LognormalService::from_plan(&plan, 0.25);
+    for k in [1usize, 2, 4] {
+        for batch in [1usize, 4, 8] {
+            let mut shard_set = vec![1usize];
+            if k > 1 {
+                shard_set.push(k);
+            }
+            for &shards in &shard_set {
+                let mut ps = ElasticoPolicy::new(plan.clone());
+                let shim = simulate_disc(
+                    &arr,
+                    &plan,
+                    &mut ps,
+                    &svc,
+                    42,
+                    k,
+                    Discipline::ShardedSteal,
+                    shards,
+                    batch,
+                );
+                let topo = Topology::uniform(k, shards);
+                let mut pe = ElasticoPolicy::new(plan.clone());
+                let eng = simulate_topology(&arr, &plan, &mut pe, &svc, 42, &topo, batch);
+                let what = format!("sharded k={k} shards={shards} B={batch}");
+                assert_outcomes_equal(&shim, &eng, &what);
+            }
+
+            // Central FIFO: the 1-shard / k-worker shape.
+            let mut ps = ElasticoPolicy::new(plan.clone());
+            let shim = simulate_disc(
+                &arr,
+                &plan,
+                &mut ps,
+                &svc,
+                42,
+                k,
+                Discipline::CentralFifo,
+                0,
+                batch,
+            );
+            let topo = Topology::uniform(k, 1);
+            let mut pe = ElasticoPolicy::new(plan.clone());
+            let eng = simulate_topology(&arr, &plan, &mut pe, &svc, 42, &topo, batch);
+            assert_outcomes_equal(&shim, &eng, &format!("central k={k} B={batch}"));
+
+            // One uniform pool through the pooled shim.
+            let uniform = [PoolSpec::uniform(k)];
+            let mut ps = ElasticoPolicy::new(plan.clone());
+            let shim = simulate_pools(&arr, &plan, &mut ps, &svc, 42, &uniform, batch);
+            let topo = Topology::from_pools(&uniform, 0.0).unwrap();
+            let mut pe = ElasticoPolicy::new(plan.clone());
+            let eng = simulate_topology(&arr, &plan, &mut pe, &svc, 42, &topo, batch);
+            assert_outcomes_equal(&shim, &eng, &format!("uniform pool k={k} B={batch}"));
+
+            // Heterogeneous fast+accurate pools.
+            let pools = parse_pools(&format!("fast:{k}:1.0,accurate:{k}:2.5")).unwrap();
+            let mut ps = ElasticoPolicy::new(plan.clone());
+            let shim = simulate_pools(&arr, &plan, &mut ps, &svc, 42, &pools, batch);
+            let topo = Topology::from_pools(&pools, 0.0).unwrap();
+            let mut pe = ElasticoPolicy::new(plan.clone());
+            let eng = simulate_topology(&arr, &plan, &mut pe, &svc, 42, &topo, batch);
+            assert_outcomes_equal(&shim, &eng, &format!("het pools k={k} B={batch}"));
+        }
+    }
+}
+
+#[test]
+fn seed_shape_golden_pin_is_bit_for_bit() {
+    // k = 1, B = 1, central FIFO, deterministic 40 ms service under a
+    // static policy: the M/D/1 timeline is computable by hand
+    // (start_i = max(arrival_i, finish_{i-1})) and every entry point
+    // must reproduce it exactly. All values are integer milliseconds,
+    // so f64 equality is exact — the seed figures cannot drift.
+    let plan = plan2();
+    let arr = [0.0, 0.01, 0.02, 0.03, 0.1];
+    let svc = DeterministicService { means: vec![40.0, 40.0] };
+    let golden: [(u64, f64, f64, f64); 5] = [
+        (0, 0.0, 0.0, 40.0),
+        (1, 10.0, 40.0, 80.0),
+        (2, 20.0, 80.0, 120.0),
+        (3, 30.0, 120.0, 160.0),
+        (4, 100.0, 160.0, 200.0),
+    ];
+    let check = |out: &SimOutcome, what: &str| {
+        assert_eq!(out.records.len(), golden.len(), "{what}");
+        for (r, g) in out.records.iter().zip(&golden) {
+            assert_eq!(r.id, g.0, "{what}");
+            assert_eq!(r.arrival_ms, g.1, "{what} id={}", r.id);
+            assert_eq!(r.start_ms, g.2, "{what} id={}", r.id);
+            assert_eq!(r.finish_ms, g.3, "{what} id={}", r.id);
+            assert_eq!(r.config_idx, 0, "{what}");
+        }
+        assert!(out.switches.is_empty(), "{what}");
+        assert_eq!(out.steals, 0, "{what}");
+        assert_eq!(out.spills, 0, "{what}");
+    };
+    let mut p = StaticPolicy::new(0, "fast");
+    check(&simulate(&arr, &plan, &mut p, &svc, 7), "simulate");
+    let mut p = StaticPolicy::new(0, "fast");
+    check(&simulate_k(&arr, &plan, &mut p, &svc, 7, 1), "simulate_k");
+    let mut p = StaticPolicy::new(0, "fast");
+    let disc = simulate_disc(&arr, &plan, &mut p, &svc, 7, 1, Discipline::CentralFifo, 0, 1);
+    check(&disc, "simulate_disc");
+    let mut p = StaticPolicy::new(0, "fast");
+    let topo = Topology::uniform(1, 1);
+    check(&simulate_topology(&arr, &plan, &mut p, &svc, 7, &topo, 1), "engine");
+}
+
+#[test]
+fn spill_margin_keeps_work_the_fast_pool_finishes_sooner() {
+    // fast:2 @1x owns rung 0; slow:2 @2.5x owns rung 1+. A static
+    // rung-0 policy routes all three arrivals to the fast pool. With
+    // margin 0 the idle slow pool immediately poaches the third request
+    // and runs it 2.5x slower (finish at 27 ms); with margin 1 the gate
+    // holds (backlog 1 ≤ 1 · 2.5 · 2 = 5) and a fast worker picks it up
+    // at 10 ms, finishing at 20 ms — strictly sooner.
+    let plan = plan2();
+    let pools = parse_pools("fast:2:1.0,slow:2:2.5").unwrap();
+    let arr = [0.0, 0.001, 0.002];
+    let svc = DeterministicService { means: vec![10.0, 10.0] };
+    let run = |margin: f64| {
+        let topo = Topology::from_pools(&pools, margin).unwrap();
+        let mut pol = StaticPolicy::new(0, "fast");
+        simulate_topology(&arr, &plan, &mut pol, &svc, 3, &topo, 1)
+    };
+    let poached = run(0.0);
+    assert_eq!(poached.records.len(), 3);
+    assert!(poached.spills > 0, "margin 0 must keep spill-when-dry");
+    let gated = run(1.0);
+    assert_eq!(gated.records.len(), 3, "gated work must still be served");
+    assert_eq!(gated.spills, 0, "the margin must block the shallow poach");
+    assert!(gated.records.iter().all(|r| r.config_idx == 0), "fast pool only");
+    let makespan = |o: &SimOutcome| {
+        o.records.iter().map(|r| r.finish_ms).fold(f64::NEG_INFINITY, f64::max)
+    };
+    assert!(
+        makespan(&gated) < makespan(&poached),
+        "gated fleet must finish sooner: {} vs {}",
+        makespan(&gated),
+        makespan(&poached)
+    );
+}
