@@ -26,6 +26,12 @@ Two kinds of checks, both read from the baseline file:
   well below the speedups a quiet machine shows — to leave headroom for
   shared-runner noise.
 
+Both files may nest objects (e.g. BENCH_scenarios.json's `cells`): they
+are flattened to `/`-joined numeric-leaf keys before checking, so a
+ratio over the scenario matrix reads
+`cells/flash_crowd|uniform-k4|Elastico/slo_compliance`. Non-numeric
+leaves (schema tags, fault strings) are dropped by the flatten.
+
 Usage: bench_gate.py BENCH_baseline.json BENCH_hotpath.json
 """
 
@@ -33,6 +39,18 @@ import json
 import sys
 
 TOLERANCE = 1.25
+
+
+def flatten(doc: dict, prefix: str = "") -> dict:
+    """Nested dicts -> {"a/b/c": number}; numeric leaves only."""
+    out = {}
+    for key, val in doc.items():
+        path = f"{prefix}/{key}" if prefix else key
+        if isinstance(val, dict):
+            out.update(flatten(val, path))
+        elif isinstance(val, (int, float)) and not isinstance(val, bool):
+            out[path] = float(val)
+    return out
 
 
 def check_absolutes(base: dict, new: dict) -> list:
@@ -111,6 +129,8 @@ def main() -> int:
         new = json.load(f)
 
     ratios = base.pop("ratios", {})
+    base = flatten(base)
+    new = flatten(new)
     regressed = check_absolutes(base, new)
     ratio_failures = check_ratios(ratios, new)
 

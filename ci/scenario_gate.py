@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Structural gate for the scenario matrix artifact (BENCH_scenarios.json).
+
+Checks that every swept cell is internally consistent — these are
+invariants of the serving runtime, not tunable performance numbers, so
+any violation is a hard failure:
+
+* schema tag is `compass.scenarios.v1`;
+* every cell key is `scenario|topology|policy` (three parts);
+* conservation: `served + rejected == arrivals` and `arrivals > 0` —
+  the executor (live or DES) accounted for every generated request;
+* `slo_compliance` and `mean_accuracy` lie in [0, 1];
+* latency quantiles are ordered: `p50 <= p95 <= p99`;
+* `pool_dark` cells on a multi-pool topology injected their fault
+  (`faults != "none"`) and the alive pool absorbed spilled work
+  (`spills >= 1`);
+* `squeeze` / `slowdown` cells injected their fault.
+
+`--min-scenarios N` / `--min-topos N` additionally assert matrix
+coverage (distinct scenario / topology counts), so the CI smoke run
+can't silently shrink below the acceptance floor.
+
+Usage: scenario_gate.py BENCH_scenarios.json [--min-scenarios N]
+       [--min-topos N]
+"""
+
+import json
+import sys
+
+SCHEMA = "compass.scenarios.v1"
+
+
+def check_cell(key: str, cell: dict) -> list:
+    errors = []
+    parts = key.split("|")
+    if len(parts) != 3:
+        errors.append(f"{key}: cell key is not scenario|topology|policy")
+        return errors
+    scenario = parts[0]
+
+    arrivals = cell.get("arrivals", 0)
+    served = cell.get("served", 0)
+    rejected = cell.get("rejected", 0)
+    if arrivals <= 0:
+        errors.append(f"{key}: no arrivals generated")
+    if served + rejected != arrivals:
+        errors.append(
+            f"{key}: conservation violated — served {served} + rejected "
+            f"{rejected} != arrivals {arrivals}")
+
+    for field in ("slo_compliance", "mean_accuracy"):
+        val = cell.get(field, -1.0)
+        if not 0.0 <= val <= 1.0:
+            errors.append(f"{key}: {field} {val} outside [0, 1]")
+    p50, p95, p99 = (cell.get(q, 0.0) for q in ("p50_ms", "p95_ms", "p99_ms"))
+    if not p50 <= p95 <= p99:
+        errors.append(f"{key}: quantiles unordered: {p50} / {p95} / {p99}")
+
+    faults = cell.get("faults", "none")
+    if scenario == "pool_dark" and cell.get("n_pools", 1) >= 2:
+        if faults == "none":
+            errors.append(f"{key}: pool_dark cell ran without its fault")
+        if cell.get("spills", 0) < 1:
+            errors.append(f"{key}: pool_dark cell never spilled to the "
+                          "alive pool")
+    if scenario in ("squeeze", "slowdown") and faults == "none":
+        errors.append(f"{key}: {scenario} cell ran without its fault")
+    return errors
+
+
+def main() -> int:
+    args = sys.argv[1:]
+    min_scenarios = min_topos = 0
+    paths = []
+    i = 0
+    while i < len(args):
+        if args[i] == "--min-scenarios":
+            min_scenarios, i = int(args[i + 1]), i + 2
+        elif args[i] == "--min-topos":
+            min_topos, i = int(args[i + 1]), i + 2
+        else:
+            paths.append(args[i])
+            i += 1
+    if len(paths) != 1:
+        print(__doc__)
+        return 2
+
+    with open(paths[0]) as f:
+        doc = json.load(f)
+
+    errors = []
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"schema {doc.get('schema')!r} != {SCHEMA!r}")
+    cells = doc.get("cells", {})
+    if not cells:
+        errors.append("no cells in artifact")
+    for key in sorted(cells):
+        errors.extend(check_cell(key, cells[key]))
+
+    scenarios = {k.split("|")[0] for k in cells}
+    topos = {k.split("|")[1] for k in cells if len(k.split("|")) == 3}
+    if len(scenarios) < min_scenarios:
+        errors.append(f"only {len(scenarios)} scenario(s) "
+                      f"({sorted(scenarios)}), need >= {min_scenarios}")
+    if len(topos) < min_topos:
+        errors.append(f"only {len(topos)} topolog(y/ies) ({sorted(topos)}), "
+                      f"need >= {min_topos}")
+
+    if errors:
+        for e in errors:
+            print(f"scenario gate: {e}")
+        print(f"scenario gate: FAIL — {len(errors)} violation(s) across "
+              f"{len(cells)} cell(s)")
+        return 1
+    print(f"scenario gate: OK — {len(cells)} cell(s), "
+          f"{len(scenarios)} scenario(s) x {len(topos)} topolog(y/ies), "
+          "conservation and ranges hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

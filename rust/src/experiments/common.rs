@@ -530,9 +530,24 @@ pub fn simulate_ctx(
     policy: &mut Box<dyn ScalingPolicy>,
     svc: &LognormalService,
 ) -> Result<crate::sim::SimOutcome> {
+    simulate_ctx_faults(ctx, arrivals, plan, policy, svc, &crate::workload::FaultPlan::none())
+}
+
+/// [`simulate_ctx`] generalized: any [`ServiceModel`] (the scenario
+/// sweep swaps in heavy-tailed Pareto service) and a
+/// [`crate::workload::FaultPlan`] applied by the engine. The empty plan
+/// reproduces [`simulate_ctx`] bit-for-bit.
+pub fn simulate_ctx_faults<S: crate::sim::ServiceModel>(
+    ctx: &ExperimentCtx,
+    arrivals: &[f64],
+    plan: &Plan,
+    policy: &mut Box<dyn ScalingPolicy>,
+    svc: &S,
+    faults: &crate::workload::FaultPlan,
+) -> Result<crate::sim::SimOutcome> {
     let topo = ctx.topology()?;
     let mut shim = Shim(policy);
-    Ok(crate::sim::simulate_topology(
+    Ok(crate::sim::simulate_topology_faults(
         arrivals,
         plan,
         &mut shim,
@@ -540,6 +555,7 @@ pub fn simulate_ctx(
         ctx.seed,
         &topo,
         ctx.batch.max(1),
+        faults,
     ))
 }
 

@@ -11,6 +11,7 @@ pub mod fig4_efficiency;
 pub mod fig5_tradeoff;
 pub mod fig6_cdf;
 pub mod fig7_timeline;
+pub mod scenarios;
 pub mod table1_baselines;
 
 pub use common::ExperimentCtx;
@@ -30,6 +31,7 @@ pub fn run(id: &str, ctx: &ExperimentCtx) -> anyhow::Result<()> {
         "fig6" => fig6_cdf::run(ctx),
         "fig7" => fig7_timeline::run(ctx),
         "ablation" => ablation::run(ctx),
+        "scenarios" => scenarios::run(ctx),
         "all" => {
             for id in ALL {
                 println!("\n================ {id} ================");
@@ -38,7 +40,7 @@ pub fn run(id: &str, ctx: &ExperimentCtx) -> anyhow::Result<()> {
             Ok(())
         }
         other => anyhow::bail!(
-            "unknown experiment {other}; try: {:?}, ablation, or all",
+            "unknown experiment {other}; try: {:?}, ablation, scenarios, or all",
             ALL
         ),
     }

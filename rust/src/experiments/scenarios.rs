@@ -1,0 +1,578 @@
+//! Scenario matrix: sweep composable workload shapes × dispatch
+//! topologies × policies — with failure injection — through the unified
+//! DES (or the live server under `--live`) and emit per-cell SLO /
+//! latency / dispatch metrics as `BENCH_scenarios.json` plus
+//! `results/scenarios.csv`.
+//!
+//! Each cell draws its arrivals from a seeded [`ScenarioSpec`], so every
+//! scenario replays bit-identically (and identically across the live
+//! and simulated executors, which both consume the same `&[f64]`
+//! arrival vector). `docs/SCENARIOS.md` is the cookbook: one entry per
+//! scenario with the exact CLI invocation and the statistical signature
+//! to expect; `ci/scenario_gate.py` checks the emitted JSON on every CI
+//! run.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use super::common::{
+    ctx_base_qps, make_policy, offline_phase_ctx, simulate_ctx_faults, ExperimentCtx, SLO_FACTORS,
+};
+use crate::metrics::RunSummary;
+use crate::planner::{Plan, ThresholdMode};
+use crate::runtime::artifacts_dir;
+use crate::serving::executor::WorkflowEngine;
+use crate::serving::{parse_pools, serve, Discipline, ServeOptions};
+use crate::sim::{LognormalService, ParetoService};
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+use crate::workflows::rag::RagWorkflow;
+use crate::workload::trace::{load_trace, save_request_log, save_trace};
+use crate::workload::{Fault, FaultPlan, Generator, Pattern, ScenarioSpec};
+
+/// Schema tag of `BENCH_scenarios.json` (checked by the CI gate).
+pub const SCHEMA: &str = "compass.scenarios.v1";
+
+/// Every scenario shape of the matrix, in cookbook order.
+pub const SCENARIOS: [&str; 9] = [
+    "steady",
+    "diurnal",
+    "flash_crowd",
+    "mmpp",
+    "heavy_tail",
+    "correlated_surge",
+    "pool_dark",
+    "slowdown",
+    "squeeze",
+];
+
+/// The CI smoke subset: five shapes covering the steady baseline, both
+/// burst families and every fault path that the gate asserts on.
+pub const SMOKE_SCENARIOS: [&str; 5] = ["steady", "flash_crowd", "mmpp", "pool_dark", "squeeze"];
+
+/// Named dispatch topologies of the matrix.
+pub const TOPOLOGIES: [&str; 3] = ["central-k1", "uniform-k4", "pooled-2x2"];
+
+/// The CI smoke subset: the sharded uniform fleet and the
+/// heterogeneous pools (the two shapes faults discriminate between).
+pub const SMOKE_TOPOLOGIES: [&str; 2] = ["uniform-k4", "pooled-2x2"];
+
+/// Policies of the full sweep (the smoke matrix drops Static-Fast).
+pub const SWEEP_POLICIES: [&str; 3] = ["Elastico", "Static-Fast", "Static-Accurate"];
+
+/// Policies of the smoke matrix.
+pub const SMOKE_POLICIES: [&str; 2] = ["Elastico", "Static-Accurate"];
+
+/// Sweep options beyond the shared [`ExperimentCtx`] knobs.
+#[derive(Clone, Debug)]
+pub struct ScenarioOpts {
+    /// Run the reduced CI matrix ([`SMOKE_SCENARIOS`] ×
+    /// [`SMOKE_TOPOLOGIES`] × [`SMOKE_POLICIES`]).
+    pub smoke: bool,
+    /// Explicit scenario names (empty = the smoke/full default set).
+    pub scenarios: Vec<String>,
+    /// Explicit topology names (empty = the smoke/full default set).
+    pub topos: Vec<String>,
+    /// Explicit policy names (empty = the smoke/full default set).
+    pub policies: Vec<String>,
+    /// SLO override in ms (default: 2.2× the slowest rung's mean, the
+    /// paper's middle target).
+    pub slo_ms: Option<f64>,
+    /// Output path of the JSON artifact.
+    pub out: PathBuf,
+    /// Record a full request log per cell under this directory.
+    pub log_dir: Option<PathBuf>,
+    /// Replay a recorded arrival trace instead of generating arrivals
+    /// (the one `replay` scenario then runs in every cell, so
+    /// topologies/policies are compared on *identical* arrivals).
+    pub replay: Option<PathBuf>,
+    /// Fault-plan override applied to every cell (default: each
+    /// scenario's own [`faults_for`] plan).
+    pub faults: Option<FaultPlan>,
+}
+
+impl Default for ScenarioOpts {
+    fn default() -> Self {
+        ScenarioOpts {
+            smoke: false,
+            scenarios: Vec::new(),
+            topos: Vec::new(),
+            policies: Vec::new(),
+            slo_ms: None,
+            out: PathBuf::from("BENCH_scenarios.json"),
+            log_dir: None,
+            replay: None,
+            faults: None,
+        }
+    }
+}
+
+/// FNV-1a over the scenario name: a stable per-scenario arrival-seed
+/// salt, so scenarios decorrelate without any ordering coupling (adding
+/// a scenario never changes another scenario's arrivals).
+pub fn name_salt(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The generator of a named scenario at base rate `qps` over `dur`
+/// seconds. Shapes are expressed relative to the run length so the same
+/// scenario stresses a 30 s smoke cell and a 180 s nightly cell alike.
+pub fn generator_for(name: &str, qps: f64, dur: f64) -> Result<Generator> {
+    Ok(match name {
+        // Poisson baseline at the reference operating point (ρ ≈ 0.45).
+        "steady" | "heavy_tail" | "pool_dark" | "slowdown" => Generator::Constant { qps },
+        // One full sinusoidal swing ±60% around the base rate.
+        "diurnal" => Generator::Diurnal {
+            qps,
+            amplitude: 0.6,
+            period_s: dur / 2.0,
+            phase_s: 0.0,
+        },
+        // 5× flash crowd: ramp over 5% of the run, hold for 20%.
+        "flash_crowd" => Generator::FlashCrowd {
+            qps,
+            peak_factor: 5.0,
+            at_s: 0.4 * dur,
+            ramp_s: 0.05 * dur,
+            hold_s: 0.2 * dur,
+        },
+        // Two-state MMPP: calm 0.4× vs burst 2.5×, mean CV > 1.
+        "mmpp" => Generator::Mmpp {
+            qps: vec![0.4 * qps, 2.5 * qps],
+            mean_dwell_s: vec![0.12 * dur, 0.05 * dur],
+        },
+        // Four clients whose 4× surges all fire in the same windows.
+        "correlated_surge" => Generator::CorrelatedSurge {
+            sources: 4,
+            qps_per_source: qps / 4.0,
+            peak_factor: 4.0,
+            mean_gap_s: 0.15 * dur,
+            surge_s: (0.03 * dur, 0.08 * dur),
+        },
+        // The seed-era bursty pattern feeding the admission squeeze.
+        "squeeze" => Generator::Legacy { base_qps: qps, pattern: Pattern::paper_bursty() },
+        other => bail!("unknown scenario {other}; known: {SCENARIOS:?}"),
+    })
+}
+
+/// The fault plan a named scenario injects on a fleet of `n_pools`.
+/// `pool_dark` darkens the *last* (most accurate) pool and therefore
+/// needs a second pool to absorb the backlog — on a single-pool
+/// topology the cell runs fault-free (and says so in its row).
+pub fn faults_for(name: &str, dur: f64, n_pools: usize) -> FaultPlan {
+    match name {
+        "pool_dark" if n_pools > 1 => FaultPlan::none().with(Fault::PoolDark {
+            pool: n_pools - 1,
+            at_s: 0.4 * dur,
+        }),
+        "slowdown" => FaultPlan::none().with(Fault::Slowdown {
+            pool: 0,
+            factor: 2.5,
+            from_s: dur / 3.0,
+            to_s: 2.0 * dur / 3.0,
+        }),
+        "squeeze" => FaultPlan::none().with(Fault::QueueSqueeze {
+            capacity: 8,
+            from_s: 0.4 * dur,
+            to_s: 0.7 * dur,
+        }),
+        _ => FaultPlan::none(),
+    }
+}
+
+/// Resolve a named topology into an experiment ctx (duration, seed,
+/// live flag, batch and out dir inherited from `base`).
+pub fn topo_ctx(name: &str, base: &ExperimentCtx) -> Result<ExperimentCtx> {
+    let mut ctx = base.clone();
+    ctx.pools = Vec::new();
+    ctx.spill_margin = 0.0;
+    ctx.thresholds = ThresholdMode::Legacy;
+    ctx.shards = 0;
+    match name {
+        "central-k1" => {
+            ctx.workers = 1;
+            ctx.discipline = Discipline::CentralFifo;
+        }
+        "uniform-k4" => {
+            ctx.workers = 4;
+            ctx.discipline = Discipline::ShardedSteal;
+        }
+        "pooled-2x2" => {
+            ctx.workers = 1;
+            ctx.discipline = Discipline::ShardedSteal;
+            ctx.pools = parse_pools("fast:2:1.0,accurate:2:2.5")?;
+            ctx.thresholds = ThresholdMode::ErlangC;
+        }
+        other => bail!("unknown topology {other}; known: {TOPOLOGIES:?}"),
+    }
+    Ok(ctx)
+}
+
+/// One swept cell's metrics: a row of the CSV, an object in the JSON.
+#[derive(Clone, Debug)]
+pub struct CellOut {
+    pub scenario: String,
+    pub topo: String,
+    pub policy: String,
+    pub arrivals: usize,
+    pub served: usize,
+    pub rejected: usize,
+    pub slo_compliance: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_accuracy: f64,
+    pub switches: usize,
+    pub steals: u64,
+    pub spills: u64,
+    pub n_pools: usize,
+    pub faults: String,
+}
+
+impl CellOut {
+    /// Cell key in the JSON `cells` object.
+    pub fn key(&self) -> String {
+        format!("{}|{}|{}", self.scenario, self.topo, self.policy)
+    }
+
+    /// The JSON object of one cell in `BENCH_scenarios.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arrivals", Json::num(self.arrivals as f64)),
+            ("served", Json::num(self.served as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("slo_compliance", Json::num(self.slo_compliance)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p95_ms", Json::num(self.p95_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("mean_accuracy", Json::num(self.mean_accuracy)),
+            ("switches", Json::num(self.switches as f64)),
+            ("steals", Json::num(self.steals as f64)),
+            ("spills", Json::num(self.spills as f64)),
+            ("n_pools", Json::num(self.n_pools as f64)),
+            ("faults", Json::str(self.faults.clone())),
+        ])
+    }
+}
+
+const CSV_HEADER: [&str; 16] = [
+    "scenario",
+    "topo",
+    "policy",
+    "arrivals",
+    "served",
+    "rejected",
+    "slo_compliance",
+    "p50_ms",
+    "p95_ms",
+    "p99_ms",
+    "mean_accuracy",
+    "switches",
+    "steals",
+    "spills",
+    "n_pools",
+    "faults",
+];
+
+/// Run one scenario × topology × policy cell — the DES by default, the
+/// live server under `ctx.live` — and summarize it. The same arrival
+/// vector and fault plan feed both executors.
+#[allow(clippy::too_many_arguments)]
+pub fn run_matrix_cell(
+    ctx: &ExperimentCtx,
+    space: &crate::configspace::ConfigSpace,
+    plan: &Plan,
+    scenario: &str,
+    topo_name: &str,
+    policy_name: &str,
+    arrivals: &[f64],
+    faults: &FaultPlan,
+    slo_ms: f64,
+    log_dir: Option<&Path>,
+) -> Result<CellOut> {
+    let topo = ctx.topology()?;
+    let mut policy = make_policy(plan, policy_name);
+    let (records, switches, rejected, steals, spills) = if ctx.live {
+        let space2 = space.clone();
+        let plan2 = plan.clone();
+        let seed = ctx.seed;
+        let out = serve(
+            move || {
+                let configs: Vec<_> =
+                    plan2.ladder.iter().map(|p| p.config.clone()).collect();
+                let wf = RagWorkflow::load_subset(
+                    &artifacts_dir(),
+                    &space2,
+                    &configs,
+                    seed,
+                )?;
+                Ok(WorkflowEngine::new(wf, space2.clone(), plan2.clone()))
+            },
+            policy,
+            arrivals,
+            &ServeOptions {
+                workers: ctx.workers.max(1),
+                discipline: ctx.discipline,
+                shards: ctx.shards,
+                batch: ctx.batch.max(1),
+                pools: ctx.pools.clone(),
+                spill_margin: ctx.spill_margin,
+                faults: faults.clone(),
+                ..ServeOptions::default()
+            },
+        )?;
+        (out.records, out.switches, out.rejected, out.steals, out.spills)
+    } else {
+        // Heavy-tailed cells swap the lognormal service model for a
+        // Pareto tail (α = 2.05: finite mean, near-infinite variance).
+        let out = if scenario == "heavy_tail" {
+            let svc = ParetoService::from_plan(plan, 2.05);
+            simulate_ctx_faults(ctx, arrivals, plan, &mut policy, &svc, faults)?
+        } else {
+            let svc = LognormalService::from_plan(plan, 0.10);
+            simulate_ctx_faults(ctx, arrivals, plan, &mut policy, &svc, faults)?
+        };
+        (out.records, out.switches, out.rejected, out.steals, out.spills)
+    };
+    if let Some(dir) = log_dir {
+        let file = format!("{scenario}__{topo_name}__{policy_name}.csv");
+        save_request_log(&dir.join(file), &records, &topo)?;
+    }
+    let summary = RunSummary::compute(&records, &switches, slo_ms, plan.ladder.len());
+    Ok(CellOut {
+        scenario: scenario.into(),
+        topo: topo_name.into(),
+        policy: policy_name.into(),
+        arrivals: arrivals.len(),
+        served: records.len(),
+        rejected,
+        slo_compliance: summary.slo_compliance,
+        p50_ms: summary.latency.p50,
+        p95_ms: summary.latency.p95,
+        p99_ms: summary.latency.p99,
+        mean_accuracy: summary.mean_accuracy,
+        switches: switches.len(),
+        steals,
+        spills,
+        n_pools: topo.n_pools(),
+        faults: faults.describe(),
+    })
+}
+
+/// Generate one scenario's arrival trace (at the named topology's base
+/// rate) and save it as a replayable CSV (`--replay` feeds it back).
+pub fn save_scenario_trace(
+    ctx: &ExperimentCtx,
+    scenario: &str,
+    topo_name: &str,
+    path: &Path,
+) -> Result<()> {
+    let tctx = topo_ctx(topo_name, ctx)?;
+    let (_space, full) = offline_phase_ctx(&tctx, 0.75, 1e9, false)?;
+    let qps = ctx_base_qps(&tctx, &full);
+    let spec = ScenarioSpec {
+        generator: generator_for(scenario, qps, ctx.duration_s)?,
+        duration_s: ctx.duration_s,
+        seed: ctx.seed ^ name_salt(scenario),
+    };
+    let arrivals = spec.arrivals();
+    save_trace(path, &arrivals)?;
+    println!("wrote {} ({} arrivals, scenario {scenario})", path.display(), arrivals.len());
+    Ok(())
+}
+
+/// Entry for `compass experiment scenarios`: the full matrix with
+/// default options.
+pub fn run(ctx: &ExperimentCtx) -> Result<()> {
+    run_sweep(ctx, &ScenarioOpts::default())
+}
+
+/// Run the scenario sweep; write `BENCH_scenarios.json`, the CSV and a
+/// console table.
+pub fn run_sweep(ctx: &ExperimentCtx, opts: &ScenarioOpts) -> Result<()> {
+    let replayed: Option<Vec<f64>> = match &opts.replay {
+        Some(path) => Some(load_trace(path)?),
+        None => None,
+    };
+    let scenarios: Vec<String> = if replayed.is_some() {
+        vec!["replay".into()]
+    } else if !opts.scenarios.is_empty() {
+        opts.scenarios.clone()
+    } else if opts.smoke {
+        SMOKE_SCENARIOS.iter().map(|s| s.to_string()).collect()
+    } else {
+        SCENARIOS.iter().map(|s| s.to_string()).collect()
+    };
+    let topos: Vec<String> = if !opts.topos.is_empty() {
+        opts.topos.clone()
+    } else if opts.smoke {
+        SMOKE_TOPOLOGIES.iter().map(|s| s.to_string()).collect()
+    } else {
+        TOPOLOGIES.iter().map(|s| s.to_string()).collect()
+    };
+    let policies: Vec<String> = if !opts.policies.is_empty() {
+        opts.policies.clone()
+    } else if opts.smoke {
+        SMOKE_POLICIES.iter().map(|s| s.to_string()).collect()
+    } else {
+        SWEEP_POLICIES.iter().map(|s| s.to_string()).collect()
+    };
+
+    // One probe fixes the ladder and the SLO; each topology then
+    // re-derives worker/pool-aware thresholds over the same front.
+    let (_probe_space, probe) = offline_phase_ctx(ctx, 0.75, 1e9, ctx.live)?;
+    let default_slo = SLO_FACTORS[1] * probe.ladder.last().unwrap().mean_ms;
+    let slo = opts.slo_ms.unwrap_or(default_slo);
+
+    let mut csv = CsvWriter::create(&ctx.out_dir.join("scenarios.csv"), &CSV_HEADER)?;
+    let mut cells: Vec<CellOut> = Vec::new();
+    println!(
+        "Scenario matrix: {} scenario(s) x {} topolog(y/ies) x {} policy(ies), \
+         SLO {slo:.0} ms, {:.0} s cells{}",
+        scenarios.len(),
+        topos.len(),
+        policies.len(),
+        ctx.duration_s,
+        if ctx.live { " (live)" } else { " (DES)" }
+    );
+    for topo_name in &topos {
+        let tctx = topo_ctx(topo_name, ctx)?;
+        let (space, full) = offline_phase_ctx(&tctx, 0.75, 1e9, false)?;
+        let (_s2, plan) = offline_phase_ctx(&tctx, 0.75, slo, false)?;
+        let qps = ctx_base_qps(&tctx, &full);
+        let n_pools = tctx.topology()?.n_pools();
+        for scenario in &scenarios {
+            let arrivals = match &replayed {
+                Some(a) => a.clone(),
+                None => ScenarioSpec {
+                    generator: generator_for(scenario, qps, ctx.duration_s)?,
+                    duration_s: ctx.duration_s,
+                    seed: ctx.seed ^ name_salt(scenario),
+                }
+                .arrivals(),
+            };
+            let faults = match &opts.faults {
+                Some(f) => f.clone(),
+                None => faults_for(scenario, ctx.duration_s, n_pools),
+            };
+            for policy in &policies {
+                // As everywhere: Elastico adapts over the SLO-filtered
+                // ladder, the static baselines keep their full-front rung.
+                let policy_plan = if policy == "Elastico" { &plan } else { &full };
+                let cell = run_matrix_cell(
+                    &tctx,
+                    &space,
+                    policy_plan,
+                    scenario,
+                    topo_name,
+                    policy,
+                    &arrivals,
+                    &faults,
+                    slo,
+                    opts.log_dir.as_deref(),
+                )?;
+                println!(
+                    "  {:<17} {:<11} {:<15} comp {:>5.1}%  p95 {:>8.1} ms  \
+                     rej {:>5}  steal {:>6}  spill {:>5}",
+                    cell.scenario,
+                    cell.topo,
+                    cell.policy,
+                    cell.slo_compliance * 100.0,
+                    cell.p95_ms,
+                    cell.rejected,
+                    cell.steals,
+                    cell.spills
+                );
+                csv.row(&[
+                    cell.scenario.clone(),
+                    cell.topo.clone(),
+                    cell.policy.clone(),
+                    cell.arrivals.to_string(),
+                    cell.served.to_string(),
+                    cell.rejected.to_string(),
+                    format!("{:.4}", cell.slo_compliance),
+                    format!("{:.2}", cell.p50_ms),
+                    format!("{:.2}", cell.p95_ms),
+                    format!("{:.2}", cell.p99_ms),
+                    format!("{:.4}", cell.mean_accuracy),
+                    cell.switches.to_string(),
+                    cell.steals.to_string(),
+                    cell.spills.to_string(),
+                    cell.n_pools.to_string(),
+                    cell.faults.clone(),
+                ])?;
+                cells.push(cell);
+            }
+        }
+    }
+    csv.flush()?;
+
+    let keys: Vec<String> = cells.iter().map(CellOut::key).collect();
+    let cell_obj = Json::obj(
+        keys.iter()
+            .zip(&cells)
+            .map(|(k, c)| (k.as_str(), c.to_json()))
+            .collect(),
+    );
+    let doc = Json::obj(vec![
+        ("schema", Json::str(SCHEMA)),
+        ("duration_s", Json::num(ctx.duration_s)),
+        ("seed", Json::num(ctx.seed as f64)),
+        ("slo_ms", Json::num(slo)),
+        ("cells", cell_obj),
+    ]);
+    std::fs::write(&opts.out, doc.to_string())?;
+    println!("-> {} ({} cells) and results/scenarios.csv", opts.out.display(), cells.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn salts_are_stable_and_distinct() {
+        assert_eq!(name_salt("steady"), name_salt("steady"));
+        let mut seen = std::collections::BTreeSet::new();
+        for s in SCENARIOS {
+            assert!(seen.insert(name_salt(s)), "salt collision on {s}");
+        }
+    }
+
+    #[test]
+    fn every_scenario_has_a_generator() {
+        for s in SCENARIOS {
+            generator_for(s, 5.0, 60.0).unwrap();
+        }
+        assert!(generator_for("nope", 5.0, 60.0).is_err());
+    }
+
+    #[test]
+    fn pool_dark_needs_a_second_pool() {
+        assert!(faults_for("pool_dark", 60.0, 1).is_empty());
+        assert!(!faults_for("pool_dark", 60.0, 2).is_empty());
+        assert!(!faults_for("slowdown", 60.0, 1).is_empty());
+        assert!(!faults_for("squeeze", 60.0, 1).is_empty());
+        assert!(faults_for("steady", 60.0, 4).is_empty());
+    }
+
+    #[test]
+    fn topologies_resolve_to_dispatch_shapes() {
+        let base = ExperimentCtx::default();
+        let shapes: Vec<(usize, usize)> = TOPOLOGIES
+            .iter()
+            .map(|t| {
+                let topo = topo_ctx(t, &base).unwrap().topology().unwrap();
+                (topo.n_pools(), topo.n_workers())
+            })
+            .collect();
+        assert_eq!(shapes, vec![(1, 1), (1, 4), (2, 4)]);
+        assert!(topo_ctx("nope", &base).is_err());
+    }
+}

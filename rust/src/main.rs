@@ -11,9 +11,13 @@
 //!   [--shards N] [--batch B]` — one live serving run, report summary.
 //! * `experiment <fig1|fig3|fig4|table1|fig5|fig6|fig7|all> [--live]
 //!   [--duration S]` — regenerate paper artifacts (CSV under results/).
+//! * `scenario [--smoke] [--scenarios a,b] [--topos x,y] [--policies p,q]
+//!   [--faults SPEC] [--replay FILE] [--save-trace FILE] [--log DIR]` —
+//!   scenario matrix sweep -> BENCH_scenarios.json (docs/SCENARIOS.md).
 //! * `profile  [--live]` — per-component latency table.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
@@ -128,6 +132,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             };
             experiments::run(id, &ctx)
         }
+        "scenario" => cmd_scenario(&opts, seed),
         "profile" => cmd_profile(&opts, seed),
         "help" | "--help" | "-h" => {
             print_help();
@@ -161,6 +166,12 @@ fn print_help() {
          \x20             [--workers K] [--discipline central|sharded] [--shards N]\n\
          \x20             [--batch B] [--pools n:w:speed[:rung],...]\n\
          \x20             [--spill-margin M] [--thresholds legacy|erlang]\n\
+         \x20 scenario    scenario matrix sweep -> BENCH_scenarios.json + results/scenarios.csv\n\
+         \x20             [--smoke] [--duration S] [--slo MS] [--seed N] [--live]\n\
+         \x20             [--scenarios a,b,..] [--topos x,y,..] [--policies p,q,..]\n\
+         \x20             [--faults dark:1@24,slow:0x2.5@20-40,squeeze:8@24-42]\n\
+         \x20             [--out FILE] [--log DIR] [--replay FILE] [--save-trace FILE]\n\
+         \x20             [--list]  (cookbook: docs/SCENARIOS.md)\n\
          \x20 profile     per-component latency table over the artifacts [--live]\n"
     );
 }
@@ -358,6 +369,61 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         }
     }
     Ok(())
+}
+
+fn cmd_scenario(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
+    use compass::experiments::scenarios;
+    if opts.contains_key("list") {
+        println!("scenarios:  {}", scenarios::SCENARIOS.join(", "));
+        println!("topologies: {}", scenarios::TOPOLOGIES.join(", "));
+        println!("policies:   {}", scenarios::SWEEP_POLICIES.join(", "));
+        return Ok(());
+    }
+    let smoke = opts.contains_key("smoke");
+    let ctx = ExperimentCtx {
+        live: opts.contains_key("live"),
+        duration_s: get_f64(opts, "duration", if smoke { 30.0 } else { 60.0 })?,
+        seed,
+        batch: get_f64(opts, "batch", 1.0)?.max(1.0) as usize,
+        ..ExperimentCtx::default()
+    };
+    let split = |key: &str| -> Vec<String> {
+        match opts.get(key) {
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(String::from)
+                .collect(),
+            None => Vec::new(),
+        }
+    };
+    let slo_ms = match opts.get("slo") {
+        Some(v) => Some(v.parse::<f64>()?),
+        None => None,
+    };
+    let faults = match opts.get("faults") {
+        Some(v) => Some(compass::workload::FaultPlan::parse(v)?),
+        None => None,
+    };
+    let out = opts.get("out").map(String::as_str).unwrap_or("BENCH_scenarios.json");
+    let sweep = scenarios::ScenarioOpts {
+        smoke,
+        scenarios: split("scenarios"),
+        topos: split("topos"),
+        policies: split("policies"),
+        slo_ms,
+        out: PathBuf::from(out),
+        log_dir: opts.get("log").map(PathBuf::from),
+        replay: opts.get("replay").map(PathBuf::from),
+        faults,
+    };
+    if let Some(path) = opts.get("save-trace") {
+        let scenario = sweep.scenarios.first().map(String::as_str).unwrap_or("steady");
+        let topo = sweep.topos.first().map(String::as_str).unwrap_or("uniform-k4");
+        return scenarios::save_scenario_trace(&ctx, scenario, topo, Path::new(path));
+    }
+    scenarios::run_sweep(&ctx, &sweep)
 }
 
 fn cmd_profile(opts: &HashMap<String, String>, seed: u64) -> Result<()> {

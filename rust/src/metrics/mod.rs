@@ -9,7 +9,7 @@ pub mod report;
 use crate::util::stats::{cdf_points, Summary};
 
 /// One completed request, in milliseconds on the run's clock.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RequestRecord {
     pub id: u64,
     /// Arrival (enqueue) time.

@@ -18,6 +18,12 @@
 //!   against simulated queues. What remains *here* is only mechanics:
 //!   locks, atomics, parking, threads and the wall clock.
 //!
+//! A guided tour of this dispatch plane — where routing, steal, spill,
+//! batch and AQM each live, and why live/DES parity holds by
+//! construction — is in `docs/ARCHITECTURE.md`. Failure injection
+//! ([`ServeOptions::faults`], a [`crate::workload::FaultPlan`]) is
+//! applied at the same run times in both executors.
+//!
 //! ## Serving architecture (k workers, sharded hot path)
 //!
 //! The runtime is an M/G/k system ([`ServeOptions::workers`], default 1

@@ -490,6 +490,25 @@ impl<T> ShardedQueue<T> {
         None
     }
 
+    /// Non-blocking pop restricted to `pool`'s *own* shards (the
+    /// within-pool walk, no spill leg). Fault injection uses this to
+    /// drain a dark pool's stranded backlog without poaching other
+    /// pools' work; alive pools never call it.
+    pub fn try_pop_home(&self, pool: usize, worker: usize) -> Option<T> {
+        for (s, kind) in self.topo.pool_walk(pool, worker) {
+            if let Some(item) = self.take_one_from(s, kind) {
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// Has [`close`](ShardedQueue::close) been called? (Producers fail
+    /// afterwards; consumers may still drain.)
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
     /// Non-blocking batch pop for consumer `worker`: drain up to `max`
     /// items from the front of the home shard in one lock acquisition;
     /// when the home shard is dry, steal **half** the first non-empty

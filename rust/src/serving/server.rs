@@ -45,6 +45,7 @@ use super::pool::PoolSpec;
 use super::queue::{Discipline, Popped, ShardedQueue};
 use super::topology::Topology;
 use crate::metrics::{RequestRecord, SwitchEvent};
+use crate::workload::FaultPlan;
 
 /// Serving run options.
 #[derive(Clone, Debug)]
@@ -86,6 +87,11 @@ pub struct ServeOptions {
     /// ([`Topology::spill_allowed`]). 0 (the default) is the historical
     /// spill-when-dry. Meaningless on a single-pool fleet.
     pub spill_margin: f64,
+    /// Injected faults (pool dark, slowdown windows, queue squeeze),
+    /// applied at the same run times as the DES engine applies them
+    /// ([`crate::sim::simulate_topology_faults`]). Empty (the default)
+    /// changes nothing.
+    pub faults: FaultPlan,
 }
 
 impl Default for ServeOptions {
@@ -99,6 +105,7 @@ impl Default for ServeOptions {
             batch: 1,
             pools: Vec::new(),
             spill_margin: 0.0,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -398,6 +405,7 @@ where
             let topo = topo.clone();
             let arrivals = arrivals.to_vec();
             let wait_start = wait_start.clone();
+            let faults = opts.faults.clone();
             scope.spawn(move || {
                 let start = wait_start();
                 for (id, &t_s) in arrivals.iter().enumerate() {
@@ -407,6 +415,16 @@ where
                         std::thread::sleep(target - elapsed);
                     }
                     let t = start.elapsed().as_secs_f64() * 1e3;
+                    // An active queue squeeze tightens the admission
+                    // bound below the configured capacity; a squeezed
+                    // arrival is rejected before it is observed (the
+                    // same pre-push check the DES admission runs).
+                    if let Some(cap) = faults.capacity_at_ms(t) {
+                        if queue.len() >= cap {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                    }
                     let pool = topo.pool_for_rung(handle.current_rung());
                     monitor.on_arrival_pool(pool);
                     match queue.push_pool(pool, (id as u64, t)) {
@@ -445,6 +463,9 @@ where
                 let gate = gate.clone();
                 let topo = topo.clone();
                 let spec = spec.clone();
+                let rejected = rejected.clone();
+                let faults = opts.faults.clone();
+                let dark_at = opts.faults.dark_at_ms(p);
                 handles.push(scope.spawn(move || -> Result<(usize, Vec<RequestRecord>)> {
                     // Build (and PJRT-compile) the engine; the last
                     // worker to finish releases the run clock. A failed
@@ -479,6 +500,10 @@ where
                     // single-item path — exactly the seed loop.
                     if batch == 1 {
                         loop {
+                            if dark_at.is_some_and(|dm| now_ms() >= dm) {
+                                drain_dark_pool(&queue, p, lw, &rejected);
+                                break;
+                            }
                             match queue.pop_timeout_pool(p, lw, Duration::from_millis(50)) {
                                 Popped::Item((id, arrival_ms)) => {
                                     let t_start = now_ms();
@@ -489,6 +514,14 @@ where
                                     let idx = handle.observe(t_start, d);
                                     let exec = topo.exec_rung(p, idx, n_rungs);
                                     let out = engine.execute(exec)?;
+                                    // An active slowdown window
+                                    // stretches this pool's service
+                                    // wall-clock by the fault factor.
+                                    let stretch = faults.slowdown_at_ms(p, t_start);
+                                    if stretch > 1.0 {
+                                        let extra = (now_ms() - t_start) * (stretch - 1.0);
+                                        std::thread::sleep(Duration::from_secs_f64(extra / 1e3));
+                                    }
                                     let t_fin = now_ms();
                                     records.push(RequestRecord {
                                         id,
@@ -508,6 +541,10 @@ where
                         return Ok((p, records));
                     }
                     loop {
+                        if dark_at.is_some_and(|dm| now_ms() >= dm) {
+                            drain_dark_pool(&queue, p, lw, &rejected);
+                            break;
+                        }
                         match queue.pop_batch_pool(p, lw, batch, Duration::from_millis(50)) {
                             Popped::Item(items) => {
                                 let t_start = now_ms();
@@ -522,6 +559,13 @@ where
                                     outs.len(),
                                     items.len()
                                 );
+                                // Slowdown windows stretch the batch's
+                                // wall-clock exactly like the B = 1 path.
+                                let stretch = faults.slowdown_at_ms(p, t_start);
+                                if stretch > 1.0 {
+                                    let extra = (now_ms() - t_start) * (stretch - 1.0);
+                                    std::thread::sleep(Duration::from_secs_f64(extra / 1e3));
+                                }
                                 let t_fin = now_ms();
                                 for ((id, arrival_ms), out) in items.into_iter().zip(outs) {
                                     records.push(RequestRecord {
@@ -578,6 +622,29 @@ where
             pool_arrivals,
         })
     })
+}
+
+/// Fault injection: a dark worker stops serving, parks until the run
+/// winds down, then rejects whatever backlog is still stranded on its
+/// pool's own shards. Alive pools may spill-absorb the backlog in the
+/// meantime (the spill gate still applies) and nothing is silently
+/// dropped, so `records + rejected == arrivals` holds under the fault.
+fn drain_dark_pool<T>(queue: &ShardedQueue<T>, pool: usize, worker: usize, lost: &AtomicUsize) {
+    let mut n = 0usize;
+    loop {
+        if queue.is_closed() {
+            while queue.try_pop_home(pool, worker).is_some() {
+                n += 1;
+            }
+            if queue.pool_len(pool) == 0 {
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    if n > 0 {
+        lost.fetch_add(n, Ordering::Relaxed);
+    }
 }
 
 #[cfg(test)]

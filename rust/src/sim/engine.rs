@@ -43,6 +43,7 @@ use crate::planner::Plan;
 use crate::serving::policy::ScalingPolicy;
 use crate::serving::topology::{Dispatch, Topology};
 use crate::util::Rng;
+use crate::workload::FaultPlan;
 
 use super::{ServiceModel, SimOutcome};
 
@@ -88,6 +89,35 @@ pub fn simulate_topology<P: ScalingPolicy, S: ServiceModel>(
     topo: &Topology,
     batch: usize,
 ) -> SimOutcome {
+    let faults = FaultPlan::none();
+    simulate_topology_faults(arrivals, plan, policy, service, seed, topo, batch, &faults)
+}
+
+/// [`simulate_topology`] with a [`FaultPlan`] injected — the DES side of
+/// failure injection, mirroring the live executor fault-for-fault:
+///
+/// * **pool dark** — the pool's server slots retire (busy-until = ∞) at
+///   their first dispatch opportunity at or past the dark time; in-
+///   flight work completes, and backlog no live server may reach (the
+///   spill gate still applies) is counted `rejected`;
+/// * **slowdown** — the executing pool's service times stretch by the
+///   fault factor active at batch start;
+/// * **queue squeeze** — arrivals finding `queued_total` at or above
+///   the active admission bound are rejected without being observed.
+///
+/// With the empty plan every guard is inert and the event sequence (and
+/// rng stream) is bit-identical to [`simulate_topology`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_topology_faults<P: ScalingPolicy, S: ServiceModel>(
+    arrivals: &[f64],
+    plan: &Plan,
+    policy: &mut P,
+    service: &S,
+    seed: u64,
+    topo: &Topology,
+    batch: usize,
+    faults: &FaultPlan,
+) -> SimOutcome {
     let batch = batch.max(1);
     let alpha = plan.batch_alpha_ms.max(0.0);
     let n_rungs = plan.ladder.len();
@@ -110,6 +140,12 @@ pub fn simulate_topology<P: ScalingPolicy, S: ServiceModel>(
     let mut switches = Vec::new();
     let mut steals = 0u64;
     let mut spills = 0u64;
+    let mut rejected_total = 0usize;
+    // Per-pool dark times (ms); ∞ = never. Retired slots carry
+    // busy-until = ∞ and are excluded from every server scan.
+    let dark_ms: Vec<f64> = (0..topo.n_pools())
+        .map(|p| faults.dark_at_ms(p).unwrap_or(f64::INFINITY))
+        .collect();
 
     let mut queues: Vec<std::collections::VecDeque<(u64, f64)>> =
         (0..nsh).map(|_| std::collections::VecDeque::new()).collect();
@@ -154,7 +190,7 @@ pub fn simulate_topology<P: ScalingPolicy, S: ServiceModel>(
                 .enumerate()
                 .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
                 .unwrap();
-            if earliest <= next_arrival {
+            if earliest <= next_arrival && earliest < f64::INFINITY {
                 let pick = choose_shard(
                     topo,
                     &queues,
@@ -177,7 +213,10 @@ pub fn simulate_topology<P: ScalingPolicy, S: ServiceModel>(
                         loop {
                             let mut best: Option<(usize, f64)> = None;
                             for (w, &b) in busy.iter().enumerate() {
-                                if rejected[server_pool[w]] || b > next_arrival {
+                                if rejected[server_pool[w]]
+                                    || b > next_arrival
+                                    || b == f64::INFINITY
+                                {
                                     continue;
                                 }
                                 let better = match best {
@@ -213,6 +252,15 @@ pub fn simulate_topology<P: ScalingPolicy, S: ServiceModel>(
         }
 
         if let Some((slot, free_at, shard, kind)) = chosen {
+            let p = server_pool[slot];
+            // A dark pool's slot retires at its first dispatch
+            // opportunity at or past the dark time (in-flight work
+            // already completed; it never dequeues again).
+            let front_arr = queues[shard].front().unwrap().1;
+            if free_at.max(front_arr) >= dark_ms[p] {
+                busy[slot] = f64::INFINITY;
+                continue;
+            }
             // Dispatch to server `slot`: a front run of its home shard,
             // a steal-half from a pool sibling, or a spill-half from
             // the gated victim — one steal/spill operation per batch.
@@ -221,7 +269,6 @@ pub fn simulate_topology<P: ScalingPolicy, S: ServiceModel>(
                 Dispatch::Steal => steals += 1,
                 Dispatch::Spill => spills += 1,
             }
-            let p = server_pool[slot];
             let take = Topology::take_count(queues[shard].len(), batch, kind);
             let mut taken: Vec<(u64, f64)> = Vec::with_capacity(take);
             for _ in 0..take {
@@ -241,7 +288,9 @@ pub fn simulate_topology<P: ScalingPolicy, S: ServiceModel>(
             // into its band — and its hardware scales every sampled
             // service time by the pool's speed factor.
             let exec = topo.exec_rung(p, idx, n_rungs);
-            let speed = topo.speed(p);
+            // An active slowdown window stretches the pool's hardware
+            // speed factor for batches starting inside it.
+            let speed = topo.speed(p) * faults.slowdown_at_ms(p, start);
             // Batch service: each sampled time is α + βᵢ, so n requests
             // in one dispatch cost Σ sᵢ − (n−1)·α (one dispatch cost, n
             // marginals); α is clamped into [0, s̄(1)] of the *executing*
@@ -271,6 +320,16 @@ pub fn simulate_topology<P: ScalingPolicy, S: ServiceModel>(
             // Admit the next arrival: rung-aware routing — round-robin
             // over the shards of the current rung's home pool.
             let arr_ms = arrivals[i] * 1000.0;
+            // An active queue squeeze tightens the admission bound; a
+            // rejected arrival consumes no id and is not observed
+            // (mirrors the live injector's pre-push check).
+            if let Some(cap) = faults.capacity_at_ms(arr_ms) {
+                if queued_total >= cap {
+                    rejected_total += 1;
+                    i += 1;
+                    continue;
+                }
+            }
             let rp = topo.pool_for_rung(observed);
             let shard = topo.route(rp, routers[rp]);
             routers[rp] += 1;
@@ -284,7 +343,7 @@ pub fn simulate_topology<P: ScalingPolicy, S: ServiceModel>(
             let in_flight = busy
                 .iter()
                 .enumerate()
-                .filter(|&(w, &b)| server_pool[w] == rp && b > arr_ms)
+                .filter(|&(w, &b)| server_pool[w] == rp && b > arr_ms && b != f64::INFINITY)
                 .count();
             observe(
                 policy,
@@ -294,13 +353,18 @@ pub fn simulate_topology<P: ScalingPolicy, S: ServiceModel>(
                 pool_queued[rp] + in_flight,
             );
         } else {
-            // Unreachable: with no arrivals left every server is a
-            // candidate and a pool's own workers are never gated on
-            // their own backlog, so queued work always finds a server.
-            unreachable!("queued_total > 0 but no server may dispatch");
+            // Without faults this is unreachable: with no arrivals left
+            // every server is a candidate and a pool's own workers are
+            // never gated on their own backlog, so queued work always
+            // finds a server. With a dark pool, backlog no live server
+            // may reach (retired slots, spill-gated victims) is
+            // rejected — conservation still holds.
+            assert!(faults.any_dark(), "queued_total > 0 but no server may dispatch");
+            rejected_total += queued_total;
+            break;
         }
     }
 
     records.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
-    SimOutcome { records, switches, steals, spills }
+    SimOutcome { records, switches, steals, spills, rejected: rejected_total }
 }

@@ -69,14 +69,24 @@
 //! once per batch at dispatch and once at departure, mirroring the live
 //! executor. With `B = 1` every expression degenerates to the seed
 //! simulator bit-for-bit (same rng consumption, same timestamps).
+//!
+//! A guided tour of the whole dispatch plane — how this engine and the
+//! live `ShardedQueue` share one decision core, and where routing,
+//! steal, spill, batch and AQM each live — is in `docs/ARCHITECTURE.md`.
+//!
+//! Failure injection: [`engine::simulate_topology_faults`] applies a
+//! [`crate::workload::FaultPlan`] (pool dark, slowdown window, queue
+//! squeeze) to the same event loop; [`SimOutcome::rejected`] counts the
+//! arrivals a fault turned away so `served + rejected == arrivals`
+//! stays checkable under faults.
 
 pub mod engine;
 pub mod service;
 pub mod theory;
 
-pub use engine::simulate_topology;
+pub use engine::{simulate_topology, simulate_topology_faults};
 pub use service::{
-    DeterministicService, ExponentialService, LognormalService, ServiceModel,
+    DeterministicService, ExponentialService, LognormalService, ParetoService, ServiceModel,
 };
 
 // The queue discipline and the decision core are defined next to the
@@ -102,6 +112,11 @@ pub struct SimOutcome {
     /// (always 0 outside [`simulate_pools`] / a multi-pool
     /// [`simulate_topology`]).
     pub spills: u64,
+    /// Arrivals turned away by an injected fault (queue squeeze, or a
+    /// dark pool's unreachable backlog). Always 0 without a
+    /// [`crate::workload::FaultPlan`]; `records.len() + rejected`
+    /// equals the arrival count.
+    pub rejected: usize,
 }
 
 /// Simulate serving `arrivals` (seconds) under `policy` on a single

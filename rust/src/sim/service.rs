@@ -101,6 +101,50 @@ impl ServiceModel for ExponentialService {
     }
 }
 
+/// Pareto (power-law) service — the heavy-tailed model for scenario
+/// sweeps. With shape `alpha` and per-rung scale `x_m` chosen so the
+/// mean matches the plan's profile (`mean = x_m·alpha/(alpha-1)`), the
+/// squared coefficient of variation is `1/(alpha·(alpha-2))`, which for
+/// `alpha` just above 2 is far heavier than any lognormal fit: a small
+/// fraction of requests take many times the mean, stressing tail SLOs.
+#[derive(Clone, Debug)]
+pub struct ParetoService {
+    /// Tail shape; must be > 2 for finite variance.
+    alpha: f64,
+    /// Per-rung scale (minimum service time, ms).
+    x_m: Vec<f64>,
+    means: Vec<f64>,
+}
+
+impl ParetoService {
+    /// Per-rung Pareto with the plan's mean service times. `alpha`
+    /// close to 2 (e.g. 2.05) gives a very heavy tail (CV ≈ 3).
+    pub fn from_plan(plan: &Plan, alpha: f64) -> ParetoService {
+        assert!(alpha > 2.0, "alpha must be > 2 for finite variance");
+        ParetoService {
+            alpha,
+            x_m: plan
+                .ladder
+                .iter()
+                .map(|p| p.mean_ms * (alpha - 1.0) / alpha)
+                .collect(),
+            means: plan.ladder.iter().map(|p| p.mean_ms).collect(),
+        }
+    }
+}
+
+impl ServiceModel for ParetoService {
+    fn sample_ms(&self, idx: usize, rng: &mut Rng) -> f64 {
+        // Inverse-CDF: x = x_m · u^(-1/alpha), u uniform on (0, 1].
+        let u = 1.0 - rng.uniform();
+        self.x_m[idx] * u.powf(-1.0 / self.alpha)
+    }
+
+    fn mean_ms(&self, idx: usize) -> f64 {
+        self.means[idx]
+    }
+}
+
 /// Deterministic service (tests / M/D/1 analyses).
 #[derive(Clone, Debug)]
 pub struct DeterministicService {
@@ -150,6 +194,41 @@ mod tests {
         let mut rng = Rng::new(0);
         assert_eq!(d.sample_ms(1, &mut rng), 20.0);
         assert_eq!(d.mean_ms(0), 10.0);
+    }
+
+    #[test]
+    fn pareto_matches_mean_and_is_heavier_than_exponential() {
+        let alpha = 2.05;
+        let mean = 10.0;
+        let p = ParetoService {
+            alpha,
+            x_m: vec![mean * (alpha - 1.0) / alpha],
+            means: vec![mean],
+        };
+        let e = ExponentialService { means: vec![mean] };
+        let mut rng = Rng::new(11);
+        let n = 400_000;
+        let cv2 = |svc: &dyn ServiceModel, rng: &mut Rng| {
+            let (mut sum, mut sq, mut max) = (0.0, 0.0, 0.0_f64);
+            for _ in 0..n {
+                let s = svc.sample_ms(0, rng);
+                assert!(s > 0.0);
+                sum += s;
+                sq += s * s;
+                max = max.max(s);
+            }
+            let m = sum / n as f64;
+            (m, sq / n as f64 / (m * m) - 1.0, max)
+        };
+        let (p_mean, p_cv2, p_max) = cv2(&p, &mut rng);
+        let (_, e_cv2, e_max) = cv2(&e, &mut rng);
+        assert!((p_mean - mean).abs() / mean < 0.15, "mean {p_mean}");
+        assert_eq!(p.mean_ms(0), mean);
+        // Heavy tail: the Pareto run must be burstier than the
+        // memoryless reference, with a far larger extreme sample.
+        assert!(p_cv2 > e_cv2 + 0.3, "pareto cv² {p_cv2} vs exp {e_cv2}");
+        assert!(p_max > 2.0 * e_max, "pareto max {p_max} vs exp {e_max}");
+        assert!(p_max > 20.0 * mean, "pareto max {p_max}");
     }
 
     #[test]

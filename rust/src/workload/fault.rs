@@ -1,0 +1,249 @@
+//! Failure injection: a [`FaultPlan`] describes *when* capacity
+//! degrades, and both executors apply it identically — the live server
+//! (`serving/server.rs`: workers stop dequeuing, stretch their service
+//! wall-clock, or the injector tightens admission) and the DES engine
+//! (`sim/engine.rs`: server slots retire, speed factors stretch, the
+//! admission branch rejects). Every fault is a pure function of run
+//! time, so a live run and a simulation of the same plan degrade at the
+//! same (virtual) instants.
+//!
+//! Three fault shapes (the Salesforce production-study failure modes):
+//!
+//! * [`Fault::PoolDark`] — a whole pool stops serving at `at_s`; its
+//!   backlog is either absorbed by other pools' spill-when-dry or
+//!   counted rejected, so `served + rejected == arrivals` still holds;
+//! * [`Fault::Slowdown`] — a pool's service times stretch ×`factor`
+//!   over a window (thermal throttling, noisy neighbor);
+//! * [`Fault::QueueSqueeze`] — the admission bound tightens to
+//!   `capacity` over a window (an upstream proxy shrinking buffers).
+
+use anyhow::{bail, Context, Result};
+
+/// One injected fault. Times are seconds from run start (the same
+/// clock as arrival timestamps).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// Pool `pool` stops dequeuing at `at_s` (workers crash / go dark).
+    PoolDark { pool: usize, at_s: f64 },
+    /// Pool `pool` serves ×`factor` slower during `[from_s, to_s)`.
+    Slowdown { pool: usize, factor: f64, from_s: f64, to_s: f64 },
+    /// Total queue admission bound drops to `capacity` during
+    /// `[from_s, to_s)`.
+    QueueSqueeze { capacity: usize, from_s: f64, to_s: f64 },
+}
+
+/// A set of faults applied to one run. `Default` is the empty plan
+/// (no behavioral change at all — pinned by the engine tests).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// The empty plan.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Builder: add one fault.
+    pub fn with(mut self, fault: Fault) -> FaultPlan {
+        self.faults.push(fault);
+        self
+    }
+
+    /// Earliest dark time of `pool` in milliseconds, if any.
+    pub fn dark_at_ms(&self, pool: usize) -> Option<f64> {
+        self.faults
+            .iter()
+            .filter_map(|f| match f {
+                Fault::PoolDark { pool: p, at_s } if *p == pool => Some(at_s * 1000.0),
+                _ => None,
+            })
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Does any fault take a pool dark?
+    pub fn any_dark(&self) -> bool {
+        self.faults.iter().any(|f| matches!(f, Fault::PoolDark { .. }))
+    }
+
+    /// Service-time stretch factor of `pool` at `t_ms` (product of the
+    /// active slowdown windows; 1.0 outside them).
+    pub fn slowdown_at_ms(&self, pool: usize, t_ms: f64) -> f64 {
+        let mut factor = 1.0;
+        for f in &self.faults {
+            if let Fault::Slowdown { pool: p, factor: x, from_s, to_s } = f {
+                if *p == pool && t_ms >= from_s * 1000.0 && t_ms < to_s * 1000.0 {
+                    factor *= x;
+                }
+            }
+        }
+        factor
+    }
+
+    /// Tightest active admission bound at `t_ms`, if a squeeze window
+    /// is open.
+    pub fn capacity_at_ms(&self, t_ms: f64) -> Option<usize> {
+        self.faults
+            .iter()
+            .filter_map(|f| match f {
+                Fault::QueueSqueeze { capacity, from_s, to_s }
+                    if t_ms >= from_s * 1000.0 && t_ms < to_s * 1000.0 =>
+                {
+                    Some(*capacity)
+                }
+                _ => None,
+            })
+            .min()
+    }
+
+    /// Parse a comma-separated fault list:
+    ///
+    /// * `dark:<pool>@<t>` — pool dark at `t` seconds;
+    /// * `slow:<pool>x<factor>@<from>-<to>` — slowdown window;
+    /// * `squeeze:<capacity>@<from>-<to>` — admission squeeze window.
+    ///
+    /// Example: `dark:1@60,slow:0x2.5@30-90,squeeze:64@100-140`.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, rest) = part
+                .split_once(':')
+                .with_context(|| format!("fault {part:?}: expected kind:spec"))?;
+            match kind {
+                "dark" => {
+                    let (pool, at) = rest
+                        .split_once('@')
+                        .with_context(|| format!("fault {part:?}: expected dark:pool@t"))?;
+                    plan.faults.push(Fault::PoolDark {
+                        pool: pool.parse().with_context(|| format!("bad pool in {part:?}"))?,
+                        at_s: at.parse().with_context(|| format!("bad time in {part:?}"))?,
+                    });
+                }
+                "slow" => {
+                    let (head, window) = rest
+                        .split_once('@')
+                        .with_context(|| format!("fault {part:?}: expected slow:pxf@a-b"))?;
+                    let (pool, factor) = head
+                        .split_once('x')
+                        .with_context(|| format!("fault {part:?}: expected pool x factor"))?;
+                    let (from, to) = window
+                        .split_once('-')
+                        .with_context(|| format!("fault {part:?}: expected window a-b"))?;
+                    plan.faults.push(Fault::Slowdown {
+                        pool: pool.parse().with_context(|| format!("bad pool in {part:?}"))?,
+                        factor: factor
+                            .parse()
+                            .with_context(|| format!("bad factor in {part:?}"))?,
+                        from_s: from.parse().with_context(|| format!("bad from in {part:?}"))?,
+                        to_s: to.parse().with_context(|| format!("bad to in {part:?}"))?,
+                    });
+                }
+                "squeeze" => {
+                    let (cap, window) = rest
+                        .split_once('@')
+                        .with_context(|| format!("fault {part:?}: expected squeeze:c@a-b"))?;
+                    let (from, to) = window
+                        .split_once('-')
+                        .with_context(|| format!("fault {part:?}: expected window a-b"))?;
+                    plan.faults.push(Fault::QueueSqueeze {
+                        capacity: cap
+                            .parse()
+                            .with_context(|| format!("bad capacity in {part:?}"))?,
+                        from_s: from.parse().with_context(|| format!("bad from in {part:?}"))?,
+                        to_s: to.parse().with_context(|| format!("bad to in {part:?}"))?,
+                    });
+                }
+                other => bail!("unknown fault kind {other:?} in {part:?}"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// One-line human description (experiment headers, cell tables).
+    pub fn describe(&self) -> String {
+        if self.faults.is_empty() {
+            return "none".into();
+        }
+        let parts: Vec<String> = self
+            .faults
+            .iter()
+            .map(|f| match f {
+                Fault::PoolDark { pool, at_s } => format!("dark:{pool}@{at_s}"),
+                Fault::Slowdown { pool, factor, from_s, to_s } => {
+                    format!("slow:{pool}x{factor}@{from_s}-{to_s}")
+                }
+                Fault::QueueSqueeze { capacity, from_s, to_s } => {
+                    format!("squeeze:{capacity}@{from_s}-{to_s}")
+                }
+            })
+            .collect();
+        parts.join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_empty());
+        assert!(!plan.any_dark());
+        assert_eq!(plan.dark_at_ms(0), None);
+        assert_eq!(plan.slowdown_at_ms(0, 1e6), 1.0);
+        assert_eq!(plan.capacity_at_ms(1e6), None);
+    }
+
+    #[test]
+    fn queries_respect_windows_and_pools() {
+        let plan = FaultPlan::none()
+            .with(Fault::PoolDark { pool: 1, at_s: 60.0 })
+            .with(Fault::Slowdown { pool: 0, factor: 2.5, from_s: 30.0, to_s: 90.0 })
+            .with(Fault::QueueSqueeze { capacity: 64, from_s: 100.0, to_s: 140.0 });
+        assert!(plan.any_dark());
+        assert_eq!(plan.dark_at_ms(1), Some(60_000.0));
+        assert_eq!(plan.dark_at_ms(0), None);
+        assert_eq!(plan.slowdown_at_ms(0, 29_999.0), 1.0);
+        assert_eq!(plan.slowdown_at_ms(0, 45_000.0), 2.5);
+        assert_eq!(plan.slowdown_at_ms(1, 45_000.0), 1.0);
+        assert_eq!(plan.slowdown_at_ms(0, 90_000.0), 1.0);
+        assert_eq!(plan.capacity_at_ms(99_999.0), None);
+        assert_eq!(plan.capacity_at_ms(120_000.0), Some(64));
+    }
+
+    #[test]
+    fn overlapping_slowdowns_compound_and_squeezes_tighten() {
+        let plan = FaultPlan::none()
+            .with(Fault::Slowdown { pool: 0, factor: 2.0, from_s: 0.0, to_s: 50.0 })
+            .with(Fault::Slowdown { pool: 0, factor: 1.5, from_s: 20.0, to_s: 80.0 })
+            .with(Fault::QueueSqueeze { capacity: 100, from_s: 0.0, to_s: 50.0 })
+            .with(Fault::QueueSqueeze { capacity: 8, from_s: 10.0, to_s: 20.0 });
+        assert_eq!(plan.slowdown_at_ms(0, 30_000.0), 3.0);
+        assert_eq!(plan.capacity_at_ms(15_000.0), Some(8));
+        assert_eq!(plan.capacity_at_ms(25_000.0), Some(100));
+    }
+
+    #[test]
+    fn parse_roundtrips_describe() {
+        let text = "dark:1@60,slow:0x2.5@30-90,squeeze:64@100-140";
+        let plan = FaultPlan::parse(text).unwrap();
+        assert_eq!(plan.faults.len(), 3);
+        assert_eq!(plan.describe(), text);
+        assert_eq!(FaultPlan::parse(&plan.describe()).unwrap(), plan);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("dark:1").is_err());
+        assert!(FaultPlan::parse("nova:1@2").is_err());
+        assert!(FaultPlan::parse("slow:0@30-90").is_err());
+        assert!(FaultPlan::parse("squeeze:x@1-2").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+}

@@ -1,0 +1,459 @@
+//! Composable scenario generators: an algebra of arrival-rate shapes
+//! (`sum` / `scale` / `shift` over constant, diurnal, flash-crowd, MMPP
+//! and correlated-surge primitives) compiled to a pure rate function
+//! λ(t) and sampled via thinning — deterministically from a seed.
+//!
+//! A [`ScenarioSpec`] is the scenario-matrix analogue of
+//! [`WorkloadSpec`](super::WorkloadSpec): the same thinning loop over
+//! the same `util::rng` stream, so a [`Generator::Legacy`] wrapper
+//! reproduces [`generate_arrivals`](super::generate_arrivals)
+//! bit-for-bit, and any scenario's arrivals can be fed unchanged to
+//! both the live `serve()` injector and the DES
+//! `simulate_topology` (both consume `&[f64]` seconds).
+//!
+//! Stochastic shapes (MMPP state paths, surge windows) are
+//! *materialized once* at compile time from the spec seed, so λ(t) is a
+//! pure function of time and the thinning envelope is exact.
+
+use crate::util::Rng;
+
+use super::{Pattern, RateFn, WorkloadSpec};
+
+/// A composable arrival-rate shape. Build with the variant literals or
+/// the [`sum`](Generator::sum) / [`scale`](Generator::scale) /
+/// [`shift`](Generator::shift) combinators.
+#[derive(Clone, Debug)]
+pub enum Generator {
+    /// Constant `qps`.
+    Constant { qps: f64 },
+    /// Sinusoidal day-cycle around `qps`:
+    /// `qps · (1 + amplitude · sin(2π (t − phase_s) / period_s))`,
+    /// clamped at ≥ 0.
+    Diurnal { qps: f64, amplitude: f64, period_s: f64, phase_s: f64 },
+    /// Baseline `qps` with one flash crowd: a linear ramp to
+    /// `peak_factor·qps` over `[at_s − ramp_s, at_s]`, a hold of
+    /// `hold_s`, and a symmetric linear decay back to baseline.
+    FlashCrowd { qps: f64, peak_factor: f64, at_s: f64, ramp_s: f64, hold_s: f64 },
+    /// Markov-modulated Poisson process: the rate cycles through the
+    /// `qps` states with exponential dwell times of the matching
+    /// `mean_dwell_s` entry (state path materialized once per seed).
+    Mmpp { qps: Vec<f64>, mean_dwell_s: Vec<f64> },
+    /// `sources` independent clients at `qps_per_source` each, whose
+    /// surges are *correlated*: shared surge windows (length uniform in
+    /// `surge_s`, exponential gaps of mean `mean_gap_s`) during which
+    /// every source multiplies its rate by `peak_factor` at once.
+    CorrelatedSurge {
+        sources: usize,
+        qps_per_source: f64,
+        peak_factor: f64,
+        mean_gap_s: f64,
+        surge_s: (f64, f64),
+    },
+    /// A seed-era [`Pattern`] at `base_qps` — compiles through the same
+    /// [`RateFn`] as [`generate_arrivals`](super::generate_arrivals),
+    /// so the bridge is bit-identical (pinned by test).
+    Legacy { base_qps: f64, pattern: Pattern },
+    /// Superposition: λ(t) = Σ λᵢ(t).
+    Sum(Vec<Generator>),
+    /// λ(t) scaled by a constant factor.
+    Scale { factor: f64, inner: Box<Generator> },
+    /// λ(t) delayed by `by_s` seconds (zero rate before the shift).
+    Shift { by_s: f64, inner: Box<Generator> },
+}
+
+impl Generator {
+    /// Superpose several generators.
+    pub fn sum(parts: Vec<Generator>) -> Generator {
+        Generator::Sum(parts)
+    }
+
+    /// Scale this generator's rate by `factor`.
+    pub fn scale(self, factor: f64) -> Generator {
+        Generator::Scale { factor, inner: Box::new(self) }
+    }
+
+    /// Delay this generator's onset by `by_s` seconds.
+    pub fn shift(self, by_s: f64) -> Generator {
+        Generator::Shift { by_s, inner: Box::new(self) }
+    }
+
+    /// Compile to a pure rate function over `[0, duration_s)`.
+    /// Stochastic shapes draw their state paths from a master stream
+    /// derived from `seed` in deterministic traversal order, so the
+    /// same (generator, duration, seed) always yields the same λ(t).
+    pub fn compile(&self, duration_s: f64, seed: u64) -> CompiledRate {
+        let mut rng = Rng::new(seed ^ 0x5CE0_A71C);
+        let node = build(self, duration_s, seed, &mut rng);
+        CompiledRate { duration_s, node }
+    }
+}
+
+/// A compiled, pure λ(t) — the thinning target of
+/// [`ScenarioSpec::arrivals`].
+pub struct CompiledRate {
+    duration_s: f64,
+    node: Node,
+}
+
+enum Node {
+    Constant { qps: f64 },
+    Diurnal { qps: f64, amplitude: f64, period_s: f64, phase_s: f64 },
+    FlashCrowd { qps: f64, peak_factor: f64, at_s: f64, ramp_s: f64, hold_s: f64 },
+    /// Materialized piecewise-constant rate: `base` outside the
+    /// `(start, end, rate)` spans, the span's absolute rate inside.
+    Piecewise { base: f64, spans: Vec<(f64, f64, f64)> },
+    Legacy(RateFn),
+    Sum(Vec<Node>),
+    Scale { factor: f64, inner: Box<Node> },
+    Shift { by_s: f64, inner: Box<Node> },
+}
+
+fn build(g: &Generator, duration_s: f64, seed: u64, rng: &mut Rng) -> Node {
+    match g {
+        Generator::Constant { qps } => Node::Constant { qps: *qps },
+        Generator::Diurnal { qps, amplitude, period_s, phase_s } => Node::Diurnal {
+            qps: *qps,
+            amplitude: *amplitude,
+            period_s: *period_s,
+            phase_s: *phase_s,
+        },
+        Generator::FlashCrowd { qps, peak_factor, at_s, ramp_s, hold_s } => {
+            Node::FlashCrowd {
+                qps: *qps,
+                peak_factor: *peak_factor,
+                at_s: *at_s,
+                ramp_s: *ramp_s,
+                hold_s: *hold_s,
+            }
+        }
+        Generator::Mmpp { qps, mean_dwell_s } => {
+            assert!(!qps.is_empty(), "Mmpp needs at least one state");
+            assert_eq!(qps.len(), mean_dwell_s.len(), "Mmpp state/dwell mismatch");
+            // Materialize the alternating state path once; spans cover
+            // the whole run so the base rate outside them is never used.
+            let mut spans = Vec::new();
+            let mut t = 0.0;
+            let mut state = 0usize;
+            while t < duration_s {
+                let dwell = rng.exponential(1.0 / mean_dwell_s[state].max(1e-9));
+                let end = (t + dwell).min(duration_s);
+                spans.push((t, end, qps[state]));
+                t = end;
+                state = (state + 1) % qps.len();
+            }
+            Node::Piecewise { base: 0.0, spans }
+        }
+        Generator::CorrelatedSurge {
+            sources,
+            qps_per_source,
+            peak_factor,
+            mean_gap_s,
+            surge_s,
+        } => {
+            // One shared window sequence — every source surges at once,
+            // which is the whole point (independent surges average out;
+            // correlated ones multiply the aggregate).
+            let base = *sources as f64 * qps_per_source;
+            let mut spans = Vec::new();
+            let mut t = rng.exponential(1.0 / mean_gap_s.max(1e-9));
+            while t < duration_s {
+                let len = rng.range_f64(surge_s.0, surge_s.1);
+                let end = (t + len).min(duration_s);
+                spans.push((t, end, base * peak_factor));
+                t = end + rng.exponential(1.0 / mean_gap_s.max(1e-9));
+            }
+            Node::Piecewise { base, spans }
+        }
+        Generator::Legacy { base_qps, pattern } => Node::Legacy(RateFn::compile(&WorkloadSpec {
+            base_qps: *base_qps,
+            duration_s,
+            pattern: pattern.clone(),
+            seed,
+        })),
+        Generator::Sum(parts) => {
+            Node::Sum(parts.iter().map(|g| build(g, duration_s, seed, rng)).collect())
+        }
+        Generator::Scale { factor, inner } => Node::Scale {
+            factor: *factor,
+            inner: Box::new(build(inner, duration_s, seed, rng)),
+        },
+        Generator::Shift { by_s, inner } => Node::Shift {
+            by_s: *by_s,
+            inner: Box::new(build(inner, duration_s, seed, rng)),
+        },
+    }
+}
+
+impl CompiledRate {
+    /// Instantaneous arrival rate at `t` seconds.
+    pub fn rate(&self, t: f64) -> f64 {
+        rate_of(&self.node, t)
+    }
+
+    /// An exact upper envelope of λ(t) over the run (thinning bound).
+    pub fn rate_max(&self) -> f64 {
+        max_of(&self.node)
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.duration_s
+    }
+}
+
+fn rate_of(node: &Node, t: f64) -> f64 {
+    match node {
+        Node::Constant { qps } => *qps,
+        Node::Diurnal { qps, amplitude, period_s, phase_s } => {
+            let phase = 2.0 * std::f64::consts::PI * (t - phase_s) / period_s;
+            (qps * (1.0 + amplitude * phase.sin())).max(0.0)
+        }
+        Node::FlashCrowd { qps, peak_factor, at_s, ramp_s, hold_s } => {
+            let peak = peak_factor.max(1.0);
+            let factor = if t < at_s - ramp_s || t >= at_s + hold_s + ramp_s {
+                1.0
+            } else if t < *at_s {
+                // Linear ramp up.
+                1.0 + (peak - 1.0) * (1.0 - (at_s - t) / ramp_s.max(1e-9))
+            } else if t < at_s + hold_s {
+                peak
+            } else {
+                // Linear decay back to baseline.
+                peak - (peak - 1.0) * (t - at_s - hold_s) / ramp_s.max(1e-9)
+            };
+            qps * factor
+        }
+        Node::Piecewise { base, spans } => spans
+            .iter()
+            .find(|(s, e, _)| t >= *s && t < *e)
+            .map(|(_, _, r)| *r)
+            .unwrap_or(*base),
+        Node::Legacy(rate) => rate.rate(t),
+        Node::Sum(parts) => parts.iter().map(|n| rate_of(n, t)).sum(),
+        Node::Scale { factor, inner } => factor * rate_of(inner, t),
+        Node::Shift { by_s, inner } => {
+            if t < *by_s {
+                0.0
+            } else {
+                rate_of(inner, t - by_s)
+            }
+        }
+    }
+}
+
+fn max_of(node: &Node) -> f64 {
+    match node {
+        Node::Constant { qps } => *qps,
+        Node::Diurnal { qps, amplitude, .. } => qps * (1.0 + amplitude.abs()),
+        Node::FlashCrowd { qps, peak_factor, .. } => qps * peak_factor.max(1.0),
+        Node::Piecewise { base, spans } => {
+            spans.iter().map(|(_, _, r)| *r).fold(*base, f64::max)
+        }
+        Node::Legacy(rate) => rate.rate_max(),
+        Node::Sum(parts) => parts.iter().map(max_of).sum(),
+        Node::Scale { factor, inner } => factor * max_of(inner),
+        Node::Shift { inner, .. } => max_of(inner),
+    }
+}
+
+/// A complete scenario: a generator shape, a run length, and the seed
+/// that determines both the materialized rate path and the thinning
+/// stream.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub generator: Generator,
+    pub duration_s: f64,
+    pub seed: u64,
+}
+
+impl ScenarioSpec {
+    /// Generate arrival times (seconds, ascending) via thinning — the
+    /// exact loop of [`generate_arrivals`](super::generate_arrivals)
+    /// over the compiled rate, so a [`Generator::Legacy`] spec is
+    /// bit-identical to the seed generator.
+    pub fn arrivals(&self) -> Vec<f64> {
+        let rate = self.generator.compile(self.duration_s, self.seed);
+        let lam_max = rate.rate_max();
+        let mut out = Vec::new();
+        if lam_max <= 0.0 {
+            return out;
+        }
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0;
+        while t < self.duration_s {
+            t += rng.exponential(lam_max);
+            if t >= self.duration_s {
+                break;
+            }
+            if rng.uniform() < rate.rate(t) / lam_max {
+                out.push(t);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Statistical signatures (cookbook + tests)
+// ---------------------------------------------------------------------
+
+/// Mean arrival rate of a trace over a run of `duration_s`.
+pub fn empirical_qps(arrivals: &[f64], duration_s: f64) -> f64 {
+    if duration_s <= 0.0 {
+        return 0.0;
+    }
+    arrivals.len() as f64 / duration_s
+}
+
+/// Coefficient of variation of the inter-arrival times (1 for Poisson,
+/// > 1 for bursty/MMPP traffic, < 1 for smoothed traffic).
+pub fn interarrival_cv(arrivals: &[f64]) -> f64 {
+    let gaps: Vec<f64> = arrivals.windows(2).map(|w| w[1] - w[0]).collect();
+    if gaps.len() < 2 {
+        return 0.0;
+    }
+    let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+    if mean <= 0.0 {
+        return 0.0;
+    }
+    let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+    var.sqrt() / mean
+}
+
+/// Goh–Barabási burstiness index `B = (σ − μ) / (σ + μ)` of the
+/// inter-arrival times: −1 periodic, 0 Poisson, → 1 maximally bursty.
+pub fn burstiness_index(arrivals: &[f64]) -> f64 {
+    let cv = interarrival_cv(arrivals);
+    if cv <= 0.0 {
+        return -1.0;
+    }
+    (cv - 1.0) / (cv + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::generate_arrivals;
+
+    #[test]
+    fn legacy_bridge_is_bit_identical() {
+        for pattern in [Pattern::Steady, Pattern::paper_spike(), Pattern::paper_bursty()] {
+            let spec = WorkloadSpec {
+                base_qps: 6.0,
+                duration_s: 120.0,
+                pattern: pattern.clone(),
+                seed: 11,
+            };
+            let seed_way = generate_arrivals(&spec);
+            let algebra_way = ScenarioSpec {
+                generator: Generator::Legacy { base_qps: 6.0, pattern },
+                duration_s: 120.0,
+                seed: 11,
+            }
+            .arrivals();
+            assert_eq!(seed_way, algebra_way);
+        }
+    }
+
+    #[test]
+    fn sum_superposes_and_scale_scales() {
+        let g = Generator::sum(vec![
+            Generator::Constant { qps: 3.0 },
+            Generator::Constant { qps: 2.0 }.scale(2.0),
+        ]);
+        let rate = g.compile(100.0, 1);
+        assert!((rate.rate(50.0) - 7.0).abs() < 1e-12);
+        assert!((rate.rate_max() - 7.0).abs() < 1e-12);
+        let arrivals = ScenarioSpec { generator: g, duration_s: 400.0, seed: 9 }.arrivals();
+        let qps = empirical_qps(&arrivals, 400.0);
+        assert!((qps - 7.0).abs() < 0.6, "qps {qps}");
+    }
+
+    #[test]
+    fn shift_delays_onset() {
+        let g = Generator::Constant { qps: 8.0 }.shift(30.0);
+        let rate = g.compile(60.0, 1);
+        assert_eq!(rate.rate(10.0), 0.0);
+        assert!((rate.rate(45.0) - 8.0).abs() < 1e-12);
+        let arrivals = ScenarioSpec { generator: g, duration_s: 60.0, seed: 2 }.arrivals();
+        assert!(!arrivals.is_empty());
+        assert!(arrivals.iter().all(|&t| t >= 30.0));
+    }
+
+    #[test]
+    fn flash_crowd_peak_window_is_heavier() {
+        let g = Generator::FlashCrowd {
+            qps: 4.0,
+            peak_factor: 6.0,
+            at_s: 100.0,
+            ramp_s: 10.0,
+            hold_s: 40.0,
+        };
+        let rate = g.compile(300.0, 1);
+        assert!((rate.rate(20.0) - 4.0).abs() < 1e-12);
+        assert!((rate.rate(120.0) - 24.0).abs() < 1e-12);
+        assert!((rate.rate_max() - 24.0).abs() < 1e-12);
+        let arrivals = ScenarioSpec { generator: g, duration_s: 300.0, seed: 5 }.arrivals();
+        let in_hold = arrivals.iter().filter(|&&t| (100.0..140.0).contains(&t)).count();
+        let before = arrivals.iter().filter(|&&t| (20.0..60.0).contains(&t)).count();
+        assert!(in_hold as f64 > 3.0 * before as f64, "hold {in_hold} before {before}");
+    }
+
+    #[test]
+    fn mmpp_materializes_states_deterministically() {
+        let g = Generator::Mmpp { qps: vec![2.0, 12.0], mean_dwell_s: vec![15.0, 5.0] };
+        let a = ScenarioSpec { generator: g.clone(), duration_s: 200.0, seed: 3 }.arrivals();
+        let b = ScenarioSpec { generator: g.clone(), duration_s: 200.0, seed: 3 }.arrivals();
+        assert_eq!(a, b);
+        // The compiled rate visits both states.
+        let rate = g.compile(200.0, 3);
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..2000 {
+            seen.insert(rate.rate(i as f64 * 0.1).to_bits());
+        }
+        assert!(seen.len() >= 2, "MMPP never left its first state");
+    }
+
+    #[test]
+    fn correlated_surge_windows_are_shared() {
+        let g = Generator::CorrelatedSurge {
+            sources: 4,
+            qps_per_source: 1.5,
+            peak_factor: 5.0,
+            mean_gap_s: 20.0,
+            surge_s: (5.0, 10.0),
+        };
+        let rate = g.compile(300.0, 7);
+        // Base 6 qps, surges jump the *aggregate* to 30 qps.
+        assert!((rate.rate_max() - 30.0).abs() < 1e-9);
+        let surged = (0..3000).any(|i| rate.rate(i as f64 * 0.1) > 29.0);
+        assert!(surged, "no surge window materialized in 300 s");
+    }
+
+    #[test]
+    fn zero_rate_yields_no_arrivals() {
+        let g = Generator::Constant { qps: 0.0 };
+        let arrivals = ScenarioSpec { generator: g, duration_s: 50.0, seed: 1 }.arrivals();
+        assert!(arrivals.is_empty());
+    }
+
+    #[test]
+    fn burstiness_signatures_order_as_expected() {
+        let steady = ScenarioSpec {
+            generator: Generator::Constant { qps: 6.0 },
+            duration_s: 600.0,
+            seed: 21,
+        }
+        .arrivals();
+        let bursty = ScenarioSpec {
+            generator: Generator::Mmpp { qps: vec![1.0, 18.0], mean_dwell_s: vec![20.0, 6.0] },
+            duration_s: 600.0,
+            seed: 21,
+        }
+        .arrivals();
+        let cv_steady = interarrival_cv(&steady);
+        let cv_bursty = interarrival_cv(&bursty);
+        assert!((cv_steady - 1.0).abs() < 0.15, "Poisson CV {cv_steady}");
+        assert!(cv_bursty > cv_steady + 0.2, "MMPP CV {cv_bursty} vs {cv_steady}");
+        assert!(burstiness_index(&bursty) > burstiness_index(&steady));
+    }
+}

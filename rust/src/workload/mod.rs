@@ -9,8 +9,25 @@
 //!
 //! Arrival times are drawn from a non-homogeneous Poisson process via
 //! thinning, deterministically from the spec's seed.
+//!
+//! The legacy [`WorkloadSpec`] + [`Pattern`] pair above is the paper's
+//! fixed evaluation set. The scenario layer generalizes it:
+//!
+//! * [`gen`] — a composable [`Generator`] algebra (constant, diurnal,
+//!   flash crowd, MMPP, correlated surges, `sum`/`scale`/`shift`) that
+//!   compiles to a rate function and materializes arrivals through the
+//!   same thinning loop, so both executors consume bit-identical
+//!   arrival vectors;
+//! * [`fault`] — [`FaultPlan`] failure injection (pool dark, slowdown
+//!   windows, queue squeeze) applied identically live and in the DES;
+//! * [`trace`] — arrival-trace and request-log record/replay.
 
+pub mod fault;
+pub mod gen;
 pub mod trace;
+
+pub use fault::{Fault, FaultPlan};
+pub use gen::{burstiness_index, empirical_qps, interarrival_cv, Generator, ScenarioSpec};
 
 use crate::util::Rng;
 

@@ -1,15 +1,26 @@
-//! Arrival-trace persistence: save generated workloads and replay
-//! recorded ones (CSV, one arrival timestamp in seconds per line).
+//! Trace persistence: record and replay both *inputs* (arrival traces)
+//! and *outputs* (per-request logs) of a run.
 //!
-//! Lets a live run and a simulation consume bit-identical arrivals, and
-//! lets users bring production traces instead of synthetic patterns.
+//! Arrival traces are one-column CSVs (`arrival_s`), written with full
+//! round-trip float precision so save → load → simulate is bit-identical
+//! to the generating run (pinned by `roundtrip_is_exact`). Request logs
+//! are the dataset-rows shape — one row per served request with
+//! arrival/start/finish, the rung and pool that served it, latency, and
+//! outcome — so a sweep cell can be archived and re-analyzed (or its
+//! arrivals replayed through a different policy) without rerunning it.
 
 use std::io::{BufRead, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-/// Write arrivals (seconds, ascending) as a one-column CSV.
+use crate::metrics::RequestRecord;
+use crate::serving::Topology;
+use crate::util::csv::CsvWriter;
+
+/// Write arrivals (seconds, ascending) as a one-column CSV. Floats are
+/// written with `Display` (shortest decimal that round-trips), so
+/// loading reproduces the exact same bits.
 pub fn save_trace(path: &Path, arrivals: &[f64]) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
@@ -17,7 +28,7 @@ pub fn save_trace(path: &Path, arrivals: &[f64]) -> Result<()> {
     let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
     writeln!(w, "arrival_s")?;
     for t in arrivals {
-        writeln!(w, "{t:.6}")?;
+        writeln!(w, "{t}")?;
     }
     Ok(())
 }
@@ -45,13 +56,150 @@ pub fn load_trace(path: &Path) -> Result<Vec<f64>> {
     Ok(out)
 }
 
+/// One row of a request log: a [`RequestRecord`] plus the pool that the
+/// serving rung routed to (derived from the run's topology at save
+/// time, so the log is self-contained).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestLogRow {
+    pub id: u64,
+    pub arrival_ms: f64,
+    pub start_ms: f64,
+    pub finish_ms: f64,
+    pub rung: usize,
+    pub pool: usize,
+    pub latency_ms: f64,
+    pub accuracy: f64,
+    /// `"ok"` / `"fail"` for live runs with sampled answers, `"na"` for
+    /// simulations.
+    pub outcome: String,
+}
+
+impl RequestLogRow {
+    /// Convert a run record into a log row under `topo`'s routing.
+    pub fn from_record(r: &RequestRecord, topo: &Topology) -> RequestLogRow {
+        RequestLogRow {
+            id: r.id,
+            arrival_ms: r.arrival_ms,
+            start_ms: r.start_ms,
+            finish_ms: r.finish_ms,
+            rung: r.config_idx,
+            pool: topo.pool_for_rung(r.config_idx),
+            latency_ms: r.finish_ms - r.arrival_ms,
+            accuracy: r.accuracy,
+            outcome: match r.success {
+                Some(true) => "ok".into(),
+                Some(false) => "fail".into(),
+                None => "na".into(),
+            },
+        }
+    }
+
+    /// Back to a [`RequestRecord`] (the pool column is re-derivable from
+    /// a topology, so it is dropped).
+    pub fn to_record(&self) -> RequestRecord {
+        RequestRecord {
+            id: self.id,
+            arrival_ms: self.arrival_ms,
+            start_ms: self.start_ms,
+            finish_ms: self.finish_ms,
+            config_idx: self.rung,
+            accuracy: self.accuracy,
+            success: match self.outcome.as_str() {
+                "ok" => Some(true),
+                "fail" => Some(false),
+                _ => None,
+            },
+        }
+    }
+}
+
+const LOG_HEADER: [&str; 9] = [
+    "id",
+    "arrival_ms",
+    "start_ms",
+    "finish_ms",
+    "rung",
+    "pool",
+    "latency_ms",
+    "accuracy",
+    "outcome",
+];
+
+/// Write a full request log (one row per served request, full float
+/// precision) for the records of a live or simulated run.
+pub fn save_request_log(path: &Path, records: &[RequestRecord], topo: &Topology) -> Result<()> {
+    let mut w = CsvWriter::create(path, &LOG_HEADER)?;
+    for r in records {
+        let row = RequestLogRow::from_record(r, topo);
+        w.row(&[
+            row.id.to_string(),
+            row.arrival_ms.to_string(),
+            row.start_ms.to_string(),
+            row.finish_ms.to_string(),
+            row.rung.to_string(),
+            row.pool.to_string(),
+            row.latency_ms.to_string(),
+            row.accuracy.to_string(),
+            row.outcome.clone(),
+        ])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a request log saved by [`save_request_log`].
+pub fn load_request_log(path: &Path) -> Result<Vec<RequestLogRow>> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut out = Vec::new();
+    for (i, line) in std::io::BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').collect();
+        if i == 0 {
+            if cols != LOG_HEADER {
+                bail!("{path:?}: unexpected request-log header {line:?}");
+            }
+            continue;
+        }
+        if cols.len() != LOG_HEADER.len() {
+            bail!("{path:?}:{}: expected {} columns", i + 1, LOG_HEADER.len());
+        }
+        let f = |j: usize| -> Result<f64> {
+            cols[j]
+                .parse()
+                .with_context(|| format!("{path:?}:{}: bad float {:?}", i + 1, cols[j]))
+        };
+        out.push(RequestLogRow {
+            id: cols[0]
+                .parse()
+                .with_context(|| format!("{path:?}:{}: bad id {:?}", i + 1, cols[0]))?,
+            arrival_ms: f(1)?,
+            start_ms: f(2)?,
+            finish_ms: f(3)?,
+            rung: cols[4]
+                .parse()
+                .with_context(|| format!("{path:?}:{}: bad rung {:?}", i + 1, cols[4]))?,
+            pool: cols[5]
+                .parse()
+                .with_context(|| format!("{path:?}:{}: bad pool {:?}", i + 1, cols[5]))?,
+            latency_ms: f(6)?,
+            accuracy: f(7)?,
+            outcome: cols[8].to_string(),
+        });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::workload::{generate_arrivals, Pattern, WorkloadSpec};
 
     #[test]
-    fn roundtrip() {
+    fn roundtrip_is_exact() {
         let arrivals = generate_arrivals(&WorkloadSpec {
             base_qps: 10.0,
             duration_s: 20.0,
@@ -63,7 +211,7 @@ mod tests {
         let loaded = load_trace(&path).unwrap();
         assert_eq!(loaded.len(), arrivals.len());
         for (a, b) in loaded.iter().zip(&arrivals) {
-            assert!((a - b).abs() < 1e-5);
+            assert_eq!(a.to_bits(), b.to_bits(), "trace float must round-trip exactly");
         }
         let _ = std::fs::remove_file(&path);
     }
@@ -81,6 +229,49 @@ mod tests {
         let path = std::env::temp_dir().join("compass_trace_bad2.csv");
         std::fs::write(&path, "arrival_s\nnot-a-number\n").unwrap();
         assert!(load_trace(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn request_log_roundtrips_exactly() {
+        let topo = Topology::uniform(2, 2);
+        let records = vec![
+            RequestRecord {
+                id: 0,
+                arrival_ms: 1.0 / 3.0,
+                start_ms: 0.4000000000000001,
+                finish_ms: 7.7,
+                config_idx: 2,
+                accuracy: 0.913,
+                success: None,
+            },
+            RequestRecord {
+                id: 1,
+                arrival_ms: 2.25,
+                start_ms: 2.25,
+                finish_ms: 9.0,
+                config_idx: 0,
+                accuracy: 0.55,
+                success: Some(true),
+            },
+        ];
+        let path = std::env::temp_dir().join("compass_reqlog_test.csv");
+        save_request_log(&path, &records, &topo).unwrap();
+        let rows = load_request_log(&path).unwrap();
+        assert_eq!(rows.len(), records.len());
+        for (row, rec) in rows.iter().zip(&records) {
+            assert_eq!(&row.to_record(), rec);
+            assert_eq!(row.pool, topo.pool_for_rung(rec.config_idx));
+            assert_eq!(row.latency_ms.to_bits(), (rec.finish_ms - rec.arrival_ms).to_bits());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn request_log_rejects_bad_header() {
+        let path = std::env::temp_dir().join("compass_reqlog_bad.csv");
+        std::fs::write(&path, "id,arrival_ms\n1,2.0\n").unwrap();
+        assert!(load_request_log(&path).is_err());
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,306 @@
+//! Integration: the scenario matrix subsystem — generator statistics,
+//! deterministic replay, fault conservation in both executors, and the
+//! sweep harness's JSON artifact.
+//!
+//! The acceptance pin of the subsystem lives here: the same
+//! [`ScenarioSpec`] (spec + seed) produces bit-identical arrivals on
+//! every call, and that one vector drives the live `serve()` executor
+//! and the DES `simulate_topology` with every request accounted for in
+//! both worlds (`served + rejected == arrivals`).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::Result;
+use compass::experiments::scenarios::{
+    faults_for, run_sweep, ScenarioOpts, SCENARIOS, SCHEMA, SMOKE_SCENARIOS, SMOKE_TOPOLOGIES,
+    TOPOLOGIES,
+};
+use compass::experiments::ExperimentCtx;
+use compass::planner::{derive_plan, AqmParams, LatencyProfile, Plan, ProfiledConfig};
+use compass::serving::executor::RequestEngine;
+use compass::serving::{parse_pools, serve, Discipline, ServeOptions, StaticPolicy, Topology};
+use compass::sim::{simulate_topology, simulate_topology_faults, LognormalService};
+use compass::util::json::Json;
+use compass::workflows::ExecOutcome;
+use compass::workload::trace::{load_request_log, load_trace};
+use compass::workload::{empirical_qps, Fault, FaultPlan, Generator, ScenarioSpec};
+
+/// Synthetic two-rung plan (fast 20 ms, accurate 90 ms) — no offline
+/// search needed, same idiom as the engine parity suite.
+fn plan2() -> Plan {
+    let mk = |label: &str, acc: f64, mean: f64, p95: f64| ProfiledConfig {
+        config: vec![],
+        label: label.into(),
+        accuracy: acc,
+        latency: LatencyProfile { mean_ms: mean, p50_ms: mean, p95_ms: p95, runs: 10 },
+    };
+    derive_plan(
+        &[mk("fast", 0.76, 20.0, 28.0), mk("accurate", 0.85, 90.0, 120.0)],
+        AqmParams::for_slo(300.0),
+    )
+}
+
+fn steady_arrivals(qps: f64, dur: f64, seed: u64) -> Vec<f64> {
+    ScenarioSpec { generator: Generator::Constant { qps }, duration_s: dur, seed }.arrivals()
+}
+
+#[test]
+fn diurnal_mean_rate_matches_base() {
+    // Whole sinusoid periods integrate to the base rate.
+    let spec = ScenarioSpec {
+        generator: Generator::Diurnal { qps: 6.0, amplitude: 0.6, period_s: 150.0, phase_s: 0.0 },
+        duration_s: 600.0,
+        seed: 13,
+    };
+    let qps = empirical_qps(&spec.arrivals(), 600.0);
+    assert!((qps - 6.0).abs() < 0.5, "diurnal mean qps {qps} vs base 6.0");
+}
+
+#[test]
+fn scenario_arrivals_replay_bit_identically() {
+    let spec = ScenarioSpec {
+        generator: Generator::Mmpp { qps: vec![2.0, 14.0], mean_dwell_s: vec![12.0, 4.0] },
+        duration_s: 120.0,
+        seed: 9,
+    };
+    let a = spec.arrivals();
+    let b = spec.arrivals();
+    assert_eq!(a.len(), b.len());
+    assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    let mut other = spec.clone();
+    other.seed = 10;
+    assert_ne!(a, other.arrivals(), "different seeds must decorrelate");
+}
+
+#[test]
+fn empty_fault_plan_reproduces_the_engine_bit_for_bit() {
+    let plan = plan2();
+    let arr = steady_arrivals(12.0, 60.0, 5);
+    let svc = LognormalService::from_plan(&plan, 0.25);
+    let topo = Topology::uniform(2, 2);
+    let mut p1 = compass::serving::ElasticoPolicy::new(plan.clone());
+    let base = simulate_topology(&arr, &plan, &mut p1, &svc, 42, &topo, 1);
+    let mut p2 = compass::serving::ElasticoPolicy::new(plan.clone());
+    let none = FaultPlan::none();
+    let faulted = simulate_topology_faults(&arr, &plan, &mut p2, &svc, 42, &topo, 1, &none);
+    assert_eq!(faulted.rejected, 0);
+    assert_eq!(base.records.len(), faulted.records.len());
+    for (x, y) in base.records.iter().zip(&faulted.records) {
+        assert_eq!(x, y, "empty FaultPlan must not perturb the engine");
+    }
+    assert_eq!(base.switches.len(), faulted.switches.len());
+    assert_eq!(base.steals, faulted.steals);
+    assert_eq!(base.spills, faulted.spills);
+}
+
+#[test]
+fn des_pool_dark_conserves_and_spills() {
+    let pools = parse_pools("fast:2:1.0,acc:2:2.0").unwrap();
+    let topo = Topology::from_pools(&pools, 0.0).unwrap();
+    let plan = plan2();
+    let svc = LognormalService::from_plan(&plan, 0.10);
+    let arr = steady_arrivals(8.0, 60.0, 5);
+    let faults = FaultPlan::none().with(Fault::PoolDark { pool: 1, at_s: 20.0 });
+    // Static-Accurate routes everything to the (soon dark) slow pool.
+    let mut p = StaticPolicy::new(1, "acc");
+    let out = simulate_topology_faults(&arr, &plan, &mut p, &svc, 42, &topo, 1, &faults);
+    assert_eq!(
+        out.records.len() + out.rejected,
+        arr.len(),
+        "pool-dark run must account for every arrival"
+    );
+    assert!(out.spills >= 1, "alive pool never absorbed the dark pool's backlog");
+    assert!(!out.records.is_empty());
+    // Fault-free control: nothing rejected.
+    let mut p0 = StaticPolicy::new(1, "acc");
+    let none = FaultPlan::none();
+    let ok = simulate_topology_faults(&arr, &plan, &mut p0, &svc, 42, &topo, 1, &none);
+    assert_eq!(ok.rejected, 0);
+    assert_eq!(ok.records.len(), arr.len());
+}
+
+#[test]
+fn des_queue_squeeze_conserves_and_rejects() {
+    let plan = plan2();
+    let svc = LognormalService::from_plan(&plan, 0.10);
+    let topo = Topology::uniform(1, 1);
+    // Overload the 90 ms rung (ρ ≈ 1.1) so the squeezed bound bites.
+    let arr = steady_arrivals(12.0, 60.0, 5);
+    let faults =
+        FaultPlan::none().with(Fault::QueueSqueeze { capacity: 2, from_s: 10.0, to_s: 50.0 });
+    let mut p = StaticPolicy::new(1, "acc");
+    let out = simulate_topology_faults(&arr, &plan, &mut p, &svc, 42, &topo, 1, &faults);
+    assert!(out.rejected > 0, "squeeze to depth 2 under overload must reject");
+    assert_eq!(out.records.len() + out.rejected, arr.len());
+    let mut p0 = StaticPolicy::new(1, "acc");
+    let none = FaultPlan::none();
+    let ok = simulate_topology_faults(&arr, &plan, &mut p0, &svc, 42, &topo, 1, &none);
+    assert_eq!(ok.rejected, 0);
+}
+
+/// Scripted engine that sleeps out its service time.
+struct SleepEngine {
+    service_ms: f64,
+}
+
+impl RequestEngine for SleepEngine {
+    fn execute(&mut self, _idx: usize) -> Result<ExecOutcome> {
+        std::thread::sleep(Duration::from_secs_f64(self.service_ms / 1e3));
+        Ok(ExecOutcome { accuracy: 0.8, success: None })
+    }
+
+    fn rungs(&self) -> usize {
+        2
+    }
+}
+
+#[test]
+fn scenario_arrivals_drive_live_and_des_identically() {
+    // The acceptance pin: one ScenarioSpec, two executors. The spec's
+    // arrivals are bit-identical across calls, and both the live server
+    // and the DES consume that exact vector — every request id shows up
+    // (served or rejected) in both worlds.
+    let spec = ScenarioSpec {
+        generator: Generator::FlashCrowd {
+            qps: 30.0,
+            peak_factor: 3.0,
+            at_s: 0.8,
+            ramp_s: 0.2,
+            hold_s: 0.4,
+        },
+        duration_s: 2.0,
+        seed: 42,
+    };
+    let arr = spec.arrivals();
+    let again = spec.arrivals();
+    assert!(arr.iter().zip(&again).all(|(x, y)| x.to_bits() == y.to_bits()));
+    assert!(!arr.is_empty());
+
+    // DES side: record arrivals are the input times (ms), bit for bit.
+    let plan = plan2();
+    let svc = LognormalService::from_plan(&plan, 0.10);
+    let topo = Topology::uniform(2, 2);
+    let mut p = StaticPolicy::new(0, "fast");
+    let sim = simulate_topology(&arr, &plan, &mut p, &svc, 42, &topo, 1);
+    assert_eq!(sim.records.len(), arr.len());
+    let mut sim_records = sim.records.clone();
+    sim_records.sort_by_key(|r| r.id);
+    for (r, t) in sim_records.iter().zip(&arr) {
+        assert_eq!(r.arrival_ms.to_bits(), (t * 1e3).to_bits());
+    }
+
+    // Live side: same vector, every arrival accounted for.
+    let out = serve(
+        move || Ok(SleepEngine { service_ms: 1.0 }),
+        Box::new(StaticPolicy::new(0, "fast")),
+        &arr,
+        &ServeOptions {
+            workers: 2,
+            discipline: Discipline::ShardedSteal,
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(out.records.len() + out.rejected, arr.len());
+    let mut ids: Vec<u64> = out.records.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), out.records.len(), "live run duplicated a request id");
+}
+
+#[test]
+fn live_pool_dark_conserves_every_arrival() {
+    // Two pools; the accurate pool goes dark mid-run. The fast pool's
+    // spill-when-dry absorbs what it can while the queue is open; the
+    // dark pool's drain counts the rest as rejected — either way
+    // served + rejected == arrivals.
+    let pools = parse_pools("fast:2:1.0,acc:2:1.0").unwrap();
+    let n = 150;
+    let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.003).collect();
+    let out = serve(
+        move || Ok(SleepEngine { service_ms: 2.0 }),
+        Box::new(StaticPolicy::new(1, "acc")),
+        &arrivals,
+        &ServeOptions {
+            pools: pools.clone(),
+            faults: FaultPlan::none().with(Fault::PoolDark { pool: 1, at_s: 0.2 }),
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(
+        out.records.len() + out.rejected,
+        n,
+        "live pool-dark run must account for every arrival"
+    );
+    // Post-dark arrivals either spill to the alive pool or get rejected
+    // by the dark pool's drain — which of the two wins is timing, but
+    // one of them must have fired.
+    assert!(out.spills >= 1 || out.rejected >= 1, "dark pool kept serving its whole load");
+}
+
+#[test]
+fn sweep_writes_schema_valid_json() {
+    let out_dir = std::env::temp_dir().join("compass_scenarios_test");
+    let out = out_dir.join("BENCH_scenarios.json");
+    let ctx = ExperimentCtx {
+        duration_s: 8.0,
+        seed: 5,
+        out_dir: out_dir.clone(),
+        ..ExperimentCtx::default()
+    };
+    let opts = ScenarioOpts {
+        scenarios: vec!["steady".into(), "pool_dark".into()],
+        topos: vec!["pooled-2x2".into()],
+        policies: vec!["Static-Accurate".into()],
+        out: out.clone(),
+        ..ScenarioOpts::default()
+    };
+    run_sweep(&ctx, &opts).unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    assert_eq!(doc.get("schema").unwrap().as_str(), Some(SCHEMA));
+    let cells = doc.get("cells").unwrap().as_obj().unwrap();
+    assert_eq!(cells.len(), 2);
+    for (key, cell) in cells {
+        let f = |k: &str| cell.get(k).unwrap().as_f64().unwrap();
+        assert_eq!(f("served") + f("rejected"), f("arrivals"), "conservation violated in {key}");
+        let comp = f("slo_compliance");
+        assert!((0.0..=1.0).contains(&comp), "{key}: compliance {comp}");
+        assert!(f("p50_ms") <= f("p95_ms") && f("p95_ms") <= f("p99_ms"), "{key}");
+    }
+    let dark = &cells["pool_dark|pooled-2x2|Static-Accurate"];
+    assert_ne!(dark.get("faults").unwrap().as_str(), Some("none"));
+    assert!(dark.get("spills").unwrap().as_f64().unwrap() >= 1.0);
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+#[test]
+fn smoke_matrix_is_a_subset_and_meets_the_floor() {
+    assert!(SMOKE_SCENARIOS.iter().all(|s| SCENARIOS.contains(s)));
+    assert!(SMOKE_TOPOLOGIES.iter().all(|t| TOPOLOGIES.contains(t)));
+    // The acceptance floor: ≥ 5 scenario shapes × ≥ 2 topologies even
+    // in the reduced CI matrix.
+    assert!(SMOKE_SCENARIOS.len() >= 5);
+    assert!(SMOKE_TOPOLOGIES.len() >= 2);
+    // Every smoke fault path is exercised: pool_dark needs the second
+    // pool of pooled-2x2, squeeze and slowdown apply everywhere.
+    assert!(!faults_for("pool_dark", 30.0, 2).is_empty());
+    assert!(!faults_for("squeeze", 30.0, 1).is_empty());
+}
+
+#[test]
+fn cookbook_fixture_traces_load() {
+    let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/fixtures"));
+    for name in SCENARIOS {
+        let arr = load_trace(&dir.join(format!("{name}.csv"))).unwrap();
+        assert!(!arr.is_empty(), "fixture {name} is empty");
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]), "fixture {name} unsorted");
+    }
+    let log = load_request_log(&dir.join("pool_dark_log.csv")).unwrap();
+    assert!(!log.is_empty());
+    for row in &log {
+        assert!(row.finish_ms >= row.start_ms && row.start_ms >= row.arrival_ms);
+        assert!(["ok", "fail", "na"].contains(&row.outcome.as_str()));
+    }
+}
