@@ -7,14 +7,26 @@ any violation is a hard failure:
 
 * schema tag is `compass.scenarios.v1`;
 * every cell key is `scenario|topology|policy` (three parts);
-* conservation: `served + rejected == arrivals` and `arrivals > 0` —
-  the executor (live or DES) accounted for every generated request;
-* `slo_compliance` and `mean_accuracy` lie in [0, 1];
+* conservation: `served + rejected + failed == arrivals` and
+  `arrivals > 0` — the executor (live or DES) accounted for every
+  generated request, including ones that failed terminally under chaos;
+* `slo_compliance`, `mean_accuracy` and `slo_goodput` lie in [0, 1],
+  and goodput never exceeds compliance (it is compliance discounted by
+  the served fraction);
+* the resilience counters (`failed`, `retries`, `panics_recovered`,
+  `timeouts`, `breaker_trips`, `failovers`) are present and
+  non-negative, and the `resilience` tag is `on`/`off`;
 * latency quantiles are ordered: `p50 <= p95 <= p99`;
 * `pool_dark` cells on a multi-pool topology injected their fault
   (`faults != "none"`) and the alive pool absorbed spilled work
   (`spills >= 1`);
-* `squeeze` / `slowdown` cells injected their fault.
+* `squeeze` / `slowdown` cells injected their fault;
+* the chaos pair: `dark_recover` runs resilience-on (and its
+  Static-Accurate cell on a multi-pool topology must fail over at
+  least once), `dark_drain` runs the same fault resilience-off with
+  zero retries; `flaky` runs resilience-on and on a single-pool
+  topology (where the flaky pool is unavoidable) must retry at least
+  once.
 
 `--min-scenarios N` / `--min-topos N` additionally assert matrix
 coverage (distinct scenario / topology counts), so the CI smoke run
@@ -37,27 +49,39 @@ def check_cell(key: str, cell: dict) -> list:
         errors.append(f"{key}: cell key is not scenario|topology|policy")
         return errors
     scenario = parts[0]
+    policy = parts[2]
 
     arrivals = cell.get("arrivals", 0)
     served = cell.get("served", 0)
     rejected = cell.get("rejected", 0)
+    failed = cell.get("failed", 0)
     if arrivals <= 0:
         errors.append(f"{key}: no arrivals generated")
-    if served + rejected != arrivals:
+    if served + rejected + failed != arrivals:
         errors.append(
             f"{key}: conservation violated — served {served} + rejected "
-            f"{rejected} != arrivals {arrivals}")
+            f"{rejected} + failed {failed} != arrivals {arrivals}")
 
-    for field in ("slo_compliance", "mean_accuracy"):
+    for field in ("slo_compliance", "mean_accuracy", "slo_goodput"):
         val = cell.get(field, -1.0)
         if not 0.0 <= val <= 1.0:
             errors.append(f"{key}: {field} {val} outside [0, 1]")
+    if cell.get("slo_goodput", 0.0) > cell.get("slo_compliance", 0.0) + 1e-9:
+        errors.append(f"{key}: slo_goodput exceeds slo_compliance")
+    for field in ("failed", "retries", "panics_recovered", "timeouts",
+                  "breaker_trips", "failovers"):
+        if cell.get(field, -1) < 0:
+            errors.append(f"{key}: counter {field} missing or negative")
+    if cell.get("resilience") not in ("on", "off"):
+        errors.append(f"{key}: resilience tag {cell.get('resilience')!r} "
+                      "is not on/off")
     p50, p95, p99 = (cell.get(q, 0.0) for q in ("p50_ms", "p95_ms", "p99_ms"))
     if not p50 <= p95 <= p99:
         errors.append(f"{key}: quantiles unordered: {p50} / {p95} / {p99}")
 
     faults = cell.get("faults", "none")
-    if scenario == "pool_dark" and cell.get("n_pools", 1) >= 2:
+    multi_pool = cell.get("n_pools", 1) >= 2
+    if scenario == "pool_dark" and multi_pool:
         if faults == "none":
             errors.append(f"{key}: pool_dark cell ran without its fault")
         if cell.get("spills", 0) < 1:
@@ -65,6 +89,30 @@ def check_cell(key: str, cell: dict) -> list:
                           "alive pool")
     if scenario in ("squeeze", "slowdown") and faults == "none":
         errors.append(f"{key}: {scenario} cell ran without its fault")
+
+    # The chaos pair + the flaky window (resilience-plane cells).
+    if scenario == "dark_recover":
+        if cell.get("resilience") != "on":
+            errors.append(f"{key}: dark_recover must run resilience-on")
+        if multi_pool and faults == "none":
+            errors.append(f"{key}: dark_recover cell ran without its fault")
+        if multi_pool and policy == "Static-Accurate" \
+                and cell.get("failovers", 0) < 1:
+            errors.append(f"{key}: dark window never failed over to the "
+                          "surviving pool")
+    if scenario == "dark_drain":
+        if cell.get("resilience") != "off":
+            errors.append(f"{key}: dark_drain must run resilience-off")
+        if cell.get("retries", 0) != 0:
+            errors.append(f"{key}: dark_drain retried with resilience off")
+    if scenario == "flaky":
+        if cell.get("resilience") != "on":
+            errors.append(f"{key}: flaky must run resilience-on")
+        if faults == "none":
+            errors.append(f"{key}: flaky cell ran without its fault")
+        if not multi_pool and cell.get("retries", 0) < 1:
+            errors.append(f"{key}: flaky window on the only pool never "
+                          "retried")
     return errors
 
 

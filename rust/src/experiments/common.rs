@@ -545,9 +545,32 @@ pub fn simulate_ctx_faults<S: crate::sim::ServiceModel>(
     svc: &S,
     faults: &crate::workload::FaultPlan,
 ) -> Result<crate::sim::SimOutcome> {
+    simulate_ctx_resilient(
+        ctx,
+        arrivals,
+        plan,
+        policy,
+        svc,
+        faults,
+        &crate::serving::ResilienceConfig::default(),
+    )
+}
+
+/// [`simulate_ctx_faults`] with the resilience plane configured — the
+/// chaos-cell entry point. The disabled config reproduces
+/// [`simulate_ctx_faults`] bit-for-bit (which delegates here).
+pub fn simulate_ctx_resilient<S: crate::sim::ServiceModel>(
+    ctx: &ExperimentCtx,
+    arrivals: &[f64],
+    plan: &Plan,
+    policy: &mut Box<dyn ScalingPolicy>,
+    svc: &S,
+    faults: &crate::workload::FaultPlan,
+    resilience: &crate::serving::ResilienceConfig,
+) -> Result<crate::sim::SimOutcome> {
     let topo = ctx.topology()?;
     let mut shim = Shim(policy);
-    Ok(crate::sim::simulate_topology_faults(
+    Ok(crate::sim::simulate_topology_resilient(
         arrivals,
         plan,
         &mut shim,
@@ -556,6 +579,7 @@ pub fn simulate_ctx_faults<S: crate::sim::ServiceModel>(
         &topo,
         ctx.batch.max(1),
         faults,
+        resilience,
     ))
 }
 

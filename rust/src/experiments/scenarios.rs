@@ -17,13 +17,14 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Result};
 
 use super::common::{
-    ctx_base_qps, make_policy, offline_phase_ctx, simulate_ctx_faults, ExperimentCtx, SLO_FACTORS,
+    ctx_base_qps, make_policy, offline_phase_ctx, simulate_ctx_resilient, ExperimentCtx,
+    SLO_FACTORS,
 };
 use crate::metrics::RunSummary;
 use crate::planner::{Plan, ThresholdMode};
 use crate::runtime::artifacts_dir;
 use crate::serving::executor::WorkflowEngine;
-use crate::serving::{parse_pools, serve, Discipline, ServeOptions};
+use crate::serving::{parse_pools, serve, Discipline, ResilienceConfig, ServeOptions};
 use crate::sim::{LognormalService, ParetoService};
 use crate::util::csv::CsvWriter;
 use crate::util::json::Json;
@@ -35,7 +36,7 @@ use crate::workload::{Fault, FaultPlan, Generator, Pattern, ScenarioSpec};
 pub const SCHEMA: &str = "compass.scenarios.v1";
 
 /// Every scenario shape of the matrix, in cookbook order.
-pub const SCENARIOS: [&str; 9] = [
+pub const SCENARIOS: [&str; 12] = [
     "steady",
     "diurnal",
     "flash_crowd",
@@ -45,11 +46,25 @@ pub const SCENARIOS: [&str; 9] = [
     "pool_dark",
     "slowdown",
     "squeeze",
+    "dark_recover",
+    "dark_drain",
+    "flaky",
 ];
 
-/// The CI smoke subset: five shapes covering the steady baseline, both
-/// burst families and every fault path that the gate asserts on.
-pub const SMOKE_SCENARIOS: [&str; 5] = ["steady", "flash_crowd", "mmpp", "pool_dark", "squeeze"];
+/// The CI smoke subset: the steady baseline, both burst families, every
+/// fault path the gate asserts on, and the chaos cells (the windowed
+/// dark failover/drain pair — which the ratio invariant compares on
+/// identical arrivals — plus the flaky-engine retry cell).
+pub const SMOKE_SCENARIOS: [&str; 8] = [
+    "steady",
+    "flash_crowd",
+    "mmpp",
+    "pool_dark",
+    "squeeze",
+    "dark_recover",
+    "dark_drain",
+    "flaky",
+];
 
 /// Named dispatch topologies of the matrix.
 pub const TOPOLOGIES: [&str; 3] = ["central-k1", "uniform-k4", "pooled-2x2"];
@@ -90,6 +105,9 @@ pub struct ScenarioOpts {
     /// Fault-plan override applied to every cell (default: each
     /// scenario's own [`faults_for`] plan).
     pub faults: Option<FaultPlan>,
+    /// Resilience override applied to every cell (default: each
+    /// scenario's own [`resilience_for`] profile).
+    pub resilience: Option<ResilienceConfig>,
 }
 
 impl Default for ScenarioOpts {
@@ -104,6 +122,7 @@ impl Default for ScenarioOpts {
             log_dir: None,
             replay: None,
             faults: None,
+            resilience: None,
         }
     }
 }
@@ -120,13 +139,26 @@ pub fn name_salt(name: &str) -> u64 {
     h
 }
 
+/// The arrival-seed salt a scenario actually uses. Almost always its
+/// own [`name_salt`]; the one exception is the windowed-dark pair
+/// `dark_recover` / `dark_drain`, which share a salt so the failover
+/// cell and the drain-reject cell run on *identical* arrivals — the
+/// scenario-gate ratio invariant compares them head-to-head.
+pub fn arrival_salt(name: &str) -> u64 {
+    match name {
+        "dark_recover" | "dark_drain" => name_salt("dark_window"),
+        other => name_salt(other),
+    }
+}
+
 /// The generator of a named scenario at base rate `qps` over `dur`
 /// seconds. Shapes are expressed relative to the run length so the same
 /// scenario stresses a 30 s smoke cell and a 180 s nightly cell alike.
 pub fn generator_for(name: &str, qps: f64, dur: f64) -> Result<Generator> {
     Ok(match name {
         // Poisson baseline at the reference operating point (ρ ≈ 0.45).
-        "steady" | "heavy_tail" | "pool_dark" | "slowdown" => Generator::Constant { qps },
+        "steady" | "heavy_tail" | "pool_dark" | "slowdown" | "dark_recover" | "dark_drain"
+        | "flaky" => Generator::Constant { qps },
         // One full sinusoidal swing ±60% around the base rate.
         "diurnal" => Generator::Diurnal {
             qps,
@@ -170,6 +202,28 @@ pub fn faults_for(name: &str, dur: f64, n_pools: usize) -> FaultPlan {
         "pool_dark" if n_pools > 1 => FaultPlan::none().with(Fault::PoolDark {
             pool: n_pools - 1,
             at_s: 0.4 * dur,
+            until_s: None,
+        }),
+        // The windowed-dark pair: the same dark window over the middle
+        // third of the run; `dark_recover` serves it with the
+        // resilience plane on (failover + recovery), `dark_drain` with
+        // it off (the PR-6 pause-out-the-window behavior) — identical
+        // arrivals (see [`arrival_salt`]), so the gate's ratio
+        // invariant compares exactly the resilience response.
+        "dark_recover" | "dark_drain" if n_pools > 1 => {
+            FaultPlan::none().with(Fault::PoolDark {
+                pool: n_pools - 1,
+                at_s: dur / 3.0,
+                until_s: Some(2.0 * dur / 3.0),
+            })
+        }
+        // A quarter of the first pool's requests fail over the middle
+        // third of the run: the retry/breaker driver.
+        "flaky" => FaultPlan::none().with(Fault::EngineFlaky {
+            pool: 0,
+            rate: 0.25,
+            from_s: dur / 3.0,
+            to_s: 2.0 * dur / 3.0,
         }),
         "slowdown" => FaultPlan::none().with(Fault::Slowdown {
             pool: 0,
@@ -183,6 +237,18 @@ pub fn faults_for(name: &str, dur: f64, n_pools: usize) -> FaultPlan {
             to_s: 0.7 * dur,
         }),
         _ => FaultPlan::none(),
+    }
+}
+
+/// The resilience profile a named scenario runs with. The chaos cells
+/// that exercise the response (`dark_recover`, `flaky`) enable the
+/// plane; every other cell — including `dark_drain`, the drain-reject
+/// baseline of the ratio invariant — runs disabled, which is pinned
+/// bit-identical to the pre-resilience runtime.
+pub fn resilience_for(name: &str) -> ResilienceConfig {
+    match name {
+        "dark_recover" | "flaky" => ResilienceConfig::enabled(),
+        _ => ResilienceConfig::default(),
     }
 }
 
@@ -233,6 +299,22 @@ pub struct CellOut {
     pub spills: u64,
     pub n_pools: usize,
     pub faults: String,
+    /// Terminal failures (extended conservation:
+    /// `served + rejected + failed == arrivals`).
+    pub failed: usize,
+    pub retries: u64,
+    pub panics_recovered: u64,
+    pub timeouts: u64,
+    pub breaker_trips: u64,
+    pub failovers: u64,
+    /// SLO-compliant *goodput*: `slo_compliance · served / arrivals`.
+    /// Unlike plain compliance — computed over survivors only, which
+    /// flatters a cell that rejects its hardest requests — goodput
+    /// charges every lost request, so it is the failover-vs-drain
+    /// comparison metric the ratio invariant gates on.
+    pub slo_goodput: f64,
+    /// `on`/`off` — the cell's resilience profile.
+    pub resilience: String,
 }
 
 impl CellOut {
@@ -257,11 +339,19 @@ impl CellOut {
             ("spills", Json::num(self.spills as f64)),
             ("n_pools", Json::num(self.n_pools as f64)),
             ("faults", Json::str(self.faults.clone())),
+            ("failed", Json::num(self.failed as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("panics_recovered", Json::num(self.panics_recovered as f64)),
+            ("timeouts", Json::num(self.timeouts as f64)),
+            ("breaker_trips", Json::num(self.breaker_trips as f64)),
+            ("failovers", Json::num(self.failovers as f64)),
+            ("slo_goodput", Json::num(self.slo_goodput)),
+            ("resilience", Json::str(self.resilience.clone())),
         ])
     }
 }
 
-const CSV_HEADER: [&str; 16] = [
+const CSV_HEADER: [&str; 24] = [
     "scenario",
     "topo",
     "policy",
@@ -278,6 +368,14 @@ const CSV_HEADER: [&str; 16] = [
     "spills",
     "n_pools",
     "faults",
+    "failed",
+    "retries",
+    "panics_recovered",
+    "timeouts",
+    "breaker_trips",
+    "failovers",
+    "slo_goodput",
+    "resilience",
 ];
 
 /// Run one scenario × topology × policy cell — the DES by default, the
@@ -293,12 +391,13 @@ pub fn run_matrix_cell(
     policy_name: &str,
     arrivals: &[f64],
     faults: &FaultPlan,
+    resilience: &ResilienceConfig,
     slo_ms: f64,
     log_dir: Option<&Path>,
 ) -> Result<CellOut> {
     let topo = ctx.topology()?;
     let mut policy = make_policy(plan, policy_name);
-    let (records, switches, rejected, steals, spills) = if ctx.live {
+    let (records, switches, rejected, steals, spills, counters) = if ctx.live {
         let space2 = space.clone();
         let plan2 = plan.clone();
         let seed = ctx.seed;
@@ -324,27 +423,62 @@ pub fn run_matrix_cell(
                 pools: ctx.pools.clone(),
                 spill_margin: ctx.spill_margin,
                 faults: faults.clone(),
+                resilience: resilience.clone(),
                 ..ServeOptions::default()
             },
         )?;
-        (out.records, out.switches, out.rejected, out.steals, out.spills)
+        (
+            out.records,
+            out.switches,
+            out.rejected,
+            out.steals,
+            out.spills,
+            (
+                out.failed,
+                out.retries,
+                out.panics_recovered,
+                out.timeouts,
+                out.breaker_trips,
+                out.failovers,
+            ),
+        )
     } else {
         // Heavy-tailed cells swap the lognormal service model for a
         // Pareto tail (α = 2.05: finite mean, near-infinite variance).
         let out = if scenario == "heavy_tail" {
             let svc = ParetoService::from_plan(plan, 2.05);
-            simulate_ctx_faults(ctx, arrivals, plan, &mut policy, &svc, faults)?
+            simulate_ctx_resilient(ctx, arrivals, plan, &mut policy, &svc, faults, resilience)?
         } else {
             let svc = LognormalService::from_plan(plan, 0.10);
-            simulate_ctx_faults(ctx, arrivals, plan, &mut policy, &svc, faults)?
+            simulate_ctx_resilient(ctx, arrivals, plan, &mut policy, &svc, faults, resilience)?
         };
-        (out.records, out.switches, out.rejected, out.steals, out.spills)
+        (
+            out.records,
+            out.switches,
+            out.rejected,
+            out.steals,
+            out.spills,
+            (
+                out.failed,
+                out.retries,
+                out.panics_recovered,
+                out.timeouts,
+                out.breaker_trips,
+                out.failovers,
+            ),
+        )
     };
+    let (failed, retries, panics_recovered, timeouts, breaker_trips, failovers) = counters;
     if let Some(dir) = log_dir {
         let file = format!("{scenario}__{topo_name}__{policy_name}.csv");
         save_request_log(&dir.join(file), &records, &topo)?;
     }
     let summary = RunSummary::compute(&records, &switches, slo_ms, plan.ladder.len());
+    let slo_goodput = if arrivals.is_empty() {
+        0.0
+    } else {
+        summary.slo_compliance * records.len() as f64 / arrivals.len() as f64
+    };
     Ok(CellOut {
         scenario: scenario.into(),
         topo: topo_name.into(),
@@ -362,6 +496,14 @@ pub fn run_matrix_cell(
         spills,
         n_pools: topo.n_pools(),
         faults: faults.describe(),
+        failed,
+        retries,
+        panics_recovered,
+        timeouts,
+        breaker_trips,
+        failovers,
+        slo_goodput,
+        resilience: if resilience.enabled { "on".into() } else { "off".into() },
     })
 }
 
@@ -379,7 +521,7 @@ pub fn save_scenario_trace(
     let spec = ScenarioSpec {
         generator: generator_for(scenario, qps, ctx.duration_s)?,
         duration_s: ctx.duration_s,
-        seed: ctx.seed ^ name_salt(scenario),
+        seed: ctx.seed ^ arrival_salt(scenario),
     };
     let arrivals = spec.arrivals();
     save_trace(path, &arrivals)?;
@@ -453,13 +595,17 @@ pub fn run_sweep(ctx: &ExperimentCtx, opts: &ScenarioOpts) -> Result<()> {
                 None => ScenarioSpec {
                     generator: generator_for(scenario, qps, ctx.duration_s)?,
                     duration_s: ctx.duration_s,
-                    seed: ctx.seed ^ name_salt(scenario),
+                    seed: ctx.seed ^ arrival_salt(scenario),
                 }
                 .arrivals(),
             };
             let faults = match &opts.faults {
                 Some(f) => f.clone(),
                 None => faults_for(scenario, ctx.duration_s, n_pools),
+            };
+            let resilience = match &opts.resilience {
+                Some(r) => r.clone(),
+                None => resilience_for(scenario),
             };
             for policy in &policies {
                 // As everywhere: Elastico adapts over the SLO-filtered
@@ -474,18 +620,21 @@ pub fn run_sweep(ctx: &ExperimentCtx, opts: &ScenarioOpts) -> Result<()> {
                     policy,
                     &arrivals,
                     &faults,
+                    &resilience,
                     slo,
                     opts.log_dir.as_deref(),
                 )?;
                 println!(
                     "  {:<17} {:<11} {:<15} comp {:>5.1}%  p95 {:>8.1} ms  \
-                     rej {:>5}  steal {:>6}  spill {:>5}",
+                     rej {:>5}  fail {:>4}  retry {:>4}  steal {:>6}  spill {:>5}",
                     cell.scenario,
                     cell.topo,
                     cell.policy,
                     cell.slo_compliance * 100.0,
                     cell.p95_ms,
                     cell.rejected,
+                    cell.failed,
+                    cell.retries,
                     cell.steals,
                     cell.spills
                 );
@@ -506,6 +655,14 @@ pub fn run_sweep(ctx: &ExperimentCtx, opts: &ScenarioOpts) -> Result<()> {
                     cell.spills.to_string(),
                     cell.n_pools.to_string(),
                     cell.faults.clone(),
+                    cell.failed.to_string(),
+                    cell.retries.to_string(),
+                    cell.panics_recovered.to_string(),
+                    cell.timeouts.to_string(),
+                    cell.breaker_trips.to_string(),
+                    cell.failovers.to_string(),
+                    format!("{:.4}", cell.slo_goodput),
+                    cell.resilience.clone(),
                 ])?;
                 cells.push(cell);
             }
@@ -560,6 +717,33 @@ mod tests {
         assert!(!faults_for("slowdown", 60.0, 1).is_empty());
         assert!(!faults_for("squeeze", 60.0, 1).is_empty());
         assert!(faults_for("steady", 60.0, 4).is_empty());
+        // The windowed-dark pair also needs a survivor pool; flaky
+        // works on any fleet (it targets pool 0's engine, not routing).
+        assert!(faults_for("dark_recover", 60.0, 1).is_empty());
+        assert!(!faults_for("dark_recover", 60.0, 2).is_empty());
+        assert!(!faults_for("flaky", 60.0, 1).is_empty());
+    }
+
+    #[test]
+    fn the_dark_pair_shares_arrivals_and_differs_only_in_resilience() {
+        // Identical fault plans + identical arrival salts: the ratio
+        // invariant compares the two cells on the same offered load.
+        assert_eq!(arrival_salt("dark_recover"), arrival_salt("dark_drain"));
+        assert_ne!(arrival_salt("dark_recover"), name_salt("dark_recover"));
+        assert_eq!(
+            faults_for("dark_recover", 60.0, 2).describe(),
+            faults_for("dark_drain", 60.0, 2).describe()
+        );
+        assert!(resilience_for("dark_recover").enabled);
+        assert!(!resilience_for("dark_drain").enabled);
+        assert!(resilience_for("flaky").enabled);
+        assert!(!resilience_for("steady").enabled);
+        // Every other scenario keeps its own salt.
+        for s in SCENARIOS {
+            if s != "dark_recover" && s != "dark_drain" {
+                assert_eq!(arrival_salt(s), name_salt(s));
+            }
+        }
     }
 
     #[test]

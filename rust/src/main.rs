@@ -169,7 +169,8 @@ fn print_help() {
          \x20 scenario    scenario matrix sweep -> BENCH_scenarios.json + results/scenarios.csv\n\
          \x20             [--smoke] [--duration S] [--slo MS] [--seed N] [--live]\n\
          \x20             [--scenarios a,b,..] [--topos x,y,..] [--policies p,q,..]\n\
-         \x20             [--faults dark:1@24,slow:0x2.5@20-40,squeeze:8@24-42]\n\
+         \x20             [--faults dark:1@24-60,slow:0x2.5@20-40,flaky:0x0.25@20-40]\n\
+         \x20             [--resilience on|off|on,max_retries=3,timeout_ms=500]\n\
          \x20             [--out FILE] [--log DIR] [--replay FILE] [--save-trace FILE]\n\
          \x20             [--list]  (cookbook: docs/SCENARIOS.md)\n\
          \x20 profile     per-component latency table over the artifacts [--live]\n"
@@ -406,6 +407,10 @@ fn cmd_scenario(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         Some(v) => Some(compass::workload::FaultPlan::parse(v)?),
         None => None,
     };
+    let resilience = match opts.get("resilience") {
+        Some(v) => Some(compass::serving::ResilienceConfig::parse(v)?),
+        None => None,
+    };
     let out = opts.get("out").map(String::as_str).unwrap_or("BENCH_scenarios.json");
     let sweep = scenarios::ScenarioOpts {
         smoke,
@@ -417,6 +422,7 @@ fn cmd_scenario(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         log_dir: opts.get("log").map(PathBuf::from),
         replay: opts.get("replay").map(PathBuf::from),
         faults,
+        resilience,
     };
     if let Some(path) = opts.get("save-trace") {
         let scenario = sweep.scenarios.first().map(String::as_str).unwrap_or("steady");

@@ -149,6 +149,7 @@ pub mod policy;
 pub mod pool;
 pub mod predictive;
 pub mod queue;
+pub mod resilience;
 pub mod server;
 pub mod topology;
 
@@ -157,5 +158,6 @@ pub use policy::{ScalingPolicy, StaticPolicy};
 pub use pool::{parse_pools, PoolSpec};
 pub use predictive::PredictivePolicy;
 pub use queue::{Discipline, Popped, QueueError, RequestQueue, ShardedQueue};
+pub use resilience::{HealthView, PoolHealth, ResilienceConfig};
 pub use server::{serve, serve_pools, ServeOptions, ServeOutcome};
 pub use topology::{Dispatch, Topology};

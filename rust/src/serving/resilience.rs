@@ -1,0 +1,521 @@
+//! The resilience plane's decision core: per-pool health, bounded
+//! retries with exponential backoff and a token-bucket budget, and a
+//! per-pool circuit breaker — all as pure, clock-agnostic state
+//! machines, following the dispatch-plane pattern
+//! ([`crate::serving::topology::Topology`]): *decisions* live here
+//! once, and the live server (`serving/server.rs`) and the DES engine
+//! (`sim/engine.rs`) drive the same machines with their own clocks
+//! (wall vs virtual), so a simulated chaos run replays the live
+//! runtime's failure handling deterministically.
+//!
+//! ## Failure lifecycle
+//!
+//! 1. **Detect** — a pool is [`PoolHealth::Dark`] while its fault
+//!    window is open ([`crate::workload::FaultPlan::is_dark_at_ms`]),
+//!    and [`PoolHealth::Degraded`] while its breaker is open (the
+//!    error/timeout EWMA crossed the trip threshold).
+//! 2. **Failover** — routing consults [`HealthView::routable`]; a dark
+//!    or degraded pool's rung band remaps to the nearest surviving pool
+//!    via [`Topology::failover_pool`] (the `spill_order` walk, costed
+//!    by `speed_factor`), and remaps back the instant health returns.
+//! 3. **Retry** — a failed/timed-out/panicked request re-enqueues
+//!    through normal routing with a fresh attempt number, gated by the
+//!    per-request cap and the run-wide token bucket
+//!    ([`HealthView::try_retry`]) and delayed by exponential backoff
+//!    ([`ResilienceConfig::backoff_ms`]). Budget-denied or cap-exhausted
+//!    requests are counted `failed` — never silently dropped — so the
+//!    extended conservation law `served + rejected + failed == arrivals`
+//!    holds under any chaos plan.
+//! 4. **Recover** — a dark window closing (or a half-open probe
+//!    succeeding) flips the pool back to [`PoolHealth::Healthy`] and
+//!    routing remaps back with it.
+//!
+//! ## Disabled-config parity is structural
+//!
+//! [`ResilienceConfig::default`] is disabled: every query degenerates
+//! to the pre-resilience constant (`routable` → always, `try_retry` →
+//! never, breakers never trip), and the executors skip the resilience
+//! branches entirely, so a disabled run is bit-identical to the
+//! pre-resilience runtime — the same precedent as margin-0 spill and
+//! the empty [`crate::workload::FaultPlan`], pinned by
+//! `tests/resilience.rs`.
+
+use super::topology::Topology;
+use crate::workload::FaultPlan;
+
+/// Resilience knobs of one run. `Default` is **disabled** — bit-for-bit
+/// the pre-resilience runtime (pinned).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResilienceConfig {
+    /// Master switch. Off (the default) short-circuits every decision
+    /// to its historical constant.
+    pub enabled: bool,
+    /// Max retry attempts per request (attempt 0 is the first try).
+    pub max_retries: u32,
+    /// Token-bucket retry budget: tokens the bucket holds at start
+    /// (and its cap). Each retry costs one token.
+    pub retry_budget: f64,
+    /// Bucket refill rate (tokens per second of run time) — bounds the
+    /// sustained retry rate so an error storm cannot amplify load
+    /// unboundedly.
+    pub retry_refill_per_s: f64,
+    /// Exponential backoff base (ms): attempt n waits `base · 2^(n-1)`
+    /// before re-enqueueing, capped at [`backoff_cap_ms`](Self::backoff_cap_ms).
+    pub backoff_base_ms: f64,
+    /// Backoff ceiling (ms).
+    pub backoff_cap_ms: f64,
+    /// Error-rate EWMA level that trips a pool's breaker open.
+    pub breaker_threshold: f64,
+    /// EWMA smoothing weight per completion (0 < α ≤ 1).
+    pub breaker_alpha: f64,
+    /// How long (ms) a tripped breaker stays open before a half-open
+    /// probe is allowed through.
+    pub breaker_open_ms: f64,
+    /// Minimum completions a pool must report before its EWMA may trip
+    /// the breaker (keeps one unlucky first request from darkening a
+    /// cold pool).
+    pub breaker_min_samples: u32,
+    /// Per-request execution timeout (ms); 0 disables. A completion
+    /// slower than this counts as a timeout failure (and feeds the
+    /// breaker EWMA like an error).
+    pub request_timeout_ms: f64,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            enabled: false,
+            max_retries: 2,
+            retry_budget: 64.0,
+            retry_refill_per_s: 16.0,
+            backoff_base_ms: 4.0,
+            backoff_cap_ms: 200.0,
+            breaker_threshold: 0.5,
+            breaker_alpha: 0.2,
+            breaker_open_ms: 1000.0,
+            breaker_min_samples: 8,
+            request_timeout_ms: 0.0,
+        }
+    }
+}
+
+impl ResilienceConfig {
+    /// The enabled profile with default tuning.
+    pub fn enabled() -> ResilienceConfig {
+        ResilienceConfig { enabled: true, ..ResilienceConfig::default() }
+    }
+
+    /// Backoff before retry attempt `attempt` (the first retry is
+    /// attempt 1): `base · 2^(attempt-1)`, capped.
+    pub fn backoff_ms(&self, attempt: u32) -> f64 {
+        if !self.enabled || attempt == 0 {
+            return 0.0;
+        }
+        let exp = (attempt - 1).min(30);
+        (self.backoff_base_ms * (1u64 << exp) as f64).min(self.backoff_cap_ms)
+    }
+
+    /// Did an execution that took `service_ms` time out?
+    pub fn timed_out(&self, service_ms: f64) -> bool {
+        self.enabled && self.request_timeout_ms > 0.0 && service_ms > self.request_timeout_ms
+    }
+
+    /// Parse `on` / `off` / a comma-separated `key=value` list
+    /// (`on,max_retries=3,breaker_threshold=0.4,timeout_ms=500`).
+    pub fn parse(s: &str) -> anyhow::Result<ResilienceConfig> {
+        let mut cfg = ResilienceConfig::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            match part {
+                "on" | "enabled" => cfg.enabled = true,
+                "off" | "disabled" => cfg.enabled = false,
+                _ => {
+                    let (key, val) = part.split_once('=').ok_or_else(|| {
+                        anyhow::anyhow!("resilience {part:?}: expected on|off|key=value")
+                    })?;
+                    let num = || -> anyhow::Result<f64> {
+                        val.parse()
+                            .map_err(|_| anyhow::anyhow!("resilience {part:?}: bad number"))
+                    };
+                    match key {
+                        "max_retries" => cfg.max_retries = num()? as u32,
+                        "retry_budget" => cfg.retry_budget = num()?,
+                        "retry_refill_per_s" => cfg.retry_refill_per_s = num()?,
+                        "backoff_ms" => cfg.backoff_base_ms = num()?,
+                        "backoff_cap_ms" => cfg.backoff_cap_ms = num()?,
+                        "breaker_threshold" => cfg.breaker_threshold = num()?,
+                        "breaker_alpha" => cfg.breaker_alpha = num()?,
+                        "breaker_open_ms" => cfg.breaker_open_ms = num()?,
+                        "breaker_min_samples" => cfg.breaker_min_samples = num()? as u32,
+                        "timeout_ms" => cfg.request_timeout_ms = num()?,
+                        other => anyhow::bail!("unknown resilience key {other:?}"),
+                    }
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// Per-pool health as routing sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolHealth {
+    /// Serving normally — routable.
+    Healthy,
+    /// Breaker open (error/timeout EWMA tripped): routed around until a
+    /// half-open probe succeeds.
+    Degraded,
+    /// Inside a fault-schedule dark window: not serving at all.
+    Dark,
+}
+
+/// Circuit-breaker state of one pool.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum BreakerState {
+    Closed,
+    /// Tripped at `since_ms`; no traffic until the open window elapses.
+    Open { since_ms: f64 },
+    /// One probe in flight; its outcome closes or re-opens.
+    HalfOpen,
+}
+
+/// Per-pool completion statistics + breaker.
+#[derive(Clone, Debug)]
+struct PoolStats {
+    ewma: f64,
+    samples: u32,
+    state: BreakerState,
+}
+
+/// The health view: per-pool error/timeout EWMAs, circuit breakers and
+/// the retry token bucket, updated from completion records and
+/// consulted by routing. One instance per run; the live server guards
+/// it with a mutex (off the per-request fast path), the DES owns it
+/// directly. All methods take explicit `now_ms`, so both clocks work.
+#[derive(Clone, Debug)]
+pub struct HealthView {
+    cfg: ResilienceConfig,
+    pools: Vec<PoolStats>,
+    tokens: f64,
+    last_refill_ms: f64,
+    /// Breaker trips (closed → open transitions) across the run.
+    pub breaker_trips: u64,
+}
+
+impl HealthView {
+    pub fn new(n_pools: usize, cfg: ResilienceConfig) -> HealthView {
+        let tokens = cfg.retry_budget;
+        HealthView {
+            cfg,
+            pools: vec![PoolStats { ewma: 0.0, samples: 0, state: BreakerState::Closed }; n_pools],
+            tokens,
+            last_refill_ms: 0.0,
+            breaker_trips: 0,
+        }
+    }
+
+    pub fn config(&self) -> &ResilienceConfig {
+        &self.cfg
+    }
+
+    /// The pool's health at `now_ms`: the fault schedule's dark windows
+    /// dominate, then the breaker.
+    pub fn health(&self, pool: usize, now_ms: f64, faults: &FaultPlan) -> PoolHealth {
+        if faults.is_dark_at_ms(pool, now_ms) {
+            return PoolHealth::Dark;
+        }
+        if !self.cfg.enabled {
+            return PoolHealth::Healthy;
+        }
+        match self.pools[pool].state {
+            BreakerState::Closed | BreakerState::HalfOpen => PoolHealth::Healthy,
+            BreakerState::Open { .. } => PoolHealth::Degraded,
+        }
+    }
+
+    /// May routing send new work to `pool` at `now_ms`? Transitions an
+    /// expired open breaker to half-open (admitting the probe), which
+    /// is why this takes `&mut self`. With resilience disabled this is
+    /// the historical constant `true`.
+    pub fn routable(&mut self, pool: usize, now_ms: f64, faults: &FaultPlan) -> bool {
+        if faults.is_dark_at_ms(pool, now_ms) {
+            return false;
+        }
+        if !self.cfg.enabled {
+            return true;
+        }
+        match self.pools[pool].state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open { since_ms } => {
+                if now_ms - since_ms >= self.cfg.breaker_open_ms {
+                    self.pools[pool].state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record one completion on `pool`: `ok = false` for an engine
+    /// error, panic or timeout. Updates the error EWMA and drives the
+    /// breaker state machine; returns `true` when this completion
+    /// tripped the breaker open.
+    pub fn record(&mut self, pool: usize, ok: bool, now_ms: f64) -> bool {
+        if !self.cfg.enabled {
+            return false;
+        }
+        let a = self.cfg.breaker_alpha.clamp(1e-6, 1.0);
+        let st = &mut self.pools[pool];
+        st.samples = st.samples.saturating_add(1);
+        st.ewma += a * ((if ok { 0.0 } else { 1.0 }) - st.ewma);
+        match st.state {
+            BreakerState::HalfOpen => {
+                if ok {
+                    // Probe succeeded: close and forgive the history.
+                    st.state = BreakerState::Closed;
+                    st.ewma = 0.0;
+                } else {
+                    st.state = BreakerState::Open { since_ms: now_ms };
+                }
+                false
+            }
+            BreakerState::Closed
+                if st.ewma > self.cfg.breaker_threshold
+                    && st.samples >= self.cfg.breaker_min_samples =>
+            {
+                st.state = BreakerState::Open { since_ms: now_ms };
+                self.breaker_trips += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// May a request on retry attempt `attempt` (1-based) re-enqueue?
+    /// Checks the per-request cap, then spends one token from the
+    /// budget bucket (refilled at the configured rate). With resilience
+    /// disabled this is the historical constant `false` — failures are
+    /// terminal.
+    pub fn try_retry(&mut self, attempt: u32, now_ms: f64) -> bool {
+        if !self.cfg.enabled || attempt > self.cfg.max_retries {
+            return false;
+        }
+        // Monotone refill (live threads may observe slightly unordered
+        // wall clocks; never refill backwards).
+        if now_ms > self.last_refill_ms {
+            let dt_s = (now_ms - self.last_refill_ms) / 1e3;
+            self.tokens = (self.tokens + dt_s * self.cfg.retry_refill_per_s)
+                .min(self.cfg.retry_budget.max(1.0));
+            self.last_refill_ms = now_ms;
+        }
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl Topology {
+    /// The nearest surviving pool to fail `from`'s traffic over to:
+    /// walk [`spill_order`](Topology::spill_order) (the same victim
+    /// order the spill plane uses), keep the routable candidates, and
+    /// pick the fastest (lowest `speed_factor` — the spill gate's
+    /// costing), breaking ties by walk order. `None` when no other
+    /// pool is routable.
+    pub fn failover_pool(
+        &self,
+        from: usize,
+        mut routable: impl FnMut(usize) -> bool,
+    ) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for q in self.spill_order(from) {
+            if !routable(q) {
+                continue;
+            }
+            best = match best {
+                Some(b) if self.speed(q) >= self.speed(b) => Some(b),
+                _ => Some(q),
+            };
+        }
+        best
+    }
+
+    /// Health-aware rung-band routing: [`pool_for_rung`](Topology::pool_for_rung),
+    /// failing over to the nearest surviving pool when the band's home
+    /// pool is dark or degraded. Returns `(pool, failed_over)`. With
+    /// every pool routable this is exactly `pool_for_rung` (the
+    /// disabled-resilience path never calls in with a false predicate).
+    pub fn pool_for_rung_routable(
+        &self,
+        rung: usize,
+        mut routable: impl FnMut(usize) -> bool,
+    ) -> (usize, bool) {
+        let home = self.pool_for_rung(rung);
+        if routable(home) {
+            return (home, false);
+        }
+        match self.failover_pool(home, routable) {
+            Some(p) => (p, true),
+            // Nowhere to go: keep the home pool (its drain/reject
+            // accounting still conserves every request).
+            None => (home, false),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::pool::parse_pools;
+    use crate::workload::Fault;
+
+    fn enabled() -> ResilienceConfig {
+        ResilienceConfig::enabled()
+    }
+
+    #[test]
+    fn disabled_config_is_inert() {
+        let cfg = ResilienceConfig::default();
+        assert!(!cfg.enabled);
+        let mut hv = HealthView::new(2, cfg);
+        let plan = FaultPlan::none();
+        assert!(hv.routable(0, 1e6, &plan));
+        assert_eq!(hv.health(0, 1e6, &plan), PoolHealth::Healthy);
+        assert!(!hv.try_retry(1, 1e6), "disabled: failures are terminal");
+        for _ in 0..100 {
+            assert!(!hv.record(0, false, 1.0), "disabled: breaker never trips");
+        }
+        assert_eq!(hv.breaker_trips, 0);
+        assert_eq!(hv.config().backoff_ms(3), 0.0);
+        assert!(!hv.config().timed_out(1e9));
+    }
+
+    #[test]
+    fn dark_windows_dominate_health() {
+        let plan =
+            FaultPlan::none().with(Fault::PoolDark { pool: 1, at_s: 10.0, until_s: Some(20.0) });
+        let mut hv = HealthView::new(2, enabled());
+        assert_eq!(hv.health(1, 9_999.0, &plan), PoolHealth::Healthy);
+        assert_eq!(hv.health(1, 15_000.0, &plan), PoolHealth::Dark);
+        assert!(!hv.routable(1, 15_000.0, &plan));
+        // Recovery: the instant the window closes, routing remaps back.
+        assert_eq!(hv.health(1, 20_000.0, &plan), PoolHealth::Healthy);
+        assert!(hv.routable(1, 20_000.0, &plan));
+        // Dark trumps the breaker even when disabled resilience-wise.
+        let mut off = HealthView::new(2, ResilienceConfig::default());
+        assert!(!off.routable(1, 15_000.0, &plan));
+    }
+
+    #[test]
+    fn breaker_trips_opens_and_half_open_probes_back() {
+        let cfg = ResilienceConfig {
+            breaker_threshold: 0.5,
+            breaker_alpha: 0.5,
+            breaker_min_samples: 4,
+            breaker_open_ms: 100.0,
+            ..enabled()
+        };
+        let mut hv = HealthView::new(1, cfg);
+        let plan = FaultPlan::none();
+        // Failures drive the EWMA up; the trip needs min samples.
+        let mut tripped_at = None;
+        for i in 0..10 {
+            if hv.record(0, false, i as f64) {
+                tripped_at = Some(i);
+                break;
+            }
+        }
+        let t = tripped_at.expect("persistent failures must trip the breaker") as f64;
+        assert_eq!(hv.breaker_trips, 1);
+        assert_eq!(hv.health(0, t, &plan), PoolHealth::Degraded);
+        assert!(!hv.routable(0, t + 50.0, &plan), "open: routed around");
+        // The open window elapses: the next routing check admits a probe.
+        assert!(hv.routable(0, t + 100.0, &plan), "half-open admits the probe");
+        assert_eq!(hv.health(0, t + 100.0, &plan), PoolHealth::Healthy);
+        // Probe succeeds: closed, history forgiven.
+        assert!(!hv.record(0, true, t + 110.0));
+        assert!(hv.routable(0, t + 111.0, &plan));
+        assert_eq!(hv.breaker_trips, 1, "closing is not a trip");
+        // Trip again, then fail the probe: straight back to open.
+        for i in 0..10 {
+            hv.record(0, false, t + 200.0 + i as f64);
+        }
+        assert_eq!(hv.breaker_trips, 2);
+        assert!(hv.routable(0, t + 400.0, &plan));
+        hv.record(0, false, t + 401.0);
+        assert!(!hv.routable(0, t + 402.0, &plan), "failed probe re-opens");
+    }
+
+    #[test]
+    fn retry_budget_caps_and_refills() {
+        let cfg = ResilienceConfig {
+            max_retries: 3,
+            retry_budget: 2.0,
+            retry_refill_per_s: 1.0,
+            ..enabled()
+        };
+        let mut hv = HealthView::new(1, cfg);
+        assert!(!hv.try_retry(4, 0.0), "attempts past the cap are denied");
+        assert!(hv.try_retry(1, 0.0));
+        assert!(hv.try_retry(1, 0.0));
+        assert!(!hv.try_retry(1, 0.0), "bucket exhausted");
+        // One second refills one token.
+        assert!(hv.try_retry(2, 1000.0));
+        assert!(!hv.try_retry(2, 1000.0));
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        let cfg = ResilienceConfig { backoff_base_ms: 10.0, backoff_cap_ms: 50.0, ..enabled() };
+        assert_eq!(cfg.backoff_ms(1), 10.0);
+        assert_eq!(cfg.backoff_ms(2), 20.0);
+        assert_eq!(cfg.backoff_ms(3), 40.0);
+        assert_eq!(cfg.backoff_ms(4), 50.0, "capped");
+        assert_eq!(cfg.backoff_ms(0), 0.0);
+    }
+
+    #[test]
+    fn failover_picks_the_fastest_surviving_pool() {
+        let pools = parse_pools("fast:2:1.0,mid:2:1.5,slow:2:2.5").unwrap();
+        let t = Topology::from_pools(&pools, 0.0).unwrap();
+        // Pool 2's band fails over to the fastest survivor.
+        assert_eq!(t.failover_pool(2, |_| true), Some(0));
+        assert_eq!(t.failover_pool(2, |q| q != 0), Some(1));
+        assert_eq!(t.failover_pool(2, |_| false), None);
+        // Routable home pool: no failover.
+        let n_rungs = 3;
+        let rung_of_pool2 = 2.min(n_rungs - 1);
+        assert_eq!(t.pool_for_rung_routable(rung_of_pool2, |_| true), (2, false));
+        // Dark home pool: remapped, flagged.
+        let (p, moved) = t.pool_for_rung_routable(rung_of_pool2, |q| q != 2);
+        assert_eq!((p, moved), (0, true));
+        // No survivor anywhere: keep home (drain accounting conserves).
+        assert_eq!(t.pool_for_rung_routable(rung_of_pool2, |_| false), (2, false));
+    }
+
+    #[test]
+    fn timeout_gate_requires_enabled_and_positive() {
+        let mut cfg = ResilienceConfig { request_timeout_ms: 100.0, ..enabled() };
+        assert!(cfg.timed_out(101.0));
+        assert!(!cfg.timed_out(100.0));
+        cfg.request_timeout_ms = 0.0;
+        assert!(!cfg.timed_out(1e9));
+        let off = ResilienceConfig { request_timeout_ms: 100.0, ..Default::default() };
+        assert!(!off.timed_out(1e9));
+    }
+
+    #[test]
+    fn parse_roundtrips_the_knobs() {
+        assert!(!ResilienceConfig::parse("off").unwrap().enabled);
+        let cfg = ResilienceConfig::parse("on,max_retries=5,breaker_threshold=0.3,timeout_ms=250")
+            .unwrap();
+        assert!(cfg.enabled);
+        assert_eq!(cfg.max_retries, 5);
+        assert_eq!(cfg.breaker_threshold, 0.3);
+        assert_eq!(cfg.request_timeout_ms, 250.0);
+        assert!(ResilienceConfig::parse("on,nope=1").is_err());
+        assert!(ResilienceConfig::parse("garbage").is_err());
+    }
+}

@@ -32,6 +32,7 @@
 //! scheduled just before the switch, and the audit trail (always
 //! lock-protected) stays exact.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -43,9 +44,15 @@ use super::monitor::LoadMonitor;
 use super::policy::ScalingPolicy;
 use super::pool::PoolSpec;
 use super::queue::{Discipline, Popped, ShardedQueue};
+use super::resilience::{HealthView, ResilienceConfig};
 use super::topology::Topology;
 use crate::metrics::{RequestRecord, SwitchEvent};
 use crate::workload::FaultPlan;
+
+/// One queued request: (id, arrival ms, retry attempt). Attempt 0 is
+/// the first try; the resilience plane re-enqueues failures with an
+/// incremented attempt so the retry cap and the flaky coin see it.
+type Job = (u64, f64, u32);
 
 /// Serving run options.
 #[derive(Clone, Debug)]
@@ -87,11 +94,18 @@ pub struct ServeOptions {
     /// ([`Topology::spill_allowed`]). 0 (the default) is the historical
     /// spill-when-dry. Meaningless on a single-pool fleet.
     pub spill_margin: f64,
-    /// Injected faults (pool dark, slowdown windows, queue squeeze),
-    /// applied at the same run times as the DES engine applies them
-    /// ([`crate::sim::simulate_topology_faults`]). Empty (the default)
-    /// changes nothing.
+    /// Injected faults (pool dark, slowdown windows, queue squeeze,
+    /// flaky engines), applied at the same run times as the DES engine
+    /// applies them ([`crate::sim::simulate_topology_faults`]). Empty
+    /// (the default) changes nothing.
     pub faults: FaultPlan,
+    /// The resilience plane: health-aware failover routing, bounded
+    /// retries with backoff, per-pool circuit breakers and request
+    /// timeouts ([`ResilienceConfig`]). Disabled (the default) is
+    /// bit-identical to the pre-resilience runtime — failures are
+    /// still *counted* (an engine `Err` can no longer abort the run),
+    /// but nothing is retried or routed around.
+    pub resilience: ResilienceConfig,
 }
 
 impl Default for ServeOptions {
@@ -106,6 +120,7 @@ impl Default for ServeOptions {
             pools: Vec::new(),
             spill_margin: 0.0,
             faults: FaultPlan::default(),
+            resilience: ResilienceConfig::default(),
         }
     }
 }
@@ -178,6 +193,153 @@ pub struct ServeOutcome {
     /// `pool_arrivals` sums to the arrival total, `pool_served` to the
     /// record count).
     pub pool_arrivals: Vec<u64>,
+    /// Requests that failed terminally (engine error / injected flake /
+    /// timeout / recovered panic, with no retry admitted or the retried
+    /// push refused). Conservation extends to
+    /// `served + rejected + failed == arrivals`.
+    pub failed: usize,
+    /// Failed requests re-enqueued through the normal routing path.
+    pub retries: u64,
+    /// Worker panics caught by the supervisor; each also fails (or
+    /// retries) the in-flight request and rebuilds the engine in place.
+    pub panics_recovered: u64,
+    /// Completions discarded for exceeding the resilience request
+    /// timeout (0 unless [`ResilienceConfig::request_timeout_ms`] > 0).
+    pub timeouts: u64,
+    /// Circuit-breaker open transitions across all pools.
+    pub breaker_trips: u64,
+    /// Requests routed to a non-home pool because the home pool was
+    /// dark or breaker-open (admission remaps + dark-backlog
+    /// redistribution).
+    pub failovers: u64,
+}
+
+/// Shared run-wide resilience state: the health view (breakers + retry
+/// token bucket) behind one mutex — taken only on completion records,
+/// retries, and health-aware routing when the plane is enabled — plus
+/// lock-free failure counters.
+struct ResilienceState {
+    enabled: bool,
+    health: Mutex<HealthView>,
+    failed: AtomicUsize,
+    retries: AtomicU64,
+    panics: AtomicU64,
+    timeouts: AtomicU64,
+    failovers: AtomicU64,
+}
+
+impl ResilienceState {
+    fn new(n_pools: usize, cfg: ResilienceConfig) -> ResilienceState {
+        ResilienceState {
+            enabled: cfg.enabled,
+            health: Mutex::new(HealthView::new(n_pools, cfg)),
+            failed: AtomicUsize::new(0),
+            retries: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+        }
+    }
+
+    /// Feed a completion into the pool's breaker EWMA. Guarded here so
+    /// the disabled path never touches the health mutex.
+    fn record(&self, pool: usize, ok: bool, now_ms: f64) {
+        if self.enabled {
+            self.health.lock().unwrap().record(pool, ok, now_ms);
+        }
+    }
+}
+
+/// Resilience failover: a dark pool's worker redistributes its stranded
+/// home-shard backlog to the nearest surviving pool (counted as
+/// failovers) instead of letting it sit for a drain-reject, then parks
+/// until the dark window closes — at which point it returns and the
+/// worker resumes serving — or the run winds down.
+#[allow(clippy::too_many_arguments)]
+fn failover_dark_pool(
+    queue: &ShardedQueue<Job>,
+    topo: &Topology,
+    pool: usize,
+    worker: usize,
+    res: &ResilienceState,
+    faults: &FaultPlan,
+    until_ms: f64,
+    now_ms: &dyn Fn() -> f64,
+    rejected: &AtomicUsize,
+) {
+    loop {
+        while let Some(job) = queue.try_pop_home(pool, worker) {
+            let t = now_ms();
+            let target = {
+                let mut hv = res.health.lock().unwrap();
+                topo.failover_pool(pool, |q| hv.routable(q, t, faults))
+            };
+            match target.map(|q| queue.push_pool(q, job)) {
+                Some(Ok(())) => {
+                    res.failovers.fetch_add(1, Ordering::Relaxed);
+                }
+                // No surviving pool, or its shards are full/closed:
+                // reject, never drop (conservation).
+                _ => {
+                    rejected.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        if now_ms() >= until_ms {
+            return;
+        }
+        if queue.is_closed() && queue.pool_len(pool) == 0 {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// A request failed (engine error, injected flake, recovered panic, or
+/// timeout): re-enqueue it through the normal health-aware routing path
+/// when the retry policy admits it — per-request cap, token-bucket
+/// budget, exponential backoff — else count it terminally failed.
+/// Either way the request stays accounted:
+/// `served + rejected + failed == arrivals`.
+#[allow(clippy::too_many_arguments)]
+fn retry_or_fail(
+    queue: &ShardedQueue<Job>,
+    topo: &Topology,
+    handle: &PolicyHandle,
+    res: &ResilienceState,
+    faults: &FaultPlan,
+    cfg: &ResilienceConfig,
+    job: Job,
+    now_ms: &dyn Fn() -> f64,
+) {
+    let (id, arrival_ms, attempt) = job;
+    let next = attempt + 1;
+    let admitted = cfg.enabled && res.health.lock().unwrap().try_retry(next, now_ms());
+    if !admitted {
+        res.failed.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    let backoff = cfg.backoff_ms(next);
+    if backoff > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(backoff / 1e3));
+    }
+    let t = now_ms();
+    let (pool, moved) = {
+        let mut hv = res.health.lock().unwrap();
+        topo.pool_for_rung_routable(handle.current_rung(), |q| hv.routable(q, t, faults))
+    };
+    match queue.push_pool(pool, (id, arrival_ms, next)) {
+        Ok(()) => {
+            res.retries.fetch_add(1, Ordering::Relaxed);
+            if moved {
+                res.failovers.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // Full or closed: the retry has nowhere to go — terminal.
+        Err(_) => {
+            res.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
 /// Shared policy state: decisions + switch audit trail.
@@ -362,12 +524,13 @@ where
         }
     };
 
-    let queue: Arc<ShardedQueue<(u64, f64)>> =
+    let queue: Arc<ShardedQueue<Job>> =
         Arc::new(ShardedQueue::with_topology(opts.queue_capacity, (*topo).clone()));
     let monitor = Arc::new(LoadMonitor::with_pools(0.3, topo.n_pools()));
     let handle = Arc::new(PolicyHandle::new(policy));
     let done = Arc::new(AtomicBool::new(false));
     let rejected = Arc::new(AtomicUsize::new(0));
+    let res = Arc::new(ResilienceState::new(topo.n_pools(), opts.resilience.clone()));
     let make_engine = &make_engine;
 
     std::thread::scope(|scope| -> Result<ServeOutcome> {
@@ -406,6 +569,8 @@ where
             let arrivals = arrivals.to_vec();
             let wait_start = wait_start.clone();
             let faults = opts.faults.clone();
+            let res = res.clone();
+            let res_on = opts.resilience.enabled;
             scope.spawn(move || {
                 let start = wait_start();
                 for (id, &t_s) in arrivals.iter().enumerate() {
@@ -425,9 +590,25 @@ where
                             continue;
                         }
                     }
-                    let pool = topo.pool_for_rung(handle.current_rung());
+                    // Health-aware routing (resilience only): a rung
+                    // band whose home pool is dark or breaker-open
+                    // remaps to the nearest surviving pool, and remaps
+                    // back the instant health returns.
+                    let pool = if res_on {
+                        let rung = handle.current_rung();
+                        let (p, moved) = {
+                            let mut hv = res.health.lock().unwrap();
+                            topo.pool_for_rung_routable(rung, |q| hv.routable(q, t, &faults))
+                        };
+                        if moved {
+                            res.failovers.fetch_add(1, Ordering::Relaxed);
+                        }
+                        p
+                    } else {
+                        topo.pool_for_rung(handle.current_rung())
+                    };
                     monitor.on_arrival_pool(pool);
-                    match queue.push_pool(pool, (id as u64, t)) {
+                    match queue.push_pool(pool, (id as u64, t, 0u32)) {
                         Ok(()) => {
                             handle.observe(t, pooled_depth(&queue, &topo, &handle));
                         }
@@ -466,6 +647,9 @@ where
                 let rejected = rejected.clone();
                 let faults = opts.faults.clone();
                 let dark_at = opts.faults.dark_at_ms(p);
+                let dark_until = opts.faults.dark_until_ms(p);
+                let res = res.clone();
+                let res_cfg = opts.resilience.clone();
                 handles.push(scope.spawn(move || -> Result<(usize, Vec<RequestRecord>)> {
                     // Build (and PJRT-compile) the engine; the last
                     // worker to finish releases the run clock. A failed
@@ -500,12 +684,41 @@ where
                     // single-item path — exactly the seed loop.
                     if batch == 1 {
                         loop {
-                            if dark_at.is_some_and(|dm| now_ms() >= dm) {
+                            if dark_at.is_some() && faults.is_dark_at_ms(p, now_ms()) {
+                                let until = dark_until.unwrap_or(f64::INFINITY);
+                                if res_cfg.enabled {
+                                    // Failover: redistribute the stranded
+                                    // backlog, park out the window, resume.
+                                    failover_dark_pool(
+                                        &queue,
+                                        &topo,
+                                        p,
+                                        lw,
+                                        &res,
+                                        &faults,
+                                        until,
+                                        &now_ms,
+                                        &rejected,
+                                    );
+                                    if until.is_finite() {
+                                        continue;
+                                    }
+                                    break;
+                                }
+                                if until.is_finite() {
+                                    // Windowed dark without resilience:
+                                    // the pool pauses and its backlog
+                                    // waits (or is spill-absorbed) until
+                                    // the window closes.
+                                    std::thread::sleep(Duration::from_millis(5));
+                                    continue;
+                                }
                                 drain_dark_pool(&queue, p, lw, &rejected);
                                 break;
                             }
                             match queue.pop_timeout_pool(p, lw, Duration::from_millis(50)) {
-                                Popped::Item((id, arrival_ms)) => {
+                                Popped::Item(job) => {
+                                    let (id, arrival_ms, attempt) = job;
                                     let t_start = now_ms();
                                     // Switches take effect at dequeue;
                                     // the pool executes the rung of its
@@ -513,26 +726,97 @@ where
                                     let d = pooled_depth(&queue, &topo, &handle);
                                     let idx = handle.observe(t_start, d);
                                     let exec = topo.exec_rung(p, idx, n_rungs);
-                                    let out = engine.execute(exec)?;
-                                    // An active slowdown window
-                                    // stretches this pool's service
-                                    // wall-clock by the fault factor.
-                                    let stretch = faults.slowdown_at_ms(p, t_start);
-                                    if stretch > 1.0 {
-                                        let extra = (now_ms() - t_start) * (stretch - 1.0);
-                                        std::thread::sleep(Duration::from_secs_f64(extra / 1e3));
+                                    // Injected flake: a deterministic coin
+                                    // on (id, attempt) — the same coin the
+                                    // DES flips — fails the request before
+                                    // the engine is called.
+                                    let flaked = faults.flaky_fails(p, id, attempt, arrival_ms);
+                                    let outcome = if flaked {
+                                        None
+                                    } else {
+                                        let caught =
+                                            catch_unwind(AssertUnwindSafe(|| engine.execute(exec)));
+                                        match caught {
+                                            Ok(Ok(out)) => Some(out),
+                                            // Engine error: counted per
+                                            // request, never a run abort.
+                                            Ok(Err(_)) => None,
+                                            Err(_) => {
+                                                // Supervised panic: count it
+                                                // and rebuild the engine in
+                                                // place from the factory —
+                                                // the worker survives.
+                                                res.panics.fetch_add(1, Ordering::Relaxed);
+                                                engine = make_engine(&spec)?;
+                                                None
+                                            }
+                                        }
+                                    };
+                                    match outcome {
+                                        Some(out) => {
+                                            // An active slowdown window
+                                            // stretches this pool's service
+                                            // wall-clock by the fault factor.
+                                            let stretch = faults.slowdown_at_ms(p, t_start);
+                                            if stretch > 1.0 {
+                                                let extra = (now_ms() - t_start) * (stretch - 1.0);
+                                                std::thread::sleep(Duration::from_secs_f64(
+                                                    extra / 1e3,
+                                                ));
+                                            }
+                                            let t_fin = now_ms();
+                                            if res_cfg.timed_out(t_fin - t_start) {
+                                                // Too slow to count: a
+                                                // timeout failure (feeds
+                                                // the breaker EWMA).
+                                                res.timeouts.fetch_add(1, Ordering::Relaxed);
+                                                res.record(p, false, t_fin);
+                                                retry_or_fail(
+                                                    &queue,
+                                                    &topo,
+                                                    &handle,
+                                                    &res,
+                                                    &faults,
+                                                    &res_cfg,
+                                                    job,
+                                                    &now_ms,
+                                                );
+                                            } else {
+                                                res.record(p, true, t_fin);
+                                                records.push(RequestRecord {
+                                                    id,
+                                                    arrival_ms,
+                                                    start_ms: t_start,
+                                                    finish_ms: t_fin,
+                                                    config_idx: exec,
+                                                    accuracy: out.accuracy,
+                                                    success: out.success,
+                                                });
+                                            }
+                                            handle.observe(
+                                                t_fin,
+                                                pooled_depth(&queue, &topo, &handle),
+                                            );
+                                        }
+                                        None => {
+                                            let t_fin = now_ms();
+                                            res.record(p, false, t_fin);
+                                            retry_or_fail(
+                                                &queue,
+                                                &topo,
+                                                &handle,
+                                                &res,
+                                                &faults,
+                                                &res_cfg,
+                                                job,
+                                                &now_ms,
+                                            );
+                                            handle.observe(
+                                                t_fin,
+                                                pooled_depth(&queue, &topo, &handle),
+                                            );
+                                        }
                                     }
-                                    let t_fin = now_ms();
-                                    records.push(RequestRecord {
-                                        id,
-                                        arrival_ms,
-                                        start_ms: t_start,
-                                        finish_ms: t_fin,
-                                        config_idx: exec,
-                                        accuracy: out.accuracy,
-                                        success: out.success,
-                                    });
-                                    handle.observe(t_fin, pooled_depth(&queue, &topo, &handle));
                                 }
                                 Popped::TimedOut => {}
                                 Popped::Closed => break,
@@ -541,7 +825,29 @@ where
                         return Ok((p, records));
                     }
                     loop {
-                        if dark_at.is_some_and(|dm| now_ms() >= dm) {
+                        if dark_at.is_some() && faults.is_dark_at_ms(p, now_ms()) {
+                            let until = dark_until.unwrap_or(f64::INFINITY);
+                            if res_cfg.enabled {
+                                failover_dark_pool(
+                                    &queue,
+                                    &topo,
+                                    p,
+                                    lw,
+                                    &res,
+                                    &faults,
+                                    until,
+                                    &now_ms,
+                                    &rejected,
+                                );
+                                if until.is_finite() {
+                                    continue;
+                                }
+                                break;
+                            }
+                            if until.is_finite() {
+                                std::thread::sleep(Duration::from_millis(5));
+                                continue;
+                            }
                             drain_dark_pool(&queue, p, lw, &rejected);
                             break;
                         }
@@ -552,13 +858,40 @@ where
                                 let d = pooled_depth(&queue, &topo, &handle);
                                 let idx = handle.observe(t_start, d);
                                 let exec = topo.exec_rung(p, idx, n_rungs);
-                                let outs = engine.execute_batch(exec, items.len())?;
-                                anyhow::ensure!(
-                                    outs.len() == items.len(),
-                                    "engine returned {} outcomes for a batch of {}",
-                                    outs.len(),
-                                    items.len()
-                                );
+                                // Injected flakes fail out of the batch
+                                // before dispatch (the same per-request
+                                // coin as the DES); the engine runs the
+                                // survivors.
+                                let (flaked, live): (Vec<Job>, Vec<Job>) =
+                                    items.into_iter().partition(|&(id, arr, att)| {
+                                        faults.flaky_fails(p, id, att, arr)
+                                    });
+                                let outs = if live.is_empty() {
+                                    Some(Vec::new())
+                                } else {
+                                    match catch_unwind(AssertUnwindSafe(|| {
+                                        engine.execute_batch(exec, live.len())
+                                    })) {
+                                        Ok(Ok(outs)) => {
+                                            anyhow::ensure!(
+                                                outs.len() == live.len(),
+                                                "engine returned {} outcomes for a batch of {}",
+                                                outs.len(),
+                                                live.len()
+                                            );
+                                            Some(outs)
+                                        }
+                                        // Engine error: the whole batch
+                                        // takes the failure path, the
+                                        // worker survives.
+                                        Ok(Err(_)) => None,
+                                        Err(_) => {
+                                            res.panics.fetch_add(1, Ordering::Relaxed);
+                                            engine = make_engine(&spec)?;
+                                            None
+                                        }
+                                    }
+                                };
                                 // Slowdown windows stretch the batch's
                                 // wall-clock exactly like the B = 1 path.
                                 let stretch = faults.slowdown_at_ms(p, t_start);
@@ -567,16 +900,68 @@ where
                                     std::thread::sleep(Duration::from_secs_f64(extra / 1e3));
                                 }
                                 let t_fin = now_ms();
-                                for ((id, arrival_ms), out) in items.into_iter().zip(outs) {
-                                    records.push(RequestRecord {
-                                        id,
-                                        arrival_ms,
-                                        start_ms: t_start,
-                                        finish_ms: t_fin,
-                                        config_idx: exec,
-                                        accuracy: out.accuracy,
-                                        success: out.success,
-                                    });
+                                match outs {
+                                    Some(outs) if !res_cfg.timed_out(t_fin - t_start) => {
+                                        for (&(id, arrival_ms, _), out) in live.iter().zip(outs) {
+                                            res.record(p, true, t_fin);
+                                            records.push(RequestRecord {
+                                                id,
+                                                arrival_ms,
+                                                start_ms: t_start,
+                                                finish_ms: t_fin,
+                                                config_idx: exec,
+                                                accuracy: out.accuracy,
+                                                success: out.success,
+                                            });
+                                        }
+                                    }
+                                    Some(_) => {
+                                        // Beat the engine but not the
+                                        // clock: the whole batch times out.
+                                        let timed = live.len() as u64;
+                                        res.timeouts.fetch_add(timed, Ordering::Relaxed);
+                                        for &job in &live {
+                                            res.record(p, false, t_fin);
+                                            retry_or_fail(
+                                                &queue,
+                                                &topo,
+                                                &handle,
+                                                &res,
+                                                &faults,
+                                                &res_cfg,
+                                                job,
+                                                &now_ms,
+                                            );
+                                        }
+                                    }
+                                    None => {
+                                        for &job in &live {
+                                            res.record(p, false, t_fin);
+                                            retry_or_fail(
+                                                &queue,
+                                                &topo,
+                                                &handle,
+                                                &res,
+                                                &faults,
+                                                &res_cfg,
+                                                job,
+                                                &now_ms,
+                                            );
+                                        }
+                                    }
+                                }
+                                for &job in &flaked {
+                                    res.record(p, false, t_fin);
+                                    retry_or_fail(
+                                        &queue,
+                                        &topo,
+                                        &handle,
+                                        &res,
+                                        &faults,
+                                        &res_cfg,
+                                        job,
+                                        &now_ms,
+                                    );
                                 }
                                 handle.observe(t_fin, pooled_depth(&queue, &topo, &handle));
                             }
@@ -592,9 +977,17 @@ where
         // Join every worker before signalling `done` (the monitor must
         // keep ticking while any worker still drains the queue), then
         // merge the per-worker records and propagate the first error.
+        // Worker panics inside the execute path are caught and
+        // supervised; a panic escaping to here (outside the supervised
+        // region) surfaces as an error instead of poisoning the join.
         let results: Vec<Result<(usize, Vec<RequestRecord>)>> = handles
             .into_iter()
-            .map(|h| h.join().expect("executor panicked"))
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!(
+                    "executor thread panicked outside the supervised execute path"
+                )),
+            })
             .collect();
         done.store(true, Ordering::Relaxed);
         let mut records = Vec::new();
@@ -611,6 +1004,7 @@ where
         let pool_arrivals = (0..topo.n_pools())
             .map(|p| monitor.pool_arrivals_total(p))
             .collect();
+        let breaker_trips = res.health.lock().unwrap().breaker_trips;
         Ok(ServeOutcome {
             records,
             switches: handle.take_switches(),
@@ -620,6 +1014,12 @@ where
             spills: queue.spills(),
             pool_served,
             pool_arrivals,
+            failed: res.failed.load(Ordering::Relaxed),
+            retries: res.retries.load(Ordering::Relaxed),
+            panics_recovered: res.panics.load(Ordering::Relaxed),
+            timeouts: res.timeouts.load(Ordering::Relaxed),
+            breaker_trips,
+            failovers: res.failovers.load(Ordering::Relaxed),
         })
     })
 }

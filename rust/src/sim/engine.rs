@@ -41,11 +41,66 @@
 use crate::metrics::{RequestRecord, SwitchEvent};
 use crate::planner::Plan;
 use crate::serving::policy::ScalingPolicy;
+use crate::serving::resilience::{HealthView, ResilienceConfig};
 use crate::serving::topology::{Dispatch, Topology};
 use crate::util::Rng;
 use crate::workload::FaultPlan;
 
 use super::{ServiceModel, SimOutcome};
+
+/// One simulated queued request: (id, arrival ms, ready ms, attempt).
+/// Fresh arrivals carry `ready == arrival`; a retried request re-enters
+/// with `ready = fail time + backoff` so it cannot start before its
+/// backoff elapses, while records keep the original arrival.
+type Item = (u64, f64, f64, u32);
+
+/// Resilience counters accumulated by one simulated run.
+#[derive(Default)]
+struct ResCounters {
+    failed: usize,
+    retries: u64,
+    timeouts: u64,
+    failovers: u64,
+}
+
+/// The DES side of [`retry_or_fail`](crate::serving::server): a failed
+/// request re-enqueues through health-aware routing with backoff when
+/// the retry policy admits it, else counts terminally failed — the same
+/// decisions ([`HealthView::try_retry`], `pool_for_rung_routable`) the
+/// live worker takes, driven by the virtual clock.
+#[allow(clippy::too_many_arguments)]
+fn retry_or_fail_sim(
+    topo: &Topology,
+    faults: &FaultPlan,
+    cfg: &ResilienceConfig,
+    hv: &mut HealthView,
+    queues: &mut [std::collections::VecDeque<Item>],
+    routers: &mut [usize],
+    pool_queued: &mut [usize],
+    queued_total: &mut usize,
+    rung: usize,
+    item: Item,
+    now_ms: f64,
+    counters: &mut ResCounters,
+) {
+    let (id, arr_ms, _ready, attempt) = item;
+    let next = attempt + 1;
+    if !(cfg.enabled && hv.try_retry(next, now_ms)) {
+        counters.failed += 1;
+        return;
+    }
+    let ready = now_ms + cfg.backoff_ms(next);
+    let (pool, moved) = topo.pool_for_rung_routable(rung, |q| hv.routable(q, ready, faults));
+    let shard = topo.route(pool, routers[pool]);
+    routers[pool] += 1;
+    queues[shard].push_back((id, arr_ms, ready, next));
+    *queued_total += 1;
+    pool_queued[pool] += 1;
+    counters.retries += 1;
+    if moved {
+        counters.failovers += 1;
+    }
+}
 
 /// The first shard a consumer of `pool` may take from, given the
 /// current queue state: the topology's within-pool walk, then the gated
@@ -53,7 +108,7 @@ use super::{ServiceModel, SimOutcome};
 /// `ShardedQueue::try_pop_batch_pool` order.
 fn choose_shard(
     topo: &Topology,
-    queues: &[std::collections::VecDeque<(u64, f64)>],
+    queues: &[std::collections::VecDeque<Item>],
     pool_queued: &[usize],
     pool: usize,
     worker: usize,
@@ -99,7 +154,9 @@ pub fn simulate_topology<P: ScalingPolicy, S: ServiceModel>(
 /// * **pool dark** — the pool's server slots retire (busy-until = ∞) at
 ///   their first dispatch opportunity at or past the dark time; in-
 ///   flight work completes, and backlog no live server may reach (the
-///   spill gate still applies) is counted `rejected`;
+///   spill gate still applies) is counted `rejected`. A *windowed* dark
+///   (`until_s` set) pauses the slots until the window ends instead of
+///   retiring them;
 /// * **slowdown** — the executing pool's service times stretch by the
 ///   fault factor active at batch start;
 /// * **queue squeeze** — arrivals finding `queued_total` at or above
@@ -117,6 +174,57 @@ pub fn simulate_topology_faults<P: ScalingPolicy, S: ServiceModel>(
     topo: &Topology,
     batch: usize,
     faults: &FaultPlan,
+) -> SimOutcome {
+    let resilience = ResilienceConfig::default();
+    simulate_topology_resilient(
+        arrivals,
+        plan,
+        policy,
+        service,
+        seed,
+        topo,
+        batch,
+        faults,
+        &resilience,
+    )
+}
+
+/// [`simulate_topology_faults`] with the resilience plane active — the
+/// DES mirror of the live runtime's failure handling, driving the same
+/// pure decision machines ([`HealthView`], `Topology::failover_pool`)
+/// with the virtual clock:
+///
+/// * **health-aware routing** — an arrival (or retry) whose rung band's
+///   home pool is dark or breaker-open remaps to the nearest surviving
+///   pool, and remaps back the instant the pool recovers;
+/// * **dark windows** — a windowed dark pool's slots pause
+///   (busy-until = window end) instead of retiring; with resilience on,
+///   the first slot to notice the window also redistributes the pool's
+///   stranded backlog to the failover target (counted `failovers`);
+/// * **injected flakes** — each request flips the same deterministic
+///   (id, attempt) coin as the live worker *before* service is sampled
+///   (a flaked request consumes no engine time), then retries or fails;
+/// * **retries** — bounded by the per-request cap and the token-bucket
+///   budget, delayed by exponential backoff (`ready = fail + backoff`),
+///   re-routed through the health view; **timeouts** discard too-slow
+///   batches; per-completion breaker records trip and half-open pools
+///   exactly as the live `HealthView` does.
+///
+/// With the disabled config this is bit-identical to
+/// [`simulate_topology_faults`] (which now delegates here) — every
+/// resilience branch is gated, so the event sequence and rng stream are
+/// unchanged; the parity pins in `tests/resilience.rs` hold it to that.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_topology_resilient<P: ScalingPolicy, S: ServiceModel>(
+    arrivals: &[f64],
+    plan: &Plan,
+    policy: &mut P,
+    service: &S,
+    seed: u64,
+    topo: &Topology,
+    batch: usize,
+    faults: &FaultPlan,
+    resilience: &ResilienceConfig,
 ) -> SimOutcome {
     let batch = batch.max(1);
     let alpha = plan.batch_alpha_ms.max(0.0);
@@ -141,13 +249,21 @@ pub fn simulate_topology_faults<P: ScalingPolicy, S: ServiceModel>(
     let mut steals = 0u64;
     let mut spills = 0u64;
     let mut rejected_total = 0usize;
-    // Per-pool dark times (ms); ∞ = never. Retired slots carry
-    // busy-until = ∞ and are excluded from every server scan.
-    let dark_ms: Vec<f64> = (0..topo.n_pools())
+    // Per-pool dark windows (ms); from = ∞ means never dark, until = ∞
+    // means the pool never recovers. An open-ended dark retires slots
+    // (busy-until = ∞, excluded from every server scan — the historical
+    // behavior); a windowed dark just pauses them until the window ends.
+    let dark_from: Vec<f64> = (0..topo.n_pools())
         .map(|p| faults.dark_at_ms(p).unwrap_or(f64::INFINITY))
         .collect();
+    let dark_to: Vec<f64> = (0..topo.n_pools())
+        .map(|p| faults.dark_until_ms(p).unwrap_or(f64::INFINITY))
+        .collect();
+    let has_flaky = faults.any_flaky();
+    let mut hv = HealthView::new(topo.n_pools(), resilience.clone());
+    let mut counters = ResCounters::default();
 
-    let mut queues: Vec<std::collections::VecDeque<(u64, f64)>> =
+    let mut queues: Vec<std::collections::VecDeque<Item>> =
         (0..nsh).map(|_| std::collections::VecDeque::new()).collect();
     let mut pool_queued = vec![0usize; topo.n_pools()];
     let mut queued_total = 0usize;
@@ -253,12 +369,42 @@ pub fn simulate_topology_faults<P: ScalingPolicy, S: ServiceModel>(
 
         if let Some((slot, free_at, shard, kind)) = chosen {
             let p = server_pool[slot];
-            // A dark pool's slot retires at its first dispatch
-            // opportunity at or past the dark time (in-flight work
-            // already completed; it never dequeues again).
+            // A dark pool's slot pauses at its first dispatch
+            // opportunity inside the dark window (in-flight work
+            // already completed): until the window's end for a windowed
+            // dark, forever (retired, excluded from every scan) for the
+            // open-ended form — the exact historical behavior.
             let front_arr = queues[shard].front().unwrap().1;
-            if free_at.max(front_arr) >= dark_ms[p] {
-                busy[slot] = f64::INFINITY;
+            let would_start = free_at.max(front_arr);
+            if would_start >= dark_from[p] && would_start < dark_to[p] {
+                if resilience.enabled {
+                    // Failover: redistribute the pool's stranded
+                    // backlog to the nearest surviving pool (the same
+                    // spill-order walk the live dark worker uses)
+                    // instead of letting it sit out the window.
+                    let (lo, hi) = topo.shard_range(p);
+                    for s in lo..hi {
+                        while let Some(item) = queues[s].pop_front() {
+                            queued_total -= 1;
+                            pool_queued[p] -= 1;
+                            let target =
+                                topo.failover_pool(p, |q| hv.routable(q, would_start, faults));
+                            match target {
+                                Some(q) => {
+                                    let shard2 = topo.route(q, routers[q]);
+                                    routers[q] += 1;
+                                    queues[shard2].push_back(item);
+                                    queued_total += 1;
+                                    pool_queued[q] += 1;
+                                    counters.failovers += 1;
+                                }
+                                // No surviving pool: reject, never drop.
+                                None => rejected_total += 1,
+                            }
+                        }
+                    }
+                }
+                busy[slot] = dark_to[p];
                 continue;
             }
             // Dispatch to server `slot`: a front run of its home shard,
@@ -270,15 +416,19 @@ pub fn simulate_topology_faults<P: ScalingPolicy, S: ServiceModel>(
                 Dispatch::Spill => spills += 1,
             }
             let take = Topology::take_count(queues[shard].len(), batch, kind);
-            let mut taken: Vec<(u64, f64)> = Vec::with_capacity(take);
+            let mut taken: Vec<Item> = Vec::with_capacity(take);
             for _ in 0..take {
                 taken.push(queues[shard].pop_front().unwrap());
             }
             queued_total -= take;
             pool_queued[topo.shard_pool(shard)] -= take;
-            // The batch starts once the server is free and its last
-            // (latest-arriving, FIFO within the shard) request is in.
-            let start = free_at.max(taken.last().unwrap().1);
+            // The batch starts once the server is free and every taken
+            // request is ready (for fresh arrivals ready == arrival, so
+            // FIFO order makes this the last request's arrival — the
+            // historical expression; only a retried request's backoff
+            // can push it later).
+            let ready_max = taken.iter().map(|it| it.2).fold(f64::NEG_INFINITY, f64::max);
+            let start = free_at.max(ready_max);
             // Switches apply at dequeue: one policy consultation per
             // batch, against the per-pool depth of the current rung's
             // home pool (the signal the live PolicyHandle feeds).
@@ -291,27 +441,84 @@ pub fn simulate_topology_faults<P: ScalingPolicy, S: ServiceModel>(
             // An active slowdown window stretches the pool's hardware
             // speed factor for batches starting inside it.
             let speed = topo.speed(p) * faults.slowdown_at_ms(p, start);
+            // Injected flakes fail out of the batch before service is
+            // sampled (the same deterministic (id, attempt) coin the
+            // live worker flips; a flaked request consumes no engine
+            // time). Without flaky faults this moves the whole batch.
+            let (flaked, live): (Vec<Item>, Vec<Item>) = if has_flaky {
+                taken
+                    .into_iter()
+                    .partition(|&(id, arr, _, att)| faults.flaky_fails(p, id, att, arr))
+            } else {
+                (Vec::new(), taken)
+            };
             // Batch service: each sampled time is α + βᵢ, so n requests
             // in one dispatch cost Σ sᵢ − (n−1)·α (one dispatch cost, n
             // marginals); α is clamped into [0, s̄(1)] of the *executing*
             // pool's rung. At B = 1 this is the sample itself.
             let alpha_k = alpha.clamp(0.0, plan.ladder[exec].mean_ms * speed);
-            let svc = (0..take)
-                .map(|_| service.sample_ms(exec, &mut rng) * speed)
-                .sum::<f64>()
-                - (take as f64 - 1.0) * alpha_k;
+            let svc = if live.is_empty() {
+                0.0
+            } else {
+                (0..live.len())
+                    .map(|_| service.sample_ms(exec, &mut rng) * speed)
+                    .sum::<f64>()
+                    - (live.len() as f64 - 1.0) * alpha_k
+            };
             let finish = start + svc.max(0.0);
             busy[slot] = finish;
-            for (id, arr_ms) in taken {
-                records.push(RequestRecord {
-                    id,
-                    arrival_ms: arr_ms,
-                    start_ms: start,
-                    finish_ms: finish,
-                    config_idx: exec,
-                    accuracy: plan.ladder[exec].accuracy,
-                    success: None,
-                });
+            // A too-slow batch fails every request in it (the live
+            // timeout gate measures the same start→finish span).
+            let batch_timed_out = resilience.timed_out(finish - start);
+            if batch_timed_out {
+                counters.timeouts += live.len() as u64;
+            }
+            for item in live {
+                if batch_timed_out {
+                    hv.record(p, false, finish);
+                    retry_or_fail_sim(
+                        topo,
+                        faults,
+                        resilience,
+                        &mut hv,
+                        &mut queues,
+                        &mut routers,
+                        &mut pool_queued,
+                        &mut queued_total,
+                        observed,
+                        item,
+                        finish,
+                        &mut counters,
+                    );
+                } else {
+                    hv.record(p, true, finish);
+                    records.push(RequestRecord {
+                        id: item.0,
+                        arrival_ms: item.1,
+                        start_ms: start,
+                        finish_ms: finish,
+                        config_idx: exec,
+                        accuracy: plan.ladder[exec].accuracy,
+                        success: None,
+                    });
+                }
+            }
+            for item in flaked {
+                hv.record(p, false, finish);
+                retry_or_fail_sim(
+                    topo,
+                    faults,
+                    resilience,
+                    &mut hv,
+                    &mut queues,
+                    &mut routers,
+                    &mut pool_queued,
+                    &mut queued_total,
+                    observed,
+                    item,
+                    finish,
+                    &mut counters,
+                );
             }
             // Departure observation (once per batch).
             let sig = pool_queued[topo.pool_for_rung(observed)];
@@ -330,10 +537,22 @@ pub fn simulate_topology_faults<P: ScalingPolicy, S: ServiceModel>(
                     continue;
                 }
             }
-            let rp = topo.pool_for_rung(observed);
+            // Health-aware routing (resilience only): a rung band whose
+            // home pool is dark or breaker-open remaps to the nearest
+            // surviving pool, exactly like the live injector.
+            let rp = if resilience.enabled {
+                let (rp, moved) =
+                    topo.pool_for_rung_routable(observed, |q| hv.routable(q, arr_ms, faults));
+                if moved {
+                    counters.failovers += 1;
+                }
+                rp
+            } else {
+                topo.pool_for_rung(observed)
+            };
             let shard = topo.route(rp, routers[rp]);
             routers[rp] += 1;
-            queues[shard].push_back((next_id, arr_ms));
+            queues[shard].push_back((next_id, arr_ms, arr_ms, 0u32));
             queued_total += 1;
             pool_queued[rp] += 1;
             next_id += 1;
@@ -366,5 +585,17 @@ pub fn simulate_topology_faults<P: ScalingPolicy, S: ServiceModel>(
     }
 
     records.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
-    SimOutcome { records, switches, steals, spills, rejected: rejected_total }
+    SimOutcome {
+        records,
+        switches,
+        steals,
+        spills,
+        rejected: rejected_total,
+        failed: counters.failed,
+        retries: counters.retries,
+        panics_recovered: 0,
+        timeouts: counters.timeouts,
+        breaker_trips: hv.breaker_trips,
+        failovers: counters.failovers,
+    }
 }

@@ -84,7 +84,7 @@ pub mod engine;
 pub mod service;
 pub mod theory;
 
-pub use engine::{simulate_topology, simulate_topology_faults};
+pub use engine::{simulate_topology, simulate_topology_faults, simulate_topology_resilient};
 pub use service::{
     DeterministicService, ExponentialService, LognormalService, ParetoService, ServiceModel,
 };
@@ -114,9 +114,26 @@ pub struct SimOutcome {
     pub spills: u64,
     /// Arrivals turned away by an injected fault (queue squeeze, or a
     /// dark pool's unreachable backlog). Always 0 without a
-    /// [`crate::workload::FaultPlan`]; `records.len() + rejected`
-    /// equals the arrival count.
+    /// [`crate::workload::FaultPlan`]; the extended conservation law
+    /// `records.len() + rejected + failed` equals the arrival count
+    /// (`failed` is always 0 outside
+    /// [`simulate_topology_resilient`] with failures injected).
     pub rejected: usize,
+    /// Requests that failed terminally (injected flake or timeout with
+    /// no retry admitted).
+    pub failed: usize,
+    /// Failed requests re-enqueued through health-aware routing.
+    pub retries: u64,
+    /// Mirrors the live counter; the DES has no panics, so always 0.
+    pub panics_recovered: u64,
+    /// Completions discarded for exceeding the resilience request
+    /// timeout.
+    pub timeouts: u64,
+    /// Circuit-breaker open transitions across all pools.
+    pub breaker_trips: u64,
+    /// Requests routed to a non-home pool because the home pool was
+    /// dark or breaker-open.
+    pub failovers: u64,
 }
 
 /// Simulate serving `arrivals` (seconds) under `policy` on a single

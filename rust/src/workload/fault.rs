@@ -7,15 +7,24 @@
 //! time, so a live run and a simulation of the same plan degrade at the
 //! same (virtual) instants.
 //!
-//! Three fault shapes (the Salesforce production-study failure modes):
+//! Four fault shapes (the Salesforce production-study failure modes):
 //!
-//! * [`Fault::PoolDark`] — a whole pool stops serving at `at_s`; its
-//!   backlog is either absorbed by other pools' spill-when-dry or
-//!   counted rejected, so `served + rejected == arrivals` still holds;
+//! * [`Fault::PoolDark`] — a whole pool stops serving at `at_s`,
+//!   optionally recovering at `until_s` (the windowed `dark:1@24-60`
+//!   grammar); open-ended darkness (`dark:1@24`, `until_s: None`) keeps
+//!   the historical semantics bit-for-bit: the backlog is either
+//!   absorbed by other pools' spill-when-dry or counted rejected, so
+//!   `served + rejected + failed == arrivals` still holds;
 //! * [`Fault::Slowdown`] — a pool's service times stretch ×`factor`
 //!   over a window (thermal throttling, noisy neighbor);
 //! * [`Fault::QueueSqueeze`] — the admission bound tightens to
-//!   `capacity` over a window (an upstream proxy shrinking buffers).
+//!   `capacity` over a window (an upstream proxy shrinking buffers);
+//! * [`Fault::EngineFlaky`] — a pool's engine fails a deterministic
+//!   pseudo-random `rate` fraction of requests arriving inside the
+//!   window (`flaky:1x0.2@20-40`). The per-request coin is a pure hash
+//!   of (request id, attempt), so the live executor and the DES fail
+//!   the *same* requests — the driver for retry / circuit-breaker
+//!   tests without a real failing backend.
 
 use anyhow::{bail, Context, Result};
 
@@ -23,13 +32,19 @@ use anyhow::{bail, Context, Result};
 /// clock as arrival timestamps).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Fault {
-    /// Pool `pool` stops dequeuing at `at_s` (workers crash / go dark).
-    PoolDark { pool: usize, at_s: f64 },
+    /// Pool `pool` stops dequeuing at `at_s` (workers crash / go dark)
+    /// and — when `until_s` is set — recovers at `until_s`.
+    PoolDark { pool: usize, at_s: f64, until_s: Option<f64> },
     /// Pool `pool` serves ×`factor` slower during `[from_s, to_s)`.
     Slowdown { pool: usize, factor: f64, from_s: f64, to_s: f64 },
     /// Total queue admission bound drops to `capacity` during
     /// `[from_s, to_s)`.
     QueueSqueeze { capacity: usize, from_s: f64, to_s: f64 },
+    /// Pool `pool`'s engine fails a `rate` fraction of the requests
+    /// that *arrived* during `[from_s, to_s)` (window keyed on arrival
+    /// time so live and DES agree deterministically; the coin is
+    /// [`FaultPlan::flaky_fails`]).
+    EngineFlaky { pool: usize, rate: f64, from_s: f64, to_s: f64 },
 }
 
 /// A set of faults applied to one run. `Default` is the empty plan
@@ -37,6 +52,15 @@ pub enum Fault {
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct FaultPlan {
     pub faults: Vec<Fault>,
+}
+
+/// SplitMix64 — the per-request flaky coin's mixer. A pure function, so
+/// the same (id, attempt) flips the same coin in every executor.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
 }
 
 impl FaultPlan {
@@ -60,15 +84,48 @@ impl FaultPlan {
         self.faults
             .iter()
             .filter_map(|f| match f {
-                Fault::PoolDark { pool: p, at_s } if *p == pool => Some(at_s * 1000.0),
+                Fault::PoolDark { pool: p, at_s, .. } if *p == pool => Some(at_s * 1000.0),
                 _ => None,
             })
             .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 
+    /// Recovery time (ms) of the earliest dark window of `pool`:
+    /// `Some(t)` for a windowed fault, `Some(∞)` for open-ended
+    /// darkness, `None` when the pool never goes dark.
+    pub fn dark_until_ms(&self, pool: usize) -> Option<f64> {
+        self.faults
+            .iter()
+            .filter_map(|f| match f {
+                Fault::PoolDark { pool: p, at_s, until_s } if *p == pool => {
+                    Some((at_s * 1000.0, until_s.map_or(f64::INFINITY, |u| u * 1000.0)))
+                }
+                _ => None,
+            })
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .map(|(_, u)| u)
+    }
+
+    /// Is `pool` inside a dark window at `t_ms`? (Open-ended darkness
+    /// never ends.)
+    pub fn is_dark_at_ms(&self, pool: usize, t_ms: f64) -> bool {
+        self.faults.iter().any(|f| match f {
+            Fault::PoolDark { pool: p, at_s, until_s } => {
+                *p == pool && t_ms >= at_s * 1000.0 && until_s.is_none_or(|u| t_ms < u * 1000.0)
+            }
+            _ => false,
+        })
+    }
+
     /// Does any fault take a pool dark?
     pub fn any_dark(&self) -> bool {
         self.faults.iter().any(|f| matches!(f, Fault::PoolDark { .. }))
+    }
+
+    /// Does any fault take a pool dark *forever* (no recovery window)?
+    /// Only open-ended darkness can strand backlog unreachably.
+    pub fn any_dark_forever(&self) -> bool {
+        self.faults.iter().any(|f| matches!(f, Fault::PoolDark { until_s: None, .. }))
     }
 
     /// Service-time stretch factor of `pool` at `t_ms` (product of the
@@ -101,13 +158,45 @@ impl FaultPlan {
             .min()
     }
 
+    /// Does any fault inject engine flakiness?
+    pub fn any_flaky(&self) -> bool {
+        self.faults.iter().any(|f| matches!(f, Fault::EngineFlaky { .. }))
+    }
+
+    /// The deterministic flaky coin: does attempt `attempt` of request
+    /// `id` — which arrived at `arrival_ms` and is executing on `pool`
+    /// — fail?
+    ///
+    /// The window is keyed on the request's *arrival* time (identical
+    /// in both executors — dispatch wall-clock is not), and the coin is
+    /// a pure [`splitmix64`] hash of `(id, attempt)`, so the live
+    /// server and the DES fail exactly the same attempts. Retries flip
+    /// a fresh coin (attempt increments), so a bounded-retry policy
+    /// recovers a `1 - rateⁿ` fraction of the window's failures.
+    pub fn flaky_fails(&self, pool: usize, id: u64, attempt: u32, arrival_ms: f64) -> bool {
+        for f in &self.faults {
+            if let Fault::EngineFlaky { pool: p, rate, from_s, to_s } = f {
+                if *p == pool && arrival_ms >= from_s * 1000.0 && arrival_ms < to_s * 1000.0 {
+                    let h = splitmix64(id ^ ((attempt as u64) << 48) ^ 0xc0ff_ee00_dead_beef);
+                    let unit = (h >> 11) as f64 / (1u64 << 53) as f64;
+                    if unit < *rate {
+                        return true;
+                    }
+                }
+            }
+        }
+        false
+    }
+
     /// Parse a comma-separated fault list:
     ///
-    /// * `dark:<pool>@<t>` — pool dark at `t` seconds;
+    /// * `dark:<pool>@<t>` — pool dark at `t` seconds (open-ended);
+    /// * `dark:<pool>@<t>-<u>` — pool dark over `[t, u)` (recovers);
     /// * `slow:<pool>x<factor>@<from>-<to>` — slowdown window;
-    /// * `squeeze:<capacity>@<from>-<to>` — admission squeeze window.
+    /// * `squeeze:<capacity>@<from>-<to>` — admission squeeze window;
+    /// * `flaky:<pool>x<rate>@<from>-<to>` — engine error window.
     ///
-    /// Example: `dark:1@60,slow:0x2.5@30-90,squeeze:64@100-140`.
+    /// Example: `dark:1@20-60,slow:0x2.5@30-90,flaky:0x0.2@20-40`.
     pub fn parse(s: &str) -> Result<FaultPlan> {
         let mut plan = FaultPlan::default();
         for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
@@ -118,10 +207,24 @@ impl FaultPlan {
                 "dark" => {
                     let (pool, at) = rest
                         .split_once('@')
-                        .with_context(|| format!("fault {part:?}: expected dark:pool@t"))?;
+                        .with_context(|| format!("fault {part:?}: expected dark:pool@t[-u]"))?;
+                    let secs = |v: &str| -> Result<f64> {
+                        v.parse().with_context(|| format!("bad time in {part:?}"))
+                    };
+                    let (at_s, until_s) = match at.split_once('-') {
+                        Some((from, to)) => (secs(from)?, Some(secs(to)?)),
+                        None => (secs(at)?, None),
+                    };
+                    if let Some(u) = until_s {
+                        anyhow::ensure!(
+                            u > at_s,
+                            "fault {part:?}: recovery {u} must be after dark {at_s}"
+                        );
+                    }
                     plan.faults.push(Fault::PoolDark {
                         pool: pool.parse().with_context(|| format!("bad pool in {part:?}"))?,
-                        at_s: at.parse().with_context(|| format!("bad time in {part:?}"))?,
+                        at_s,
+                        until_s,
                     });
                 }
                 "slow" => {
@@ -158,6 +261,28 @@ impl FaultPlan {
                         to_s: to.parse().with_context(|| format!("bad to in {part:?}"))?,
                     });
                 }
+                "flaky" => {
+                    let (head, window) = rest
+                        .split_once('@')
+                        .with_context(|| format!("fault {part:?}: expected flaky:pxr@a-b"))?;
+                    let (pool, rate) = head
+                        .split_once('x')
+                        .with_context(|| format!("fault {part:?}: expected pool x rate"))?;
+                    let rate: f64 = rate.parse().with_context(|| format!("bad rate in {part:?}"))?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&rate),
+                        "fault {part:?}: rate {rate} outside [0, 1]"
+                    );
+                    let (from, to) = window
+                        .split_once('-')
+                        .with_context(|| format!("fault {part:?}: expected window a-b"))?;
+                    plan.faults.push(Fault::EngineFlaky {
+                        pool: pool.parse().with_context(|| format!("bad pool in {part:?}"))?,
+                        rate,
+                        from_s: from.parse().with_context(|| format!("bad from in {part:?}"))?,
+                        to_s: to.parse().with_context(|| format!("bad to in {part:?}"))?,
+                    });
+                }
                 other => bail!("unknown fault kind {other:?} in {part:?}"),
             }
         }
@@ -173,12 +298,18 @@ impl FaultPlan {
             .faults
             .iter()
             .map(|f| match f {
-                Fault::PoolDark { pool, at_s } => format!("dark:{pool}@{at_s}"),
+                Fault::PoolDark { pool, at_s, until_s: None } => format!("dark:{pool}@{at_s}"),
+                Fault::PoolDark { pool, at_s, until_s: Some(u) } => {
+                    format!("dark:{pool}@{at_s}-{u}")
+                }
                 Fault::Slowdown { pool, factor, from_s, to_s } => {
                     format!("slow:{pool}x{factor}@{from_s}-{to_s}")
                 }
                 Fault::QueueSqueeze { capacity, from_s, to_s } => {
                     format!("squeeze:{capacity}@{from_s}-{to_s}")
+                }
+                Fault::EngineFlaky { pool, rate, from_s, to_s } => {
+                    format!("flaky:{pool}x{rate}@{from_s}-{to_s}")
                 }
             })
             .collect();
@@ -195,26 +326,53 @@ mod tests {
         let plan = FaultPlan::none();
         assert!(plan.is_empty());
         assert!(!plan.any_dark());
+        assert!(!plan.any_dark_forever());
+        assert!(!plan.any_flaky());
         assert_eq!(plan.dark_at_ms(0), None);
+        assert_eq!(plan.dark_until_ms(0), None);
+        assert!(!plan.is_dark_at_ms(0, 1e6));
         assert_eq!(plan.slowdown_at_ms(0, 1e6), 1.0);
         assert_eq!(plan.capacity_at_ms(1e6), None);
+        assert!(!plan.flaky_fails(0, 7, 0, 1e6));
     }
 
     #[test]
     fn queries_respect_windows_and_pools() {
         let plan = FaultPlan::none()
-            .with(Fault::PoolDark { pool: 1, at_s: 60.0 })
+            .with(Fault::PoolDark { pool: 1, at_s: 60.0, until_s: None })
             .with(Fault::Slowdown { pool: 0, factor: 2.5, from_s: 30.0, to_s: 90.0 })
             .with(Fault::QueueSqueeze { capacity: 64, from_s: 100.0, to_s: 140.0 });
         assert!(plan.any_dark());
+        assert!(plan.any_dark_forever());
         assert_eq!(plan.dark_at_ms(1), Some(60_000.0));
         assert_eq!(plan.dark_at_ms(0), None);
+        assert_eq!(plan.dark_until_ms(1), Some(f64::INFINITY));
         assert_eq!(plan.slowdown_at_ms(0, 29_999.0), 1.0);
         assert_eq!(plan.slowdown_at_ms(0, 45_000.0), 2.5);
         assert_eq!(plan.slowdown_at_ms(1, 45_000.0), 1.0);
         assert_eq!(plan.slowdown_at_ms(0, 90_000.0), 1.0);
         assert_eq!(plan.capacity_at_ms(99_999.0), None);
         assert_eq!(plan.capacity_at_ms(120_000.0), Some(64));
+    }
+
+    #[test]
+    fn dark_windows_open_and_close() {
+        let plan =
+            FaultPlan::none().with(Fault::PoolDark { pool: 1, at_s: 20.0, until_s: Some(60.0) });
+        assert!(plan.any_dark());
+        assert!(!plan.any_dark_forever(), "a windowed fault recovers");
+        assert_eq!(plan.dark_at_ms(1), Some(20_000.0));
+        assert_eq!(plan.dark_until_ms(1), Some(60_000.0));
+        assert!(!plan.is_dark_at_ms(1, 19_999.0));
+        assert!(plan.is_dark_at_ms(1, 20_000.0));
+        assert!(plan.is_dark_at_ms(1, 59_999.0));
+        assert!(!plan.is_dark_at_ms(1, 60_000.0), "recovered at the window end");
+        assert!(!plan.is_dark_at_ms(0, 30_000.0), "other pools unaffected");
+        // Open-ended darkness never ends (the pinned PR-6 behavior).
+        let forever =
+            FaultPlan::none().with(Fault::PoolDark { pool: 1, at_s: 20.0, until_s: None });
+        assert!(forever.is_dark_at_ms(1, 1e12));
+        assert!(forever.any_dark_forever());
     }
 
     #[test]
@@ -230,11 +388,58 @@ mod tests {
     }
 
     #[test]
+    fn flaky_coin_is_deterministic_and_windowed() {
+        let plan = FaultPlan::none().with(Fault::EngineFlaky {
+            pool: 0,
+            rate: 0.4,
+            from_s: 20.0,
+            to_s: 40.0,
+        });
+        assert!(plan.any_flaky());
+        // Deterministic: the same (id, attempt) always flips the same way.
+        for id in 0..200u64 {
+            assert_eq!(plan.flaky_fails(0, id, 0, 30_000.0), plan.flaky_fails(0, id, 0, 30_000.0));
+        }
+        // Outside the arrival window, and on other pools: never fails.
+        assert!((0..200).all(|id| !plan.flaky_fails(0, id, 0, 19_999.0)));
+        assert!((0..200).all(|id| !plan.flaky_fails(0, id, 0, 40_000.0)));
+        assert!((0..200).all(|id| !plan.flaky_fails(1, id, 0, 30_000.0)));
+        // The empirical rate is near the configured one.
+        let fails = (0..2000u64).filter(|&id| plan.flaky_fails(0, id, 0, 30_000.0)).count();
+        let frac = fails as f64 / 2000.0;
+        assert!((frac - 0.4).abs() < 0.05, "empirical flaky rate {frac} vs 0.4");
+        // A retry flips a fresh coin: some first-attempt failures pass.
+        let recovered = (0..2000u64)
+            .filter(|&id| plan.flaky_fails(0, id, 0, 30_000.0))
+            .filter(|&id| !plan.flaky_fails(0, id, 1, 30_000.0))
+            .count();
+        assert!(recovered > 0, "retries must be able to recover flaky failures");
+    }
+
+    #[test]
     fn parse_roundtrips_describe() {
         let text = "dark:1@60,slow:0x2.5@30-90,squeeze:64@100-140";
         let plan = FaultPlan::parse(text).unwrap();
         assert_eq!(plan.faults.len(), 3);
         assert_eq!(plan.describe(), text);
+        assert_eq!(FaultPlan::parse(&plan.describe()).unwrap(), plan);
+        // The open-ended form parses exactly as before the windowed
+        // grammar existed (pinned).
+        assert_eq!(
+            FaultPlan::parse("dark:1@24").unwrap().faults,
+            vec![Fault::PoolDark { pool: 1, at_s: 24.0, until_s: None }]
+        );
+        // Windowed dark and flaky round-trip too.
+        let chaos = "dark:1@24-60,flaky:0x0.2@20-40";
+        let plan = FaultPlan::parse(chaos).unwrap();
+        assert_eq!(
+            plan.faults,
+            vec![
+                Fault::PoolDark { pool: 1, at_s: 24.0, until_s: Some(60.0) },
+                Fault::EngineFlaky { pool: 0, rate: 0.2, from_s: 20.0, to_s: 40.0 },
+            ]
+        );
+        assert_eq!(plan.describe(), chaos);
         assert_eq!(FaultPlan::parse(&plan.describe()).unwrap(), plan);
     }
 
@@ -244,6 +449,9 @@ mod tests {
         assert!(FaultPlan::parse("nova:1@2").is_err());
         assert!(FaultPlan::parse("slow:0@30-90").is_err());
         assert!(FaultPlan::parse("squeeze:x@1-2").is_err());
+        assert!(FaultPlan::parse("dark:1@60-20").is_err(), "recovery before dark");
+        assert!(FaultPlan::parse("flaky:0x1.5@1-2").is_err(), "rate outside [0,1]");
+        assert!(FaultPlan::parse("flaky:0@1-2").is_err(), "missing rate");
         assert!(FaultPlan::parse("").unwrap().is_empty());
     }
 }

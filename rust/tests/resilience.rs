@@ -1,0 +1,543 @@
+//! Integration: the resilience plane under chaos — panic-safe workers,
+//! engine-error containment, bounded retries, windowed dark pools with
+//! failover-and-recover, flaky-engine windows, and circuit breakers —
+//! in BOTH executors, with the extended conservation law
+//! `served + rejected + failed == arrivals` holding everywhere.
+//!
+//! Two pins anchor the PR:
+//!
+//! 1. **Disabled parity** — `ResilienceConfig::default()` (off) plus an
+//!    empty fault plan reproduces the plain DES engine bit for bit, and
+//!    the live server with resilience off reports all-zero resilience
+//!    counters.
+//! 2. **Failover beats drain** — under the same windowed dark fault,
+//!    same arrivals and same seed, resilience-on yields strictly higher
+//!    SLO goodput (`in-SLO served / arrivals`) than resilience-off, in
+//!    both the DES and the live runtime.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use compass::planner::{derive_plan, AqmParams, LatencyProfile, Plan, ProfiledConfig};
+use compass::serving::executor::RequestEngine;
+use compass::serving::{parse_pools, serve, ResilienceConfig, ServeOptions, StaticPolicy, Topology};
+use compass::sim::{simulate_topology, simulate_topology_resilient, LognormalService, SimOutcome};
+use compass::workflows::ExecOutcome;
+use compass::workload::{Fault, FaultPlan};
+
+/// Synthetic two-rung plan (fast 20 ms, accurate 90 ms), same idiom as
+/// the scenario suite.
+fn plan2() -> Plan {
+    let mk = |label: &str, acc: f64, mean: f64, p95: f64| ProfiledConfig {
+        config: vec![],
+        label: label.into(),
+        accuracy: acc,
+        latency: LatencyProfile { mean_ms: mean, p50_ms: mean, p95_ms: p95, runs: 10 },
+    };
+    derive_plan(
+        &[mk("fast", 0.76, 20.0, 28.0), mk("accurate", 0.85, 90.0, 120.0)],
+        AqmParams::for_slo(300.0),
+    )
+}
+
+fn steady_arrivals(qps: f64, dur: f64) -> Vec<f64> {
+    let n = (qps * dur) as usize;
+    (0..n).map(|i| i as f64 / qps).collect()
+}
+
+/// Fraction of *arrivals* answered within `slo_ms` — unlike plain
+/// compliance (computed over survivors), a drain-rejected or failed
+/// request counts against goodput, so shedding load cannot flatter it.
+fn slo_goodput(records: &[compass::metrics::RequestRecord], arrivals: usize, slo_ms: f64) -> f64 {
+    if arrivals == 0 {
+        return 0.0;
+    }
+    records.iter().filter(|r| r.latency_ms() <= slo_ms).count() as f64 / arrivals as f64
+}
+
+fn conservation(label: &str, served: usize, rejected: usize, failed: usize, arrivals: usize) {
+    assert_eq!(
+        served + rejected + failed,
+        arrivals,
+        "{label}: served {served} + rejected {rejected} + failed {failed} != arrivals {arrivals}"
+    );
+}
+
+fn unique_ids(records: &[compass::metrics::RequestRecord], label: &str) {
+    let mut ids: Vec<u64> = records.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    let n = ids.len();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "{label}: a retried request was served twice");
+}
+
+// ---------------------------------------------------------------------
+// Scripted engines
+// ---------------------------------------------------------------------
+
+/// Sleeps out a fixed service time, always succeeds.
+struct SleepEngine {
+    service_ms: f64,
+}
+
+impl RequestEngine for SleepEngine {
+    fn execute(&mut self, _idx: usize) -> Result<ExecOutcome> {
+        std::thread::sleep(Duration::from_secs_f64(self.service_ms / 1e3));
+        Ok(ExecOutcome { accuracy: 0.8, success: None })
+    }
+
+    fn rungs(&self) -> usize {
+        2
+    }
+}
+
+/// Returns `Err` for the first `budget` executions across ALL workers
+/// (the shared counter makes the failure count exact), then succeeds.
+struct ErrEngine {
+    budget: Arc<AtomicUsize>,
+}
+
+impl RequestEngine for ErrEngine {
+    fn execute(&mut self, _idx: usize) -> Result<ExecOutcome> {
+        std::thread::sleep(Duration::from_millis(1));
+        if take_token(&self.budget) {
+            anyhow::bail!("injected engine error");
+        }
+        Ok(ExecOutcome { accuracy: 0.8, success: None })
+    }
+
+    fn rungs(&self) -> usize {
+        2
+    }
+}
+
+/// Panics for the first `budget` executions across ALL workers, then
+/// succeeds — exercises the supervisor's catch-and-respawn path.
+struct PanicEngine {
+    budget: Arc<AtomicUsize>,
+}
+
+impl RequestEngine for PanicEngine {
+    fn execute(&mut self, _idx: usize) -> Result<ExecOutcome> {
+        std::thread::sleep(Duration::from_millis(1));
+        if take_token(&self.budget) {
+            panic!("injected worker panic");
+        }
+        Ok(ExecOutcome { accuracy: 0.8, success: None })
+    }
+
+    fn rungs(&self) -> usize {
+        2
+    }
+}
+
+/// Decrement `budget` if positive; true while tokens remain.
+fn take_token(budget: &AtomicUsize) -> bool {
+    budget
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+        .is_ok()
+}
+
+// ---------------------------------------------------------------------
+// Live executor: error containment and panic-safe supervision
+// ---------------------------------------------------------------------
+
+#[test]
+fn live_engine_errors_no_longer_abort_the_run() {
+    // Regression (pre-resilience bug): an engine `Err` propagated
+    // through `?` in the worker loop, silently dropping every request
+    // still queued behind it and poisoning the join. Now the error
+    // fails only its own request — even with resilience disabled.
+    let n = 120;
+    let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.002).collect();
+    let budget = Arc::new(AtomicUsize::new(3));
+    let b = budget.clone();
+    let out = serve(
+        move || Ok(ErrEngine { budget: b.clone() }),
+        Box::new(StaticPolicy::new(0, "fast")),
+        &arrivals,
+        &ServeOptions { workers: 2, ..ServeOptions::default() },
+    )
+    .expect("an engine error must not abort serve()");
+    conservation("live err", out.records.len(), out.rejected, out.failed, n);
+    assert_eq!(out.failed, 3, "each injected error fails exactly its own request");
+    assert_eq!(out.retries, 0, "resilience off: no retries");
+    assert_eq!(budget.load(Ordering::SeqCst), 0, "all injected errors fired");
+    unique_ids(&out.records, "live err");
+}
+
+#[test]
+fn live_panics_are_caught_and_the_worker_respawns() {
+    let n = 120;
+    let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.002).collect();
+    let budget = Arc::new(AtomicUsize::new(2));
+    let b = budget.clone();
+    let out = serve(
+        move || Ok(PanicEngine { budget: b.clone() }),
+        Box::new(StaticPolicy::new(0, "fast")),
+        &arrivals,
+        &ServeOptions { workers: 2, ..ServeOptions::default() },
+    )
+    .expect("a worker panic must not abort serve()");
+    conservation("live panic", out.records.len(), out.rejected, out.failed, n);
+    assert_eq!(out.panics_recovered, 2, "both injected panics were supervised");
+    assert_eq!(out.failed, 2, "resilience off: a panicked request fails terminally");
+    assert!(out.records.len() >= n - 2, "the respawned engine kept serving");
+    unique_ids(&out.records, "live panic");
+}
+
+#[test]
+fn live_retries_recover_errors_when_resilience_is_on() {
+    let n = 120;
+    let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.002).collect();
+    let budget = Arc::new(AtomicUsize::new(3));
+    let b = budget.clone();
+    let out = serve(
+        move || Ok(ErrEngine { budget: b.clone() }),
+        Box::new(StaticPolicy::new(0, "fast")),
+        &arrivals,
+        &ServeOptions {
+            workers: 2,
+            resilience: ResilienceConfig::enabled(),
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    conservation("live retry", out.records.len(), out.rejected, out.failed, n);
+    assert!(out.retries >= 1, "an injected error must re-enqueue, not fail outright");
+    // Every error is either retried into a success or (if one request
+    // drew several error tokens) counted failed — never lost.
+    assert!(out.records.len() + out.failed >= n);
+    unique_ids(&out.records, "live retry");
+}
+
+#[test]
+fn live_panics_are_retried_when_resilience_is_on() {
+    let n = 120;
+    let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.002).collect();
+    let budget = Arc::new(AtomicUsize::new(2));
+    let b = budget.clone();
+    let out = serve(
+        move || Ok(PanicEngine { budget: b.clone() }),
+        Box::new(StaticPolicy::new(0, "fast")),
+        &arrivals,
+        &ServeOptions {
+            workers: 2,
+            resilience: ResilienceConfig::enabled(),
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    conservation("live panic+retry", out.records.len(), out.rejected, out.failed, n);
+    assert_eq!(out.panics_recovered, 2);
+    assert!(out.retries >= 1, "a supervised panic must re-enqueue its request");
+    unique_ids(&out.records, "live panic+retry");
+}
+
+#[test]
+fn live_resilience_off_reports_zero_counters() {
+    let n = 60;
+    let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.003).collect();
+    let out = serve(
+        move || Ok(SleepEngine { service_ms: 1.0 }),
+        Box::new(StaticPolicy::new(0, "fast")),
+        &arrivals,
+        &ServeOptions { workers: 2, ..ServeOptions::default() },
+    )
+    .unwrap();
+    conservation("live off", out.records.len(), out.rejected, out.failed, n);
+    let counters = (out.failed, out.retries, out.panics_recovered, out.timeouts, out.failovers);
+    assert_eq!(counters, (0, 0, 0, 0, 0), "disabled resilience must not count anything");
+    assert_eq!(out.breaker_trips, 0);
+}
+
+// ---------------------------------------------------------------------
+// Live executor: flaky windows and windowed dark pools
+// ---------------------------------------------------------------------
+
+#[test]
+fn live_flaky_window_is_deterministic_and_conserves() {
+    // The flaky coin hashes (pool, id, attempt) with the window keyed
+    // on ARRIVAL time, so the exact failure set is computable up front.
+    let n = 200;
+    let arrivals: Vec<f64> = (0..n as u64).map(|i| i as f64 * 0.002).collect();
+    let faults =
+        FaultPlan::none().with(Fault::EngineFlaky { pool: 0, rate: 0.3, from_s: 0.1, to_s: 0.3 });
+    let expect_failed = (0..n as u64)
+        .filter(|&i| faults.flaky_fails(0, i, 0, arrivals[i as usize] * 1e3))
+        .count();
+    assert!(expect_failed >= 1, "the window must catch at least one arrival");
+    let out = serve(
+        move || Ok(SleepEngine { service_ms: 1.0 }),
+        Box::new(StaticPolicy::new(0, "fast")),
+        &arrivals,
+        &ServeOptions { workers: 2, faults: faults.clone(), ..ServeOptions::default() },
+    )
+    .unwrap();
+    conservation("live flaky", out.records.len(), out.rejected, out.failed, n);
+    assert_eq!(
+        out.failed, expect_failed,
+        "resilience off: exactly the coin-failed arrivals fail terminally"
+    );
+    unique_ids(&out.records, "live flaky");
+}
+
+#[test]
+fn live_windowed_dark_fails_over_and_recovers() {
+    let pools = parse_pools("fast:2:1.0,acc:2:1.0").unwrap();
+    let n = 300;
+    let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.003).collect();
+    let faults = FaultPlan::none().with(Fault::PoolDark { pool: 1, at_s: 0.2, until_s: Some(0.6) });
+    let out = serve(
+        move || Ok(SleepEngine { service_ms: 2.0 }),
+        Box::new(StaticPolicy::new(1, "acc")),
+        &arrivals,
+        &ServeOptions {
+            pools: pools.clone(),
+            faults: faults.clone(),
+            resilience: ResilienceConfig::enabled(),
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    conservation("live dark failover", out.records.len(), out.rejected, out.failed, n);
+    assert!(out.failovers >= 1, "in-window load must remap to the surviving pool");
+    assert_eq!(out.rejected, 0, "failover replaces drain-rejection");
+    unique_ids(&out.records, "live dark failover");
+}
+
+// ---------------------------------------------------------------------
+// DES mirror: parity, determinism, chaos conservation
+// ---------------------------------------------------------------------
+
+#[test]
+fn des_disabled_resilience_is_bit_identical_to_the_plain_engine() {
+    let plan = plan2();
+    let arr = steady_arrivals(12.0, 60.0);
+    let svc = LognormalService::from_plan(&plan, 0.25);
+    let topo = Topology::uniform(2, 2);
+    let mut p1 = compass::serving::ElasticoPolicy::new(plan.clone());
+    let base = simulate_topology(&arr, &plan, &mut p1, &svc, 42, &topo, 1);
+    let mut p2 = compass::serving::ElasticoPolicy::new(plan.clone());
+    let res = simulate_topology_resilient(
+        &arr,
+        &plan,
+        &mut p2,
+        &svc,
+        42,
+        &topo,
+        1,
+        &FaultPlan::none(),
+        &ResilienceConfig::default(),
+    );
+    assert_eq!(base.records.len(), res.records.len());
+    for (x, y) in base.records.iter().zip(&res.records) {
+        assert_eq!(x, y, "disabled resilience must not perturb the DES");
+    }
+    assert_eq!(base.switches.len(), res.switches.len());
+    let counters = (res.failed, res.retries, res.timeouts, res.breaker_trips, res.failovers);
+    assert_eq!(counters, (0, 0, 0, 0, 0));
+}
+
+#[test]
+fn des_windowed_dark_disabled_pauses_and_serves_the_backlog() {
+    // Resilience OFF + a finite window = pause, not drain: the pool
+    // holds its queue through the outage and serves everything late.
+    let pools = parse_pools("fast:2:1.0,acc:2:1.0").unwrap();
+    let topo = Topology::from_pools(&pools, 0.0).unwrap();
+    let plan = plan2();
+    let svc = LognormalService::from_plan(&plan, 0.10);
+    let arr = steady_arrivals(8.0, 90.0);
+    let faults =
+        FaultPlan::none().with(Fault::PoolDark { pool: 1, at_s: 20.0, until_s: Some(60.0) });
+    let mut p = StaticPolicy::new(1, "acc");
+    let out = simulate_topology_resilient(
+        &arr,
+        &plan,
+        &mut p,
+        &svc,
+        42,
+        &topo,
+        1,
+        &faults,
+        &ResilienceConfig::default(),
+    );
+    conservation("des dark pause", out.records.len(), out.rejected, out.failed, arr.len());
+    assert_eq!(out.records.len(), arr.len(), "a finite window rejects nothing");
+    let worst = out.records.iter().map(|r| r.latency_ms()).fold(0.0, f64::max);
+    assert!(worst >= 10_000.0, "in-window arrivals must wait out the outage (worst {worst} ms)");
+}
+
+#[test]
+fn des_windowed_dark_resilient_fails_over_and_recovers() {
+    let pools = parse_pools("fast:2:1.0,acc:2:1.0").unwrap();
+    let topo = Topology::from_pools(&pools, 0.0).unwrap();
+    let plan = plan2();
+    let svc = LognormalService::from_plan(&plan, 0.10);
+    let arr = steady_arrivals(8.0, 90.0);
+    let faults =
+        FaultPlan::none().with(Fault::PoolDark { pool: 1, at_s: 20.0, until_s: Some(60.0) });
+    let mut p = StaticPolicy::new(1, "acc");
+    let out = simulate_topology_resilient(
+        &arr,
+        &plan,
+        &mut p,
+        &svc,
+        42,
+        &topo,
+        1,
+        &faults,
+        &ResilienceConfig::enabled(),
+    );
+    conservation("des dark failover", out.records.len(), out.rejected, out.failed, arr.len());
+    assert!(out.failovers >= 1, "in-window load must remap to the surviving pool");
+    assert_eq!(out.rejected, 0);
+    // Recovery: the run's tail (post-window arrivals) is healthy again —
+    // late arrivals come back within the SLO instead of queueing behind
+    // a dead pool.
+    let tail: Vec<_> = out.records.iter().filter(|r| r.arrival_ms >= 70_000.0).collect();
+    assert!(!tail.is_empty());
+    assert!(
+        tail.iter().all(|r| r.latency_ms() <= 5_000.0),
+        "post-recovery arrivals must not inherit the outage backlog"
+    );
+    unique_ids(&out.records, "des dark failover");
+}
+
+#[test]
+fn des_flaky_retries_are_deterministic() {
+    let topo = Topology::uniform(2, 2);
+    let plan = plan2();
+    let svc = LognormalService::from_plan(&plan, 0.10);
+    let arr = steady_arrivals(10.0, 60.0);
+    let faults = FaultPlan::none().with(Fault::EngineFlaky {
+        pool: 0,
+        rate: 0.25,
+        from_s: 15.0,
+        to_s: 45.0,
+    });
+    let run = |cfg: &ResilienceConfig| -> SimOutcome {
+        let mut p = StaticPolicy::new(0, "fast");
+        simulate_topology_resilient(&arr, &plan, &mut p, &svc, 42, &topo, 1, &faults, cfg)
+    };
+    // Resilience off: flakes are terminal failures, no retries.
+    let off = run(&ResilienceConfig::default());
+    conservation("des flaky off", off.records.len(), off.rejected, off.failed, arr.len());
+    assert!(off.failed >= 1, "the window must flake at least one request");
+    assert_eq!(off.retries, 0);
+    // Resilience on: flakes retry (fresh attempt => fresh coin) and
+    // mostly recover.
+    let on = run(&ResilienceConfig::enabled());
+    conservation("des flaky on", on.records.len(), on.rejected, on.failed, arr.len());
+    assert!(on.retries >= 1);
+    assert!(on.records.len() > off.records.len(), "retries must recover some flaked requests");
+    unique_ids(&on.records, "des flaky on");
+    // Bit-identical replay: the whole chaos run is deterministic.
+    let again = run(&ResilienceConfig::enabled());
+    assert_eq!(on.records.len(), again.records.len());
+    for (x, y) in on.records.iter().zip(&again.records) {
+        assert_eq!(x, y, "chaos DES must replay bit-identically");
+    }
+    assert_eq!(
+        (on.failed, on.retries, on.timeouts, on.breaker_trips, on.failovers),
+        (again.failed, again.retries, again.timeouts, again.breaker_trips, again.failovers)
+    );
+}
+
+#[test]
+fn des_breaker_trips_and_routes_around_a_failing_pool() {
+    // A fully flaky window on the home pool: the error EWMA trips the
+    // breaker, retries route to the surviving pool, and after the
+    // window + open interval a half-open probe recloses it.
+    let pools = parse_pools("fast:2:1.0,acc:2:1.0").unwrap();
+    let topo = Topology::from_pools(&pools, 0.0).unwrap();
+    let plan = plan2();
+    let svc = LognormalService::from_plan(&plan, 0.10);
+    let arr = steady_arrivals(10.0, 60.0);
+    let faults =
+        FaultPlan::none().with(Fault::EngineFlaky { pool: 0, rate: 1.0, from_s: 10.0, to_s: 30.0 });
+    let cfg = ResilienceConfig {
+        breaker_min_samples: 4,
+        breaker_alpha: 0.5,
+        breaker_threshold: 0.4,
+        breaker_open_ms: 2_000.0,
+        ..ResilienceConfig::enabled()
+    };
+    let mut p = StaticPolicy::new(0, "fast");
+    let out = simulate_topology_resilient(&arr, &plan, &mut p, &svc, 42, &topo, 1, &faults, &cfg);
+    conservation("des breaker", out.records.len(), out.rejected, out.failed, arr.len());
+    assert!(out.breaker_trips >= 1, "a 100% error window must trip the breaker");
+    assert!(out.failovers >= 1, "an open breaker must route load to the other pool");
+    // Reclose: post-window arrivals to the home pool are served again.
+    let tail: Vec<_> = out.records.iter().filter(|r| r.arrival_ms >= 40_000.0).collect();
+    assert!(tail.len() >= 10, "the half-open probe must reclose the breaker after the window");
+    unique_ids(&out.records, "des breaker");
+}
+
+// ---------------------------------------------------------------------
+// The acceptance pin: failover strictly beats drain under the same
+// windowed dark fault, in BOTH executors.
+// ---------------------------------------------------------------------
+
+#[test]
+fn des_failover_goodput_strictly_beats_drain_under_dark_window() {
+    let pools = parse_pools("fast:2:1.0,acc:2:1.0").unwrap();
+    let topo = Topology::from_pools(&pools, 0.0).unwrap();
+    let plan = plan2();
+    let svc = LognormalService::from_plan(&plan, 0.10);
+    let arr = steady_arrivals(8.0, 90.0);
+    let faults =
+        FaultPlan::none().with(Fault::PoolDark { pool: 1, at_s: 20.0, until_s: Some(60.0) });
+    let run = |cfg: &ResilienceConfig| -> SimOutcome {
+        let mut p = StaticPolicy::new(1, "acc");
+        simulate_topology_resilient(&arr, &plan, &mut p, &svc, 42, &topo, 1, &faults, cfg)
+    };
+    let on = run(&ResilienceConfig::enabled());
+    let off = run(&ResilienceConfig::default());
+    conservation("des pin on", on.records.len(), on.rejected, on.failed, arr.len());
+    conservation("des pin off", off.records.len(), off.rejected, off.failed, arr.len());
+    let g_on = slo_goodput(&on.records, arr.len(), plan.slo_ms);
+    let g_off = slo_goodput(&off.records, arr.len(), plan.slo_ms);
+    assert!(
+        g_on > g_off,
+        "resilience must strictly beat drain/pause in the DES: on {g_on:.3} vs off {g_off:.3}"
+    );
+}
+
+#[test]
+fn live_failover_goodput_strictly_beats_drain_under_dark_window() {
+    let pools = parse_pools("fast:2:1.0,acc:2:1.0").unwrap();
+    let n = 400;
+    let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.003).collect();
+    let faults = FaultPlan::none().with(Fault::PoolDark { pool: 1, at_s: 0.3, until_s: Some(0.9) });
+    let run = |cfg: ResilienceConfig| {
+        serve(
+            move || Ok(SleepEngine { service_ms: 2.0 }),
+            Box::new(StaticPolicy::new(1, "acc")),
+            &arrivals,
+            &ServeOptions {
+                pools: pools.clone(),
+                faults: faults.clone(),
+                resilience: cfg,
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap()
+    };
+    let on = run(ResilienceConfig::enabled());
+    let off = run(ResilienceConfig::default());
+    conservation("live pin on", on.records.len(), on.rejected, on.failed, n);
+    conservation("live pin off", off.records.len(), off.rejected, off.failed, n);
+    // 100 ms SLO: the 600 ms pause forces every in-window arrival on
+    // the paused path far past it, while failover keeps them at ~2 ms
+    // service on the surviving pool.
+    let g_on = slo_goodput(&on.records, n, 100.0);
+    let g_off = slo_goodput(&off.records, n, 100.0);
+    assert!(
+        g_on > g_off,
+        "resilience must strictly beat drain/pause live: on {g_on:.3} vs off {g_off:.3}"
+    );
+    assert!(on.failovers >= 1);
+}

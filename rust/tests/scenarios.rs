@@ -6,7 +6,7 @@
 //! [`ScenarioSpec`] (spec + seed) produces bit-identical arrivals on
 //! every call, and that one vector drives the live `serve()` executor
 //! and the DES `simulate_topology` with every request accounted for in
-//! both worlds (`served + rejected == arrivals`).
+//! both worlds (`served + rejected + failed == arrivals`).
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -101,7 +101,7 @@ fn des_pool_dark_conserves_and_spills() {
     let plan = plan2();
     let svc = LognormalService::from_plan(&plan, 0.10);
     let arr = steady_arrivals(8.0, 60.0, 5);
-    let faults = FaultPlan::none().with(Fault::PoolDark { pool: 1, at_s: 20.0 });
+    let faults = FaultPlan::none().with(Fault::PoolDark { pool: 1, at_s: 20.0, until_s: None });
     // Static-Accurate routes everything to the (soon dark) slow pool.
     let mut p = StaticPolicy::new(1, "acc");
     let out = simulate_topology_faults(&arr, &plan, &mut p, &svc, 42, &topo, 1, &faults);
@@ -224,7 +224,7 @@ fn live_pool_dark_conserves_every_arrival() {
         &arrivals,
         &ServeOptions {
             pools: pools.clone(),
-            faults: FaultPlan::none().with(Fault::PoolDark { pool: 1, at_s: 0.2 }),
+            faults: FaultPlan::none().with(Fault::PoolDark { pool: 1, at_s: 0.2, until_s: None }),
             ..ServeOptions::default()
         },
     )
@@ -264,9 +264,16 @@ fn sweep_writes_schema_valid_json() {
     assert_eq!(cells.len(), 2);
     for (key, cell) in cells {
         let f = |k: &str| cell.get(k).unwrap().as_f64().unwrap();
-        assert_eq!(f("served") + f("rejected"), f("arrivals"), "conservation violated in {key}");
+        assert_eq!(
+            f("served") + f("rejected") + f("failed"),
+            f("arrivals"),
+            "conservation violated in {key}"
+        );
         let comp = f("slo_compliance");
         assert!((0.0..=1.0).contains(&comp), "{key}: compliance {comp}");
+        let goodput = f("slo_goodput");
+        assert!((0.0..=1.0).contains(&goodput), "{key}: slo_goodput {goodput}");
+        assert!(cell.get("resilience").unwrap().as_str().is_some(), "{key}: resilience tag");
         assert!(f("p50_ms") <= f("p95_ms") && f("p95_ms") <= f("p99_ms"), "{key}");
     }
     let dark = &cells["pool_dark|pooled-2x2|Static-Accurate"];
@@ -287,6 +294,10 @@ fn smoke_matrix_is_a_subset_and_meets_the_floor() {
     // pool of pooled-2x2, squeeze and slowdown apply everywhere.
     assert!(!faults_for("pool_dark", 30.0, 2).is_empty());
     assert!(!faults_for("squeeze", 30.0, 1).is_empty());
+    // Chaos cells: the windowed dark pair and the flaky engine window.
+    assert!(!faults_for("dark_recover", 30.0, 2).is_empty());
+    assert!(!faults_for("dark_drain", 30.0, 2).is_empty());
+    assert!(!faults_for("flaky", 30.0, 1).is_empty());
 }
 
 #[test]
