@@ -7,15 +7,18 @@ any violation is a hard failure:
 
 * schema tag is `compass.scenarios.v1`;
 * every cell key is `scenario|topology|policy` (three parts);
-* conservation: `served + rejected + failed == arrivals` and
-  `arrivals > 0` — the executor (live or DES) accounted for every
-  generated request, including ones that failed terminally under chaos;
-* `slo_compliance`, `mean_accuracy` and `slo_goodput` lie in [0, 1],
-  and goodput never exceeds compliance (it is compliance discounted by
-  the served fraction);
+* conservation: `served + rejected + failed + shed + expired ==
+  arrivals` and `arrivals > 0` — the executor (live or DES) accounted
+  for every generated request, including ones that failed terminally
+  under chaos or were shed/expired by the overload plane;
+* `slo_compliance`, `mean_accuracy`, `slo_goodput` and
+  `gold_compliance` lie in [0, 1], and goodput never exceeds
+  compliance (it is compliance discounted by the served fraction);
 * the resilience counters (`failed`, `retries`, `panics_recovered`,
-  `timeouts`, `breaker_trips`, `failovers`) are present and
-  non-negative, and the `resilience` tag is `on`/`off`;
+  `timeouts`, `breaker_trips`, `failovers`) and the overload counters
+  (`shed`, `expired`, `brownout_steps`) are present and non-negative,
+  the `resilience` tag is `on`/`off`, and the `overload` tag is
+  `deadline`/`tail`/`off`;
 * latency quantiles are ordered: `p50 <= p95 <= p99`;
 * `pool_dark` cells on a multi-pool topology injected their fault
   (`faults != "none"`) and the alive pool absorbed spilled work
@@ -26,7 +29,14 @@ any violation is a hard failure:
   least once), `dark_drain` runs the same fault resilience-off with
   zero retries; `flaky` runs resilience-on and on a single-pool
   topology (where the flaky pool is unavoidable) must retry at least
-  once.
+  once;
+* the overload pair: `overload_sustained` runs deadline-aware,
+  `overload_tail_drop` runs the tail-drop twin, `overload_flash`
+  deadline-aware; every non-overload cell runs the plane off with
+  zero shed/expired; the sustained Static-Accurate cell (ρ ≈ 1.5)
+  must shed or expire at least one request. The deadline-vs-tail
+  gold_compliance ratio itself is gated by `bench_gate.py` against
+  BENCH_scenarios_baseline.json.
 
 `--min-scenarios N` / `--min-topos N` additionally assert matrix
 coverage (distinct scenario / topology counts), so the CI smoke run
@@ -55,26 +65,34 @@ def check_cell(key: str, cell: dict) -> list:
     served = cell.get("served", 0)
     rejected = cell.get("rejected", 0)
     failed = cell.get("failed", 0)
+    shed = cell.get("shed", 0)
+    expired = cell.get("expired", 0)
     if arrivals <= 0:
         errors.append(f"{key}: no arrivals generated")
-    if served + rejected + failed != arrivals:
+    if served + rejected + failed + shed + expired != arrivals:
         errors.append(
             f"{key}: conservation violated — served {served} + rejected "
-            f"{rejected} + failed {failed} != arrivals {arrivals}")
+            f"{rejected} + failed {failed} + shed {shed} + expired "
+            f"{expired} != arrivals {arrivals}")
 
-    for field in ("slo_compliance", "mean_accuracy", "slo_goodput"):
+    for field in ("slo_compliance", "mean_accuracy", "slo_goodput",
+                  "gold_compliance"):
         val = cell.get(field, -1.0)
         if not 0.0 <= val <= 1.0:
             errors.append(f"{key}: {field} {val} outside [0, 1]")
     if cell.get("slo_goodput", 0.0) > cell.get("slo_compliance", 0.0) + 1e-9:
         errors.append(f"{key}: slo_goodput exceeds slo_compliance")
     for field in ("failed", "retries", "panics_recovered", "timeouts",
-                  "breaker_trips", "failovers"):
+                  "breaker_trips", "failovers", "shed", "expired",
+                  "brownout_steps"):
         if cell.get(field, -1) < 0:
             errors.append(f"{key}: counter {field} missing or negative")
     if cell.get("resilience") not in ("on", "off"):
         errors.append(f"{key}: resilience tag {cell.get('resilience')!r} "
                       "is not on/off")
+    if cell.get("overload") not in ("deadline", "tail", "off"):
+        errors.append(f"{key}: overload tag {cell.get('overload')!r} "
+                      "is not deadline/tail/off")
     p50, p95, p99 = (cell.get(q, 0.0) for q in ("p50_ms", "p95_ms", "p99_ms"))
     if not p50 <= p95 <= p99:
         errors.append(f"{key}: quantiles unordered: {p50} / {p95} / {p99}")
@@ -113,6 +131,21 @@ def check_cell(key: str, cell: dict) -> list:
         if not multi_pool and cell.get("retries", 0) < 1:
             errors.append(f"{key}: flaky window on the only pool never "
                           "retried")
+
+    # The overload pair + the flash cell (overload-plane cells).
+    want_overload = {"overload_sustained": "deadline",
+                     "overload_tail_drop": "tail",
+                     "overload_flash": "deadline"}.get(scenario, "off")
+    if cell.get("overload") != want_overload:
+        errors.append(f"{key}: overload tag {cell.get('overload')!r}, "
+                      f"expected {want_overload!r}")
+    if want_overload == "off" and shed + expired > 0:
+        errors.append(f"{key}: overload-off cell shed {shed} / expired "
+                      f"{expired} requests")
+    if scenario == "overload_sustained" and policy == "Static-Accurate" \
+            and shed + expired < 1:
+        errors.append(f"{key}: sustained 1.5x overload never shed or "
+                      "expired a request")
     return errors
 
 

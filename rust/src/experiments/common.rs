@@ -568,9 +568,37 @@ pub fn simulate_ctx_resilient<S: crate::sim::ServiceModel>(
     faults: &crate::workload::FaultPlan,
     resilience: &crate::serving::ResilienceConfig,
 ) -> Result<crate::sim::SimOutcome> {
+    simulate_ctx_overload(
+        ctx,
+        arrivals,
+        plan,
+        policy,
+        svc,
+        faults,
+        resilience,
+        &crate::serving::OverloadConfig::default(),
+    )
+}
+
+/// [`simulate_ctx_resilient`] with the overload plane configured — the
+/// overload-cell entry point, and the single ctx-driven path into
+/// [`crate::sim::simulate_topology_overload`]. The disabled config
+/// reproduces [`simulate_ctx_resilient`] bit-for-bit (which delegates
+/// here).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_ctx_overload<S: crate::sim::ServiceModel>(
+    ctx: &ExperimentCtx,
+    arrivals: &[f64],
+    plan: &Plan,
+    policy: &mut Box<dyn ScalingPolicy>,
+    svc: &S,
+    faults: &crate::workload::FaultPlan,
+    resilience: &crate::serving::ResilienceConfig,
+    overload: &crate::serving::OverloadConfig,
+) -> Result<crate::sim::SimOutcome> {
     let topo = ctx.topology()?;
     let mut shim = Shim(policy);
-    Ok(crate::sim::simulate_topology_resilient(
+    Ok(crate::sim::simulate_topology_overload(
         arrivals,
         plan,
         &mut shim,
@@ -580,6 +608,7 @@ pub fn simulate_ctx_resilient<S: crate::sim::ServiceModel>(
         ctx.batch.max(1),
         faults,
         resilience,
+        overload,
     ))
 }
 

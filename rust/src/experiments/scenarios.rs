@@ -17,26 +17,28 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Result};
 
 use super::common::{
-    ctx_base_qps, make_policy, offline_phase_ctx, simulate_ctx_resilient, ExperimentCtx,
+    ctx_base_qps, make_policy, offline_phase_ctx, simulate_ctx_overload, ExperimentCtx,
     SLO_FACTORS,
 };
 use crate::metrics::RunSummary;
 use crate::planner::{Plan, ThresholdMode};
 use crate::runtime::artifacts_dir;
 use crate::serving::executor::WorkflowEngine;
-use crate::serving::{parse_pools, serve, Discipline, ResilienceConfig, ServeOptions};
+use crate::serving::{
+    parse_pools, serve, ClassSpec, Discipline, OverloadConfig, ResilienceConfig, ServeOptions,
+};
 use crate::sim::{LognormalService, ParetoService};
 use crate::util::csv::CsvWriter;
 use crate::util::json::Json;
 use crate::workflows::rag::RagWorkflow;
-use crate::workload::trace::{load_trace, save_request_log, save_trace};
+use crate::workload::trace::{load_trace, save_request_log_overload, save_trace};
 use crate::workload::{Fault, FaultPlan, Generator, Pattern, ScenarioSpec};
 
 /// Schema tag of `BENCH_scenarios.json` (checked by the CI gate).
 pub const SCHEMA: &str = "compass.scenarios.v1";
 
 /// Every scenario shape of the matrix, in cookbook order.
-pub const SCENARIOS: [&str; 12] = [
+pub const SCENARIOS: [&str; 15] = [
     "steady",
     "diurnal",
     "flash_crowd",
@@ -49,13 +51,18 @@ pub const SCENARIOS: [&str; 12] = [
     "dark_recover",
     "dark_drain",
     "flaky",
+    "overload_sustained",
+    "overload_tail_drop",
+    "overload_flash",
 ];
 
 /// The CI smoke subset: the steady baseline, both burst families, every
-/// fault path the gate asserts on, and the chaos cells (the windowed
-/// dark failover/drain pair — which the ratio invariant compares on
-/// identical arrivals — plus the flaky-engine retry cell).
-pub const SMOKE_SCENARIOS: [&str; 8] = [
+/// fault path the gate asserts on, the chaos cells (the windowed dark
+/// failover/drain pair — which the ratio invariant compares on
+/// identical arrivals — plus the flaky-engine retry cell), and the
+/// overload pair (deadline-aware shedding vs its tail-drop twin on
+/// identical ~1.5× arrivals).
+pub const SMOKE_SCENARIOS: [&str; 10] = [
     "steady",
     "flash_crowd",
     "mmpp",
@@ -64,6 +71,8 @@ pub const SMOKE_SCENARIOS: [&str; 8] = [
     "dark_recover",
     "dark_drain",
     "flaky",
+    "overload_sustained",
+    "overload_tail_drop",
 ];
 
 /// Named dispatch topologies of the matrix.
@@ -108,6 +117,12 @@ pub struct ScenarioOpts {
     /// Resilience override applied to every cell (default: each
     /// scenario's own [`resilience_for`] profile).
     pub resilience: Option<ResilienceConfig>,
+    /// Overload-plane override applied to every cell (default: each
+    /// scenario's own [`overload_for`] profile).
+    pub overload: Option<OverloadConfig>,
+    /// SLO class mix override (`--classes`) applied to whatever
+    /// overload profile each cell runs.
+    pub classes: Option<Vec<ClassSpec>>,
 }
 
 impl Default for ScenarioOpts {
@@ -123,6 +138,8 @@ impl Default for ScenarioOpts {
             replay: None,
             faults: None,
             resilience: None,
+            overload: None,
+            classes: None,
         }
     }
 }
@@ -140,13 +157,16 @@ pub fn name_salt(name: &str) -> u64 {
 }
 
 /// The arrival-seed salt a scenario actually uses. Almost always its
-/// own [`name_salt`]; the one exception is the windowed-dark pair
-/// `dark_recover` / `dark_drain`, which share a salt so the failover
-/// cell and the drain-reject cell run on *identical* arrivals — the
-/// scenario-gate ratio invariant compares them head-to-head.
+/// own [`name_salt`]; the exceptions are the salted *pairs*, which
+/// share a salt so both cells run on *identical* arrivals and the
+/// scenario-gate ratio invariants compare them head-to-head: the
+/// windowed-dark pair `dark_recover` / `dark_drain` (failover vs
+/// drain-reject) and the overload pair `overload_sustained` /
+/// `overload_tail_drop` (deadline-aware shedding vs tail-drop).
 pub fn arrival_salt(name: &str) -> u64 {
     match name {
         "dark_recover" | "dark_drain" => name_salt("dark_window"),
+        "overload_sustained" | "overload_tail_drop" => name_salt("overload_pair"),
         other => name_salt(other),
     }
 }
@@ -189,8 +209,37 @@ pub fn generator_for(name: &str, qps: f64, dur: f64) -> Result<Generator> {
         },
         // The seed-era bursty pattern feeding the admission squeeze.
         "squeeze" => Generator::Legacy { base_qps: qps, pattern: Pattern::paper_bursty() },
+        // Sustained overload: the base rate targets ρ ≈ 0.45, so 10/3×
+        // base is ρ ≈ 1.5 — constant ~1.5× the fleet's capacity for the
+        // whole run. The queue only grows, and the admission policy
+        // (deadline-aware vs the tail-drop twin, same arrivals) decides
+        // who survives.
+        "overload_sustained" | "overload_tail_drop" => {
+            Generator::Constant { qps: 10.0 / 3.0 * qps }
+        }
+        // Flash overload: a 6× crowd held over a third of the run —
+        // brownout and shedding engage and must *disengage* again.
+        "overload_flash" => Generator::FlashCrowd {
+            qps,
+            peak_factor: 6.0,
+            at_s: 0.3 * dur,
+            ramp_s: 0.05 * dur,
+            hold_s: 0.3 * dur,
+        },
         other => bail!("unknown scenario {other}; known: {SCENARIOS:?}"),
     })
+}
+
+/// The overload profile a named scenario runs with: the overload cells
+/// enable the plane (`overload_tail_drop` in tail mode — the twin the
+/// gate's ratio invariant compares against); every other cell runs
+/// disabled, which is pinned bit-identical to the pre-overload runtime.
+pub fn overload_for(name: &str) -> OverloadConfig {
+    match name {
+        "overload_sustained" | "overload_flash" => OverloadConfig::enabled(),
+        "overload_tail_drop" => OverloadConfig::tail_drop(),
+        _ => OverloadConfig::default(),
+    }
 }
 
 /// The fault plan a named scenario injects on a fleet of `n_pools`.
@@ -315,6 +364,21 @@ pub struct CellOut {
     pub slo_goodput: f64,
     /// `on`/`off` — the cell's resilience profile.
     pub resilience: String,
+    /// Arrivals shed by overload admission (conservation extends to
+    /// `served + rejected + failed + shed + expired == arrivals`).
+    pub shed: usize,
+    /// Queued requests expired at pop time (lazy in-queue expiry).
+    pub expired: usize,
+    /// Brownout rung-degradation steps taken over the run.
+    pub brownout_steps: u64,
+    /// Highest-class SLO compliance *per offered arrival* of that class
+    /// (a shed or expired gold request counts against it) — the metric
+    /// the overload-pair ratio invariant gates on. With the plane off
+    /// this is the one implicit class, i.e. `slo_goodput`-style overall
+    /// compliance per arrival.
+    pub gold_compliance: f64,
+    /// `deadline`/`tail`/`off` — the cell's overload profile.
+    pub overload: String,
 }
 
 impl CellOut {
@@ -347,11 +411,16 @@ impl CellOut {
             ("failovers", Json::num(self.failovers as f64)),
             ("slo_goodput", Json::num(self.slo_goodput)),
             ("resilience", Json::str(self.resilience.clone())),
+            ("shed", Json::num(self.shed as f64)),
+            ("expired", Json::num(self.expired as f64)),
+            ("brownout_steps", Json::num(self.brownout_steps as f64)),
+            ("gold_compliance", Json::num(self.gold_compliance)),
+            ("overload", Json::str(self.overload.clone())),
         ])
     }
 }
 
-const CSV_HEADER: [&str; 24] = [
+const CSV_HEADER: [&str; 29] = [
     "scenario",
     "topo",
     "policy",
@@ -376,11 +445,18 @@ const CSV_HEADER: [&str; 24] = [
     "failovers",
     "slo_goodput",
     "resilience",
+    "shed",
+    "expired",
+    "brownout_steps",
+    "gold_compliance",
+    "overload",
 ];
 
 /// Run one scenario × topology × policy cell — the DES by default, the
 /// live server under `ctx.live` — and summarize it. The same arrival
-/// vector and fault plan feed both executors.
+/// vector, fault plan and overload profile feed both executors (the
+/// live server additionally receives the plan ladder's means as its
+/// admission-budget hint, the same numbers the DES reads directly).
 #[allow(clippy::too_many_arguments)]
 pub fn run_matrix_cell(
     ctx: &ExperimentCtx,
@@ -392,11 +468,14 @@ pub fn run_matrix_cell(
     arrivals: &[f64],
     faults: &FaultPlan,
     resilience: &ResilienceConfig,
+    overload: &OverloadConfig,
     slo_ms: f64,
     log_dir: Option<&Path>,
 ) -> Result<CellOut> {
     let topo = ctx.topology()?;
     let mut policy = make_policy(plan, policy_name);
+    let rung_means: Vec<f64> = plan.ladder.iter().map(|r| r.mean_ms).collect();
+    let ov = overload.clone().with_rung_means(rung_means);
     let (records, switches, rejected, steals, spills, counters) = if ctx.live {
         let space2 = space.clone();
         let plan2 = plan.clone();
@@ -424,6 +503,7 @@ pub fn run_matrix_cell(
                 spill_margin: ctx.spill_margin,
                 faults: faults.clone(),
                 resilience: resilience.clone(),
+                overload: ov.clone(),
                 ..ServeOptions::default()
             },
         )?;
@@ -440,6 +520,9 @@ pub fn run_matrix_cell(
                 out.timeouts,
                 out.breaker_trips,
                 out.failovers,
+                out.shed,
+                out.expired,
+                out.brownout_steps,
             ),
         )
     } else {
@@ -447,10 +530,10 @@ pub fn run_matrix_cell(
         // Pareto tail (α = 2.05: finite mean, near-infinite variance).
         let out = if scenario == "heavy_tail" {
             let svc = ParetoService::from_plan(plan, 2.05);
-            simulate_ctx_resilient(ctx, arrivals, plan, &mut policy, &svc, faults, resilience)?
+            simulate_ctx_overload(ctx, arrivals, plan, &mut policy, &svc, faults, resilience, &ov)?
         } else {
             let svc = LognormalService::from_plan(plan, 0.10);
-            simulate_ctx_resilient(ctx, arrivals, plan, &mut policy, &svc, faults, resilience)?
+            simulate_ctx_overload(ctx, arrivals, plan, &mut policy, &svc, faults, resilience, &ov)?
         };
         (
             out.records,
@@ -465,13 +548,26 @@ pub fn run_matrix_cell(
                 out.timeouts,
                 out.breaker_trips,
                 out.failovers,
+                out.shed,
+                out.expired,
+                out.brownout_steps,
             ),
         )
     };
-    let (failed, retries, panics_recovered, timeouts, breaker_trips, failovers) = counters;
+    let (
+        failed,
+        retries,
+        panics_recovered,
+        timeouts,
+        breaker_trips,
+        failovers,
+        shed,
+        expired,
+        bsteps,
+    ) = counters;
     if let Some(dir) = log_dir {
         let file = format!("{scenario}__{topo_name}__{policy_name}.csv");
-        save_request_log(&dir.join(file), &records, &topo)?;
+        save_request_log_overload(&dir.join(file), &records, &topo, &ov)?;
     }
     let summary = RunSummary::compute(&records, &switches, slo_ms, plan.ladder.len());
     let slo_goodput = if arrivals.is_empty() {
@@ -479,6 +575,10 @@ pub fn run_matrix_cell(
     } else {
         summary.slo_compliance * records.len() as f64 / arrivals.len() as f64
     };
+    // Highest class first: class 0's per-arrival compliance (the one
+    // implicit class when the plane is off).
+    let by_class = ov.class_compliance(&records, arrivals.len(), slo_ms);
+    let gold_compliance = by_class.first().copied().unwrap_or(1.0);
     Ok(CellOut {
         scenario: scenario.into(),
         topo: topo_name.into(),
@@ -504,6 +604,17 @@ pub fn run_matrix_cell(
         failovers,
         slo_goodput,
         resilience: if resilience.enabled { "on".into() } else { "off".into() },
+        shed,
+        expired,
+        brownout_steps: bsteps,
+        gold_compliance,
+        overload: if !ov.enabled {
+            "off".into()
+        } else if ov.deadline_aware {
+            "deadline".into()
+        } else {
+            "tail".into()
+        },
     })
 }
 
@@ -607,6 +718,14 @@ pub fn run_sweep(ctx: &ExperimentCtx, opts: &ScenarioOpts) -> Result<()> {
                 Some(r) => r.clone(),
                 None => resilience_for(scenario),
             };
+            let overload = match &opts.overload {
+                Some(o) => o.clone(),
+                None => overload_for(scenario),
+            };
+            let overload = match &opts.classes {
+                Some(c) => overload.with_classes(c.clone()),
+                None => overload,
+            };
             for policy in &policies {
                 // As everywhere: Elastico adapts over the SLO-filtered
                 // ladder, the static baselines keep their full-front rung.
@@ -621,6 +740,7 @@ pub fn run_sweep(ctx: &ExperimentCtx, opts: &ScenarioOpts) -> Result<()> {
                     &arrivals,
                     &faults,
                     &resilience,
+                    &overload,
                     slo,
                     opts.log_dir.as_deref(),
                 )?;
@@ -663,6 +783,11 @@ pub fn run_sweep(ctx: &ExperimentCtx, opts: &ScenarioOpts) -> Result<()> {
                     cell.failovers.to_string(),
                     format!("{:.4}", cell.slo_goodput),
                     cell.resilience.clone(),
+                    cell.shed.to_string(),
+                    cell.expired.to_string(),
+                    cell.brownout_steps.to_string(),
+                    format!("{:.4}", cell.gold_compliance),
+                    cell.overload.clone(),
                 ])?;
                 cells.push(cell);
             }
@@ -738,12 +863,32 @@ mod tests {
         assert!(!resilience_for("dark_drain").enabled);
         assert!(resilience_for("flaky").enabled);
         assert!(!resilience_for("steady").enabled);
-        // Every other scenario keeps its own salt.
+        // Every scenario outside the salted pairs keeps its own salt.
+        let paired = ["dark_recover", "dark_drain", "overload_sustained", "overload_tail_drop"];
         for s in SCENARIOS {
-            if s != "dark_recover" && s != "dark_drain" {
+            if !paired.contains(&s) {
                 assert_eq!(arrival_salt(s), name_salt(s));
             }
         }
+    }
+
+    #[test]
+    fn the_overload_pair_shares_arrivals_and_differs_only_in_shed_mode() {
+        // Same offered load, same classes; the only difference is how the
+        // admission gate picks a victim (deadline-aware vs tail drop).
+        assert_eq!(arrival_salt("overload_sustained"), arrival_salt("overload_tail_drop"));
+        assert_ne!(arrival_salt("overload_sustained"), name_salt("overload_sustained"));
+        let aware = overload_for("overload_sustained");
+        let tail = overload_for("overload_tail_drop");
+        assert!(aware.enabled && aware.deadline_aware);
+        assert!(tail.enabled && !tail.deadline_aware);
+        assert_eq!(aware.classes, tail.classes);
+        assert!(overload_for("overload_flash").enabled);
+        assert!(!overload_for("steady").enabled);
+        // The twins see byte-identical arrival processes.
+        let a = generator_for("overload_sustained", 8.0, 60.0).unwrap();
+        let b = generator_for("overload_tail_drop", 8.0, 60.0).unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
     }
 
     #[test]

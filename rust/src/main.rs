@@ -12,7 +12,8 @@
 //! * `experiment <fig1|fig3|fig4|table1|fig5|fig6|fig7|all> [--live]
 //!   [--duration S]` — regenerate paper artifacts (CSV under results/).
 //! * `scenario [--smoke] [--scenarios a,b] [--topos x,y] [--policies p,q]
-//!   [--faults SPEC] [--replay FILE] [--save-trace FILE] [--log DIR]` —
+//!   [--faults SPEC] [--overload SPEC] [--classes SPEC] [--replay FILE]
+//!   [--save-trace FILE] [--log DIR]` —
 //!   scenario matrix sweep -> BENCH_scenarios.json (docs/SCENARIOS.md).
 //! * `profile  [--live]` — per-component latency table.
 
@@ -171,6 +172,8 @@ fn print_help() {
          \x20             [--scenarios a,b,..] [--topos x,y,..] [--policies p,q,..]\n\
          \x20             [--faults dark:1@24-60,slow:0x2.5@20-40,flaky:0x0.25@20-40]\n\
          \x20             [--resilience on|off|on,max_retries=3,timeout_ms=500]\n\
+         \x20             [--overload on|off|on,shed=deadline|tail,shed_depth=256]\n\
+         \x20             [--classes gold:0.2:500,silver:0.5:2000,bronze:0.3:0]\n\
          \x20             [--out FILE] [--log DIR] [--replay FILE] [--save-trace FILE]\n\
          \x20             [--list]  (cookbook: docs/SCENARIOS.md)\n\
          \x20 profile     per-component latency table over the artifacts [--live]\n"
@@ -411,6 +414,14 @@ fn cmd_scenario(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         Some(v) => Some(compass::serving::ResilienceConfig::parse(v)?),
         None => None,
     };
+    let overload = match opts.get("overload") {
+        Some(v) => Some(compass::serving::OverloadConfig::parse(v)?),
+        None => None,
+    };
+    let classes = match opts.get("classes") {
+        Some(v) => Some(compass::serving::parse_classes(v)?),
+        None => None,
+    };
     let out = opts.get("out").map(String::as_str).unwrap_or("BENCH_scenarios.json");
     let sweep = scenarios::ScenarioOpts {
         smoke,
@@ -423,6 +434,8 @@ fn cmd_scenario(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         replay: opts.get("replay").map(PathBuf::from),
         faults,
         resilience,
+        overload,
+        classes,
     };
     if let Some(path) = opts.get("save-trace") {
         let scenario = sweep.scenarios.first().map(String::as_str).unwrap_or("steady");

@@ -210,13 +210,25 @@ impl AqmParams {
     }
 }
 
+/// Eq. 10's linear depth budget in its raw form: `w` workers draining a
+/// mean service of `eff_mean_ms` can absorb `w·Δ/s̄` queued requests
+/// within a slack of `slack_ms`. This is the kernel every admission
+/// threshold in the system derives from — the AQM's per-rung switching
+/// thresholds ([`depth_budget`], which divides by the Erlang-C waiting
+/// probability in [`ThresholdMode::ErlangC`]) and the overload plane's
+/// per-class shed budgets ([`crate::serving::overload::OverloadConfig`],
+/// which substitutes the class deadline for the SLO slack).
+pub fn admission_depth_budget(w: f64, slack_ms: f64, eff_mean_ms: f64) -> f64 {
+    w * slack_ms / eff_mean_ms.max(1e-9)
+}
+
 /// Depth budget of one rung: how many queued requests its pool can
 /// absorb within the slack. Legacy: the linear k-scaling (Eq. 10).
 /// Erlang-C: the same budget divided by the pool's waiting probability
 /// `C(k, k·ρ̂)` (Eq. 10', module docs); `C ≤ 1`, so Erlang-C thresholds
 /// are never shallower than legacy at the same (w, slack, s̄).
 fn depth_budget(params: &AqmParams, w: f64, slack: f64, eff_mean: f64) -> f64 {
-    let linear = w * slack / eff_mean;
+    let linear = admission_depth_budget(w, slack, eff_mean);
     match params.thresholds {
         ThresholdMode::Legacy => linear,
         ThresholdMode::ErlangC => {

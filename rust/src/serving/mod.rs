@@ -145,6 +145,7 @@
 pub mod elastico;
 pub mod executor;
 pub mod monitor;
+pub mod overload;
 pub mod policy;
 pub mod pool;
 pub mod predictive;
@@ -154,6 +155,7 @@ pub mod server;
 pub mod topology;
 
 pub use elastico::ElasticoPolicy;
+pub use overload::{default_classes, parse_classes, Brownout, ClassSpec, OverloadConfig};
 pub use policy::{ScalingPolicy, StaticPolicy};
 pub use pool::{parse_pools, PoolSpec};
 pub use predictive::PredictivePolicy;

@@ -1,0 +1,739 @@
+//! The overload plane — SLO classes, deadline-aware admission and
+//! shedding, in-queue expiry, and brownout degradation — applied
+//! identically in the live executor and the DES.
+//!
+//! PR 7's resilience plane handles *component failure*; this module
+//! handles *sustained overload*, where every queued request competes
+//! for capacity that no longer covers the offered load. Four
+//! mechanisms, all pure state machines driven by either clock:
+//!
+//! * **SLO classes.** Requests carry a [`ClassSpec`] (mix weight,
+//!   deadline, rung floor) parsed from
+//!   `--classes gold:0.2:500,silver:0.5:2000,bronze:0.3:0`. The class
+//!   of a request is a *deterministic hash of its id*
+//!   ([`crate::workload::gen::class_of_id`]) — never threaded through
+//!   queues or records — so the live executor, the DES and post-hoc
+//!   log analysis all assign identical classes, and arrivals stay
+//!   bit-identical whether the plane is on or off.
+//! * **Deadline-aware admission** ([`OverloadConfig::admit`]). On
+//!   pressure the victim is the request that is *already doomed*
+//!   (least slack) or of the *lowest class* — not the newest. The
+//!   per-class thresholds generalize the AQM's Eq. 10 depth budget
+//!   (`N = w·Δ/s̄`, [`crate::planner::aqm::admission_depth_budget`])
+//!   with the class-effective deadline as the slack: a finite-deadline
+//!   request sheds once the backlog ahead of it already exceeds what
+//!   `w` workers can drain within its deadline, and lower classes are
+//!   admitted only into nested shares of the tightest class's budget,
+//!   so bronze load can never queue gold into doom. The tail-drop
+//!   alternative (`shed=tail`) drops the newest at a fixed depth —
+//!   kept as the comparison twin the scenario matrix gates against.
+//! * **In-queue expiry** ([`OverloadConfig::expired`]). Workers
+//!   skip-and-count requests whose deadline already passed at pop time
+//!   — lazy, no scanner thread — so stale work never occupies a
+//!   server.
+//! * **Brownout** ([`Brownout`]). A deadline-pressure EWMA (fraction
+//!   of pops that would finish past their deadline) steps the
+//!   *effective* rung down — toward the fast end — before shedding
+//!   starts, and steps back up on recovery. The hysteresis mirrors
+//!   PR 7's circuit breaker: a trip threshold with a minimum-sample
+//!   guard, a lower recovery threshold, and re-arming after every
+//!   step. The offset is bounded by `brownout_max_steps`, so the
+//!   effective rung never leaves the policy's no-switch band
+//!   `[rung − max_steps, rung]` — brownout degrades within the band;
+//!   it never countermands an explicit policy switch.
+//!
+//! Conservation extends to
+//! `served + rejected + failed + shed + expired == arrivals` in both
+//! executors, and everything is **off by default**: a disabled
+//! [`OverloadConfig`] admits everything, expires nothing, browns out
+//! never — the executors skip the overload branches entirely, so a
+//! disabled run is bit-identical to the pre-overload engine (the same
+//! precedent as the disabled resilience plane, pinned by
+//! `tests/overload.rs`).
+
+use anyhow::Result;
+
+use super::topology::Topology;
+use crate::planner::aqm::admission_depth_budget;
+use crate::workload::gen::class_of_id;
+
+/// One SLO class of the request mix: a weight (share of arrivals), a
+/// deadline (0 = none), and a rung floor (never serve this class below
+/// that rung).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassSpec {
+    pub name: String,
+    /// Share of arrivals (weights need not sum to 1; they are
+    /// normalized by the assignment hash).
+    pub weight: f64,
+    /// Per-request deadline in ms from arrival; 0 = no deadline.
+    pub deadline_ms: f64,
+    /// Minimum ladder rung this class is served at (0 = no floor),
+    /// enforced via [`Topology::exec_rung_floor`].
+    pub rung_floor: usize,
+}
+
+/// Parse `--classes name:weight:deadline_ms[:rung_floor],...`, e.g.
+/// `gold:0.2:500,silver:0.5:2000,bronze:0.3:0`. Classes are listed in
+/// priority order (first = highest).
+pub fn parse_classes(s: &str) -> Result<Vec<ClassSpec>> {
+    let mut out = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let fields: Vec<&str> = part.split(':').collect();
+        anyhow::ensure!(
+            fields.len() == 3 || fields.len() == 4,
+            "class spec {part:?} wants name:weight:deadline_ms[:rung_floor]"
+        );
+        let weight: f64 = fields[1]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad class weight {:?} in {part:?}", fields[1]))?;
+        anyhow::ensure!(weight > 0.0, "class weight must be positive in {part:?}");
+        let deadline_ms: f64 = fields[2]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad class deadline {:?} in {part:?}", fields[2]))?;
+        anyhow::ensure!(deadline_ms >= 0.0, "class deadline must be >= 0 in {part:?}");
+        let rung_floor: usize = match fields.get(3) {
+            None => 0,
+            Some(f) => f
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad class rung floor {f:?} in {part:?}"))?,
+        };
+        out.push(ClassSpec {
+            name: fields[0].to_string(),
+            weight,
+            deadline_ms,
+            rung_floor,
+        });
+    }
+    anyhow::ensure!(!out.is_empty(), "empty class list");
+    Ok(out)
+}
+
+/// The paper-style three-tier default mix:
+/// `gold:0.2:500,silver:0.5:2000,bronze:0.3:0`.
+pub fn default_classes() -> Vec<ClassSpec> {
+    parse_classes("gold:0.2:500,silver:0.5:2000,bronze:0.3:0").expect("default classes parse")
+}
+
+/// Overload-plane configuration. `Default` is **disabled**: every
+/// query degenerates to the historical behavior (admit everything,
+/// nothing expires, brownout never steps) and the executors skip the
+/// overload branches entirely, so a disabled run is bit-identical to
+/// the pre-overload engine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OverloadConfig {
+    pub enabled: bool,
+    /// `true` = deadline-aware shedding (doomed / lowest-class victim,
+    /// the default); `false` = tail-drop the newest at `shed_depth`
+    /// (the comparison twin).
+    pub deadline_aware: bool,
+    /// DES-only class-priority service order (highest class first
+    /// within a shard, FIFO within a class) — used by the two-class
+    /// M/M/k theory validation; off by default so live and DES cells
+    /// share FIFO semantics.
+    pub priority: bool,
+    /// Tail-drop threshold, and the cap on every deadline-aware
+    /// admission budget.
+    pub shed_depth: usize,
+    /// Brownout EWMA smoothing factor.
+    pub brownout_alpha: f64,
+    /// Deadline-pressure level that steps the effective rung down.
+    pub brownout_threshold: f64,
+    /// Pressure level below which a brownout step is undone.
+    pub brownout_recover: f64,
+    /// Pops required before the EWMA may trigger a step (re-armed
+    /// after every step, the hysteresis guard).
+    pub brownout_min_samples: u32,
+    /// Bound on the brownout offset: the effective rung never leaves
+    /// `[rung − max_steps, rung]`.
+    pub brownout_max_steps: usize,
+    /// The SLO classes, in priority order (first = highest).
+    pub classes: Vec<ClassSpec>,
+    /// Per-rung mean service times (ms) the **live** executor feeds the
+    /// admission budgets and the brownout risk signal (the DES reads
+    /// its plan ladder directly). Not part of the CLI grammar — the
+    /// harness fills it from the plan via
+    /// [`with_rung_means`](OverloadConfig::with_rung_means). Empty = no
+    /// service-time knowledge: deadline budgets degenerate to the
+    /// `shed_depth` cap (still class-ordered, no longer
+    /// deadline-calibrated).
+    pub rung_means_ms: Vec<f64>,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> OverloadConfig {
+        OverloadConfig {
+            enabled: false,
+            deadline_aware: true,
+            priority: false,
+            shed_depth: 256,
+            brownout_alpha: 0.2,
+            brownout_threshold: 0.5,
+            brownout_recover: 0.1,
+            brownout_min_samples: 20,
+            brownout_max_steps: 1,
+            classes: default_classes(),
+            rung_means_ms: Vec::new(),
+        }
+    }
+}
+
+impl OverloadConfig {
+    /// The plane enabled with every default knob (deadline-aware
+    /// shedding over the default three-tier mix).
+    pub fn enabled() -> OverloadConfig {
+        OverloadConfig { enabled: true, ..OverloadConfig::default() }
+    }
+
+    /// The tail-drop twin: the plane on (classes, expiry, brownout all
+    /// identical) but shedding the *newest* request at `shed_depth` —
+    /// the control the scenario matrix compares deadline-aware
+    /// shedding against.
+    pub fn tail_drop() -> OverloadConfig {
+        OverloadConfig { deadline_aware: false, ..OverloadConfig::enabled() }
+    }
+
+    /// Same config with another class mix.
+    pub fn with_classes(self, classes: Vec<ClassSpec>) -> OverloadConfig {
+        OverloadConfig { classes, ..self }
+    }
+
+    /// Same config with the per-rung mean service times the live
+    /// executor should assume (typically the plan ladder's means).
+    pub fn with_rung_means(self, rung_means_ms: Vec<f64>) -> OverloadConfig {
+        OverloadConfig { rung_means_ms, ..self }
+    }
+
+    /// The assumed mean service time (ms) at `rung` for live admission
+    /// and brownout-risk arithmetic; 0 when no means were provided.
+    pub fn mean_at(&self, rung: usize) -> f64 {
+        self.rung_means_ms.get(rung).copied().unwrap_or(0.0)
+    }
+
+    /// Parse `--overload off` / `--overload on[,key=value,...]`.
+    /// Keys: `shed=deadline|tail`, `priority=on|off`, `shed_depth`,
+    /// `brownout_alpha`, `brownout_threshold`, `brownout_recover`,
+    /// `brownout_min_samples`, `brownout_max_steps`. The class mix
+    /// comes from `--classes` ([`parse_classes`]).
+    pub fn parse(s: &str) -> Result<OverloadConfig> {
+        let mut cfg = OverloadConfig::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            match part {
+                "on" | "enabled" => cfg.enabled = true,
+                "off" | "disabled" => cfg.enabled = false,
+                _ => {
+                    let Some((key, value)) = part.split_once('=') else {
+                        anyhow::bail!("overload option {part:?} wants key=value");
+                    };
+                    let num = || -> Result<f64> {
+                        value.parse().map_err(|_| {
+                            anyhow::anyhow!("bad overload value {value:?} for {key:?}")
+                        })
+                    };
+                    match key {
+                        "shed" => match value {
+                            "deadline" => cfg.deadline_aware = true,
+                            "tail" => cfg.deadline_aware = false,
+                            other => anyhow::bail!("shed expects deadline|tail, got {other:?}"),
+                        },
+                        "priority" => match value {
+                            "on" => cfg.priority = true,
+                            "off" => cfg.priority = false,
+                            other => anyhow::bail!("priority expects on|off, got {other:?}"),
+                        },
+                        "shed_depth" => cfg.shed_depth = num()?.max(1.0) as usize,
+                        "brownout_alpha" => cfg.brownout_alpha = num()?,
+                        "brownout_threshold" => cfg.brownout_threshold = num()?,
+                        "brownout_recover" => cfg.brownout_recover = num()?,
+                        "brownout_min_samples" => cfg.brownout_min_samples = num()? as u32,
+                        "brownout_max_steps" => cfg.brownout_max_steps = num()? as usize,
+                        other => anyhow::bail!("unknown overload key {other:?}"),
+                    }
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// The class index of request `id` — a pure function of the id and
+    /// the mix weights, identical in both executors and in post-hoc
+    /// log analysis. Class 0 when the plane is disabled.
+    pub fn class_of(&self, id: u64) -> usize {
+        if !self.enabled || self.classes.is_empty() {
+            return 0;
+        }
+        let weights: Vec<f64> = self.classes.iter().map(|c| c.weight).collect();
+        class_of_id(id, &weights)
+    }
+
+    /// The class name of request `id` (`"-"` when disabled).
+    pub fn class_name(&self, id: u64) -> &str {
+        if !self.enabled || self.classes.is_empty() {
+            return "-";
+        }
+        &self.classes[self.class_of(id)].name
+    }
+
+    /// The *relative* deadline (ms after arrival) of request `id`'s
+    /// class; 0 when the plane is off or the class has none. This is
+    /// the value the request-log schema persists
+    /// ([`crate::workload::trace::RequestLogRow::deadline_ms`]).
+    pub fn class_deadline_ms(&self, id: u64) -> f64 {
+        if !self.enabled || self.classes.is_empty() {
+            return 0.0;
+        }
+        self.classes[self.class_of(id)].deadline_ms
+    }
+
+    /// The absolute deadline (ms) of request `id` arriving at
+    /// `arrival_ms`; infinite when the plane is off or the class has
+    /// no deadline.
+    pub fn deadline_ms(&self, id: u64, arrival_ms: f64) -> f64 {
+        if !self.enabled || self.classes.is_empty() {
+            return f64::INFINITY;
+        }
+        let d = self.classes[self.class_of(id)].deadline_ms;
+        if d <= 0.0 {
+            f64::INFINITY
+        } else {
+            arrival_ms + d
+        }
+    }
+
+    /// Lazy in-queue expiry: has request `id`'s deadline already
+    /// passed at pop time? Always `false` when disabled.
+    pub fn expired(&self, id: u64, arrival_ms: f64, now_ms: f64) -> bool {
+        self.enabled && now_ms > self.deadline_ms(id, arrival_ms)
+    }
+
+    /// The brownout pressure signal: would a pop starting service now
+    /// at a rung with mean `mean_ms` finish past its deadline?
+    pub fn at_risk(&self, id: u64, arrival_ms: f64, now_ms: f64, mean_ms: f64) -> bool {
+        self.enabled && now_ms + mean_ms > self.deadline_ms(id, arrival_ms)
+    }
+
+    /// The rung floor of request `id`'s class (0 when disabled).
+    pub fn rung_floor(&self, id: u64) -> usize {
+        if !self.enabled || self.classes.is_empty() {
+            return 0;
+        }
+        self.classes[self.class_of(id)].rung_floor
+    }
+
+    /// Admission decision for request `id` arriving to a backlog of
+    /// `depth`, drained by `workers` servers at mean service `mean_ms`.
+    ///
+    /// Tail-drop mode sheds any class at `shed_depth` (newest loses —
+    /// the classic bounded queue). Deadline-aware mode generalizes
+    /// Eq. 10's depth budget `N = w·Δ/s̄` with the class-effective
+    /// deadline as the slack:
+    ///
+    /// * **doomed check** — a finite-deadline request sheds when the
+    ///   backlog already exceeds its own budget `w·d_c/s̄` (it would
+    ///   expire in queue; shedding it now is free);
+    /// * **nested class shares** — class `c` (rank `c` of `n`) is
+    ///   admitted only while `depth < guard·(n−c)/n`, where `guard` is
+    ///   the *tightest* class's budget (capped at `shed_depth`) — so
+    ///   lower classes stop queueing before they can doom the classes
+    ///   above them, and the shallow end of the queue is reserved for
+    ///   the traffic that can still meet its targets.
+    ///
+    /// Always `true` when disabled.
+    pub fn admit(&self, id: u64, depth: usize, mean_ms: f64, workers: usize) -> bool {
+        if !self.enabled {
+            return true;
+        }
+        if !self.deadline_aware {
+            return depth < self.shed_depth;
+        }
+        let w = workers.max(1) as f64;
+        let d = depth as f64;
+        let c = self.class_of(id);
+        let budget_of = |spec: &ClassSpec| -> f64 {
+            if spec.deadline_ms > 0.0 {
+                admission_depth_budget(w, spec.deadline_ms, mean_ms)
+            } else {
+                f64::INFINITY
+            }
+        };
+        if !self.classes.is_empty() && d >= budget_of(&self.classes[c]) {
+            return false; // already doomed: cannot make its own deadline
+        }
+        let guard = self
+            .classes
+            .iter()
+            .map(budget_of)
+            .fold(self.shed_depth as f64, f64::min);
+        let n = self.classes.len().max(1) as f64;
+        d < guard * (n - c as f64) / n
+    }
+
+    /// Per-class SLO compliance over a run: for each class, the
+    /// fraction of its arrivals (ids `0..n_arrivals`) served within
+    /// the class target — its deadline when set, else `slo_ms`. With
+    /// the plane disabled there is one implicit class whose target is
+    /// the SLO, so the vector degenerates to `[slo_compliance]`.
+    pub fn class_compliance(
+        &self,
+        records: &[crate::metrics::RequestRecord],
+        n_arrivals: usize,
+        slo_ms: f64,
+    ) -> Vec<f64> {
+        let n_classes = if self.enabled { self.classes.len().max(1) } else { 1 };
+        let mut arrivals = vec![0usize; n_classes];
+        for id in 0..n_arrivals as u64 {
+            arrivals[self.class_of(id)] += 1;
+        }
+        let mut within = vec![0usize; n_classes];
+        for r in records {
+            let c = self.class_of(r.id);
+            let target = if self.enabled && self.classes[c].deadline_ms > 0.0 {
+                self.classes[c].deadline_ms
+            } else {
+                slo_ms
+            };
+            if r.latency_ms() <= target {
+                within[c] += 1;
+            }
+        }
+        (0..n_classes)
+            .map(|c| {
+                if arrivals[c] == 0 {
+                    1.0
+                } else {
+                    within[c] as f64 / arrivals[c] as f64
+                }
+            })
+            .collect()
+    }
+}
+
+impl Topology {
+    /// [`Topology::exec_rung`] with a class floor: the requested rung
+    /// is raised to `floor` *before* the pool-band clamp, so a
+    /// floored class is never served below its floor — unless the
+    /// executing pool's entire band lies below it, in which case the
+    /// band top (the closest that pool can get) is used.
+    pub fn exec_rung_floor(
+        &self,
+        pool: usize,
+        policy_rung: usize,
+        floor: usize,
+        n_rungs: usize,
+    ) -> usize {
+        self.exec_rung(pool, policy_rung.max(floor), n_rungs)
+    }
+}
+
+/// The brownout state machine: a deadline-pressure EWMA over pop
+/// observations that steps the effective rung down (toward the fast
+/// end) under sustained pressure and back up on recovery — the same
+/// trip/probe-back hysteresis shape as the resilience plane's circuit
+/// breaker, driven by either executor's clock.
+#[derive(Clone, Debug)]
+pub struct Brownout {
+    enabled: bool,
+    alpha: f64,
+    threshold: f64,
+    recover: f64,
+    min_samples: u32,
+    max_steps: usize,
+    ewma: f64,
+    samples: u32,
+    offset: usize,
+    /// Total step-down events over the run (reported as
+    /// `brownout_steps`).
+    pub steps: u64,
+}
+
+impl Brownout {
+    pub fn new(cfg: &OverloadConfig) -> Brownout {
+        Brownout {
+            enabled: cfg.enabled,
+            alpha: cfg.brownout_alpha,
+            threshold: cfg.brownout_threshold,
+            recover: cfg.brownout_recover,
+            min_samples: cfg.brownout_min_samples,
+            max_steps: cfg.brownout_max_steps,
+            ewma: 0.0,
+            samples: 0,
+            offset: 0,
+            steps: 0,
+        }
+    }
+
+    /// Record one pop observation (`at_risk` = the request would
+    /// finish past its deadline). May step the offset down (pressure
+    /// over the threshold) or up (pressure under the recovery level);
+    /// the min-sample guard re-arms after every step, so steps are
+    /// spaced — the hysteresis.
+    pub fn observe_pop(&mut self, at_risk: bool) {
+        if !self.enabled {
+            return;
+        }
+        let x = if at_risk { 1.0 } else { 0.0 };
+        self.ewma += self.alpha * (x - self.ewma);
+        self.samples += 1;
+        if self.samples < self.min_samples {
+            return;
+        }
+        if self.ewma > self.threshold && self.offset < self.max_steps {
+            self.offset += 1;
+            self.steps += 1;
+            self.samples = 0;
+        } else if self.ewma < self.recover && self.offset > 0 {
+            self.offset -= 1;
+            self.samples = 0;
+        }
+    }
+
+    /// The current degradation offset (0 = no brownout).
+    pub fn offset(&self) -> usize {
+        self.offset
+    }
+
+    /// The effective rung under brownout: the policy rung lowered by
+    /// the offset, never leaving `[rung − max_steps, rung]` (the
+    /// brownout band) and never below rung 0.
+    pub fn effective_rung(&self, policy_rung: usize) -> usize {
+        policy_rung.saturating_sub(self.offset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_config_is_inert() {
+        let cfg = OverloadConfig::default();
+        assert!(!cfg.enabled);
+        for id in 0..50u64 {
+            assert_eq!(cfg.class_of(id), 0);
+            assert_eq!(cfg.class_name(id), "-");
+            assert_eq!(cfg.rung_floor(id), 0);
+            assert!(cfg.deadline_ms(id, 0.0).is_infinite());
+            assert!(!cfg.expired(id, 0.0, 1e12));
+            assert!(!cfg.at_risk(id, 0.0, 1e12, 1e6));
+            assert!(cfg.admit(id, usize::MAX, 10.0, 1));
+        }
+        let mut b = Brownout::new(&cfg);
+        for _ in 0..10_000 {
+            b.observe_pop(true);
+        }
+        assert_eq!(b.offset(), 0);
+        assert_eq!(b.steps, 0);
+        assert_eq!(b.effective_rung(3), 3);
+    }
+
+    #[test]
+    fn parse_classes_grammar() {
+        let classes = parse_classes("gold:0.2:500,silver:0.5:2000,bronze:0.3:0").unwrap();
+        assert_eq!(classes.len(), 3);
+        assert_eq!(classes[0].name, "gold");
+        assert_eq!(classes[0].deadline_ms, 500.0);
+        assert_eq!(classes[0].rung_floor, 0);
+        assert_eq!(classes[2].deadline_ms, 0.0, "0 = no deadline");
+        // Optional 4th field: the rung floor.
+        let floored = parse_classes("gold:1:500:2").unwrap();
+        assert_eq!(floored[0].rung_floor, 2);
+        assert!(parse_classes("").is_err());
+        assert!(parse_classes("gold:0.2").is_err());
+        assert!(parse_classes("gold:-1:500").is_err());
+        assert!(parse_classes("gold:0.2:oops").is_err());
+        assert!(parse_classes("gold:0.2:500:x").is_err());
+    }
+
+    #[test]
+    fn parse_roundtrips_the_knobs() {
+        let cfg = OverloadConfig::parse(
+            "on,shed=tail,priority=on,shed_depth=64,brownout_alpha=0.4,\
+             brownout_threshold=0.6,brownout_recover=0.05,brownout_min_samples=9,\
+             brownout_max_steps=2",
+        )
+        .unwrap();
+        assert!(cfg.enabled);
+        assert!(!cfg.deadline_aware);
+        assert!(cfg.priority);
+        assert_eq!(cfg.shed_depth, 64);
+        assert_eq!(cfg.brownout_alpha, 0.4);
+        assert_eq!(cfg.brownout_threshold, 0.6);
+        assert_eq!(cfg.brownout_recover, 0.05);
+        assert_eq!(cfg.brownout_min_samples, 9);
+        assert_eq!(cfg.brownout_max_steps, 2);
+        assert_eq!(OverloadConfig::parse("off").unwrap(), OverloadConfig::default());
+        assert!(OverloadConfig::parse("on,bogus=1").is_err());
+        assert!(OverloadConfig::parse("on,shed=sideways").is_err());
+        assert!(OverloadConfig::parse("on,shed_depth=abc").is_err());
+    }
+
+    #[test]
+    fn class_assignment_is_deterministic_and_matches_the_mix() {
+        let cfg = OverloadConfig::enabled();
+        let n = 100_000u64;
+        let mut counts = [0usize; 3];
+        for id in 0..n {
+            let c = cfg.class_of(id);
+            assert_eq!(c, cfg.class_of(id), "same id, same class, always");
+            counts[c] += 1;
+        }
+        // gold:0.2, silver:0.5, bronze:0.3 within 2% absolute.
+        for (c, want) in [(0usize, 0.2f64), (1, 0.5), (2, 0.3)] {
+            let got = counts[c] as f64 / n as f64;
+            assert!((got - want).abs() < 0.02, "class {c}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn deadlines_and_expiry_follow_the_class() {
+        let cfg = OverloadConfig::enabled();
+        // Find one id of each class.
+        let gold = (0..).find(|&id| cfg.class_of(id) == 0).unwrap();
+        let bronze = (0..).find(|&id| cfg.class_of(id) == 2).unwrap();
+        assert_eq!(cfg.deadline_ms(gold, 100.0), 600.0);
+        assert!(cfg.deadline_ms(bronze, 100.0).is_infinite());
+        assert!(!cfg.expired(gold, 100.0, 600.0), "at the deadline is not past it");
+        assert!(cfg.expired(gold, 100.0, 600.1));
+        assert!(!cfg.expired(bronze, 100.0, 1e12), "no deadline never expires");
+        // at_risk fires earlier: now + mean past the deadline.
+        assert!(cfg.at_risk(gold, 100.0, 550.0, 90.0));
+        assert!(!cfg.at_risk(gold, 100.0, 400.0, 90.0));
+    }
+
+    #[test]
+    fn tail_mode_sheds_the_newest_at_the_depth_bound() {
+        let cfg = OverloadConfig { shed_depth: 8, ..OverloadConfig::tail_drop() };
+        for id in 0..20u64 {
+            assert!(cfg.admit(id, 7, 10.0, 2));
+            assert!(!cfg.admit(id, 8, 10.0, 2), "class-blind at the bound");
+        }
+    }
+
+    #[test]
+    fn deadline_mode_sheds_doomed_and_low_class_first() {
+        // mean 10 ms, 2 workers: gold (500 ms) budget = 2·500/10 = 100,
+        // silver (2000 ms) = 400, bronze = ∞; guard = min(100, 256) =
+        // 100. Nested shares: gold < 100, silver < 66.7, bronze < 33.3.
+        let cfg = OverloadConfig::enabled();
+        let gold = (0..).find(|&id| cfg.class_of(id) == 0).unwrap();
+        let silver = (0..).find(|&id| cfg.class_of(id) == 1).unwrap();
+        let bronze = (0..).find(|&id| cfg.class_of(id) == 2).unwrap();
+        // Bronze stops first, then silver, gold last.
+        assert!(cfg.admit(bronze, 33, 10.0, 2));
+        assert!(!cfg.admit(bronze, 34, 10.0, 2));
+        assert!(cfg.admit(silver, 66, 10.0, 2));
+        assert!(!cfg.admit(silver, 67, 10.0, 2));
+        assert!(cfg.admit(gold, 99, 10.0, 2));
+        // The doomed check: at depth 100 gold cannot make 500 ms even
+        // if everything drains perfectly.
+        assert!(!cfg.admit(gold, 100, 10.0, 2));
+    }
+
+    #[test]
+    fn brownout_steps_down_under_pressure_and_recovers() {
+        let cfg = OverloadConfig {
+            brownout_min_samples: 5,
+            brownout_max_steps: 2,
+            ..OverloadConfig::enabled()
+        };
+        let mut b = Brownout::new(&cfg);
+        // Sustained pressure: EWMA crosses 0.5 after the sample guard.
+        let mut downs = 0;
+        for _ in 0..40 {
+            let before = b.offset();
+            b.observe_pop(true);
+            if b.offset() > before {
+                downs += 1;
+            }
+        }
+        assert_eq!(b.offset(), 2, "stepped to the bound");
+        assert_eq!(b.steps, 2);
+        assert_eq!(downs, 2, "steps are spaced by the re-armed guard");
+        // Recovery: pressure falls below the recover threshold and the
+        // offset walks back up to 0.
+        for _ in 0..200 {
+            b.observe_pop(false);
+        }
+        assert_eq!(b.offset(), 0, "recovered");
+        assert_eq!(b.steps, 2, "recovery does not count as a step");
+    }
+
+    #[test]
+    fn brownout_never_exits_the_no_switch_band() {
+        let cfg = OverloadConfig {
+            brownout_min_samples: 1,
+            brownout_max_steps: 2,
+            ..OverloadConfig::enabled()
+        };
+        let mut b = Brownout::new(&cfg);
+        for i in 0..10_000 {
+            b.observe_pop(i % 3 != 0);
+            assert!(b.offset() <= 2, "offset bounded by max_steps");
+            for rung in 0..5usize {
+                let eff = b.effective_rung(rung);
+                assert!(eff <= rung, "brownout only degrades");
+                assert!(eff >= rung.saturating_sub(2), "within the band");
+            }
+        }
+    }
+
+    #[test]
+    fn brownout_min_sample_guard_holds() {
+        let cfg =
+            OverloadConfig { brownout_min_samples: 50, ..OverloadConfig::enabled() };
+        let mut b = Brownout::new(&cfg);
+        for _ in 0..49 {
+            b.observe_pop(true);
+            assert_eq!(b.offset(), 0, "no step before the guard fills");
+        }
+        b.observe_pop(true);
+        assert_eq!(b.offset(), 1);
+    }
+
+    #[test]
+    fn rung_floor_is_enforced_through_the_pool_band_clamp() {
+        use crate::serving::pool::parse_pools;
+        let pools = parse_pools("fast:2:1.0,accurate:2:2.5").unwrap();
+        let t = Topology::from_pools(&pools, 0.0).unwrap();
+        // No floor: the historical exec_rung.
+        assert_eq!(t.exec_rung_floor(0, 1, 0, 2), t.exec_rung(0, 1, 2));
+        // A floor raises the requested rung before the band clamp: the
+        // accurate pool serves rung 1 even when the policy sits at 0.
+        assert_eq!(t.exec_rung_floor(1, 0, 1, 2), 1);
+        // A pool whose whole band is below the floor serves its band
+        // top — the closest it can get.
+        assert_eq!(t.exec_rung_floor(0, 0, 1, 2), 0);
+    }
+
+    #[test]
+    fn class_compliance_scores_against_class_targets() {
+        use crate::metrics::RequestRecord;
+        let cfg = OverloadConfig::enabled();
+        let gold = (0..).find(|&id| cfg.class_of(id) == 0).unwrap();
+        let bronze = (0..).find(|&id| cfg.class_of(id) == 2).unwrap();
+        let mk = |id: u64, latency: f64| RequestRecord {
+            id,
+            arrival_ms: 0.0,
+            start_ms: 0.0,
+            finish_ms: latency,
+            config_idx: 0,
+            accuracy: 0.8,
+            success: None,
+        };
+        // One gold in deadline, one bronze far past the gold deadline
+        // but inside the SLO (bronze has no deadline: SLO target).
+        let records = vec![mk(gold, 400.0), mk(bronze, 900.0)];
+        let n = (gold.max(bronze) + 1) as usize;
+        let by_class = cfg.class_compliance(&records, n, 1000.0);
+        assert_eq!(by_class.len(), 3);
+        let gold_arrivals = (0..n as u64).filter(|&i| cfg.class_of(i) == 0).count();
+        let bronze_arrivals = (0..n as u64).filter(|&i| cfg.class_of(i) == 2).count();
+        assert!((by_class[0] - 1.0 / gold_arrivals as f64).abs() < 1e-12);
+        assert!((by_class[2] - 1.0 / bronze_arrivals as f64).abs() < 1e-12);
+        // Disabled: one implicit class scored against the SLO.
+        let off = OverloadConfig::default();
+        let flat = off.class_compliance(&records, n, 1000.0);
+        assert_eq!(flat.len(), 1);
+        assert!((flat[0] - 2.0 / n as f64).abs() < 1e-12);
+    }
+}

@@ -77,6 +77,13 @@
 //! Live/simulated dispatch parity is therefore definitional: there is
 //! one copy of the decision logic, not two kept in sync by tests.
 //!
+//! The overload plane ([`crate::serving::overload`]) follows the same
+//! split: deadline-aware shedding happens **injector-side** (before
+//! `push_pool`) and in-queue expiry **worker-side** (after pop), so the
+//! queue itself stays class-blind — items carry no priority here and the
+//! FIFO/steal/spill mechanics above are untouched whether the overload
+//! plane is on or off.
+//!
 //! The consumer API is exhaustive by construction: [`ShardedQueue`] pops
 //! return [`Popped`] (`Item`/`TimedOut`/`Closed`), so a consumer loop
 //! cannot reach a `Full` arm and has no panic path.

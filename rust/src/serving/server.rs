@@ -41,6 +41,7 @@ use anyhow::Result;
 
 use super::executor::RequestEngine;
 use super::monitor::LoadMonitor;
+use super::overload::{Brownout, OverloadConfig};
 use super::policy::ScalingPolicy;
 use super::pool::PoolSpec;
 use super::queue::{Discipline, Popped, ShardedQueue};
@@ -106,6 +107,15 @@ pub struct ServeOptions {
     /// still *counted* (an engine `Err` can no longer abort the run),
     /// but nothing is retried or routed around.
     pub resilience: ResilienceConfig,
+    /// The overload plane: SLO classes with per-request deadlines,
+    /// deadline-aware admission shedding, lazy in-queue expiry and
+    /// brownout rung degradation ([`OverloadConfig`]). Disabled (the
+    /// default) is bit-identical to the pre-overload runtime. The live
+    /// executor has no plan ladder, so deadline budgets use
+    /// [`OverloadConfig::rung_means_ms`] — fill it from the plan via
+    /// [`OverloadConfig::with_rung_means`] when shedding should be
+    /// service-time calibrated.
+    pub overload: OverloadConfig,
 }
 
 impl Default for ServeOptions {
@@ -121,6 +131,7 @@ impl Default for ServeOptions {
             spill_margin: 0.0,
             faults: FaultPlan::default(),
             resilience: ResilienceConfig::default(),
+            overload: OverloadConfig::default(),
         }
     }
 }
@@ -212,6 +223,18 @@ pub struct ServeOutcome {
     /// dark or breaker-open (admission remaps + dark-backlog
     /// redistribution).
     pub failovers: u64,
+    /// Arrivals shed by deadline-aware admission before entering the
+    /// queue (0 unless the overload plane is enabled). Conservation
+    /// extends to `served + rejected + failed + shed + expired ==
+    /// arrivals`.
+    pub shed: usize,
+    /// Queued requests skipped at pop time because their deadline had
+    /// already passed (lazy in-queue expiry; 0 unless the overload
+    /// plane is enabled).
+    pub expired: usize,
+    /// Brownout rung-degradation steps taken (down-steps only; 0 unless
+    /// the overload plane is enabled).
+    pub brownout_steps: u64,
 }
 
 /// Shared run-wide resilience state: the health view (breakers + retry
@@ -246,6 +269,106 @@ impl ResilienceState {
     fn record(&self, pool: usize, ok: bool, now_ms: f64) {
         if self.enabled {
             self.health.lock().unwrap().record(pool, ok, now_ms);
+        }
+    }
+}
+
+/// Shared run-wide overload state: the brownout controller behind one
+/// mutex — taken only on pops while the plane is enabled — plus
+/// lock-free shed/expired counters. The disabled path never touches any
+/// of it (structural bit-identity with the pre-overload runtime).
+struct OverloadState {
+    cfg: OverloadConfig,
+    enabled: bool,
+    brown: Mutex<Brownout>,
+    shed: AtomicUsize,
+    expired: AtomicUsize,
+}
+
+impl OverloadState {
+    fn new(cfg: OverloadConfig) -> OverloadState {
+        OverloadState {
+            enabled: cfg.enabled,
+            brown: Mutex::new(Brownout::new(&cfg)),
+            cfg,
+            shed: AtomicUsize::new(0),
+            expired: AtomicUsize::new(0),
+        }
+    }
+
+    /// Feed one pop observation into the deadline-pressure EWMA and
+    /// return the current brownout rung offset. Inert (and lock-free)
+    /// when the plane is disabled.
+    fn observe_pop(&self, at_risk: bool) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        let mut b = self.brown.lock().unwrap();
+        b.observe_pop(at_risk);
+        b.offset()
+    }
+
+    /// Admission gate for one arrival; `false` means the arrival was
+    /// shed (and counted). Always admits when the plane is disabled.
+    fn admit(&self, id: u64, depth: usize, mean_ms: f64, workers: usize) -> bool {
+        if !self.enabled || self.cfg.admit(id, depth, mean_ms, workers) {
+            return true;
+        }
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        false
+    }
+
+    /// Lazy in-queue expiry for a popped batch: requests whose deadline
+    /// passed while they queued fall out before dispatch, each counted
+    /// and fed to the brownout EWMA as a deadline miss. Returns the
+    /// survivors (the whole batch when the plane is disabled).
+    fn expire_batch(&self, items: Vec<Job>, now_ms: f64) -> Vec<Job> {
+        if !self.enabled {
+            return items;
+        }
+        let (dead, alive): (Vec<Job>, Vec<Job>) =
+            items.into_iter().partition(|&(id, arr, _)| self.cfg.expired(id, arr, now_ms));
+        if !dead.is_empty() {
+            self.expired.fetch_add(dead.len(), Ordering::Relaxed);
+            for _ in &dead {
+                self.observe_pop(true);
+            }
+        }
+        alive
+    }
+
+    /// Resolve the executing rung for a popped batch: feed each job's
+    /// deadline risk into the brownout EWMA, step the effective rung
+    /// down by the brownout offset, and enforce the strictest class
+    /// rung floor across the batch *before* the pool-band clamp.
+    /// Exactly `Topology::exec_rung` when the plane is disabled.
+    fn exec_rung(
+        &self,
+        topo: &Topology,
+        pool: usize,
+        idx: usize,
+        n_rungs: usize,
+        jobs: &[Job],
+        now_ms: f64,
+    ) -> usize {
+        if !self.enabled {
+            return topo.exec_rung(pool, idx, n_rungs);
+        }
+        let mean_now = self.cfg.mean_at(idx);
+        let mut floor = 0usize;
+        let mut off = 0usize;
+        for &(id, arr, _) in jobs {
+            off = self.observe_pop(self.cfg.at_risk(id, arr, now_ms, mean_now));
+            floor = floor.max(self.cfg.rung_floor(id));
+        }
+        topo.exec_rung_floor(pool, idx.saturating_sub(off), floor, n_rungs)
+    }
+
+    fn steps(&self) -> u64 {
+        if self.enabled {
+            self.brown.lock().unwrap().steps
+        } else {
+            0
         }
     }
 }
@@ -531,6 +654,7 @@ where
     let done = Arc::new(AtomicBool::new(false));
     let rejected = Arc::new(AtomicUsize::new(0));
     let res = Arc::new(ResilienceState::new(topo.n_pools(), opts.resilience.clone()));
+    let ov = Arc::new(OverloadState::new(opts.overload.clone()));
     let make_engine = &make_engine;
 
     std::thread::scope(|scope| -> Result<ServeOutcome> {
@@ -571,6 +695,7 @@ where
             let faults = opts.faults.clone();
             let res = res.clone();
             let res_on = opts.resilience.enabled;
+            let ov = ov.clone();
             scope.spawn(move || {
                 let start = wait_start();
                 for (id, &t_s) in arrivals.iter().enumerate() {
@@ -587,6 +712,16 @@ where
                     if let Some(cap) = faults.capacity_at_ms(t) {
                         if queue.len() >= cap {
                             rejected.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                    }
+                    // Deadline-aware admission (overload plane): shed
+                    // the doomed/over-share arrival before it is
+                    // observed or routed — the same pre-push admission
+                    // point the DES engine runs.
+                    if ov.enabled {
+                        let mean = ov.cfg.mean_at(handle.current_rung());
+                        if !ov.admit(id as u64, queue.len(), mean, topo.n_workers()) {
                             continue;
                         }
                     }
@@ -650,6 +785,7 @@ where
                 let dark_until = opts.faults.dark_until_ms(p);
                 let res = res.clone();
                 let res_cfg = opts.resilience.clone();
+                let ov = ov.clone();
                 handles.push(scope.spawn(move || -> Result<(usize, Vec<RequestRecord>)> {
                     // Build (and PJRT-compile) the engine; the last
                     // worker to finish releases the run clock. A failed
@@ -720,12 +856,24 @@ where
                                 Popped::Item(job) => {
                                     let (id, arrival_ms, attempt) = job;
                                     let t_start = now_ms();
+                                    // Lazy in-queue expiry (overload
+                                    // plane): a request whose deadline
+                                    // passed while it queued is skipped
+                                    // and counted — stale work never
+                                    // occupies the server.
+                                    if ov.enabled && ov.cfg.expired(id, arrival_ms, t_start) {
+                                        ov.expired.fetch_add(1, Ordering::Relaxed);
+                                        ov.observe_pop(true);
+                                        continue;
+                                    }
                                     // Switches take effect at dequeue;
                                     // the pool executes the rung of its
-                                    // own band.
+                                    // own band — browned out and
+                                    // class-floored under overload.
                                     let d = pooled_depth(&queue, &topo, &handle);
                                     let idx = handle.observe(t_start, d);
-                                    let exec = topo.exec_rung(p, idx, n_rungs);
+                                    let exec =
+                                        ov.exec_rung(&topo, p, idx, n_rungs, &[job], t_start);
                                     // Injected flake: a deterministic coin
                                     // on (id, attempt) — the same coin the
                                     // DES flips — fails the request before
@@ -854,10 +1002,16 @@ where
                         match queue.pop_batch_pool(p, lw, batch, Duration::from_millis(50)) {
                             Popped::Item(items) => {
                                 let t_start = now_ms();
-                                // Switches take effect at dequeue.
+                                // Lazy in-queue expiry (overload
+                                // plane): already-doomed requests fall
+                                // out of the batch before dispatch.
+                                let items = ov.expire_batch(items, t_start);
+                                // Switches take effect at dequeue;
+                                // browned out and class-floored under
+                                // overload.
                                 let d = pooled_depth(&queue, &topo, &handle);
                                 let idx = handle.observe(t_start, d);
-                                let exec = topo.exec_rung(p, idx, n_rungs);
+                                let exec = ov.exec_rung(&topo, p, idx, n_rungs, &items, t_start);
                                 // Injected flakes fail out of the batch
                                 // before dispatch (the same per-request
                                 // coin as the DES); the engine runs the
@@ -1020,6 +1174,9 @@ where
             timeouts: res.timeouts.load(Ordering::Relaxed),
             breaker_trips,
             failovers: res.failovers.load(Ordering::Relaxed),
+            shed: ov.shed.load(Ordering::Relaxed),
+            expired: ov.expired.load(Ordering::Relaxed),
+            brownout_steps: ov.steps(),
         })
     })
 }

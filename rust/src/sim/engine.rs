@@ -40,6 +40,7 @@
 
 use crate::metrics::{RequestRecord, SwitchEvent};
 use crate::planner::Plan;
+use crate::serving::overload::{Brownout, OverloadConfig};
 use crate::serving::policy::ScalingPolicy;
 use crate::serving::resilience::{HealthView, ResilienceConfig};
 use crate::serving::topology::{Dispatch, Topology};
@@ -226,6 +227,56 @@ pub fn simulate_topology_resilient<P: ScalingPolicy, S: ServiceModel>(
     faults: &FaultPlan,
     resilience: &ResilienceConfig,
 ) -> SimOutcome {
+    let overload = OverloadConfig::default();
+    simulate_topology_overload(
+        arrivals, plan, policy, service, seed, topo, batch, faults, resilience, &overload,
+    )
+}
+
+/// [`simulate_topology_resilient`] with the overload plane active — the
+/// DES mirror of the live runtime's graceful degradation, driving the
+/// same pure decision machines ([`OverloadConfig`], [`Brownout`],
+/// `Topology::exec_rung_floor`) with the virtual clock:
+///
+/// * **SLO classes** — every request id maps deterministically to a
+///   class of the configured mix (weight, deadline, rung floor); the
+///   arrival stream itself is untouched;
+/// * **deadline-aware admission** — an arrival whose class budget the
+///   backlog already exceeds is shed at admission (doomed / lowest
+///   class first; the tail-drop twin sheds the newest at `shed_depth`).
+///   Unlike a squeeze rejection, a shed *consumes the request id*, so
+///   DES ids stay aligned with the arrival index — and with the live
+///   injector — and class assignment agrees across executors;
+/// * **in-queue expiry** — a popped request whose deadline passed
+///   before service could start is skipped and counted (lazy expiry:
+///   stale work never occupies a server);
+/// * **brownout** — the deadline-pressure EWMA over pops steps the
+///   effective rung down within `[rung − max_steps, rung]` before
+///   shedding bites, and back up on recovery; per-class rung floors are
+///   enforced through the same band clamp;
+/// * **class-priority service** (`priority=on`, DES-only) — a dispatch
+///   takes the highest class queued in its shard, FIFO within a class;
+///   off by default so live and DES cells share FIFO semantics.
+///
+/// Conservation extends to
+/// `served + rejected + failed + shed + expired == arrivals`. With the
+/// disabled config this is bit-identical to
+/// [`simulate_topology_resilient`] (which now delegates here) — every
+/// overload branch is gated, so the event sequence and rng stream are
+/// unchanged; the parity pins in `tests/overload.rs` hold it to that.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_topology_overload<P: ScalingPolicy, S: ServiceModel>(
+    arrivals: &[f64],
+    plan: &Plan,
+    policy: &mut P,
+    service: &S,
+    seed: u64,
+    topo: &Topology,
+    batch: usize,
+    faults: &FaultPlan,
+    resilience: &ResilienceConfig,
+    overload: &OverloadConfig,
+) -> SimOutcome {
     let batch = batch.max(1);
     let alpha = plan.batch_alpha_ms.max(0.0);
     let n_rungs = plan.ladder.len();
@@ -262,6 +313,9 @@ pub fn simulate_topology_resilient<P: ScalingPolicy, S: ServiceModel>(
     let has_flaky = faults.any_flaky();
     let mut hv = HealthView::new(topo.n_pools(), resilience.clone());
     let mut counters = ResCounters::default();
+    let mut brown = Brownout::new(overload);
+    let mut shed_total = 0usize;
+    let mut expired_total = 0usize;
 
     let mut queues: Vec<std::collections::VecDeque<Item>> =
         (0..nsh).map(|_| std::collections::VecDeque::new()).collect();
@@ -418,7 +472,23 @@ pub fn simulate_topology_resilient<P: ScalingPolicy, S: ServiceModel>(
             let take = Topology::take_count(queues[shard].len(), batch, kind);
             let mut taken: Vec<Item> = Vec::with_capacity(take);
             for _ in 0..take {
-                taken.push(queues[shard].pop_front().unwrap());
+                // Class-priority service order (DES-only, off by
+                // default): take the highest class still queued in the
+                // shard, FIFO within a class.
+                let item = if overload.enabled && overload.priority {
+                    let mut best = 0usize;
+                    for j in 1..queues[shard].len() {
+                        if overload.class_of(queues[shard][j].0)
+                            < overload.class_of(queues[shard][best].0)
+                        {
+                            best = j;
+                        }
+                    }
+                    queues[shard].remove(best).unwrap()
+                } else {
+                    queues[shard].pop_front().unwrap()
+                };
+                taken.push(item);
             }
             queued_total -= take;
             pool_queued[topo.shard_pool(shard)] -= take;
@@ -428,7 +498,30 @@ pub fn simulate_topology_resilient<P: ScalingPolicy, S: ServiceModel>(
             // historical expression; only a retried request's backoff
             // can push it later).
             let ready_max = taken.iter().map(|it| it.2).fold(f64::NEG_INFINITY, f64::max);
-            let start = free_at.max(ready_max);
+            let mut start = free_at.max(ready_max);
+            // Lazy in-queue expiry: popped requests whose deadline
+            // already passed are skipped and counted — stale work never
+            // occupies a server. Dropping them can only lower the
+            // batch's ready_max, so `start` is recomputed over the
+            // survivors. An expired pop is maximal deadline pressure
+            // for the brownout signal.
+            let taken = if overload.enabled {
+                let (dead, alive): (Vec<Item>, Vec<Item>) = taken
+                    .into_iter()
+                    .partition(|&(id, arr, _, _)| overload.expired(id, arr, start));
+                if !dead.is_empty() {
+                    expired_total += dead.len();
+                    for _ in &dead {
+                        brown.observe_pop(true);
+                    }
+                    let ready_max =
+                        alive.iter().map(|it| it.2).fold(f64::NEG_INFINITY, f64::max);
+                    start = free_at.max(ready_max);
+                }
+                alive
+            } else {
+                taken
+            };
             // Switches apply at dequeue: one policy consultation per
             // batch, against the per-pool depth of the current rung's
             // home pool (the signal the live PolicyHandle feeds).
@@ -436,8 +529,21 @@ pub fn simulate_topology_resilient<P: ScalingPolicy, S: ServiceModel>(
             let idx = observe(policy, &mut switches, &mut observed, start, sig);
             // The pool executes its own rung — the policy rung clamped
             // into its band — and its hardware scales every sampled
-            // service time by the pool's speed factor.
-            let exec = topo.exec_rung(p, idx, n_rungs);
+            // service time by the pool's speed factor. Under overload
+            // the brownout offset lowers the requested rung within its
+            // band and the batch's strictest class floor raises it,
+            // both through the same clamp.
+            let exec = if overload.enabled {
+                let mean_now = plan.ladder[idx].mean_ms;
+                let mut floor = 0usize;
+                for &(id, arr, _, _) in &taken {
+                    brown.observe_pop(overload.at_risk(id, arr, start, mean_now));
+                    floor = floor.max(overload.rung_floor(id));
+                }
+                topo.exec_rung_floor(p, brown.effective_rung(idx), floor, n_rungs)
+            } else {
+                topo.exec_rung(p, idx, n_rungs)
+            };
             // An active slowdown window stretches the pool's hardware
             // speed factor for batches starting inside it.
             let speed = topo.speed(p) * faults.slowdown_at_ms(p, start);
@@ -537,6 +643,26 @@ pub fn simulate_topology_resilient<P: ScalingPolicy, S: ServiceModel>(
                     continue;
                 }
             }
+            // Deadline-aware admission (overload plane): shed the
+            // arrival whose class budget the backlog already exceeds —
+            // or, in tail-drop mode, any arrival past `shed_depth`.
+            // Unlike a squeeze rejection, a shed consumes the request
+            // id, keeping DES ids aligned with the arrival index (and
+            // with the live injector) so class assignment agrees
+            // across executors.
+            if overload.enabled
+                && !overload.admit(
+                    next_id,
+                    queued_total,
+                    plan.ladder[observed].mean_ms,
+                    topo.n_workers(),
+                )
+            {
+                shed_total += 1;
+                next_id += 1;
+                i += 1;
+                continue;
+            }
             // Health-aware routing (resilience only): a rung band whose
             // home pool is dark or breaker-open remaps to the nearest
             // surviving pool, exactly like the live injector.
@@ -597,5 +723,8 @@ pub fn simulate_topology_resilient<P: ScalingPolicy, S: ServiceModel>(
         timeouts: counters.timeouts,
         breaker_trips: hv.breaker_trips,
         failovers: counters.failovers,
+        shed: shed_total,
+        expired: expired_total,
+        brownout_steps: brown.steps,
     }
 }

@@ -84,7 +84,10 @@ pub mod engine;
 pub mod service;
 pub mod theory;
 
-pub use engine::{simulate_topology, simulate_topology_faults, simulate_topology_resilient};
+pub use engine::{
+    simulate_topology, simulate_topology_faults, simulate_topology_overload,
+    simulate_topology_resilient,
+};
 pub use service::{
     DeterministicService, ExponentialService, LognormalService, ParetoService, ServiceModel,
 };
@@ -134,6 +137,19 @@ pub struct SimOutcome {
     /// Requests routed to a non-home pool because the home pool was
     /// dark or breaker-open.
     pub failovers: u64,
+    /// Arrivals shed by the overload plane's admission control — a
+    /// doomed or over-budget class in deadline-aware mode, the newest
+    /// past `shed_depth` in the tail-drop twin. Always 0 outside
+    /// [`simulate_topology_overload`]; the fully extended conservation
+    /// law is `served + rejected + failed + shed + expired == arrivals`.
+    pub shed: usize,
+    /// Queued requests skipped at pop time because their class deadline
+    /// had already passed (lazy in-queue expiry — stale work never
+    /// occupies a server).
+    pub expired: usize,
+    /// Brownout step-down events: the deadline-pressure EWMA degraded
+    /// the effective rung within the policy's no-switch band.
+    pub brownout_steps: u64,
 }
 
 /// Simulate serving `arrivals` (seconds) under `policy` on a single

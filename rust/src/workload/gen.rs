@@ -293,6 +293,42 @@ impl ScenarioSpec {
 }
 
 // ---------------------------------------------------------------------
+// SLO-class assignment (overload plane)
+// ---------------------------------------------------------------------
+
+/// The SLO class of request `id` under a weighted mix: a splitmix64
+/// finalizer hashes the id to a unit uniform, and a cumulative-weight
+/// walk picks the class. A *pure function of the id* — no state, no rng
+/// stream — so the live executor, the DES and post-hoc log analysis all
+/// assign identical classes to the same arrival sequence, and the
+/// arrival stream itself is untouched (the overload plane stays
+/// bit-transparent when disabled). Weights need not sum to 1; they are
+/// normalized here. Empty or degenerate weights yield class 0.
+pub fn class_of_id(id: u64, weights: &[f64]) -> usize {
+    if weights.len() < 2 {
+        return 0;
+    }
+    let total: f64 = weights.iter().map(|w| w.max(0.0)).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    // splitmix64 finalizer: a high-quality bijective mix of the id.
+    let mut x = id.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    let u = (x >> 11) as f64 / (1u64 << 53) as f64;
+    let mut acc = 0.0;
+    for (i, w) in weights.iter().enumerate() {
+        acc += w.max(0.0) / total;
+        if u < acc {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+// ---------------------------------------------------------------------
 // Statistical signatures (cookbook + tests)
 // ---------------------------------------------------------------------
 
@@ -434,6 +470,26 @@ mod tests {
         let g = Generator::Constant { qps: 0.0 };
         let arrivals = ScenarioSpec { generator: g, duration_s: 50.0, seed: 1 }.arrivals();
         assert!(arrivals.is_empty());
+    }
+
+    #[test]
+    fn class_assignment_is_pure_and_tracks_the_weights() {
+        let weights = [0.2, 0.5, 0.3];
+        let n = 200_000u64;
+        let mut counts = [0usize; 3];
+        for id in 0..n {
+            let c = class_of_id(id, &weights);
+            assert_eq!(c, class_of_id(id, &weights), "pure function of the id");
+            counts[c] += 1;
+        }
+        for (c, want) in weights.iter().enumerate() {
+            let got = counts[c] as f64 / n as f64;
+            assert!((got - want).abs() < 0.01, "class {c}: {got} vs {want}");
+        }
+        // Degenerate mixes collapse to class 0.
+        assert_eq!(class_of_id(7, &[]), 0);
+        assert_eq!(class_of_id(7, &[1.0]), 0);
+        assert_eq!(class_of_id(7, &[0.0, 0.0]), 0);
     }
 
     #[test]

@@ -5,9 +5,12 @@
 //! round-trip float precision so save → load → simulate is bit-identical
 //! to the generating run (pinned by `roundtrip_is_exact`). Request logs
 //! are the dataset-rows shape — one row per served request with
-//! arrival/start/finish, the rung and pool that served it, latency, and
-//! outcome — so a sweep cell can be archived and re-analyzed (or its
-//! arrivals replayed through a different policy) without rerunning it.
+//! arrival/start/finish, the rung and pool that served it, latency,
+//! outcome, and (since the overload plane) the SLO class and its
+//! relative deadline — so a sweep cell can be archived and re-analyzed
+//! (or its arrivals replayed through a different policy) without
+//! rerunning it. Legacy 9-column logs still load, with the class
+//! columns defaulted.
 
 use std::io::{BufRead, Write};
 use std::path::Path;
@@ -15,7 +18,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::metrics::RequestRecord;
-use crate::serving::Topology;
+use crate::serving::{OverloadConfig, Topology};
 use crate::util::csv::CsvWriter;
 
 /// Write arrivals (seconds, ascending) as a one-column CSV. Floats are
@@ -58,7 +61,8 @@ pub fn load_trace(path: &Path) -> Result<Vec<f64>> {
 
 /// One row of a request log: a [`RequestRecord`] plus the pool that the
 /// serving rung routed to (derived from the run's topology at save
-/// time, so the log is self-contained).
+/// time, so the log is self-contained) and the request's SLO class
+/// (derived from the overload config the run executed under).
 #[derive(Clone, Debug, PartialEq)]
 pub struct RequestLogRow {
     pub id: u64,
@@ -72,11 +76,27 @@ pub struct RequestLogRow {
     /// `"ok"` / `"fail"` for live runs with sampled answers, `"na"` for
     /// simulations.
     pub outcome: String,
+    /// SLO class name (`"-"` for classless runs and legacy 9-column
+    /// logs).
+    pub class: String,
+    /// The class's relative deadline, ms after arrival (0 = none).
+    pub deadline_ms: f64,
 }
 
 impl RequestLogRow {
-    /// Convert a run record into a log row under `topo`'s routing.
+    /// Convert a run record into a log row under `topo`'s routing
+    /// (classless: the overload columns take their legacy defaults).
     pub fn from_record(r: &RequestRecord, topo: &Topology) -> RequestLogRow {
+        RequestLogRow::from_record_overload(r, topo, &OverloadConfig::default())
+    }
+
+    /// Convert a run record into a log row under `topo`'s routing and
+    /// `ov`'s class assignment.
+    pub fn from_record_overload(
+        r: &RequestRecord,
+        topo: &Topology,
+        ov: &OverloadConfig,
+    ) -> RequestLogRow {
         RequestLogRow {
             id: r.id,
             arrival_ms: r.arrival_ms,
@@ -91,6 +111,8 @@ impl RequestLogRow {
                 Some(false) => "fail".into(),
                 None => "na".into(),
             },
+            class: ov.class_name(r.id).to_string(),
+            deadline_ms: ov.class_deadline_ms(r.id),
         }
     }
 
@@ -113,6 +135,8 @@ impl RequestLogRow {
     }
 }
 
+/// The legacy 9-column request-log header (pre-overload fixtures);
+/// still loadable, with the overload columns defaulted.
 const LOG_HEADER: [&str; 9] = [
     "id",
     "arrival_ms",
@@ -125,12 +149,40 @@ const LOG_HEADER: [&str; 9] = [
     "outcome",
 ];
 
+/// The current request-log header: the legacy columns plus the SLO
+/// class and its relative deadline.
+const LOG_HEADER_V2: [&str; 11] = [
+    "id",
+    "arrival_ms",
+    "start_ms",
+    "finish_ms",
+    "rung",
+    "pool",
+    "latency_ms",
+    "accuracy",
+    "outcome",
+    "class",
+    "deadline_ms",
+];
+
 /// Write a full request log (one row per served request, full float
-/// precision) for the records of a live or simulated run.
+/// precision) for the records of a classless run — the overload
+/// columns carry their legacy defaults (`"-"`, 0).
 pub fn save_request_log(path: &Path, records: &[RequestRecord], topo: &Topology) -> Result<()> {
-    let mut w = CsvWriter::create(path, &LOG_HEADER)?;
+    save_request_log_overload(path, records, topo, &OverloadConfig::default())
+}
+
+/// Write a full request log with the SLO class columns filled from
+/// `ov`'s deterministic class assignment.
+pub fn save_request_log_overload(
+    path: &Path,
+    records: &[RequestRecord],
+    topo: &Topology,
+    ov: &OverloadConfig,
+) -> Result<()> {
+    let mut w = CsvWriter::create(path, &LOG_HEADER_V2)?;
     for r in records {
-        let row = RequestLogRow::from_record(r, topo);
+        let row = RequestLogRow::from_record_overload(r, topo, ov);
         w.row(&[
             row.id.to_string(),
             row.arrival_ms.to_string(),
@@ -141,16 +193,21 @@ pub fn save_request_log(path: &Path, records: &[RequestRecord], topo: &Topology)
             row.latency_ms.to_string(),
             row.accuracy.to_string(),
             row.outcome.clone(),
+            row.class.clone(),
+            row.deadline_ms.to_string(),
         ])?;
     }
     w.flush()?;
     Ok(())
 }
 
-/// Load a request log saved by [`save_request_log`].
+/// Load a request log saved by [`save_request_log`] — either the
+/// current 11-column schema or a legacy 9-column fixture, whose rows
+/// load with the default class (`"-"`) and no deadline.
 pub fn load_request_log(path: &Path) -> Result<Vec<RequestLogRow>> {
     let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let mut out = Vec::new();
+    let mut legacy = false;
     for (i, line) in std::io::BufReader::new(file).lines().enumerate() {
         let line = line?;
         let line = line.trim();
@@ -159,13 +216,18 @@ pub fn load_request_log(path: &Path) -> Result<Vec<RequestLogRow>> {
         }
         let cols: Vec<&str> = line.split(',').collect();
         if i == 0 {
-            if cols != LOG_HEADER {
+            if cols == LOG_HEADER_V2 {
+                legacy = false;
+            } else if cols == LOG_HEADER {
+                legacy = true;
+            } else {
                 bail!("{path:?}: unexpected request-log header {line:?}");
             }
             continue;
         }
-        if cols.len() != LOG_HEADER.len() {
-            bail!("{path:?}:{}: expected {} columns", i + 1, LOG_HEADER.len());
+        let want = if legacy { LOG_HEADER.len() } else { LOG_HEADER_V2.len() };
+        if cols.len() != want {
+            bail!("{path:?}:{}: expected {want} columns", i + 1);
         }
         let f = |j: usize| -> Result<f64> {
             cols[j]
@@ -188,6 +250,8 @@ pub fn load_request_log(path: &Path) -> Result<Vec<RequestLogRow>> {
             latency_ms: f(6)?,
             accuracy: f(7)?,
             outcome: cols[8].to_string(),
+            class: if legacy { "-".to_string() } else { cols[9].to_string() },
+            deadline_ms: if legacy { 0.0 } else { f(10)? },
         });
     }
     Ok(out)
@@ -263,7 +327,63 @@ mod tests {
             assert_eq!(&row.to_record(), rec);
             assert_eq!(row.pool, topo.pool_for_rung(rec.config_idx));
             assert_eq!(row.latency_ms.to_bits(), (rec.finish_ms - rec.arrival_ms).to_bits());
+            assert_eq!(row.class, "-", "classless run: default class");
+            assert_eq!(row.deadline_ms, 0.0);
         }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn classed_request_log_roundtrips_exactly() {
+        let topo = Topology::uniform(2, 2);
+        let ov = OverloadConfig::enabled();
+        // Awkward floats on purpose: thirds, sevenths, subnormal-ish
+        // offsets — the row must survive save → load bit-for-bit.
+        let records: Vec<RequestRecord> = (0..64u64)
+            .map(|id| RequestRecord {
+                id,
+                arrival_ms: id as f64 / 3.0,
+                start_ms: id as f64 / 3.0 + 1.0 / 7.0,
+                finish_ms: id as f64 / 3.0 + 1.0 / 7.0 + 0.1 * (id % 9) as f64,
+                config_idx: (id % 2) as usize,
+                accuracy: 0.5 + (id % 13) as f64 / 26.0,
+                success: match id % 3 {
+                    0 => Some(true),
+                    1 => Some(false),
+                    _ => None,
+                },
+            })
+            .collect();
+        let path = std::env::temp_dir().join("compass_reqlog_classed.csv");
+        save_request_log_overload(&path, &records, &topo, &ov).unwrap();
+        let rows = load_request_log(&path).unwrap();
+        assert_eq!(rows.len(), records.len());
+        for (row, rec) in rows.iter().zip(&records) {
+            let want = RequestLogRow::from_record_overload(rec, &topo, &ov);
+            assert_eq!(row, &want, "every column round-trips exactly");
+            assert_eq!(row.class, ov.class_name(rec.id));
+            assert_eq!(row.deadline_ms.to_bits(), ov.class_deadline_ms(rec.id).to_bits());
+            assert_eq!(&row.to_record(), rec);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn legacy_nine_column_log_loads_with_defaults() {
+        let path = std::env::temp_dir().join("compass_reqlog_legacy.csv");
+        std::fs::write(
+            &path,
+            "id,arrival_ms,start_ms,finish_ms,rung,pool,latency_ms,accuracy,outcome\n\
+             3,1.5,2.5,9.25,1,0,7.75,0.9,ok\n",
+        )
+        .unwrap();
+        let rows = load_request_log(&path).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].id, 3);
+        assert_eq!(rows[0].rung, 1);
+        assert_eq!(rows[0].outcome, "ok");
+        assert_eq!(rows[0].class, "-", "legacy rows default the class");
+        assert_eq!(rows[0].deadline_ms, 0.0, "legacy rows carry no deadline");
         let _ = std::fs::remove_file(&path);
     }
 

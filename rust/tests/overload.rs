@@ -1,0 +1,332 @@
+//! Integration: the overload plane — SLO classes with per-request
+//! deadlines, deadline-aware admission and shedding, lazy in-queue
+//! expiry, and brownout degradation — in BOTH executors, with the
+//! extended conservation law
+//! `served + rejected + failed + shed + expired == arrivals`
+//! holding everywhere, including under chaos.
+//!
+//! Two pins anchor the PR:
+//!
+//! 1. **Disabled parity** — `OverloadConfig::default()` (off)
+//!    reproduces the plain DES engine bit for bit, and the live server
+//!    with the plane off reports all-zero overload counters.
+//! 2. **Deadline-aware beats tail-drop** — under the same sustained
+//!    overload, same arrivals and same seed, deadline-aware shedding
+//!    yields strictly higher gold-class compliance (per *offered* gold
+//!    arrival) than the tail-drop twin, in both the DES and the live
+//!    runtime.
+
+use std::time::Duration;
+
+use anyhow::Result;
+use compass::planner::{derive_plan, AqmParams, LatencyProfile, Plan, ProfiledConfig};
+use compass::serving::executor::RequestEngine;
+use compass::serving::{
+    parse_classes, parse_pools, serve, OverloadConfig, ResilienceConfig, ServeOptions,
+    StaticPolicy, Topology,
+};
+use compass::sim::{simulate_topology, simulate_topology_overload, LognormalService, SimOutcome};
+use compass::workflows::ExecOutcome;
+use compass::workload::{Fault, FaultPlan};
+
+/// Synthetic two-rung plan (fast 20 ms, accurate 90 ms), same idiom as
+/// the resilience suite.
+fn plan2() -> Plan {
+    let mk = |label: &str, acc: f64, mean: f64, p95: f64| ProfiledConfig {
+        config: vec![],
+        label: label.into(),
+        accuracy: acc,
+        latency: LatencyProfile { mean_ms: mean, p50_ms: mean, p95_ms: p95, runs: 10 },
+    };
+    derive_plan(
+        &[mk("fast", 0.76, 20.0, 28.0), mk("accurate", 0.85, 90.0, 120.0)],
+        AqmParams::for_slo(300.0),
+    )
+}
+
+fn steady_arrivals(qps: f64, dur: f64) -> Vec<f64> {
+    let n = (qps * dur) as usize;
+    (0..n).map(|i| i as f64 / qps).collect()
+}
+
+/// The extended conservation law: every arrival ends in exactly one of
+/// served / rejected / failed / shed / expired.
+fn conserve5(
+    label: &str,
+    served: usize,
+    rejected: usize,
+    failed: usize,
+    shed: usize,
+    expired: usize,
+    arrivals: usize,
+) {
+    assert_eq!(
+        served + rejected + failed + shed + expired,
+        arrivals,
+        "{label}: {served} served + {rejected} rejected + {failed} failed + {shed} shed \
+         + {expired} expired != {arrivals} arrivals"
+    );
+}
+
+/// Sleeps out a fixed service time, always succeeds.
+struct SleepEngine {
+    service_ms: f64,
+}
+
+impl RequestEngine for SleepEngine {
+    fn execute(&mut self, _idx: usize) -> Result<ExecOutcome> {
+        std::thread::sleep(Duration::from_secs_f64(self.service_ms / 1e3));
+        Ok(ExecOutcome { accuracy: 0.8, success: None })
+    }
+
+    fn rungs(&self) -> usize {
+        2
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pin 1: the plane off is invisible in both executors
+// ---------------------------------------------------------------------
+
+#[test]
+fn des_disabled_overload_is_bit_identical_to_the_plain_engine() {
+    let plan = plan2();
+    let arr = steady_arrivals(12.0, 60.0);
+    let svc = LognormalService::from_plan(&plan, 0.25);
+    let topo = Topology::uniform(2, 2);
+    let mut p1 = compass::serving::ElasticoPolicy::new(plan.clone());
+    let base = simulate_topology(&arr, &plan, &mut p1, &svc, 42, &topo, 1);
+    let mut p2 = compass::serving::ElasticoPolicy::new(plan.clone());
+    let out = simulate_topology_overload(
+        &arr,
+        &plan,
+        &mut p2,
+        &svc,
+        42,
+        &topo,
+        1,
+        &FaultPlan::none(),
+        &ResilienceConfig::default(),
+        &OverloadConfig::default(),
+    );
+    assert_eq!(base.records.len(), out.records.len());
+    for (x, y) in base.records.iter().zip(&out.records) {
+        assert_eq!(x, y, "disabled overload must not perturb the DES");
+    }
+    assert_eq!(base.switches.len(), out.switches.len());
+    assert_eq!((out.shed, out.expired, out.brownout_steps), (0, 0, 0));
+}
+
+#[test]
+fn live_overload_off_reports_zero_counters() {
+    let n = 60;
+    let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.003).collect();
+    let out = serve(
+        move || Ok(SleepEngine { service_ms: 1.0 }),
+        Box::new(StaticPolicy::new(0, "fast")),
+        &arrivals,
+        &ServeOptions { workers: 2, ..ServeOptions::default() },
+    )
+    .unwrap();
+    conserve5("live off", out.records.len(), out.rejected, out.failed, out.shed, out.expired, n);
+    assert_eq!((out.shed, out.expired, out.brownout_steps), (0, 0, 0));
+}
+
+// ---------------------------------------------------------------------
+// DES: shedding, expiry, brownout under sustained overload
+// ---------------------------------------------------------------------
+
+/// 1.5x capacity on a 2-worker, 20 ms rung: 150 qps against 100 qps.
+fn overload_run(cfg: &OverloadConfig) -> (SimOutcome, Vec<f64>) {
+    let plan = plan2();
+    let arr = steady_arrivals(150.0, 20.0);
+    let svc = LognormalService::from_plan(&plan, 0.10);
+    let topo = Topology::uniform(2, 2);
+    let mut p = StaticPolicy::new(0, "fast");
+    let out = simulate_topology_overload(
+        &arr,
+        &plan,
+        &mut p,
+        &svc,
+        42,
+        &topo,
+        1,
+        &FaultPlan::none(),
+        &ResilienceConfig::default(),
+        cfg,
+    );
+    (out, arr)
+}
+
+#[test]
+fn des_deadline_shedding_strictly_beats_tail_drop_on_gold_compliance() {
+    let plan = plan2();
+    let aware_cfg = OverloadConfig::enabled();
+    let tail_cfg = OverloadConfig::tail_drop();
+    let (aware, arr) = overload_run(&aware_cfg);
+    let (tail, _) = overload_run(&tail_cfg);
+    conserve5(
+        "des aware",
+        aware.records.len(),
+        aware.rejected,
+        aware.failed,
+        aware.shed,
+        aware.expired,
+        arr.len(),
+    );
+    conserve5(
+        "des tail",
+        tail.records.len(),
+        tail.rejected,
+        tail.failed,
+        tail.shed,
+        tail.expired,
+        arr.len(),
+    );
+    assert!(aware.shed > 0, "1.5x sustained load must engage the admission gate");
+    let g_aware = aware_cfg.class_compliance(&aware.records, arr.len(), plan.slo_ms)[0];
+    let g_tail = tail_cfg.class_compliance(&tail.records, arr.len(), plan.slo_ms)[0];
+    assert!(
+        g_aware > g_tail,
+        "deadline-aware shedding must strictly beat tail-drop on gold compliance \
+         in the DES: aware {g_aware:.3} vs tail {g_tail:.3}"
+    );
+}
+
+#[test]
+fn des_lazy_expiry_skips_doomed_requests_and_conserves() {
+    // A uselessly deep tail-drop bound: nothing is shed, the backlog
+    // grows without limit, and queued gold/silver requests blow their
+    // deadlines long before a worker reaches them — the lazy expiry
+    // path must skip (and count) them instead of serving stale work.
+    let cfg = OverloadConfig { shed_depth: 10_000, ..OverloadConfig::tail_drop() };
+    let (out, arr) = overload_run(&cfg);
+    conserve5(
+        "des expiry",
+        out.records.len(),
+        out.rejected,
+        out.failed,
+        out.shed,
+        out.expired,
+        arr.len(),
+    );
+    assert_eq!(out.shed, 0, "the gate never engages below shed_depth");
+    assert!(out.expired > 0, "deep backlogs must expire finite-deadline requests in queue");
+    assert!(
+        out.brownout_steps >= 1,
+        "sustained deadline pressure must step the brownout at least once"
+    );
+}
+
+#[test]
+fn des_overload_replays_bit_identically() {
+    let (a, _) = overload_run(&OverloadConfig::enabled());
+    let (b, _) = overload_run(&OverloadConfig::enabled());
+    assert_eq!(a.records.len(), b.records.len());
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x, y, "the overloaded DES must replay bit-identically");
+    }
+    assert_eq!((a.shed, a.expired, a.brownout_steps), (b.shed, b.expired, b.brownout_steps));
+}
+
+#[test]
+fn des_conservation_holds_under_overload_plus_chaos() {
+    // Overload on top of the PR-7 chaos drills: a windowed dark pool
+    // AND a flaky engine window, with resilience (retries + failover)
+    // and deadline-aware shedding active at once. Every arrival must
+    // still land in exactly one terminal bucket.
+    let pools = parse_pools("fast:2:1.0,acc:2:1.0").unwrap();
+    let topo = Topology::from_pools(&pools, 0.0).unwrap();
+    let plan = plan2();
+    let svc = LognormalService::from_plan(&plan, 0.10);
+    let arr = steady_arrivals(220.0, 20.0);
+    let faults = FaultPlan::none()
+        .with(Fault::PoolDark { pool: 1, at_s: 5.0, until_s: Some(12.0) })
+        .with(Fault::EngineFlaky { pool: 0, rate: 0.25, from_s: 8.0, to_s: 15.0 });
+    let run = || -> SimOutcome {
+        let mut p = StaticPolicy::new(0, "fast");
+        simulate_topology_overload(
+            &arr,
+            &plan,
+            &mut p,
+            &svc,
+            42,
+            &topo,
+            1,
+            &faults,
+            &ResilienceConfig::enabled(),
+            &OverloadConfig::enabled(),
+        )
+    };
+    let out = run();
+    conserve5(
+        "des chaos",
+        out.records.len(),
+        out.rejected,
+        out.failed,
+        out.shed,
+        out.expired,
+        arr.len(),
+    );
+    assert!(out.shed > 0, "overload past capacity must shed");
+    // Chaos + overload together stay deterministic.
+    let again = run();
+    assert_eq!(out.records.len(), again.records.len());
+    for (x, y) in out.records.iter().zip(&again.records) {
+        assert_eq!(x, y, "chaos + overload DES must replay bit-identically");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Live executor: the strict-beat pin and expiry under real threads
+// ---------------------------------------------------------------------
+
+#[test]
+fn live_deadline_shedding_strictly_beats_tail_drop_on_gold_compliance() {
+    // 2 workers x 4 ms service = ~500 qps capacity; arrivals every
+    // 1.8 ms = ~555 qps offered. Deadlines are scaled to the 4 ms rung
+    // (gold 80 ms => a 40-deep gold budget) so the admission gate
+    // engages well below the 256-deep tail-drop bound.
+    let n = 1500;
+    let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.0018).collect();
+    let classes = parse_classes("gold:0.2:80,silver:0.5:400,bronze:0.3:0").unwrap();
+    let run = |cfg: OverloadConfig| {
+        let cfg = cfg.with_classes(classes.clone()).with_rung_means(vec![4.0, 4.0]);
+        let out = serve(
+            move || Ok(SleepEngine { service_ms: 4.0 }),
+            Box::new(StaticPolicy::new(0, "fast")),
+            &arrivals,
+            &ServeOptions { workers: 2, overload: cfg.clone(), ..ServeOptions::default() },
+        )
+        .unwrap();
+        (out, cfg)
+    };
+    let (aware, aware_cfg) = run(OverloadConfig::enabled());
+    let (tail, tail_cfg) = run(OverloadConfig::tail_drop());
+    conserve5(
+        "live aware",
+        aware.records.len(),
+        aware.rejected,
+        aware.failed,
+        aware.shed,
+        aware.expired,
+        n,
+    );
+    conserve5(
+        "live tail",
+        tail.records.len(),
+        tail.rejected,
+        tail.failed,
+        tail.shed,
+        tail.expired,
+        n,
+    );
+    assert!(aware.shed > 0, "sustained 1.1x load must engage the admission gate");
+    let g_aware = aware_cfg.class_compliance(&aware.records, n, 300.0)[0];
+    let g_tail = tail_cfg.class_compliance(&tail.records, n, 300.0)[0];
+    assert!(
+        g_aware > g_tail,
+        "deadline-aware shedding must strictly beat tail-drop on gold compliance \
+         live: aware {g_aware:.3} vs tail {g_tail:.3}"
+    );
+}

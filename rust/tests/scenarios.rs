@@ -251,7 +251,7 @@ fn sweep_writes_schema_valid_json() {
         ..ExperimentCtx::default()
     };
     let opts = ScenarioOpts {
-        scenarios: vec!["steady".into(), "pool_dark".into()],
+        scenarios: vec!["steady".into(), "pool_dark".into(), "overload_sustained".into()],
         topos: vec!["pooled-2x2".into()],
         policies: vec!["Static-Accurate".into()],
         out: out.clone(),
@@ -261,11 +261,11 @@ fn sweep_writes_schema_valid_json() {
     let doc = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
     assert_eq!(doc.get("schema").unwrap().as_str(), Some(SCHEMA));
     let cells = doc.get("cells").unwrap().as_obj().unwrap();
-    assert_eq!(cells.len(), 2);
+    assert_eq!(cells.len(), 3);
     for (key, cell) in cells {
         let f = |k: &str| cell.get(k).unwrap().as_f64().unwrap();
         assert_eq!(
-            f("served") + f("rejected") + f("failed"),
+            f("served") + f("rejected") + f("failed") + f("shed") + f("expired"),
             f("arrivals"),
             "conservation violated in {key}"
         );
@@ -273,12 +273,19 @@ fn sweep_writes_schema_valid_json() {
         assert!((0.0..=1.0).contains(&comp), "{key}: compliance {comp}");
         let goodput = f("slo_goodput");
         assert!((0.0..=1.0).contains(&goodput), "{key}: slo_goodput {goodput}");
+        let gold = f("gold_compliance");
+        assert!((0.0..=1.0).contains(&gold), "{key}: gold_compliance {gold}");
         assert!(cell.get("resilience").unwrap().as_str().is_some(), "{key}: resilience tag");
+        assert!(cell.get("overload").unwrap().as_str().is_some(), "{key}: overload tag");
         assert!(f("p50_ms") <= f("p95_ms") && f("p95_ms") <= f("p99_ms"), "{key}");
     }
     let dark = &cells["pool_dark|pooled-2x2|Static-Accurate"];
     assert_ne!(dark.get("faults").unwrap().as_str(), Some("none"));
     assert!(dark.get("spills").unwrap().as_f64().unwrap() >= 1.0);
+    let over = &cells["overload_sustained|pooled-2x2|Static-Accurate"];
+    assert_eq!(over.get("overload").unwrap().as_str(), Some("deadline"));
+    let steady = &cells["steady|pooled-2x2|Static-Accurate"];
+    assert_eq!(steady.get("overload").unwrap().as_str(), Some("off"));
     let _ = std::fs::remove_dir_all(&out_dir);
 }
 

@@ -14,6 +14,11 @@
 //!   between its all-fast and all-slow homogeneous bounds in mean
 //!   latency — the sanity envelope for every routing/spill decision the
 //!   pooled runtime makes.
+//! * **Two-class priority sandwich**: with the overload plane's
+//!   DES-only class-priority service order, a two-class M/M/k at
+//!   ρ = 0.7 must reproduce the non-preemptive priority waits (Cobham)
+//!   and sit strictly around the FIFO wait:
+//!   W_gold ≤ W_fifo ≤ W_bronze.
 
 use compass::planner::{ConfigPolicy, Plan};
 use compass::serving::pool::{parse_pools, PoolSpec};
@@ -208,5 +213,87 @@ fn erlang_thresholds_agree_with_the_des_measured_waiting_probability() {
         // And the legacy bound is genuinely deepened (C < 1).
         let legacy = derive_plan(&front, AqmParams::for_slo_workers(300.0, k));
         assert!(plan.ladder[0].upscale_threshold > legacy.ladder[0].upscale_threshold);
+    }
+}
+
+#[test]
+fn two_class_priority_waits_sandwich_fifo_and_match_mmk_priority_theory() {
+    // Non-preemptive two-class M/M/k priority at ρ = 0.7 (k = 2, mean
+    // 10 ms exponential service, equal class split, no deadlines so the
+    // overload plane's shed/expiry machinery stays inert). Cobham's
+    // waits are
+    //   W_j = C(k, a)/(kμ) / ((1 − σ_{j−1})(1 − σ_j)),  σ_j = Σ_{i≤j} λ_i/(kμ)
+    // and blind FIFO is W = C(k, a)/(kμ(1 − ρ)). The class-priority DES
+    // (`priority=on`, an overload-plane knob) must reproduce the
+    // priority waits, the FIFO run the blind wait, and the sandwich
+    // W_gold < W_fifo < W_bronze must be strict.
+    use compass::serving::{parse_classes, OverloadConfig, ResilienceConfig, Topology};
+    use compass::sim::simulate_topology_overload;
+    use compass::workload::FaultPlan;
+
+    let k = 2usize;
+    let mean_ms = 10.0;
+    let rho = 0.7;
+    let plan = plan_one(mean_ms);
+    let svc = ExponentialService { means: vec![mean_ms] };
+    let qps = rho * k as f64 * 100.0;
+    let arrivals = poisson_arrivals(qps, 6000.0, 37);
+    // One shard = the central FIFO: the priority scan sees the whole
+    // backlog, so the service order is exactly the theory's.
+    let topo = Topology::uniform(k, 1);
+    let classes = parse_classes("gold:0.5:0,bronze:0.5:0").unwrap();
+
+    let run = |priority: bool| {
+        let cfg =
+            OverloadConfig { priority, ..OverloadConfig::enabled() }.with_classes(classes.clone());
+        let mut pol = StaticPolicy::new(0, "only");
+        let out = simulate_topology_overload(
+            &arrivals,
+            &plan,
+            &mut pol,
+            &svc,
+            37,
+            &topo,
+            1,
+            &FaultPlan::none(),
+            &ResilienceConfig::default(),
+            &cfg,
+        );
+        assert_eq!(out.records.len(), arrivals.len(), "nothing sheds or expires at ρ = 0.7");
+        (out, cfg)
+    };
+    let (fifo, cfg) = run(false);
+    let (prio, _) = run(true);
+    let class_mean = |records: &[compass::metrics::RequestRecord], class: usize| {
+        let waits: Vec<f64> = records
+            .iter()
+            .filter(|r| cfg.class_of(r.id) == class)
+            .map(|r| r.wait_ms())
+            .collect();
+        waits.iter().sum::<f64>() / waits.len() as f64
+    };
+    let w_fifo = mean_wait_ms(&fifo.records);
+    let w_gold = class_mean(&prio.records, 0);
+    let w_bronze = class_mean(&prio.records, 1);
+    assert!(
+        w_gold < w_fifo && w_fifo < w_bronze,
+        "sandwich violated: gold {w_gold:.2} ms, fifo {w_fifo:.2} ms, bronze {w_bronze:.2} ms"
+    );
+
+    let kmu = k as f64 / mean_ms; // kμ per ms
+    let c = erlang_c(k, k as f64 * rho);
+    let sigma_gold = 0.5 * rho; // the gold half of the offered load
+    let expect_fifo = c / (kmu * (1.0 - rho));
+    let expect_gold = c / (kmu * (1.0 - sigma_gold));
+    let expect_bronze = c / (kmu * (1.0 - sigma_gold) * (1.0 - rho));
+    for (label, got, want) in [
+        ("fifo", w_fifo, expect_fifo),
+        ("gold", w_gold, expect_gold),
+        ("bronze", w_bronze, expect_bronze),
+    ] {
+        assert!(
+            (got - want).abs() / want < 0.10,
+            "{label}: measured {got:.3} ms vs theory {want:.3} ms"
+        );
     }
 }
