@@ -36,7 +36,15 @@ any violation is a hard failure:
   zero shed/expired; the sustained Static-Accurate cell (ρ ≈ 1.5)
   must shed or expire at least one request. The deadline-vs-tail
   gold_compliance ratio itself is gated by `bench_gate.py` against
-  BENCH_scenarios_baseline.json.
+  BENCH_scenarios_baseline.json;
+* the drift pair: `drift_replan` runs the online re-plan loop
+  (`replan` tag `on`) and its Elastico cells must adopt at least one
+  re-derived plan (`replans >= 1` — the loop converged inside the
+  drifted window); `drift_static` serves the same arrivals and drift
+  with the loop off; both inject their fault. Every replan-off cell
+  reports zero adopted plans, so a disabled loop provably never
+  touched the policy. The replan-vs-static compliance ratio itself
+  is gated by `bench_gate.py` against BENCH_scenarios_baseline.json.
 
 `--min-scenarios N` / `--min-topos N` additionally assert matrix
 coverage (distinct scenario / topology counts), so the CI smoke run
@@ -84,7 +92,7 @@ def check_cell(key: str, cell: dict) -> list:
         errors.append(f"{key}: slo_goodput exceeds slo_compliance")
     for field in ("failed", "retries", "panics_recovered", "timeouts",
                   "breaker_trips", "failovers", "shed", "expired",
-                  "brownout_steps"):
+                  "brownout_steps", "replans"):
         if cell.get(field, -1) < 0:
             errors.append(f"{key}: counter {field} missing or negative")
     if cell.get("resilience") not in ("on", "off"):
@@ -146,6 +154,24 @@ def check_cell(key: str, cell: dict) -> list:
             and shed + expired < 1:
         errors.append(f"{key}: sustained 1.5x overload never shed or "
                       "expired a request")
+
+    # The drift pair (re-plan loop cells).
+    want_replan = "on" if scenario == "drift_replan" else "off"
+    if cell.get("replan") not in ("on", "off"):
+        errors.append(f"{key}: replan tag {cell.get('replan')!r} is not "
+                      "on/off")
+    elif cell.get("replan") != want_replan:
+        errors.append(f"{key}: replan tag {cell.get('replan')!r}, "
+                      f"expected {want_replan!r}")
+    if cell.get("replan") == "off" and cell.get("replans", 0) != 0:
+        errors.append(f"{key}: adopted {cell.get('replans')} plan(s) with "
+                      "the re-plan loop off")
+    if scenario in ("drift_replan", "drift_static") and faults == "none":
+        errors.append(f"{key}: {scenario} cell ran without its drift fault")
+    if scenario == "drift_replan" and policy == "Elastico" \
+            and cell.get("replans", 0) < 1:
+        errors.append(f"{key}: re-plan loop never adopted a plan under "
+                      "drift (did the estimator converge?)")
     return errors
 
 

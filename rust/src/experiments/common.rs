@@ -515,6 +515,11 @@ impl ScalingPolicy for Shim<'_> {
     fn no_switch_band(&self) -> Option<(usize, usize)> {
         self.0.no_switch_band()
     }
+    fn replace_plan(&mut self, plan: crate::planner::Plan) -> bool {
+        // Without this forward the re-plan loop would silently no-op on
+        // every boxed policy (the trait default declines).
+        self.0.replace_plan(plan)
+    }
 }
 
 /// Run the unified DES engine with the serving knobs of an experiment
@@ -596,9 +601,39 @@ pub fn simulate_ctx_overload<S: crate::sim::ServiceModel>(
     resilience: &crate::serving::ResilienceConfig,
     overload: &crate::serving::OverloadConfig,
 ) -> Result<crate::sim::SimOutcome> {
+    simulate_ctx_replan(
+        ctx,
+        arrivals,
+        plan,
+        policy,
+        svc,
+        faults,
+        resilience,
+        overload,
+        &crate::serving::ReplanConfig::default(),
+    )
+}
+
+/// [`simulate_ctx_overload`] with the online re-plan loop configured —
+/// the drift-cell entry point, and the single ctx-driven path into
+/// [`crate::sim::simulate_topology_replan`]. The disabled config
+/// reproduces [`simulate_ctx_overload`] bit-for-bit (which delegates
+/// here).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_ctx_replan<S: crate::sim::ServiceModel>(
+    ctx: &ExperimentCtx,
+    arrivals: &[f64],
+    plan: &Plan,
+    policy: &mut Box<dyn ScalingPolicy>,
+    svc: &S,
+    faults: &crate::workload::FaultPlan,
+    resilience: &crate::serving::ResilienceConfig,
+    overload: &crate::serving::OverloadConfig,
+    replan: &crate::serving::ReplanConfig,
+) -> Result<crate::sim::SimOutcome> {
     let topo = ctx.topology()?;
     let mut shim = Shim(policy);
-    Ok(crate::sim::simulate_topology_overload(
+    Ok(crate::sim::simulate_topology_replan(
         arrivals,
         plan,
         &mut shim,
@@ -609,6 +644,7 @@ pub fn simulate_ctx_overload<S: crate::sim::ServiceModel>(
         faults,
         resilience,
         overload,
+        replan,
     ))
 }
 

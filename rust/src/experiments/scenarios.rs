@@ -17,7 +17,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Result};
 
 use super::common::{
-    ctx_base_qps, make_policy, offline_phase_ctx, simulate_ctx_overload, ExperimentCtx,
+    ctx_base_qps, make_policy, offline_phase_ctx, simulate_ctx_replan, ExperimentCtx,
     SLO_FACTORS,
 };
 use crate::metrics::RunSummary;
@@ -25,7 +25,8 @@ use crate::planner::{Plan, ThresholdMode};
 use crate::runtime::artifacts_dir;
 use crate::serving::executor::WorkflowEngine;
 use crate::serving::{
-    parse_pools, serve, ClassSpec, Discipline, OverloadConfig, ResilienceConfig, ServeOptions,
+    parse_pools, serve, ClassSpec, Discipline, OverloadConfig, ReplanConfig, ResilienceConfig,
+    ServeOptions,
 };
 use crate::sim::{LognormalService, ParetoService};
 use crate::util::csv::CsvWriter;
@@ -38,7 +39,7 @@ use crate::workload::{Fault, FaultPlan, Generator, Pattern, ScenarioSpec};
 pub const SCHEMA: &str = "compass.scenarios.v1";
 
 /// Every scenario shape of the matrix, in cookbook order.
-pub const SCENARIOS: [&str; 15] = [
+pub const SCENARIOS: [&str; 17] = [
     "steady",
     "diurnal",
     "flash_crowd",
@@ -54,6 +55,8 @@ pub const SCENARIOS: [&str; 15] = [
     "overload_sustained",
     "overload_tail_drop",
     "overload_flash",
+    "drift_replan",
+    "drift_static",
 ];
 
 /// The CI smoke subset: the steady baseline, both burst families, every
@@ -61,8 +64,9 @@ pub const SCENARIOS: [&str; 15] = [
 /// failover/drain pair — which the ratio invariant compares on
 /// identical arrivals — plus the flaky-engine retry cell), and the
 /// overload pair (deadline-aware shedding vs its tail-drop twin on
-/// identical ~1.5× arrivals).
-pub const SMOKE_SCENARIOS: [&str; 10] = [
+/// identical ~1.5× arrivals), and the drift pair (online re-planning vs
+/// the static plan under the same mid-run service drift).
+pub const SMOKE_SCENARIOS: [&str; 12] = [
     "steady",
     "flash_crowd",
     "mmpp",
@@ -73,6 +77,8 @@ pub const SMOKE_SCENARIOS: [&str; 10] = [
     "flaky",
     "overload_sustained",
     "overload_tail_drop",
+    "drift_replan",
+    "drift_static",
 ];
 
 /// Named dispatch topologies of the matrix.
@@ -123,6 +129,9 @@ pub struct ScenarioOpts {
     /// SLO class mix override (`--classes`) applied to whatever
     /// overload profile each cell runs.
     pub classes: Option<Vec<ClassSpec>>,
+    /// Re-plan override applied to every cell (default: each scenario's
+    /// own [`replan_for`] profile).
+    pub replan: Option<ReplanConfig>,
 }
 
 impl Default for ScenarioOpts {
@@ -140,6 +149,7 @@ impl Default for ScenarioOpts {
             resilience: None,
             overload: None,
             classes: None,
+            replan: None,
         }
     }
 }
@@ -167,6 +177,7 @@ pub fn arrival_salt(name: &str) -> u64 {
     match name {
         "dark_recover" | "dark_drain" => name_salt("dark_window"),
         "overload_sustained" | "overload_tail_drop" => name_salt("overload_pair"),
+        "drift_replan" | "drift_static" => name_salt("drift_pair"),
         other => name_salt(other),
     }
 }
@@ -178,7 +189,7 @@ pub fn generator_for(name: &str, qps: f64, dur: f64) -> Result<Generator> {
     Ok(match name {
         // Poisson baseline at the reference operating point (ρ ≈ 0.45).
         "steady" | "heavy_tail" | "pool_dark" | "slowdown" | "dark_recover" | "dark_drain"
-        | "flaky" => Generator::Constant { qps },
+        | "flaky" | "drift_replan" | "drift_static" => Generator::Constant { qps },
         // One full sinusoidal swing ±60% around the base rate.
         "diurnal" => Generator::Diurnal {
             qps,
@@ -285,6 +296,19 @@ pub fn faults_for(name: &str, dur: f64, n_pools: usize) -> FaultPlan {
             from_s: 0.4 * dur,
             to_s: 0.7 * dur,
         }),
+        // The drift pair: the *last* (most accurate / slowest) pool's
+        // service times shift ×2.5 a third into the run and never
+        // recover — the regime change the online re-planner adapts to.
+        // Identical plans in both cells ([`arrival_salt`] pairs the
+        // arrivals too); `drift_replan` runs with the re-plan loop on,
+        // `drift_static` with it off, so the gate's ratio invariant
+        // compares exactly the adaptation response.
+        "drift_replan" | "drift_static" => FaultPlan::none().with(Fault::Drift {
+            pool: n_pools.saturating_sub(1),
+            factor: 2.5,
+            from_s: dur / 3.0,
+            to_s: None,
+        }),
         _ => FaultPlan::none(),
     }
 }
@@ -298,6 +322,23 @@ pub fn resilience_for(name: &str) -> ResilienceConfig {
     match name {
         "dark_recover" | "flaky" => ResilienceConfig::enabled(),
         _ => ResilienceConfig::default(),
+    }
+}
+
+/// The re-plan profile a named scenario runs with: `drift_replan`
+/// closes the adaptation loop (short fit gate so a 30 s smoke cell
+/// converges well inside its drifted window); every other cell —
+/// including `drift_static`, the stale-plan baseline of the ratio
+/// invariant — runs disabled, which is pinned bit-identical to the
+/// static runtime.
+pub fn replan_for(name: &str) -> ReplanConfig {
+    match name {
+        "drift_replan" => ReplanConfig {
+            enabled: true,
+            min_samples: 8,
+            ..ReplanConfig::default()
+        },
+        _ => ReplanConfig::default(),
     }
 }
 
@@ -379,6 +420,11 @@ pub struct CellOut {
     pub gold_compliance: f64,
     /// `deadline`/`tail`/`off` — the cell's overload profile.
     pub overload: String,
+    /// Re-derived plans the policy adopted over the run (0 with the
+    /// loop off, and ≥ 1 is what the drift-pair gate asserts on).
+    pub replans: u64,
+    /// `on`/`off` — the cell's re-plan profile.
+    pub replan: String,
 }
 
 impl CellOut {
@@ -416,11 +462,13 @@ impl CellOut {
             ("brownout_steps", Json::num(self.brownout_steps as f64)),
             ("gold_compliance", Json::num(self.gold_compliance)),
             ("overload", Json::str(self.overload.clone())),
+            ("replans", Json::num(self.replans as f64)),
+            ("replan", Json::str(self.replan.clone())),
         ])
     }
 }
 
-const CSV_HEADER: [&str; 29] = [
+const CSV_HEADER: [&str; 31] = [
     "scenario",
     "topo",
     "policy",
@@ -450,6 +498,8 @@ const CSV_HEADER: [&str; 29] = [
     "brownout_steps",
     "gold_compliance",
     "overload",
+    "replans",
+    "replan",
 ];
 
 /// Run one scenario × topology × policy cell — the DES by default, the
@@ -469,6 +519,7 @@ pub fn run_matrix_cell(
     faults: &FaultPlan,
     resilience: &ResilienceConfig,
     overload: &OverloadConfig,
+    replan: &ReplanConfig,
     slo_ms: f64,
     log_dir: Option<&Path>,
 ) -> Result<CellOut> {
@@ -476,6 +527,13 @@ pub fn run_matrix_cell(
     let mut policy = make_policy(plan, policy_name);
     let rung_means: Vec<f64> = plan.ladder.iter().map(|r| r.mean_ms).collect();
     let ov = overload.clone().with_rung_means(rung_means);
+    // The live re-planner needs the base plan it re-derives attached to
+    // the config; the DES receives the plan directly.
+    let rp = if replan.enabled {
+        replan.clone().with_plan(plan.clone())
+    } else {
+        replan.clone()
+    };
     let (records, switches, rejected, steals, spills, counters) = if ctx.live {
         let space2 = space.clone();
         let plan2 = plan.clone();
@@ -504,6 +562,7 @@ pub fn run_matrix_cell(
                 faults: faults.clone(),
                 resilience: resilience.clone(),
                 overload: ov.clone(),
+                replan: rp.clone(),
                 ..ServeOptions::default()
             },
         )?;
@@ -523,6 +582,7 @@ pub fn run_matrix_cell(
                 out.shed,
                 out.expired,
                 out.brownout_steps,
+                out.replans,
             ),
         )
     } else {
@@ -530,10 +590,14 @@ pub fn run_matrix_cell(
         // Pareto tail (α = 2.05: finite mean, near-infinite variance).
         let out = if scenario == "heavy_tail" {
             let svc = ParetoService::from_plan(plan, 2.05);
-            simulate_ctx_overload(ctx, arrivals, plan, &mut policy, &svc, faults, resilience, &ov)?
+            simulate_ctx_replan(
+                ctx, arrivals, plan, &mut policy, &svc, faults, resilience, &ov, &rp,
+            )?
         } else {
             let svc = LognormalService::from_plan(plan, 0.10);
-            simulate_ctx_overload(ctx, arrivals, plan, &mut policy, &svc, faults, resilience, &ov)?
+            simulate_ctx_replan(
+                ctx, arrivals, plan, &mut policy, &svc, faults, resilience, &ov, &rp,
+            )?
         };
         (
             out.records,
@@ -551,6 +615,7 @@ pub fn run_matrix_cell(
                 out.shed,
                 out.expired,
                 out.brownout_steps,
+                out.replans,
             ),
         )
     };
@@ -564,6 +629,7 @@ pub fn run_matrix_cell(
         shed,
         expired,
         bsteps,
+        replans,
     ) = counters;
     if let Some(dir) = log_dir {
         let file = format!("{scenario}__{topo_name}__{policy_name}.csv");
@@ -615,6 +681,8 @@ pub fn run_matrix_cell(
         } else {
             "tail".into()
         },
+        replans,
+        replan: if rp.enabled { "on".into() } else { "off".into() },
     })
 }
 
@@ -726,6 +794,10 @@ pub fn run_sweep(ctx: &ExperimentCtx, opts: &ScenarioOpts) -> Result<()> {
                 Some(c) => overload.with_classes(c.clone()),
                 None => overload,
             };
+            let replan = match &opts.replan {
+                Some(r) => r.clone(),
+                None => replan_for(scenario),
+            };
             for policy in &policies {
                 // As everywhere: Elastico adapts over the SLO-filtered
                 // ladder, the static baselines keep their full-front rung.
@@ -741,6 +813,7 @@ pub fn run_sweep(ctx: &ExperimentCtx, opts: &ScenarioOpts) -> Result<()> {
                     &faults,
                     &resilience,
                     &overload,
+                    &replan,
                     slo,
                     opts.log_dir.as_deref(),
                 )?;
@@ -788,6 +861,8 @@ pub fn run_sweep(ctx: &ExperimentCtx, opts: &ScenarioOpts) -> Result<()> {
                     cell.brownout_steps.to_string(),
                     format!("{:.4}", cell.gold_compliance),
                     cell.overload.clone(),
+                    cell.replans.to_string(),
+                    cell.replan.clone(),
                 ])?;
                 cells.push(cell);
             }
@@ -864,7 +939,14 @@ mod tests {
         assert!(resilience_for("flaky").enabled);
         assert!(!resilience_for("steady").enabled);
         // Every scenario outside the salted pairs keeps its own salt.
-        let paired = ["dark_recover", "dark_drain", "overload_sustained", "overload_tail_drop"];
+        let paired = [
+            "dark_recover",
+            "dark_drain",
+            "overload_sustained",
+            "overload_tail_drop",
+            "drift_replan",
+            "drift_static",
+        ];
         for s in SCENARIOS {
             if !paired.contains(&s) {
                 assert_eq!(arrival_salt(s), name_salt(s));
@@ -889,6 +971,26 @@ mod tests {
         let a = generator_for("overload_sustained", 8.0, 60.0).unwrap();
         let b = generator_for("overload_tail_drop", 8.0, 60.0).unwrap();
         assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn the_drift_pair_shares_arrivals_and_differs_only_in_replanning() {
+        // Identical arrivals, identical fault plans: the ratio invariant
+        // compares exactly the adaptation response.
+        assert_eq!(arrival_salt("drift_replan"), arrival_salt("drift_static"));
+        assert_ne!(arrival_salt("drift_replan"), name_salt("drift_replan"));
+        assert_eq!(
+            faults_for("drift_replan", 60.0, 2).describe(),
+            faults_for("drift_static", 60.0, 2).describe()
+        );
+        // The drift targets the last (slowest) pool and never recovers.
+        assert!(faults_for("drift_replan", 60.0, 2).any_drift());
+        assert!(replan_for("drift_replan").enabled);
+        assert!(!replan_for("drift_static").enabled);
+        assert!(!replan_for("steady").enabled);
+        // The off profile is the inert default (bit-identity pin rides
+        // on this in tests/replan.rs).
+        assert_eq!(replan_for("drift_static"), ReplanConfig::default());
     }
 
     #[test]

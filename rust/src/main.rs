@@ -162,6 +162,8 @@ fn print_help() {
          \x20             [--workers K] [--discipline central|sharded] [--shards N]\n\
          \x20             [--batch B] [--pools fast:4:1.0,accurate:2:2.5]\n\
          \x20             [--spill-margin M] [--thresholds legacy|erlang]\n\
+         \x20             [--replan on|off|on,interval_ms=2000,bmax=8]\n\
+         \x20             [--faults drift:0x2@20 ...]\n\
          \x20 experiment  regenerate paper figures/tables -> results/*.csv\n\
          \x20             <fig1|fig3|fig4|table1|fig5|fig6|fig7|all> [--live] [--duration S]\n\
          \x20             [--workers K] [--discipline central|sharded] [--shards N]\n\
@@ -173,6 +175,7 @@ fn print_help() {
          \x20             [--faults dark:1@24-60,slow:0x2.5@20-40,flaky:0x0.25@20-40]\n\
          \x20             [--resilience on|off|on,max_retries=3,timeout_ms=500]\n\
          \x20             [--overload on|off|on,shed=deadline|tail,shed_depth=256]\n\
+         \x20             [--replan on|off|on,interval_ms=2000,bmax=8]\n\
          \x20             [--classes gold:0.2:500,silver:0.5:2000,bronze:0.3:0]\n\
          \x20             [--out FILE] [--log DIR] [--replay FILE] [--save-trace FILE]\n\
          \x20             [--list]  (cookbook: docs/SCENARIOS.md)\n\
@@ -306,6 +309,16 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
     println!("Serving plan (SLO {slo:.0} ms, {} thresholds):", thresholds.name());
     print!("{}", plan.render());
 
+    // The re-planner needs the base plan it will re-derive; `--replan on`
+    // attaches the one computed above.
+    let replan = match opts.get("replan") {
+        Some(v) => compass::serving::ReplanConfig::parse(v)?.with_plan(plan.clone()),
+        None => compass::serving::ReplanConfig::default(),
+    };
+    let faults = match opts.get("faults") {
+        Some(v) => compass::workload::FaultPlan::parse(v)?,
+        None => compass::workload::FaultPlan::default(),
+    };
     let serve_opts = ServeOptions {
         workers,
         discipline,
@@ -313,6 +326,8 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         batch,
         pools: pools.clone(),
         spill_margin,
+        faults,
+        replan,
         ..ServeOptions::default()
     };
     let total_workers = serve_opts.total_workers();
@@ -364,6 +379,9 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         "  rejected: {}, steals: {}, spills: {}, final rate {:.2} qps",
         out.rejected, out.steals, out.spills, out.final_rate_qps
     );
+    if serve_opts.replan.enabled {
+        println!("  re-plans adopted: {}", out.replans);
+    }
     if !pools.is_empty() {
         for (p, spec) in pools.iter().enumerate() {
             println!(
@@ -418,6 +436,10 @@ fn cmd_scenario(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         Some(v) => Some(compass::serving::OverloadConfig::parse(v)?),
         None => None,
     };
+    let replan = match opts.get("replan") {
+        Some(v) => Some(compass::serving::ReplanConfig::parse(v)?),
+        None => None,
+    };
     let classes = match opts.get("classes") {
         Some(v) => Some(compass::serving::parse_classes(v)?),
         None => None,
@@ -436,6 +458,7 @@ fn cmd_scenario(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         resilience,
         overload,
         classes,
+        replan,
     };
     if let Some(path) = opts.get("save-trace") {
         let scenario = sweep.scenarios.first().map(String::as_str).unwrap_or("steady");

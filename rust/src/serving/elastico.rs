@@ -131,6 +131,24 @@ impl ScalingPolicy for ElasticoPolicy {
         "Elastico".into()
     }
 
+    /// Adopt re-derived thresholds (the online re-planner's install
+    /// hook). The ladder shape must match — the re-planner only retunes
+    /// thresholds over the same rungs. The selected rung is kept, the
+    /// open hysteresis window (if any) is reset since its threshold
+    /// basis changed, and the depth EWMA carries over (it measures load,
+    /// not the plan).
+    fn replace_plan(&mut self, plan: Plan) -> bool {
+        assert_eq!(
+            plan.ladder.len(),
+            self.plan.ladder.len(),
+            "replace_plan must preserve the ladder shape"
+        );
+        self.current = self.current.min(plan.most_accurate());
+        self.plan = plan;
+        self.low_since_ms = None;
+        true
+    }
+
     /// The band where `decide` provably does nothing: above the
     /// downscale threshold (no window can open) and at or below the
     /// upscale threshold (no step toward fast). Empty (`None`) whenever
@@ -334,6 +352,34 @@ mod tests {
         }
         assert!(p.low_since_ms.is_some(), "window never opened");
         assert_eq!(p.no_switch_band(), None);
+    }
+
+    #[test]
+    fn replace_plan_swaps_thresholds_and_resets_hysteresis() {
+        let mut p = ElasticoPolicy::new(plan3());
+        p.decide(0.0, 20); // -> medium
+        p.decide(1.0, 20); // -> fast
+        assert_eq!(p.current(), 0);
+        // Open a downscale window…
+        for i in 0..40 {
+            p.decide(10.0 + i as f64, 0);
+            if p.low_since_ms.is_some() {
+                break;
+            }
+        }
+        assert!(p.low_since_ms.is_some());
+        // …then install a re-derived plan that blocks the medium rung
+        // (upscale 0, fast loses its downscale threshold).
+        let mut replanned = plan3();
+        replanned.ladder[1].upscale_threshold = 0;
+        replanned.ladder[1].downscale_threshold = None;
+        replanned.ladder[0].downscale_threshold = None;
+        assert!(p.replace_plan(replanned));
+        assert_eq!(p.current(), 0, "replacing the plan does not itself switch");
+        assert_eq!(p.low_since_ms, None, "open window reset: its basis changed");
+        // The blocked rung is now unreachable: sustained idle at fast
+        // no longer downscales.
+        assert_eq!(drive(&mut p, 100.0, 30_000.0, 20.0, 0), 0);
     }
 
     #[test]

@@ -150,6 +150,7 @@ pub mod policy;
 pub mod pool;
 pub mod predictive;
 pub mod queue;
+pub mod replan;
 pub mod resilience;
 pub mod server;
 pub mod topology;
@@ -160,6 +161,7 @@ pub use policy::{ScalingPolicy, StaticPolicy};
 pub use pool::{parse_pools, PoolSpec};
 pub use predictive::PredictivePolicy;
 pub use queue::{Discipline, Popped, QueueError, RequestQueue, ShardedQueue};
+pub use replan::{ReplanConfig, ReplanEngine, ReplanUpdate};
 pub use resilience::{HealthView, PoolHealth, ResilienceConfig};
 pub use server::{serve, serve_pools, ServeOptions, ServeOutcome};
 pub use topology::{Dispatch, Topology};

@@ -12,9 +12,23 @@ use std::sync::Mutex;
 
 use crate::util::stats::Ewma;
 
+/// Ticks closer together than this (ms) push no sample: a duplicate or
+/// near-coincident tick would otherwise divide by a near-zero window
+/// and inject an astronomically large instantaneous rate into the EWMA.
+pub const MIN_TICK_DT_MS: f64 = 1.0;
+
+/// Historical tick cadence (ms) assumed by [`LoadMonitor::new`] /
+/// [`LoadMonitor::with_pools`]; callers with another cadence use
+/// [`LoadMonitor::with_pools_period`].
+pub const DEFAULT_TICK_MS: f64 = 100.0;
+
 struct MonitorState {
     last_total: u64,
-    last_tick_ms: f64,
+    /// `None` until the first tick: the first observed tick only opens
+    /// the window (recording the clock and counter), pushing no sample
+    /// — so a serve that starts at a non-zero wall offset never
+    /// measures a bogus `[0, first_tick]` window.
+    last_tick_ms: Option<f64>,
     rate_qps: Ewma,
 }
 
@@ -26,6 +40,14 @@ pub struct LoadMonitor {
     /// total, so rung-aware routing diagnostics cost one extra relaxed
     /// increment.
     pool_arrivals: Vec<AtomicU64>,
+    /// EWMA smoothing factor at the nominal tick period.
+    alpha: f64,
+    /// Nominal tick period τ (ms): a tick covering `dt` is blended with
+    /// the time-corrected weight `1 − (1 − α)^(dt/τ)`, so irregular
+    /// tick spacing no longer biases the estimate. At `dt == τ` the
+    /// weight is exactly `α` (bit-identical to the historical fixed-α
+    /// update).
+    nominal_tick_ms: f64,
     state: Mutex<MonitorState>,
 }
 
@@ -35,14 +57,23 @@ impl LoadMonitor {
     }
 
     /// A monitor that additionally tracks per-pool arrival counts for a
-    /// `pools`-pool fleet.
+    /// `pools`-pool fleet, at the historical [`DEFAULT_TICK_MS`] cadence.
     pub fn with_pools(alpha: f64, pools: usize) -> LoadMonitor {
+        LoadMonitor::with_pools_period(alpha, pools, DEFAULT_TICK_MS)
+    }
+
+    /// A pooled monitor whose nominal tick period is `nominal_tick_ms`
+    /// (the cadence the caller intends to call [`tick`](Self::tick) at).
+    pub fn with_pools_period(alpha: f64, pools: usize, nominal_tick_ms: f64) -> LoadMonitor {
+        assert!(nominal_tick_ms > 0.0, "nominal tick period must be positive");
         LoadMonitor {
             arrivals_total: AtomicU64::new(0),
             pool_arrivals: (0..pools).map(|_| AtomicU64::new(0)).collect(),
+            alpha,
+            nominal_tick_ms,
             state: Mutex::new(MonitorState {
                 last_total: 0,
-                last_tick_ms: 0.0,
+                last_tick_ms: None,
                 rate_qps: Ewma::new(alpha),
             }),
         }
@@ -72,15 +103,35 @@ impl LoadMonitor {
     }
 
     /// Tick the rate estimator; returns the EWMA arrival rate (qps).
+    ///
+    /// The first tick only opens the measurement window (no sample); a
+    /// tick under [`MIN_TICK_DT_MS`] after the previous one returns the
+    /// current estimate untouched, leaving the window open so its
+    /// arrivals attribute to the next full window; otherwise the
+    /// instantaneous rate over `dt` is blended with the time-corrected
+    /// weight `1 − (1 − α)^(dt/τ)` — exactly `α` when `dt == τ`.
     pub fn tick(&self, now_ms: f64) -> f64 {
         let mut s = self.state.lock().unwrap();
         let total = self.arrivals_total.load(Ordering::Relaxed);
-        let dt = (now_ms - s.last_tick_ms).max(1e-6);
+        let Some(last) = s.last_tick_ms else {
+            s.last_total = total;
+            s.last_tick_ms = Some(now_ms);
+            return s.rate_qps.get().unwrap_or(0.0);
+        };
+        let dt = now_ms - last;
+        if dt < MIN_TICK_DT_MS {
+            return s.rate_qps.get().unwrap_or(0.0);
+        }
         let newly = (total - s.last_total) as f64;
         s.last_total = total;
-        s.last_tick_ms = now_ms;
+        s.last_tick_ms = Some(now_ms);
         let inst = newly / (dt / 1000.0);
-        s.rate_qps.push(inst)
+        let w = if dt == self.nominal_tick_ms {
+            self.alpha // float-exact pin at the nominal period
+        } else {
+            1.0 - (1.0 - self.alpha).powf(dt / self.nominal_tick_ms)
+        };
+        s.rate_qps.push_weighted(inst, w)
     }
 
     /// Latest smoothed arrival-rate estimate.
@@ -132,6 +183,110 @@ mod tests {
         plain.on_arrival_pool(0);
         assert_eq!(plain.arrivals_total(), 1);
         assert_eq!(plain.pool_arrivals_total(0), 0);
+    }
+
+    #[test]
+    fn duplicate_tick_does_not_spike_the_estimate() {
+        let m = LoadMonitor::new(0.3);
+        let mut now = 0.0;
+        for _ in 0..20 {
+            for _ in 0..10 {
+                m.on_arrival();
+            }
+            now += 100.0;
+            m.tick(now);
+        }
+        let before = m.rate_qps();
+        assert!((before - 100.0).abs() < 5.0, "qps {before}");
+        // A duplicate and a near-coincident tick: under the old
+        // dt.max(1e-6) clamp these pushed ~1e9-qps samples; now they
+        // must leave the estimate untouched.
+        assert_eq!(m.tick(now), before, "exact duplicate tick is a no-op");
+        m.on_arrival();
+        assert_eq!(m.tick(now + 0.5), before, "sub-floor tick is a no-op");
+        // The deferred arrival lands in the next full window instead of
+        // being lost: 11 arrivals over the next 100 ms reads 110 qps.
+        for _ in 0..10 {
+            m.on_arrival();
+        }
+        let after = m.tick(now + 100.0);
+        assert!(after > before && after < 120.0, "qps {after}");
+    }
+
+    #[test]
+    fn first_tick_at_nonzero_offset_opens_the_window() {
+        // Serve "starts" at t = 5000 ms: the old estimator measured the
+        // bogus [0, 5000] window and smeared 10 arrivals over 5 s
+        // (2 qps); the fixed one pushes no sample on the first tick.
+        let m = LoadMonitor::new(0.3);
+        for _ in 0..10 {
+            m.on_arrival();
+        }
+        m.tick(5000.0);
+        assert_eq!(m.rate_qps(), 0.0, "first tick seeds, no sample");
+        // The first *real* window starts at the first tick.
+        for _ in 0..10 {
+            m.on_arrival();
+        }
+        let qps = m.tick(5100.0);
+        assert!((qps - 100.0).abs() < 1e-9, "qps {qps}");
+    }
+
+    #[test]
+    fn irregular_tick_spacing_is_time_corrected() {
+        // Same 100-qps truth observed through regular 100 ms ticks and
+        // through alternating 50/150 ms ticks: the time-corrected
+        // weight keeps both estimates equal at equal elapsed time.
+        let regular = LoadMonitor::new(0.3);
+        let jittered = LoadMonitor::new(0.3);
+        let mut now = 0.0;
+        regular.tick(0.0);
+        jittered.tick(0.0);
+        for i in 0..40 {
+            for _ in 0..10 {
+                regular.on_arrival();
+            }
+            now += 100.0;
+            regular.tick(now);
+            // Jittered twin: a 50 ms window carrying 5 arrivals, then a
+            // 150 ms window carrying 15, realigning with the regular
+            // clock every 200 ms.
+            let (a, t) = if i % 2 == 0 { (5, now - 50.0) } else { (15, now) };
+            for _ in 0..a {
+                jittered.on_arrival();
+            }
+            jittered.tick(t);
+            if i % 2 == 1 {
+                // realigned at the shared 200 ms boundary
+                assert!(
+                    (jittered.rate_qps() - 100.0).abs() < 5.0,
+                    "jittered qps {}",
+                    jittered.rate_qps()
+                );
+            }
+        }
+        assert!((regular.rate_qps() - 100.0).abs() < 1.0);
+        assert!((jittered.rate_qps() - 100.0).abs() < 5.0);
+    }
+
+    #[test]
+    fn nominal_period_weight_is_exactly_alpha() {
+        // At dt == τ the time-corrected weight must be bit-identical to
+        // the historical fixed-α update, so existing figures don't move.
+        let m = LoadMonitor::with_pools_period(0.3, 0, 100.0);
+        let mut reference = crate::util::stats::Ewma::new(0.3);
+        let mut now = 0.0;
+        m.tick(now);
+        for i in 0..30 {
+            let n = 3 + (i % 7);
+            for _ in 0..n {
+                m.on_arrival();
+            }
+            now += 100.0;
+            let got = m.tick(now);
+            let want = reference.push(n as f64 / 0.1);
+            assert_eq!(got, want, "tick {i}: {got} vs {want}");
+        }
     }
 
     #[test]

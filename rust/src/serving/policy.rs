@@ -46,6 +46,22 @@ pub trait ScalingPolicy: Send {
     fn no_switch_band(&self) -> Option<(usize, usize)> {
         None
     }
+
+    /// Swap in a re-derived plan (the online re-planner's install hook,
+    /// [`crate::serving::replan`]). Returns `true` if the policy adopted
+    /// the new thresholds. The default declines: policies that carry no
+    /// plan (static baselines) have nothing to re-derive, and a
+    /// re-planner pointed at one simply keeps measuring.
+    ///
+    /// Contract for implementors: the new plan must describe the *same
+    /// ladder* (same length, same rung order — only thresholds,
+    /// cooldowns and service beliefs may differ), the currently selected
+    /// rung must remain selected (re-planning retunes future decisions,
+    /// it does not itself switch), and any open hysteresis window must
+    /// be reset (its threshold basis just changed under it).
+    fn replace_plan(&mut self, _plan: crate::planner::Plan) -> bool {
+        false
+    }
 }
 
 /// A fixed-configuration baseline (Static-Fast/Medium/Accurate, §VI-C).
@@ -98,5 +114,23 @@ mod tests {
     fn static_band_covers_every_depth() {
         let p = StaticPolicy::new(1, "s");
         assert_eq!(p.no_switch_band(), Some((0, usize::MAX)));
+    }
+
+    #[test]
+    fn static_declines_replanning() {
+        let mut p = StaticPolicy::new(1, "s");
+        let plan = crate::planner::Plan {
+            slo_ms: 100.0,
+            slack_buffer_ms: 10.0,
+            up_cooldown_ms: 0.0,
+            down_cooldown_ms: 1000.0,
+            workers: 1,
+            batch: 1,
+            batch_alpha_ms: 0.0,
+            pools: vec![],
+            ladder: vec![],
+        };
+        assert!(!p.replace_plan(plan), "a static baseline has no plan to retune");
+        assert_eq!(p.current(), 1);
     }
 }

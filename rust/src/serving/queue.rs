@@ -282,6 +282,12 @@ pub struct ShardedQueue<T> {
     sleepers: AtomicUsize,
     gate: Mutex<()>,
     notify: Condvar,
+    /// Live spill-margin override installed by the online re-planner
+    /// ([`crate::serving::replan`]): the f64 bit pattern of the margin,
+    /// or `u64::MAX` (a NaN encoding no real margin produces) while
+    /// unset. While unset every gate reads the topology's static
+    /// margin — bit-identical to the pre-override code path.
+    margin_override: AtomicU64,
 }
 
 impl<T> ShardedQueue<T> {
@@ -321,6 +327,27 @@ impl<T> ShardedQueue<T> {
             sleepers: AtomicUsize::new(0),
             gate: Mutex::new(()),
             notify: Condvar::new(),
+            margin_override: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    /// Install a spill-margin override (the re-planner raising the
+    /// margin as fleet-wide utilization saturates). Takes effect on the
+    /// next gate evaluation; non-finite values are ignored.
+    pub fn set_spill_margin(&self, margin: f64) {
+        if margin.is_finite() {
+            self.margin_override.store(margin.max(0.0).to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// The spill margin gates evaluate right now: the override when one
+    /// has been installed, else the topology's static margin.
+    fn spill_margin_now(&self) -> f64 {
+        let bits = self.margin_override.load(Ordering::Relaxed);
+        if bits == u64::MAX {
+            self.topo.spill_margin()
+        } else {
+            f64::from_bits(bits)
         }
     }
 
@@ -363,7 +390,7 @@ impl<T> ShardedQueue<T> {
         // either we see its registration or it sees our depth).
         if self.sleepers.load(Ordering::SeqCst) > 0 {
             let _g = self.gate.lock().unwrap();
-            if self.topo.n_pools() > 1 && self.topo.spill_margin() > 0.0 {
+            if self.topo.n_pools() > 1 && self.spill_margin_now() > 0.0 {
                 // Consumers park on per-pool ready() predicates: a
                 // single wakeup could land on a spill-gated consumer
                 // that may not take this item while the eligible one
@@ -483,8 +510,9 @@ impl<T> ShardedQueue<T> {
                 return Some(item);
             }
         }
+        let margin = self.spill_margin_now();
         for q in self.topo.spill_order(pool) {
-            if !self.topo.spill_allowed(pool, q, self.pool_len(q)) {
+            if !self.topo.spill_allowed_with(pool, q, self.pool_len(q), margin) {
                 continue;
             }
             let (lo, hi) = self.topo.shard_range(q);
@@ -543,8 +571,9 @@ impl<T> ShardedQueue<T> {
                 return Some(items);
             }
         }
+        let margin = self.spill_margin_now();
         for q in self.topo.spill_order(pool) {
-            if !self.topo.spill_allowed(pool, q, self.pool_len(q)) {
+            if !self.topo.spill_allowed_with(pool, q, self.pool_len(q), margin) {
                 continue;
             }
             let (lo, hi) = self.topo.shard_range(q);
@@ -607,7 +636,7 @@ impl<T> ShardedQueue<T> {
     /// allowed to poach); the next push still wakes it through the
     /// sleeper gate, so no wakeup is ever missed.
     fn ready(&self, pool: usize) -> bool {
-        self.topo.can_take(pool, |q| self.pool_len(q))
+        self.topo.can_take_with(pool, |q| self.pool_len(q), self.spill_margin_now())
     }
 
     /// Shared deadline-based park loop under `attempt` (single or batch

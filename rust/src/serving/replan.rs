@@ -1,0 +1,673 @@
+//! Online re-planning — closing the adaptation loop from live signals.
+//!
+//! The static plan ([`crate::planner::derive_plan_pools`]) bakes three
+//! beliefs into its thresholds: the per-rung service profile measured
+//! offline, each pool's `speed_factor`, and an assumed operating
+//! utilization ρ̂. When the serving regime *drifts* — hardware degrades,
+//! a model server slows down, load shifts — those beliefs go stale and
+//! the AQM keeps steering by a map of a road that moved
+//! ([`crate::workload::fault::Fault::Drift`] injects exactly this).
+//!
+//! The [`ReplanEngine`] re-estimates the beliefs online and re-derives
+//! the plan against them:
+//!
+//! 1. **ρ̂** — the fleet utilization estimate: the [`super::monitor::
+//!    LoadMonitor`]'s smoothed arrival rate over the fleet's believed
+//!    drain capacity at the current rung;
+//! 2. **speed / α** — per-pool hardware speed and the per-dispatch
+//!    batch cost, fit from live batch completions `(n, batch_ms)` with
+//!    the same OLS the offline profiler uses
+//!    ([`BatchServiceModel::fit`]): under the executor's batch law
+//!    `batch_ms ≈ n·(mean·S − α) + α`, the fit's `alpha + beta` per
+//!    rung estimates `mean·S`, so `S = (alpha+beta)/mean_ref`;
+//! 3. **thresholds** — [`derive_plan_pools`] re-run under the estimated
+//!    speeds and ρ̂ (Erlang-C mode), merged back onto the full ladder
+//!    (a rung the drifted beliefs make infeasible becomes escape-only:
+//!    `N↑ = 0`, and its faster neighbour loses its downscale threshold
+//!    so the policy cannot re-enter it) and swapped into the policy via
+//!    [`ScalingPolicy::replace_plan`](crate::serving::policy::
+//!    ScalingPolicy::replace_plan);
+//! 4. **batch / spill margin** — the dispatch bound adapts to backlog
+//!    (`B = depth.clamp(1, b_max)`) and the spill margin ramps up as ρ̂
+//!    saturates past `rho_hi` (under saturation cross-pool poaching
+//!    thrashes; keeping workers home is worth more).
+//!
+//! Two hysteresis guards keep the loop from flapping: evaluations run at
+//! most once per `interval_ms`, and a re-derivation is installed only
+//! when some pool's estimated speed moved at least `min_change`
+//! relative to the speeds underlying the installed plan (adaptive batch
+//! uses the same relative-change guard).
+//!
+//! **Reality vs. belief**: the re-planner only updates *beliefs* —
+//! policy thresholds, the batch bound, the spill margin. It never
+//! touches the executors' service arithmetic or `Topology::speed`;
+//! drifted hardware stays drifted, the controller just stops pretending
+//! otherwise.
+//!
+//! Disabled (the default) the executors skip every re-planning branch
+//! and are bit-identical to the pre-replan engines (pinned by
+//! `tests/replan.rs`).
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::planner::profiler::{BatchServiceModel, LatencyProfile};
+use crate::planner::{derive_plan_pools, AqmParams, ConfigPolicy, Plan, ProfiledConfig, ThresholdMode};
+use crate::serving::pool::{pool_rung, PoolSpec};
+use crate::util::stats::Ewma;
+
+/// Online re-planning configuration. `Default` is **disabled**: the
+/// executors skip every re-planning branch (no monitor, no fitting, no
+/// plan swaps) and are bit-identical to the pre-replan engines.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplanConfig {
+    /// Master switch; everything below is inert when false.
+    pub enabled: bool,
+    /// Minimum time between re-plan evaluations (ms) — the outer
+    /// hysteresis guard.
+    pub interval_ms: f64,
+    /// Rate-estimator tick cadence (ms) for the DES's virtual
+    /// [`super::monitor::LoadMonitor`] (the live runtime ticks at
+    /// `ServeOptions::tick_ms` regardless).
+    pub tick_ms: f64,
+    /// Minimum relative change in an estimated pool speed (vs. the
+    /// speeds underlying the installed plan) before a re-derivation is
+    /// installed; also gates adaptive-batch moves.
+    pub min_change: f64,
+    /// Minimum completion samples a pool needs before its speed
+    /// estimate updates (fewer = keep the prior belief).
+    pub min_samples: usize,
+    /// Adaptive batch cap `B_max`: each evaluation picks
+    /// `B = depth.clamp(1, b_max)`. 0 (default) disables adaptive batch
+    /// — the executor keeps its configured bound.
+    pub b_max: usize,
+    /// Fleet utilization ρ̂ above which the spill margin starts ramping.
+    pub rho_hi: f64,
+    /// Margin added on top of the topology's static spill margin at
+    /// full saturation (ρ̂ ≥ 1); linear in between. 0 leaves the margin
+    /// alone.
+    pub margin_boost: f64,
+    /// EWMA weight smoothing successive per-pool speed fits.
+    pub speed_alpha: f64,
+    /// Completion points retained per (pool, rung) fit buffer — the
+    /// estimation window (smaller = faster convergence after a drift,
+    /// noisier fits).
+    pub window: usize,
+    /// The base plan whose beliefs the engine retunes. The DES passes
+    /// its plan argument implicitly; the **live** runtime has no plan in
+    /// `ServeOptions`, so an enabled live config must attach one via
+    /// [`with_plan`](ReplanConfig::with_plan). Never parsed/described.
+    pub plan: Option<Plan>,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> Self {
+        ReplanConfig {
+            enabled: false,
+            interval_ms: 2000.0,
+            tick_ms: 100.0,
+            min_change: 0.15,
+            min_samples: 20,
+            b_max: 0,
+            rho_hi: 0.8,
+            margin_boost: 0.0,
+            speed_alpha: 0.3,
+            window: 64,
+            plan: None,
+        }
+    }
+}
+
+impl ReplanConfig {
+    /// Parse a CLI spec: `off` (or empty) keeps the disabled default;
+    /// `on[,key=value,...]` enables with overrides. Keys: `interval_ms`,
+    /// `tick_ms`, `min_change`, `min_samples`, `bmax`, `rho_hi`,
+    /// `margin_boost`, `speed_alpha`, `window`. Unknown keys are errors,
+    /// not silently ignored.
+    pub fn parse(s: &str) -> Result<ReplanConfig> {
+        let mut cfg = ReplanConfig::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            match part {
+                "on" | "enabled" => cfg.enabled = true,
+                "off" | "disabled" => cfg.enabled = false,
+                _ => {
+                    let Some((key, value)) = part.split_once('=') else {
+                        anyhow::bail!("replan option {part:?} wants key=value");
+                    };
+                    let num = || -> Result<f64> {
+                        value.parse().map_err(|_| {
+                            anyhow::anyhow!("bad replan value {value:?} for {key:?}")
+                        })
+                    };
+                    match key {
+                        "interval_ms" => cfg.interval_ms = num()?.max(1.0),
+                        "tick_ms" => cfg.tick_ms = num()?.max(1.0),
+                        "min_change" => cfg.min_change = num()?.max(0.0),
+                        "min_samples" => cfg.min_samples = num()?.max(1.0) as usize,
+                        "bmax" => cfg.b_max = num()?.max(0.0) as usize,
+                        "rho_hi" => cfg.rho_hi = num()?.clamp(0.0, 1.0),
+                        "margin_boost" => cfg.margin_boost = num()?.max(0.0),
+                        "speed_alpha" => cfg.speed_alpha = num()?.clamp(1e-6, 1.0),
+                        "window" => cfg.window = num()?.max(2.0) as usize,
+                        other => anyhow::bail!("unknown replan key {other:?}"),
+                    }
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// One-line rendering of the knobs (reports/CSV), inverse of
+    /// [`parse`](ReplanConfig::parse) up to the attached plan.
+    pub fn describe(&self) -> String {
+        if !self.enabled {
+            return "off".into();
+        }
+        format!(
+            "on,interval_ms={},tick_ms={},min_change={},min_samples={},bmax={},rho_hi={},margin_boost={},speed_alpha={},window={}",
+            self.interval_ms,
+            self.tick_ms,
+            self.min_change,
+            self.min_samples,
+            self.b_max,
+            self.rho_hi,
+            self.margin_boost,
+            self.speed_alpha,
+            self.window,
+        )
+    }
+
+    /// Attach the base plan the live runtime retunes (the DES gets its
+    /// plan as an argument and ignores this).
+    pub fn with_plan(mut self, plan: Plan) -> ReplanConfig {
+        self.plan = Some(plan);
+        self
+    }
+}
+
+/// One evaluation's verdict: the knobs the executor should run with
+/// from now on. `plan` is `Some` only when the drift guard fired and a
+/// re-derivation should be installed.
+#[derive(Clone, Debug)]
+pub struct ReplanUpdate {
+    /// A re-derived full-ladder plan to swap into the policy, when the
+    /// estimated speeds moved at least `min_change`.
+    pub plan: Option<Plan>,
+    /// The batch bound to dispatch with (unchanged unless `b_max > 0`).
+    pub batch: usize,
+    /// The effective spill margin (base margin + saturation ramp).
+    pub spill_margin: f64,
+    /// The fleet utilization estimate this evaluation computed.
+    pub rho_hat: f64,
+}
+
+/// The online re-planner: pure estimation + derivation, driven by
+/// either clock (the DES's virtual time or the live monitor thread).
+/// Completions stream in via [`on_completion`](ReplanEngine::
+/// on_completion); [`step`](ReplanEngine::step) gates on the evaluation
+/// interval and returns the knobs to apply.
+pub struct ReplanEngine {
+    cfg: ReplanConfig,
+    /// The base plan whose ladder shape (and belief fields) every
+    /// re-derivation preserves.
+    base: Plan,
+    /// The executing topology's pools — the belief basis for speeds.
+    pools: Vec<PoolSpec>,
+    /// The topology's static spill margin (the ramp's floor).
+    base_margin: f64,
+    n_rungs: usize,
+    /// Per-(pool, exec rung) completion windows of `(batch_n, batch_ms)`.
+    points: Vec<VecDeque<(usize, f64)>>,
+    /// Smoothed per-pool speed estimates (seeded by the first fit).
+    speed_hat: Vec<Ewma>,
+    /// The speeds underlying the currently installed plan — the
+    /// reference the `min_change` drift guard compares against.
+    applied_speed: Vec<f64>,
+    /// Smoothed per-dispatch batch cost α estimate (ms), from fits with
+    /// at least two distinct batch sizes.
+    alpha_hat: Ewma,
+    /// Next evaluation time (ms).
+    next_eval_ms: f64,
+    cur_batch: usize,
+    /// Latest fleet utilization estimate.
+    pub rho_hat: f64,
+    /// Re-derivations proposed (a `ReplanUpdate` with `plan: Some`).
+    pub replans: u64,
+}
+
+impl ReplanEngine {
+    /// `batch` is the executor's configured dispatch bound (the
+    /// adaptive-batch starting point); `base_margin` the topology's
+    /// static spill margin.
+    pub fn new(
+        cfg: ReplanConfig,
+        base: Plan,
+        pools: Vec<PoolSpec>,
+        batch: usize,
+        base_margin: f64,
+    ) -> ReplanEngine {
+        let n_rungs = base.ladder.len();
+        let n_pools = pools.len();
+        let speed_alpha = cfg.speed_alpha;
+        ReplanEngine {
+            next_eval_ms: cfg.interval_ms,
+            points: (0..n_pools * n_rungs).map(|_| VecDeque::new()).collect(),
+            speed_hat: (0..n_pools).map(|_| Ewma::new(speed_alpha)).collect(),
+            applied_speed: pools.iter().map(|p| p.speed_factor).collect(),
+            alpha_hat: Ewma::new(speed_alpha),
+            cur_batch: batch.max(1),
+            rho_hat: 0.0,
+            replans: 0,
+            cfg,
+            base,
+            pools,
+            base_margin,
+            n_rungs,
+        }
+    }
+
+    /// Record one batch completion: `n` requests executed at `rung` by
+    /// `pool` in `batch_ms` wall milliseconds (queueing excluded). The
+    /// per-(pool, rung) window is bounded; old points age out, which is
+    /// what lets the fit follow a drift.
+    pub fn on_completion(&mut self, pool: usize, rung: usize, n: usize, batch_ms: f64) {
+        if pool >= self.pools.len() || rung >= self.n_rungs || n == 0 {
+            return;
+        }
+        if !batch_ms.is_finite() || batch_ms < 0.0 {
+            return;
+        }
+        let buf = &mut self.points[pool * self.n_rungs + rung];
+        if buf.len() >= self.cfg.window {
+            buf.pop_front();
+        }
+        buf.push_back((n, batch_ms));
+    }
+
+    /// The current belief about pool `p`'s speed factor: the smoothed
+    /// fit when one exists, else the topology's static factor.
+    pub fn speed_of(&self, p: usize) -> f64 {
+        self.speed_hat[p]
+            .get()
+            .unwrap_or(self.pools[p].speed_factor)
+    }
+
+    /// Run one evaluation if the interval elapsed. `rate_qps` is the
+    /// monitor's smoothed arrival rate, `depth` the fleet's queued
+    /// backlog, `rung` the current policy rung (capacity is computed at
+    /// the rung each pool would execute for it). Returns `None` between
+    /// evaluations.
+    pub fn step(
+        &mut self,
+        now_ms: f64,
+        rate_qps: f64,
+        depth: usize,
+        rung: usize,
+    ) -> Option<ReplanUpdate> {
+        if !self.cfg.enabled || now_ms < self.next_eval_ms {
+            return None;
+        }
+        self.next_eval_ms = now_ms + self.cfg.interval_ms;
+
+        // 1. Fit per-pool speed (and α) from the completion windows.
+        for p in 0..self.pools.len() {
+            let mut weighted = 0.0;
+            let mut weight = 0.0;
+            let mut samples = 0usize;
+            for r in 0..self.n_rungs {
+                let buf = &self.points[p * self.n_rungs + r];
+                if buf.is_empty() {
+                    continue;
+                }
+                let mean_ref = self.base.ladder[r].mean_ms;
+                if mean_ref <= 0.0 {
+                    continue;
+                }
+                let pts: Vec<(usize, f64)> = buf.iter().copied().collect();
+                let distinct = {
+                    let mut sizes: Vec<usize> = pts.iter().map(|q| q.0).collect();
+                    sizes.sort_unstable();
+                    sizes.dedup();
+                    sizes.len()
+                };
+                let fit = BatchServiceModel::fit(&pts);
+                // batch_ms ≈ n·(mean·S − α) + α, so alpha+beta ≈ mean·S.
+                let s = (fit.alpha_ms + fit.beta_ms) / mean_ref;
+                if s.is_finite() && s > 0.0 {
+                    weighted += s * pts.len() as f64;
+                    weight += pts.len() as f64;
+                    samples += pts.len();
+                }
+                if distinct >= 2 {
+                    self.alpha_hat.push(fit.alpha_ms);
+                }
+            }
+            if samples >= self.cfg.min_samples && weight > 0.0 {
+                self.speed_hat[p].push(weighted / weight);
+            }
+        }
+        let speeds: Vec<f64> = (0..self.pools.len()).map(|p| self.speed_of(p)).collect();
+
+        // 2. Fleet utilization ρ̂ = rate / believed drain capacity at
+        // the current rung (each pool executes its band-clamped rung).
+        let mut capacity = 0.0;
+        for (p, spec) in self.pools.iter().enumerate() {
+            let r = pool_rung(&self.pools, p, rung, self.n_rungs);
+            let mean = self.base.ladder[r].mean_ms * speeds[p];
+            capacity += spec.workers.max(1) as f64 * 1000.0 / mean.max(1e-9);
+        }
+        self.rho_hat = rate_qps / capacity.max(1e-9);
+
+        // 3. Adaptive batch: B tracks the backlog up to the cap, moving
+        // only past the relative-change guard (so a one-request jitter
+        // never re-tunes the dispatch path).
+        if self.cfg.b_max > 0 {
+            let want = depth.clamp(1, self.cfg.b_max);
+            let rel = (want as f64 - self.cur_batch as f64).abs() / self.cur_batch.max(1) as f64;
+            if rel >= self.cfg.min_change {
+                self.cur_batch = want;
+            }
+        }
+
+        // 4. Spill margin ramp: linear from the base margin at
+        // ρ̂ = rho_hi to base + boost at ρ̂ ≥ 1.
+        let sat = ((self.rho_hat - self.cfg.rho_hi) / (1.0 - self.cfg.rho_hi).max(1e-9))
+            .clamp(0.0, 1.0);
+        let margin = self.base_margin + self.cfg.margin_boost * sat;
+
+        // 5. Re-derive only when the speed beliefs actually drifted.
+        let drifted = (0..self.pools.len()).any(|p| {
+            (speeds[p] - self.applied_speed[p]).abs() / self.applied_speed[p].max(1e-9)
+                >= self.cfg.min_change
+        });
+        let plan = if drifted {
+            self.applied_speed = speeds.clone();
+            self.replans += 1;
+            Some(self.derive(&speeds))
+        } else {
+            None
+        };
+        Some(ReplanUpdate {
+            plan,
+            batch: self.cur_batch,
+            spill_margin: margin,
+            rho_hat: self.rho_hat,
+        })
+    }
+
+    /// Re-run the AQM derivation against the estimated speeds and ρ̂,
+    /// then merge the (possibly shorter) derived ladder back onto the
+    /// base ladder shape — [`ScalingPolicy::replace_plan`](crate::
+    /// serving::policy::ScalingPolicy::replace_plan) requires the same
+    /// rung count, and Elastico steps ±1, so a dropped (infeasible)
+    /// rung becomes escape-only: its own `N↑ = 0` pushes any backlog
+    /// off it, and its faster neighbour loses `N↓` so the policy cannot
+    /// step back into it.
+    fn derive(&self, speeds: &[f64]) -> Plan {
+        let front: Vec<ProfiledConfig> = self
+            .base
+            .ladder
+            .iter()
+            .map(|c| ProfiledConfig {
+                config: c.config.clone(),
+                label: c.label.clone(),
+                accuracy: c.accuracy,
+                latency: LatencyProfile {
+                    mean_ms: c.mean_ms,
+                    p50_ms: c.mean_ms,
+                    p95_ms: c.p95_ms,
+                    runs: 1,
+                },
+            })
+            .collect();
+        let est_pools: Vec<PoolSpec> = self
+            .pools
+            .iter()
+            .zip(speeds)
+            .map(|(p, &s)| PoolSpec { speed_factor: s, ..p.clone() })
+            .collect();
+        let params = AqmParams {
+            slo_ms: self.base.slo_ms,
+            slack_buffer_ms: self.base.slack_buffer_ms,
+            up_cooldown_ms: self.base.up_cooldown_ms,
+            down_cooldown_ms: self.base.down_cooldown_ms,
+            workers: self.base.workers.max(1),
+            batch: self.cur_batch,
+            batch_alpha_ms: self.alpha_hat.get().unwrap_or(self.base.batch_alpha_ms),
+            thresholds: ThresholdMode::ErlangC,
+            target_rho: self.rho_hat.clamp(0.05, 0.95),
+        };
+        let derived = derive_plan_pools(&front, params, &est_pools);
+
+        // Ladder-length-preserving merge by label.
+        let mut ladder: Vec<ConfigPolicy> = self
+            .base
+            .ladder
+            .iter()
+            .map(|c| match derived.ladder.iter().find(|d| d.label == c.label) {
+                Some(d) => d.clone(),
+                None => ConfigPolicy {
+                    upscale_threshold: 0,
+                    downscale_threshold: None,
+                    queue_slack_ms: 0.0,
+                    ..c.clone()
+                },
+            })
+            .collect();
+        for k in 0..ladder.len() {
+            let infeasible =
+                !derived.ladder.iter().any(|d| d.label == self.base.ladder[k].label);
+            if infeasible && k > 0 {
+                ladder[k - 1].downscale_threshold = None;
+            }
+        }
+        Plan {
+            slo_ms: derived.slo_ms,
+            slack_buffer_ms: derived.slack_buffer_ms,
+            up_cooldown_ms: derived.up_cooldown_ms,
+            down_cooldown_ms: derived.down_cooldown_ms,
+            workers: derived.workers,
+            batch: derived.batch,
+            batch_alpha_ms: derived.batch_alpha_ms,
+            pools: est_pools,
+            ladder,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{derive_plan, AqmParams, LatencyProfile, ProfiledConfig};
+
+    fn front2() -> Vec<ProfiledConfig> {
+        let mk = |label: &str, acc: f64, mean: f64, p95: f64| ProfiledConfig {
+            config: vec![],
+            label: label.into(),
+            accuracy: acc,
+            latency: LatencyProfile { mean_ms: mean, p50_ms: mean, p95_ms: p95, runs: 10 },
+        };
+        vec![mk("fast", 0.76, 20.0, 28.0), mk("accurate", 0.85, 90.0, 120.0)]
+    }
+
+    fn base_plan() -> Plan {
+        derive_plan(&front2(), AqmParams::for_slo_workers(300.0, 2))
+    }
+
+    fn engine(cfg: ReplanConfig) -> ReplanEngine {
+        ReplanEngine::new(cfg, base_plan(), vec![PoolSpec::uniform(2)], 1, 0.0)
+    }
+
+    fn on() -> ReplanConfig {
+        ReplanConfig { enabled: true, ..ReplanConfig::default() }
+    }
+
+    #[test]
+    fn disabled_config_is_inert() {
+        let cfg = ReplanConfig::default();
+        assert!(!cfg.enabled);
+        let mut e = engine(cfg);
+        for i in 0..100 {
+            e.on_completion(0, 1, 1, 95.0);
+            assert!(e.step(i as f64 * 1000.0, 10.0, 3, 1).is_none());
+        }
+        assert_eq!(e.replans, 0);
+    }
+
+    #[test]
+    fn parse_roundtrips_the_knobs() {
+        assert_eq!(ReplanConfig::parse("").unwrap(), ReplanConfig::default());
+        assert_eq!(ReplanConfig::parse("off").unwrap(), ReplanConfig::default());
+        let cfg = ReplanConfig::parse(
+            "on,interval_ms=500,tick_ms=50,min_change=0.2,min_samples=8,bmax=16,rho_hi=0.7,margin_boost=2,speed_alpha=0.5,window=32",
+        )
+        .unwrap();
+        assert!(cfg.enabled);
+        assert_eq!(cfg.interval_ms, 500.0);
+        assert_eq!(cfg.tick_ms, 50.0);
+        assert_eq!(cfg.min_change, 0.2);
+        assert_eq!(cfg.min_samples, 8);
+        assert_eq!(cfg.b_max, 16);
+        assert_eq!(cfg.rho_hi, 0.7);
+        assert_eq!(cfg.margin_boost, 2.0);
+        assert_eq!(cfg.speed_alpha, 0.5);
+        assert_eq!(cfg.window, 32);
+        // describe() is parse()'s inverse for an enabled config.
+        assert_eq!(ReplanConfig::parse(&cfg.describe()).unwrap(), cfg);
+        assert_eq!(ReplanConfig::default().describe(), "off");
+        assert!(ReplanConfig::parse("on,bogus=1").is_err());
+        assert!(ReplanConfig::parse("on,interval_ms").is_err());
+    }
+
+    #[test]
+    fn steady_completions_keep_the_plan() {
+        // Completions matching the base beliefs (speed 1): no drift, no
+        // re-derivation — only the periodic knob refresh.
+        let mut e = engine(ReplanConfig { min_samples: 10, ..on() });
+        let mut now = 0.0;
+        for _ in 0..5 {
+            for _ in 0..20 {
+                e.on_completion(0, 1, 1, 90.0);
+            }
+            now += 2000.0;
+            let upd = e.step(now, 10.0, 2, 1).expect("interval elapsed");
+            assert!(upd.plan.is_none(), "no drift, no plan swap");
+            assert_eq!(upd.batch, 1);
+            assert_eq!(upd.spill_margin, 0.0);
+        }
+        assert_eq!(e.replans, 0);
+        assert!((e.speed_of(0) - 1.0).abs() < 0.05, "speed {}", e.speed_of(0));
+    }
+
+    #[test]
+    fn drifted_completions_trigger_a_rederivation_that_blocks_the_rung() {
+        // Service times 4x the profile: the accurate rung's inflated
+        // p95 (480 ms) blows the 300 ms SLO — the re-derived ladder
+        // must make it escape-only and block re-entry from fast.
+        let mut e = engine(ReplanConfig { min_samples: 10, ..on() });
+        let mut now = 0.0;
+        let mut swapped = None;
+        for _ in 0..8 {
+            for _ in 0..20 {
+                e.on_completion(0, 1, 1, 360.0); // 90 ms rung at 4x
+            }
+            now += 2000.0;
+            if let Some(upd) = e.step(now, 8.0, 3, 1) {
+                if let Some(p) = upd.plan {
+                    swapped = Some(p);
+                }
+            }
+        }
+        let plan = swapped.expect("a 4x drift must trigger a re-derivation");
+        assert!(e.speed_of(0) > 2.0, "fitted speed {}", e.speed_of(0));
+        assert_eq!(plan.ladder.len(), 2, "ladder shape preserved");
+        assert_eq!(plan.ladder[1].upscale_threshold, 0, "infeasible rung escapes");
+        assert_eq!(plan.ladder[1].downscale_threshold, None);
+        assert_eq!(
+            plan.ladder[0].downscale_threshold, None,
+            "re-entry into the infeasible rung is blocked"
+        );
+        assert!(e.replans >= 1);
+        // ρ̂ reflects the drifted capacity: 2 workers at ~360 ms ≈
+        // 5.6 qps against 8 qps offered — saturated.
+        assert!(e.rho_hat > 1.0, "rho_hat {}", e.rho_hat);
+    }
+
+    #[test]
+    fn interval_and_min_change_hysteresis_hold() {
+        let mut e = engine(ReplanConfig { min_samples: 5, ..on() });
+        // Before the first interval elapses: no evaluation at all.
+        assert!(e.step(100.0, 10.0, 1, 1).is_none());
+        assert!(e.step(1999.0, 10.0, 1, 1).is_none());
+        // A drift below min_change (10% < 15%) evaluates but keeps the
+        // plan.
+        for _ in 0..30 {
+            e.on_completion(0, 1, 1, 99.0); // 1.1x
+        }
+        let upd = e.step(2000.0, 10.0, 1, 1).expect("interval elapsed");
+        assert!(upd.plan.is_none(), "sub-threshold drift must not re-plan");
+        // Immediately after an evaluation the next one is gated again.
+        assert!(e.step(2001.0, 10.0, 1, 1).is_none());
+    }
+
+    #[test]
+    fn adaptive_batch_tracks_depth_and_margin_ramps_with_rho() {
+        let mut e = ReplanEngine::new(
+            ReplanConfig { b_max: 8, margin_boost: 3.0, rho_hi: 0.5, min_samples: 5, ..on() },
+            base_plan(),
+            vec![PoolSpec::uniform(2)],
+            1,
+            1.0,
+        );
+        for _ in 0..10 {
+            e.on_completion(0, 1, 1, 90.0);
+        }
+        // Deep backlog: B rises to the cap; light load: B falls back.
+        let upd = e.step(2000.0, 40.0, 50, 1).unwrap();
+        assert_eq!(upd.batch, 8);
+        // 40 qps against ~22 qps capacity: saturated, margin at full
+        // boost above the base margin of 1.
+        assert!(upd.rho_hat > 1.0);
+        assert_eq!(upd.spill_margin, 4.0);
+        let upd = e.step(4000.0, 2.0, 1, 1).unwrap();
+        assert_eq!(upd.batch, 1);
+        assert_eq!(upd.spill_margin, 1.0, "relaxed load restores the base margin");
+    }
+
+    #[test]
+    fn batched_completions_recover_alpha() {
+        // Batches obeying batch_ms = n·(mean·S − α) + α with α = 30,
+        // S = 1: the fit should recover α and a speed near 1.
+        let mut e = engine(ReplanConfig { min_samples: 6, ..on() });
+        for n in [1usize, 4, 8, 1, 4, 8, 1, 4, 8] {
+            let ms = n as f64 * (90.0 - 30.0) + 30.0;
+            e.on_completion(0, 1, n, ms);
+        }
+        e.step(2000.0, 5.0, 1, 1).unwrap();
+        assert!((e.speed_of(0) - 1.0).abs() < 0.05, "speed {}", e.speed_of(0));
+        let alpha = e.alpha_hat.get().unwrap();
+        assert!((alpha - 30.0).abs() < 1.0, "alpha {alpha}");
+    }
+
+    #[test]
+    fn out_of_range_completions_are_ignored() {
+        let mut e = engine(on());
+        e.on_completion(9, 0, 1, 10.0); // unknown pool
+        e.on_completion(0, 9, 1, 10.0); // unknown rung
+        e.on_completion(0, 0, 0, 10.0); // empty batch
+        e.on_completion(0, 0, 1, f64::NAN); // junk timing
+        e.on_completion(0, 0, 1, -5.0);
+        assert!(e.points.iter().all(|b| b.is_empty()));
+    }
+
+    #[test]
+    fn window_bounds_the_fit_buffer() {
+        let mut e = engine(ReplanConfig { window: 4, ..on() });
+        for i in 0..10 {
+            e.on_completion(0, 0, 1, 20.0 + i as f64);
+        }
+        assert_eq!(e.points[0].len(), 4);
+        assert_eq!(e.points[0].front().unwrap().1, 26.0, "oldest points age out");
+    }
+}

@@ -45,6 +45,7 @@ use super::overload::{Brownout, OverloadConfig};
 use super::policy::ScalingPolicy;
 use super::pool::PoolSpec;
 use super::queue::{Discipline, Popped, ShardedQueue};
+use super::replan::{ReplanConfig, ReplanEngine};
 use super::resilience::{HealthView, ResilienceConfig};
 use super::topology::Topology;
 use crate::metrics::{RequestRecord, SwitchEvent};
@@ -116,6 +117,13 @@ pub struct ServeOptions {
     /// [`OverloadConfig::with_rung_means`] when shedding should be
     /// service-time calibrated.
     pub overload: OverloadConfig,
+    /// Online re-planning ([`crate::serving::replan`]). Disabled (the
+    /// default) is bit-identical to the static runtime. Enabling it
+    /// requires the base [`crate::planner::Plan`] attached via
+    /// [`ReplanConfig::with_plan`] — the re-planner re-derives *that*
+    /// ladder against live speed/α/ρ̂ estimates and swaps the result
+    /// into the policy on the monitor tick.
+    pub replan: ReplanConfig,
 }
 
 impl Default for ServeOptions {
@@ -132,6 +140,7 @@ impl Default for ServeOptions {
             faults: FaultPlan::default(),
             resilience: ResilienceConfig::default(),
             overload: OverloadConfig::default(),
+            replan: ReplanConfig::default(),
         }
     }
 }
@@ -235,6 +244,9 @@ pub struct ServeOutcome {
     /// Brownout rung-degradation steps taken (down-steps only; 0 unless
     /// the overload plane is enabled).
     pub brownout_steps: u64,
+    /// Re-derived plans the policy adopted (0 unless the re-plan loop
+    /// is enabled).
+    pub replans: u64,
 }
 
 /// Shared run-wide resilience state: the health view (breakers + retry
@@ -562,6 +574,96 @@ impl PolicyHandle {
     fn take_switches(&self) -> Vec<SwitchEvent> {
         self.inner.lock().unwrap().switches.clone()
     }
+
+    /// Swap a re-derived plan into the policy (the re-planner's install
+    /// hook). Under the policy lock so no observation interleaves with
+    /// the threshold swap; on adoption the cached rung and band are
+    /// refreshed from the policy (the rung is contractually unchanged,
+    /// the band may not be).
+    fn replace_plan(&self, plan: crate::planner::Plan) -> bool {
+        let mut cell = self.inner.lock().unwrap();
+        if !cell.policy.replace_plan(plan) {
+            return false;
+        }
+        let cur = cell.policy.current();
+        cell.observed = cur;
+        self.current.store(cur, Ordering::Release);
+        self.band
+            .store(pack_band(cell.policy.no_switch_band()), Ordering::Release);
+        true
+    }
+}
+
+/// Shared run-wide re-plan state: the estimator behind one mutex (taken
+/// only on batch completions and the monitor tick when the loop is
+/// enabled — a disabled loop is a single branch on the hot path), plus
+/// the adaptive batch bound mirrored in an atomic for the workers.
+struct ReplanState {
+    enabled: bool,
+    /// Workers read the batch bound per pop instead of a fixed one.
+    adaptive: bool,
+    engine: Mutex<Option<ReplanEngine>>,
+    batch: AtomicUsize,
+    replans: AtomicU64,
+}
+
+impl ReplanState {
+    fn new(cfg: &ReplanConfig, topo: &Topology, batch: usize) -> Result<ReplanState> {
+        let engine = if cfg.enabled {
+            let plan = cfg.plan.clone().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "replan enabled without a base plan — attach one via ReplanConfig::with_plan"
+                )
+            })?;
+            Some(ReplanEngine::new(
+                cfg.clone(),
+                plan,
+                topo.pools().to_vec(),
+                batch,
+                topo.spill_margin(),
+            ))
+        } else {
+            None
+        };
+        Ok(ReplanState {
+            enabled: cfg.enabled,
+            adaptive: cfg.enabled && cfg.b_max > 0,
+            engine: Mutex::new(engine),
+            batch: AtomicUsize::new(batch),
+            replans: AtomicU64::new(0),
+        })
+    }
+
+    /// Record one executed batch: (pool, executed rung, size, wall ms).
+    fn on_completion(&self, pool: usize, rung: usize, n: usize, ms: f64) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(engine) = self.engine.lock().unwrap().as_mut() {
+            engine.on_completion(pool, rung, n, ms);
+        }
+    }
+
+    /// One re-plan evaluation (monitor-tick cadence): step the
+    /// estimator and install whatever it decided — plan into the
+    /// policy, batch bound into the atomic, margin into the queue.
+    fn step(&self, now_ms: f64, rate_qps: f64, handle: &PolicyHandle, queue: &ShardedQueue<Job>) {
+        if !self.enabled {
+            return;
+        }
+        let mut guard = self.engine.lock().unwrap();
+        let Some(engine) = guard.as_mut() else { return };
+        let depth = queue.len();
+        if let Some(upd) = engine.step(now_ms, rate_qps, depth, handle.current_rung()) {
+            if let Some(plan) = upd.plan {
+                if handle.replace_plan(plan) {
+                    self.replans.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            self.batch.store(upd.batch.max(1), Ordering::Relaxed);
+            queue.set_spill_margin(upd.spill_margin);
+        }
+    }
 }
 
 /// The run-clock gate: the clock starts only once **every** worker has
@@ -649,8 +751,13 @@ where
 
     let queue: Arc<ShardedQueue<Job>> =
         Arc::new(ShardedQueue::with_topology(opts.queue_capacity, (*topo).clone()));
-    let monitor = Arc::new(LoadMonitor::with_pools(0.3, topo.n_pools()));
+    let monitor = Arc::new(LoadMonitor::with_pools_period(
+        0.3,
+        topo.n_pools(),
+        opts.tick_ms.max(1) as f64,
+    ));
     let handle = Arc::new(PolicyHandle::new(policy));
+    let rp = Arc::new(ReplanState::new(&opts.replan, &topo, opts.batch.max(1))?);
     let done = Arc::new(AtomicBool::new(false));
     let rejected = Arc::new(AtomicUsize::new(0));
     let res = Arc::new(ResilienceState::new(topo.n_pools(), opts.resilience.clone()));
@@ -669,13 +776,20 @@ where
             let topo = topo.clone();
             let tick = opts.tick_ms;
             let wait_start = wait_start.clone();
+            let rp = rp.clone();
             scope.spawn(move || {
                 let start = wait_start();
                 while !done.load(Ordering::Relaxed) {
                     std::thread::sleep(Duration::from_millis(tick));
                     let t = start.elapsed().as_secs_f64() * 1e3;
-                    monitor.tick(t);
+                    let rate = monitor.tick(t);
                     handle.observe_locked(t, pooled_depth(&queue, &topo, &handle));
+                    // Re-plan evaluation rides the tick: the estimator
+                    // decides (interval + min-change hysteresis inside)
+                    // and the update lands atomically — plan into the
+                    // policy, batch bound and spill margin into the
+                    // shared cells the workers read per pop.
+                    rp.step(t, rate, &handle, &queue);
                 }
             });
         }
@@ -786,6 +900,7 @@ where
                 let res = res.clone();
                 let res_cfg = opts.resilience.clone();
                 let ov = ov.clone();
+                let rp = rp.clone();
                 handles.push(scope.spawn(move || -> Result<(usize, Vec<RequestRecord>)> {
                     // Build (and PJRT-compile) the engine; the last
                     // worker to finish releases the run clock. A failed
@@ -817,8 +932,11 @@ where
                     // batch's start/finish bounds (its latency is the
                     // batch's latency — requests complete when their
                     // batch does). B = 1 takes the allocation-free
-                    // single-item path — exactly the seed loop.
-                    if batch == 1 {
+                    // single-item path — exactly the seed loop — unless
+                    // the re-planner sizes batches adaptively, which
+                    // needs the batch machinery even when the current
+                    // bound happens to be 1.
+                    if batch == 1 && !rp.adaptive {
                         loop {
                             if dark_at.is_some() && faults.is_dark_at_ms(p, now_ms()) {
                                 let until = dark_until.unwrap_or(f64::INFINITY);
@@ -905,7 +1023,8 @@ where
                                             // An active slowdown window
                                             // stretches this pool's service
                                             // wall-clock by the fault factor.
-                                            let stretch = faults.slowdown_at_ms(p, t_start);
+                                            let stretch = faults.slowdown_at_ms(p, t_start)
+                                                * faults.drift_at_ms(p, t_start);
                                             if stretch > 1.0 {
                                                 let extra = (now_ms() - t_start) * (stretch - 1.0);
                                                 std::thread::sleep(Duration::from_secs_f64(
@@ -913,6 +1032,10 @@ where
                                                 ));
                                             }
                                             let t_fin = now_ms();
+                                            // Feed the re-planner's fit
+                                            // buffer (same observable the
+                                            // DES records).
+                                            rp.on_completion(p, exec, 1, t_fin - t_start);
                                             if res_cfg.timed_out(t_fin - t_start) {
                                                 // Too slow to count: a
                                                 // timeout failure (feeds
@@ -999,7 +1122,16 @@ where
                             drain_dark_pool(&queue, p, lw, &rejected);
                             break;
                         }
-                        match queue.pop_batch_pool(p, lw, batch, Duration::from_millis(50)) {
+                        // Adaptive batch: the bound is whatever the last
+                        // re-plan update published (B = min(depth, B_max)
+                        // with hysteresis); static runs read the fixed
+                        // configured bound.
+                        let want = if rp.adaptive {
+                            rp.batch.load(Ordering::Relaxed).max(1)
+                        } else {
+                            batch
+                        };
+                        match queue.pop_batch_pool(p, lw, want, Duration::from_millis(50)) {
                             Popped::Item(items) => {
                                 let t_start = now_ms();
                                 // Lazy in-queue expiry (overload
@@ -1046,14 +1178,23 @@ where
                                         }
                                     }
                                 };
-                                // Slowdown windows stretch the batch's
-                                // wall-clock exactly like the B = 1 path.
-                                let stretch = faults.slowdown_at_ms(p, t_start);
+                                // Slowdown (and drift) windows stretch the
+                                // batch's wall-clock exactly like the B = 1
+                                // path.
+                                let stretch = faults.slowdown_at_ms(p, t_start)
+                                    * faults.drift_at_ms(p, t_start);
                                 if stretch > 1.0 {
                                     let extra = (now_ms() - t_start) * (stretch - 1.0);
                                     std::thread::sleep(Duration::from_secs_f64(extra / 1e3));
                                 }
                                 let t_fin = now_ms();
+                                // Executed batches feed the re-planner's
+                                // (size, wall ms) fit buffer — flaked-out
+                                // or engine-failed batches measured no
+                                // service and are not recorded.
+                                if outs.is_some() && !live.is_empty() {
+                                    rp.on_completion(p, exec, live.len(), t_fin - t_start);
+                                }
                                 match outs {
                                     Some(outs) if !res_cfg.timed_out(t_fin - t_start) => {
                                         for (&(id, arrival_ms, _), out) in live.iter().zip(outs) {
@@ -1177,6 +1318,7 @@ where
             shed: ov.shed.load(Ordering::Relaxed),
             expired: ov.expired.load(Ordering::Relaxed),
             brownout_steps: ov.steps(),
+            replans: rp.replans.load(Ordering::Relaxed),
         })
     })
 }

@@ -231,15 +231,30 @@ impl Topology {
     /// Margin 0 degenerates to spill-when-dry (any non-empty victim —
     /// the historical behavior, pinned bit-for-bit by the parity tests).
     pub fn spill_allowed(&self, from: usize, victim: usize, victim_backlog: usize) -> bool {
+        self.spill_allowed_with(from, victim, victim_backlog, self.spill_margin)
+    }
+
+    /// [`spill_allowed`](Self::spill_allowed) against an explicit margin
+    /// instead of the topology's static one — the online re-planner
+    /// ([`crate::serving::replan`]) raises the effective margin as the
+    /// fleet saturates without rebuilding the topology. At
+    /// `margin == self.spill_margin()` this is the same arithmetic.
+    pub fn spill_allowed_with(
+        &self,
+        from: usize,
+        victim: usize,
+        victim_backlog: usize,
+        margin: f64,
+    ) -> bool {
         if victim_backlog == 0 {
             return false;
         }
-        if self.spill_margin <= 0.0 {
+        if margin <= 0.0 {
             return true;
         }
         let handicap = self.pools[from].speed_factor / self.pools[victim].speed_factor;
         let workers = self.pools[victim].workers.max(1) as f64;
-        victim_backlog as f64 > self.spill_margin * handicap * workers
+        victim_backlog as f64 > margin * handicap * workers
     }
 
     /// Is there any work a consumer of `pool` may take right now —
@@ -247,11 +262,22 @@ impl Topology {
     /// gate? (`pool_len` is the caller's per-pool depth view.) Drives
     /// the park/wake decision of the live queue.
     pub fn can_take(&self, pool: usize, pool_len: impl Fn(usize) -> usize) -> bool {
+        self.can_take_with(pool, pool_len, self.spill_margin)
+    }
+
+    /// [`can_take`](Self::can_take) against an explicit spill margin
+    /// (see [`spill_allowed_with`](Self::spill_allowed_with)).
+    pub fn can_take_with(
+        &self,
+        pool: usize,
+        pool_len: impl Fn(usize) -> usize,
+        margin: f64,
+    ) -> bool {
         if pool_len(pool) > 0 {
             return true;
         }
         self.spill_order(pool)
-            .any(|q| self.spill_allowed(pool, q, pool_len(q)))
+            .any(|q| self.spill_allowed_with(pool, q, pool_len(q), margin))
     }
 
     /// Batch extent: how many of a shard's `len` queued items one

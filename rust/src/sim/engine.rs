@@ -40,8 +40,10 @@
 
 use crate::metrics::{RequestRecord, SwitchEvent};
 use crate::planner::Plan;
+use crate::serving::monitor::LoadMonitor;
 use crate::serving::overload::{Brownout, OverloadConfig};
 use crate::serving::policy::ScalingPolicy;
+use crate::serving::replan::{ReplanConfig, ReplanEngine};
 use crate::serving::resilience::{HealthView, ResilienceConfig};
 use crate::serving::topology::{Dispatch, Topology};
 use crate::util::Rng;
@@ -106,13 +108,16 @@ fn retry_or_fail_sim(
 /// The first shard a consumer of `pool` may take from, given the
 /// current queue state: the topology's within-pool walk, then the gated
 /// cross-pool spill sweep — exactly the live
-/// `ShardedQueue::try_pop_batch_pool` order.
+/// `ShardedQueue::try_pop_batch_pool` order. `margin` is the effective
+/// spill margin (the topology's static one, unless the re-planner
+/// raised it).
 fn choose_shard(
     topo: &Topology,
     queues: &[std::collections::VecDeque<Item>],
     pool_queued: &[usize],
     pool: usize,
     worker: usize,
+    margin: f64,
 ) -> Option<(usize, Dispatch)> {
     for (s, kind) in topo.pool_walk(pool, worker) {
         if !queues[s].is_empty() {
@@ -120,7 +125,7 @@ fn choose_shard(
         }
     }
     for q in topo.spill_order(pool) {
-        if !topo.spill_allowed(pool, q, pool_queued[q]) {
+        if !topo.spill_allowed_with(pool, q, pool_queued[q], margin) {
             continue;
         }
         let (lo, hi) = topo.shard_range(q);
@@ -277,6 +282,47 @@ pub fn simulate_topology_overload<P: ScalingPolicy, S: ServiceModel>(
     resilience: &ResilienceConfig,
     overload: &OverloadConfig,
 ) -> SimOutcome {
+    let replan = ReplanConfig::default();
+    simulate_topology_replan(
+        arrivals, plan, policy, service, seed, topo, batch, faults, resilience, overload, &replan,
+    )
+}
+
+/// [`simulate_topology_overload`] with the online re-planning loop
+/// active — the DES mirror of the live adaptation loop
+/// ([`crate::serving::replan`]), driving the same pure
+/// [`ReplanEngine`] with the virtual clock:
+///
+/// * a virtual [`LoadMonitor`] ticks at deterministic multiples of the
+///   configured cadence (counted over admissions, time-corrected EWMA);
+/// * every batch completion feeds `(n, batch_ms)` into the engine's
+///   per-(pool, rung) fit windows;
+/// * at each evaluation interval the engine re-estimates per-pool
+///   speed / α / ρ̂ and may swap a re-derived plan into the policy
+///   ([`ScalingPolicy::replace_plan`]), retune the batch bound, and
+///   raise the effective spill margin;
+/// * a [`crate::workload::fault::Fault::Drift`] window multiplies the
+///   executing pool's service times exactly like a slowdown — but
+///   persistently, which is the regime change the re-planner adapts to.
+///
+/// With the disabled config this is bit-identical to
+/// [`simulate_topology_overload`] (which now delegates here) — every
+/// re-planning branch is gated, so the event sequence and rng stream
+/// are unchanged; the parity pins in `tests/replan.rs` hold it to that.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_topology_replan<P: ScalingPolicy, S: ServiceModel>(
+    arrivals: &[f64],
+    plan: &Plan,
+    policy: &mut P,
+    service: &S,
+    seed: u64,
+    topo: &Topology,
+    batch: usize,
+    faults: &FaultPlan,
+    resilience: &ResilienceConfig,
+    overload: &OverloadConfig,
+    replan: &ReplanConfig,
+) -> SimOutcome {
     let batch = batch.max(1);
     let alpha = plan.batch_alpha_ms.max(0.0);
     let n_rungs = plan.ladder.len();
@@ -316,6 +362,25 @@ pub fn simulate_topology_overload<P: ScalingPolicy, S: ServiceModel>(
     let mut brown = Brownout::new(overload);
     let mut shed_total = 0usize;
     let mut expired_total = 0usize;
+    // Online re-planning state (None/untouched when disabled — the
+    // disabled path never ticks a monitor, fits a model, or deviates
+    // from the static batch bound and spill margin).
+    let mut cur_batch = batch;
+    let mut cur_margin = topo.spill_margin();
+    let mut replans = 0u64;
+    let mut replanner = replan.enabled.then(|| {
+        ReplanEngine::new(
+            replan.clone(),
+            plan.clone(),
+            topo.pools().to_vec(),
+            batch,
+            topo.spill_margin(),
+        )
+    });
+    let lm = replan
+        .enabled
+        .then(|| LoadMonitor::with_pools_period(0.3, topo.n_pools(), replan.tick_ms));
+    let mut next_tick_ms = 0.0f64;
 
     let mut queues: Vec<std::collections::VecDeque<Item>> =
         (0..nsh).map(|_| std::collections::VecDeque::new()).collect();
@@ -336,6 +401,38 @@ pub fn simulate_topology_overload<P: ScalingPolicy, S: ServiceModel>(
             *observed = next;
         }
         next
+    };
+
+    // Advance the virtual monitor/re-planner clock to `now`: tick the
+    // rate EWMA at every elapsed cadence boundary (deterministic — the
+    // boundaries are fixed multiples of tick_ms, not event times) and
+    // apply any evaluation the engine produces. A no-op when the
+    // re-planner is disabled.
+    let replan_tick = |replanner: &mut Option<ReplanEngine>,
+                       policy: &mut P,
+                       next_tick_ms: &mut f64,
+                       cur_batch: &mut usize,
+                       cur_margin: &mut f64,
+                       replans: &mut u64,
+                       now: f64,
+                       depth: usize,
+                       rung: usize| {
+        let Some(engine) = replanner.as_mut() else { return };
+        let lm = lm.as_ref().unwrap();
+        while *next_tick_ms <= now {
+            let t = *next_tick_ms;
+            *next_tick_ms += replan.tick_ms;
+            let rate = lm.tick(t);
+            if let Some(upd) = engine.step(t, rate, depth, rung) {
+                if let Some(new_plan) = upd.plan {
+                    if policy.replace_plan(new_plan) {
+                        *replans += 1;
+                    }
+                }
+                *cur_batch = upd.batch;
+                *cur_margin = upd.spill_margin;
+            }
+        }
     };
 
     let mut i = 0usize; // next arrival index
@@ -367,6 +464,7 @@ pub fn simulate_topology_overload<P: ScalingPolicy, S: ServiceModel>(
                     &pool_queued,
                     server_pool[slot],
                     server_local[slot],
+                    cur_margin,
                 );
                 match pick {
                     Some((shard, kind)) => chosen = Some((slot, earliest, shard, kind)),
@@ -407,6 +505,7 @@ pub fn simulate_topology_overload<P: ScalingPolicy, S: ServiceModel>(
                                 &pool_queued,
                                 server_pool[slot2],
                                 server_local[slot2],
+                                cur_margin,
                             );
                             match pick {
                                 Some((shard, kind)) => {
@@ -423,6 +522,17 @@ pub fn simulate_topology_overload<P: ScalingPolicy, S: ServiceModel>(
 
         if let Some((slot, free_at, shard, kind)) = chosen {
             let p = server_pool[slot];
+            replan_tick(
+                &mut replanner,
+                policy,
+                &mut next_tick_ms,
+                &mut cur_batch,
+                &mut cur_margin,
+                &mut replans,
+                free_at,
+                queued_total,
+                observed,
+            );
             // A dark pool's slot pauses at its first dispatch
             // opportunity inside the dark window (in-flight work
             // already completed): until the window's end for a windowed
@@ -469,7 +579,7 @@ pub fn simulate_topology_overload<P: ScalingPolicy, S: ServiceModel>(
                 Dispatch::Steal => steals += 1,
                 Dispatch::Spill => spills += 1,
             }
-            let take = Topology::take_count(queues[shard].len(), batch, kind);
+            let take = Topology::take_count(queues[shard].len(), cur_batch, kind);
             let mut taken: Vec<Item> = Vec::with_capacity(take);
             for _ in 0..take {
                 // Class-priority service order (DES-only, off by
@@ -545,8 +655,12 @@ pub fn simulate_topology_overload<P: ScalingPolicy, S: ServiceModel>(
                 topo.exec_rung(p, idx, n_rungs)
             };
             // An active slowdown window stretches the pool's hardware
-            // speed factor for batches starting inside it.
-            let speed = topo.speed(p) * faults.slowdown_at_ms(p, start);
+            // speed factor for batches starting inside it; a drift
+            // window does the same persistently (the regime change the
+            // re-planner adapts to — the *belief* side never touches
+            // this arithmetic).
+            let speed =
+                topo.speed(p) * faults.slowdown_at_ms(p, start) * faults.drift_at_ms(p, start);
             // Injected flakes fail out of the batch before service is
             // sampled (the same deterministic (id, attempt) coin the
             // live worker flips; a flaked request consumes no engine
@@ -573,6 +687,14 @@ pub fn simulate_topology_overload<P: ScalingPolicy, S: ServiceModel>(
             };
             let finish = start + svc.max(0.0);
             busy[slot] = finish;
+            // Feed the re-planner's fit buffer: (pool, executed rung,
+            // batch size, wall ms) — the same observable the live
+            // worker records.
+            if let Some(engine) = replanner.as_mut() {
+                if !live.is_empty() {
+                    engine.on_completion(p, exec, live.len(), finish - start);
+                }
+            }
             // A too-slow batch fails every request in it (the live
             // timeout gate measures the same start→finish span).
             let batch_timed_out = resilience.timed_out(finish - start);
@@ -633,6 +755,19 @@ pub fn simulate_topology_overload<P: ScalingPolicy, S: ServiceModel>(
             // Admit the next arrival: rung-aware routing — round-robin
             // over the shards of the current rung's home pool.
             let arr_ms = arrivals[i] * 1000.0;
+            // Advance the re-plan clock before counting the arrival so
+            // this request lands in the window the tick just opened.
+            replan_tick(
+                &mut replanner,
+                policy,
+                &mut next_tick_ms,
+                &mut cur_batch,
+                &mut cur_margin,
+                &mut replans,
+                arr_ms,
+                queued_total,
+                observed,
+            );
             // An active queue squeeze tightens the admission bound; a
             // rejected arrival consumes no id and is not observed
             // (mirrors the live injector's pre-push check).
@@ -666,6 +801,11 @@ pub fn simulate_topology_overload<P: ScalingPolicy, S: ServiceModel>(
             // Health-aware routing (resilience only): a rung band whose
             // home pool is dark or breaker-open remaps to the nearest
             // surviving pool, exactly like the live injector.
+            // Count the admitted arrival into the rate EWMA at the same
+            // point the live injector does (post-squeeze, post-shed).
+            if let Some(m) = lm.as_ref() {
+                m.on_arrival();
+            }
             let rp = if resilience.enabled {
                 let (rp, moved) =
                     topo.pool_for_rung_routable(observed, |q| hv.routable(q, arr_ms, faults));
@@ -726,5 +866,6 @@ pub fn simulate_topology_overload<P: ScalingPolicy, S: ServiceModel>(
         shed: shed_total,
         expired: expired_total,
         brownout_steps: brown.steps,
+        replans,
     }
 }

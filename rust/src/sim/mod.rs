@@ -86,7 +86,7 @@ pub mod theory;
 
 pub use engine::{
     simulate_topology, simulate_topology_faults, simulate_topology_overload,
-    simulate_topology_resilient,
+    simulate_topology_replan, simulate_topology_resilient,
 };
 pub use service::{
     DeterministicService, ExponentialService, LognormalService, ParetoService, ServiceModel,
@@ -150,6 +150,11 @@ pub struct SimOutcome {
     /// Brownout step-down events: the deadline-pressure EWMA degraded
     /// the effective rung within the policy's no-switch band.
     pub brownout_steps: u64,
+    /// Plan swaps installed by the online re-planner (rederived
+    /// thresholds the policy adopted via `replace_plan`). Always 0
+    /// unless [`simulate_topology_replan`] runs with an enabled
+    /// [`crate::serving::ReplanConfig`].
+    pub replans: u64,
 }
 
 /// Simulate serving `arrivals` (seconds) under `policy` on a single

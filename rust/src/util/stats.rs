@@ -41,14 +41,19 @@ impl OnlineStats {
     }
 }
 
+/// Finite values of a sample, sorted ascending. NaN / ±∞ entries are
+/// dropped rather than poisoning the order: one bad latency record must
+/// never panic a live summary.
+fn sorted_finite(xs: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    v.sort_by(|a, b| a.total_cmp(b));
+    v
+}
+
 /// Linear-interpolated percentile of an **unsorted** sample (q in [0,1]).
+/// Non-finite samples are ignored; NaN only when nothing finite remains.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
-        return f64::NAN;
-    }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    percentile_sorted(&v, q)
+    percentile_sorted(&sorted_finite(xs), q)
 }
 
 /// Percentile of an already-sorted sample.
@@ -81,12 +86,13 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Summarize a sample, ignoring non-finite values (a summary over
+    /// nothing finite is the empty default).
     pub fn of(xs: &[f64]) -> Summary {
-        if xs.is_empty() {
+        let v = sorted_finite(xs);
+        if v.is_empty() {
             return Summary::default();
         }
-        let mut v = xs.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Summary {
             count: v.len(),
             mean: v.iter().sum::<f64>() / v.len() as f64,
@@ -114,9 +120,21 @@ impl Ewma {
     }
 
     pub fn push(&mut self, x: f64) -> f64 {
+        let alpha = self.alpha;
+        self.push_weighted(x, alpha)
+    }
+
+    /// Push with an explicit weight for this observation (the
+    /// time-corrected EWMA substrate: a caller covering `dt` of nominal
+    /// period `τ` passes `1 − (1 − α)^(dt/τ)`, which is exactly `α`
+    /// when `dt == τ` — so regular callers are bit-identical to
+    /// [`push`](Ewma::push)). `weight` is clamped to [0, 1]; the first
+    /// observation seeds the average regardless of weight.
+    pub fn push_weighted(&mut self, x: f64, weight: f64) -> f64 {
+        let w = weight.clamp(0.0, 1.0);
         let v = match self.value {
             None => x,
-            Some(prev) => prev + self.alpha * (x - prev),
+            Some(prev) => prev + w * (x - prev),
         };
         self.value = Some(v);
         v
@@ -128,12 +146,12 @@ impl Ewma {
 }
 
 /// Empirical CDF points `(value, fraction <= value)` for plotting (Fig. 6).
+/// Non-finite samples are ignored.
 pub fn cdf_points(xs: &[f64], n_points: usize) -> Vec<(f64, f64)> {
-    if xs.is_empty() {
+    let v = sorted_finite(xs);
+    if v.is_empty() {
         return vec![];
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = v.len();
     let step = (n.max(2) - 1) as f64 / (n_points.max(2) - 1) as f64;
     (0..n_points.max(2))
@@ -188,6 +206,48 @@ mod tests {
             e.push(10.0);
         }
         assert!((e.get().unwrap() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn non_finite_samples_are_ignored_not_fatal() {
+        // One NaN used to panic the sort; now it is dropped.
+        let xs = [1.0, f64::NAN, 2.0, f64::INFINITY, 3.0, f64::NEG_INFINITY, 4.0];
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        let s = Summary::of(&xs);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.max, 4.0);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        let pts = cdf_points(&xs, 4);
+        assert!(pts.iter().all(|(v, f)| v.is_finite() && f.is_finite()));
+        // Nothing finite left: empty-sample behavior, never a panic.
+        assert!(percentile(&[f64::NAN], 0.5).is_nan());
+        assert_eq!(Summary::of(&[f64::NAN, f64::INFINITY]).count, 0);
+        assert!(cdf_points(&[f64::NAN], 5).is_empty());
+    }
+
+    #[test]
+    fn weighted_push_matches_push_at_full_alpha_weight() {
+        let mut a = Ewma::new(0.3);
+        let mut b = Ewma::new(0.3);
+        for i in 0..20 {
+            let x = (i * 7 % 13) as f64;
+            let va = a.push(x);
+            let vb = b.push_weighted(x, 0.3);
+            assert_eq!(va, vb, "weight == alpha must be bit-identical to push");
+        }
+    }
+
+    #[test]
+    fn weighted_push_interpolates_by_weight() {
+        let mut e = Ewma::new(0.5);
+        e.push_weighted(10.0, 1.0); // seed
+        // Zero weight: the estimate must not move.
+        assert_eq!(e.push_weighted(100.0, 0.0), 10.0);
+        // Full weight: jumps to the observation.
+        assert_eq!(e.push_weighted(100.0, 1.0), 100.0);
+        // Out-of-range weights clamp instead of extrapolating.
+        assert_eq!(e.push_weighted(0.0, 2.0), 0.0);
+        assert_eq!(e.push_weighted(50.0, -1.0), 0.0);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! time, so a live run and a simulation of the same plan degrade at the
 //! same (virtual) instants.
 //!
-//! Four fault shapes (the Salesforce production-study failure modes):
+//! Five fault shapes (the Salesforce production-study failure modes):
 //!
 //! * [`Fault::PoolDark`] — a whole pool stops serving at `at_s`,
 //!   optionally recovering at `until_s` (the windowed `dark:1@24-60`
@@ -24,7 +24,16 @@
 //!   window (`flaky:1x0.2@20-40`). The per-request coin is a pure hash
 //!   of (request id, attempt), so the live executor and the DES fail
 //!   the *same* requests — the driver for retry / circuit-breaker
-//!   tests without a real failing backend.
+//!   tests without a real failing backend;
+//! * [`Fault::Drift`] — a *persistent* service-time shift
+//!   (`drift:0x2@60` — pool 0 serves ×2 slower from t = 60 s on,
+//!   optionally ending with `@60-120`). Mechanically identical to a
+//!   slowdown (the same multiplier at the same executor sites), but
+//!   semantically the regime change the online re-planner is built to
+//!   adapt to: hardware degradation, a model swap, a datacenter
+//!   migration — reality drifting away from the offline profile — where
+//!   [`Fault::Slowdown`] models a transient a static plan should ride
+//!   out.
 
 use anyhow::{bail, Context, Result};
 
@@ -45,6 +54,10 @@ pub enum Fault {
     /// time so live and DES agree deterministically; the coin is
     /// [`FaultPlan::flaky_fails`]).
     EngineFlaky { pool: usize, rate: f64, from_s: f64, to_s: f64 },
+    /// Pool `pool`'s service times shift ×`factor` from `from_s` on —
+    /// persistently when `to_s` is `None` (the common case: reality
+    /// drifted and is not coming back), or over `[from_s, to_s)`.
+    Drift { pool: usize, factor: f64, from_s: f64, to_s: Option<f64> },
 }
 
 /// A set of faults applied to one run. `Default` is the empty plan
@@ -142,6 +155,30 @@ impl FaultPlan {
         factor
     }
 
+    /// Service-time drift factor of `pool` at `t_ms` (product of the
+    /// active drift shifts; 1.0 outside them). Applied at exactly the
+    /// same executor sites as [`slowdown_at_ms`](Self::slowdown_at_ms)
+    /// — the two compose multiplicatively.
+    pub fn drift_at_ms(&self, pool: usize, t_ms: f64) -> f64 {
+        let mut factor = 1.0;
+        for f in &self.faults {
+            if let Fault::Drift { pool: p, factor: x, from_s, to_s } = f {
+                if *p == pool
+                    && t_ms >= from_s * 1000.0
+                    && to_s.is_none_or(|u| t_ms < u * 1000.0)
+                {
+                    factor *= x;
+                }
+            }
+        }
+        factor
+    }
+
+    /// Does any fault drift service times?
+    pub fn any_drift(&self) -> bool {
+        self.faults.iter().any(|f| matches!(f, Fault::Drift { .. }))
+    }
+
     /// Tightest active admission bound at `t_ms`, if a squeeze window
     /// is open.
     pub fn capacity_at_ms(&self, t_ms: f64) -> Option<usize> {
@@ -194,9 +231,11 @@ impl FaultPlan {
     /// * `dark:<pool>@<t>-<u>` — pool dark over `[t, u)` (recovers);
     /// * `slow:<pool>x<factor>@<from>-<to>` — slowdown window;
     /// * `squeeze:<capacity>@<from>-<to>` — admission squeeze window;
-    /// * `flaky:<pool>x<rate>@<from>-<to>` — engine error window.
+    /// * `flaky:<pool>x<rate>@<from>-<to>` — engine error window;
+    /// * `drift:<pool>x<factor>@<from>[-<to>]` — persistent (or
+    ///   windowed) service-time shift.
     ///
-    /// Example: `dark:1@20-60,slow:0x2.5@30-90,flaky:0x0.2@20-40`.
+    /// Example: `dark:1@20-60,slow:0x2.5@30-90,drift:0x2@60`.
     pub fn parse(s: &str) -> Result<FaultPlan> {
         let mut plan = FaultPlan::default();
         for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
@@ -283,6 +322,36 @@ impl FaultPlan {
                         to_s: to.parse().with_context(|| format!("bad to in {part:?}"))?,
                     });
                 }
+                "drift" => {
+                    let (head, window) = rest
+                        .split_once('@')
+                        .with_context(|| format!("fault {part:?}: expected drift:pxf@t[-u]"))?;
+                    let (pool, factor) = head
+                        .split_once('x')
+                        .with_context(|| format!("fault {part:?}: expected pool x factor"))?;
+                    let factor: f64 =
+                        factor.parse().with_context(|| format!("bad factor in {part:?}"))?;
+                    anyhow::ensure!(factor > 0.0, "fault {part:?}: factor must be positive");
+                    let secs = |v: &str| -> Result<f64> {
+                        v.parse().with_context(|| format!("bad time in {part:?}"))
+                    };
+                    let (from_s, to_s) = match window.split_once('-') {
+                        Some((from, to)) => (secs(from)?, Some(secs(to)?)),
+                        None => (secs(window)?, None),
+                    };
+                    if let Some(u) = to_s {
+                        anyhow::ensure!(
+                            u > from_s,
+                            "fault {part:?}: drift end {u} must be after start {from_s}"
+                        );
+                    }
+                    plan.faults.push(Fault::Drift {
+                        pool: pool.parse().with_context(|| format!("bad pool in {part:?}"))?,
+                        factor,
+                        from_s,
+                        to_s,
+                    });
+                }
                 other => bail!("unknown fault kind {other:?} in {part:?}"),
             }
         }
@@ -311,6 +380,12 @@ impl FaultPlan {
                 Fault::EngineFlaky { pool, rate, from_s, to_s } => {
                     format!("flaky:{pool}x{rate}@{from_s}-{to_s}")
                 }
+                Fault::Drift { pool, factor, from_s, to_s: None } => {
+                    format!("drift:{pool}x{factor}@{from_s}")
+                }
+                Fault::Drift { pool, factor, from_s, to_s: Some(u) } => {
+                    format!("drift:{pool}x{factor}@{from_s}-{u}")
+                }
             })
             .collect();
         parts.join(",")
@@ -332,8 +407,50 @@ mod tests {
         assert_eq!(plan.dark_until_ms(0), None);
         assert!(!plan.is_dark_at_ms(0, 1e6));
         assert_eq!(plan.slowdown_at_ms(0, 1e6), 1.0);
+        assert_eq!(plan.drift_at_ms(0, 1e6), 1.0);
+        assert!(!plan.any_drift());
         assert_eq!(plan.capacity_at_ms(1e6), None);
         assert!(!plan.flaky_fails(0, 7, 0, 1e6));
+    }
+
+    #[test]
+    fn drift_shifts_persist_and_compose_with_slowdowns() {
+        let plan = FaultPlan::none()
+            .with(Fault::Drift { pool: 0, factor: 2.0, from_s: 60.0, to_s: None })
+            .with(Fault::Drift { pool: 1, factor: 1.5, from_s: 10.0, to_s: Some(20.0) })
+            .with(Fault::Slowdown { pool: 0, factor: 3.0, from_s: 70.0, to_s: 80.0 });
+        assert!(plan.any_drift());
+        // Open-ended drift: off before from_s, on forever after.
+        assert_eq!(plan.drift_at_ms(0, 59_999.0), 1.0);
+        assert_eq!(plan.drift_at_ms(0, 60_000.0), 2.0);
+        assert_eq!(plan.drift_at_ms(0, 1e12), 2.0, "drift never recovers");
+        // Windowed drift closes like a slowdown.
+        assert_eq!(plan.drift_at_ms(1, 15_000.0), 1.5);
+        assert_eq!(plan.drift_at_ms(1, 20_000.0), 1.0);
+        // Other pools untouched; drift and slowdown compose at the
+        // shared executor site (product of the two factors).
+        assert_eq!(plan.drift_at_ms(1, 65_000.0), 1.0);
+        let combined = plan.drift_at_ms(0, 75_000.0) * plan.slowdown_at_ms(0, 75_000.0);
+        assert_eq!(combined, 6.0);
+    }
+
+    #[test]
+    fn drift_parse_roundtrips_describe() {
+        let text = "drift:0x2@60,drift:1x1.5@10-20";
+        let plan = FaultPlan::parse(text).unwrap();
+        assert_eq!(
+            plan.faults,
+            vec![
+                Fault::Drift { pool: 0, factor: 2.0, from_s: 60.0, to_s: None },
+                Fault::Drift { pool: 1, factor: 1.5, from_s: 10.0, to_s: Some(20.0) },
+            ]
+        );
+        assert_eq!(plan.describe(), text);
+        assert_eq!(FaultPlan::parse(&plan.describe()).unwrap(), plan);
+        assert!(FaultPlan::parse("drift:0@60").is_err(), "missing factor");
+        assert!(FaultPlan::parse("drift:0x0@60").is_err(), "factor must be positive");
+        assert!(FaultPlan::parse("drift:0x2@60-30").is_err(), "end before start");
+        assert!(FaultPlan::parse("drift:0x2").is_err(), "missing time");
     }
 
     #[test]

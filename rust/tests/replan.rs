@@ -1,0 +1,276 @@
+//! Integration: the online re-planning loop — live ρ̂/speed/α estimation
+//! feeding threshold re-derivation, adaptive batch and spill margin — in
+//! BOTH executors.
+//!
+//! Two pins anchor the PR:
+//!
+//! 1. **Disabled parity** — `ReplanConfig::default()` (off) reproduces
+//!    the plain DES engine bit for bit, and the live server with the
+//!    loop off reports zero re-plans.
+//! 2. **Re-planning beats the static plan under drift** — the same
+//!    mid-run persistent service drift, same arrivals, same seed and
+//!    same base plan: the run with the adaptation loop closed converges
+//!    (≥ 1 adopted re-plan) and holds strictly higher SLO compliance
+//!    than the run serving the stale plan, in both the DES and the live
+//!    runtime.
+
+use compass::metrics::RunSummary;
+use compass::planner::{derive_plan, AqmParams, LatencyProfile, Plan, ProfiledConfig};
+use compass::serving::executor::MockEngine;
+use compass::serving::{
+    serve, ElasticoPolicy, OverloadConfig, ReplanConfig, ResilienceConfig, ServeOptions, Topology,
+};
+use compass::sim::{simulate_topology, simulate_topology_replan, LognormalService, SimOutcome};
+use compass::workload::{Fault, FaultPlan};
+
+/// Synthetic two-rung plan (fast 20 ms, accurate 90 ms) derived for a
+/// 2-worker fleet — the idiom of the resilience/overload suites.
+fn plan2() -> Plan {
+    let mk = |label: &str, acc: f64, mean: f64, p95: f64| ProfiledConfig {
+        config: vec![],
+        label: label.into(),
+        accuracy: acc,
+        latency: LatencyProfile { mean_ms: mean, p50_ms: mean, p95_ms: p95, runs: 10 },
+    };
+    derive_plan(
+        &[mk("fast", 0.76, 20.0, 28.0), mk("accurate", 0.85, 90.0, 120.0)],
+        AqmParams::for_slo_workers(300.0, 2),
+    )
+}
+
+fn steady_arrivals(qps: f64, dur: f64) -> Vec<f64> {
+    let n = (qps * dur) as usize;
+    (0..n).map(|i| i as f64 / qps).collect()
+}
+
+/// ×4 persistent fleet-wide service drift 20 s into a 90 s run
+/// (`Topology::uniform` is a single pool): the accurate rung
+/// (90 → 360 ms) then blows the 300 ms SLO on service time alone, so
+/// every post-drift request served at that rung is a miss — the stale
+/// plan keeps re-entering it on every downscale window, the re-planner
+/// learns the drifted speed and blocks it.
+fn drift_plan() -> FaultPlan {
+    FaultPlan::none().with(Fault::Drift { pool: 0, factor: 4.0, from_s: 20.0, to_s: None })
+}
+
+fn des_drift_run(replan: &ReplanConfig) -> (SimOutcome, Vec<f64>, Plan) {
+    let plan = plan2();
+    let arr = steady_arrivals(8.0, 90.0);
+    let svc = LognormalService::from_plan(&plan, 0.10);
+    let topo = Topology::uniform(2, 2);
+    let mut p = ElasticoPolicy::new(plan.clone());
+    let out = simulate_topology_replan(
+        &arr,
+        &plan,
+        &mut p,
+        &svc,
+        42,
+        &topo,
+        1,
+        &drift_plan(),
+        &ResilienceConfig::default(),
+        &OverloadConfig::default(),
+        replan,
+    );
+    (out, arr, plan)
+}
+
+fn compliance(records: &[compass::metrics::RequestRecord], slo_ms: f64) -> f64 {
+    if records.is_empty() {
+        return 0.0;
+    }
+    let ok = records.iter().filter(|r| r.finish_ms - r.arrival_ms <= slo_ms).count();
+    ok as f64 / records.len() as f64
+}
+
+// ---------------------------------------------------------------------
+// Pin 1: the loop off is invisible in both executors
+// ---------------------------------------------------------------------
+
+#[test]
+fn des_disabled_replan_is_bit_identical_to_the_plain_engine() {
+    let plan = plan2();
+    let arr = steady_arrivals(12.0, 60.0);
+    let svc = LognormalService::from_plan(&plan, 0.25);
+    let topo = Topology::uniform(2, 2);
+    let mut p1 = ElasticoPolicy::new(plan.clone());
+    let base = simulate_topology(&arr, &plan, &mut p1, &svc, 42, &topo, 1);
+    let mut p2 = ElasticoPolicy::new(plan.clone());
+    let out = simulate_topology_replan(
+        &arr,
+        &plan,
+        &mut p2,
+        &svc,
+        42,
+        &topo,
+        1,
+        &FaultPlan::none(),
+        &ResilienceConfig::default(),
+        &OverloadConfig::default(),
+        &ReplanConfig::default(),
+    );
+    assert_eq!(base.records.len(), out.records.len());
+    for (x, y) in base.records.iter().zip(&out.records) {
+        assert_eq!(x, y, "disabled re-planning must not perturb the DES");
+    }
+    assert_eq!(base.switches.len(), out.switches.len());
+    assert_eq!(out.replans, 0);
+}
+
+#[test]
+fn live_replan_off_reports_zero_replans() {
+    let arrivals: Vec<f64> = (0..40).map(|i| i as f64 * 0.005).collect();
+    let out = serve(
+        move || {
+            Ok(MockEngine {
+                service_ms: vec![2.0, 8.0],
+                accuracy: vec![0.76, 0.85],
+                dispatch_ms: 0.0,
+            })
+        },
+        Box::new(compass::serving::StaticPolicy::new(0, "fast")),
+        &arrivals,
+        &ServeOptions { workers: 2, ..ServeOptions::default() },
+    )
+    .unwrap();
+    assert_eq!(out.replans, 0);
+    assert_eq!(out.records.len() + out.rejected + out.failed, 40);
+}
+
+#[test]
+fn live_replan_enabled_requires_a_base_plan() {
+    // An enabled loop with no plan attached cannot re-derive anything —
+    // the run must refuse to start rather than silently not adapt.
+    let arrivals = vec![0.0, 0.01];
+    let err = serve(
+        move || {
+            Ok(MockEngine {
+                service_ms: vec![2.0],
+                accuracy: vec![0.8],
+                dispatch_ms: 0.0,
+            })
+        },
+        Box::new(compass::serving::StaticPolicy::new(0, "only")),
+        &arrivals,
+        &ServeOptions {
+            replan: ReplanConfig { enabled: true, ..ReplanConfig::default() },
+            ..ServeOptions::default()
+        },
+    );
+    assert!(err.is_err(), "replan on without a base plan must be a configuration error");
+}
+
+// ---------------------------------------------------------------------
+// Pin 2: re-planning converges and beats the stale plan under drift
+// ---------------------------------------------------------------------
+
+#[test]
+fn des_replanning_beats_the_static_plan_under_drift() {
+    let on = ReplanConfig { enabled: true, min_samples: 8, ..ReplanConfig::default() };
+    let (adaptive, arr, plan) = des_drift_run(&on);
+    let (stale, _, _) = des_drift_run(&ReplanConfig::default());
+
+    // Conservation in both runs (no overload plane: three buckets).
+    assert_eq!(adaptive.records.len() + adaptive.rejected + adaptive.failed, arr.len());
+    assert_eq!(stale.records.len() + stale.rejected + stale.failed, arr.len());
+
+    // The loop converged: the drifted speed crossed the min-change
+    // hysteresis and the policy adopted at least one re-derived plan.
+    assert!(adaptive.replans >= 1, "the re-planner must adopt a plan under ×4 drift");
+    assert_eq!(stale.replans, 0);
+
+    let c_on = compliance(&adaptive.records, plan.slo_ms);
+    let c_off = compliance(&stale.records, plan.slo_ms);
+    assert!(
+        c_on > c_off,
+        "re-planning must strictly beat the stale plan on SLO compliance in the DES: \
+         replan {c_on:.3} vs static {c_off:.3}"
+    );
+    // And not vacuously: the stale plan keeps re-entering the drifted
+    // 360 ms rung, so it must actually miss the SLO a meaningful part
+    // of the time while the adapted run holds it.
+    assert!(
+        c_off < 0.92,
+        "the drift must hurt the stale plan or the comparison is vacuous (got {c_off:.3})"
+    );
+    assert!(c_on > 0.8, "the adapted run must hold the SLO (got {c_on:.3})");
+}
+
+#[test]
+fn des_replay_is_deterministic_with_replanning() {
+    let on = ReplanConfig { enabled: true, min_samples: 8, ..ReplanConfig::default() };
+    let (a, _, _) = des_drift_run(&on);
+    let (b, _, _) = des_drift_run(&on);
+    assert_eq!(a.records.len(), b.records.len());
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x, y, "the re-planning DES must replay bit-identically");
+    }
+    assert_eq!(a.replans, b.replans);
+    assert_eq!(a.switches.len(), b.switches.len());
+}
+
+#[test]
+fn live_replanning_beats_the_static_plan_under_drift() {
+    // Fast 3 ms / accurate 15 ms on 2 workers, SLO 60 ms; pool 0 drifts
+    // ×8 at t = 2.5 s and never recovers — the accurate rung (120 ms)
+    // then blows the SLO by itself. 30 qps over 8 s.
+    let mk = |label: &str, acc: f64, mean: f64, p95: f64| ProfiledConfig {
+        config: vec![],
+        label: label.into(),
+        accuracy: acc,
+        latency: LatencyProfile { mean_ms: mean, p50_ms: mean, p95_ms: p95, runs: 10 },
+    };
+    let plan = derive_plan(
+        &[mk("fast", 0.76, 3.0, 4.2), mk("accurate", 0.85, 15.0, 20.0)],
+        AqmParams::for_slo_workers(60.0, 2),
+    );
+    let arrivals = steady_arrivals(30.0, 8.0);
+    let faults =
+        FaultPlan::none().with(Fault::Drift { pool: 0, factor: 8.0, from_s: 2.5, to_s: None });
+    let run = |replan: ReplanConfig| {
+        let plan = plan.clone();
+        let out = serve(
+            move || {
+                Ok(MockEngine {
+                    service_ms: vec![3.0, 15.0],
+                    accuracy: vec![0.76, 0.85],
+                    dispatch_ms: 0.0,
+                })
+            },
+            Box::new(ElasticoPolicy::new(plan)),
+            &arrivals,
+            &ServeOptions {
+                workers: 2,
+                faults: faults.clone(),
+                replan,
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(out.records.len() + out.rejected + out.failed, arrivals.len());
+        out
+    };
+    let on = ReplanConfig {
+        enabled: true,
+        interval_ms: 1000.0,
+        min_samples: 8,
+        window: 32,
+        ..ReplanConfig::default()
+    }
+    .with_plan(plan.clone());
+    let adaptive = run(on);
+    let stale = run(ReplanConfig::default());
+
+    assert!(adaptive.replans >= 1, "the live re-planner must adopt a plan under ×8 drift");
+    assert_eq!(stale.replans, 0);
+
+    let sum_on = RunSummary::compute(&adaptive.records, &adaptive.switches, 60.0, 2);
+    let sum_off = RunSummary::compute(&stale.records, &stale.switches, 60.0, 2);
+    assert!(
+        sum_on.slo_compliance > sum_off.slo_compliance,
+        "re-planning must strictly beat the stale plan on SLO compliance live: \
+         replan {:.3} vs static {:.3}",
+        sum_on.slo_compliance,
+        sum_off.slo_compliance
+    );
+}
