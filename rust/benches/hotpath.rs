@@ -1,7 +1,8 @@
 //! Bench: L3 coordinator hot-path microbenchmarks (perf pass §Perf):
 //! queue ops (uncontended *and* contended multi-producer/multi-consumer,
-//! central mutex FIFO vs sharded work stealing), monitor ticks, policy
-//! decisions, record aggregation — everything on the request path
+//! central mutex FIFO vs sharded work stealing vs lock-free MPMC rings,
+//! the shard-storage sweep extended to k ∈ {16, 32}), monitor ticks,
+//! policy decisions, record aggregation — everything on the request path
 //! *except* the model compute — plus the M/G/k simulator swept over the
 //! worker-pool sizes k ∈ {1, 2, 4, 8}.
 //!
@@ -27,7 +28,7 @@ use compass::planner::{
 use compass::serving::monitor::LoadMonitor;
 use compass::serving::pool::{capacity_factor, parse_pools, PoolSpec};
 use compass::serving::{
-    Discipline, ElasticoPolicy, Popped, RequestQueue, ShardedQueue, Topology,
+    Discipline, ElasticoPolicy, Popped, QueueBackend, RequestQueue, ShardedQueue, Topology,
 };
 use compass::sim::{simulate_topology, LognormalService};
 use compass::util::bench::{bench, fast_mode, group, write_json, BenchResult};
@@ -64,9 +65,11 @@ fn central_mpmc(k: usize, ops: usize) {
 }
 
 /// The same workload over a k-shard work-stealing queue: round-robin
-/// producers, per-worker consumers, 1/k of the traffic per shard mutex.
-fn sharded_mpmc(k: usize, ops: usize) {
-    let q: Arc<ShardedQueue<(u64, f64)>> = Arc::new(ShardedQueue::new(k * ops, k));
+/// producers, per-worker consumers, 1/k of the traffic per shard —
+/// locked `VecDeque` shards or lock-free MPMC rings per `backend`.
+fn sharded_mpmc(k: usize, ops: usize, backend: QueueBackend) {
+    let q: Arc<ShardedQueue<(u64, f64)>> =
+        Arc::new(ShardedQueue::new_backend(k * ops, k, backend));
     std::thread::scope(|s| {
         for w in 0..k {
             let q = q.clone();
@@ -94,8 +97,9 @@ fn sharded_mpmc(k: usize, ops: usize) {
 /// lock acquisition per batch instead of per item. `shards == 1` is the
 /// central discipline, `shards == k` the sharded one; `b == 1` is the
 /// single-dispatch baseline the batch sweep is measured against.
-fn mpmc_batched(k: usize, shards: usize, ops: usize, b: usize) {
-    let q: Arc<ShardedQueue<(u64, f64)>> = Arc::new(ShardedQueue::new(k * ops, shards));
+fn mpmc_batched(k: usize, shards: usize, ops: usize, b: usize, backend: QueueBackend) {
+    let q: Arc<ShardedQueue<(u64, f64)>> =
+        Arc::new(ShardedQueue::new_backend(k * ops, shards, backend));
     std::thread::scope(|s| {
         let producers: Vec<_> = (0..k)
             .map(|_| {
@@ -205,11 +209,23 @@ fn main() {
             10,
             || central_mpmc(k, ops),
         ));
+    }
+    // The shard-storage sweep extends past the central FIFO's range:
+    // at k ∈ {16, 32} the interesting contention is shard-lock vs
+    // lock-free CAS, not the central mutex (which the k ≤ 8 sweep
+    // already shows losing).
+    for k in [1usize, 2, 4, 8, 16, 32] {
         results.push(bench(
             &format!("mpmc sharded k={k} push+pop x{ops}/thread"),
             1,
             10,
-            || sharded_mpmc(k, ops),
+            || sharded_mpmc(k, ops, QueueBackend::Mutex),
+        ));
+        results.push(bench(
+            &format!("mpmc ring k={k} push+pop x{ops}/thread"),
+            1,
+            10,
+            || sharded_mpmc(k, ops, QueueBackend::Ring),
         ));
     }
 
@@ -226,14 +242,39 @@ fn main() {
             &format!("mpmc batched central k={bk} B={b} x{ops}/thread"),
             1,
             10,
-            || mpmc_batched(bk, 1, ops, b),
+            || mpmc_batched(bk, 1, ops, b, QueueBackend::Mutex),
         ));
         results.push(bench(
             &format!("mpmc batched sharded k={bk} B={b} x{ops}/thread"),
             1,
             10,
-            || mpmc_batched(bk, bk, ops, b),
+            || mpmc_batched(bk, bk, ops, b, QueueBackend::Mutex),
         ));
+        results.push(bench(
+            &format!("mpmc batched ring k={bk} B={b} x{ops}/thread"),
+            1,
+            10,
+            || mpmc_batched(bk, bk, ops, b, QueueBackend::Ring),
+        ));
+    }
+    // High-contention batched drain: the one-CAS run/steal-half claim
+    // vs one lock acquisition per batch, at thread counts where the
+    // shard locks start to convoy.
+    for k in [8usize, 16, 32] {
+        for b in [1usize, 8] {
+            results.push(bench(
+                &format!("mpmc batched sharded k={k} B={b} x{ops}/thread"),
+                1,
+                10,
+                || mpmc_batched(k, k, ops, b, QueueBackend::Mutex),
+            ));
+            results.push(bench(
+                &format!("mpmc batched ring k={k} B={b} x{ops}/thread"),
+                1,
+                10,
+                || mpmc_batched(k, k, ops, b, QueueBackend::Ring),
+            ));
+        }
     }
 
     // M/G/k coordinator sweep: the paper's spike trace replayed through
@@ -374,10 +415,29 @@ fn main() {
             println!("contended speedup k={k}: {:.2}x (central/sharded)", c / s);
         }
     }
+    // Ring acceptance readout: the lock-free shards against the locked
+    // shards on the identical contended workload — the gate's bars are
+    // ring >= 1.0x sharded at k=8 and <= 1.1x slower at k=1.
+    for k in [1usize, 2, 4, 8, 16, 32] {
+        if let (Some(s), Some(r)) = (
+            find(format!("mpmc sharded k={k} push+pop x{ops}/thread")),
+            find(format!("mpmc ring k={k} push+pop x{ops}/thread")),
+        ) {
+            println!("ring speedup k={k}: {:.2}x (sharded/ring)", s / r);
+        }
+    }
+    for k in [8usize, 16, 32] {
+        if let (Some(s), Some(r)) = (
+            find(format!("mpmc batched sharded k={k} B=8 x{ops}/thread")),
+            find(format!("mpmc batched ring k={k} B=8 x{ops}/thread")),
+        ) {
+            println!("ring batched speedup k={k} B=8: {:.2}x (sharded/ring)", s / r);
+        }
+    }
     // Batch acceptance readout: batched dispatch vs single dispatch
     // (B=1) on the same contended workload — the issue's bar is ≥1.5x
     // at B=8.
-    for disc in ["central", "sharded"] {
+    for disc in ["central", "sharded", "ring"] {
         for b in [4usize, 8, 16] {
             if let (Some(b1), Some(bb)) = (
                 find(format!("mpmc batched {disc} k={bk} B=1 x{ops}/thread")),

@@ -18,7 +18,8 @@ use crate::search::{CompassV, CompassVParams};
 use crate::serving::executor::WorkflowEngine;
 use crate::serving::pool::{capacity_factor, total_workers, PoolSpec};
 use crate::serving::{
-    serve, Discipline, ElasticoPolicy, ScalingPolicy, ServeOptions, StaticPolicy, Topology,
+    serve, Discipline, ElasticoPolicy, QueueBackend, ScalingPolicy, ServeOptions, StaticPolicy,
+    Topology,
 };
 use crate::sim::LognormalService;
 use crate::util::results_dir;
@@ -60,6 +61,11 @@ pub struct ExperimentCtx {
     /// Threshold derivation rule (legacy k-scaling by default; `erlang`
     /// = Erlang-C waiting-probability thresholds).
     pub thresholds: ThresholdMode,
+    /// Shard storage backend for live serving cells (`--queue
+    /// mutex|ring`): locked `VecDeque` shards (the seed default) or the
+    /// lock-free bounded MPMC rings. Simulated cells are unaffected —
+    /// the DES has no locks to replace.
+    pub backend: QueueBackend,
     /// Output directory for CSVs.
     pub out_dir: PathBuf,
 }
@@ -77,6 +83,7 @@ impl Default for ExperimentCtx {
             pools: Vec::new(),
             spill_margin: 0.0,
             thresholds: ThresholdMode::Legacy,
+            backend: QueueBackend::Mutex,
             out_dir: results_dir(),
         }
     }
@@ -472,6 +479,7 @@ pub fn run_cell(
                 batch: ctx.batch.max(1),
                 pools: ctx.pools.clone(),
                 spill_margin: ctx.spill_margin,
+                backend: ctx.backend,
                 ..ServeOptions::default()
             },
         )?;

@@ -23,7 +23,7 @@ use super::common::{
 use crate::metrics::RunSummary;
 use crate::planner::{Plan, ThresholdMode};
 use crate::runtime::artifacts_dir;
-use crate::serving::executor::WorkflowEngine;
+use crate::serving::executor::{MockEngine, WorkflowEngine};
 use crate::serving::{
     parse_pools, serve, ClassSpec, Discipline, OverloadConfig, ReplanConfig, ResilienceConfig,
     ServeOptions,
@@ -535,37 +535,61 @@ pub fn run_matrix_cell(
         replan.clone()
     };
     let (records, switches, rejected, steals, spills, counters) = if ctx.live {
-        let space2 = space.clone();
-        let plan2 = plan.clone();
-        let seed = ctx.seed;
-        let out = serve(
-            move || {
-                let configs: Vec<_> =
-                    plan2.ladder.iter().map(|p| p.config.clone()).collect();
-                let wf = RagWorkflow::load_subset(
-                    &artifacts_dir(),
-                    &space2,
-                    &configs,
-                    seed,
-                )?;
-                Ok(WorkflowEngine::new(wf, space2.clone(), plan2.clone()))
-            },
-            policy,
-            arrivals,
-            &ServeOptions {
-                workers: ctx.workers.max(1),
-                discipline: ctx.discipline,
-                shards: ctx.shards,
-                batch: ctx.batch.max(1),
-                pools: ctx.pools.clone(),
-                spill_margin: ctx.spill_margin,
-                faults: faults.clone(),
-                resilience: resilience.clone(),
-                overload: ov.clone(),
-                replan: rp.clone(),
-                ..ServeOptions::default()
-            },
-        )?;
+        let opts = ServeOptions {
+            workers: ctx.workers.max(1),
+            discipline: ctx.discipline,
+            shards: ctx.shards,
+            batch: ctx.batch.max(1),
+            pools: ctx.pools.clone(),
+            spill_margin: ctx.spill_margin,
+            faults: faults.clone(),
+            resilience: resilience.clone(),
+            overload: ov.clone(),
+            replan: rp.clone(),
+            backend: ctx.backend,
+            ..ServeOptions::default()
+        };
+        let out = if artifacts_dir().exists() {
+            let space2 = space.clone();
+            let plan2 = plan.clone();
+            let seed = ctx.seed;
+            serve(
+                move || {
+                    let configs: Vec<_> =
+                        plan2.ladder.iter().map(|p| p.config.clone()).collect();
+                    let wf = RagWorkflow::load_subset(
+                        &artifacts_dir(),
+                        &space2,
+                        &configs,
+                        seed,
+                    )?;
+                    Ok(WorkflowEngine::new(wf, space2.clone(), plan2.clone()))
+                },
+                policy,
+                arrivals,
+                &opts,
+            )?
+        } else {
+            // No PJRT artifacts on this machine (e.g. CI): serve the
+            // plan ladder through a scripted engine instead — each rung
+            // busy-waits its profiled mean. The queueing plane (backend,
+            // shards, batches, AQM, faults) is exercised for real; only
+            // the workflow compute is replayed.
+            let service_ms: Vec<f64> = plan.ladder.iter().map(|r| r.mean_ms).collect();
+            let accuracy: Vec<f64> = plan.ladder.iter().map(|r| r.accuracy).collect();
+            serve(
+                move || {
+                    Ok(MockEngine {
+                        service_ms: service_ms.clone(),
+                        accuracy: accuracy.clone(),
+                        dispatch_ms: 0.0,
+                    })
+                },
+                policy,
+                arrivals,
+                &opts,
+            )?
+        };
         (
             out.records,
             out.switches,

@@ -29,7 +29,9 @@ use compass::planner::{profile_config, ThresholdMode};
 use compass::runtime::artifacts_dir;
 use compass::search::{grid_search, BudgetSchedule, CompassV, CompassVParams};
 use compass::serving::executor::WorkflowEngine;
-use compass::serving::{parse_pools, serve, Discipline, PoolSpec, ServeOptions};
+use compass::serving::{
+    parse_pools, serve, Discipline, PoolSpec, QueueBackend, ServeOptions,
+};
 use compass::util::results_dir;
 use compass::workflows::rag::RagWorkflow;
 use compass::workload::{generate_arrivals, Pattern, WorkloadSpec};
@@ -85,6 +87,17 @@ fn get_discipline(opts: &HashMap<String, String>) -> Result<Discipline> {
     }
 }
 
+/// Parse `--queue mutex|ring` (default mutex — bit-for-bit the seed's
+/// locked shards; `ring` swaps in the lock-free bounded MPMC rings).
+fn get_backend(opts: &HashMap<String, String>) -> Result<QueueBackend> {
+    match opts.get("queue") {
+        None => Ok(QueueBackend::Mutex),
+        Some(v) => QueueBackend::parse(v).ok_or_else(|| {
+            anyhow::anyhow!("--queue expects mutex|ring, got {v}")
+        }),
+    }
+}
+
 /// Parse `--pools name:workers:speed[:offset],...` (empty = homogeneous).
 fn get_pools(opts: &HashMap<String, String>) -> Result<Vec<PoolSpec>> {
     match opts.get("pools") {
@@ -129,6 +142,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                 pools: get_pools(&opts)?,
                 spill_margin: get_f64(&opts, "spill-margin", 0.0)?.max(0.0),
                 thresholds: get_thresholds(&opts)?,
+                backend: get_backend(&opts)?,
                 out_dir: results_dir(),
             };
             experiments::run(id, &ctx)
@@ -162,6 +176,7 @@ fn print_help() {
          \x20             [--workers K] [--discipline central|sharded] [--shards N]\n\
          \x20             [--batch B] [--pools fast:4:1.0,accurate:2:2.5]\n\
          \x20             [--spill-margin M] [--thresholds legacy|erlang]\n\
+         \x20             [--queue mutex|ring]\n\
          \x20             [--replan on|off|on,interval_ms=2000,bmax=8]\n\
          \x20             [--faults drift:0x2@20 ...]\n\
          \x20 experiment  regenerate paper figures/tables -> results/*.csv\n\
@@ -169,8 +184,10 @@ fn print_help() {
          \x20             [--workers K] [--discipline central|sharded] [--shards N]\n\
          \x20             [--batch B] [--pools n:w:speed[:rung],...]\n\
          \x20             [--spill-margin M] [--thresholds legacy|erlang]\n\
+         \x20             [--queue mutex|ring]\n\
          \x20 scenario    scenario matrix sweep -> BENCH_scenarios.json + results/scenarios.csv\n\
          \x20             [--smoke] [--duration S] [--slo MS] [--seed N] [--live]\n\
+         \x20             [--batch B] [--queue mutex|ring]\n\
          \x20             [--scenarios a,b,..] [--topos x,y,..] [--policies p,q,..]\n\
          \x20             [--faults dark:1@24-60,slow:0x2.5@20-40,flaky:0x0.25@20-40]\n\
          \x20             [--resilience on|off|on,max_retries=3,timeout_ms=500]\n\
@@ -286,6 +303,7 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
     let pools = get_pools(opts)?;
     let spill_margin = get_f64(opts, "spill-margin", 0.0)?.max(0.0);
     let thresholds = get_thresholds(opts)?;
+    let backend = get_backend(opts)?;
     let policy_name = opts
         .get("policy")
         .cloned()
@@ -328,6 +346,7 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         spill_margin,
         faults,
         replan,
+        backend,
         ..ServeOptions::default()
     };
     let total_workers = serve_opts.total_workers();
@@ -407,6 +426,7 @@ fn cmd_scenario(opts: &HashMap<String, String>, seed: u64) -> Result<()> {
         duration_s: get_f64(opts, "duration", if smoke { 30.0 } else { 60.0 })?,
         seed,
         batch: get_f64(opts, "batch", 1.0)?.max(1.0) as usize,
+        backend: get_backend(opts)?,
         ..ExperimentCtx::default()
     };
     let split = |key: &str| -> Vec<String> {

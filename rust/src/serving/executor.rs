@@ -39,6 +39,24 @@ pub trait RequestEngine {
         (0..n.max(1)).map(|_| self.execute(idx)).collect()
     }
 
+    /// Allocation-free [`execute_batch`](RequestEngine::execute_batch):
+    /// `out` is cleared and refilled with one outcome per request (in
+    /// order). The serving loop reuses one per-worker outcome buffer
+    /// across dispatches, so a steady-state batch performs no per-batch
+    /// heap allocation. The default delegates to `execute_batch` (an
+    /// engine without an amortized path still allocates); the engines
+    /// here override it to write straight into `out`.
+    fn execute_batch_into(
+        &mut self,
+        idx: usize,
+        n: usize,
+        out: &mut Vec<ExecOutcome>,
+    ) -> Result<()> {
+        out.clear();
+        out.extend(self.execute_batch(idx, n)?);
+        Ok(())
+    }
+
     /// Rungs available (= plan ladder length).
     fn rungs(&self) -> usize;
 }
@@ -69,12 +87,23 @@ impl<W: Workflow> RequestEngine for WorkflowEngine<W> {
     /// compute itself. (True multi-request PJRT batching lands with the
     /// real `xla` backend; the offline stub executes per item.)
     fn execute_batch(&mut self, idx: usize, n: usize) -> Result<Vec<ExecOutcome>> {
-        let cfg = &self.plan.ladder[idx].config;
         let mut outs = Vec::with_capacity(n.max(1));
-        for _ in 0..n.max(1) {
-            outs.push(self.workflow.run(&self.space, cfg)?);
-        }
+        self.execute_batch_into(idx, n, &mut outs)?;
         Ok(outs)
+    }
+
+    fn execute_batch_into(
+        &mut self,
+        idx: usize,
+        n: usize,
+        out: &mut Vec<ExecOutcome>,
+    ) -> Result<()> {
+        let cfg = &self.plan.ladder[idx].config;
+        out.clear();
+        for _ in 0..n.max(1) {
+            out.push(self.workflow.run(&self.space, cfg)?);
+        }
+        Ok(())
     }
 
     fn rungs(&self) -> usize {
@@ -120,12 +149,25 @@ impl RequestEngine for MockEngine {
     /// each item adds its marginal cost. With `n = 1` this is exactly
     /// `service_ms[idx]`.
     fn execute_batch(&mut self, idx: usize, n: usize) -> Result<Vec<ExecOutcome>> {
+        let mut outs = Vec::with_capacity(n.max(1));
+        self.execute_batch_into(idx, n, &mut outs)?;
+        Ok(outs)
+    }
+
+    fn execute_batch_into(
+        &mut self,
+        idx: usize,
+        n: usize,
+        out: &mut Vec<ExecOutcome>,
+    ) -> Result<()> {
         let n = n.max(1);
         let s1 = self.service_ms[idx];
         let alpha = self.dispatch_ms.clamp(0.0, s1);
         let beta = s1 - alpha;
         Self::spin_ms(alpha + n as f64 * beta);
-        Ok(vec![ExecOutcome { accuracy: self.accuracy[idx], success: None }; n])
+        out.clear();
+        out.resize(n, ExecOutcome { accuracy: self.accuracy[idx], success: None });
+        Ok(())
     }
 
     fn rungs(&self) -> usize {
@@ -168,6 +210,23 @@ mod tests {
         assert_eq!(outs.len(), 4);
         assert!(dt >= 30.0, "batch should cost ~32 ms, took {dt}");
         assert!(dt < 60.0, "batch should amortize dispatch, took {dt}");
+    }
+
+    #[test]
+    fn mock_engine_batch_into_refills_the_callers_buffer() {
+        let mut e = MockEngine {
+            service_ms: vec![0.0],
+            accuracy: vec![0.8],
+            dispatch_ms: 0.0,
+        };
+        let mut outs = Vec::with_capacity(8);
+        e.execute_batch_into(0, 4, &mut outs).unwrap();
+        assert_eq!(outs.len(), 4);
+        assert_eq!(outs[0].accuracy, 0.8);
+        let ptr = outs.as_ptr();
+        e.execute_batch_into(0, 2, &mut outs).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs.as_ptr(), ptr, "outcome scratch reused, not reallocated");
     }
 
     #[test]

@@ -152,16 +152,19 @@ pub mod predictive;
 pub mod queue;
 pub mod replan;
 pub mod resilience;
+pub mod ring;
 pub mod server;
 pub mod topology;
 
 pub use elastico::ElasticoPolicy;
+pub use executor::{MockEngine, RequestEngine, WorkflowEngine};
 pub use overload::{default_classes, parse_classes, Brownout, ClassSpec, OverloadConfig};
 pub use policy::{ScalingPolicy, StaticPolicy};
 pub use pool::{parse_pools, PoolSpec};
 pub use predictive::PredictivePolicy;
-pub use queue::{Discipline, Popped, QueueError, RequestQueue, ShardedQueue};
+pub use queue::{Discipline, Popped, QueueBackend, QueueError, RequestQueue, ShardedQueue};
 pub use replan::{ReplanConfig, ReplanEngine, ReplanUpdate};
 pub use resilience::{HealthView, PoolHealth, ResilienceConfig};
+pub use ring::MpmcRing;
 pub use server::{serve, serve_pools, ServeOptions, ServeOutcome};
 pub use topology::{Dispatch, Topology};

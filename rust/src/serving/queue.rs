@@ -66,7 +66,7 @@
 //! ## What is decided here vs in the topology core
 //!
 //! Since the dispatch-plane unification, this module owns only the
-//! *mechanics* of the hot path — shard mutexes, the lock-free depth
+//! *mechanics* of the hot path — shard storage, the lock-free depth
 //! counters, the sleeper-gated park/wake handshake, and the atomic
 //! steal/spill accounting. Every *choice* — which shard a push routes
 //! to, the home-then-steal walk order, when a spill is admitted, how
@@ -76,6 +76,45 @@
 //! core the DES engine ([`crate::sim::simulate_topology`]) executes.
 //! Live/simulated dispatch parity is therefore definitional: there is
 //! one copy of the decision logic, not two kept in sync by tests.
+//!
+//! ## Shard storage backends ([`QueueBackend`])
+//!
+//! The *mechanics* themselves now come in two interchangeable flavors
+//! under the identical `Popped`/batch/park API and the identical
+//! topology walk:
+//!
+//! * [`QueueBackend::Mutex`] (**default**) — one `Mutex<VecDeque>` per
+//!   shard, the seed implementation. Unbounded per shard (only the
+//!   aggregate reservation bounds it), exact depth accounting under the
+//!   shard lock, and the reference for every parity pin.
+//! * [`QueueBackend::Ring`] — one bounded lock-free MPMC ring per shard
+//!   ([`MpmcRing`](super::ring::MpmcRing), Vyukov per-slot sequence
+//!   counters; see the `ring` module docs for the slot-state protocol).
+//!   Pushes and single pops are one CAS each; a batch/steal claims its
+//!   whole run of slots with **one CAS on the ring head**
+//!   ([`MpmcRing::pop_run_into`](super::ring::MpmcRing::pop_run_into)),
+//!   which preserves the "one steal operation = one counter increment"
+//!   contract the mutex backend gets from its critical section.
+//!
+//!   Two deliberate divergences, both invisible to the default path:
+//!   - **Per-shard bound.** Each ring is sized to its pool's even share
+//!     of the total capacity (`⌈capacity / pool_shards⌉`, rounded up to
+//!     a power of two), so a push can hit a *full shard ring* while
+//!     aggregate capacity remains — e.g. when routing is skewed. The
+//!     push then returns [`QueueError::Full`] after rolling back its
+//!     reservation: admission becomes (slightly) stricter, never looser,
+//!     and round-robin routing makes the case pathological rather than
+//!     common.
+//!   - **Depth release order.** The mutex backend releases admission
+//!     slots *before* removing items, under the shard lock. The ring has
+//!     no lock to order those under, so it claims items first and then
+//!     releases their slots — a claimed-but-not-yet-released item can
+//!     transiently over-count `len()` by the in-flight batch, which only
+//!     delays admission/wakeups by nanoseconds and keeps the
+//!     close-and-drained check (`closed && depth == 0`) conservative.
+//!
+//! Selection is wired through `ServeOptions` (`--queue ring|mutex`);
+//! the mutex default keeps the seed path bit-identical.
 //!
 //! The overload plane ([`crate::serving::overload`]) follows the same
 //! split: deadline-aware shedding happens **injector-side** (before
@@ -93,7 +132,9 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use super::ring::MpmcRing;
 use super::topology::{Dispatch, Topology};
+use crate::util::CachePadded;
 
 /// Queue errors (producer side; see [`Popped`] for the consumer side).
 #[derive(Debug, PartialEq, Eq)]
@@ -148,6 +189,39 @@ impl Discipline {
                     shards
                 }
             }
+        }
+    }
+}
+
+/// Shard-storage backend of the [`ShardedQueue`] hot path (see the
+/// module docs for the trade-offs). Orthogonal to [`Discipline`]: the
+/// discipline picks the shard layout, the backend picks what a shard
+/// *is*.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueueBackend {
+    /// One `Mutex<VecDeque>` per shard — the seed mechanics (default).
+    #[default]
+    Mutex,
+    /// One bounded lock-free MPMC ring per shard
+    /// ([`MpmcRing`](super::ring::MpmcRing)).
+    Ring,
+}
+
+impl QueueBackend {
+    /// Parse a CLI spelling (`mutex` | `ring`).
+    pub fn parse(s: &str) -> Option<QueueBackend> {
+        match s {
+            "mutex" | "lock" => Some(QueueBackend::Mutex),
+            "ring" | "lockfree" | "lock-free" => Some(QueueBackend::Ring),
+            _ => None,
+        }
+    }
+
+    /// Display name (reports/CSV headers).
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueueBackend::Mutex => "mutex",
+            QueueBackend::Ring => "ring",
         }
     }
 }
@@ -244,6 +318,24 @@ impl<T> RequestQueue<T> {
     }
 }
 
+/// The per-shard storage of a [`ShardedQueue`]: locked deques (seed) or
+/// lock-free rings, selected once at construction ([`QueueBackend`]).
+/// Everything above this — reservation, routing, walk order, parking —
+/// is backend-agnostic.
+enum ShardStore<T> {
+    Mutex(Vec<Mutex<VecDeque<T>>>),
+    Ring(Vec<MpmcRing<T>>),
+}
+
+impl<T> ShardStore<T> {
+    fn shard_count(&self) -> usize {
+        match self {
+            ShardStore::Mutex(shards) => shards.len(),
+            ShardStore::Ring(rings) => rings.len(),
+        }
+    }
+}
+
 /// Sharded bounded MPMC queue with FIFO work stealing.
 ///
 /// `capacity` bounds the **total** buffered items across all shards
@@ -252,31 +344,39 @@ impl<T> RequestQueue<T> {
 /// Producers route round-robin; consumer `w` drains shard `w % shards`
 /// first and steals the front of the next non-empty shard when its home
 /// shard is dry.
+///
+/// Hot counters that different cores hammer concurrently (the aggregate
+/// depth vs the router cursor vs the steal/spill tallies, and each
+/// per-pool depth vs its neighbors) are [`CachePadded`] onto their own
+/// 64-byte cache lines so an update to one never invalidates another's
+/// line (false sharing).
 pub struct ShardedQueue<T> {
-    shards: Vec<Mutex<VecDeque<T>>>,
+    shards: ShardStore<T>,
     /// Aggregate depth: slots reserved by pushes and not yet claimed by
     /// pops. Reserved before insert, released at claim (under the shard
     /// lock, just before removal), so a racing push can only be admitted
     /// early into a freshly freed slot — never spuriously rejected while
     /// capacity genuinely remains. Exact AQM depth signal in quiescence.
-    depth: AtomicUsize,
+    /// (Ring backend: released just *after* the claim — see the module
+    /// docs' divergence note.)
+    depth: CachePadded<AtomicUsize>,
     capacity: usize,
     /// Round-robin router cursor (pool-agnostic [`push`](ShardedQueue::push)).
-    router: AtomicUsize,
+    router: CachePadded<AtomicUsize>,
     /// The dispatch topology: shard layout, walk order, spill gate and
     /// batch arithmetic all come from here (shared with the DES engine).
     topo: Topology,
     /// Per-pool depth counters — maintained (and read) only when the
     /// topology has more than one pool, so the single-pool hot path is
     /// exactly the pre-pool code.
-    pool_depths: Vec<AtomicUsize>,
+    pool_depths: Vec<CachePadded<AtomicUsize>>,
     /// Per-pool round-robin router cursors.
-    pool_routers: Vec<AtomicUsize>,
+    pool_routers: Vec<CachePadded<AtomicUsize>>,
     closed: AtomicBool,
     /// Pops satisfied from a non-home shard of the consumer's own pool.
-    steals: AtomicU64,
+    steals: CachePadded<AtomicU64>,
     /// Pops satisfied from another pool's shard (cross-pool spill).
-    spills: AtomicU64,
+    spills: CachePadded<AtomicU64>,
     /// Consumers parked on `notify`; producers skip the sleep gate
     /// entirely while this is zero (the loaded-system fast path).
     sleepers: AtomicUsize,
@@ -295,6 +395,16 @@ impl<T> ShardedQueue<T> {
         Self::new_pooled(capacity, &[shards.max(1)])
     }
 
+    /// [`new`](ShardedQueue::new) with an explicit shard-storage
+    /// [`QueueBackend`] (`Mutex` is what `new` gives you).
+    pub fn new_backend(capacity: usize, shards: usize, backend: QueueBackend) -> Self {
+        Self::with_topology_backend(
+            capacity,
+            Topology::anonymous(&[shards.max(1)]),
+            backend,
+        )
+    }
+
     /// A pool-partitioned queue: `pool_shards[p]` shards belong to pool
     /// `p` (contiguous ranges, in order). `capacity` still bounds the
     /// **total** buffered items across every pool — admission control
@@ -311,23 +421,65 @@ impl<T> ShardedQueue<T> {
     /// [`new`](ShardedQueue::new) / [`new_pooled`](ShardedQueue::new_pooled)
     /// wrap it with uniform-speed, margin-0 topologies.
     pub fn with_topology(capacity: usize, topo: Topology) -> Self {
+        Self::with_topology_backend(capacity, topo, QueueBackend::Mutex)
+    }
+
+    /// [`with_topology`](ShardedQueue::with_topology) with an explicit
+    /// shard-storage [`QueueBackend`]. Under the ring backend each
+    /// shard's ring is sized to its pool's even share of the total
+    /// capacity (`⌈capacity / pool_shards⌉`, rounded up to a power of
+    /// two): a whole pool can absorb every admitted item, while a
+    /// single shard need not — round-robin routing spreads a pool's
+    /// backlog evenly, and a skew-flooded shard reports `Full` early
+    /// (admission stays a *total* bound; see the module docs).
+    pub fn with_topology_backend(
+        capacity: usize,
+        topo: Topology,
+        backend: QueueBackend,
+    ) -> Self {
         let n_shards = topo.n_shards();
         let n_pools = topo.n_pools();
+        let capacity = capacity.max(1);
+        let shards = match backend {
+            QueueBackend::Mutex => {
+                ShardStore::Mutex((0..n_shards).map(|_| Mutex::new(VecDeque::new())).collect())
+            }
+            QueueBackend::Ring => ShardStore::Ring(
+                (0..n_shards)
+                    .map(|s| {
+                        let (lo, hi) = topo.shard_range(topo.shard_pool(s));
+                        MpmcRing::new(capacity.div_ceil((hi - lo).max(1)))
+                    })
+                    .collect(),
+            ),
+        };
         ShardedQueue {
-            shards: (0..n_shards).map(|_| Mutex::new(VecDeque::new())).collect(),
-            depth: AtomicUsize::new(0),
-            capacity: capacity.max(1),
-            router: AtomicUsize::new(0),
-            pool_depths: (0..n_pools).map(|_| AtomicUsize::new(0)).collect(),
-            pool_routers: (0..n_pools).map(|_| AtomicUsize::new(0)).collect(),
+            shards,
+            depth: CachePadded::new(AtomicUsize::new(0)),
+            capacity,
+            router: CachePadded::new(AtomicUsize::new(0)),
+            pool_depths: (0..n_pools)
+                .map(|_| CachePadded::new(AtomicUsize::new(0)))
+                .collect(),
+            pool_routers: (0..n_pools)
+                .map(|_| CachePadded::new(AtomicUsize::new(0)))
+                .collect(),
             topo,
             closed: AtomicBool::new(false),
-            steals: AtomicU64::new(0),
-            spills: AtomicU64::new(0),
+            steals: CachePadded::new(AtomicU64::new(0)),
+            spills: CachePadded::new(AtomicU64::new(0)),
             sleepers: AtomicUsize::new(0),
             gate: Mutex::new(()),
             notify: Condvar::new(),
             margin_override: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    /// Which shard-storage backend this queue was built with.
+    pub fn backend(&self) -> QueueBackend {
+        match self.shards {
+            ShardStore::Mutex(_) => QueueBackend::Mutex,
+            ShardStore::Ring(_) => QueueBackend::Ring,
         }
     }
 
@@ -353,7 +505,7 @@ impl<T> ShardedQueue<T> {
 
     /// Number of shards.
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.shards.shard_count()
     }
 
     /// Number of pools (1 unless built with [`new_pooled`](ShardedQueue::new_pooled)).
@@ -379,11 +531,27 @@ impl<T> ShardedQueue<T> {
     }
 
     /// Insert a reserved item into `shard` and wake a parked consumer.
-    fn finish_push(&self, shard: usize, item: T) {
+    /// Mutex shards always succeed (unbounded per shard). A ring shard
+    /// can be full even though the aggregate reservation admitted the
+    /// item; the reservation (and pool depth) is rolled back and the
+    /// push fails `Full` — stricter admission, never looser.
+    fn finish_push(&self, shard: usize, item: T) -> Result<(), QueueError> {
         if self.topo.n_pools() > 1 {
             self.pool_depths[self.topo.shard_pool(shard)].fetch_add(1, Ordering::SeqCst);
         }
-        self.shards[shard].lock().unwrap().push_back(item);
+        match &self.shards {
+            ShardStore::Mutex(shards) => shards[shard].lock().unwrap().push_back(item),
+            ShardStore::Ring(rings) => {
+                if rings[shard].push(item).is_err() {
+                    if self.topo.n_pools() > 1 {
+                        self.pool_depths[self.topo.shard_pool(shard)]
+                            .fetch_sub(1, Ordering::SeqCst);
+                    }
+                    self.depth.fetch_sub(1, Ordering::SeqCst);
+                    return Err(QueueError::Full);
+                }
+            }
+        }
         // Wake a parked consumer. The sleep gate is only taken when a
         // consumer is actually parked (Dekker-style handshake with the
         // consumer's sleepers-increment / ready-check, both SeqCst:
@@ -403,6 +571,7 @@ impl<T> ShardedQueue<T> {
                 self.notify.notify_one();
             }
         }
+        Ok(())
     }
 
     /// Enqueue; fails when the aggregate capacity is reserved or the
@@ -413,9 +582,8 @@ impl<T> ShardedQueue<T> {
     /// routing).
     pub fn push(&self, item: T) -> Result<(), QueueError> {
         self.reserve()?;
-        let shard = self.router.fetch_add(1, Ordering::Relaxed) % self.shards.len();
-        self.finish_push(shard, item);
-        Ok(())
+        let shard = self.router.fetch_add(1, Ordering::Relaxed) % self.shards.shard_count();
+        self.finish_push(shard, item)
     }
 
     /// Enqueue into one pool: round-robin over that pool's shards only
@@ -425,8 +593,7 @@ impl<T> ShardedQueue<T> {
     pub fn push_pool(&self, pool: usize, item: T) -> Result<(), QueueError> {
         self.reserve()?;
         let cursor = self.pool_routers[pool].fetch_add(1, Ordering::Relaxed);
-        self.finish_push(self.topo.route(pool, cursor), item);
-        Ok(())
+        self.finish_push(self.topo.route(pool, cursor), item)
     }
 
     /// One steal/spill *operation* is counted regardless of how many
@@ -444,49 +611,93 @@ impl<T> ShardedQueue<T> {
         }
     }
 
-    /// Claim one item from shard `s` (front, FIFO), releasing its
-    /// admission slot first — see the ordering note in
-    /// [`take_batch_from`](ShardedQueue::take_batch_from).
-    fn take_one_from(&self, s: usize, kind: Dispatch) -> Option<T> {
-        let mut g = self.shards[s].lock().unwrap();
-        if g.is_empty() {
-            return None;
-        }
-        self.depth.fetch_sub(1, Ordering::SeqCst);
+    /// Release `n` claimed admission slots (aggregate + pool depth).
+    fn release_slots(&self, s: usize, n: usize) {
+        self.depth.fetch_sub(n, Ordering::SeqCst);
         if self.topo.n_pools() > 1 {
-            self.pool_depths[self.topo.shard_pool(s)].fetch_sub(1, Ordering::SeqCst);
+            self.pool_depths[self.topo.shard_pool(s)].fetch_sub(n, Ordering::SeqCst);
         }
-        let item = g.pop_front();
-        drop(g);
+    }
+
+    /// Claim one item from shard `s` (front, FIFO). Mutex backend:
+    /// admission slot released *before* removal, under the shard lock —
+    /// see the ordering note in
+    /// [`take_batch_into`](ShardedQueue::take_batch_into). Ring backend:
+    /// claim first, release after (no lock to order under).
+    fn take_one_from(&self, s: usize, kind: Dispatch) -> Option<T> {
+        let item = match &self.shards {
+            ShardStore::Mutex(shards) => {
+                let mut g = shards[s].lock().unwrap();
+                if g.is_empty() {
+                    return None;
+                }
+                self.release_slots(s, 1);
+                g.pop_front()
+            }
+            ShardStore::Ring(rings) => {
+                let item = rings[s].pop()?;
+                self.release_slots(s, 1);
+                Some(item)
+            }
+        };
         self.count_dispatch(kind);
         item
     }
 
-    /// Claim up to `max` items from shard `s` in one lock acquisition —
+    /// Claim up to `max` items from shard `s` in **one operation** —
     /// a front run at home, half the backlog when stealing or spilling
     /// ([`Topology::take_count`] owns the arithmetic; leave a victim
-    /// work). All `take` slots are released *before* any item is
-    /// removed, so the depth counter never over-counts a claimed item
-    /// and a racing push can only be admitted early (into a freshly
-    /// freed slot), never spuriously rejected while capacity genuinely
-    /// remains; the items themselves are claimed under the shard lock.
-    fn take_batch_from(&self, s: usize, max: usize, kind: Dispatch) -> Option<Vec<T>> {
-        let mut g = self.shards[s].lock().unwrap();
-        if g.is_empty() {
-            return None;
-        }
-        let take = Topology::take_count(g.len(), max, kind);
-        self.depth.fetch_sub(take, Ordering::SeqCst);
-        if self.topo.n_pools() > 1 {
-            self.pool_depths[self.topo.shard_pool(s)].fetch_sub(take, Ordering::SeqCst);
-        }
-        let mut items = Vec::with_capacity(take);
-        for _ in 0..take {
-            items.push(g.pop_front().unwrap());
-        }
-        drop(g);
+    /// work) — appending them to `out` and returning how many were
+    /// taken (0 = the shard was empty; `out` is never touched then).
+    ///
+    /// Mutex backend: one lock acquisition; all `take` slots are
+    /// released *before* any item is removed, so the depth counter never
+    /// over-counts a claimed item and a racing push can only be admitted
+    /// early (into a freshly freed slot), never spuriously rejected
+    /// while capacity genuinely remains. Ring backend: the run is
+    /// reserved with one CAS on the ring head
+    /// ([`MpmcRing::pop_run_into`]) and the slots released after the
+    /// claim — same "one operation" atomicity (and the same single
+    /// steal/spill-counter increment), opposite release order.
+    fn take_batch_into(&self, s: usize, max: usize, kind: Dispatch, out: &mut Vec<T>) -> usize {
+        let take = match &self.shards {
+            ShardStore::Mutex(shards) => {
+                let mut g = shards[s].lock().unwrap();
+                if g.is_empty() {
+                    return 0;
+                }
+                let take = Topology::take_count(g.len(), max, kind);
+                self.release_slots(s, take);
+                for _ in 0..take {
+                    out.push(g.pop_front().unwrap());
+                }
+                take
+            }
+            ShardStore::Ring(rings) => {
+                let ring = &rings[s];
+                let len = ring.len();
+                if len == 0 {
+                    return 0;
+                }
+                let want = Topology::take_count(len, max, kind);
+                let got = ring.pop_run_into(want, out);
+                if got == 0 {
+                    return 0;
+                }
+                self.release_slots(s, got);
+                got
+            }
+        };
         self.count_dispatch(kind);
-        Some(items)
+        take
+    }
+
+    /// [`take_batch_into`](ShardedQueue::take_batch_into) into a fresh
+    /// `Vec` (the allocating convenience the batch API predates).
+    fn take_batch_from(&self, s: usize, max: usize, kind: Dispatch) -> Option<Vec<T>> {
+        let mut items = Vec::new();
+        let n = self.take_batch_into(s, max, kind, &mut items);
+        (n > 0).then_some(items)
     }
 
     /// Non-blocking pop for consumer `worker` of the first pool — the
@@ -565,10 +776,29 @@ impl<T> ShardedQueue<T> {
         worker: usize,
         max: usize,
     ) -> Option<Vec<T>> {
+        let mut items = Vec::new();
+        let n = self.try_pop_batch_pool_into(pool, worker, max, &mut items);
+        (n > 0).then_some(items)
+    }
+
+    /// Allocation-free [`try_pop_batch_pool`](ShardedQueue::try_pop_batch_pool):
+    /// the batch lands in the caller's scratch buffer (appended, not
+    /// cleared) and the return value is how many items were taken (0 =
+    /// every reachable shard was empty). The steady-state dispatch loop
+    /// reuses one per-worker buffer across iterations, so batch dequeue
+    /// performs no per-batch heap allocation.
+    pub fn try_pop_batch_pool_into(
+        &self,
+        pool: usize,
+        worker: usize,
+        max: usize,
+        out: &mut Vec<T>,
+    ) -> usize {
         let max = max.max(1);
         for (s, kind) in self.topo.pool_walk(pool, worker) {
-            if let Some(items) = self.take_batch_from(s, max, kind) {
-                return Some(items);
+            let n = self.take_batch_into(s, max, kind, out);
+            if n > 0 {
+                return n;
             }
         }
         let margin = self.spill_margin_now();
@@ -578,12 +808,13 @@ impl<T> ShardedQueue<T> {
             }
             let (lo, hi) = self.topo.shard_range(q);
             for s in lo..hi {
-                if let Some(items) = self.take_batch_from(s, max, Dispatch::Spill) {
-                    return Some(items);
+                let n = self.take_batch_into(s, max, Dispatch::Spill, out);
+                if n > 0 {
+                    return n;
                 }
             }
         }
-        None
+        0
     }
 
     /// Blocking pop with timeout for consumer `worker`.
@@ -628,6 +859,26 @@ impl<T> ShardedQueue<T> {
         self.pop_with(timeout, pool, || self.try_pop_batch_pool(pool, worker, max))
     }
 
+    /// Allocation-free [`pop_batch_pool`](ShardedQueue::pop_batch_pool):
+    /// `out` is cleared, the batch (if any) lands in it, and
+    /// `Popped::Item(n)` carries the batch size (never 0). The same
+    /// park-loop/timeout/close semantics as every other blocking pop.
+    pub fn pop_batch_pool_into(
+        &self,
+        pool: usize,
+        worker: usize,
+        max: usize,
+        timeout: Duration,
+        out: &mut Vec<T>,
+    ) -> Popped<usize> {
+        out.clear();
+        let mut out = out;
+        self.pop_with(timeout, pool, move || {
+            let n = self.try_pop_batch_pool_into(pool, worker, max, out);
+            (n > 0).then_some(n)
+        })
+    }
+
     /// Is there anything consumer of `pool` could take right now? The
     /// topology's [`can_take`](Topology::can_take) over the live depth
     /// counters: the pool's own backlog, or a foreign backlog passing
@@ -647,7 +898,7 @@ impl<T> ShardedQueue<T> {
         &self,
         timeout: Duration,
         pool: usize,
-        attempt: impl Fn() -> Option<R>,
+        mut attempt: impl FnMut() -> Option<R>,
     ) -> Popped<R> {
         let deadline = Instant::now() + timeout;
         loop {
@@ -1314,5 +1565,234 @@ mod tests {
         all.sort_unstable();
         assert_eq!(all, (0..n_prod as u64 * per).collect::<Vec<u64>>());
         assert_eq!(q.len(), 0);
+    }
+
+    // ---- both shard-storage backends --------------------------------
+    //
+    // Every behavioral pin above runs on the default (mutex) backend
+    // unmodified. The tests below run the same contracts across BOTH
+    // backends through one parameterized body, plus the ring-only
+    // divergence (per-shard bound backpressure).
+
+    fn backends() -> [QueueBackend; 2] {
+        [QueueBackend::Mutex, QueueBackend::Ring]
+    }
+
+    #[test]
+    fn both_backends_report_their_backend() {
+        for backend in backends() {
+            let q: ShardedQueue<u64> = ShardedQueue::new_backend(16, 2, backend);
+            assert_eq!(q.backend(), backend);
+        }
+        let q: ShardedQueue<u64> = ShardedQueue::new(16, 2);
+        assert_eq!(q.backend(), QueueBackend::Mutex, "default stays the seed mechanics");
+    }
+
+    #[test]
+    fn both_backends_round_robin_and_per_shard_fifo() {
+        for backend in backends() {
+            let q: ShardedQueue<u64> = ShardedQueue::new_backend(64, 4, backend);
+            for i in 0..8 {
+                q.push(i).unwrap();
+            }
+            assert_eq!(q.len(), 8, "{}", backend.name());
+            assert_eq!(q.pop_timeout(2, Duration::from_millis(1)), Popped::Item(2));
+            assert_eq!(q.pop_timeout(2, Duration::from_millis(1)), Popped::Item(6));
+            assert_eq!(q.steals(), 0, "{}", backend.name());
+            assert_eq!(q.pop_timeout(2, Duration::from_millis(1)), Popped::Item(3));
+            assert_eq!(q.steals(), 1, "{}", backend.name());
+        }
+    }
+
+    #[test]
+    fn both_backends_enforce_the_aggregate_capacity() {
+        for backend in backends() {
+            let q: ShardedQueue<u64> = ShardedQueue::new_backend(3, 2, backend);
+            q.push(0).unwrap();
+            q.push(1).unwrap();
+            q.push(2).unwrap();
+            assert_eq!(q.push(3), Err(QueueError::Full), "{}", backend.name());
+            assert_eq!(q.len(), 3);
+            assert_eq!(q.pop_timeout(0, Duration::from_millis(1)), Popped::Item(0));
+            q.push(4).unwrap(); // a freed slot readmits
+            assert_eq!(q.len(), 3, "{}", backend.name());
+        }
+    }
+
+    #[test]
+    fn both_backends_steal_half_the_victim_in_one_operation() {
+        // The steal-correctness pin, across backends: half the victim's
+        // backlog in ONE operation — one lock acquisition (mutex) / one
+        // CAS-reserved slot run (ring) — and exactly one steal-counter
+        // increment either way.
+        for backend in backends() {
+            let q: ShardedQueue<u64> = ShardedQueue::new_backend(64, 2, backend);
+            for i in 0..16 {
+                q.push(i).unwrap();
+            }
+            assert_eq!(
+                q.pop_batch(1, 64, Duration::from_millis(1)),
+                Popped::Item(vec![1, 3, 5, 7, 9, 11, 13, 15])
+            );
+            assert_eq!(q.steals(), 0, "{}: home drain is not a steal", backend.name());
+            assert_eq!(
+                q.pop_batch(1, 64, Duration::from_millis(1)),
+                Popped::Item(vec![0, 2, 4, 6])
+            );
+            assert_eq!(q.steals(), 1, "{}: one batch steal = one steal op", backend.name());
+            assert_eq!(
+                q.pop_batch(1, 1, Duration::from_millis(1)),
+                Popped::Item(vec![8])
+            );
+            assert_eq!(q.steals(), 2, "{}", backend.name());
+        }
+    }
+
+    #[test]
+    fn both_backends_close_drain_then_closed_for_all_parked_consumers() {
+        for backend in backends() {
+            // Drain-then-closed for a poller…
+            let q: ShardedQueue<u64> = ShardedQueue::new_backend(8, 2, backend);
+            q.push(1).unwrap();
+            q.push(2).unwrap();
+            q.close();
+            assert_eq!(q.push(3), Err(QueueError::Closed), "{}", backend.name());
+            assert_eq!(q.pop_timeout(0, Duration::from_millis(1)), Popped::Item(1));
+            assert_eq!(q.pop_timeout(0, Duration::from_millis(1)), Popped::Item(2));
+            assert_eq!(q.pop_timeout(0, Duration::from_millis(1)), Popped::Closed);
+            // …and Closed must promptly reach every *parked* consumer.
+            let q: Arc<ShardedQueue<u64>> = Arc::new(ShardedQueue::new_backend(8, 4, backend));
+            let handles: Vec<_> = (0..4)
+                .map(|w| {
+                    let q = q.clone();
+                    std::thread::spawn(move || {
+                        let t0 = Instant::now();
+                        let r = q.pop_timeout(w, Duration::from_secs(30));
+                        (r, t0.elapsed())
+                    })
+                })
+                .collect();
+            std::thread::sleep(Duration::from_millis(50));
+            q.close();
+            for h in handles {
+                let (r, dt) = h.join().unwrap();
+                assert_eq!(r, Popped::Closed, "{}", backend.name());
+                assert!(dt < Duration::from_secs(5), "{}: woke only after {dt:?}", backend.name());
+            }
+        }
+    }
+
+    #[test]
+    fn both_backends_conserve_under_racing_producers_and_consumers() {
+        // 4 producers x 1000 items, 4 batch consumers on the
+        // scratch-buffer path: no loss, no duplication, either backend.
+        for backend in backends() {
+            let n_prod = 4usize;
+            let per = 1000u64;
+            let q: Arc<ShardedQueue<u64>> =
+                Arc::new(ShardedQueue::new_backend((n_prod as u64 * per) as usize, 4, backend));
+            let producers: Vec<_> = (0..n_prod)
+                .map(|p| {
+                    let q = q.clone();
+                    std::thread::spawn(move || {
+                        for i in 0..per {
+                            q.push(p as u64 * per + i).unwrap(); // Full = bug: rr fits the even share
+                        }
+                    })
+                })
+                .collect();
+            let consumers: Vec<_> = (0..4usize)
+                .map(|w| {
+                    let q = q.clone();
+                    std::thread::spawn(move || {
+                        let mut got = Vec::new();
+                        let mut buf = Vec::with_capacity(8);
+                        loop {
+                            match q.pop_batch_pool_into(0, w, 7, Duration::from_millis(100), &mut buf)
+                            {
+                                Popped::Item(n) => {
+                                    assert!(n == buf.len() && (1..=7).contains(&n));
+                                    got.extend_from_slice(&buf);
+                                }
+                                Popped::TimedOut => {}
+                                Popped::Closed => break,
+                            }
+                        }
+                        got
+                    })
+                })
+                .collect();
+            for p in producers {
+                p.join().unwrap();
+            }
+            q.close();
+            let mut all: Vec<u64> = Vec::new();
+            for c in consumers {
+                all.extend(c.join().unwrap());
+            }
+            all.sort_unstable();
+            assert_eq!(all, (0..n_prod as u64 * per).collect::<Vec<u64>>(), "{}", backend.name());
+            assert_eq!(q.len(), 0, "{}", backend.name());
+        }
+    }
+
+    #[test]
+    fn pop_batch_pool_into_reuses_the_caller_buffer() {
+        for backend in backends() {
+            let q: ShardedQueue<u64> = ShardedQueue::new_backend(64, 1, backend);
+            let mut buf: Vec<u64> = Vec::with_capacity(16);
+            for i in 0..10 {
+                q.push(i).unwrap();
+            }
+            assert_eq!(
+                q.pop_batch_pool_into(0, 0, 4, Duration::from_millis(1), &mut buf),
+                Popped::Item(4)
+            );
+            assert_eq!(buf, vec![0, 1, 2, 3]);
+            let ptr = buf.as_ptr();
+            assert_eq!(
+                q.pop_batch_pool_into(0, 0, 4, Duration::from_millis(1), &mut buf),
+                Popped::Item(4)
+            );
+            assert_eq!(buf, vec![4, 5, 6, 7]);
+            assert_eq!(buf.as_ptr(), ptr, "{}: scratch reused, not reallocated", backend.name());
+            assert_eq!(
+                q.pop_batch_pool_into(0, 0, 4, Duration::from_millis(1), &mut buf),
+                Popped::Item(2)
+            );
+            assert_eq!(buf, vec![8, 9]);
+            assert_eq!(
+                q.pop_batch_pool_into(0, 0, 4, Duration::from_millis(1), &mut buf),
+                Popped::TimedOut
+            );
+            assert!(buf.is_empty(), "cleared on non-Item outcomes");
+        }
+    }
+
+    #[test]
+    fn ring_shard_backpressure_full_rolls_back_the_reservation() {
+        // capacity 16 over 4 shards -> each ring bounds ⌈16/4⌉ = 4. Skew
+        // the backlog onto shard 0 (drain every other shard), then push
+        // with the router cursor pointing at the full shard: admission
+        // must surface Full AND release the aggregate reservation it
+        // took, so the next push (routed to an empty shard) is admitted.
+        let q: ShardedQueue<u64> = ShardedQueue::new_backend(16, 4, QueueBackend::Ring);
+        for i in 0..16 {
+            q.push(i).unwrap();
+        }
+        for w in 1..4usize {
+            for _ in 0..4 {
+                assert!(matches!(q.pop_timeout(w, Duration::from_millis(1)), Popped::Item(_)));
+            }
+        }
+        assert_eq!(q.steals(), 0, "home shards held all four items each");
+        assert_eq!(q.len(), 4, "only shard 0's items remain");
+        // Cursor is at 16 -> shard 0, whose ring is still full.
+        assert_eq!(q.push(99), Err(QueueError::Full));
+        assert_eq!(q.len(), 4, "failed push must roll back its reservation");
+        // Cursor advanced to 17 -> shard 1 (empty ring): admitted.
+        q.push(100).unwrap();
+        assert_eq!(q.len(), 5);
+        assert_eq!(q.pop_timeout(1, Duration::from_millis(1)), Popped::Item(100));
     }
 }

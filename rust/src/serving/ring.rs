@@ -1,0 +1,422 @@
+//! Bounded lock-free MPMC ring buffer — the shard storage of the
+//! lock-free queue backend.
+//!
+//! This is the classic Vyukov bounded MPMC queue (the design vendored
+//! by `crossbeam::ArrayQueue`), reimplemented std-only because the
+//! build environment has no registry access. Each slot carries its own
+//! **sequence counter** that encodes the slot's state relative to the
+//! global head/tail positions, which lets producers and consumers
+//! coordinate through one CAS on their own end of the ring plus
+//! acquire/release handshakes on the slot itself — no locks, no
+//! spinning on a shared flag.
+//!
+//! # Slot states
+//!
+//! Head, tail and every sequence counter are monotonically increasing
+//! `u64` *positions* (never wrapped; the index into the buffer is
+//! `pos & mask`). For a slot at position `pos` with capacity `cap`:
+//!
+//! | `seq` value | state |
+//! |---|---|
+//! | `pos`       | empty — waiting for the producer that claims `tail == pos` |
+//! | `pos + 1`   | full — value written, waiting for the consumer that claims `head == pos` |
+//! | `pos + cap` | empty again, one lap later — waiting for `tail == pos + cap` |
+//!
+//! A producer loads the slot at `tail`: `seq == tail` means the slot is
+//! free, so it CASes `tail → tail+1` to claim it, writes the value, and
+//! publishes with `seq = tail + 1` (release). `seq < tail` means the
+//! consumer of the *previous lap* has not yet released the slot — the
+//! ring is full, and we report that instead of blocking (the admission
+//! path turns it into [`QueueError::Full`]). `seq > tail` means our
+//! tail load was stale; reload and retry. Consumers mirror this on
+//! `head` with `seq == head + 1` as the ready condition and
+//! `seq = head + cap` as the release.
+//!
+//! # Batch claim: one CAS per steal
+//!
+//! [`MpmcRing::pop_run_into`] reserves a *run* of consecutive committed
+//! slots with a **single CAS on `head`**: scan forward from `head`
+//! counting slots whose `seq == pos + 1` (acquire), then
+//! `head.compare_exchange(h, h + n)`. On success the caller owns all
+//! `n` slots exclusively — producers cannot recycle a slot until `head`
+//! passes it, so the values can be read out and released one by one at
+//! leisure. This is what preserves the queue's "steal-half is ONE
+//! operation" contract (one steal-counter increment, one atomicity
+//! unit) that the mutex backend gets for free from its critical
+//! section; element-at-a-time CAS would make a steal interleavable and
+//! break the pinned accounting.
+//!
+//! # Wraparound
+//!
+//! Positions are `u64` and never masked, so overflow would take
+//! centuries at any realistic rate; correctness across index growth is
+//! still tested past the `u32` boundary via [`MpmcRing::with_base`],
+//! which starts head/tail/sequences at an arbitrary lap instead of 0.
+//!
+//! [`QueueError::Full`]: super::queue::QueueError::Full
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::CachePadded;
+
+/// One ring slot: its sequence counter plus (possibly uninitialized)
+/// storage for the value. See the module docs for the `seq` protocol.
+struct Slot<T> {
+    seq: AtomicU64,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded lock-free MPMC ring (Vyukov sequence-counter protocol).
+///
+/// Capacity is rounded up to a power of two so `pos & mask` replaces a
+/// division on every access. `head` and `tail` live on their own cache
+/// lines: producers hammer `tail`, consumers hammer `head`, and without
+/// padding each CAS would invalidate the other side's line.
+pub struct MpmcRing<T> {
+    buf: Box<[Slot<T>]>,
+    /// `capacity - 1`; capacity is a power of two.
+    mask: u64,
+    cap: u64,
+    head: CachePadded<AtomicU64>,
+    tail: CachePadded<AtomicU64>,
+}
+
+// SAFETY: values are handed across threads through the slot protocol —
+// a slot's value is written exclusively by the producer that claimed it
+// and read exclusively by the consumer that claimed it, with the
+// release/acquire pair on `seq` ordering the handoff. `T: Send`
+// suffices; no `&T` is ever shared.
+unsafe impl<T: Send> Send for MpmcRing<T> {}
+unsafe impl<T: Send> Sync for MpmcRing<T> {}
+
+impl<T> MpmcRing<T> {
+    /// Ring with room for at least `capacity` items (rounded up to a
+    /// power of two, minimum 1).
+    pub fn new(capacity: usize) -> Self {
+        Self::with_base(capacity, 0)
+    }
+
+    /// Ring whose positions start at `base` (rounded down to a lap
+    /// boundary) instead of 0 — equivalent to a ring that has already
+    /// completed `base / capacity` laps. Test-only in spirit: it makes
+    /// sequence-counter wraparound past any index scale checkable in
+    /// microseconds instead of centuries.
+    pub fn with_base(capacity: usize, base: u64) -> Self {
+        let cap = capacity.max(1).next_power_of_two() as u64;
+        let base = base & !(cap - 1);
+        let buf: Box<[Slot<T>]> = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicU64::new(base + i),
+                val: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect();
+        MpmcRing {
+            buf,
+            mask: cap - 1,
+            cap,
+            head: CachePadded::new(AtomicU64::new(base)),
+            tail: CachePadded::new(AtomicU64::new(base)),
+        }
+    }
+
+    /// Usable capacity (power of two).
+    pub fn capacity(&self) -> usize {
+        self.cap as usize
+    }
+
+    /// Snapshot of the occupancy. Racy by nature (two independent
+    /// loads) but monotonically consistent enough for sizing a batch
+    /// claim — the claim itself re-validates per slot.
+    pub fn len(&self) -> usize {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Relaxed);
+        tail.saturating_sub(head) as usize
+    }
+
+    /// True when the snapshot sees no items.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append `item`, or hand it back if the ring is full.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.buf[(tail & self.mask) as usize];
+            let seq = slot.seq.load(Ordering::Acquire);
+            match seq.cmp(&tail) {
+                std::cmp::Ordering::Equal => {
+                    // Slot free at our tail: claim the position.
+                    match self.tail.compare_exchange_weak(
+                        tail,
+                        tail + 1,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => {
+                            // SAFETY: the CAS gave us exclusive write
+                            // access to this slot until we publish.
+                            unsafe { (*slot.val.get()).write(item) };
+                            slot.seq.store(tail + 1, Ordering::Release);
+                            return Ok(());
+                        }
+                        Err(cur) => tail = cur,
+                    }
+                }
+                // Previous lap's consumer hasn't released it: full.
+                std::cmp::Ordering::Less => return Err(item),
+                // Stale tail: another producer advanced it; reload.
+                std::cmp::Ordering::Greater => tail = self.tail.load(Ordering::Relaxed),
+            }
+        }
+    }
+
+    /// Take the front item, or `None` if the ring is empty.
+    pub fn pop(&self) -> Option<T> {
+        let mut head = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.buf[(head & self.mask) as usize];
+            let seq = slot.seq.load(Ordering::Acquire);
+            match seq.cmp(&(head + 1)) {
+                std::cmp::Ordering::Equal => {
+                    match self.head.compare_exchange_weak(
+                        head,
+                        head + 1,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => {
+                            // SAFETY: the CAS gave us exclusive read
+                            // access; the value was published by the
+                            // release store that set `seq = head + 1`.
+                            let item = unsafe { (*slot.val.get()).assume_init_read() };
+                            slot.seq.store(head + self.cap, Ordering::Release);
+                            return Some(item);
+                        }
+                        Err(cur) => head = cur,
+                    }
+                }
+                // `seq <= head`: nothing committed at the front.
+                std::cmp::Ordering::Less => return None,
+                // Stale head: another consumer advanced it; reload.
+                std::cmp::Ordering::Greater => head = self.head.load(Ordering::Relaxed),
+            }
+        }
+    }
+
+    /// Claim up to `want` consecutive committed items **in one CAS on
+    /// `head`** and append them to `out`, returning how many were
+    /// taken (0 = empty). This is the batch/steal primitive: the whole
+    /// run is reserved atomically, so a concurrent consumer either
+    /// sees the run before the claim or after it — never mid-claim.
+    pub fn pop_run_into(&self, want: usize, out: &mut Vec<T>) -> usize {
+        let limit = (want.min(self.cap as usize)) as u64;
+        if limit == 0 {
+            return 0;
+        }
+        loop {
+            let head = self.head.load(Ordering::Relaxed);
+            // Scan the committed run: slots whose value is published
+            // for exactly this lap.
+            let mut n = 0u64;
+            while n < limit {
+                let pos = head + n;
+                let slot = &self.buf[(pos & self.mask) as usize];
+                if slot.seq.load(Ordering::Acquire) != pos + 1 {
+                    break;
+                }
+                n += 1;
+            }
+            if n == 0 {
+                let front = &self.buf[(head & self.mask) as usize];
+                if front.seq.load(Ordering::Acquire) <= head {
+                    // Nothing committed at the front: genuinely empty.
+                    return 0;
+                }
+                // Our head was stale (or a value landed between the
+                // scan and this check): retry with a fresh head.
+                continue;
+            }
+            // ONE CAS reserves the whole run [head, head + n). After it
+            // succeeds, producers still cannot recycle these slots —
+            // a slot is only reusable once its consumer releases it —
+            // so the reads below are unhurried and exclusive.
+            if self
+                .head
+                .compare_exchange(head, head + n, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                for i in 0..n {
+                    let pos = head + i;
+                    let slot = &self.buf[(pos & self.mask) as usize];
+                    // SAFETY: the run claim above gave us exclusive
+                    // read access to every slot in [head, head + n).
+                    out.push(unsafe { (*slot.val.get()).assume_init_read() });
+                    slot.seq.store(pos + self.cap, Ordering::Release);
+                }
+                return n as usize;
+            }
+        }
+    }
+}
+
+impl<T> Drop for MpmcRing<T> {
+    fn drop(&mut self) {
+        // Drop any values still in flight; slots outside [head, tail)
+        // are uninitialized and must not be touched.
+        while self.pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn spsc_preserves_fifo_order() {
+        let ring = MpmcRing::new(8);
+        for i in 0..8 {
+            ring.push(i).unwrap();
+        }
+        for i in 0..8 {
+            assert_eq!(ring.pop(), Some(i));
+        }
+        assert_eq!(ring.pop(), None);
+        // Refill after a full drain: sequence counters advanced a lap.
+        ring.push(99).unwrap();
+        assert_eq!(ring.pop(), Some(99));
+    }
+
+    #[test]
+    fn full_ring_hands_the_item_back() {
+        let ring = MpmcRing::new(3); // rounds up to 4
+        assert_eq!(ring.capacity(), 4);
+        for i in 0..4 {
+            ring.push(i).unwrap();
+        }
+        assert_eq!(ring.push(4), Err(4));
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.pop(), Some(0));
+        ring.push(4).unwrap(); // space again
+        assert_eq!(ring.len(), 4);
+    }
+
+    #[test]
+    fn batch_claim_takes_a_front_run_in_one_reservation() {
+        let ring = MpmcRing::new(16);
+        for i in 0..10u64 {
+            ring.push(i).unwrap();
+        }
+        let mut out = Vec::new();
+        assert_eq!(ring.pop_run_into(4, &mut out), 4);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        // `want` past the committed run is clamped to what's there.
+        out.clear();
+        assert_eq!(ring.pop_run_into(64, &mut out), 6);
+        assert_eq!(out, vec![4, 5, 6, 7, 8, 9]);
+        out.clear();
+        assert_eq!(ring.pop_run_into(4, &mut out), 0);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn sequence_counters_survive_wraparound_past_u32_indices() {
+        // Start the ring as if it had already completed ~2^32 / cap
+        // laps; push/pop across the u32 boundary must stay FIFO and
+        // conserve items.
+        let cap = 8u64;
+        let base = (1u64 << 32) - cap;
+        let ring = MpmcRing::with_base(cap as usize, base);
+        for i in 0..cap * 3 {
+            ring.push(i).unwrap();
+            if i >= cap - 1 {
+                // Keep one lap in flight while positions cross 2^32.
+                assert_eq!(ring.pop(), Some(i + 1 - cap));
+            }
+        }
+        let mut out = Vec::new();
+        assert_eq!(ring.pop_run_into(cap as usize, &mut out), cap as usize - 1);
+        assert_eq!(out, (cap * 2 + 1..cap * 3).collect::<Vec<_>>());
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn mpmc_conserves_under_racing_producers_and_consumers() {
+        use std::sync::atomic::AtomicBool;
+
+        let n_prod = 4u64;
+        let per = 2000u64;
+        let total = (n_prod * per) as usize;
+        let ring = Arc::new(MpmcRing::new(64)); // far smaller than total: laps + backpressure
+        let done = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for p in 0..n_prod {
+            let r = Arc::clone(&ring);
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    let mut item = p * per + i;
+                    // Bounded ring: spin on Full until a consumer frees a slot.
+                    while let Err(back) = r.push(item) {
+                        item = back;
+                        thread::yield_now();
+                    }
+                }
+            }));
+        }
+        let mut takers = Vec::new();
+        for c in 0..4 {
+            let r = Arc::clone(&ring);
+            let d = Arc::clone(&done);
+            takers.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                let mut buf = Vec::new();
+                loop {
+                    // Alternate single pops and batch claims to cover both paths.
+                    let took = if c % 2 == 0 {
+                        match r.pop() {
+                            Some(v) => {
+                                got.push(v);
+                                true
+                            }
+                            None => false,
+                        }
+                    } else {
+                        buf.clear();
+                        let n = r.pop_run_into(7, &mut buf);
+                        got.extend_from_slice(&buf);
+                        n > 0
+                    };
+                    if !took {
+                        // A transient empty is not the end: keep draining
+                        // until the producers are done AND the ring is dry
+                        // (exiting early would leave producers spinning on
+                        // a full ring with nobody consuming).
+                        if d.load(Ordering::SeqCst) && r.is_empty() {
+                            break;
+                        }
+                        thread::yield_now();
+                    }
+                }
+                got
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::SeqCst);
+        // Racing consumers may exit on the same "dry" observation; any
+        // leftover items would be a bug the count below catches.
+        let mut seen: Vec<u64> = takers.into_iter().flat_map(|t| t.join().unwrap()).collect();
+        while let Some(v) = ring.pop() {
+            seen.push(v);
+        }
+        assert_eq!(seen.len(), total, "no loss, no duplication");
+        let unique: HashSet<u64> = seen.iter().copied().collect();
+        assert_eq!(unique.len(), total, "every item exactly once");
+    }
+}

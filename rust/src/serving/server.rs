@@ -44,7 +44,7 @@ use super::monitor::LoadMonitor;
 use super::overload::{Brownout, OverloadConfig};
 use super::policy::ScalingPolicy;
 use super::pool::PoolSpec;
-use super::queue::{Discipline, Popped, ShardedQueue};
+use super::queue::{Discipline, Popped, QueueBackend, ShardedQueue};
 use super::replan::{ReplanConfig, ReplanEngine};
 use super::resilience::{HealthView, ResilienceConfig};
 use super::topology::Topology;
@@ -124,6 +124,14 @@ pub struct ServeOptions {
     /// ladder against live speed/α/ρ̂ estimates and swaps the result
     /// into the policy on the monitor tick.
     pub replan: ReplanConfig,
+    /// Shard-storage backend of the queue hot path (`--queue
+    /// ring|mutex`): locked deques (the seed mechanics; default) or
+    /// bounded lock-free MPMC rings ([`QueueBackend::Ring`]). The
+    /// dispatch *decisions* (routing, steal-half, spill gates, batch
+    /// extents) are the topology's either way — only the mechanics
+    /// under them change — so the mutex default stays bit-identical to
+    /// the seed path.
+    pub backend: QueueBackend,
 }
 
 impl Default for ServeOptions {
@@ -141,6 +149,7 @@ impl Default for ServeOptions {
             resilience: ResilienceConfig::default(),
             overload: OverloadConfig::default(),
             replan: ReplanConfig::default(),
+            backend: QueueBackend::default(),
         }
     }
 }
@@ -330,23 +339,32 @@ impl OverloadState {
         false
     }
 
-    /// Lazy in-queue expiry for a popped batch: requests whose deadline
-    /// passed while they queued fall out before dispatch, each counted
-    /// and fed to the brownout EWMA as a deadline miss. Returns the
-    /// survivors (the whole batch when the plane is disabled).
-    fn expire_batch(&self, items: Vec<Job>, now_ms: f64) -> Vec<Job> {
+    /// Lazy in-queue expiry for a popped batch, in place: requests
+    /// whose deadline passed while they queued are retained out of
+    /// `items` before dispatch, each counted and fed to the brownout
+    /// EWMA as a deadline miss. Only the survivors remain in `items`
+    /// (the whole batch when the plane is disabled; relative order is
+    /// preserved). In place so the steady-state dispatch loop keeps its
+    /// one scratch buffer instead of re-partitioning into fresh `Vec`s.
+    fn expire_batch(&self, items: &mut Vec<Job>, now_ms: f64) {
         if !self.enabled {
-            return items;
+            return;
         }
-        let (dead, alive): (Vec<Job>, Vec<Job>) =
-            items.into_iter().partition(|&(id, arr, _)| self.cfg.expired(id, arr, now_ms));
-        if !dead.is_empty() {
-            self.expired.fetch_add(dead.len(), Ordering::Relaxed);
-            for _ in &dead {
+        let mut dead = 0usize;
+        items.retain(|&(id, arr, _)| {
+            if self.cfg.expired(id, arr, now_ms) {
+                dead += 1;
+                false
+            } else {
+                true
+            }
+        });
+        if dead > 0 {
+            self.expired.fetch_add(dead, Ordering::Relaxed);
+            for _ in 0..dead {
                 self.observe_pop(true);
             }
         }
-        alive
     }
 
     /// Resolve the executing rung for a popped batch: feed each job's
@@ -749,8 +767,11 @@ where
         }
     };
 
-    let queue: Arc<ShardedQueue<Job>> =
-        Arc::new(ShardedQueue::with_topology(opts.queue_capacity, (*topo).clone()));
+    let queue: Arc<ShardedQueue<Job>> = Arc::new(ShardedQueue::with_topology_backend(
+        opts.queue_capacity,
+        (*topo).clone(),
+        opts.backend,
+    ));
     let monitor = Arc::new(LoadMonitor::with_pools_period(
         0.3,
         topo.n_pools(),
@@ -1095,6 +1116,14 @@ where
                         }
                         return Ok((p, records));
                     }
+                    // Reusable per-worker scratch: the popped batch, its
+                    // flaked-out members and the engine outcomes live in
+                    // buffers that survive iterations, so the
+                    // steady-state dispatch path performs zero per-batch
+                    // heap allocations (asserted by tests/alloc_free.rs).
+                    let mut batch_buf: Vec<Job> = Vec::with_capacity(batch.max(8));
+                    let mut flaked_buf: Vec<Job> = Vec::with_capacity(batch.max(8));
+                    let mut outs_buf = Vec::with_capacity(batch.max(8));
                     loop {
                         if dark_at.is_some() && faults.is_dark_at_ms(p, now_ms()) {
                             let until = dark_until.unwrap_or(f64::INFINITY);
@@ -1131,50 +1160,71 @@ where
                         } else {
                             batch
                         };
-                        match queue.pop_batch_pool(p, lw, want, Duration::from_millis(50)) {
-                            Popped::Item(items) => {
+                        match queue.pop_batch_pool_into(
+                            p,
+                            lw,
+                            want,
+                            Duration::from_millis(50),
+                            &mut batch_buf,
+                        ) {
+                            Popped::Item(_) => {
                                 let t_start = now_ms();
                                 // Lazy in-queue expiry (overload
                                 // plane): already-doomed requests fall
                                 // out of the batch before dispatch.
-                                let items = ov.expire_batch(items, t_start);
+                                ov.expire_batch(&mut batch_buf, t_start);
                                 // Switches take effect at dequeue;
                                 // browned out and class-floored under
                                 // overload.
                                 let d = pooled_depth(&queue, &topo, &handle);
                                 let idx = handle.observe(t_start, d);
-                                let exec = ov.exec_rung(&topo, p, idx, n_rungs, &items, t_start);
+                                let exec =
+                                    ov.exec_rung(&topo, p, idx, n_rungs, &batch_buf, t_start);
                                 // Injected flakes fail out of the batch
                                 // before dispatch (the same per-request
                                 // coin as the DES); the engine runs the
-                                // survivors.
-                                let (flaked, live): (Vec<Job>, Vec<Job>) =
-                                    items.into_iter().partition(|&(id, arr, att)| {
-                                        faults.flaky_fails(p, id, att, arr)
-                                    });
-                                let outs = if live.is_empty() {
-                                    Some(Vec::new())
+                                // survivors, left in place in the batch
+                                // scratch (order preserved).
+                                flaked_buf.clear();
+                                batch_buf.retain(|&(id, arr, att)| {
+                                    if faults.flaky_fails(p, id, att, arr) {
+                                        flaked_buf.push((id, arr, att));
+                                        false
+                                    } else {
+                                        true
+                                    }
+                                });
+                                // `ok` plays the old `outs.is_some()`:
+                                // the engine ran the survivors and
+                                // filled the outcome scratch 1:1.
+                                let ok = if batch_buf.is_empty() {
+                                    outs_buf.clear();
+                                    true
                                 } else {
                                     match catch_unwind(AssertUnwindSafe(|| {
-                                        engine.execute_batch(exec, live.len())
+                                        engine.execute_batch_into(
+                                            exec,
+                                            batch_buf.len(),
+                                            &mut outs_buf,
+                                        )
                                     })) {
-                                        Ok(Ok(outs)) => {
+                                        Ok(Ok(())) => {
                                             anyhow::ensure!(
-                                                outs.len() == live.len(),
+                                                outs_buf.len() == batch_buf.len(),
                                                 "engine returned {} outcomes for a batch of {}",
-                                                outs.len(),
-                                                live.len()
+                                                outs_buf.len(),
+                                                batch_buf.len()
                                             );
-                                            Some(outs)
+                                            true
                                         }
                                         // Engine error: the whole batch
                                         // takes the failure path, the
                                         // worker survives.
-                                        Ok(Err(_)) => None,
+                                        Ok(Err(_)) => false,
                                         Err(_) => {
                                             res.panics.fetch_add(1, Ordering::Relaxed);
                                             engine = make_engine(&spec)?;
-                                            None
+                                            false
                                         }
                                     }
                                 };
@@ -1192,60 +1242,58 @@ where
                                 // (size, wall ms) fit buffer — flaked-out
                                 // or engine-failed batches measured no
                                 // service and are not recorded.
-                                if outs.is_some() && !live.is_empty() {
-                                    rp.on_completion(p, exec, live.len(), t_fin - t_start);
+                                if ok && !batch_buf.is_empty() {
+                                    rp.on_completion(p, exec, batch_buf.len(), t_fin - t_start);
                                 }
-                                match outs {
-                                    Some(outs) if !res_cfg.timed_out(t_fin - t_start) => {
-                                        for (&(id, arrival_ms, _), out) in live.iter().zip(outs) {
-                                            res.record(p, true, t_fin);
-                                            records.push(RequestRecord {
-                                                id,
-                                                arrival_ms,
-                                                start_ms: t_start,
-                                                finish_ms: t_fin,
-                                                config_idx: exec,
-                                                accuracy: out.accuracy,
-                                                success: out.success,
-                                            });
-                                        }
+                                if ok && !res_cfg.timed_out(t_fin - t_start) {
+                                    for (&(id, arrival_ms, _), out) in
+                                        batch_buf.iter().zip(outs_buf.iter())
+                                    {
+                                        res.record(p, true, t_fin);
+                                        records.push(RequestRecord {
+                                            id,
+                                            arrival_ms,
+                                            start_ms: t_start,
+                                            finish_ms: t_fin,
+                                            config_idx: exec,
+                                            accuracy: out.accuracy,
+                                            success: out.success,
+                                        });
                                     }
-                                    Some(_) => {
-                                        // Beat the engine but not the
-                                        // clock: the whole batch times out.
-                                        let timed = live.len() as u64;
-                                        res.timeouts.fetch_add(timed, Ordering::Relaxed);
-                                        for &job in &live {
-                                            res.record(p, false, t_fin);
-                                            retry_or_fail(
-                                                &queue,
-                                                &topo,
-                                                &handle,
-                                                &res,
-                                                &faults,
-                                                &res_cfg,
-                                                job,
-                                                &now_ms,
-                                            );
-                                        }
+                                } else if ok {
+                                    // Beat the engine but not the
+                                    // clock: the whole batch times out.
+                                    let timed = batch_buf.len() as u64;
+                                    res.timeouts.fetch_add(timed, Ordering::Relaxed);
+                                    for &job in &batch_buf {
+                                        res.record(p, false, t_fin);
+                                        retry_or_fail(
+                                            &queue,
+                                            &topo,
+                                            &handle,
+                                            &res,
+                                            &faults,
+                                            &res_cfg,
+                                            job,
+                                            &now_ms,
+                                        );
                                     }
-                                    None => {
-                                        for &job in &live {
-                                            res.record(p, false, t_fin);
-                                            retry_or_fail(
-                                                &queue,
-                                                &topo,
-                                                &handle,
-                                                &res,
-                                                &faults,
-                                                &res_cfg,
-                                                job,
-                                                &now_ms,
-                                            );
-                                        }
+                                } else {
+                                    for &job in &batch_buf {
+                                        res.record(p, false, t_fin);
+                                        retry_or_fail(
+                                            &queue,
+                                            &topo,
+                                            &handle,
+                                            &res,
+                                            &faults,
+                                            &res_cfg,
+                                            job,
+                                            &now_ms,
+                                        );
                                     }
                                 }
-                                for &job in &flaked {
+                                for &job in &flaked_buf {
                                     res.record(p, false, t_fin);
                                     retry_or_fail(
                                         &queue,

@@ -7,11 +7,13 @@
 //! reproducible bit-for-bit.
 
 pub mod bench;
+pub mod cache;
 pub mod csv;
 pub mod json;
 pub mod rng;
 pub mod stats;
 
+pub use cache::CachePadded;
 pub use rng::Rng;
 pub use stats::{percentile, OnlineStats, Summary};
 

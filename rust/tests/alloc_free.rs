@@ -1,0 +1,108 @@
+//! Acceptance pin: the batched hot path performs **zero per-batch heap
+//! allocations** at steady state, for both shard-storage backends.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator; after a
+//! warm-up pass (shard storage grown, scratch buffers at capacity) the
+//! allocation counter must not move across push + batched-pop cycles or
+//! across `execute_batch_into` dispatches. Everything lives in ONE test
+//! function: the counter is process-global, so a second concurrently
+//! running test would pollute the measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use compass::serving::executor::{MockEngine, RequestEngine};
+use compass::serving::{Popped, QueueBackend, ShardedQueue};
+use compass::workflows::ExecOutcome;
+
+/// System allocator with an allocation counter (frees are not counted —
+/// the pin is about *new* heap traffic on the hot path).
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+/// Drain exactly `n` items through the batched pop path into `buf`.
+fn drain_n<T>(q: &ShardedQueue<T>, n: usize, buf: &mut Vec<T>) {
+    let mut total = 0usize;
+    while total < n {
+        match q.pop_batch_pool_into(0, 0, 32, Duration::from_millis(100), buf) {
+            Popped::Item(got) => total += got,
+            other => panic!("queue ran dry at {total}/{n}: {other:?}"),
+        }
+    }
+    assert_eq!(total, n, "over-drained");
+}
+
+#[test]
+fn steady_state_batch_dispatch_performs_no_heap_allocation() {
+    type Job = (u64, f64, u32);
+
+    for backend in [QueueBackend::Mutex, QueueBackend::Ring] {
+        let q: ShardedQueue<Job> = ShardedQueue::new_backend(1024, 4, backend);
+        let mut buf: Vec<Job> = Vec::with_capacity(64);
+
+        // Warm-up: grow the mutex shards' VecDeques (the ring is
+        // preallocated) and size the scratch buffer once.
+        for i in 0..512u64 {
+            q.push((i, 0.0, 0)).unwrap();
+        }
+        drain_n(&q, 512, &mut buf);
+
+        // Steady state: 50 cycles of 32 pushes + batched drain must not
+        // touch the allocator.
+        let before = allocs();
+        for cycle in 0..50u64 {
+            for i in 0..32u64 {
+                q.push((cycle * 32 + i, 0.0, 0)).unwrap();
+            }
+            drain_n(&q, 32, &mut buf);
+        }
+        let grew = allocs() - before;
+        assert_eq!(
+            grew, 0,
+            "{backend:?} batched hot path allocated {grew} times at steady state"
+        );
+    }
+
+    // Engine side: `execute_batch_into` refills the caller's outcome
+    // buffer without allocating.
+    let mut engine = MockEngine {
+        service_ms: vec![0.0],
+        accuracy: vec![0.8],
+        dispatch_ms: 0.0,
+    };
+    let mut outs: Vec<ExecOutcome> = Vec::with_capacity(8);
+    engine.execute_batch_into(0, 8, &mut outs).unwrap();
+
+    let before = allocs();
+    for _ in 0..50 {
+        engine.execute_batch_into(0, 8, &mut outs).unwrap();
+        assert_eq!(outs.len(), 8);
+    }
+    let grew = allocs() - before;
+    assert_eq!(grew, 0, "execute_batch_into allocated {grew} times at steady state");
+}
